@@ -1,0 +1,77 @@
+//! Divergence demo: the two failure modes the paper's theory predicts.
+//!
+//!   cargo run --release --example divergence_demo
+//!
+//! 1. Fig. 1 — naive model compression in D-PSGD stalls at a noise floor
+//!    while true D-PSGD anneals to the optimum.
+//! 2. Theorem 1's admissibility bound — DCD-PSGD *diverges* once the
+//!    compressor's α exceeds (1−ρ)/(2µ), while ECD-PSGD stays bounded
+//!    under the identical compressor (§4.2's robustness claim).
+
+use decomp::algorithms::{self, AlgoConfig};
+use decomp::compression::{empirical_alpha, from_name};
+use decomp::experiments::fig1;
+use decomp::metrics::Table;
+use decomp::models::{GradientModel, Quadratic};
+use decomp::topology::{Graph, MixingMatrix, Topology};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    // Part 1: Fig. 1.
+    for t in fig1::run(false) {
+        t.print();
+        println!();
+    }
+
+    // Part 2: DCD past its α bound vs ECD.
+    let n = 8;
+    let dim = 64;
+    let mixing = Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n)));
+    let bound = mixing.dcd_alpha_bound();
+    let fam = Quadratic::family(n, dim, 1.0, 0.0, 0x51fe);
+    let opt = Quadratic::optimum(&fam);
+    let fstar: f64 = fam.iter().map(|q| q.full_loss(&opt)).sum::<f64>() / n as f64;
+
+    let mut t = Table::new(
+        &format!("DCD admissibility: ring n=8 has α bound {bound:.4} (Theorem 1)"),
+        &["compressor", "alpha", "within_bound", "dcd_final_subopt", "ecd_final_subopt"],
+    );
+    for comp_name in ["q8", "q4", "sparse_p25", "sparse_p10", "sparse_p5"] {
+        let comp = from_name(comp_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown compressor {comp_name}"))?;
+        let alpha = empirical_alpha(comp.as_ref(), 2048, 6, 1);
+        let subopt = |algo: &str| -> f64 {
+            let mut models: Vec<Box<dyn GradientModel>> = fam
+                .iter()
+                .cloned()
+                .map(|q| Box::new(q) as Box<dyn GradientModel>)
+                .collect();
+            let cfg = AlgoConfig {
+                mixing: mixing.clone(),
+                compressor: Arc::from(from_name(comp_name).unwrap()),
+                seed: 0x51fe,
+            };
+            let x0 = vec![0.0f32; dim];
+            let mut a = algorithms::from_name(algo, cfg, &x0, n).unwrap();
+            for _ in 0..800 {
+                a.step(&mut models, 0.05);
+            }
+            let mut mean = vec![0.0f32; dim];
+            a.mean_params(&mut mean);
+            fam.iter().map(|q| q.full_loss(&mean)).sum::<f64>() / n as f64 - fstar
+        };
+        t.row(vec![
+            comp_name.into(),
+            format!("{alpha:.3}"),
+            if alpha < bound { "yes" } else { "NO" }.into(),
+            format!("{:.3e}", subopt("dcd")),
+            format!("{:.3e}", subopt("ecd")),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nReading: once alpha exceeds {bound:.4}, DCD blows up (inf/NaN) while ECD\n\
+         stays bounded — the asymmetry §4.2 predicts. (sparse_p5 has alpha ≈ 4.4.)"
+    );
+    Ok(())
+}

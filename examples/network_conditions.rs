@@ -1,0 +1,62 @@
+//! Network-conditions explorer: the paper's §5.3 landscape (Fig. 3) plus
+//! a custom-condition probe.
+//!
+//!   cargo run --release --example network_conditions
+//!   cargo run --release --example network_conditions -- \
+//!       --bandwidth-mbps 25 --latency-ms 2
+//!
+//! Prints epoch times of Allreduce fp32 / decentralized fp32 /
+//! decentralized 8-bit over the ResNet-20 testbed constants, and for a
+//! custom condition reports which implementation wins and by how much.
+
+use decomp::experiments::fig3::{self, epoch_times};
+use decomp::metrics::{fmt_secs, Table};
+use decomp::network::cost::NetworkModel;
+use decomp::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+
+    // The full Fig. 3 sweep.
+    for t in fig3::run(false) {
+        t.print();
+        println!();
+    }
+
+    // Custom probe.
+    let bw = args.f64("bandwidth-mbps", 25.0) * 1e6;
+    let lat = args.f64("latency-ms", 2.0) * 1e-3;
+    let net = NetworkModel::new(bw, lat);
+    let (ar, d32, d8) = epoch_times(&net, 8);
+    let mut t = Table::new(
+        &format!(
+            "custom condition: {:.0} Mbps, {:.2} ms (n=8 ring, ResNet-20 payload)",
+            bw / 1e6,
+            lat * 1e3
+        ),
+        &["implementation", "epoch_time", "vs_best"],
+    );
+    let best = ar.min(d32).min(d8);
+    for (name, v) in [
+        ("allreduce_fp32", ar),
+        ("decentralized_fp32", d32),
+        ("decentralized_8bit", d8),
+    ] {
+        t.row(vec![
+            name.into(),
+            fmt_secs(v),
+            format!("{:.2}x", v / best),
+        ]);
+    }
+    t.print();
+
+    let winner = if d8 <= best {
+        "decentralized_8bit"
+    } else if d32 <= best {
+        "decentralized_fp32"
+    } else {
+        "allreduce_fp32"
+    };
+    println!("\nwinner: {winner} (paper §5.3: compression+decentralization wins when both bandwidth and latency are bad)");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: train the same decentralized workload with every
+//! algorithm in the library and compare convergence + bytes on the wire.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! 8 workers on a ring, heterogeneous logistic-regression shards (the
+//! CIFAR substitute — see DESIGN.md §4), 500 synchronous iterations.
+//! Expected output: DCD/ECD at 8 bits match full-precision convergence
+//! while sending ~4x fewer bytes; the naive scheme stalls.
+
+use decomp::algorithms::{self, RunOpts};
+use decomp::coordinator::TrainConfig;
+use decomp::metrics::{fmt_bytes, Table};
+
+fn main() -> anyhow::Result<()> {
+    let base = TrainConfig {
+        n_nodes: 8,
+        iters: 500,
+        gamma: 0.05,
+        model: "logistic".into(),
+        dim: 64,
+        ..Default::default()
+    };
+
+    let mut table = Table::new(
+        "quickstart: 8-node ring, heterogeneous logistic regression, 500 iters",
+        &["algorithm", "compressor", "final f(x̄)", "consensus", "bytes/node/iter"],
+    );
+
+    for (algo, comp) in [
+        ("allreduce", "fp32"),
+        ("dpsgd", "fp32"),
+        ("dcd", "q8"),
+        ("ecd", "q8"),
+        ("dcd", "q4"),
+        ("naive", "q8"),
+    ] {
+        let cfg = TrainConfig {
+            algo: algo.into(),
+            compressor: comp.into(),
+            ..base.clone()
+        };
+        let algo_cfg = cfg.build_algo_config()?;
+        let (mut models, x0) = cfg.build_models()?;
+        let mut a = algorithms::from_name(algo, algo_cfg, &x0, cfg.n_nodes)
+            .ok_or_else(|| anyhow::anyhow!("unknown algorithm"))?;
+        let opts = RunOpts {
+            iters: cfg.iters,
+            gamma: cfg.gamma,
+            eval_every: cfg.iters,
+            ..Default::default()
+        };
+        let trace = algorithms::run_training(a.as_mut(), &mut models, &opts);
+        let last = trace.points.last().unwrap();
+        table.row(vec![
+            algo.into(),
+            comp.into(),
+            format!("{:.4}", last.global_loss),
+            format!("{:.2e}", last.consensus),
+            fmt_bytes(last.bytes_sent as f64 / (cfg.iters * cfg.n_nodes) as f64),
+        ]);
+    }
+    table.print();
+    println!("\nNote: q8 rows should match fp32 convergence at ~1/4 the bytes;");
+    println!("`naive` demonstrates why unmodified compression fails (Fig. 1).");
+    Ok(())
+}

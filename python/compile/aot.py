@@ -1,0 +1,163 @@
+"""AOT lowering: jax/pallas graphs -> HLO *text* artifacts for the rust
+PJRT runtime.
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax >= 0.5 emits
+64-bit instruction ids that the crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all shapes baked at lower time, recorded in manifest.json):
+
+  grad_step.hlo.txt   (params f32[N], tokens i32[B,S+1]) -> (loss, grads)
+  dcd_step.hlo.txt    the fused DCD-PSGD local step (gossip + fwd/bwd +
+                      Pallas quantization) — one PJRT call per node/iter
+  quantize8.hlo.txt   (z f32[Np], seed i32[1]) -> (levels, scales)
+  gossip.hlo.txt      (x, neighbors, weights, gamma, grad) -> x_half
+
+Usage: python -m compile.aot --out-dir ../artifacts [--preset small|base|large]
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import gossip as gossip_k
+from .kernels import quantize as quantize_k
+from .kernels.ref import CHUNK
+
+PRESETS = {
+    # ~0.8M params: CI-speed e2e training on CPU.
+    "small": M.ModelConfig(vocab=256, d_model=128, n_layers=2, n_heads=4, d_ff=512, seq_len=64),
+    # ~3.3M params: the default e2e driver.
+    "base": M.ModelConfig(vocab=256, d_model=256, n_layers=4, n_heads=4, d_ff=1024, seq_len=128),
+    # ~110M params: GPT-2-small-class; for real accelerators.
+    "large": M.ModelConfig(vocab=50257, d_model=768, n_layers=12, n_heads=12, d_ff=3072, seq_len=512),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifacts(cfg: M.ModelConfig, batch: int, degree: int, bits: int, out_dir: str):
+    """Lower every artifact and write the manifest. Returns the manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    n = M.param_count(cfg)
+    np_ = M.padded_dim(cfg)
+    nchunks = np_ // CHUNK
+
+    f32, i32 = jnp.float32, jnp.int32
+    spec = jax.ShapeDtypeStruct
+    tokens_spec = spec((batch, cfg.seq_len + 1), i32)
+
+    artifacts = {}
+
+    def emit(name, fn, *args):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [list(a.shape) for a in args],
+            "hlo_bytes": len(text),
+        }
+        print(f"  {name}: {len(text)} chars -> {path}")
+
+    emit(
+        "grad_step",
+        functools.partial(M.grad_step, cfg),
+        spec((n,), f32),
+        tokens_spec,
+    )
+    emit(
+        "dcd_step",
+        functools.partial(M.dcd_fused_step, cfg, bits=bits),
+        spec((np_,), f32),
+        spec((degree, np_), f32),
+        spec((degree + 1,), f32),
+        spec((1,), f32),
+        tokens_spec,
+        spec((1,), i32),
+    )
+    emit(
+        "quantize8",
+        functools.partial(quantize_k.quantize, bits=bits),
+        spec((np_,), f32),
+        spec((1,), i32),
+    )
+    emit(
+        "gossip",
+        gossip_k.gossip_step,
+        spec((np_,), f32),
+        spec((degree, np_), f32),
+        spec((degree + 1,), f32),
+        spec((1,), f32),
+        spec((np_,), f32),
+    )
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+        },
+        "param_count": n,
+        "padded_dim": np_,
+        "nchunks": nchunks,
+        "chunk": CHUNK,
+        "batch": batch,
+        "degree": degree,
+        "bits": bits,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def init_params_file(cfg: M.ModelConfig, seed: int, out_dir: str):
+    """Write the shared initial flat parameter vector (f32 LE bytes) so
+    every rust worker starts from the same x_1."""
+    flat = M.init_flat(cfg, seed)
+    path = os.path.join(out_dir, "init_params.f32")
+    import numpy as np
+
+    np.asarray(flat, dtype="<f4").tofile(path)
+    print(f"  init_params: {flat.shape[0]} f32 -> {path}")
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--preset", default="small", choices=sorted(PRESETS))
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--degree", type=int, default=2, help="gossip degree (ring=2)")
+    p.add_argument("--bits", type=int, default=8)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+
+    cfg = PRESETS[args.preset]
+    print(f"lowering preset={args.preset} ({M.param_count(cfg)} params) -> {args.out_dir}")
+    lower_artifacts(cfg, args.batch, args.degree, args.bits, args.out_dir)
+    init_params_file(cfg, args.seed, args.out_dir)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: fused gossip-average + SGD step.
+
+One pass over the parameter vector computes
+
+    out = w[0] * x + sum_d w[1+d] * neighbors[d] - gamma * grad
+
+which is DCD-PSGD's step 1 (`x_{t+1/2} = Σ_j W_ij x̂_j − γ∇F_i`). Unfused,
+this is D+2 reads and D+1 writes of the full vector through HBM; fused it
+is D+2 reads and 1 write — the same fusion the paper's implementation does
+on GPU with a custom kernel.
+
+§Perf: vectors stream through VMEM in (BLOCK,)-sized tiles of
+BLOCK = 32·1024 elements (f32 ⇒ 128 KiB per operand per block — for a
+degree-2 ring that is 4 live operands ≈ 512 KiB, comfortably inside a
+TPU core's ≈16 MiB VMEM while amortizing grid bookkeeping 32× vs the
+naive 1024-element tile). The D-way weighted sum is statically unrolled —
+degree is a trace-time constant — so it stays register-resident on the
+VPU with no cross-block state.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 32 * 1024
+
+
+def _gossip_kernel(x_ref, nbr_ref, w_ref, gamma_ref, g_ref, out_ref, *, degree):
+    x = x_ref[...]  # (1, B)
+    acc = w_ref[0] * x
+    for d in range(degree):  # static unroll: degree is a trace-time const
+        acc = acc + w_ref[1 + d] * nbr_ref[d, :][None, :]
+    out_ref[...] = acc - gamma_ref[0] * g_ref[...]
+
+
+def _pad_tail(v, mult):
+    n = v.shape[-1]
+    padded = ((n + mult - 1) // mult) * mult
+    if padded == n:
+        return v
+    pad_shape = v.shape[:-1] + (padded - n,)
+    return jnp.concatenate([v, jnp.zeros(pad_shape, dtype=v.dtype)], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def gossip_step(x, neighbors, weights, gamma, grad, block=BLOCK):
+    """Fused `Σ_j W_ij x̂_j − γ g` over one node's neighborhood.
+
+    Args:
+      x: f32[n] local model (any n; padded internally).
+      neighbors: f32[d, n] neighbor replicas (row per neighbor).
+      weights: f32[1 + d] mixing weights, self weight first.
+      gamma: f32[1] step size.
+      grad: f32[n] stochastic gradient.
+
+    Returns:
+      f32[n] = x_{t+1/2}.
+    """
+    n = x.shape[0]
+    degree = neighbors.shape[0]
+    assert weights.shape[0] == degree + 1
+    xp = _pad_tail(x, block)
+    nbrp = _pad_tail(neighbors, block)
+    gp = _pad_tail(grad, block)
+    npad = xp.shape[0]
+    nblocks = npad // block
+    out = pl.pallas_call(
+        functools.partial(_gossip_kernel, degree=degree),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((degree, block), lambda i: (0, i)),
+            pl.BlockSpec((degree + 1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, block), jnp.float32),
+        interpret=True,
+    )(
+        xp.reshape(nblocks, block),
+        nbrp,
+        weights,
+        jnp.asarray(gamma, dtype=jnp.float32).reshape(1),
+        gp.reshape(nblocks, block),
+    )
+    return out.reshape(npad)[:n]

@@ -1,0 +1,146 @@
+"""L1 Pallas kernel: stochastic uniform quantization (the paper's
+compression hot spot, footnote 1) and its inverse.
+
+The kernel streams the parameter-delta vector through VMEM one scale-chunk
+at a time (BlockSpec blocks of (1, CHUNK) over a (nchunks, CHUNK) view —
+CHUNK = 1024 = 8×128, a multiple of the TPU lane tile), computes the
+per-chunk max-abs scale on the VPU, stochastically rounds against a
+counter-based hash RNG (no state to carry between blocks, so blocks are
+trivially parallel), and writes integer levels plus one scale per chunk.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+implementation fused quantization into one pass over the gradient in
+global memory; here BlockSpec expresses the same HBM→VMEM schedule.
+interpret=True everywhere — the CPU PJRT client cannot run Mosaic
+custom-calls; structure, not wallclock, is what carries to TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import CHUNK
+
+
+def _hash_uniform_u32(seed_u32, idx_i32):
+    """In-kernel twin of ref.hash_uniform (murmur3 finalizer)."""
+    x = (idx_i32.astype(jnp.uint32) * jnp.uint32(2654435761)) ^ seed_u32
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return (x >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+# Scale-chunks processed per grid program. §Perf: one program per chunk
+# (R=1) spends most of interpret-mode wallclock in grid bookkeeping, and
+# on real TPUs under-fills VMEM (4 KiB/block vs ≈16 MiB available).
+# R=32 chunks → 128 KiB blocks: 32× fewer grid steps, still far below the
+# VMEM ceiling, and the per-row reduction stays a lane-wise VPU max.
+ROWS_PER_BLOCK = 32
+
+
+def _pad_rows(mat, rows_mult):
+    rows = mat.shape[0]
+    padded = ((rows + rows_mult - 1) // rows_mult) * rows_mult
+    if padded == rows:
+        return mat
+    pad = jnp.zeros((padded - rows,) + mat.shape[1:], dtype=mat.dtype)
+    return jnp.concatenate([mat, pad], axis=0)
+
+
+def _quantize_kernel(z_ref, seed_ref, lev_ref, scale_ref, *, bits, chunk, rows):
+    i = pl.program_id(0)
+    z = z_ref[...]  # (rows, chunk) block in VMEM
+    s = jnp.max(jnp.abs(z), axis=1, keepdims=True)  # (rows, 1)
+    lm1 = jnp.float32(2**bits - 1)
+    safe = jnp.where(s > 0, s, 1.0)
+    u = jnp.clip((z / safe + 1.0) * 0.5 * lm1, 0.0, lm1)
+    lo = jnp.floor(u)
+    frac = u - lo
+    # Global element index = (block row offset + row)·chunk + lane: the
+    # stateless RNG counter (blocks stay order-independent).
+    row = jax.lax.broadcasted_iota(jnp.int32, z.shape, 0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)
+    idx = (i * rows + row) * chunk + lane
+    r = _hash_uniform_u32(seed_ref[0].astype(jnp.uint32), idx)
+    q = jnp.minimum(lo + (r < frac).astype(jnp.float32), lm1)
+    lev_ref[...] = jnp.where(s > 0, q, 0.0)
+    scale_ref[...] = s
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "chunk", "rows_per_block"))
+def quantize(z, seed, bits=8, chunk=CHUNK, rows_per_block=ROWS_PER_BLOCK):
+    """Stochastically quantize z (f32[n], n % chunk == 0).
+
+    Args:
+      z: f32[n] with n a multiple of `chunk` (pad with ref.pad_to_chunks).
+      seed: i32[1] — per-(node, iteration) stream id.
+
+    Returns:
+      (levels f32[n] integer-valued in [0, 2^bits-1], scales f32[nchunks])
+    """
+    n = z.shape[0]
+    assert n % chunk == 0, f"pad to chunk multiple first (n={n})"
+    nchunks = n // chunk
+    zr = _pad_rows(z.reshape(nchunks, chunk), rows_per_block)
+    nrows = zr.shape[0]
+    grid = nrows // rows_per_block
+    levels, scales = pl.pallas_call(
+        functools.partial(_quantize_kernel, bits=bits, chunk=chunk, rows=rows_per_block),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((rows_per_block, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows_per_block, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_block, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nrows, chunk), jnp.float32),
+            jax.ShapeDtypeStruct((nrows, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(zr, jnp.asarray(seed, dtype=jnp.int32).reshape(1))
+    return levels.reshape(nrows * chunk)[:n], scales.reshape(nrows)[:nchunks]
+
+
+def _dequantize_kernel(lev_ref, scale_ref, out_ref, *, bits):
+    lev = lev_ref[...]  # (rows, chunk)
+    s = scale_ref[...]  # (rows, 1)
+    lm1 = jnp.float32(2**bits - 1)
+    v = (lev / lm1 * 2.0 - 1.0) * s
+    out_ref[...] = jnp.where(s > 0, v, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "chunk", "rows_per_block"))
+def dequantize(levels, scales, bits=8, chunk=CHUNK, rows_per_block=ROWS_PER_BLOCK):
+    """Inverse of `quantize`: levels + per-chunk scales -> f32[n]."""
+    n = levels.shape[0]
+    assert n % chunk == 0
+    nchunks = n // chunk
+    lr = _pad_rows(levels.reshape(nchunks, chunk), rows_per_block)
+    sr = _pad_rows(scales.reshape(nchunks, 1), rows_per_block)
+    nrows = lr.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_dequantize_kernel, bits=bits),
+        grid=(nrows // rows_per_block,),
+        in_specs=[
+            pl.BlockSpec((rows_per_block, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_block, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_block, chunk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nrows, chunk), jnp.float32),
+        interpret=True,
+    )(lr, sr)
+    return out.reshape(nrows * chunk)[:n]
+
+
+def quantize_roundtrip(z, seed, bits=8, chunk=CHUNK):
+    """C(z) = dequantize(quantize(z)) as one fused jitted graph."""
+    levels, scales = quantize(z, seed, bits=bits, chunk=chunk)
+    return dequantize(levels, scales, bits=bits, chunk=chunk)

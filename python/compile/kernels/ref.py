@@ -1,0 +1,113 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here
+written with plain jax.numpy ops — no pallas, no custom control flow. The
+pytest suite asserts the kernels match these exactly (same hash-based
+randomness), and the hypothesis sweeps run both over random shapes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# Chunk size shared with the rust codec (compression::quantize::DEFAULT_CHUNK)
+# and the Pallas kernel — one scale per 1024 elements.
+CHUNK = 1024
+
+
+def hash_uniform(seed, idx):
+    """Counter-based uniform in [0,1): murmur3-style finalizer over
+    (seed, element index). Deterministic, stateless, identical in the
+    Pallas kernel, this oracle, and the tests.
+    """
+    x = (idx.astype(jnp.uint32) * jnp.uint32(2654435761)) ^ seed.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    # Top 24 bits -> [0, 1) with full f32 precision.
+    return (x >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def pad_to_chunks(z, chunk=CHUNK):
+    """Zero-pad a 1-D vector to a multiple of `chunk`."""
+    n = z.shape[0]
+    padded = ((n + chunk - 1) // chunk) * chunk
+    if padded == n:
+        return z
+    return jnp.concatenate([z, jnp.zeros(padded - n, dtype=z.dtype)])
+
+
+def quantize_ref(z, seed, bits=8, chunk=CHUNK):
+    """Stochastic uniform quantization (paper footnote 1), reference.
+
+    Args:
+      z: f32[n], n a multiple of `chunk` (use pad_to_chunks first).
+      seed: scalar int32/uint32.
+      bits: levels = 2**bits.
+
+    Returns:
+      levels: f32[n] integer-valued in [0, 2**bits - 1]
+      scales: f32[nchunks] per-chunk max-abs
+    """
+    n = z.shape[0]
+    assert n % chunk == 0, f"pad to chunk multiple first (n={n})"
+    nchunks = n // chunk
+    zr = z.reshape(nchunks, chunk)
+    scales = jnp.max(jnp.abs(zr), axis=1)
+    lm1 = jnp.float32(2**bits - 1)
+    safe = jnp.where(scales > 0, scales, 1.0)
+    u = (zr / safe[:, None] + 1.0) * 0.5 * lm1
+    u = jnp.clip(u, 0.0, lm1)
+    lo = jnp.floor(u)
+    frac = u - lo
+    idx = jnp.arange(n, dtype=jnp.int32).reshape(nchunks, chunk)
+    r = hash_uniform(jnp.asarray(seed), idx)
+    q = lo + (r < frac).astype(jnp.float32)
+    q = jnp.minimum(q, lm1)
+    q = jnp.where(scales[:, None] > 0, q, 0.0)
+    return q.reshape(n), scales
+
+
+def dequantize_ref(levels, scales, bits=8, chunk=CHUNK):
+    """Inverse map: level -> (q/(L-1)*2 - 1) * scale."""
+    n = levels.shape[0]
+    nchunks = n // chunk
+    lm1 = jnp.float32(2**bits - 1)
+    lr = levels.reshape(nchunks, chunk)
+    out = (lr / lm1 * 2.0 - 1.0) * scales[:, None]
+    out = jnp.where(scales[:, None] > 0, out, 0.0)
+    return out.reshape(n)
+
+
+def gossip_step_ref(x, neighbors, weights, gamma, grad):
+    """Fused gossip-average + SGD step, reference.
+
+    out = weights[0] * x + sum_d weights[1+d] * neighbors[d] - gamma * grad
+
+    Args:
+      x: f32[n] local model
+      neighbors: f32[d, n] neighbor replicas
+      weights: f32[1 + d] mixing weights (self first)
+      gamma: f32[] or f32[1] step size
+      grad: f32[n] stochastic gradient
+    """
+    mixed = weights[0] * x + jnp.einsum("d,dn->n", weights[1:], neighbors)
+    return mixed - jnp.reshape(gamma, ()) * grad
+
+
+def quantize_roundtrip_ref(z, seed, bits=8, chunk=CHUNK):
+    """C(z) = dequantize(quantize(z)) — the full operator."""
+    levels, scales = quantize_ref(z, seed, bits=bits, chunk=chunk)
+    return dequantize_ref(levels, scales, bits=bits, chunk=chunk)
+
+
+def numpy_hash_uniform(seed, idx):
+    """NumPy twin of hash_uniform, for host-side test assertions."""
+    x = (idx.astype(np.uint32) * np.uint32(2654435761)) ^ np.uint32(seed)
+    x = x ^ (x >> np.uint32(16))
+    x = x * np.uint32(0x85EBCA6B)
+    x = x ^ (x >> np.uint32(13))
+    x = x * np.uint32(0xC2B2AE35)
+    x = x ^ (x >> np.uint32(16))
+    return (x >> np.uint32(8)).astype(np.float32) / np.float32(1 << 24)

@@ -1,0 +1,252 @@
+"""L2: decoder-only transformer LM over a flat f32 parameter vector.
+
+The rust coordinator treats every model as x ∈ R^N (the paper's view), so
+this module packs all transformer weights into one flat vector and
+exposes:
+
+  - ``loss_fn(flat, tokens)``            — next-token cross entropy
+  - ``grad_step(flat, tokens)``          — (loss, grads_flat), the artifact
+  - ``dcd_fused_step(...)``              — the full DCD-PSGD local step
+    (gossip kernel + fwd/bwd + Pallas quantization) as ONE jitted graph:
+    the entire per-iteration compute of a node in a single PJRT call.
+
+Layers are stacked on a leading axis and consumed with ``lax.scan`` so the
+lowered HLO stays compact regardless of depth. Output head is weight-tied
+to the token embedding.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gossip as gossip_k
+from .kernels import quantize as quantize_k
+from .kernels.ref import CHUNK
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 1024
+    seq_len: int = 128
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter packing
+
+
+def param_shapes(cfg: ModelConfig):
+    """Ordered (name, shape) table defining the flat layout."""
+    L, D, F, V, S = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    return [
+        ("embed", (V, D)),
+        ("pos", (S, D)),
+        ("ln1_scale", (L, D)),
+        ("ln1_bias", (L, D)),
+        ("wqkv", (L, D, 3 * D)),
+        ("wo", (L, D, D)),
+        ("ln2_scale", (L, D)),
+        ("ln2_bias", (L, D)),
+        ("w1", (L, D, F)),
+        ("b1", (L, F)),
+        ("w2", (L, F, D)),
+        ("b2", (L, D)),
+        ("lnf_scale", (D,)),
+        ("lnf_bias", (D,)),
+    ]
+
+
+def param_count(cfg: ModelConfig) -> int:
+    total = 0
+    for _, shape in param_shapes(cfg):
+        k = 1
+        for s in shape:
+            k *= s
+        total += k
+    return total
+
+
+def unflatten(cfg: ModelConfig, flat):
+    """Slice the flat vector into the named parameter dict."""
+    params = {}
+    off = 0
+    for name, shape in param_shapes(cfg):
+        k = 1
+        for s in shape:
+            k *= s
+        params[name] = flat[off : off + k].reshape(shape)
+        off += k
+    return params
+
+
+def init_flat(cfg: ModelConfig, seed: int = 0):
+    """Deterministic initialization of the flat vector (shared x_1)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        k = 1
+        for s in shape:
+            k *= s
+        if name.endswith("_scale"):
+            chunks.append(jnp.ones(k, dtype=jnp.float32))
+        elif name.endswith("_bias") or name.startswith("b"):
+            chunks.append(jnp.zeros(k, dtype=jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = fan_in ** -0.5
+            chunks.append(
+                (jax.random.normal(sub, (k,), dtype=jnp.float32) * std)
+            )
+    return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _block(cfg: ModelConfig, h, layer):
+    """One pre-LN transformer block. h: (B, S, D)."""
+    B, S, D = h.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+
+    a = _layer_norm(h, layer["ln1_scale"], layer["ln1_bias"])
+    qkv = a @ layer["wqkv"]  # (B, S, 3D)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) * (hd ** -0.5)
+    mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, D)
+    h = h + o @ layer["wo"]
+
+    m = _layer_norm(h, layer["ln2_scale"], layer["ln2_bias"])
+    m = jax.nn.gelu(m @ layer["w1"] + layer["b1"])
+    h = h + m @ layer["w2"] + layer["b2"]
+    return h
+
+
+_LAYER_KEYS = (
+    "ln1_scale",
+    "ln1_bias",
+    "wqkv",
+    "wo",
+    "ln2_scale",
+    "ln2_bias",
+    "w1",
+    "b1",
+    "w2",
+    "b2",
+)
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """Logits for a batch of token ids. tokens: i32 (B, S)."""
+    B, S = tokens.shape
+    h = params["embed"][tokens] + params["pos"][None, :S]
+    stacked = {k: params[k] for k in _LAYER_KEYS}
+
+    def body(h, layer):
+        return _block(cfg, h, layer), None
+
+    h, _ = jax.lax.scan(body, h, stacked)
+    h = _layer_norm(h, params["lnf_scale"], params["lnf_bias"])
+    return h @ params["embed"].T  # weight-tied head
+
+
+def loss_fn(cfg: ModelConfig, flat, tokens):
+    """Next-token cross entropy. tokens: i32 (B, S+1) — inputs tokens[:, :-1],
+    targets tokens[:, 1:]."""
+    params = unflatten(cfg, flat)
+    logits = forward(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def grad_step(cfg: ModelConfig, flat, tokens):
+    """(loss, grads_flat) — the main AOT artifact."""
+    return jax.value_and_grad(functools.partial(loss_fn, cfg))(flat, tokens)
+
+
+# ---------------------------------------------------------------------------
+# The fused DCD-PSGD local step (one PJRT call per node per iteration)
+
+
+def padded_dim(cfg: ModelConfig) -> int:
+    n = param_count(cfg)
+    return ((n + CHUNK - 1) // CHUNK) * CHUNK
+
+
+def dcd_fused_step(cfg: ModelConfig, x, neighbors, weights, gamma, tokens, seed, bits=8):
+    """One full DCD-PSGD iteration for one node, fused into one graph.
+
+    Args:
+      x: f32[Np] local model, zero-padded to a CHUNK multiple.
+      neighbors: f32[deg, Np] neighbor replicas (≡ their actual models).
+      weights: f32[deg + 1] mixing row (self weight first).
+      gamma: f32[1] step size.
+      tokens: i32[B, S+1] local minibatch.
+      seed: i32[1] compression stream for this (node, iteration).
+
+    Returns:
+      loss: f32[]            minibatch loss at x_t
+      x_new: f32[Np]         x_{t+1} = x_t + C(z_t)
+      levels: f32[Np]        quantization levels of z_t (the wire payload)
+      scales: f32[Np/CHUNK]  per-chunk scales (the rest of the payload)
+    """
+    n = param_count(cfg)
+    loss, g = grad_step(cfg, x[:n], tokens)
+    g_pad = jnp.concatenate([g, jnp.zeros(x.shape[0] - n, dtype=jnp.float32)])
+    # Step 1 (gossip kernel): x_{t+1/2} = Σ_j W_ij x̂_j − γ g.
+    x_half = gossip_k.gossip_step(x, neighbors, weights, gamma, g_pad)
+    # Step 2 (quantize kernel): z = x_{t+1/2} − x_t, compress.
+    z = x_half - x
+    levels, scales = quantize_k.quantize(z, seed, bits=bits)
+    cz = quantize_k.dequantize(levels, scales, bits=bits)
+    # Step 3: x_{t+1} = x_t + C(z).
+    return loss, x + cz, levels, scales
+
+
+# ---------------------------------------------------------------------------
+# Synthetic corpus (byte-level, deterministic) for the e2e driver's tests
+
+
+def synthetic_tokens(cfg: ModelConfig, batch: int, seed: int, node: int = 0):
+    """A learnable synthetic token stream: a noisy order-1 Markov chain
+    whose transition structure differs slightly per node (heterogeneity).
+    """
+    key = jax.random.PRNGKey(seed * 1000003 + node)
+    k1, k2 = jax.random.split(key)
+    # Base sequence: x_{t+1} = (a * x_t + b + noise) mod vocab.
+    a, b = 31, 17 + node
+    x0 = jax.random.randint(k1, (batch, 1), 0, cfg.vocab)
+    noise = jax.random.bernoulli(k2, 0.1, (batch, cfg.seq_len)).astype(jnp.int32)
+
+    def step(x, n):
+        nxt = (a * x + b + n) % cfg.vocab
+        return nxt, nxt
+
+    _, seq = jax.lax.scan(step, x0[:, 0], noise.T)
+    return jnp.concatenate([x0, seq.T], axis=1).astype(jnp.int32)  # (B, S+1)

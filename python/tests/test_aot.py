@@ -1,0 +1,77 @@
+"""AOT path: artifacts lower to valid HLO text and the manifest is
+consistent with the model configuration."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.kernels.ref import CHUNK
+
+TINY = M.ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64, seq_len=16)
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.lower_artifacts(TINY, batch=2, degree=2, bits=8, out_dir=out)
+    aot.init_params_file(TINY, seed=0, out_dir=out)
+    return out, manifest
+
+
+def test_all_artifacts_written(built):
+    out, manifest = built
+    for name in ["grad_step", "dcd_step", "quantize8", "gossip"]:
+        assert name in manifest["artifacts"]
+        path = os.path.join(out, manifest["artifacts"][name]["file"])
+        assert os.path.exists(path)
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{name} is not HLO text"
+        assert "ENTRY" in text
+
+
+def test_manifest_consistency(built):
+    out, manifest = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        reloaded = json.load(f)
+    assert reloaded == manifest
+    assert manifest["param_count"] == M.param_count(TINY)
+    assert manifest["padded_dim"] % CHUNK == 0
+    assert manifest["padded_dim"] >= manifest["param_count"]
+    assert manifest["nchunks"] == manifest["padded_dim"] // CHUNK
+    assert manifest["model"]["d_model"] == TINY.d_model
+
+
+def test_grad_step_input_shapes_recorded(built):
+    _, manifest = built
+    ins = manifest["artifacts"]["grad_step"]["inputs"]
+    assert ins[0] == [M.param_count(TINY)]
+    assert ins[1] == [2, TINY.seq_len + 1]
+
+
+def test_init_params_file_round_trips(built):
+    out, manifest = built
+    raw = np.fromfile(os.path.join(out, "init_params.f32"), dtype="<f4")
+    assert raw.shape[0] == manifest["param_count"]
+    flat = np.asarray(M.init_flat(TINY, 0))
+    np.testing.assert_array_equal(raw, flat)
+
+
+def test_hlo_has_no_serialized_proto_markers(built):
+    """Guard: we must ship text, not binary proto (xla_extension 0.5.1
+    rejects jax>=0.5 protos; see aot.py docstring)."""
+    out, manifest = built
+    for art in manifest["artifacts"].values():
+        with open(os.path.join(out, art["file"]), "rb") as f:
+            head = f.read(64)
+        assert head.decode("utf-8", errors="strict").startswith("HloModule")
+
+
+def test_presets_are_ordered_by_size():
+    small = M.param_count(aot.PRESETS["small"])
+    base = M.param_count(aot.PRESETS["base"])
+    large = M.param_count(aot.PRESETS["large"])
+    assert small < base < large
+    assert large > 80_000_000  # ~GPT-2-small class

@@ -1,0 +1,79 @@
+"""L1 correctness: fused gossip+SGD Pallas kernel vs the jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gossip as G
+from compile.kernels import ref
+
+BLOCK = G.BLOCK
+
+
+def _rand(shape, seed, scale=1.0):
+    return (np.random.RandomState(seed).randn(*shape) * scale).astype(np.float32)
+
+
+def test_matches_ref_ring_degree2():
+    n = 2 * BLOCK
+    x = jnp.asarray(_rand((n,), 0))
+    nbrs = jnp.asarray(_rand((2, n), 1))
+    w = jnp.asarray(np.array([1 / 3, 1 / 3, 1 / 3], dtype=np.float32))
+    g = jnp.asarray(_rand((n,), 2))
+    out = G.gossip_step(x, nbrs, w, 0.1, g)
+    out_r = ref.gossip_step_ref(x, nbrs, w, 0.1, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r), atol=1e-5)
+
+
+def test_zero_gamma_is_pure_gossip():
+    n = BLOCK
+    x = jnp.asarray(_rand((n,), 3))
+    nbrs = jnp.asarray(_rand((2, n), 4))
+    w = jnp.asarray(np.array([0.5, 0.25, 0.25], dtype=np.float32))
+    g = jnp.asarray(_rand((n,), 5) * 1e6)  # gradient must be ignored
+    out = np.asarray(G.gossip_step(x, nbrs, w, 0.0, g))
+    expect = 0.5 * np.asarray(x) + 0.25 * np.asarray(nbrs[0]) + 0.25 * np.asarray(nbrs[1])
+    np.testing.assert_allclose(out, expect, atol=1e-4)
+
+
+def test_identity_weights_recover_sgd():
+    n = BLOCK
+    x = jnp.asarray(_rand((n,), 6))
+    nbrs = jnp.zeros((2, n), dtype=jnp.float32)
+    w = jnp.asarray(np.array([1.0, 0.0, 0.0], dtype=np.float32))
+    g = jnp.asarray(_rand((n,), 7))
+    out = np.asarray(G.gossip_step(x, nbrs, w, 0.2, g))
+    np.testing.assert_allclose(out, np.asarray(x) - 0.2 * np.asarray(g), atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nblocks=st.integers(min_value=1, max_value=3),
+    degree=st.integers(min_value=1, max_value=4),
+    gamma=st.sampled_from([0.0, 0.01, 0.5]),
+    seed=st.integers(min_value=0, max_value=10**6),
+)
+def test_hypothesis_sweep(nblocks, degree, gamma, seed):
+    n = nblocks * BLOCK
+    rs = seed % 991
+    x = jnp.asarray(_rand((n,), rs))
+    nbrs = jnp.asarray(_rand((degree, n), rs + 1))
+    raw = np.abs(_rand((degree + 1,), rs + 2)) + 0.1
+    w = jnp.asarray((raw / raw.sum()).astype(np.float32))
+    g = jnp.asarray(_rand((n,), rs + 3))
+    out = G.gossip_step(x, nbrs, w, gamma, g)
+    out_r = ref.gossip_step_ref(x, nbrs, w, gamma, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r), atol=1e-4)
+
+
+def test_doubly_stochastic_preserves_constant_vectors():
+    # If x and all neighbors equal c·1 and weights sum to 1, the mixed
+    # part stays c·1 (the consensus fixed point).
+    n = BLOCK
+    c = 0.7
+    x = jnp.full((n,), c, dtype=jnp.float32)
+    nbrs = jnp.full((2, n), c, dtype=jnp.float32)
+    w = jnp.asarray(np.array([1 / 3, 1 / 3, 1 / 3], dtype=np.float32))
+    g = jnp.zeros((n,), dtype=jnp.float32)
+    out = np.asarray(G.gossip_step(x, nbrs, w, 0.1, g))
+    np.testing.assert_allclose(out, c, atol=1e-6)

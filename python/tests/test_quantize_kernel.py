@@ -1,0 +1,161 @@
+"""L1 correctness: Pallas quantization kernel vs the pure-jnp oracle.
+
+The CORE correctness signal of the compile path: the kernel must agree
+with ref.py bit-for-bit on levels (same hash RNG) and to f32 round-off on
+dequantized values, across a hypothesis sweep of shapes, bits and input
+distributions.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quantize as Q
+from compile.kernels import ref
+
+CHUNK = ref.CHUNK
+
+
+def _rand(n, seed, scale=1.0, dtype=np.float32):
+    return (np.random.RandomState(seed).randn(n) * scale).astype(dtype)
+
+
+class TestAgainstRef:
+    @pytest.mark.parametrize("bits", [1, 2, 4, 8])
+    @pytest.mark.parametrize("nchunks", [1, 3])
+    def test_levels_match_ref_exactly(self, bits, nchunks):
+        z = jnp.asarray(_rand(nchunks * CHUNK, seed=bits * 10 + nchunks))
+        lev, sc = Q.quantize(z, 42, bits=bits)
+        lev_r, sc_r = ref.quantize_ref(z, 42, bits=bits)
+        np.testing.assert_array_equal(np.asarray(lev), np.asarray(lev_r))
+        np.testing.assert_allclose(np.asarray(sc), np.asarray(sc_r), rtol=0)
+
+    @pytest.mark.parametrize("bits", [2, 8])
+    def test_dequantize_matches_ref(self, bits):
+        z = jnp.asarray(_rand(2 * CHUNK, seed=7))
+        lev, sc = Q.quantize(z, 1, bits=bits)
+        out = Q.dequantize(lev, sc, bits=bits)
+        out_r = ref.dequantize_ref(lev, sc, bits=bits)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out_r), atol=1e-5)
+
+    def test_different_seeds_different_rounding(self):
+        z = jnp.asarray(_rand(CHUNK, seed=3))
+        lev_a, _ = Q.quantize(z, 1, bits=8)
+        lev_b, _ = Q.quantize(z, 2, bits=8)
+        assert not np.array_equal(np.asarray(lev_a), np.asarray(lev_b))
+
+    def test_same_seed_deterministic(self):
+        z = jnp.asarray(_rand(CHUNK, seed=4))
+        lev_a, sc_a = Q.quantize(z, 9, bits=4)
+        lev_b, sc_b = Q.quantize(z, 9, bits=4)
+        np.testing.assert_array_equal(np.asarray(lev_a), np.asarray(lev_b))
+        np.testing.assert_array_equal(np.asarray(sc_a), np.asarray(sc_b))
+
+
+class TestOperatorProperties:
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    def test_error_bounded_by_step(self, bits):
+        z = jnp.asarray(_rand(2 * CHUNK, seed=bits))
+        out = np.asarray(Q.quantize_roundtrip(z, 5, bits=bits))
+        zn = np.asarray(z)
+        scales = np.abs(zn.reshape(2, CHUNK)).max(axis=1)
+        step = 2.0 * scales[:, None] / (2**bits - 1)
+        err = np.abs(out.reshape(2, CHUNK) - zn.reshape(2, CHUNK))
+        assert (err <= step + 1e-5).all()
+
+    def test_unbiased_over_seeds(self):
+        z = jnp.asarray(_rand(CHUNK, seed=11, scale=0.5))
+        acc = np.zeros(CHUNK, dtype=np.float64)
+        trials = 600
+        for s in range(trials):
+            acc += np.asarray(Q.quantize_roundtrip(z, s, bits=4))
+        mean = acc / trials
+        scale = float(np.abs(np.asarray(z)).max())
+        step = 2.0 * scale / 15
+        # Std of mean ≈ step/√(4·trials); allow 5 sigma.
+        tol = 5 * step / np.sqrt(4 * trials)
+        np.testing.assert_allclose(mean, np.asarray(z), atol=tol)
+
+    def test_zero_chunk_stays_zero(self):
+        z = jnp.zeros(2 * CHUNK, dtype=jnp.float32)
+        lev, sc = Q.quantize(z, 3, bits=8)
+        assert np.all(np.asarray(sc) == 0)
+        out = np.asarray(Q.dequantize(lev, sc, bits=8))
+        assert np.all(out == 0)
+
+    def test_mixed_zero_and_live_chunks(self):
+        z = np.zeros(3 * CHUNK, dtype=np.float32)
+        z[CHUNK : 2 * CHUNK] = _rand(CHUNK, seed=12)
+        out = np.asarray(Q.quantize_roundtrip(jnp.asarray(z), 8, bits=8))
+        assert np.all(out[:CHUNK] == 0)
+        assert np.all(out[2 * CHUNK :] == 0)
+        assert np.abs(out[CHUNK : 2 * CHUNK] - z[CHUNK : 2 * CHUNK]).max() < 0.05
+
+    def test_one_bit_levels_are_binary(self):
+        z = jnp.asarray(_rand(CHUNK, seed=13))
+        lev, _ = Q.quantize(z, 2, bits=1)
+        assert set(np.unique(np.asarray(lev))) <= {0.0, 1.0}
+
+
+class TestHypothesisSweep:
+    """Shape/bits/distribution sweep: kernel ≡ oracle everywhere."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        nchunks=st.integers(min_value=1, max_value=4),
+        bits=st.sampled_from([1, 2, 3, 4, 6, 8]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    )
+    def test_kernel_equals_oracle(self, nchunks, bits, seed, scale):
+        z = jnp.asarray(_rand(nchunks * CHUNK, seed=seed % 1000, scale=scale))
+        lev, sc = Q.quantize(z, seed, bits=bits)
+        lev_r, sc_r = ref.quantize_ref(z, seed, bits=bits)
+        np.testing.assert_array_equal(np.asarray(lev), np.asarray(lev_r))
+        np.testing.assert_array_equal(np.asarray(sc), np.asarray(sc_r))
+        assert np.asarray(lev).max() <= 2**bits - 1
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n_extra=st.integers(min_value=0, max_value=CHUNK - 1),
+        seed=st.integers(min_value=0, max_value=10**6),
+    )
+    def test_padding_round_trip(self, n_extra, seed):
+        """pad_to_chunks + quantize handles every residual length."""
+        n = CHUNK + n_extra
+        z = jnp.asarray(_rand(n, seed=seed % 997))
+        zp = ref.pad_to_chunks(z)
+        assert zp.shape[0] % CHUNK == 0
+        out = np.asarray(Q.quantize_roundtrip(zp, seed, bits=8))[:n]
+        scale = float(np.abs(np.asarray(zp)).max())
+        assert np.abs(out - np.asarray(z)).max() <= 2 * scale / 255 + 1e-5
+
+    @settings(max_examples=10, deadline=None)
+    @given(dtype=st.sampled_from([np.float64, np.float16]))
+    def test_dtype_upcast(self, dtype):
+        """Non-f32 inputs are accepted after an explicit cast (the kernel
+        contract is f32; the sweep verifies the cast path loses nothing
+        beyond the dtype's own precision)."""
+        z64 = _rand(CHUNK, seed=21, dtype=np.float32).astype(dtype)
+        z = jnp.asarray(z64.astype(np.float32))
+        lev, sc = Q.quantize(z, 2, bits=8)
+        lev_r, sc_r = ref.quantize_ref(z, 2, bits=8)
+        np.testing.assert_array_equal(np.asarray(lev), np.asarray(lev_r))
+
+
+class TestHashRng:
+    def test_hash_uniform_matches_numpy_twin(self):
+        idx = jnp.arange(4096, dtype=jnp.int32)
+        a = np.asarray(ref.hash_uniform(jnp.asarray(77), idx))
+        b = ref.numpy_hash_uniform(77, np.arange(4096))
+        np.testing.assert_array_equal(a, b)
+
+    def test_hash_uniform_distribution(self):
+        idx = jnp.arange(1 << 16, dtype=jnp.int32)
+        u = np.asarray(ref.hash_uniform(jnp.asarray(123), idx))
+        assert 0.0 <= u.min() and u.max() < 1.0
+        assert abs(u.mean() - 0.5) < 0.01
+        # Roughly uniform deciles.
+        hist, _ = np.histogram(u, bins=10, range=(0, 1))
+        assert (np.abs(hist - len(u) / 10) < 0.05 * len(u) / 10 + 100).all()

@@ -1,0 +1,10 @@
+//! Bench: ablations — compressor α sweep vs the DCD admissibility bound,
+//! topology spectra, and the heterogeneity (ζ) sweep.
+
+fn main() {
+    let quick = decomp::bench_harness::quick_mode();
+    for t in decomp::experiments::ablations::run(quick) {
+        t.print();
+        println!();
+    }
+}

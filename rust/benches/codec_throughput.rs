@@ -1,0 +1,76 @@
+//! Bench: L3 codec hot path — compress/decompress throughput of every
+//! wire format, plus the gossip weighted-sum kernel. This is the
+//! §Perf measurement target for the rust layer (see EXPERIMENTS.md).
+
+use decomp::bench_harness::{report, time_throughput, BenchOpts};
+use decomp::compression::{Compressor, Identity, RandomSparsifier, StochasticQuantizer, TopK};
+use decomp::linalg::vecops;
+use decomp::util::rng::Pcg64;
+
+fn main() {
+    let n: usize = if decomp::bench_harness::quick_mode() {
+        1 << 18
+    } else {
+        1 << 22 // 4M f32 = 16 MB — a ~4M-parameter model delta
+    };
+    let opts = BenchOpts {
+        warmup_iters: 2,
+        measure_iters: 8,
+    };
+    let mut rng = Pcg64::seed_from_u64(1);
+    let mut z = vec![0.0f32; n];
+    rng.fill_normal_f32(&mut z, 0.0, 1.0);
+    let mut out = vec![0.0f32; n];
+
+    let codecs: Vec<Box<dyn Compressor>> = vec![
+        Box::new(Identity),
+        Box::new(StochasticQuantizer::new(8)),
+        Box::new(StochasticQuantizer::new(4)),
+        Box::new(StochasticQuantizer::new(2)),
+        Box::new(StochasticQuantizer::new(1)),
+        Box::new(RandomSparsifier::new(0.25)),
+        Box::new(TopK::new(0.1)),
+    ];
+
+    let mut compress_ms = Vec::new();
+    let mut decompress_ms = Vec::new();
+    for c in &codecs {
+        let mut crng = Pcg64::seed_from_u64(2);
+        compress_ms.push(time_throughput(
+            &format!("compress/{}", c.name()),
+            opts,
+            n as f64,
+            || {
+                std::hint::black_box(c.compress(&z, &mut crng));
+            },
+        ));
+        let wire = c.compress(&z, &mut Pcg64::seed_from_u64(3));
+        decompress_ms.push(time_throughput(
+            &format!("decompress/{}", c.name()),
+            opts,
+            n as f64,
+            || {
+                c.decompress(&wire, &mut out);
+                std::hint::black_box(&out);
+            },
+        ));
+    }
+    report(&format!("codec compress throughput (n = {n} f32, elems/s)"), &compress_ms).print();
+    println!();
+    report(&format!("codec decompress throughput (n = {n} f32, elems/s)"), &decompress_ms).print();
+    println!();
+
+    // Gossip weighted-sum (the degree-2 ring mix) + axpy SGD step.
+    let a = z.clone();
+    let b = z.clone();
+    let mut g = vec![0.0f32; n];
+    rng.fill_normal_f32(&mut g, 0.0, 1.0);
+    let weights = [1.0f32 / 3.0, 1.0 / 3.0, 1.0 / 3.0];
+    let gossip = time_throughput("gossip_mix+sgd(deg2)", opts, n as f64, || {
+        let cols: [&[f32]; 3] = [&z, &a, &b];
+        vecops::weighted_sum(&weights, &cols, &mut out);
+        vecops::axpy(-0.1, &g, &mut out);
+        std::hint::black_box(&out);
+    });
+    report("L3 gossip hot path (elems/s)", &[gossip]).print();
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Figure 1 (D-PSGD vs naive compression).
+//! `DECOMP_BENCH_QUICK=1` shrinks the run.
+
+fn main() {
+    let quick = decomp::bench_harness::quick_mode();
+    for t in decomp::experiments::fig1::run(quick) {
+        t.print();
+        println!();
+    }
+}

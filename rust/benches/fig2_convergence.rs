@@ -1,0 +1,9 @@
+//! Bench: regenerate Figure 2(a) — convergence vs iteration for
+//! Allreduce / decentralized fp32 / DCD q8 / ECD q8.
+
+fn main() {
+    let quick = decomp::bench_harness::quick_mode();
+    let tables = decomp::experiments::fig2::run(quick);
+    // Table 0 is Fig 2(a); the runtime tables are printed by fig2_runtime.
+    tables[0].print();
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Figure 2(b,c,d) — loss vs simulated wall-clock
+//! under the three tc-shaped network conditions, plus the comm-time
+//! summary that drives the crossovers.
+
+fn main() {
+    let quick = decomp::bench_harness::quick_mode();
+    let tables = decomp::experiments::fig2::run(quick);
+    for t in &tables[1..] {
+        t.print();
+        println!();
+    }
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerate Figure 3 (a–d) — epoch time vs bandwidth and
+//! latency for the three implementations (pure cost model; deterministic).
+
+fn main() {
+    for t in decomp::experiments::fig3::run(false) {
+        t.print();
+        println!();
+    }
+}

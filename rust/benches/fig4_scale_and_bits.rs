@@ -1,0 +1,10 @@
+//! Bench: regenerate Figure 4 — (a) 16 nodes at 8 bits, (b) 4-bit
+//! stress, plus the quantizer-α vs DCD-bound table.
+
+fn main() {
+    let quick = decomp::bench_harness::quick_mode();
+    for t in decomp::experiments::fig4::run(quick) {
+        t.print();
+        println!();
+    }
+}

@@ -1,0 +1,85 @@
+//! Bench: PJRT runtime overhead — the L2/L1 step latencies as seen from
+//! the rust hot path. Skips (with a notice) when artifacts are missing.
+//!
+//! Measures:
+//!   grad_step      — fwd/bwd of the transformer (the L2 compute)
+//!   dcd_step       — the fused local step (adds the Pallas gossip +
+//!                    quantization kernels; the delta vs grad_step is the
+//!                    interpret-mode kernel cost, NOT a TPU proxy)
+//!   quantize8      — the standalone Pallas quantization artifact
+//!   rust_quantize  — the native rust codec on the same vector, for
+//!                    an apples-to-apples L3-vs-interpreted-L1 comparison
+
+use decomp::bench_harness::{report, time_fn, time_throughput, BenchOpts};
+use decomp::compression::{Compressor, StochasticQuantizer};
+use decomp::runtime::{PjrtEngine, TokenSampler};
+use decomp::util::rng::Pcg64;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP runtime_overhead: artifacts/ not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let engine = Arc::new(PjrtEngine::load(&dir)?);
+    let m = engine.manifest.clone();
+    println!(
+        "runtime: {} params, padded {}, batch {}, seq {}",
+        m.param_count, m.padded_dim, m.batch, m.seq_len
+    );
+    let opts = BenchOpts {
+        warmup_iters: 1,
+        measure_iters: if decomp::bench_harness::quick_mode() { 3 } else { 6 },
+    };
+
+    let params = m.load_init_params()?;
+    let sampler = TokenSampler {
+        vocab: m.vocab as i32,
+        seq_len: m.seq_len,
+        batch: m.batch,
+        node: 0,
+    };
+    let mut rng = Pcg64::seed_from_u64(1);
+    let tokens = sampler.sample(&mut rng);
+
+    let grad = time_fn("pjrt/grad_step", opts, || {
+        std::hint::black_box(engine.grad_step(&params, &tokens).unwrap());
+    });
+
+    let mut x = vec![0.0f32; m.padded_dim];
+    x[..m.param_count].copy_from_slice(&params);
+    let mut neighbors = Vec::with_capacity(2 * m.padded_dim);
+    neighbors.extend_from_slice(&x);
+    neighbors.extend_from_slice(&x);
+    let weights = vec![1.0f32 / 3.0; m.degree + 1];
+    let dcd = time_fn("pjrt/dcd_step(fused)", opts, || {
+        std::hint::black_box(
+            engine
+                .dcd_step(&x, &neighbors, &weights, 0.1, &tokens, 7)
+                .unwrap(),
+        );
+    });
+
+    let mut z = vec![0.0f32; m.padded_dim];
+    rng.fill_normal_f32(&mut z, 0.0, 0.1);
+    let quant = time_throughput("pjrt/quantize8(pallas-interpret)", opts, m.padded_dim as f64, || {
+        std::hint::black_box(engine.quantize(&z, 42).unwrap());
+    });
+
+    let q8 = StochasticQuantizer::new(8);
+    let mut qrng = Pcg64::seed_from_u64(2);
+    let rust_q = time_throughput("rust/quantize8(native codec)", opts, m.padded_dim as f64, || {
+        std::hint::black_box(q8.compress(&z, &mut qrng));
+    });
+
+    report("PJRT step latencies", &[grad, dcd]).print();
+    println!();
+    report("quantization: interpreted Pallas vs native rust", &[quant, rust_q]).print();
+    println!(
+        "\nNote: interpret=True Pallas timings are a CPU-emulation artifact, not a\n\
+         TPU estimate — see DESIGN.md §Hardware-Adaptation / EXPERIMENTS.md §Perf."
+    );
+    Ok(())
+}

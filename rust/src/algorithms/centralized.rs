@@ -1,0 +1,181 @@
+//! Centralized baselines: full-precision Allreduce SGD (the paper's
+//! "Centralized" comparator, C-PSGD over MPI Allreduce) and its quantized
+//! variant (QSGD-style gradient compression with a centralized topology).
+
+use super::{AlgoConfig, Algorithm, NodeStates, StepStats};
+use crate::models::GradientModel;
+use crate::network::cost::CommSchedule;
+
+/// C-PSGD: x_{t+1} = x_t − γ (1/n) Σ_i ∇F_i(x_t; ξ). All nodes hold the
+/// same iterate; communication is one ring Allreduce of the gradient.
+pub struct CentralizedSgd {
+    // Retained for config-surface uniformity with the other algorithms
+    // (seed already flowed into NodeStates; fp32 Allreduce needs no codec).
+    _cfg: AlgoConfig,
+    s: NodeStates,
+    gsum: Vec<f32>,
+}
+
+impl CentralizedSgd {
+    pub fn new(cfg: AlgoConfig, x0: &[f32], n_nodes: usize) -> CentralizedSgd {
+        CentralizedSgd {
+            s: NodeStates::new(n_nodes, x0, cfg.seed),
+            gsum: vec![0.0f32; x0.len()],
+            _cfg: cfg,
+        }
+    }
+}
+
+impl Algorithm for CentralizedSgd {
+    fn name(&self) -> String {
+        "allreduce_fp32".into()
+    }
+
+    fn step(&mut self, models: &mut [Box<dyn GradientModel>], gamma: f32) -> StepStats {
+        self.s.t += 1;
+        let n = self.s.n();
+        let (grads, loss) = self.s.all_grads(models);
+        let cols: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        crate::linalg::vecops::mean_of(&cols, &mut self.gsum);
+        for x in self.s.x.iter_mut() {
+            crate::linalg::vecops::axpy(-gamma, &self.gsum, x);
+        }
+        let sched = self.comm();
+        StepStats {
+            minibatch_loss: loss,
+            bytes_sent: (sched.bytes_per_node * n as f64) as u64,
+        }
+    }
+
+    fn params(&self) -> &[Vec<f32>] {
+        &self.s.x
+    }
+
+    fn comm(&self) -> CommSchedule {
+        CommSchedule::allreduce(self.s.n(), 4 * self.s.dim)
+    }
+}
+
+/// Quantized centralized SGD: each node Allreduces a *compressed*
+/// gradient (unbiased, so plain SGD analysis applies — compression noise
+/// here is damped by γ, unlike in the naive decentralized scheme).
+pub struct QuantizedCentralizedSgd {
+    cfg: AlgoConfig,
+    s: NodeStates,
+    gsum: Vec<f32>,
+    scratch: Vec<f32>,
+}
+
+impl QuantizedCentralizedSgd {
+    pub fn new(cfg: AlgoConfig, x0: &[f32], n_nodes: usize) -> QuantizedCentralizedSgd {
+        QuantizedCentralizedSgd {
+            s: NodeStates::new(n_nodes, x0, cfg.seed),
+            gsum: vec![0.0f32; x0.len()],
+            scratch: vec![0.0f32; x0.len()],
+            cfg,
+        }
+    }
+}
+
+impl Algorithm for QuantizedCentralizedSgd {
+    fn name(&self) -> String {
+        format!("allreduce_{}", self.cfg.compressor.name())
+    }
+
+    fn step(&mut self, models: &mut [Box<dyn GradientModel>], gamma: f32) -> StepStats {
+        self.s.t += 1;
+        let n = self.s.n();
+        let (grads, loss) = self.s.all_grads(models);
+        self.gsum.fill(0.0);
+        let mut bytes = 0u64;
+        for i in 0..n {
+            let wire = self.cfg.compressor.compress(&grads[i], &mut self.s.comp_rngs[i]);
+            bytes += wire.bytes() as u64 * 2 * (n as u64 - 1) / n as u64; // ring allreduce volume
+            self.cfg.compressor.decompress(&wire, &mut self.scratch);
+            crate::linalg::vecops::axpy(1.0 / n as f32, &self.scratch, &mut self.gsum);
+        }
+        for x in self.s.x.iter_mut() {
+            crate::linalg::vecops::axpy(-gamma, &self.gsum, x);
+        }
+        StepStats {
+            minibatch_loss: loss,
+            bytes_sent: bytes * n as u64,
+        }
+    }
+
+    fn params(&self) -> &[Vec<f32>] {
+        &self.s.x
+    }
+
+    fn comm(&self) -> CommSchedule {
+        CommSchedule::allreduce(self.s.n(), self.cfg.compressor.wire_bytes(self.s.dim))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::test_support::*;
+
+    #[test]
+    fn allreduce_converges_to_optimum() {
+        let n = 8;
+        let (mut models, x0) = quad_setup(n, 16, 1.0, 0.0);
+        let mut algo = CentralizedSgd::new(cfg_fp32(n, 1), &x0, n);
+        for _ in 0..300 {
+            algo.step(&mut models, 0.2);
+        }
+        let mut mean = vec![0.0f32; 16];
+        algo.mean_params(&mut mean);
+        let mut g = vec![0.0f32; 16];
+        let mut tg = vec![0.0f32; 16];
+        for m in &models {
+            m.full_grad(&mean, &mut g);
+            crate::linalg::vecops::axpy(1.0, &g, &mut tg);
+        }
+        assert!(crate::linalg::vecops::norm2(&tg) / n as f64 <= 1e-5);
+    }
+
+    #[test]
+    fn all_replicas_identical() {
+        let n = 4;
+        let (mut models, x0) = quad_setup(n, 8, 1.0, 0.5);
+        let mut algo = CentralizedSgd::new(cfg_fp32(n, 2), &x0, n);
+        for _ in 0..10 {
+            algo.step(&mut models, 0.1);
+        }
+        let first = algo.params()[0].clone();
+        for x in algo.params() {
+            assert_eq!(*x, first);
+        }
+    }
+
+    #[test]
+    fn quantized_allreduce_converges_close_to_fp() {
+        let n = 8;
+        let (mut m1, x0) = quad_setup(n, 32, 1.0, 0.1);
+        let (mut m2, _) = quad_setup(n, 32, 1.0, 0.1);
+        let mut q = QuantizedCentralizedSgd::new(cfg_q(n, 8, 3), &x0, n);
+        let mut f = CentralizedSgd::new(cfg_fp32(n, 3), &x0, n);
+        let lq = train_loss(&mut q, &mut m1, 0.1, 500);
+        let lf = train_loss(&mut f, &mut m2, 0.1, 500);
+        assert!(lq < lf + 0.05 * (1.0 + lf.abs()), "{lq} vs {lf}");
+    }
+
+    #[test]
+    fn allreduce_comm_has_2n_minus_2_rounds() {
+        let n = 8;
+        let (_, x0) = quad_setup(n, 100, 1.0, 0.0);
+        let algo = CentralizedSgd::new(cfg_fp32(n, 4), &x0, n);
+        assert_eq!(algo.comm().rounds, 14);
+    }
+
+    #[test]
+    fn quantized_allreduce_bytes_smaller() {
+        let n = 8;
+        let (_, x0) = quad_setup(n, 4096, 1.0, 0.0);
+        let q = QuantizedCentralizedSgd::new(cfg_q(n, 8, 5), &x0, n);
+        let f = CentralizedSgd::new(cfg_fp32(n, 5), &x0, n);
+        assert!(q.comm().bytes_per_node < 0.3 * f.comm().bytes_per_node);
+    }
+}

@@ -1,0 +1,218 @@
+//! DCD-PSGD (Algorithm 1): difference-compression decentralized SGD.
+//!
+//! Nodes exchange the *compressed difference* between successive local
+//! models instead of the models themselves:
+//!
+//! 1. `x_{t+½}^{(i)} = Σ_j W_ij x̂_t^{(j)} − γ ∇F_i(x_t^{(i)}; ξ)`
+//! 2. `z_t^{(i)} = x_{t+½}^{(i)} − x_t^{(i)}`, send `C(z_t^{(i)})`
+//! 3. `x_{t+1}^{(i)} = x_t^{(i)} + C(z_t^{(i)})`, and every neighbor
+//!    updates its replica `x̂_{t+1}^{(i)} = x̂_t^{(i)} + C(z_t^{(i)})`.
+//!
+//! Because a node applies the *same* compressed delta to its own model
+//! that its neighbors apply to their replicas, replicas remain exact
+//! mirrors — the simulator exploits this (x̂ ≡ x), and the threaded
+//! coordinator keeps literal replicas and asserts the invariant.
+//!
+//! Convergence requires α ≤ (1−ρ)/(2µ) (Theorem 1): under too-aggressive
+//! compression DCD *diverges*, which Fig. 4(b) and our benches exhibit.
+
+use super::{AlgoConfig, Algorithm, NodeStates, StepStats};
+use crate::models::GradientModel;
+use crate::network::cost::CommSchedule;
+
+pub struct DcdPsgd {
+    cfg: AlgoConfig,
+    s: NodeStates,
+    half: Vec<Vec<f32>>,
+    z: Vec<f32>,
+    cz: Vec<f32>,
+}
+
+impl DcdPsgd {
+    pub fn new(cfg: AlgoConfig, x0: &[f32], n_nodes: usize) -> DcdPsgd {
+        assert_eq!(cfg.mixing.n(), n_nodes);
+        DcdPsgd {
+            s: NodeStates::new(n_nodes, x0, cfg.seed),
+            half: vec![vec![0.0f32; x0.len()]; n_nodes],
+            z: vec![0.0f32; x0.len()],
+            cz: vec![0.0f32; x0.len()],
+            cfg,
+        }
+    }
+}
+
+impl Algorithm for DcdPsgd {
+    fn name(&self) -> String {
+        format!("dcd_{}", self.cfg.compressor.name())
+    }
+
+    fn step(&mut self, models: &mut [Box<dyn GradientModel>], gamma: f32) -> StepStats {
+        self.s.t += 1;
+        let n = self.s.n();
+        let (grads, loss) = self.s.all_grads(models);
+
+        // Step 1: weighted average of replicas (≡ actual models) minus the
+        // gradient step.
+        NodeStates::gossip_average(&self.cfg.mixing, &self.s.x, &mut self.half);
+        let mut bytes = 0u64;
+        for i in 0..n {
+            crate::linalg::vecops::axpy(-gamma, &grads[i], &mut self.half[i]);
+            // Steps 2–3: z = x_{t+½} − x_t; x_{t+1} = x_t + C(z).
+            crate::linalg::vecops::sub(&self.half[i], &self.s.x[i], &mut self.z);
+            let wire = self.cfg.compressor.compress(&self.z, &mut self.s.comp_rngs[i]);
+            // Every neighbor receives this wire (degree × bytes on the NIC).
+            bytes += (wire.bytes() * self.cfg.mixing.graph.degree(i)) as u64;
+            self.cfg.compressor.decompress(&wire, &mut self.cz);
+            crate::linalg::vecops::axpy(1.0, &self.cz, &mut self.s.x[i]);
+        }
+        StepStats {
+            minibatch_loss: loss,
+            bytes_sent: bytes,
+        }
+    }
+
+    fn params(&self) -> &[Vec<f32>] {
+        &self.s.x
+    }
+
+    fn comm(&self) -> CommSchedule {
+        CommSchedule::gossip(
+            self.cfg.mixing.graph.max_degree(),
+            self.cfg.compressor.wire_bytes(self.s.dim),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::consensus_distance;
+    use crate::algorithms::test_support::*;
+    use crate::compression::{empirical_alpha, Compressor, RandomSparsifier, StochasticQuantizer};
+    use crate::algorithms::AlgoConfig;
+    use std::sync::Arc;
+
+    #[test]
+    fn fp32_dcd_equals_dpsgd_trajectory() {
+        // With the identity compressor C(z) = z, DCD reduces exactly to
+        // D-PSGD: x_{t+1} = x_t + (x_{t+½} − x_t) = X_t W − γ G.
+        let n = 6;
+        let (mut m1, x0) = quad_setup(n, 8, 1.0, 0.5);
+        let (mut m2, _) = quad_setup(n, 8, 1.0, 0.5);
+        let mut dcd = DcdPsgd::new(cfg_fp32(n, 5), &x0, n);
+        let mut dp = crate::algorithms::DPsgd::new(cfg_fp32(n, 5), &x0, n);
+        for _ in 0..50 {
+            dcd.step(&mut m1, 0.1);
+            dp.step(&mut m2, 0.1);
+        }
+        for (a, b) in dcd.params().iter().zip(dp.params()) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn converges_with_8bit_compression() {
+        // Paper Fig. 2(a): 8-bit DCD matches full precision.
+        let n = 8;
+        let (mut models, x0) = quad_setup(n, 32, 1.0, 0.1);
+        let mut algo = DcdPsgd::new(cfg_q(n, 8, 6), &x0, n);
+        let loss = train_loss(&mut algo, &mut models, 0.1, 600);
+        let (mut ref_models, _) = quad_setup(n, 32, 1.0, 0.1);
+        let mut fp = crate::algorithms::DPsgd::new(cfg_fp32(n, 6), &x0, n);
+        let fp_loss = train_loss(&mut fp, &mut ref_models, 0.1, 600);
+        assert!(
+            loss < fp_loss + 0.05 * (1.0 + fp_loss.abs()),
+            "8-bit {loss} vs fp32 {fp_loss}"
+        );
+    }
+
+    #[test]
+    fn annealed_dcd_q8_reaches_optimum_with_bounded_consensus() {
+        // Under an annealed step size, 8-bit DCD drives the averaged
+        // iterate to the exact optimum; its consensus distance stays
+        // within a small factor of full-precision D-PSGD's own
+        // steady-state disagreement at the same final γ.
+        use crate::models::Quadratic;
+        let n = 8;
+        let dim = 32;
+        let fam = Quadratic::family(n, dim, 1.0, 0.0, 0xdeca);
+        let opt = Quadratic::optimum(&fam);
+        let fstar: f64 = fam.iter().map(|q| q.full_loss(&opt)).sum::<f64>() / n as f64;
+        let x0 = vec![0.0f32; dim];
+
+        let anneal = |t: u32| 0.1f32 / (1.0 + t as f32 / 100.0);
+        let mut m_dcd: Vec<Box<dyn crate::models::GradientModel>> =
+            fam.clone().into_iter().map(|q| Box::new(q) as _).collect();
+        let mut dcd = DcdPsgd::new(cfg_q(n, 8, 7), &x0, n);
+        let mut m_ref: Vec<Box<dyn crate::models::GradientModel>> =
+            fam.clone().into_iter().map(|q| Box::new(q) as _).collect();
+        let mut dp = crate::algorithms::DPsgd::new(cfg_fp32(n, 7), &x0, n);
+        for t in 0..800 {
+            dcd.step(&mut m_dcd, anneal(t));
+            dp.step(&mut m_ref, anneal(t));
+        }
+        let mut mean = vec![0.0f32; dim];
+        dcd.mean_params(&mut mean);
+        let subopt = fam.iter().map(|q| q.full_loss(&mean)).sum::<f64>() / n as f64 - fstar;
+        assert!(subopt < 1e-3, "suboptimality {subopt}");
+        let cd_dcd = consensus_distance(dcd.params());
+        let cd_ref = consensus_distance(dp.params());
+        assert!(
+            cd_dcd < 20.0 * cd_ref.max(1e-3),
+            "DCD consensus {cd_dcd} vs D-PSGD {cd_ref}"
+        );
+    }
+
+    #[test]
+    fn alpha_bound_violated_diverges_or_stalls() {
+        // Theorem 1 requires α ≤ (1−ρ)/(2µ). An aggressive sparsifier
+        // (keep 5%) has α ≈ √(19) ≈ 4.4 — far beyond any ring's bound.
+        let n = 8;
+        let mixing = ring_mixing(n);
+        let sparsifier = RandomSparsifier::new(0.05);
+        let alpha = empirical_alpha(&sparsifier, 64, 6, 1);
+        assert!(alpha > mixing.dcd_alpha_bound(), "test premise");
+
+        let (mut models, x0) = quad_setup(n, 64, 1.0, 0.0);
+        let cfg = AlgoConfig {
+            mixing,
+            compressor: Arc::new(sparsifier),
+            seed: 8,
+        };
+        let mut algo = DcdPsgd::new(cfg, &x0, n);
+        let bad_loss = train_loss(&mut algo, &mut models, 0.1, 300);
+
+        let (mut ok_models, _) = quad_setup(n, 64, 1.0, 0.0);
+        let mut fp = crate::algorithms::DPsgd::new(cfg_fp32(n, 8), &x0, n);
+        let good_loss = train_loss(&mut fp, &mut ok_models, 0.1, 300);
+        // Divergence manifests as NaN/∞ or a loss far above the reference.
+        assert!(
+            !bad_loss.is_finite() || bad_loss > 5.0 * good_loss.max(1e-6),
+            "expected degradation: {bad_loss} vs {good_loss}"
+        );
+    }
+
+    #[test]
+    fn wire_accounting_quarter_at_8bit() {
+        let n = 8;
+        let dim = 4096;
+        let (mut models, x0) = quad_setup(n, dim, 1.0, 0.0);
+        let mut algo = DcdPsgd::new(cfg_q(n, 8, 9), &x0, n);
+        let stats = algo.step(&mut models, 0.1);
+        let fp_bytes = (n * 2 * 4 * dim) as u64; // degree 2, fp32
+        let ratio = stats.bytes_sent as f64 / fp_bytes as f64;
+        assert!((0.2..0.3).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn comm_schedule_uses_compressed_size() {
+        let n = 8;
+        let (_, x0) = quad_setup(n, 1024, 1.0, 0.0);
+        let algo = DcdPsgd::new(cfg_q(n, 4, 10), &x0, n);
+        let c = algo.comm();
+        let q = StochasticQuantizer::new(4);
+        assert_eq!(c.bytes_per_node, (2 * q.wire_bytes(1024)) as f64);
+    }
+}

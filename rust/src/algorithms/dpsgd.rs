@@ -1,0 +1,167 @@
+//! D-PSGD (Lian et al., 2017): full-precision decentralized SGD — the
+//! base algorithm the paper compresses. Global form (§3):
+//! `X_{t+1} = X_t W − γ G(X_t; ξ_t)`.
+
+use super::{AlgoConfig, Algorithm, NodeStates, StepStats};
+use crate::models::GradientModel;
+use crate::network::cost::CommSchedule;
+
+pub struct DPsgd {
+    cfg: AlgoConfig,
+    s: NodeStates,
+    scratch: Vec<Vec<f32>>,
+}
+
+impl DPsgd {
+    pub fn new(cfg: AlgoConfig, x0: &[f32], n_nodes: usize) -> DPsgd {
+        assert_eq!(cfg.mixing.n(), n_nodes);
+        DPsgd {
+            s: NodeStates::new(n_nodes, x0, cfg.seed),
+            scratch: vec![vec![0.0f32; x0.len()]; n_nodes],
+            cfg,
+        }
+    }
+}
+
+impl Algorithm for DPsgd {
+    fn name(&self) -> String {
+        "dpsgd_fp32".into()
+    }
+
+    fn step(&mut self, models: &mut [Box<dyn GradientModel>], gamma: f32) -> StepStats {
+        self.s.t += 1;
+        let (grads, loss) = self.s.all_grads(models);
+        // x_{t+1}^{(i)} = Σ_j W_ij x^{(j)} − γ g_i  (neighbors exchange
+        // full-precision models: 4·dim bytes each way per edge).
+        NodeStates::gossip_average(&self.cfg.mixing, &self.s.x, &mut self.scratch);
+        for i in 0..self.s.n() {
+            crate::linalg::vecops::axpy(-gamma, &grads[i], &mut self.scratch[i]);
+        }
+        std::mem::swap(&mut self.s.x, &mut self.scratch);
+        let sched = self.comm();
+        StepStats {
+            minibatch_loss: loss,
+            bytes_sent: (sched.bytes_per_node * self.s.n() as f64) as u64,
+        }
+    }
+
+    fn params(&self) -> &[Vec<f32>] {
+        &self.s.x
+    }
+
+    fn comm(&self) -> CommSchedule {
+        CommSchedule::gossip(self.cfg.mixing.graph.max_degree(), 4 * self.s.dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::test_support::*;
+    use crate::algorithms::consensus_distance;
+    use crate::models::Quadratic;
+
+    #[test]
+    fn converges_to_quadratic_optimum() {
+        let n = 8;
+        let (mut models, x0) = quad_setup(n, 16, 1.0, 0.0);
+        let mut algo = DPsgd::new(cfg_fp32(n, 1), &x0, n);
+        let loss = train_loss(&mut algo, &mut models, 0.2, 400);
+        // Optimum loss = average of ½‖x* − c_i‖² > 0; check gradient
+        // instead: ∇f(x̄) ≈ 0 ⇔ x̄ ≈ mean(c_i).
+        let mut mean = vec![0.0f32; 16];
+        algo.mean_params(&mut mean);
+        let mut g = vec![0.0f32; 16];
+        let mut total_g = vec![0.0f32; 16];
+        for m in &models {
+            m.full_grad(&mean, &mut g);
+            crate::linalg::vecops::axpy(1.0, &g, &mut total_g);
+        }
+        let gn = crate::linalg::vecops::norm2(&total_g) / n as f64;
+        assert!(gn < 1e-4, "grad norm {gn}, loss {loss}");
+    }
+
+    #[test]
+    fn steady_state_consensus_scales_with_gamma_squared() {
+        // With constant γ and heterogeneous objectives, D-PSGD has a
+        // *steady-state* disagreement O(γ²ζ²/(1−ρ)²) — it vanishes only
+        // as γ → 0. Check the scaling law rather than an absolute zero.
+        let n = 8;
+        let cd_at = |gamma: f32| -> f64 {
+            let (mut models, x0) = quad_setup(n, 8, 1.0, 0.0);
+            let mut algo = DPsgd::new(cfg_fp32(n, 2), &x0, n);
+            for _ in 0..2000 {
+                algo.step(&mut models, gamma);
+            }
+            consensus_distance(algo.params())
+        };
+        let big = cd_at(0.1);
+        let small = cd_at(0.01);
+        assert!(
+            small < big / 10.0,
+            "expected ~γ² consensus scaling: cd(0.1)={big}, cd(0.01)={small}"
+        );
+    }
+
+    #[test]
+    fn matches_global_matrix_form() {
+        // One step must equal X W − γ G exactly.
+        let n = 4;
+        let (mut models, x0) = quad_setup(n, 4, 1.0, 0.0);
+        let cfg = cfg_fp32(n, 3);
+        let w = cfg.mixing.w.clone();
+        let mut algo = DPsgd::new(cfg, &x0, n);
+        // Pre-step: X is x0 everywhere; grads g_i = x0 − c_i deterministic.
+        let pre: Vec<Vec<f32>> = algo.params().to_vec();
+        algo.step(&mut models, 0.1);
+        for i in 0..n {
+            for d in 0..4 {
+                let mixed: f64 = (0..n).map(|j| w[(i, j)] * pre[j][d] as f64).sum();
+                let mut g = vec![0.0f32; 4];
+                models[i].full_grad(&pre[i], &mut g);
+                let expect = mixed - 0.1 * g[d] as f64;
+                let got = algo.params()[i][d] as f64;
+                assert!((got - expect).abs() < 1e-5, "node {i} dim {d}: {got} vs {expect}");
+            }
+        }
+    }
+
+    #[test]
+    fn linear_speedup_direction_more_nodes_less_variance() {
+        // With σ > 0, the averaged iterate's gradient noise shrinks with n.
+        let dim = 8;
+        let run = |n: usize| -> f64 {
+            let fam = Quadratic::family(n, dim, 0.0, 2.0, 7);
+            let mut models: Vec<Box<dyn GradientModel>> = fam
+                .into_iter()
+                .map(|q| Box::new(q) as Box<dyn GradientModel>)
+                .collect();
+            let x0 = vec![1.0f32; dim];
+            let mut algo = DPsgd::new(cfg_fp32(n, 8), &x0, n);
+            // Average ‖x̄‖² over late iterations (optimum is 0).
+            let mut acc = 0.0;
+            let mut mean = vec![0.0f32; dim];
+            for t in 0..200 {
+                algo.step(&mut models, 0.05);
+                if t >= 100 {
+                    algo.mean_params(&mut mean);
+                    acc += crate::linalg::vecops::norm2(&mean).powi(2);
+                }
+            }
+            acc / 100.0
+        };
+        let v2 = run(2);
+        let v16 = run(16);
+        assert!(v16 < v2, "stationary variance should shrink with n: {v2} vs {v16}");
+    }
+
+    #[test]
+    fn comm_schedule_full_precision() {
+        let n = 8;
+        let (_, x0) = quad_setup(n, 100, 1.0, 0.0);
+        let algo = DPsgd::new(cfg_fp32(n, 4), &x0, n);
+        let c = algo.comm();
+        assert_eq!(c.rounds, 1);
+        assert_eq!(c.bytes_per_node, (2 * 4 * 100) as f64);
+    }
+}

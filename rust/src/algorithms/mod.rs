@@ -1,0 +1,285 @@
+//! The training algorithms: the paper's two contributions (DCD-PSGD,
+//! ECD-PSGD), the D-PSGD base, the naive-compression negative example
+//! (Fig. 1), and the centralized Allreduce baselines.
+//!
+//! All algorithms implement [`Algorithm`] over per-node [`GradientModel`]s
+//! and advance one *synchronous* iteration per [`Algorithm::step`] — the
+//! exact semantics of Algorithms 1–2 in the paper. This single-process
+//! form is the deterministic reference used by the figure benches; the
+//! threaded coordinator ([`crate::coordinator`]) runs the same math over
+//! real message passing, and an integration test pins the two trajectories
+//! to each other.
+
+mod centralized;
+mod dcd;
+mod dpsgd;
+mod driver;
+mod ecd;
+mod naive;
+
+pub use centralized::{CentralizedSgd, QuantizedCentralizedSgd};
+pub use dcd::DcdPsgd;
+pub use dpsgd::DPsgd;
+pub use driver::{global_loss, run_training, RunOpts, TracePoint, TrainTrace};
+pub use ecd::EcdPsgd;
+pub use naive::NaiveCompressedDPsgd;
+
+use crate::compression::Compressor;
+use crate::models::GradientModel;
+use crate::network::cost::CommSchedule;
+use crate::topology::MixingMatrix;
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// Per-step diagnostics returned by [`Algorithm::step`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepStats {
+    /// Mean minibatch loss across nodes at the pre-step iterates.
+    pub minibatch_loss: f64,
+    /// Wire bytes sent by all nodes this iteration.
+    pub bytes_sent: u64,
+}
+
+/// A synchronous decentralized (or centralized) training algorithm.
+pub trait Algorithm: Send {
+    /// Identifier used in metrics and bench tables.
+    fn name(&self) -> String;
+
+    /// Advance one synchronous iteration (all nodes move together).
+    fn step(&mut self, models: &mut [Box<dyn GradientModel>], gamma: f32) -> StepStats;
+
+    /// The current per-node iterates x^{(i)}.
+    fn params(&self) -> &[Vec<f32>];
+
+    /// Per-iteration communication schedule (for the network cost model).
+    fn comm(&self) -> CommSchedule;
+
+    /// Average iterate x̄ = (1/n) Σ_i x^{(i)} — the algorithm's output.
+    fn mean_params(&self, out: &mut [f32]) {
+        let cols: Vec<&[f32]> = self.params().iter().map(|v| v.as_slice()).collect();
+        crate::linalg::vecops::mean_of(&cols, out);
+    }
+}
+
+/// Σ_i ‖x̄ − x^{(i)}‖² — the consensus distance the supplementary bounds
+/// (eqs. 27/36).
+pub fn consensus_distance(params: &[Vec<f32>]) -> f64 {
+    let dim = params[0].len();
+    let mut mean = vec![0.0f32; dim];
+    let cols: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+    crate::linalg::vecops::mean_of(&cols, &mut mean);
+    params
+        .iter()
+        .map(|x| crate::linalg::vecops::dist2_sq(x, &mean))
+        .sum()
+}
+
+/// Shared per-node runtime state: iterates plus independent RNG streams
+/// for gradient sampling and compression noise (Assumption 1.5 requires
+/// the compression draws independent across nodes and time; distinct
+/// streams per node deliver that, and time-independence comes from the
+/// stream advancing).
+pub(crate) struct NodeStates {
+    pub x: Vec<Vec<f32>>,
+    pub grad_rngs: Vec<Pcg64>,
+    pub comp_rngs: Vec<Pcg64>,
+    pub t: u64,
+    pub dim: usize,
+}
+
+impl NodeStates {
+    pub fn new(n: usize, x0: &[f32], seed: u64) -> NodeStates {
+        NodeStates {
+            x: vec![x0.to_vec(); n],
+            grad_rngs: (0..n).map(|i| Pcg64::new(seed, 0x6000 + i as u64)).collect(),
+            comp_rngs: (0..n).map(|i| Pcg64::new(seed, 0xc000 + i as u64)).collect(),
+            t: 0,
+            dim: x0.len(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.len()
+    }
+
+    /// All nodes' stochastic gradients at their current iterates.
+    /// Returns (gradients, mean minibatch loss).
+    pub fn all_grads(&mut self, models: &mut [Box<dyn GradientModel>]) -> (Vec<Vec<f32>>, f64) {
+        let n = self.n();
+        let mut grads = vec![vec![0.0f32; self.dim]; n];
+        let mut loss = 0.0;
+        for i in 0..n {
+            loss += models[i].stoch_grad(&self.x[i], &mut grads[i], &mut self.grad_rngs[i]);
+        }
+        (grads, loss / n as f64)
+    }
+
+    /// Gossip average against a mixing matrix: out[i] = Σ_j W_ij src[j].
+    pub fn gossip_average(mixing: &MixingMatrix, src: &[Vec<f32>], out: &mut [Vec<f32>]) {
+        let n = src.len();
+        for i in 0..n {
+            let mut cols: Vec<&[f32]> = Vec::with_capacity(1 + mixing.graph.neighbors[i].len());
+            let mut weights: Vec<f32> = Vec::with_capacity(cols.capacity());
+            cols.push(src[i].as_slice());
+            weights.push(mixing.self_weight[i]);
+            for (k, &j) in mixing.graph.neighbors[i].iter().enumerate() {
+                cols.push(src[j].as_slice());
+                weights.push(mixing.neighbor_weights[i][k]);
+            }
+            crate::linalg::vecops::weighted_sum(&weights, &cols, &mut out[i]);
+        }
+    }
+}
+
+/// Everything an algorithm needs at construction time.
+pub struct AlgoConfig {
+    pub mixing: Arc<MixingMatrix>,
+    pub compressor: Arc<dyn Compressor>,
+    pub seed: u64,
+}
+
+/// Build an algorithm by name: `dpsgd`, `dcd`, `ecd`, `naive`,
+/// `allreduce`, `qallreduce`.
+pub fn from_name(
+    name: &str,
+    cfg: AlgoConfig,
+    x0: &[f32],
+    n_nodes: usize,
+) -> Option<Box<dyn Algorithm>> {
+    match name {
+        "dpsgd" => Some(Box::new(DPsgd::new(cfg, x0, n_nodes))),
+        "dcd" => Some(Box::new(DcdPsgd::new(cfg, x0, n_nodes))),
+        "ecd" => Some(Box::new(EcdPsgd::new(cfg, x0, n_nodes))),
+        "naive" => Some(Box::new(NaiveCompressedDPsgd::new(cfg, x0, n_nodes))),
+        "allreduce" => Some(Box::new(CentralizedSgd::new(cfg, x0, n_nodes))),
+        "qallreduce" => Some(Box::new(QuantizedCentralizedSgd::new(cfg, x0, n_nodes))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::compression::{Identity, StochasticQuantizer};
+    use crate::data::{build_models, ModelKind, SynthSpec};
+    use crate::topology::{Graph, Topology};
+
+    pub fn ring_mixing(n: usize) -> Arc<MixingMatrix> {
+        Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n)))
+    }
+
+    pub fn quad_setup(
+        n: usize,
+        dim: usize,
+        spread: f32,
+        noise: f32,
+    ) -> (Vec<Box<dyn GradientModel>>, Vec<f32>) {
+        let spec = SynthSpec {
+            n_nodes: n,
+            dim,
+            ..Default::default()
+        };
+        build_models(&ModelKind::Quadratic { spread, noise }, &spec)
+    }
+
+    pub fn cfg_fp32(n: usize, seed: u64) -> AlgoConfig {
+        AlgoConfig {
+            mixing: ring_mixing(n),
+            compressor: Arc::new(Identity),
+            seed,
+        }
+    }
+
+    pub fn cfg_q(n: usize, bits: u8, seed: u64) -> AlgoConfig {
+        AlgoConfig {
+            mixing: ring_mixing(n),
+            compressor: Arc::new(StochasticQuantizer::new(bits)),
+            seed,
+        }
+    }
+
+    /// Train `iters` steps, return final global loss at x̄.
+    pub fn train_loss(
+        algo: &mut dyn Algorithm,
+        models: &mut [Box<dyn GradientModel>],
+        gamma: f32,
+        iters: usize,
+    ) -> f64 {
+        for _ in 0..iters {
+            algo.step(models, gamma);
+        }
+        let dim = models[0].dim();
+        let mut mean = vec![0.0f32; dim];
+        algo.mean_params(&mut mean);
+        models.iter().map(|m| m.full_loss(&mean)).sum::<f64>() / models.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::*;
+    use super::*;
+
+    #[test]
+    fn consensus_distance_zero_when_equal() {
+        let params = vec![vec![1.0f32, 2.0]; 4];
+        assert_eq!(consensus_distance(&params), 0.0);
+    }
+
+    #[test]
+    fn consensus_distance_known() {
+        let params = vec![vec![0.0f32], vec![2.0f32]];
+        // mean 1.0 → 1 + 1 = 2.
+        assert_eq!(consensus_distance(&params), 2.0);
+    }
+
+    #[test]
+    fn gossip_average_doubly_stochastic_preserves_mean() {
+        let mixing = ring_mixing(6);
+        let mut rng = Pcg64::seed_from_u64(1);
+        let src: Vec<Vec<f32>> = (0..6)
+            .map(|_| {
+                let mut v = vec![0.0f32; 8];
+                rng.fill_normal_f32(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let mut out = vec![vec![0.0f32; 8]; 6];
+        NodeStates::gossip_average(&mixing, &src, &mut out);
+        let mut mean_src = vec![0.0f32; 8];
+        let mut mean_out = vec![0.0f32; 8];
+        let sc: Vec<&[f32]> = src.iter().map(|v| v.as_slice()).collect();
+        let oc: Vec<&[f32]> = out.iter().map(|v| v.as_slice()).collect();
+        crate::linalg::vecops::mean_of(&sc, &mut mean_src);
+        crate::linalg::vecops::mean_of(&oc, &mut mean_out);
+        for (a, b) in mean_src.iter().zip(&mean_out) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gossip_average_contracts_consensus_distance() {
+        let mixing = ring_mixing(8);
+        let mut rng = Pcg64::seed_from_u64(2);
+        let src: Vec<Vec<f32>> = (0..8)
+            .map(|_| {
+                let mut v = vec![0.0f32; 4];
+                rng.fill_normal_f32(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let mut out = vec![vec![0.0f32; 4]; 8];
+        NodeStates::gossip_average(&mixing, &src, &mut out);
+        assert!(consensus_distance(&out) < consensus_distance(&src));
+    }
+
+    #[test]
+    fn from_name_builds_everything() {
+        for name in ["dpsgd", "dcd", "ecd", "naive", "allreduce", "qallreduce"] {
+            let cfg = cfg_q(4, 8, 7);
+            let a = from_name(name, cfg, &[0.0; 4], 4).unwrap_or_else(|| panic!("{name}"));
+            assert!(!a.name().is_empty());
+        }
+        assert!(from_name("bogus", cfg_fp32(4, 7), &[0.0; 4], 4).is_none());
+    }
+}

@@ -1,0 +1,205 @@
+//! The negative example (Fig. 1 and Supplement §D): naively quantizing
+//! the exchanged models in D-PSGD. Each neighbor sees C(x_t^{(j)}), so
+//! the update is `X_{t+1} = X_t W + Q_t W − γ G` where the compression
+//! noise Q_t enters at full magnitude every iteration and — unlike the
+//! gradient noise — cannot be damped by the learning rate. The iterates
+//! hover at a noise floor set by the quantizer (or diverge outright for
+//! coarse quantization), which is exactly what the fig1 bench shows.
+
+use super::{AlgoConfig, Algorithm, NodeStates, StepStats};
+use crate::models::GradientModel;
+use crate::network::cost::CommSchedule;
+
+pub struct NaiveCompressedDPsgd {
+    cfg: AlgoConfig,
+    s: NodeStates,
+    compressed: Vec<Vec<f32>>,
+    mixed: Vec<Vec<f32>>,
+}
+
+impl NaiveCompressedDPsgd {
+    pub fn new(cfg: AlgoConfig, x0: &[f32], n_nodes: usize) -> NaiveCompressedDPsgd {
+        assert_eq!(cfg.mixing.n(), n_nodes);
+        NaiveCompressedDPsgd {
+            s: NodeStates::new(n_nodes, x0, cfg.seed),
+            compressed: vec![vec![0.0f32; x0.len()]; n_nodes],
+            mixed: vec![vec![0.0f32; x0.len()]; n_nodes],
+            cfg,
+        }
+    }
+}
+
+impl Algorithm for NaiveCompressedDPsgd {
+    fn name(&self) -> String {
+        format!("naive_{}", self.cfg.compressor.name())
+    }
+
+    fn step(&mut self, models: &mut [Box<dyn GradientModel>], gamma: f32) -> StepStats {
+        self.s.t += 1;
+        let n = self.s.n();
+        let (grads, loss) = self.s.all_grads(models);
+
+        // Every node broadcasts C(x_t^{(i)}); note the *sender* compresses
+        // once per iteration (same wire to all neighbors).
+        let mut bytes = 0u64;
+        for i in 0..n {
+            let wire = self
+                .cfg
+                .compressor
+                .compress(&self.s.x[i], &mut self.s.comp_rngs[i]);
+            bytes += (wire.bytes() * self.cfg.mixing.graph.degree(i)) as u64;
+            self.cfg.compressor.decompress(&wire, &mut self.compressed[i]);
+        }
+        // x_{t+1}^{(i)} = W_ii x^{(i)} + Σ_{j≠i} W_ij C(x^{(j)}) − γ g_i.
+        // (A node uses its own exact model; only received copies are
+        // compressed.)
+        for i in 0..n {
+            let nbrs = &self.cfg.mixing.graph.neighbors[i];
+            let mut cols: Vec<&[f32]> = Vec::with_capacity(1 + nbrs.len());
+            let mut weights: Vec<f32> = Vec::with_capacity(1 + nbrs.len());
+            cols.push(self.s.x[i].as_slice());
+            weights.push(self.cfg.mixing.self_weight[i]);
+            for (k, &j) in nbrs.iter().enumerate() {
+                cols.push(self.compressed[j].as_slice());
+                weights.push(self.cfg.mixing.neighbor_weights[i][k]);
+            }
+            crate::linalg::vecops::weighted_sum(&weights, &cols, &mut self.mixed[i]);
+            crate::linalg::vecops::axpy(-gamma, &grads[i], &mut self.mixed[i]);
+        }
+        std::mem::swap(&mut self.s.x, &mut self.mixed);
+        StepStats {
+            minibatch_loss: loss,
+            bytes_sent: bytes,
+        }
+    }
+
+    fn params(&self) -> &[Vec<f32>] {
+        &self.s.x
+    }
+
+    fn comm(&self) -> CommSchedule {
+        CommSchedule::gossip(
+            self.cfg.mixing.graph.max_degree(),
+            self.cfg.compressor.wire_bytes(self.s.dim),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::test_support::*;
+
+    #[test]
+    fn fp32_naive_equals_dpsgd() {
+        // Identity compression: the "naive" scheme is exactly D-PSGD.
+        let n = 6;
+        let (mut m1, x0) = quad_setup(n, 8, 1.0, 0.3);
+        let (mut m2, _) = quad_setup(n, 8, 1.0, 0.3);
+        let mut nv = NaiveCompressedDPsgd::new(cfg_fp32(n, 1), &x0, n);
+        let mut dp = crate::algorithms::DPsgd::new(cfg_fp32(n, 1), &x0, n);
+        for _ in 0..30 {
+            nv.step(&mut m1, 0.1);
+            dp.step(&mut m2, 0.1);
+        }
+        for (a, b) in nv.params().iter().zip(dp.params()) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_naive_stalls_above_noise_floor() {
+        // Fig. 1: naive compression does not converge to the optimum —
+        // the loss plateaus far above what D-PSGD reaches.
+        let n = 8;
+        let dim = 32;
+        let (mut m_naive, x0) = quad_setup(n, dim, 1.0, 0.0);
+        let (mut m_ref, _) = quad_setup(n, dim, 1.0, 0.0);
+
+        let mut naive = NaiveCompressedDPsgd::new(cfg_q(n, 6, 2), &x0, n);
+        let mut dpsgd = crate::algorithms::DPsgd::new(cfg_fp32(n, 2), &x0, n);
+        // Diminishing learning rate — the paper stresses that even this
+        // cannot save the naive scheme.
+        for t in 0..1500u32 {
+            let gamma = 0.2 / (1.0 + t as f32 / 100.0);
+            naive.step(&mut m_naive, gamma);
+            dpsgd.step(&mut m_ref, gamma);
+        }
+        let subopt = |algo: &dyn Algorithm, models: &[Box<dyn crate::models::GradientModel>]| {
+            let mut mean = vec![0.0f32; dim];
+            algo.mean_params(&mut mean);
+            let loss: f64 = models.iter().map(|m| m.full_loss(&mean)).sum::<f64>() / n as f64;
+            // Subtract the optimal value f* (loss at the mean of centers).
+            let opt: f64 = {
+                let mut g = vec![0.0f32; dim];
+                // Gradient-norm at mean as optimality proxy.
+                let mut total = vec![0.0f32; dim];
+                for m in models {
+                    m.full_grad(&mean, &mut g);
+                    crate::linalg::vecops::axpy(1.0, &g, &mut total);
+                }
+                crate::linalg::vecops::norm2(&total) / n as f64
+            };
+            (loss, opt)
+        };
+        let (_, naive_gn) = subopt(&naive, &m_naive);
+        let (_, ref_gn) = subopt(&dpsgd, &m_ref);
+        assert!(
+            naive_gn > 20.0 * ref_gn.max(1e-9),
+            "naive should stall: grad-norm {naive_gn} vs dpsgd {ref_gn}"
+        );
+    }
+
+    #[test]
+    fn noise_floor_persists_where_dpsgd_is_exact() {
+        // With *identical* objectives on every node (ζ = 0, no gradient
+        // noise), D-PSGD keeps all nodes bitwise in sync: consensus
+        // distance is exactly 0 forever. The naive scheme injects fresh
+        // compression noise each iteration, so its consensus distance
+        // hovers at a floor set by the quantizer, no matter how long we
+        // run. (Curiosity: with γ = 0 the naive iterates can be absorbed
+        // onto the quantization grid where stochastic rounding becomes
+        // deterministic; a live gradient keeps them off-grid, which is the
+        // regime that matters.)
+        let n = 8;
+        let dim = 16;
+        // All nodes share one *off-grid* center: the optimum x* = c has
+        // ‖c‖ ≈ 1, and since the naive scheme compresses the full model x
+        // (not a difference), its quantization noise stays ∝ ‖c‖ forever
+        // even at the optimum.
+        let center: Vec<f32> = (0..dim).map(|d| 0.6 + 0.3 * (d as f32 * 1.7).sin()).collect();
+        let mk = || -> Vec<Box<dyn crate::models::GradientModel>> {
+            (0..n)
+                .map(|_| {
+                    Box::new(crate::models::Quadratic::new(center.clone(), 0.0))
+                        as Box<dyn crate::models::GradientModel>
+                })
+                .collect()
+        };
+        let mut m_naive = mk();
+        let mut m_ref = mk();
+        let x_start: Vec<f32> = (0..dim).map(|d| 0.9 + 0.137 * (d as f32).sin()).collect();
+        let mut naive = NaiveCompressedDPsgd::new(cfg_q(n, 4, 3), &x_start, n);
+        let mut dpsgd = crate::algorithms::DPsgd::new(cfg_fp32(n, 3), &x_start, n);
+        let mut floor = f64::INFINITY;
+        for _ in 0..500 {
+            naive.step(&mut m_naive, 0.05);
+            dpsgd.step(&mut m_ref, 0.05);
+        }
+        // Sample the floor over a window (it fluctuates).
+        for _ in 0..50 {
+            naive.step(&mut m_naive, 0.05);
+            floor = floor.min(crate::algorithms::consensus_distance(naive.params()));
+        }
+        let cd_ref = crate::algorithms::consensus_distance(dpsgd.params());
+        // (Not exactly 0.0: per-node summation order differs, and the f32
+        // round-off drifts apart slowly over 500 iterations.)
+        assert!(cd_ref < 1e-10, "D-PSGD with identical nodes stays exact, cd={cd_ref}");
+        assert!(
+            floor > 1e4 * cd_ref.max(1e-12),
+            "naive noise floor should persist, floor={floor} vs ref {cd_ref}"
+        );
+    }
+}

@@ -1,0 +1,144 @@
+//! Criterion-substitute benchmark harness (no `criterion` in the offline
+//! dependency set): warmup, repeated timed runs, summary statistics, and
+//! a uniform report format the `cargo bench` targets share.
+
+use crate::metrics::{fmt_secs, Table};
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Options for a timing measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> BenchOpts {
+        BenchOpts {
+            warmup_iters: 3,
+            measure_iters: 10,
+        }
+    }
+}
+
+/// One timed result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub summary: Summary,
+    /// Optional throughput denominator: elements (or bytes) per run.
+    pub elems_per_run: Option<f64>,
+}
+
+impl Measurement {
+    pub fn throughput(&self) -> Option<f64> {
+        self.elems_per_run.map(|e| e / self.summary.median)
+    }
+}
+
+/// Time `f` under `opts`; `f` is called once per iteration.
+pub fn time_fn<F: FnMut()>(name: &str, opts: BenchOpts, mut f: F) -> Measurement {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(opts.measure_iters);
+    for _ in 0..opts.measure_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement {
+        name: name.to_string(),
+        summary: Summary::of(&samples),
+        elems_per_run: None,
+    }
+}
+
+/// Like [`time_fn`], reporting elements/second over `elems` per run.
+pub fn time_throughput<F: FnMut()>(name: &str, opts: BenchOpts, elems: f64, f: F) -> Measurement {
+    let mut m = time_fn(name, opts, f);
+    m.elems_per_run = Some(elems);
+    m
+}
+
+/// Render a group of measurements as a table.
+pub fn report(title: &str, ms: &[Measurement]) -> Table {
+    let mut t = Table::new(
+        title,
+        &["benchmark", "median", "mean", "std", "min", "throughput"],
+    );
+    for m in ms {
+        let thr = m
+            .throughput()
+            .map(|v| {
+                if v > 1e9 {
+                    format!("{:.2}G/s", v / 1e9)
+                } else if v > 1e6 {
+                    format!("{:.2}M/s", v / 1e6)
+                } else {
+                    format!("{:.0}/s", v)
+                }
+            })
+            .unwrap_or_else(|| "-".to_string());
+        t.row(vec![
+            m.name.clone(),
+            fmt_secs(m.summary.median),
+            fmt_secs(m.summary.mean),
+            fmt_secs(m.summary.std),
+            fmt_secs(m.summary.min),
+            thr,
+        ]);
+    }
+    t
+}
+
+/// `cargo bench` quick-mode guard: when DECOMP_BENCH_QUICK=1, shrink the
+/// workload (used by CI-ish runs; honored by the experiment benches).
+pub fn quick_mode() -> bool {
+    std::env::var("DECOMP_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts_iters() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let calls = AtomicUsize::new(0);
+        let opts = BenchOpts {
+            warmup_iters: 2,
+            measure_iters: 5,
+        };
+        let m = time_fn("t", opts, || {
+            calls.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 7);
+        assert_eq!(m.summary.n, 5);
+        assert!(m.summary.median >= 0.0);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let opts = BenchOpts {
+            warmup_iters: 0,
+            measure_iters: 3,
+        };
+        let m = time_throughput("t", opts, 1e6, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(m.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn report_renders() {
+        let opts = BenchOpts {
+            warmup_iters: 0,
+            measure_iters: 2,
+        };
+        let m = time_fn("demo", opts, || {});
+        let t = report("group", &[m]);
+        assert!(t.render().contains("demo"));
+    }
+}

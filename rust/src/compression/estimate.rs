@@ -1,0 +1,93 @@
+//! Empirical estimation of the theory's compression constants.
+//!
+//! Theorem 1 (DCD-PSGD) is gated by α := sup_{Z≠0} ‖Z − C(Z)‖_F / ‖Z‖_F,
+//! and Theorem 3 (ECD-PSGD) by the absolute noise bound
+//! E‖C(z) − z‖² ≤ σ̃²/2. These estimators measure both on sampled inputs
+//! so experiments can check, e.g., whether a 4-bit quantizer violates the
+//! DCD admissibility condition (1−ρ)² − 4µ²α² > 0 for a given topology.
+
+use super::Compressor;
+use crate::linalg::vecops::dist2_sq;
+use crate::util::rng::Pcg64;
+
+/// Estimate α = sup ‖Q‖/‖Z‖ by drawing `samples` random vectors of length
+/// `n` from N(0,1) and taking the max observed ratio (each with several
+/// independent compression draws).
+pub fn empirical_alpha(c: &dyn Compressor, n: usize, samples: u64, seed: u64) -> f64 {
+    let mut worst: f64 = 0.0;
+    let mut out = vec![0.0f32; n];
+    for s in 0..samples {
+        let mut data_rng = Pcg64::new(seed, 2 * s);
+        let mut z = vec![0.0f32; n];
+        data_rng.fill_normal_f32(&mut z, 0.0, 1.0);
+        let z_norm_sq: f64 = z.iter().map(|v| (*v as f64).powi(2)).sum();
+        if z_norm_sq == 0.0 {
+            continue;
+        }
+        for draw in 0..4 {
+            let mut comp_rng = Pcg64::new(seed ^ 0xa11a, 8 * s + draw);
+            c.apply(&z, &mut comp_rng, &mut out);
+            let q_sq = dist2_sq(&z, &out);
+            worst = worst.max((q_sq / z_norm_sq).sqrt());
+        }
+    }
+    worst
+}
+
+/// Estimate σ̃² where E‖C(z) − z‖² ≤ σ̃²/2, by averaging the squared noise
+/// over draws and reporting 2 × the max per-input mean.
+pub fn empirical_sigma_tilde_sq(c: &dyn Compressor, n: usize, samples: u64, seed: u64) -> f64 {
+    let mut worst_mean: f64 = 0.0;
+    let mut out = vec![0.0f32; n];
+    let draws = 16u64;
+    for s in 0..samples {
+        let mut data_rng = Pcg64::new(seed, 2 * s + 1);
+        let mut z = vec![0.0f32; n];
+        data_rng.fill_normal_f32(&mut z, 0.0, 1.0);
+        let mut acc = 0.0;
+        for draw in 0..draws {
+            let mut comp_rng = Pcg64::new(seed ^ 0x51e7, draws * s + draw);
+            c.apply(&z, &mut comp_rng, &mut out);
+            acc += dist2_sq(&z, &out);
+        }
+        worst_mean = worst_mean.max(acc / draws as f64);
+    }
+    2.0 * worst_mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::{Identity, RandomSparsifier, StochasticQuantizer};
+
+    #[test]
+    fn identity_has_zero_alpha_and_noise() {
+        assert_eq!(empirical_alpha(&Identity, 128, 5, 1), 0.0);
+        assert_eq!(empirical_sigma_tilde_sq(&Identity, 128, 5, 1), 0.0);
+    }
+
+    #[test]
+    fn alpha_decreases_with_more_bits() {
+        let a2 = empirical_alpha(&StochasticQuantizer::new(2), 512, 8, 2);
+        let a4 = empirical_alpha(&StochasticQuantizer::new(4), 512, 8, 2);
+        let a8 = empirical_alpha(&StochasticQuantizer::new(8), 512, 8, 2);
+        assert!(a2 > a4, "a2={a2} a4={a4}");
+        assert!(a4 > a8, "a4={a4} a8={a8}");
+        assert!(a8 < 0.05, "8-bit alpha should be tiny, got {a8}");
+    }
+
+    #[test]
+    fn aggressive_sparsifier_large_alpha() {
+        // Keeping 10% with 1/p scaling has alpha ~ sqrt((1-p)/p) = 3.
+        let a = empirical_alpha(&RandomSparsifier::new(0.1), 1024, 8, 3);
+        assert!(a > 1.0, "alpha={a}");
+    }
+
+    #[test]
+    fn sigma_tilde_scales_with_dimension() {
+        let q = StochasticQuantizer::new(4);
+        let s_small = empirical_sigma_tilde_sq(&q, 128, 6, 4);
+        let s_large = empirical_sigma_tilde_sq(&q, 2048, 6, 4);
+        assert!(s_large > 4.0 * s_small, "{s_small} vs {s_large}");
+    }
+}

@@ -1,0 +1,154 @@
+//! Unbiased stochastic compression operators C(·) (Assumption 1.5) and
+//! their wire formats.
+//!
+//! All decentralized communication in this crate goes through a
+//! [`Compressor`]: the full-precision [`Identity`], the paper's randomized
+//! quantization (footnote 1) as [`StochasticQuantizer`], randomized
+//! sparsification (footnote 2) as [`RandomSparsifier`], and — for the
+//! ablation benches only — the *biased* [`TopK`], which the theory
+//! excludes and which demonstrably breaks convergence.
+//!
+//! Compression is measured honestly: [`Wire`] is the actual byte buffer
+//! that would cross the network (bit-packed levels + per-chunk scales),
+//! so the network simulator charges real message sizes, not idealized
+//! `N·bits/8` estimates.
+
+mod estimate;
+mod quantize;
+mod sparsify;
+mod wire;
+
+pub use estimate::{empirical_alpha, empirical_sigma_tilde_sq};
+pub use quantize::StochasticQuantizer;
+pub use sparsify::{RandomSparsifier, TopK};
+pub use wire::{BitReader, BitWriter, Wire};
+
+use crate::util::rng::Pcg64;
+
+/// A (possibly stochastic) compression operator on parameter-delta
+/// vectors. Implementations must be `Send + Sync`: every worker thread
+/// holds a shared reference and supplies its own RNG stream, which is what
+/// makes the noise independent across nodes and time (Assumption 1.5).
+pub trait Compressor: Send + Sync {
+    /// Short identifier used in configs, metrics and bench tables.
+    fn name(&self) -> String;
+
+    /// Compress `z` into a wire message.
+    fn compress(&self, z: &[f32], rng: &mut Pcg64) -> Wire;
+
+    /// Reconstruct into `out` (must have the original length).
+    fn decompress(&self, wire: &Wire, out: &mut [f32]);
+
+    /// Whether E[decompress(compress(z))] = z. True for everything except
+    /// `TopK`.
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+
+    /// Wire bytes for a vector of `n` f32s — used by the network simulator
+    /// for closed-form epoch-time accounting without materializing
+    /// messages.
+    fn wire_bytes(&self, n: usize) -> usize;
+
+    /// Convenience: compress-then-decompress (the operator C(z) itself).
+    fn apply(&self, z: &[f32], rng: &mut Pcg64, out: &mut [f32]) {
+        let w = self.compress(z, rng);
+        self.decompress(&w, out);
+    }
+}
+
+/// Full-precision (32-bit) "compression": the identity operator. α = 0.
+#[derive(Debug, Clone, Default)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> String {
+        "fp32".into()
+    }
+
+    fn compress(&self, z: &[f32], _rng: &mut Pcg64) -> Wire {
+        let mut payload = Vec::with_capacity(4 * z.len());
+        for v in z {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        Wire {
+            len: z.len(),
+            payload,
+        }
+    }
+
+    fn decompress(&self, wire: &Wire, out: &mut [f32]) {
+        assert_eq!(out.len(), wire.len);
+        for (i, o) in out.iter_mut().enumerate() {
+            let b: [u8; 4] = wire.payload[4 * i..4 * i + 4].try_into().unwrap();
+            *o = f32::from_le_bytes(b);
+        }
+    }
+
+    fn wire_bytes(&self, n: usize) -> usize {
+        4 * n
+    }
+}
+
+/// Build a compressor from its config name: `fp32`, `q8`, `q4`, `q2`,
+/// `q1`, `sparse_p25` (keep 25%), `topk_10` (keep top 10%).
+pub fn from_name(name: &str) -> Option<Box<dyn Compressor>> {
+    if name == "fp32" || name == "identity" {
+        return Some(Box::new(Identity));
+    }
+    if let Some(bits) = name.strip_prefix('q').and_then(|b| b.parse::<u8>().ok()) {
+        return Some(Box::new(StochasticQuantizer::new(bits)));
+    }
+    if let Some(pct) = name
+        .strip_prefix("sparse_p")
+        .and_then(|p| p.parse::<u8>().ok())
+    {
+        return Some(Box::new(RandomSparsifier::new(pct as f64 / 100.0)));
+    }
+    if let Some(pct) = name.strip_prefix("topk_").and_then(|p| p.parse::<u8>().ok()) {
+        return Some(Box::new(TopK::new(pct as f64 / 100.0)));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_round_trips_exactly() {
+        let z = vec![1.5f32, -2.25, 0.0, 1e-20, 3.4e38];
+        let mut rng = Pcg64::seed_from_u64(0);
+        let w = Identity.compress(&z, &mut rng);
+        assert_eq!(w.payload.len(), Identity.wire_bytes(z.len()));
+        let mut out = vec![0.0f32; z.len()];
+        Identity.decompress(&w, &mut out);
+        assert_eq!(out, z);
+    }
+
+    #[test]
+    fn from_name_builds_all_families() {
+        for (name, expect) in [
+            ("fp32", "fp32"),
+            ("q8", "q8"),
+            ("q4", "q4"),
+            ("q1", "q1"),
+            ("sparse_p25", "sparse_p25"),
+            ("topk_10", "topk_10"),
+        ] {
+            let c = from_name(name).unwrap_or_else(|| panic!("{name}"));
+            assert_eq!(c.name(), expect);
+        }
+        assert!(from_name("nope").is_none());
+        assert!(from_name("qx").is_none());
+    }
+
+    #[test]
+    fn identity_apply_is_exact() {
+        let z = vec![0.25f32; 64];
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut out = vec![0.0f32; 64];
+        Identity.apply(&z, &mut rng, &mut out);
+        assert_eq!(out, z);
+    }
+}

@@ -1,0 +1,321 @@
+//! Randomized uniform quantization (paper §4, footnote 1).
+//!
+//! A real number is stochastically rounded to one of the two nearest of
+//! `2^bits` thresholds spanning `[-scale, +scale]`, where `scale` is the
+//! max-abs of a chunk (chunked scaling keeps one outlier from destroying
+//! the resolution of the other 2^20 coordinates). Rounding probabilities
+//! are proportional to proximity, so the operator is unbiased:
+//! E[C(z)] = z. Levels are bit-packed; per-chunk scales ride along as f32.
+//!
+//! Wire layout: `[scales: f32 × nchunks][levels: bits × len, LSB-first]`.
+
+use super::wire::{BitReader, BitWriter, Wire};
+use super::Compressor;
+use crate::util::rng::Pcg64;
+
+/// Default chunk: 1024 elements ≈ 4 KiB of f32 per scale. Matches the L1
+/// Pallas kernel's block size so rust and the kernel produce identically
+/// distributed messages.
+pub const DEFAULT_CHUNK: usize = 1024;
+
+#[derive(Debug, Clone)]
+pub struct StochasticQuantizer {
+    /// Bits per coordinate, 1..=16.
+    pub bits: u8,
+    /// Elements per scaling chunk.
+    pub chunk: usize,
+}
+
+impl StochasticQuantizer {
+    pub fn new(bits: u8) -> StochasticQuantizer {
+        Self::with_chunk(bits, DEFAULT_CHUNK)
+    }
+
+    pub fn with_chunk(bits: u8, chunk: usize) -> StochasticQuantizer {
+        assert!((1..=16).contains(&bits), "bits must be in 1..=16, got {bits}");
+        assert!(chunk > 0);
+        StochasticQuantizer { bits, chunk }
+    }
+
+    #[inline]
+    fn levels(&self) -> u32 {
+        1u32 << self.bits
+    }
+
+    /// Upper bound on the per-chunk relative error ratio used for α
+    /// accounting: the rounding noise per coordinate has std ≤ Δ/2 with
+    /// Δ = 2/(L−1) in scale units.
+    pub fn step_size(&self) -> f64 {
+        2.0 / (self.levels() as f64 - 1.0)
+    }
+}
+
+impl Compressor for StochasticQuantizer {
+    fn name(&self) -> String {
+        format!("q{}", self.bits)
+    }
+
+    fn compress(&self, z: &[f32], rng: &mut Pcg64) -> Wire {
+        let nchunks = z.len().div_ceil(self.chunk);
+        let lm1 = (self.levels() - 1) as f32;
+        let payload_cap = 4 * nchunks + (z.len() * self.bits as usize).div_ceil(8);
+
+        // Scales first (byte-aligned header).
+        let mut payload = Vec::with_capacity(payload_cap);
+        let mut scales = Vec::with_capacity(nchunks);
+        for c in z.chunks(self.chunk) {
+            let s = crate::linalg::vecops::max_abs(c);
+            scales.push(s);
+            payload.extend_from_slice(&s.to_le_bytes());
+        }
+
+        // Levels. Perf-critical loop (§Perf in EXPERIMENTS.md):
+        // - one PCG64 draw yields TWO 24-bit rounding variates;
+        // - the comparison happens in integer-scaled f32 space (no
+        //   division, one fused multiply-add shape per element);
+        // - 8-bit levels skip the bit-packer entirely (byte per level).
+        // Stochastic rounding by *add-uniform-then-truncate*:
+        // q = ⌊u + r⌋ with r ~ U[0,1) rounds up with probability frac(u)
+        // — one add and one cast per element, no branch. Each PCG64 draw
+        // feeds two elements (24 random bits each).
+        let mut rbits: u64 = 0;
+        let mut rhave = false;
+        const R_INV: f32 = 1.0 / 16_777_216.0; // 2^-24
+        let mut next_r = |rng: &mut Pcg64| -> f32 {
+            if rhave {
+                rhave = false;
+                ((rbits >> 40) & 0xff_ffff) as f32 * R_INV
+            } else {
+                rbits = rng.next_u64();
+                rhave = true;
+                ((rbits >> 8) & 0xff_ffff) as f32 * R_INV
+            }
+        };
+
+        let top = self.levels() - 1;
+        if self.bits == 8 {
+            for (ci, c) in z.chunks(self.chunk).enumerate() {
+                let s = scales[ci];
+                if s == 0.0 {
+                    payload.extend(std::iter::repeat(0u8).take(c.len()));
+                    continue;
+                }
+                let a = 0.5 * lm1 / s; // u = a·v + b maps [-s,s] → [0,lm1]
+                let b = 0.5 * lm1;
+                for &v in c {
+                    let u = (a * v + b).clamp(0.0, lm1);
+                    let q = (u + next_r(rng)) as u32;
+                    payload.push(q.min(top) as u8);
+                }
+            }
+        } else {
+            let mut w = BitWriter::with_capacity(payload_cap - payload.len());
+            for (ci, c) in z.chunks(self.chunk).enumerate() {
+                let s = scales[ci];
+                if s == 0.0 {
+                    for _ in c {
+                        w.push(0, self.bits as u32);
+                    }
+                    continue;
+                }
+                let a = 0.5 * lm1 / s;
+                let b = 0.5 * lm1;
+                for &v in c {
+                    let u = (a * v + b).clamp(0.0, lm1);
+                    let q = (u + next_r(rng)) as u32;
+                    w.push(q.min(top), self.bits as u32);
+                }
+            }
+            payload.extend_from_slice(&w.finish());
+        }
+
+        Wire {
+            len: z.len(),
+            payload,
+        }
+    }
+
+    fn decompress(&self, wire: &Wire, out: &mut [f32]) {
+        assert_eq!(out.len(), wire.len);
+        let nchunks = wire.len.div_ceil(self.chunk);
+        let lm1 = (self.levels() - 1) as f32;
+
+        let mut scales = Vec::with_capacity(nchunks);
+        for i in 0..nchunks {
+            let b: [u8; 4] = wire.payload[4 * i..4 * i + 4].try_into().unwrap();
+            scales.push(f32::from_le_bytes(b));
+        }
+        let body = &wire.payload[4 * nchunks..];
+        if self.bits == 8 {
+            // Fast path: one byte per level; map with a single FMA shape
+            // per element: v = q·(2s/lm1) − s.
+            for (ci, c) in out.chunks_mut(self.chunk).enumerate() {
+                let s = scales[ci];
+                let a = 2.0 * s / lm1;
+                let base = ci * self.chunk;
+                let clen = c.len();
+                for (o, &q) in c.iter_mut().zip(&body[base..base + clen]) {
+                    *o = if s == 0.0 { 0.0 } else { a * q as f32 - s };
+                }
+            }
+        } else {
+            let mut r = BitReader::new(body);
+            for (ci, c) in out.chunks_mut(self.chunk).enumerate() {
+                let s = scales[ci];
+                let a = 2.0 * s / lm1;
+                for o in c.iter_mut() {
+                    let q = r.read(self.bits as u32) as f32;
+                    *o = if s == 0.0 { 0.0 } else { a * q - s };
+                }
+            }
+        }
+    }
+
+    fn wire_bytes(&self, n: usize) -> usize {
+        let nchunks = n.div_ceil(self.chunk);
+        4 * nchunks + (n * self.bits as usize).div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::{dist2_sq, norm2};
+
+    fn quantize_roundtrip(bits: u8, z: &[f32], seed: u64) -> Vec<f32> {
+        let q = StochasticQuantizer::new(bits);
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let w = q.compress(z, &mut rng);
+        assert_eq!(w.bytes(), q.wire_bytes(z.len()));
+        let mut out = vec![0.0f32; z.len()];
+        q.decompress(&w, &mut out);
+        out
+    }
+
+    #[test]
+    fn zero_vector_stays_zero() {
+        let z = vec![0.0f32; 100];
+        for bits in [1, 4, 8] {
+            assert_eq!(quantize_roundtrip(bits, &z, 1), z);
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_step_size() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let mut z = vec![0.0f32; 5000];
+        rng.fill_normal_f32(&mut z, 0.0, 1.0);
+        for bits in [2u8, 4, 8] {
+            let q = StochasticQuantizer::new(bits);
+            let out = quantize_roundtrip(bits, &z, 3);
+            let scale = crate::linalg::vecops::max_abs(&z) as f64;
+            let step = q.step_size() * scale;
+            for (a, b) in z.iter().zip(&out) {
+                assert!(
+                    ((a - b).abs() as f64) <= step + 1e-6,
+                    "bits={bits}: |{a} - {b}| > {step}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unbiased_over_many_draws() {
+        // E[C(z)] = z: average many independent compressions of one vector.
+        let z: Vec<f32> = vec![0.3, -0.7, 0.11, 0.99, -0.45, 0.0, 0.62, -0.08];
+        let q = StochasticQuantizer::new(4);
+        let trials = 20_000;
+        let mut acc = vec![0.0f64; z.len()];
+        for t in 0..trials {
+            let mut rng = Pcg64::new(77, t);
+            let w = q.compress(&z, &mut rng);
+            let mut out = vec![0.0f32; z.len()];
+            q.decompress(&w, &mut out);
+            for (a, o) in acc.iter_mut().zip(&out) {
+                *a += *o as f64;
+            }
+        }
+        for (zi, a) in z.iter().zip(&acc) {
+            let mean = a / trials as f64;
+            // std of the mean ≈ step/(2√trials) ≈ 0.0005; allow 6 sigma.
+            assert!(
+                (mean - *zi as f64).abs() < 0.004,
+                "E[C(z)]={mean} vs z={zi}"
+            );
+        }
+    }
+
+    #[test]
+    fn eight_bits_is_accurate() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let mut z = vec![0.0f32; 4096];
+        rng.fill_normal_f32(&mut z, 0.0, 1.0);
+        let out = quantize_roundtrip(8, &z, 5);
+        let rel = dist2_sq(&z, &out).sqrt() / norm2(&z);
+        assert!(rel < 0.02, "8-bit relative error {rel}");
+    }
+
+    #[test]
+    fn one_bit_is_sign_times_scale() {
+        let z = vec![0.5f32, -0.5, 0.25, -0.25];
+        let q = StochasticQuantizer::with_chunk(1, 4);
+        let mut rng = Pcg64::seed_from_u64(6);
+        let w = q.compress(&z, &mut rng);
+        let mut out = vec![0.0f32; 4];
+        q.decompress(&w, &mut out);
+        // Only two levels exist: ±max_abs = ±0.5.
+        for o in out {
+            assert!(o == 0.5 || o == -0.5, "{o}");
+        }
+    }
+
+    #[test]
+    fn wire_size_8bit_quarter_of_fp32() {
+        // Paper §5.3: 8-bit sends ~1/4 the data of full precision.
+        let n = 1 << 20;
+        let q8 = StochasticQuantizer::new(8);
+        let ratio = q8.wire_bytes(n) as f64 / (4 * n) as f64;
+        assert!((ratio - 0.25).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn chunked_scaling_isolates_outliers() {
+        // One huge coordinate in chunk 0 must not wreck chunk 1's accuracy.
+        let mut z = vec![0.01f32; 2048];
+        z[0] = 1000.0;
+        let q = StochasticQuantizer::with_chunk(8, 1024);
+        let mut rng = Pcg64::seed_from_u64(7);
+        let w = q.compress(&z, &mut rng);
+        let mut out = vec![0.0f32; z.len()];
+        q.decompress(&w, &mut out);
+        // Second chunk scale is 0.01; 8-bit step is tiny there.
+        for i in 1024..2048 {
+            assert!((out[i] - 0.01).abs() < 1e-4, "out[{i}]={}", out[i]);
+        }
+    }
+
+    #[test]
+    fn partial_last_chunk_handled() {
+        let z = vec![0.5f32; 1500]; // 1024 + 476
+        let out = quantize_roundtrip(8, &z, 8);
+        assert_eq!(out.len(), 1500);
+        for o in &out {
+            assert!((o - 0.5).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn values_clamped_not_nan_on_extremes() {
+        let z = vec![f32::MAX / 2.0, -f32::MAX / 2.0, 0.0];
+        let out = quantize_roundtrip(4, &z, 9);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let z: Vec<f32> = (0..257).map(|i| (i as f32 * 0.37).sin()).collect();
+        let a = quantize_roundtrip(4, &z, 42);
+        let b = quantize_roundtrip(4, &z, 42);
+        assert_eq!(a, b);
+    }
+}

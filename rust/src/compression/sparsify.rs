@@ -1,0 +1,255 @@
+//! Randomized sparsification (paper footnote 2) and the biased top-k
+//! operator used as an ablation.
+
+use super::wire::{BitReader, BitWriter, Wire};
+use super::Compressor;
+use crate::util::rng::Pcg64;
+
+/// Unbiased random sparsification: coordinate z_i is kept with probability
+/// p and scaled to z_i/p, else zeroed. E[C(z)] = z.
+///
+/// Wire layout: `[bitmap: 1 bit × len][kept values: f32 ×  #kept]`.
+/// Expected bytes: len/8 + 4·p·len.
+#[derive(Debug, Clone)]
+pub struct RandomSparsifier {
+    pub p: f64,
+}
+
+impl RandomSparsifier {
+    pub fn new(p: f64) -> RandomSparsifier {
+        assert!(p > 0.0 && p <= 1.0, "keep probability must be in (0,1], got {p}");
+        RandomSparsifier { p }
+    }
+}
+
+impl Compressor for RandomSparsifier {
+    fn name(&self) -> String {
+        format!("sparse_p{}", (self.p * 100.0).round() as u32)
+    }
+
+    fn compress(&self, z: &[f32], rng: &mut Pcg64) -> Wire {
+        let mut w = BitWriter::with_capacity(z.len() / 8 + 16);
+        let mut kept: Vec<f32> = Vec::with_capacity((z.len() as f64 * self.p * 1.2) as usize + 8);
+        let inv_p = (1.0 / self.p) as f32;
+        for &v in z {
+            let keep = rng.bernoulli(self.p);
+            w.push(keep as u32, 1);
+            if keep {
+                kept.push(v * inv_p);
+            }
+        }
+        let mut bytes = Vec::with_capacity(4 * kept.len());
+        for v in &kept {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        w.align_and_extend(&bytes);
+        Wire {
+            len: z.len(),
+            payload: w.finish(),
+        }
+    }
+
+    fn decompress(&self, wire: &Wire, out: &mut [f32]) {
+        assert_eq!(out.len(), wire.len);
+        let mut r = BitReader::new(&wire.payload);
+        let keep: Vec<bool> = (0..wire.len).map(|_| r.read(1) == 1).collect();
+        let values = r.align_rest();
+        let mut vi = 0usize;
+        for (o, k) in out.iter_mut().zip(keep) {
+            if k {
+                let b: [u8; 4] = values[4 * vi..4 * vi + 4].try_into().unwrap();
+                *o = f32::from_le_bytes(b);
+                vi += 1;
+            } else {
+                *o = 0.0;
+            }
+        }
+    }
+
+    fn wire_bytes(&self, n: usize) -> usize {
+        // Expected size: bitmap + E[#kept] values.
+        n.div_ceil(8) + ((n as f64 * self.p) * 4.0).round() as usize
+    }
+}
+
+/// Biased top-k sparsification: keeps the k = frac·n largest-magnitude
+/// coordinates *unscaled*. Violates Assumption 1.5 (E[C(z)] ≠ z) — present
+/// only so the ablation bench can show why the paper restricts itself to
+/// unbiased operators.
+#[derive(Debug, Clone)]
+pub struct TopK {
+    pub frac: f64,
+}
+
+impl TopK {
+    pub fn new(frac: f64) -> TopK {
+        assert!(frac > 0.0 && frac <= 1.0);
+        TopK { frac }
+    }
+
+    fn k(&self, n: usize) -> usize {
+        ((n as f64 * self.frac).ceil() as usize).clamp(1, n)
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        format!("topk_{}", (self.frac * 100.0).round() as u32)
+    }
+
+    fn is_unbiased(&self) -> bool {
+        false
+    }
+
+    fn compress(&self, z: &[f32], _rng: &mut Pcg64) -> Wire {
+        let k = self.k(z.len());
+        let mut idx: Vec<u32> = (0..z.len() as u32).collect();
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            z[b as usize]
+                .abs()
+                .partial_cmp(&z[a as usize].abs())
+                .unwrap()
+        });
+        idx.truncate(k);
+        idx.sort_unstable();
+        let mut payload = Vec::with_capacity(8 * k);
+        for &i in &idx {
+            payload.extend_from_slice(&i.to_le_bytes());
+        }
+        for &i in &idx {
+            payload.extend_from_slice(&z[i as usize].to_le_bytes());
+        }
+        Wire {
+            len: z.len(),
+            payload,
+        }
+    }
+
+    fn decompress(&self, wire: &Wire, out: &mut [f32]) {
+        assert_eq!(out.len(), wire.len);
+        out.fill(0.0);
+        let k = self.k(wire.len);
+        for j in 0..k {
+            let ib: [u8; 4] = wire.payload[4 * j..4 * j + 4].try_into().unwrap();
+            let vb: [u8; 4] = wire.payload[4 * (k + j)..4 * (k + j) + 4].try_into().unwrap();
+            out[u32::from_le_bytes(ib) as usize] = f32::from_le_bytes(vb);
+        }
+    }
+
+    fn wire_bytes(&self, n: usize) -> usize {
+        8 * self.k(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparsifier_zero_or_scaled() {
+        let z: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        let s = RandomSparsifier::new(0.25);
+        let mut rng = Pcg64::seed_from_u64(1);
+        let w = s.compress(&z, &mut rng);
+        let mut out = vec![0.0f32; 100];
+        s.decompress(&w, &mut out);
+        for (i, (&zi, &oi)) in z.iter().zip(&out).enumerate() {
+            assert!(
+                oi == 0.0 || (oi - zi * 4.0).abs() < 1e-5,
+                "index {i}: {oi} vs {zi}"
+            );
+        }
+    }
+
+    #[test]
+    fn sparsifier_unbiased() {
+        let z = vec![1.0f32, -2.0, 3.0, -4.0];
+        let s = RandomSparsifier::new(0.5);
+        let trials = 40_000;
+        let mut acc = vec![0.0f64; 4];
+        for t in 0..trials {
+            let mut rng = Pcg64::new(9, t);
+            let mut out = vec![0.0f32; 4];
+            s.apply(&z, &mut rng, &mut out);
+            for (a, o) in acc.iter_mut().zip(&out) {
+                *a += *o as f64;
+            }
+        }
+        for (zi, a) in z.iter().zip(&acc) {
+            let mean = a / trials as f64;
+            assert!((mean - *zi as f64).abs() < 0.05, "E={mean} z={zi}");
+        }
+    }
+
+    #[test]
+    fn sparsifier_keep_rate() {
+        let z = vec![1.0f32; 10_000];
+        let s = RandomSparsifier::new(0.1);
+        let mut rng = Pcg64::seed_from_u64(3);
+        let mut out = vec![0.0f32; z.len()];
+        s.apply(&z, &mut rng, &mut out);
+        let kept = out.iter().filter(|&&v| v != 0.0).count();
+        assert!((kept as f64 / 10_000.0 - 0.1).abs() < 0.02, "kept {kept}");
+    }
+
+    #[test]
+    fn sparsifier_p1_is_identity() {
+        let z = vec![0.5f32, -1.5, 2.25];
+        let s = RandomSparsifier::new(1.0);
+        let mut rng = Pcg64::seed_from_u64(4);
+        let mut out = vec![0.0f32; 3];
+        s.apply(&z, &mut rng, &mut out);
+        assert_eq!(out, z);
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let z = vec![0.1f32, -5.0, 0.2, 3.0, -0.3, 1.0];
+        let t = TopK::new(0.5); // k = 3
+        let mut rng = Pcg64::seed_from_u64(5);
+        let w = t.compress(&z, &mut rng);
+        let mut out = vec![0.0f32; 6];
+        t.decompress(&w, &mut out);
+        assert_eq!(out, vec![0.0, -5.0, 0.0, 3.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn topk_is_biased_flag() {
+        assert!(!TopK::new(0.1).is_unbiased());
+        assert!(RandomSparsifier::new(0.1).is_unbiased());
+    }
+
+    #[test]
+    fn wire_sizes_accounted() {
+        let s = RandomSparsifier::new(0.25);
+        // Expected: 10000/8 + 0.25*10000*4 = 1250 + 10000
+        assert_eq!(s.wire_bytes(10_000), 1250 + 10_000);
+        let t = TopK::new(0.1);
+        assert_eq!(t.wire_bytes(1000), 8 * 100);
+    }
+
+    #[test]
+    fn topk_singleton_vector() {
+        let z = vec![3.0f32];
+        let t = TopK::new(0.01);
+        let mut rng = Pcg64::seed_from_u64(6);
+        let mut out = vec![0.0f32];
+        t.apply(&z, &mut rng, &mut out);
+        assert_eq!(out, vec![3.0]);
+    }
+
+    #[test]
+    fn sparsifier_actual_wire_close_to_expected() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let mut z = vec![0.0f32; 8192];
+        rng.fill_normal_f32(&mut z, 0.0, 1.0);
+        let s = RandomSparsifier::new(0.25);
+        let w = s.compress(&z, &mut rng);
+        let expected = s.wire_bytes(8192) as f64;
+        assert!(
+            (w.bytes() as f64 - expected).abs() / expected < 0.1,
+            "actual {} expected {expected}",
+            w.bytes()
+        );
+    }
+}

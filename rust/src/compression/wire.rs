@@ -1,0 +1,186 @@
+//! Wire format: the byte buffer a compressed message occupies on the
+//! network, plus LSB-first bit packing for sub-byte quantization levels.
+
+/// A compressed message. `payload.len()` is exactly what the network
+/// simulator charges against bandwidth.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Wire {
+    /// Original vector length (element count).
+    pub len: usize,
+    pub payload: Vec<u8>,
+}
+
+impl Wire {
+    pub fn bytes(&self) -> usize {
+        self.payload.len()
+    }
+}
+
+/// LSB-first bit writer. `width` ≤ 32.
+pub struct BitWriter {
+    out: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> BitWriter {
+        BitWriter {
+            out: Vec::new(),
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    pub fn with_capacity(bytes: usize) -> BitWriter {
+        BitWriter {
+            out: Vec::with_capacity(bytes),
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, value: u32, width: u32) {
+        debug_assert!(width <= 32);
+        debug_assert!(width == 32 || value < (1u32 << width));
+        self.acc |= (value as u64) << self.nbits;
+        self.nbits += width;
+        while self.nbits >= 8 {
+            self.out.push((self.acc & 0xff) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Flush the partial byte (zero-padded) and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.out.push((self.acc & 0xff) as u8);
+        }
+        self.out
+    }
+
+    /// Append raw bytes, first flushing to a byte boundary.
+    pub fn align_and_extend(&mut self, bytes: &[u8]) {
+        if self.nbits > 0 {
+            self.out.push((self.acc & 0xff) as u8);
+            self.acc = 0;
+            self.nbits = 0;
+        }
+        self.out.extend_from_slice(bytes);
+    }
+}
+
+impl Default for BitWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// LSB-first bit reader over a byte slice.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    byte: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> BitReader<'a> {
+        BitReader {
+            buf,
+            byte: 0,
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    #[inline]
+    pub fn read(&mut self, width: u32) -> u32 {
+        debug_assert!(width <= 32);
+        while self.nbits < width {
+            let b = self.buf.get(self.byte).copied().unwrap_or(0);
+            self.acc |= (b as u64) << self.nbits;
+            self.byte += 1;
+            self.nbits += 8;
+        }
+        let mask = if width == 32 {
+            u32::MAX as u64
+        } else {
+            (1u64 << width) - 1
+        };
+        let v = (self.acc & mask) as u32;
+        self.acc >>= width;
+        self.nbits -= width;
+        v
+    }
+
+    /// Skip to the next byte boundary and return the remaining bytes.
+    pub fn align_rest(self) -> &'a [u8] {
+        // Bits still buffered in `acc` came from whole bytes already
+        // consumed from `buf`; discarding them lands us on the boundary.
+        &self.buf[self.byte..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_various_widths() {
+        for width in [1u32, 2, 3, 4, 5, 7, 8, 12, 16, 24, 32] {
+            let max = if width == 32 { u32::MAX } else { (1 << width) - 1 };
+            let values: Vec<u32> = (0..50).map(|i| (i * 2654435761u64 % (max as u64 + 1)) as u32).collect();
+            let mut w = BitWriter::new();
+            for &v in &values {
+                w.push(v, width);
+            }
+            let buf = w.finish();
+            assert_eq!(buf.len(), ((50 * width as usize) + 7) / 8);
+            let mut r = BitReader::new(&buf);
+            for &v in &values {
+                assert_eq!(r.read(width), v, "width {width}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_widths() {
+        let mut w = BitWriter::new();
+        w.push(0b1, 1);
+        w.push(0b1010, 4);
+        w.push(0xdead, 16);
+        w.push(0x7, 3);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read(1), 0b1);
+        assert_eq!(r.read(4), 0b1010);
+        assert_eq!(r.read(16), 0xdead);
+        assert_eq!(r.read(3), 0x7);
+    }
+
+    #[test]
+    fn align_and_extend_round_trip() {
+        let mut w = BitWriter::new();
+        w.push(0b101, 3);
+        w.align_and_extend(&[0xaa, 0xbb]);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read(3), 0b101);
+        assert_eq!(r.align_rest(), &[0xaa, 0xbb]);
+    }
+
+    #[test]
+    fn empty_writer() {
+        assert!(BitWriter::new().finish().is_empty());
+    }
+
+    #[test]
+    fn reader_past_end_returns_zero() {
+        let mut r = BitReader::new(&[0xff]);
+        assert_eq!(r.read(8), 0xff);
+        assert_eq!(r.read(8), 0);
+    }
+}

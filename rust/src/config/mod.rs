@@ -1,0 +1,148 @@
+//! Config-file loading: `TrainConfig` from a JSON file with CLI
+//! overrides. (The offline environment has no serde, so this maps fields
+//! explicitly through [`crate::util::json::Json`].)
+
+use crate::coordinator::TrainConfig;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Load a TrainConfig from a JSON file. Unknown keys are rejected so
+/// typos fail loudly.
+pub fn load_config(path: &Path) -> anyhow::Result<TrainConfig> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("config must be a JSON object"))?;
+    let mut cfg = TrainConfig::default();
+    for (k, v) in obj {
+        match k.as_str() {
+            "algo" => cfg.algo = req_str(v, k)?,
+            "n_nodes" => cfg.n_nodes = req_usize(v, k)?,
+            "topology" => cfg.topology = req_str(v, k)?,
+            "compressor" => cfg.compressor = req_str(v, k)?,
+            "gamma" => cfg.gamma = req_f64(v, k)? as f32,
+            "iters" => cfg.iters = req_usize(v, k)?,
+            "eval_every" => cfg.eval_every = req_usize(v, k)?,
+            "seed" => cfg.seed = req_usize(v, k)? as u64,
+            "model" => cfg.model = req_str(v, k)?,
+            "dim" => cfg.dim = req_usize(v, k)?,
+            "rows_per_node" => cfg.rows_per_node = req_usize(v, k)?,
+            "heterogeneity" => cfg.heterogeneity = req_f64(v, k)? as f32,
+            "batch" => cfg.batch = req_usize(v, k)?,
+            other => anyhow::bail!("unknown config key '{other}'"),
+        }
+    }
+    Ok(cfg)
+}
+
+/// Apply `--key value` CLI overrides on top of a config.
+pub fn apply_cli_overrides(cfg: &mut TrainConfig, args: &Args) {
+    if let Some(v) = args.opt_str("algo") {
+        cfg.algo = v.to_string();
+    }
+    if let Some(v) = args.opt_str("topology") {
+        cfg.topology = v.to_string();
+    }
+    if let Some(v) = args.opt_str("compressor") {
+        cfg.compressor = v.to_string();
+    }
+    if let Some(v) = args.opt_str("model") {
+        cfg.model = v.to_string();
+    }
+    cfg.n_nodes = args.usize("nodes", cfg.n_nodes);
+    cfg.gamma = args.f64("gamma", cfg.gamma as f64) as f32;
+    cfg.iters = args.usize("iters", cfg.iters);
+    cfg.eval_every = args.usize("eval-every", cfg.eval_every);
+    cfg.seed = args.u64("seed", cfg.seed);
+    cfg.dim = args.usize("dim", cfg.dim);
+    cfg.rows_per_node = args.usize("rows", cfg.rows_per_node);
+    cfg.heterogeneity = args.f64("heterogeneity", cfg.heterogeneity as f64) as f32;
+    cfg.batch = args.usize("batch", cfg.batch);
+}
+
+fn req_str(v: &Json, key: &str) -> anyhow::Result<String> {
+    v.as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow::anyhow!("config key '{key}' must be a string"))
+}
+
+fn req_usize(v: &Json, key: &str) -> anyhow::Result<usize> {
+    v.as_usize()
+        .ok_or_else(|| anyhow::anyhow!("config key '{key}' must be a non-negative integer"))
+}
+
+fn req_f64(v: &Json, key: &str) -> anyhow::Result<f64> {
+    v.as_f64()
+        .ok_or_else(|| anyhow::anyhow!("config key '{key}' must be a number"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(name: &str, contents: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("decomp_cfg_{}_{name}", std::process::id()));
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(contents.as_bytes()).unwrap();
+        p
+    }
+
+    #[test]
+    fn loads_full_config() {
+        let p = write_tmp(
+            "full.json",
+            r#"{"algo":"ecd","n_nodes":16,"topology":"hypercube","compressor":"q4",
+                "gamma":0.02,"iters":100,"eval_every":10,"seed":7,"model":"mlp",
+                "dim":32,"rows_per_node":64,"heterogeneity":1.5,"batch":4}"#,
+        );
+        let cfg = load_config(&p).unwrap();
+        assert_eq!(cfg.algo, "ecd");
+        assert_eq!(cfg.n_nodes, 16);
+        assert_eq!(cfg.topology, "hypercube");
+        assert_eq!(cfg.compressor, "q4");
+        assert!((cfg.gamma - 0.02).abs() < 1e-7);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.model, "mlp");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn partial_config_keeps_defaults() {
+        let p = write_tmp("partial.json", r#"{"algo":"dpsgd"}"#);
+        let cfg = load_config(&p).unwrap();
+        assert_eq!(cfg.algo, "dpsgd");
+        assert_eq!(cfg.n_nodes, TrainConfig::default().n_nodes);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let p = write_tmp("bad.json", r#"{"algoz":"dpsgd"}"#);
+        assert!(load_config(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn wrong_type_rejected() {
+        let p = write_tmp("type.json", r#"{"n_nodes":"eight"}"#);
+        assert!(load_config(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn cli_overrides_win() {
+        let mut cfg = TrainConfig::default();
+        let args = Args::parse_from(
+            "--algo ecd --nodes 12 --gamma 0.5"
+                .split_whitespace()
+                .map(|s| s.to_string()),
+        );
+        apply_cli_overrides(&mut cfg, &args);
+        assert_eq!(cfg.algo, "ecd");
+        assert_eq!(cfg.n_nodes, 12);
+        assert!((cfg.gamma - 0.5).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,186 @@
+//! The decentralized training coordinator — the paper's system, actually
+//! decentralized.
+//!
+//! [`run_threaded`] spawns one OS thread per node. Each worker owns its
+//! model shard, its iterate, and (for DCD) literal replicas of its
+//! neighbors' models / (for ECD) estimates; nodes exchange *real
+//! serialized wire messages* over the mailbox transport — no shared model
+//! state anywhere. The math is identical to the single-process simulator
+//! in [`crate::algorithms`] (same RNG stream layout, same operation
+//! order), and `rust/tests/coordinator_integration.rs` pins the two
+//! trajectories bitwise.
+//!
+//! This is the deployment shape of the paper's §5 testbed: 8 workers on a
+//! ring, synchronous iterations, compressed gossip.
+
+mod worker;
+
+pub use worker::{run_threaded, ThreadedRun, WorkerReport};
+
+use crate::algorithms::AlgoConfig;
+use crate::compression;
+use crate::data::{build_models, ModelKind, SynthSpec};
+use crate::topology::{Graph, MixingMatrix, Topology};
+use std::sync::Arc;
+
+/// Full experiment configuration (CLI / config-file facing).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub algo: String,
+    pub n_nodes: usize,
+    pub topology: String,
+    pub compressor: String,
+    pub gamma: f32,
+    pub iters: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub model: String,
+    pub dim: usize,
+    pub rows_per_node: usize,
+    pub heterogeneity: f32,
+    pub batch: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> TrainConfig {
+        TrainConfig {
+            algo: "dcd".into(),
+            n_nodes: 8,
+            topology: "ring".into(),
+            compressor: "q8".into(),
+            gamma: 0.1,
+            iters: 500,
+            eval_every: 25,
+            seed: 0xdeca,
+            model: "logistic".into(),
+            dim: 64,
+            rows_per_node: 256,
+            heterogeneity: 0.5,
+            batch: 8,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn parse_topology(&self) -> anyhow::Result<Topology> {
+        Ok(match self.topology.as_str() {
+            "ring" => Topology::Ring,
+            "full" | "fully_connected" => Topology::FullyConnected,
+            "chain" => Topology::Chain,
+            "star" => Topology::Star,
+            "hypercube" => Topology::Hypercube,
+            other => anyhow::bail!("unknown topology '{other}'"),
+        })
+    }
+
+    pub fn build_mixing(&self) -> anyhow::Result<Arc<MixingMatrix>> {
+        let graph = Graph::build(self.parse_topology()?, self.n_nodes);
+        // Metropolis handles irregular graphs (star/chain); uniform for
+        // regular ones matches the paper's 1/3-weights ring.
+        let d0 = graph.degree(0);
+        let regular = (0..graph.n).all(|i| graph.degree(i) == d0);
+        Ok(Arc::new(if regular {
+            MixingMatrix::uniform(graph)
+        } else {
+            MixingMatrix::metropolis(graph)
+        }))
+    }
+
+    pub fn build_algo_config(&self) -> anyhow::Result<AlgoConfig> {
+        let compressor = compression::from_name(&self.compressor)
+            .ok_or_else(|| anyhow::anyhow!("unknown compressor '{}'", self.compressor))?;
+        Ok(AlgoConfig {
+            mixing: self.build_mixing()?,
+            compressor: Arc::from(compressor),
+            seed: self.seed,
+        })
+    }
+
+    pub fn build_model_kind(&self) -> anyhow::Result<ModelKind> {
+        Ok(match self.model.as_str() {
+            "quadratic" => ModelKind::Quadratic {
+                spread: self.heterogeneity,
+                noise: 0.1,
+            },
+            "linear" => ModelKind::Linear { batch: self.batch },
+            "logistic" => ModelKind::Logistic { batch: self.batch },
+            "mlp" => ModelKind::Mlp {
+                hidden: 32,
+                classes: 4,
+                batch: self.batch,
+            },
+            other => anyhow::bail!("unknown model '{other}'"),
+        })
+    }
+
+    pub fn synth_spec(&self) -> SynthSpec {
+        SynthSpec {
+            n_nodes: self.n_nodes,
+            rows_per_node: self.rows_per_node,
+            dim: self.dim,
+            noise: 0.1,
+            heterogeneity: self.heterogeneity,
+            seed: self.seed,
+        }
+    }
+
+    /// Per-node models + shared x₁ for this config.
+    pub fn build_models(
+        &self,
+    ) -> anyhow::Result<(Vec<Box<dyn crate::models::GradientModel>>, Vec<f32>)> {
+        Ok(build_models(&self.build_model_kind()?, &self.synth_spec()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_builds() {
+        let cfg = TrainConfig::default();
+        let mix = cfg.build_mixing().unwrap();
+        assert_eq!(mix.n(), 8);
+        let algo_cfg = cfg.build_algo_config().unwrap();
+        assert_eq!(algo_cfg.compressor.name(), "q8");
+        let (models, x0) = cfg.build_models().unwrap();
+        assert_eq!(models.len(), 8);
+        assert_eq!(x0.len(), 64);
+    }
+
+    #[test]
+    fn all_topologies_parse() {
+        for topo in ["ring", "full", "chain", "star", "hypercube"] {
+            let cfg = TrainConfig {
+                topology: topo.into(),
+                ..Default::default()
+            };
+            cfg.build_mixing().unwrap();
+        }
+        let bad = TrainConfig {
+            topology: "moebius".into(),
+            ..Default::default()
+        };
+        assert!(bad.build_mixing().is_err());
+    }
+
+    #[test]
+    fn irregular_topologies_get_metropolis() {
+        let cfg = TrainConfig {
+            topology: "star".into(),
+            ..Default::default()
+        };
+        let mix = cfg.build_mixing().unwrap();
+        // Metropolis on a star: hub self-weight differs from leaves'.
+        assert_ne!(mix.self_weight[0], mix.self_weight[1]);
+    }
+
+    #[test]
+    fn bad_compressor_rejected() {
+        let cfg = TrainConfig {
+            compressor: "q99x".into(),
+            ..Default::default()
+        };
+        assert!(cfg.build_algo_config().is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Figure 2: convergence and runtime of centralized vs decentralized
+//! implementations.
+//!
+//! (a) loss vs epoch — Allreduce (fp32), Decentralized fp32 (D-PSGD),
+//!     Decentralized 8-bit (ECD & DCD): compression does not hurt
+//!     convergence per iteration.
+//! (b,c,d) loss vs wall-clock under the three `tc` network conditions —
+//!     best, high-latency, low-bandwidth — using the communication cost
+//!     model over the paper's ResNet-20 payload and K80 compute time.
+
+use super::{
+    convergence_spec, loss_table, run_named, testbed, time_loss_table,
+};
+use crate::algorithms::RunOpts;
+use crate::compression::{Compressor, StochasticQuantizer};
+use crate::metrics::Table;
+use crate::network::cost::{CommSchedule, NetCondition, NetworkModel};
+
+/// Per-iteration communication time for each implementation under `net`.
+/// Payloads follow the paper: full model (fp32) or 8-bit quantized.
+pub fn comm_times(net: &NetworkModel, n: usize) -> (f64, f64, f64) {
+    let fp = testbed::PAYLOAD_FP32;
+    let q8 = StochasticQuantizer::new(8).wire_bytes(testbed::RESNET20_PARAMS);
+    let allreduce = CommSchedule::allreduce(n, fp).time(net);
+    let dec32 = CommSchedule::gossip(2, fp).time(net);
+    let dec8 = CommSchedule::gossip(2, q8).time(net);
+    (allreduce, dec32, dec8)
+}
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let n = 8;
+    let (spec, kind) = convergence_spec(n, quick);
+    let iters = if quick { 300 } else { 1500 };
+    let eval = if quick { 30 } else { 100 };
+
+    // (a) convergence vs iteration (network-free).
+    let base = RunOpts {
+        iters,
+        gamma: 0.05,
+        eval_every: eval,
+        ..Default::default()
+    };
+    let allreduce = run_named("allreduce", "fp32", &spec, &kind, None, &base, 0xf162);
+    let dec32 = run_named("dpsgd", "fp32", &spec, &kind, None, &base, 0xf162);
+    let dcd8 = run_named("dcd", "q8", &spec, &kind, None, &base, 0xf162);
+    let ecd8 = run_named("ecd", "q8", &spec, &kind, None, &base, 0xf162);
+    let mut tables = vec![loss_table(
+        "Fig 2(a): convergence vs iteration (decentralization+compression do not hurt)",
+        &[&allreduce, &dec32, &dcd8, &ecd8],
+    )];
+
+    // (b,c,d) loss vs simulated wall-clock under each condition.
+    for cond in [
+        NetCondition::Best,
+        NetCondition::HighLatency,
+        NetCondition::LowBandwidth,
+    ] {
+        let net = cond.model();
+        let with_net = |sched_rounds_bytes: CommSchedule| RunOpts {
+            iters,
+            gamma: 0.05,
+            eval_every: eval,
+            net: Some(NetworkModel {
+                // The driver recomputes comm time from the *algorithm's own*
+                // schedule, which reflects the synthetic model's small dim —
+                // here we want the paper's ResNet-20 payload, so fold the
+                // modeled comm time into compute_per_iter instead.
+                bandwidth_bps: 1e30,
+                latency_s: 0.0,
+            }),
+            compute_per_iter_s: testbed::COMPUTE_PER_ITER_S + sched_rounds_bytes.time(&net),
+            decay_tau: None,
+        };
+        let ar = run_named(
+            "allreduce",
+            "fp32",
+            &spec,
+            &kind,
+            None,
+            &with_net(CommSchedule::allreduce(n, testbed::PAYLOAD_FP32)),
+            0xf162,
+        );
+        let d32 = run_named(
+            "dpsgd",
+            "fp32",
+            &spec,
+            &kind,
+            None,
+            &with_net(CommSchedule::gossip(2, testbed::PAYLOAD_FP32)),
+            0xf162,
+        );
+        let q8_bytes = StochasticQuantizer::new(8).wire_bytes(testbed::RESNET20_PARAMS);
+        let d8 = run_named(
+            "dcd",
+            "q8",
+            &spec,
+            &kind,
+            None,
+            &with_net(CommSchedule::gossip(2, q8_bytes)),
+            0xf162,
+        );
+        tables.push(time_loss_table(
+            &format!("Fig 2 (loss vs time) under {}", cond.name()),
+            &[&ar, &d32, &d8],
+        ));
+    }
+
+    // Summary: per-iteration comm time under each condition (the crossover
+    // structure that drives the figure).
+    let mut summary = Table::new(
+        "Fig 2 summary: modeled per-iteration comm time (ResNet-20 payload, n=8 ring)",
+        &["condition", "allreduce_fp32", "decentralized_fp32", "decentralized_8bit"],
+    );
+    for cond in NetCondition::all() {
+        let (ar, d32, d8) = comm_times(&cond.model(), n);
+        summary.row(vec![
+            cond.name().into(),
+            crate::metrics::fmt_secs(ar),
+            crate::metrics::fmt_secs(d32),
+            crate::metrics::fmt_secs(d8),
+        ]);
+    }
+    tables.push(summary);
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_time_crossovers_match_paper() {
+        let n = 8;
+        // High latency: decentralized (1 round) beats Allreduce (14).
+        let (ar, d32, _) = comm_times(&NetCondition::HighLatency.model(), n);
+        assert!(d32 < ar);
+        // Low bandwidth: 8-bit beats fp32 decentralized by ~3-4x.
+        let (_, d32, d8) = comm_times(&NetCondition::LowBandwidth.model(), n);
+        assert!(d8 < 0.35 * d32, "d8 {d8} vs d32 {d32}");
+        // Best network: everything well under compute time.
+        let (ar, d32, d8) = comm_times(&NetCondition::Best.model(), n);
+        assert!(ar < testbed::COMPUTE_PER_ITER_S);
+        assert!(d32 < testbed::COMPUTE_PER_ITER_S);
+        assert!(d8 < testbed::COMPUTE_PER_ITER_S);
+    }
+
+    #[test]
+    fn fig2a_compression_does_not_hurt() {
+        let tables = super::run(true);
+        let conv = &tables[0];
+        // Final-row losses of allreduce vs dcd_q8 vs ecd_q8 are close.
+        let last = conv.rows.last().unwrap();
+        let ar: f64 = last[1].parse().unwrap();
+        let dcd: f64 = last[3].parse().unwrap();
+        let ecd: f64 = last[4].parse().unwrap();
+        assert!((dcd - ar).abs() < 0.15 * (1.0 + ar.abs()), "dcd {dcd} vs ar {ar}");
+        assert!((ecd - ar).abs() < 0.15 * (1.0 + ar.abs()), "ecd {ecd} vs ar {ar}");
+    }
+
+    #[test]
+    fn fig2d_low_bandwidth_8bit_fastest_to_target() {
+        // Under low bandwidth the 8-bit decentralized run reaches a fixed
+        // loss earlier in simulated time than both fp32 variants.
+        let tables = super::run(true);
+        // tables[3] is the LowBandwidth time-loss table: columns
+        // [ar_t, ar_l, d32_t, d32_l, d8_t, d8_l].
+        let t = &tables[3];
+        let final_row = t.rows.last().unwrap();
+        let ar_time: f64 = final_row[0].parse().unwrap();
+        let d32_time: f64 = final_row[2].parse().unwrap();
+        let d8_time: f64 = final_row[4].parse().unwrap();
+        assert!(d8_time < d32_time, "{d8_time} vs {d32_time}");
+        assert!(d8_time < ar_time, "{d8_time} vs {ar_time}");
+    }
+}

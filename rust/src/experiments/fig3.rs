@@ -1,0 +1,138 @@
+//! Figure 3: epoch time under diverse network conditions.
+//!
+//! Pure communication accounting over the paper's testbed constants
+//! (ResNet-20 payload, 49 iterations/epoch, K80 compute):
+//!
+//! (a) epoch time vs bandwidth at low latency (0.13 ms)
+//! (b) epoch time vs bandwidth at high latency (5 ms)
+//! (c) epoch time vs latency at high bandwidth (1.4 Gbps)
+//! (d) epoch time vs latency at low bandwidth (5 Mbps)
+//!
+//! Expected shapes (§5.3): (a) low precision wins as bandwidth drops,
+//! fp32 decentralized ≈ Allreduce; (b) both decentralized beat Allreduce
+//! at first, fp32 degrades with bandwidth; (c) Allreduce slower
+//! throughout, both decentralized flat; (d) only low-precision
+//! decentralized stays fast.
+
+use super::testbed;
+use crate::compression::{Compressor, StochasticQuantizer};
+use crate::metrics::{fmt_secs, Table};
+use crate::network::cost::{epoch_time, CommSchedule, NetworkModel};
+
+pub const BANDWIDTHS: [(f64, &str); 5] = [
+    (1.4e9, "1.4Gbps"),
+    (200e6, "200Mbps"),
+    (50e6, "50Mbps"),
+    (10e6, "10Mbps"),
+    (5e6, "5Mbps"),
+];
+
+pub const LATENCIES: [(f64, &str); 4] = [
+    (0.13e-3, "0.13ms"),
+    (1e-3, "1ms"),
+    (2e-3, "2ms"),
+    (5e-3, "5ms"),
+];
+
+/// Epoch times (allreduce_fp32, decentralized_fp32, decentralized_8bit).
+pub fn epoch_times(net: &NetworkModel, n: usize) -> (f64, f64, f64) {
+    let fp = testbed::PAYLOAD_FP32;
+    let q8 = StochasticQuantizer::new(8).wire_bytes(testbed::RESNET20_PARAMS);
+    let it = testbed::ITERS_PER_EPOCH;
+    let c = testbed::COMPUTE_PER_ITER_S;
+    (
+        epoch_time(it, c, CommSchedule::allreduce(n, fp), net),
+        epoch_time(it, c, CommSchedule::gossip(2, fp), net),
+        epoch_time(it, c, CommSchedule::gossip(2, q8), net),
+    )
+}
+
+fn sweep_bandwidth(title: &str, latency_s: f64, n: usize) -> Table {
+    let mut t = Table::new(
+        title,
+        &["bandwidth", "allreduce_fp32", "decentralized_fp32", "decentralized_8bit"],
+    );
+    for (bw, name) in BANDWIDTHS {
+        let (ar, d32, d8) = epoch_times(&NetworkModel::new(bw, latency_s), n);
+        t.row(vec![name.into(), fmt_secs(ar), fmt_secs(d32), fmt_secs(d8)]);
+    }
+    t
+}
+
+fn sweep_latency(title: &str, bandwidth_bps: f64, n: usize) -> Table {
+    let mut t = Table::new(
+        title,
+        &["latency", "allreduce_fp32", "decentralized_fp32", "decentralized_8bit"],
+    );
+    for (lat, name) in LATENCIES {
+        let (ar, d32, d8) = epoch_times(&NetworkModel::new(bandwidth_bps, lat), n);
+        t.row(vec![name.into(), fmt_secs(ar), fmt_secs(d32), fmt_secs(d8)]);
+    }
+    t
+}
+
+pub fn run(_quick: bool) -> Vec<Table> {
+    let n = 8;
+    vec![
+        sweep_bandwidth("Fig 3(a): epoch time vs bandwidth (latency 0.13ms)", 0.13e-3, n),
+        sweep_bandwidth("Fig 3(b): epoch time vs bandwidth (latency 5ms)", 5e-3, n),
+        sweep_latency("Fig 3(c): epoch time vs latency (bandwidth 1.4Gbps)", 1.4e9, n),
+        sweep_latency("Fig 3(d): epoch time vs latency (bandwidth 5Mbps)", 5e6, n),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3a_low_precision_wins_at_low_bandwidth() {
+        let n = 8;
+        let (_, d32, d8) = epoch_times(&NetworkModel::new(5e6, 0.13e-3), n);
+        assert!(d8 < 0.5 * d32, "8-bit should be much faster: {d8} vs {d32}");
+        // fp32 decentralized has no advantage over Allreduce here (§5.3).
+        let (ar, d32, _) = epoch_times(&NetworkModel::new(5e6, 0.13e-3), n);
+        assert!((d32 / ar) > 0.8 && (d32 / ar) < 1.5, "ratio {}", d32 / ar);
+    }
+
+    #[test]
+    fn fig3b_decentralized_beats_allreduce_at_high_latency() {
+        let n = 8;
+        let (ar, d32, d8) = epoch_times(&NetworkModel::new(1.4e9, 5e-3), n);
+        assert!(d32 < ar);
+        assert!(d8 < ar);
+    }
+
+    #[test]
+    fn fig3c_allreduce_degrades_with_latency_others_flat() {
+        let n = 8;
+        let (ar_lo, d32_lo, _) = epoch_times(&NetworkModel::new(1.4e9, 0.13e-3), n);
+        let (ar_hi, d32_hi, _) = epoch_times(&NetworkModel::new(1.4e9, 5e-3), n);
+        let ar_growth = ar_hi - ar_lo;
+        let d32_growth = d32_hi - d32_lo;
+        // Allreduce pays 14 latency rounds/iter; gossip pays 1.
+        assert!(
+            (ar_growth / d32_growth - 14.0).abs() < 1.0,
+            "latency sensitivity ratio {}",
+            ar_growth / d32_growth
+        );
+    }
+
+    #[test]
+    fn fig3d_only_low_precision_fast_when_both_bad() {
+        let n = 8;
+        let (ar, d32, d8) = epoch_times(&NetworkModel::new(5e6, 5e-3), n);
+        assert!(d8 < 0.5 * d32, "{d8} vs {d32}");
+        assert!(d8 < 0.5 * ar, "{d8} vs {ar}");
+    }
+
+    #[test]
+    fn best_condition_all_similar() {
+        let n = 8;
+        let (ar, d32, d8) = epoch_times(&NetworkModel::new(1.4e9, 0.13e-3), n);
+        let base = testbed::ITERS_PER_EPOCH as f64 * testbed::COMPUTE_PER_ITER_S;
+        for v in [ar, d32, d8] {
+            assert!(v < 1.5 * base, "{v} vs compute floor {base}");
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Experiment drivers: one module per paper figure (DESIGN.md §5 maps
+//! each to its bench target), plus the ablations the paper's theory
+//! motivates. Every driver returns [`Table`]s so benches, the CLI, and
+//! EXPERIMENTS.md all render the same rows.
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+
+use crate::algorithms::{self, AlgoConfig, RunOpts, TrainTrace};
+use crate::compression;
+use crate::data::{build_models, ModelKind, SynthSpec};
+use crate::metrics::Table;
+use crate::topology::{Graph, MixingMatrix, Topology};
+use std::sync::Arc;
+
+/// The paper's testbed constants, shared by the runtime figures.
+pub mod testbed {
+    /// ResNet-20 parameter count (the paper's model).
+    pub const RESNET20_PARAMS: usize = 270_000;
+    /// fp32 payload bytes.
+    pub const PAYLOAD_FP32: usize = 4 * RESNET20_PARAMS;
+    /// K80 fwd+bwd time per batch-128 iteration (measured ~0.11 s).
+    pub const COMPUTE_PER_ITER_S: f64 = 0.11;
+    /// CIFAR-10 iterations per epoch at batch 128 × 8 workers.
+    pub const ITERS_PER_EPOCH: usize = 49;
+}
+
+/// Common workload for the convergence figures: logistic regression on
+/// heterogeneous synthetic shards (the CIFAR/ResNet substitute; DESIGN.md
+/// §4).
+pub fn convergence_spec(n_nodes: usize, quick: bool) -> (SynthSpec, ModelKind) {
+    let spec = SynthSpec {
+        n_nodes,
+        rows_per_node: if quick { 64 } else { 256 },
+        dim: 64,
+        noise: 0.1,
+        heterogeneity: 0.5,
+        seed: 0xdeca,
+    };
+    (spec, ModelKind::Logistic { batch: 8 })
+}
+
+/// Build an algorithm + fresh models and run it.
+pub fn run_named(
+    algo: &str,
+    compressor: &str,
+    spec: &SynthSpec,
+    kind: &ModelKind,
+    x0_override: Option<&[f32]>,
+    opts: &RunOpts,
+    seed: u64,
+) -> TrainTrace {
+    let (mut models, x0_built) = build_models(kind, spec);
+    let x0 = x0_override.unwrap_or(&x0_built);
+    let cfg = AlgoConfig {
+        mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, spec.n_nodes))),
+        compressor: Arc::from(compression::from_name(compressor).expect("compressor")),
+        seed,
+    };
+    let mut algo = algorithms::from_name(algo, cfg, x0, spec.n_nodes).expect("algorithm");
+    algorithms::run_training(algo.as_mut(), &mut models, opts)
+}
+
+/// Tabulate several traces side by side at shared eval points.
+pub fn loss_table(title: &str, traces: &[&TrainTrace]) -> Table {
+    let mut header = vec!["iter".to_string()];
+    for t in traces {
+        header.push(t.algo.clone());
+    }
+    let mut table = Table::new(title, &header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let npoints = traces.iter().map(|t| t.points.len()).min().unwrap_or(0);
+    for p in 0..npoints {
+        let mut row = vec![traces[0].points[p].iter.to_string()];
+        for t in traces {
+            row.push(format!("{:.4}", t.points[p].global_loss));
+        }
+        table.row(row);
+    }
+    table
+}
+
+/// Tabulate loss against *simulated wall-clock* (Fig. 2(b–d) style).
+pub fn time_loss_table(title: &str, traces: &[&TrainTrace]) -> Table {
+    let mut header: Vec<String> = Vec::new();
+    for t in traces {
+        header.push(format!("{}_time_s", t.algo));
+        header.push(format!("{}_loss", t.algo));
+    }
+    let mut table = Table::new(title, &header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let npoints = traces.iter().map(|t| t.points.len()).min().unwrap_or(0);
+    for p in 0..npoints {
+        let mut row = Vec::new();
+        for t in traces {
+            row.push(format!("{:.2}", t.points[p].sim_time_s));
+            row.push(format!("{:.4}", t.points[p].global_loss));
+        }
+        table.row(row);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_named_produces_trace() {
+        let (spec, kind) = convergence_spec(4, true);
+        let opts = RunOpts {
+            iters: 20,
+            gamma: 0.05,
+            eval_every: 10,
+            ..Default::default()
+        };
+        let t = run_named("dcd", "q8", &spec, &kind, None, &opts, 1);
+        assert_eq!(t.points.len(), 3);
+        assert!(t.final_loss().is_finite());
+    }
+
+    #[test]
+    fn loss_table_shape() {
+        let (spec, kind) = convergence_spec(4, true);
+        let opts = RunOpts {
+            iters: 20,
+            gamma: 0.05,
+            eval_every: 10,
+            ..Default::default()
+        };
+        let a = run_named("dpsgd", "fp32", &spec, &kind, None, &opts, 1);
+        let b = run_named("dcd", "q8", &spec, &kind, None, &opts, 1);
+        let table = loss_table("t", &[&a, &b]);
+        assert_eq!(table.header.len(), 3);
+        assert_eq!(table.rows.len(), 3);
+    }
+}

@@ -1,0 +1,37 @@
+//! # decomp — Communication Compression for Decentralized Training
+//!
+//! A production-shaped reproduction of *"Communication Compression for
+//! Decentralized Training"* (Tang, Gan, Zhang, Zhang, Liu — NeurIPS 2018):
+//! DCD-PSGD and ECD-PSGD, the quantized-gossip algorithms that converge at
+//! the centralized `O(1/√nT)` rate, plus every baseline and substrate the
+//! paper's evaluation needs.
+//!
+//! Architecture (three layers, python never on the training path):
+//! - **L3 (this crate)** — the decentralized coordinator: topologies &
+//!   mixing matrices, unbiased compression codecs, training algorithms,
+//!   a bandwidth/latency network simulator, a threaded transport, metrics,
+//!   config, CLI ([`coordinator`], [`algorithms`], [`compression`],
+//!   [`network`], [`topology`]).
+//! - **L2** — a JAX transformer whose `grad_step` is AOT-lowered to HLO
+//!   text by `python/compile/aot.py` and executed from rust via PJRT
+//!   ([`runtime`]).
+//! - **L1** — Pallas kernels (stochastic quantization, fused gossip-SGD)
+//!   called inside the L2 graph (`python/compile/kernels/`).
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod algorithms;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod bench_harness;
+pub mod experiments;
+pub mod linalg;
+pub mod metrics;
+pub mod models;
+pub mod network;
+pub mod runtime;
+pub mod topology;
+pub mod util;

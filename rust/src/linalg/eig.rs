@@ -1,0 +1,226 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! The paper's convergence constants are spectral quantities of the mixing
+//! matrix W: ρ = max{|λ₂|, |λₙ|} and µ = max_{i≥2} |λᵢ − 1| (Theorem 1).
+//! W is symmetric doubly stochastic and tiny (n = number of workers), so
+//! Jacobi is the right tool: unconditionally stable, no dependencies, and
+//! its O(n³) per sweep cost is irrelevant at these sizes.
+
+use super::mat::Mat;
+
+/// Eigenvalues (descending) and the orthonormal eigenvectors as columns of
+/// `vectors` (column i pairs with `values[i]`).
+#[derive(Debug, Clone)]
+pub struct Eigen {
+    pub values: Vec<f64>,
+    pub vectors: Mat,
+}
+
+/// Jacobi eigenvalue iteration for a symmetric matrix.
+///
+/// Panics if the matrix is not square; callers should verify symmetry
+/// (`Mat::is_symmetric`) — the algorithm only reads the upper triangle's
+/// mirror implicitly through symmetric updates.
+pub fn symmetric_eigen(m: &Mat) -> Eigen {
+    assert!(m.is_square(), "eigendecomposition needs a square matrix");
+    let n = m.rows;
+    let mut a = m.clone();
+    let mut v = Mat::identity(n);
+
+    let max_sweeps = 100;
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius norm — convergence criterion.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a[(i, j)] * a[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + a.fro_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[(p, p)];
+                let aqq = a[(q, q)];
+                // Rotation angle (Golub & Van Loan 8.4).
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // A <- J^T A J applied in place.
+                for k in 0..n {
+                    let akp = a[(k, p)];
+                    let akq = a[(k, q)];
+                    a[(k, p)] = c * akp - s * akq;
+                    a[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[(p, k)];
+                    let aqk = a[(q, k)];
+                    a[(p, k)] = c * apk - s * aqk;
+                    a[(q, k)] = s * apk + c * aqk;
+                }
+                // Accumulate eigenvectors: V <- V J.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Extract and sort descending, permuting eigenvector columns alongside.
+    let mut idx: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+    idx.sort_by(|&i, &j| diag[j].partial_cmp(&diag[i]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| diag[i]).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (new_col, &old_col) in idx.iter().enumerate() {
+        for r in 0..n {
+            vectors[(r, new_col)] = v[(r, old_col)];
+        }
+    }
+    Eigen { values, vectors }
+}
+
+/// Spectral statistics of a mixing matrix, as used in Theorems 1 & 3.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpectralStats {
+    /// λ₂: second-largest eigenvalue.
+    pub lambda2: f64,
+    /// λₙ: smallest eigenvalue.
+    pub lambda_n: f64,
+    /// ρ = max{|λ₂|, |λₙ|} (Assumption 1.3).
+    pub rho: f64,
+    /// µ = max_{i∈{2..n}} |λᵢ − 1| (Theorem 1).
+    pub mu: f64,
+    /// Spectral gap 1 − ρ.
+    pub gap: f64,
+}
+
+/// Compute (ρ, µ, gap) of a symmetric doubly stochastic matrix.
+pub fn spectral_stats(w: &Mat) -> SpectralStats {
+    let eig = symmetric_eigen(w);
+    let n = eig.values.len();
+    assert!(n >= 2, "need at least 2 nodes");
+    let lambda2 = eig.values[1];
+    let lambda_n = eig.values[n - 1];
+    let rho = lambda2.abs().max(lambda_n.abs());
+    let mu = eig.values[1..]
+        .iter()
+        .map(|l| (l - 1.0).abs())
+        .fold(0.0, f64::max);
+    SpectralStats {
+        lambda2,
+        lambda_n,
+        rho,
+        mu,
+        gap: 1.0 - rho,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let m = Mat::from_rows(&[&[3., 0., 0.], &[0., 1., 0.], &[0., 0., 2.]]);
+        let e = symmetric_eigen(&m);
+        assert_close(e.values[0], 3.0, 1e-12);
+        assert_close(e.values[1], 2.0, 1e-12);
+        assert_close(e.values[2], 1.0, 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let m = Mat::from_rows(&[&[2., 1.], &[1., 2.]]);
+        let e = symmetric_eigen(&m);
+        assert_close(e.values[0], 3.0, 1e-10);
+        assert_close(e.values[1], 1.0, 1e-10);
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal_and_satisfy_av_lv() {
+        let m = Mat::from_rows(&[
+            &[4., 1., 0.5],
+            &[1., 3., 0.2],
+            &[0.5, 0.2, 2.],
+        ]);
+        let e = symmetric_eigen(&m);
+        // V^T V = I
+        let vtv = e.vectors.transpose().matmul(&e.vectors);
+        assert!(vtv.max_abs_diff(&Mat::identity(3)) < 1e-9);
+        // A v_i = λ_i v_i
+        for i in 0..3 {
+            let v: Vec<f64> = (0..3).map(|r| e.vectors[(r, i)]).collect();
+            let av = m.matvec(&v);
+            for r in 0..3 {
+                assert_close(av[r], e.values[i] * v[r], 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_mixing_matrix_spectrum() {
+        // Uniform ring of 4: W_ij = 1/3 for self and two neighbors.
+        // Circulant with symbol (1 + 2cos(2πk/4))/3 → eigenvalues 1, 1/3,
+        // 1/3, -1/3.
+        let w = Mat::from_rows(&[
+            &[1. / 3., 1. / 3., 0., 1. / 3.],
+            &[1. / 3., 1. / 3., 1. / 3., 0.],
+            &[0., 1. / 3., 1. / 3., 1. / 3.],
+            &[1. / 3., 0., 1. / 3., 1. / 3.],
+        ]);
+        let e = symmetric_eigen(&w);
+        assert_close(e.values[0], 1.0, 1e-10);
+        assert_close(e.values[1], 1.0 / 3.0, 1e-10);
+        assert_close(e.values[3], -1.0 / 3.0, 1e-10);
+        let s = spectral_stats(&w);
+        assert_close(s.rho, 1.0 / 3.0, 1e-10);
+        assert_close(s.mu, 4.0 / 3.0, 1e-10);
+        assert_close(s.gap, 2.0 / 3.0, 1e-10);
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let m = Mat::from_rows(&[
+            &[1.0, 0.3, 0.1],
+            &[0.3, 2.0, -0.4],
+            &[0.1, -0.4, 3.0],
+        ]);
+        let e = symmetric_eigen(&m);
+        let trace = 6.0;
+        assert_close(e.values.iter().sum::<f64>(), trace, 1e-10);
+    }
+
+    #[test]
+    fn values_sorted_descending() {
+        let m = Mat::from_rows(&[
+            &[0.2, 0.5, 0.0],
+            &[0.5, -1.0, 0.7],
+            &[0.0, 0.7, 0.9],
+        ]);
+        let e = symmetric_eigen(&m);
+        for w in e.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+}

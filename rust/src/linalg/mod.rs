@@ -1,0 +1,7 @@
+//! Small dense linear algebra: matrices, a symmetric Jacobi eigensolver
+//! (for mixing-matrix spectra), and the f32 vector kernels used on the
+//! training hot loop.
+
+pub mod eig;
+pub mod mat;
+pub mod vecops;

@@ -1,0 +1,163 @@
+//! f32 vector kernels for the training hot loop. All parameter vectors in
+//! the coordinator are `Vec<f32>` (matching the paper's x^{(i)} ∈ R^N), and
+//! these routines are the only arithmetic on them, so they are written to
+//! auto-vectorize (straight loops over slices, no bounds checks in the
+//! body after the asserts).
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y = alpha * x + beta * y
+#[inline]
+pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = alpha * xi + beta * *yi;
+    }
+}
+
+/// out = a - b
+#[inline]
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), out.len());
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o = x - y;
+    }
+}
+
+/// x *= alpha
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// dot(a, b) accumulated in f64 for stability.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+/// ||x||₂ (f64 accumulation).
+#[inline]
+pub fn norm2(x: &[f32]) -> f64 {
+    x.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt()
+}
+
+/// ||a − b||₂² (f64 accumulation).
+#[inline]
+pub fn dist2_sq(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| ((*x - *y) as f64).powi(2))
+        .sum()
+}
+
+/// max |x_i|
+#[inline]
+pub fn max_abs(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+/// Weighted combination: out = Σ_k weights[k] * columns[k].
+/// The core gossip operation x^{(i)} = Σ_j W_ij x̂^{(j)}.
+pub fn weighted_sum(weights: &[f32], columns: &[&[f32]], out: &mut [f32]) {
+    assert_eq!(weights.len(), columns.len());
+    out.fill(0.0);
+    for (&w, col) in weights.iter().zip(columns) {
+        if w == 0.0 {
+            continue;
+        }
+        axpy(w, col, out);
+    }
+}
+
+/// Mean of several equal-length vectors (the Allreduce primitive).
+pub fn mean_of(columns: &[&[f32]], out: &mut [f32]) {
+    assert!(!columns.is_empty());
+    out.fill(0.0);
+    for col in columns {
+        axpy(1.0, col, out);
+    }
+    scale(1.0 / columns.len() as f32, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_known() {
+        let mut y = vec![1.0, 2.0];
+        axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 10.0]);
+    }
+
+    #[test]
+    fn axpby_known() {
+        let mut y = vec![1.0, 2.0];
+        axpby(2.0, &[3.0, 4.0], 0.5, &mut y);
+        assert_eq!(y, vec![6.5, 9.0]);
+    }
+
+    #[test]
+    fn sub_known() {
+        let mut out = vec![0.0; 2];
+        sub(&[5.0, 3.0], &[2.0, 1.0], &mut out);
+        assert_eq!(out, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dist2_sq_known() {
+        assert_eq!(dist2_sq(&[1.0, 1.0], &[0.0, 0.0]), 2.0);
+    }
+
+    #[test]
+    fn max_abs_known() {
+        assert_eq!(max_abs(&[-3.0, 2.0, 1.0]), 3.0);
+        assert_eq!(max_abs(&[]), 0.0);
+    }
+
+    #[test]
+    fn weighted_sum_matches_manual() {
+        let a = vec![1.0f32, 0.0];
+        let b = vec![0.0f32, 1.0];
+        let mut out = vec![9.0f32; 2];
+        weighted_sum(&[0.25, 0.75], &[&a, &b], &mut out);
+        assert_eq!(out, vec![0.25, 0.75]);
+    }
+
+    #[test]
+    fn mean_of_vectors() {
+        let a = vec![1.0f32, 3.0];
+        let b = vec![3.0f32, 5.0];
+        let mut out = vec![0.0f32; 2];
+        mean_of(&[&a, &b], &mut out);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn zero_weight_columns_skipped() {
+        let a = vec![f32::NAN; 2]; // must not be touched when weight == 0
+        let b = vec![1.0f32, 2.0];
+        let mut out = vec![0.0f32; 2];
+        weighted_sum(&[0.0, 1.0], &[&a, &b], &mut out);
+        assert_eq!(out, vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,180 @@
+//! `decomp` — the leader CLI.
+//!
+//! Subcommands:
+//!   train      run a training job (threaded decentralized workers)
+//!   simulate   run the deterministic single-process simulator
+//!   spectra    print mixing-matrix spectral stats for a topology
+//!   fig1..fig4 regenerate a paper figure's table(s)
+//!   ablations  run the theory-driven ablation sweeps
+//!   netmodel   print the per-iteration comm-time landscape
+//!
+//! Examples:
+//!   decomp train --algo dcd --compressor q8 --nodes 8 --iters 500
+//!   decomp train --config experiments.json --gamma 0.05
+//!   decomp spectra --topology hypercube --nodes 16
+//!   decomp fig3
+
+use decomp::algorithms::{self, RunOpts};
+use decomp::config::{apply_cli_overrides, load_config};
+use decomp::coordinator::{run_threaded, TrainConfig};
+use decomp::experiments::{ablations, fig1, fig2, fig3, fig4};
+use decomp::metrics::{fmt_bytes, Table};
+use decomp::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let quick = args.bool("quick", false);
+    match cmd {
+        "train" => train(&args, true),
+        "simulate" => train(&args, false),
+        "spectra" => spectra(&args),
+        "fig1" => print_tables(fig1::run(quick)),
+        "fig2" => print_tables(fig2::run(quick)),
+        "fig3" => print_tables(fig3::run(quick)),
+        "fig4" => print_tables(fig4::run(quick)),
+        "ablations" => print_tables(ablations::run(quick)),
+        "netmodel" => print_tables(fig3::run(false)),
+        _ => {
+            println!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "decomp — Communication Compression for Decentralized Training (NeurIPS'18)
+
+USAGE: decomp <command> [--flags]
+
+COMMANDS
+  train       threaded decentralized training (real message passing)
+                --algo dpsgd|dcd|ecd|naive|allreduce  --compressor fp32|q8|q4|...
+                --nodes N --topology ring|full|chain|star|hypercube
+                --gamma F --iters N --model quadratic|linear|logistic|mlp
+                --config file.json (CLI flags override file values)
+  simulate    same options, deterministic single-process simulator
+  spectra     mixing-matrix spectral stats: --topology T --nodes N
+  fig1..fig4  regenerate the paper figure tables (--quick for small runs)
+  ablations   compressor/topology/heterogeneity sweeps
+  netmodel    per-iteration communication-time landscape";
+
+fn load_train_config(args: &Args) -> anyhow::Result<TrainConfig> {
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => load_config(std::path::Path::new(path))?,
+        None => TrainConfig::default(),
+    };
+    apply_cli_overrides(&mut cfg, args);
+    Ok(cfg)
+}
+
+fn train(args: &Args, threaded: bool) -> anyhow::Result<()> {
+    let cfg = load_train_config(args)?;
+    let algo_cfg = cfg.build_algo_config()?;
+    let (models, x0) = cfg.build_models()?;
+    let (eval_models, _) = cfg.build_models()?;
+    println!(
+        "{} {} | n={} topo={} comp={} gamma={} iters={} model={} dim={}",
+        if threaded { "train(threaded)" } else { "simulate" },
+        cfg.algo,
+        cfg.n_nodes,
+        cfg.topology,
+        cfg.compressor,
+        cfg.gamma,
+        cfg.iters,
+        cfg.model,
+        cfg.dim
+    );
+    println!(
+        "mixing: rho={:.4} mu={:.4} gap={:.4} dcd_alpha_bound={:.4}",
+        algo_cfg.mixing.stats.rho,
+        algo_cfg.mixing.stats.mu,
+        algo_cfg.mixing.stats.gap,
+        algo_cfg.mixing.dcd_alpha_bound()
+    );
+
+    if threaded {
+        let t0 = std::time::Instant::now();
+        let run = run_threaded(&cfg.algo, &algo_cfg, models, &x0, cfg.gamma, cfg.iters)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let mean = run.mean_params();
+        let final_loss: f64 = eval_models.iter().map(|m| m.full_loss(&mean)).sum::<f64>()
+            / eval_models.len() as f64;
+        let mut t = Table::new("threaded run", &["iter", "mean_minibatch_loss"]);
+        let losses = run.mean_losses();
+        for (i, l) in decomp::util::stats::downsample(&losses, 12) {
+            t.row(vec![i.to_string(), format!("{l:.5}")]);
+        }
+        t.print();
+        println!(
+            "final f(x̄) = {final_loss:.5} | bytes on wire = {} | wall = {wall:.2}s",
+            fmt_bytes(run.total_bytes() as f64)
+        );
+    } else {
+        let mut models = models;
+        let mut algo = algorithms::from_name(&cfg.algo, algo_cfg, &x0, cfg.n_nodes)
+            .ok_or_else(|| anyhow::anyhow!("unknown algorithm '{}'", cfg.algo))?;
+        let opts = RunOpts {
+            iters: cfg.iters,
+            gamma: cfg.gamma,
+            eval_every: cfg.eval_every,
+            ..Default::default()
+        };
+        let trace = algorithms::run_training(algo.as_mut(), &mut models, &opts);
+        let mut t = Table::new("simulated run", &["iter", "f_mean", "consensus", "bytes"]);
+        for p in &trace.points {
+            t.row(vec![
+                p.iter.to_string(),
+                format!("{:.5}", p.global_loss),
+                format!("{:.3e}", p.consensus),
+                fmt_bytes(p.bytes_sent as f64),
+            ]);
+        }
+        t.print();
+        // --out file.json / --out file.csv: persist the trace.
+        if let Some(path) = args.opt_str("out") {
+            let body = if path.ends_with(".csv") {
+                t.to_csv()
+            } else {
+                trace.to_json().to_pretty()
+            };
+            std::fs::write(path, body)?;
+            println!("trace written to {path}");
+        }
+    }
+    Ok(())
+}
+
+fn spectra(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_train_config(args)?;
+    let mixing = cfg.build_mixing()?;
+    let mut t = Table::new(
+        &format!("spectra: {} n={}", cfg.topology, cfg.n_nodes),
+        &["stat", "value"],
+    );
+    t.row(vec!["lambda2".into(), format!("{:.6}", mixing.stats.lambda2)]);
+    t.row(vec!["lambda_n".into(), format!("{:.6}", mixing.stats.lambda_n)]);
+    t.row(vec!["rho".into(), format!("{:.6}", mixing.stats.rho)]);
+    t.row(vec!["mu".into(), format!("{:.6}", mixing.stats.mu)]);
+    t.row(vec!["spectral_gap".into(), format!("{:.6}", mixing.stats.gap)]);
+    t.row(vec![
+        "dcd_alpha_bound".into(),
+        format!("{:.6}", mixing.dcd_alpha_bound()),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn print_tables(tables: Vec<Table>) -> anyhow::Result<()> {
+    for t in tables {
+        t.print();
+        println!();
+    }
+    Ok(())
+}

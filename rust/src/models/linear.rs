@@ -1,0 +1,272 @@
+//! Linear and logistic regression over a local data shard, with minibatch
+//! stochastic gradients. These are the workhorses of the figure benches:
+//! smooth, fast, and their heterogeneity across shards is set directly by
+//! the data generator ([`crate::data`]).
+
+use super::GradientModel;
+use crate::linalg::vecops;
+use crate::util::rng::Pcg64;
+
+/// A shard of supervised data: row-major features `x[row*dim..]` and one
+/// target per row.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub dim: usize,
+    pub features: Vec<f32>,
+    pub targets: Vec<f32>,
+}
+
+impl Shard {
+    pub fn rows(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.features[r * self.dim..(r + 1) * self.dim]
+    }
+
+    pub fn validate(&self) {
+        assert_eq!(self.features.len(), self.dim * self.targets.len());
+        assert!(self.rows() > 0, "empty shard");
+    }
+}
+
+/// ½ mean squared error linear regression: f(w) = 1/(2m) Σ (⟨a_r, w⟩ − b_r)².
+#[derive(Debug, Clone)]
+pub struct LinearRegression {
+    pub shard: Shard,
+    pub batch: usize,
+    /// L2 regularization (adds λ‖w‖²/2; keeps the Hessian well-conditioned).
+    pub l2: f32,
+}
+
+impl LinearRegression {
+    pub fn new(shard: Shard, batch: usize) -> LinearRegression {
+        shard.validate();
+        assert!(batch >= 1);
+        LinearRegression { shard, batch, l2: 0.0 }
+    }
+
+    pub fn with_l2(mut self, l2: f32) -> LinearRegression {
+        self.l2 = l2;
+        self
+    }
+
+    fn residual(&self, x: &[f32], r: usize) -> f32 {
+        vecops::dot(self.shard.row(r), x) as f32 - self.shard.targets[r]
+    }
+}
+
+impl GradientModel for LinearRegression {
+    fn dim(&self) -> usize {
+        self.shard.dim
+    }
+
+    fn stoch_grad(&mut self, x: &[f32], out: &mut [f32], rng: &mut Pcg64) -> f64 {
+        out.fill(0.0);
+        let m = self.shard.rows();
+        let mut loss = 0.0f64;
+        for _ in 0..self.batch {
+            let r = rng.below(m as u64) as usize;
+            let e = self.residual(x, r);
+            loss += 0.5 * (e as f64) * (e as f64);
+            vecops::axpy(e / self.batch as f32, self.shard.row(r), out);
+        }
+        if self.l2 > 0.0 {
+            vecops::axpy(self.l2, x, out);
+            loss += 0.5 * self.l2 as f64 * vecops::dot(x, x);
+        }
+        loss / self.batch as f64
+    }
+
+    fn full_loss(&self, x: &[f32]) -> f64 {
+        let m = self.shard.rows();
+        let mut loss = 0.0f64;
+        for r in 0..m {
+            let e = self.residual(x, r) as f64;
+            loss += 0.5 * e * e;
+        }
+        loss / m as f64 + 0.5 * self.l2 as f64 * vecops::dot(x, x)
+    }
+
+    fn full_grad(&self, x: &[f32], out: &mut [f32]) {
+        out.fill(0.0);
+        let m = self.shard.rows();
+        for r in 0..m {
+            let e = self.residual(x, r);
+            vecops::axpy(e / m as f32, self.shard.row(r), out);
+        }
+        if self.l2 > 0.0 {
+            vecops::axpy(self.l2, x, out);
+        }
+    }
+}
+
+/// Binary logistic regression with ±1 targets:
+/// f(w) = 1/m Σ log(1 + exp(−b_r ⟨a_r, w⟩)).
+#[derive(Debug, Clone)]
+pub struct LogisticRegression {
+    pub shard: Shard,
+    pub batch: usize,
+    pub l2: f32,
+}
+
+impl LogisticRegression {
+    pub fn new(shard: Shard, batch: usize) -> LogisticRegression {
+        shard.validate();
+        assert!(
+            shard.targets.iter().all(|&t| t == 1.0 || t == -1.0),
+            "logistic targets must be ±1"
+        );
+        LogisticRegression { shard, batch, l2: 1e-4 }
+    }
+
+    /// σ(−b·⟨a,w⟩) — the weight on the gradient of one example.
+    fn margin_sigmoid(&self, x: &[f32], r: usize) -> (f32, f64) {
+        let b = self.shard.targets[r];
+        let m = b * vecops::dot(self.shard.row(r), x) as f32;
+        // Numerically stable log(1+exp(−m)) and σ(−m).
+        let loss = if m > 0.0 {
+            ((-m).exp() as f64).ln_1p()
+        } else {
+            -m as f64 + (m.exp() as f64).ln_1p()
+        };
+        let s = 1.0 / (1.0 + m.exp()); // σ(−m)
+        (b * s, loss)
+    }
+}
+
+impl GradientModel for LogisticRegression {
+    fn dim(&self) -> usize {
+        self.shard.dim
+    }
+
+    fn stoch_grad(&mut self, x: &[f32], out: &mut [f32], rng: &mut Pcg64) -> f64 {
+        out.fill(0.0);
+        let m = self.shard.rows();
+        let mut loss = 0.0f64;
+        for _ in 0..self.batch {
+            let r = rng.below(m as u64) as usize;
+            let (w, l) = self.margin_sigmoid(x, r);
+            loss += l;
+            vecops::axpy(-w / self.batch as f32, self.shard.row(r), out);
+        }
+        vecops::axpy(self.l2, x, out);
+        loss / self.batch as f64 + 0.5 * self.l2 as f64 * vecops::dot(x, x)
+    }
+
+    fn full_loss(&self, x: &[f32]) -> f64 {
+        let m = self.shard.rows();
+        let loss: f64 = (0..m).map(|r| self.margin_sigmoid(x, r).1).sum();
+        loss / m as f64 + 0.5 * self.l2 as f64 * vecops::dot(x, x)
+    }
+
+    fn full_grad(&self, x: &[f32], out: &mut [f32]) {
+        out.fill(0.0);
+        let m = self.shard.rows();
+        for r in 0..m {
+            let (w, _) = self.margin_sigmoid(x, r);
+            vecops::axpy(-w / m as f32, self.shard.row(r), out);
+        }
+        vecops::axpy(self.l2, x, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::grad_check;
+
+    fn toy_shard() -> Shard {
+        Shard {
+            dim: 3,
+            features: vec![
+                1.0, 0.0, 0.5, //
+                0.0, 1.0, -0.5, //
+                1.0, 1.0, 0.0, //
+                -1.0, 0.5, 1.0,
+            ],
+            targets: vec![1.0, -1.0, 1.0, -1.0],
+        }
+    }
+
+    #[test]
+    fn linreg_grad_check() {
+        let m = LinearRegression::new(toy_shard(), 2).with_l2(0.01);
+        grad_check(&m, &[0.2, -0.4, 0.9], 2e-3);
+    }
+
+    #[test]
+    fn logreg_grad_check() {
+        let m = LogisticRegression::new(toy_shard(), 2);
+        grad_check(&m, &[0.2, -0.4, 0.9], 2e-3);
+    }
+
+    #[test]
+    fn linreg_exact_solution_has_zero_grad() {
+        // y = 2*x0 - x1 exactly.
+        let shard = Shard {
+            dim: 2,
+            features: vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 2.0, -1.0],
+            targets: vec![2.0, -1.0, 1.0, 5.0],
+        };
+        let m = LinearRegression::new(shard, 1);
+        let mut g = vec![0.0f32; 2];
+        m.full_grad(&[2.0, -1.0], &mut g);
+        assert!(g.iter().all(|v| v.abs() < 1e-5), "{g:?}");
+        assert!(m.full_loss(&[2.0, -1.0]) < 1e-10);
+    }
+
+    #[test]
+    fn stoch_grad_unbiased_estimates_full_grad() {
+        let mut m = LinearRegression::new(toy_shard(), 1);
+        let x = [0.5f32, 0.5, -0.5];
+        let mut full = vec![0.0f32; 3];
+        m.full_grad(&x, &mut full);
+        let mut acc = vec![0.0f64; 3];
+        let mut g = vec![0.0f32; 3];
+        let mut rng = Pcg64::seed_from_u64(5);
+        let trials = 40_000;
+        for _ in 0..trials {
+            m.stoch_grad(&x, &mut g, &mut rng);
+            for (a, v) in acc.iter_mut().zip(&g) {
+                *a += *v as f64;
+            }
+        }
+        for (f, a) in full.iter().zip(&acc) {
+            assert!((a / trials as f64 - *f as f64).abs() < 0.02);
+        }
+    }
+
+    #[test]
+    fn logreg_loss_decreases_along_negative_gradient() {
+        let m = LogisticRegression::new(toy_shard(), 4);
+        let x = vec![0.1f32, 0.1, 0.1];
+        let mut g = vec![0.0f32; 3];
+        m.full_grad(&x, &mut g);
+        let mut x2 = x.clone();
+        vecops::axpy(-0.1, &g, &mut x2);
+        assert!(m.full_loss(&x2) < m.full_loss(&x));
+    }
+
+    #[test]
+    #[should_panic(expected = "±1")]
+    fn logreg_rejects_bad_targets() {
+        let mut s = toy_shard();
+        s.targets[0] = 0.5;
+        LogisticRegression::new(s, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty shard")]
+    fn rejects_empty_shard() {
+        LinearRegression::new(
+            Shard {
+                dim: 2,
+                features: vec![],
+                targets: vec![],
+            },
+            1,
+        );
+    }
+}

@@ -1,0 +1,237 @@
+//! One-hidden-layer MLP classifier with manual backprop — the non-convex
+//! stand-in for the paper's ResNet-20 in the figure benches (the theory
+//! only needs L-smoothness, which tanh + softmax-CE satisfies).
+//!
+//! Flat parameter layout (matching the paper's x ∈ R^N view and the L2
+//! transformer's flat vector): `[W1 (h×d) | b1 (h) | W2 (k×h) | b2 (k)]`,
+//! all row-major.
+
+use super::linear::Shard;
+use super::GradientModel;
+use crate::linalg::vecops;
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub shard: Shard,
+    pub hidden: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub l2: f32,
+    // Scratch buffers reused across calls (no allocation on the hot loop).
+    scratch_h: Vec<f32>,
+    scratch_p: Vec<f32>,
+}
+
+impl Mlp {
+    pub fn new(shard: Shard, hidden: usize, classes: usize, batch: usize) -> Mlp {
+        shard.validate();
+        assert!(classes >= 2);
+        assert!(shard
+            .targets
+            .iter()
+            .all(|&t| t >= 0.0 && t.fract() == 0.0 && (t as usize) < classes));
+        Mlp {
+            shard,
+            hidden,
+            classes,
+            batch,
+            l2: 1e-4,
+            scratch_h: vec![0.0; hidden],
+            scratch_p: vec![0.0; classes],
+        }
+    }
+
+    pub fn param_dim(d: usize, h: usize, k: usize) -> usize {
+        h * d + h + k * h + k
+    }
+
+    /// Xavier-style initial parameter vector (shared across nodes so all
+    /// workers start from the same x_1, as the algorithms require).
+    pub fn init_params(d: usize, h: usize, k: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed, 0x1417);
+        let n = Self::param_dim(d, h, k);
+        let mut x = vec![0.0f32; n];
+        let s1 = (2.0 / (d + h) as f32).sqrt();
+        let s2 = (2.0 / (h + k) as f32).sqrt();
+        rng.fill_normal_f32(&mut x[..h * d], 0.0, s1);
+        let w2_start = h * d + h;
+        rng.fill_normal_f32(&mut x[w2_start..w2_start + k * h], 0.0, s2);
+        x
+    }
+
+    /// Forward + backward on one example; accumulates grad into `out`
+    /// scaled by `gscale`; returns CE loss. `x` is the flat param vector.
+    fn example_grad(
+        &mut self,
+        x: &[f32],
+        row: usize,
+        out: Option<&mut [f32]>,
+        gscale: f32,
+    ) -> f64 {
+        let (d, h, k) = (self.shard.dim, self.hidden, self.classes);
+        let (w1, rest) = x.split_at(h * d);
+        let (b1, rest) = rest.split_at(h);
+        let (w2, b2) = rest.split_at(k * h);
+
+        let a = self.shard.row(row).to_vec(); // input
+        let label = self.shard.targets[row] as usize;
+
+        // Hidden: z1 = W1 a + b1; act = tanh(z1).
+        let hbuf = &mut self.scratch_h;
+        for j in 0..h {
+            hbuf[j] = (vecops::dot(&w1[j * d..(j + 1) * d], &a) as f32 + b1[j]).tanh();
+        }
+        // Logits: z2 = W2 act + b2; softmax.
+        let pbuf = &mut self.scratch_p;
+        for c in 0..k {
+            pbuf[c] = vecops::dot(&w2[c * h..(c + 1) * h], hbuf) as f32 + b2[c];
+        }
+        let maxl = pbuf.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut zsum = 0.0f64;
+        for p in pbuf.iter_mut() {
+            *p = (*p - maxl).exp();
+            zsum += *p as f64;
+        }
+        for p in pbuf.iter_mut() {
+            *p = (*p as f64 / zsum) as f32;
+        }
+        let loss = -(pbuf[label].max(1e-30) as f64).ln();
+
+        if let Some(out) = out {
+            // dL/dz2 = p − onehot(label).
+            let mut dz2 = pbuf.clone();
+            dz2[label] -= 1.0;
+            // Grad W2, b2; backprop into hidden.
+            let mut dh = vec![0.0f32; h];
+            let (gw1, grest) = out.split_at_mut(h * d);
+            let (gb1, grest) = grest.split_at_mut(h);
+            let (gw2, gb2) = grest.split_at_mut(k * h);
+            for c in 0..k {
+                let g = dz2[c] * gscale;
+                vecops::axpy(g, hbuf, &mut gw2[c * h..(c + 1) * h]);
+                gb2[c] += g;
+                vecops::axpy(dz2[c], &w2[c * h..(c + 1) * h], &mut dh);
+            }
+            // Through tanh: dz1 = dh ⊙ (1 − act²).
+            for j in 0..h {
+                let dz1 = dh[j] * (1.0 - hbuf[j] * hbuf[j]) * gscale;
+                vecops::axpy(dz1, &a, &mut gw1[j * d..(j + 1) * d]);
+                gb1[j] += dz1;
+            }
+        }
+        loss
+    }
+}
+
+impl GradientModel for Mlp {
+    fn dim(&self) -> usize {
+        Self::param_dim(self.shard.dim, self.hidden, self.classes)
+    }
+
+    fn stoch_grad(&mut self, x: &[f32], out: &mut [f32], rng: &mut Pcg64) -> f64 {
+        assert_eq!(x.len(), self.dim());
+        out.fill(0.0);
+        let m = self.shard.rows();
+        let mut loss = 0.0;
+        let scale = 1.0 / self.batch as f32;
+        for _ in 0..self.batch {
+            let r = rng.below(m as u64) as usize;
+            loss += self.example_grad(x, r, Some(out), scale);
+        }
+        vecops::axpy(self.l2, x, out);
+        loss / self.batch as f64 + 0.5 * self.l2 as f64 * vecops::dot(x, x)
+    }
+
+    fn full_loss(&self, x: &[f32]) -> f64 {
+        // `example_grad` needs &mut self for scratch; clone the scratch
+        // path cheaply by making a local mutable copy of the buffers.
+        let mut me = self.clone();
+        let m = self.shard.rows();
+        let loss: f64 = (0..m).map(|r| me.example_grad(x, r, None, 0.0)).sum();
+        loss / m as f64 + 0.5 * self.l2 as f64 * vecops::dot(x, x)
+    }
+
+    fn full_grad(&self, x: &[f32], out: &mut [f32]) {
+        let mut me = self.clone();
+        out.fill(0.0);
+        let m = self.shard.rows();
+        let scale = 1.0 / m as f32;
+        for r in 0..m {
+            me.example_grad(x, r, Some(out), scale);
+        }
+        vecops::axpy(self.l2, x, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::grad_check;
+
+    fn toy_shard() -> Shard {
+        Shard {
+            dim: 2,
+            features: vec![
+                1.0, 0.0, //
+                0.0, 1.0, //
+                -1.0, 0.0, //
+                0.0, -1.0, //
+                0.7, 0.7,
+            ],
+            targets: vec![0.0, 1.0, 2.0, 1.0, 0.0],
+        }
+    }
+
+    #[test]
+    fn param_dim_formula() {
+        assert_eq!(Mlp::param_dim(2, 4, 3), 8 + 4 + 12 + 3);
+    }
+
+    #[test]
+    fn grad_check_mlp() {
+        let m = Mlp::new(toy_shard(), 4, 3, 1);
+        let x = Mlp::init_params(2, 4, 3, 7);
+        grad_check(&m, &x, 5e-3);
+    }
+
+    #[test]
+    fn loss_is_log_k_at_init_with_zero_weights() {
+        let m = Mlp::new(toy_shard(), 4, 3, 1);
+        let x = vec![0.0f32; m.dim()];
+        let loss = m.full_loss(&x);
+        assert!((loss - (3.0f64).ln()).abs() < 1e-6, "loss {loss}");
+    }
+
+    #[test]
+    fn sgd_reduces_loss() {
+        let mut m = Mlp::new(toy_shard(), 8, 3, 5);
+        let mut x = Mlp::init_params(2, 8, 3, 11);
+        let mut rng = Pcg64::seed_from_u64(12);
+        let mut g = vec![0.0f32; m.dim()];
+        let initial = m.full_loss(&x);
+        for _ in 0..300 {
+            m.stoch_grad(&x, &mut g, &mut rng);
+            vecops::axpy(-0.5, &g, &mut x);
+        }
+        let fin = m.full_loss(&x);
+        assert!(fin < 0.5 * initial, "{initial} -> {fin}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range_labels() {
+        let mut s = toy_shard();
+        s.targets[0] = 5.0;
+        Mlp::new(s, 4, 3, 1);
+    }
+
+    #[test]
+    fn init_params_deterministic_by_seed() {
+        let a = Mlp::init_params(3, 5, 2, 9);
+        let b = Mlp::init_params(3, 5, 2, 9);
+        assert_eq!(a, b);
+        let c = Mlp::init_params(3, 5, 2, 10);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,58 @@
+//! Differentiable models for the L3-native training paths.
+//!
+//! The paper's theory is model-agnostic — it needs only L-smooth local
+//! objectives f_i with bounded gradient variance (σ within a node, ζ
+//! across nodes). For the figure-regeneration benches we therefore use
+//! fast rust-native models (quadratic, linear/logistic regression, a small
+//! MLP with manual backprop) over synthetic heterogeneous shards; the
+//! end-to-end example swaps in the JAX transformer through
+//! [`crate::runtime`] behind the same trait.
+
+pub mod linear;
+mod mlp;
+mod quadratic;
+
+pub use linear::{LinearRegression, LogisticRegression, Shard};
+pub use mlp::Mlp;
+pub use quadratic::Quadratic;
+
+use crate::util::rng::Pcg64;
+
+/// A node-local differentiable objective f_i. One instance per worker,
+/// owning that worker's data shard. `Send` so workers can move to threads.
+pub trait GradientModel: Send {
+    /// Parameter dimension N.
+    fn dim(&self) -> usize;
+
+    /// Sample a minibatch ξ and write ∇F_i(x; ξ) into `out`; returns the
+    /// minibatch loss F_i(x; ξ).
+    fn stoch_grad(&mut self, x: &[f32], out: &mut [f32], rng: &mut Pcg64) -> f64;
+
+    /// Deterministic loss f_i(x) over the full local shard.
+    fn full_loss(&self, x: &[f32]) -> f64;
+
+    /// Deterministic gradient ∇f_i(x) over the full local shard.
+    fn full_grad(&self, x: &[f32], out: &mut [f32]);
+}
+
+/// Finite-difference gradient check used by each model's tests.
+#[cfg(test)]
+pub(crate) fn grad_check<M: GradientModel>(model: &M, x: &[f32], tol: f64) {
+    let n = model.dim();
+    let mut g = vec![0.0f32; n];
+    model.full_grad(x, &mut g);
+    let eps = 1e-3f32;
+    for i in 0..n {
+        let mut xp = x.to_vec();
+        let mut xm = x.to_vec();
+        xp[i] += eps;
+        xm[i] -= eps;
+        let fd = (model.full_loss(&xp) - model.full_loss(&xm)) / (2.0 * eps as f64);
+        let err = (fd - g[i] as f64).abs() / (1.0 + fd.abs());
+        assert!(
+            err < tol,
+            "grad check failed at coord {i}: analytic {} vs fd {fd} (rel {err})",
+            g[i]
+        );
+    }
+}

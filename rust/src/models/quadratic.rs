@@ -1,0 +1,137 @@
+//! Heterogeneous quadratic objective — the analytically solvable testbed.
+//!
+//! Node i owns f_i(x) = ½‖x − c_i‖², so f(x) = (1/n)Σ f_i has the unique
+//! optimum x* = mean(c_i), L = 1, and the inter-node variation ζ² equals
+//! the variance of the centers. Stochastic gradients add N(0, σ²/N)
+//! noise per coordinate, giving exact control of the σ in Assumption 1.4.
+//! Every convergence test in the algorithm suite checks against this
+//! model's closed form.
+
+use super::GradientModel;
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct Quadratic {
+    /// Center c_i of this node's objective.
+    pub center: Vec<f32>,
+    /// Per-coordinate stochastic-gradient noise std (σ/√N per coord).
+    pub noise_std: f32,
+}
+
+impl Quadratic {
+    pub fn new(center: Vec<f32>, noise_std: f32) -> Quadratic {
+        Quadratic { center, noise_std }
+    }
+
+    /// Build one Quadratic per node with centers drawn N(0, spread²) —
+    /// `spread` directly sets ζ.
+    pub fn family(n_nodes: usize, dim: usize, spread: f32, noise_std: f32, seed: u64) -> Vec<Quadratic> {
+        (0..n_nodes)
+            .map(|i| {
+                let mut rng = Pcg64::new(seed, i as u64);
+                let mut c = vec![0.0f32; dim];
+                rng.fill_normal_f32(&mut c, 0.0, spread);
+                Quadratic::new(c, noise_std)
+            })
+            .collect()
+    }
+
+    /// The global optimum of the averaged family.
+    pub fn optimum(family: &[Quadratic]) -> Vec<f32> {
+        let dim = family[0].center.len();
+        let mut x = vec![0.0f32; dim];
+        for q in family {
+            crate::linalg::vecops::axpy(1.0, &q.center, &mut x);
+        }
+        crate::linalg::vecops::scale(1.0 / family.len() as f32, &mut x);
+        x
+    }
+}
+
+impl GradientModel for Quadratic {
+    fn dim(&self) -> usize {
+        self.center.len()
+    }
+
+    fn stoch_grad(&mut self, x: &[f32], out: &mut [f32], rng: &mut Pcg64) -> f64 {
+        assert_eq!(x.len(), self.dim());
+        for ((o, xi), ci) in out.iter_mut().zip(x).zip(&self.center) {
+            let noise = if self.noise_std > 0.0 {
+                rng.normal_with(0.0, self.noise_std as f64) as f32
+            } else {
+                0.0
+            };
+            *o = (xi - ci) + noise;
+        }
+        self.full_loss(x)
+    }
+
+    fn full_loss(&self, x: &[f32]) -> f64 {
+        0.5 * crate::linalg::vecops::dist2_sq(x, &self.center)
+    }
+
+    fn full_grad(&self, x: &[f32], out: &mut [f32]) {
+        crate::linalg::vecops::sub(x, &self.center, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::grad_check;
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let q = Quadratic::new(vec![1.0, -2.0, 0.5], 0.0);
+        grad_check(&q, &[0.3, 0.7, -1.1], 1e-3);
+    }
+
+    #[test]
+    fn optimum_is_mean_of_centers() {
+        let fam = vec![
+            Quadratic::new(vec![0.0, 2.0], 0.0),
+            Quadratic::new(vec![4.0, 0.0], 0.0),
+        ];
+        assert_eq!(Quadratic::optimum(&fam), vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn loss_zero_at_center() {
+        let q = Quadratic::new(vec![1.0, 2.0], 0.0);
+        assert_eq!(q.full_loss(&[1.0, 2.0]), 0.0);
+        assert!(q.full_loss(&[0.0, 0.0]) > 0.0);
+    }
+
+    #[test]
+    fn stoch_grad_unbiased() {
+        let mut q = Quadratic::new(vec![0.0; 4], 0.5);
+        let x = [1.0f32, -1.0, 2.0, 0.0];
+        let mut acc = vec![0.0f64; 4];
+        let trials = 20_000;
+        let mut g = vec![0.0f32; 4];
+        let mut rng = Pcg64::seed_from_u64(3);
+        for _ in 0..trials {
+            q.stoch_grad(&x, &mut g, &mut rng);
+            for (a, v) in acc.iter_mut().zip(&g) {
+                *a += *v as f64;
+            }
+        }
+        for (xi, a) in x.iter().zip(&acc) {
+            assert!((a / trials as f64 - *xi as f64).abs() < 0.02);
+        }
+    }
+
+    #[test]
+    fn family_spread_controls_zeta() {
+        let tight = Quadratic::family(8, 32, 0.1, 0.0, 1);
+        let wide = Quadratic::family(8, 32, 10.0, 0.0, 1);
+        let spread = |fam: &[Quadratic]| -> f64 {
+            let opt = Quadratic::optimum(fam);
+            fam.iter()
+                .map(|q| crate::linalg::vecops::dist2_sq(&q.center, &opt))
+                .sum::<f64>()
+                / fam.len() as f64
+        };
+        assert!(spread(&wide) > 100.0 * spread(&tight));
+    }
+}

@@ -1,0 +1,249 @@
+//! Deterministic communication cost model.
+//!
+//! The paper evaluates on 8 EC2 nodes whose links are shaped with `tc`
+//! between 1.4 Gbps/0.13 ms (native) and 5 Mbps/5 ms. Every link is
+//! identical, so epoch time decomposes exactly as
+//!
+//! `epoch = iters × (compute + comm(iter))`,
+//! `comm = rounds × latency + bytes_serialized / bandwidth`.
+//!
+//! What differs between algorithms is only (a) how many *sequential*
+//! latency-bound rounds they need and (b) how many bytes each node pushes
+//! through its NIC:
+//!
+//! - **Ring Allreduce** (centralized baseline): `2(n−1)` sequential
+//!   rounds, each moving `payload/n` per node → latency term `2(n−1)·L`,
+//!   bandwidth term `2(n−1)/n · payload / bw`.
+//! - **Decentralized gossip**: a single exchange round; each node sends
+//!   its (possibly compressed) message to `deg` neighbors through one NIC
+//!   → latency term `L`, bandwidth term `deg · message / bw`.
+//!
+//! This reproduces the paper's qualitative landscape: high latency kills
+//! Allreduce (2(n−1) rounds vs 1), low bandwidth kills full-precision
+//! (4 bytes/coord vs bits/8), and only compressed decentralized wins when
+//! both are bad (§5.3, Fig. 3).
+
+/// A homogeneous network condition (all links identical, full duplex).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkModel {
+    /// Link bandwidth in bits per second.
+    pub bandwidth_bps: f64,
+    /// One-way link latency in seconds.
+    pub latency_s: f64,
+}
+
+impl NetworkModel {
+    pub fn new(bandwidth_bps: f64, latency_s: f64) -> NetworkModel {
+        assert!(bandwidth_bps > 0.0 && latency_s >= 0.0);
+        NetworkModel {
+            bandwidth_bps,
+            latency_s,
+        }
+    }
+
+    /// Time to push `bytes` through one NIC after `rounds` sequential
+    /// latency hits.
+    pub fn transfer_time(&self, rounds: usize, bytes: f64) -> f64 {
+        rounds as f64 * self.latency_s + bytes * 8.0 / self.bandwidth_bps
+    }
+}
+
+/// The four named conditions from §5.2 plus helpers for the §5.3 sweeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetCondition {
+    /// 1.4 Gbps, 0.13 ms — the cluster's native network.
+    Best,
+    /// 1.4 Gbps, 5 ms — high latency.
+    HighLatency,
+    /// 5 Mbps, 0.13 ms — low bandwidth.
+    LowBandwidth,
+    /// 5 Mbps, 5 ms — both bad: the regime where compressed decentralized
+    /// training is claimed to win.
+    Worst,
+}
+
+impl NetCondition {
+    pub fn model(&self) -> NetworkModel {
+        match self {
+            NetCondition::Best => NetworkModel::new(1.4e9, 0.13e-3),
+            NetCondition::HighLatency => NetworkModel::new(1.4e9, 5e-3),
+            NetCondition::LowBandwidth => NetworkModel::new(5e6, 0.13e-3),
+            NetCondition::Worst => NetworkModel::new(5e6, 5e-3),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetCondition::Best => "best(1.4Gbps,0.13ms)",
+            NetCondition::HighLatency => "high_latency(1.4Gbps,5ms)",
+            NetCondition::LowBandwidth => "low_bandwidth(5Mbps,0.13ms)",
+            NetCondition::Worst => "worst(5Mbps,5ms)",
+        }
+    }
+
+    pub fn all() -> [NetCondition; 4] {
+        [
+            NetCondition::Best,
+            NetCondition::HighLatency,
+            NetCondition::LowBandwidth,
+            NetCondition::Worst,
+        ]
+    }
+}
+
+/// Per-iteration communication schedule of an algorithm: how many
+/// sequential rounds and how many bytes each node serializes through its
+/// NIC.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommSchedule {
+    pub rounds: usize,
+    pub bytes_per_node: f64,
+}
+
+impl CommSchedule {
+    /// Ring Allreduce of `payload_bytes` (the full-precision gradient)
+    /// across `n` nodes: reduce-scatter + all-gather.
+    pub fn allreduce(n: usize, payload_bytes: usize) -> CommSchedule {
+        assert!(n >= 2);
+        let rounds = 2 * (n - 1);
+        let per_round = payload_bytes as f64 / n as f64;
+        CommSchedule {
+            rounds,
+            bytes_per_node: rounds as f64 * per_round,
+        }
+    }
+
+    /// One decentralized gossip exchange: each node sends `message_bytes`
+    /// to each of `degree` neighbors (serialized through its NIC; receives
+    /// overlap sends on a full-duplex link).
+    pub fn gossip(degree: usize, message_bytes: usize) -> CommSchedule {
+        CommSchedule {
+            rounds: 1,
+            bytes_per_node: (degree * message_bytes) as f64,
+        }
+    }
+
+    /// Parameter-server style: every leaf pushes its full gradient to the
+    /// central node and pulls the model back; the hub's NIC serializes all
+    /// 2(n−1) transfers. (Provided for the centralized-topology ablation.)
+    pub fn parameter_server(n: usize, payload_bytes: usize) -> CommSchedule {
+        CommSchedule {
+            rounds: 2,
+            bytes_per_node: 2.0 * (n as f64 - 1.0) * payload_bytes as f64,
+        }
+    }
+
+    pub fn time(&self, net: &NetworkModel) -> f64 {
+        net.transfer_time(self.rounds, self.bytes_per_node)
+    }
+}
+
+/// Epoch time for an algorithm: `iters × (compute + comm)`.
+pub fn epoch_time(iters: usize, compute_per_iter_s: f64, sched: CommSchedule, net: &NetworkModel) -> f64 {
+    iters as f64 * (compute_per_iter_s + sched.time(net))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: usize = 1 << 20;
+
+    #[test]
+    fn transfer_time_closed_form() {
+        let net = NetworkModel::new(8e6, 1e-3); // 1 MB/s, 1 ms
+        // 2 rounds + 1MB → 2ms + ~1.05s
+        let t = net.transfer_time(2, MB as f64);
+        assert!((t - (2e-3 + MB as f64 * 8.0 / 8e6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allreduce_schedule_moves_2n_minus_1_over_n() {
+        let s = CommSchedule::allreduce(8, 8 * MB);
+        assert_eq!(s.rounds, 14);
+        let expect = 14.0 * (8.0 * MB as f64) / 8.0;
+        assert!((s.bytes_per_node - expect).abs() < 1.0);
+    }
+
+    #[test]
+    fn gossip_single_round() {
+        let s = CommSchedule::gossip(2, MB);
+        assert_eq!(s.rounds, 1);
+        assert_eq!(s.bytes_per_node, 2.0 * MB as f64);
+    }
+
+    #[test]
+    fn high_latency_favors_decentralized() {
+        // Paper Fig. 2(c): high latency → decentralized (1 round) beats
+        // Allreduce (14 rounds) even at full precision.
+        let net = NetCondition::HighLatency.model();
+        let payload = 4 * 1_000_000; // ~1M params fp32
+        let ar = CommSchedule::allreduce(8, payload).time(&net);
+        let gossip = CommSchedule::gossip(2, payload).time(&net);
+        assert!(gossip < ar, "gossip {gossip} vs allreduce {ar}");
+    }
+
+    #[test]
+    fn low_bandwidth_favors_compression() {
+        // Paper Fig. 2(d): low bandwidth → 8-bit decentralized beats
+        // full-precision decentralized by ~4x on the wire.
+        let net = NetCondition::LowBandwidth.model();
+        let fp = CommSchedule::gossip(2, 4 * 1_000_000).time(&net);
+        let q8 = CommSchedule::gossip(2, 1_004_096).time(&net);
+        assert!(q8 < fp / 3.0, "q8 {q8} vs fp {fp}");
+    }
+
+    #[test]
+    fn best_network_everything_similar() {
+        // Paper Fig. 2(b): on the native network comm is negligible next
+        // to compute. ResNet-20 is ~0.27M params ≈ 1.1 MB fp32.
+        let net = NetCondition::Best.model();
+        let compute = 50e-3; // 50 ms/iter on a K80
+        let payload = 4 * 270_000;
+        let ar = CommSchedule::allreduce(8, payload).time(&net);
+        let gossip = CommSchedule::gossip(2, payload).time(&net);
+        assert!(ar < compute * 0.6, "allreduce {ar} not << compute");
+        assert!(gossip < compute * 0.6, "gossip {gossip} not << compute");
+    }
+
+    #[test]
+    fn full_precision_gossip_no_advantage_at_low_latency_low_bw() {
+        // Paper Fig. 3(a) note: at low latency, full-precision
+        // decentralized exchanges the same volume as Allreduce → no win.
+        let net = NetworkModel::new(5e6, 0.13e-3);
+        let payload = 4 * 1_000_000;
+        let ar = CommSchedule::allreduce(8, payload).time(&net);
+        let gossip = CommSchedule::gossip(2, payload).time(&net);
+        let ratio = gossip / ar;
+        assert!(
+            (0.8..1.5).contains(&ratio),
+            "volumes should be comparable, ratio {ratio}"
+        );
+    }
+
+    #[test]
+    fn epoch_time_scales_with_iters() {
+        let net = NetCondition::Best.model();
+        let s = CommSchedule::gossip(2, MB);
+        let e1 = epoch_time(10, 0.01, s, &net);
+        let e2 = epoch_time(20, 0.01, s, &net);
+        assert!((e2 - 2.0 * e1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn conditions_have_expected_ordering() {
+        let payload = 4 * 1_000_000;
+        let t = |c: NetCondition| CommSchedule::allreduce(8, payload).time(&c.model());
+        assert!(t(NetCondition::Best) < t(NetCondition::HighLatency));
+        assert!(t(NetCondition::Best) < t(NetCondition::LowBandwidth));
+        assert!(t(NetCondition::Worst) >= t(NetCondition::LowBandwidth));
+        assert!(t(NetCondition::Worst) >= t(NetCondition::HighLatency));
+    }
+
+    #[test]
+    fn parameter_server_hub_bound() {
+        let s = CommSchedule::parameter_server(8, MB);
+        assert_eq!(s.rounds, 2);
+        assert_eq!(s.bytes_per_node, 14.0 * MB as f64);
+    }
+}

@@ -1,0 +1,17 @@
+//! Network modelling and transport.
+//!
+//! Two halves:
+//! - [`cost`] — a deterministic bandwidth/latency cost model replicating
+//!   the paper's `tc`-shaped EC2 testbed (§5.1). Figures 2(b–d) and 3 are
+//!   pure communication accounting; this module provides the closed forms.
+//! - [`transport`] — an in-process message-passing fabric (per-node
+//!   mailboxes over `std::sync::mpsc`) over which the coordinator runs the
+//!   algorithms *actually decentralized*: worker threads exchange real
+//!   compressed [`crate::compression::Wire`] messages with no shared
+//!   model state.
+
+pub mod cost;
+pub mod transport;
+
+pub use cost::{CommSchedule, NetCondition, NetworkModel};
+pub use transport::{Endpoint, Message, Transport};

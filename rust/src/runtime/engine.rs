@@ -1,0 +1,197 @@
+//! The PJRT execution engine: compile each HLO-text artifact once on the
+//! CPU client, then execute from the training loop with plain slices in
+//! and out. Mirrors /opt/xla-example/load_hlo.
+
+use super::manifest::Manifest;
+use std::path::Path;
+
+/// Output of one fused DCD-PSGD local step (dcd_step.hlo.txt).
+#[derive(Debug, Clone)]
+pub struct DcdStepOut {
+    pub loss: f32,
+    /// x_{t+1} (padded dim).
+    pub x_new: Vec<f32>,
+    /// Quantization levels of z_t — integer-valued f32 in [0, 2^bits−1].
+    pub levels: Vec<f32>,
+    /// Per-chunk scales.
+    pub scales: Vec<f32>,
+}
+
+pub struct PjrtEngine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    grad_step: xla::PjRtLoadedExecutable,
+    dcd_step: Option<xla::PjRtLoadedExecutable>,
+    quantize: Option<xla::PjRtLoadedExecutable>,
+    gossip: Option<xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: the PJRT CPU client is thread-compatible (PJRT's C API contract:
+// concurrent Execute calls are allowed; the CPU client synchronizes
+// internally). We additionally only ever drive one engine from one thread
+// at a time in this codebase (the e2e driver is single-threaded and the
+// coordinator gives each worker its own engine).
+unsafe impl Send for PjrtEngine {}
+
+impl PjrtEngine {
+    /// Compile all artifacts found in `dir` (grad_step is required, the
+    /// rest optional so targeted tests can ship minimal artifact sets).
+    pub fn load(dir: &Path) -> anyhow::Result<PjrtEngine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |name: &str| -> anyhow::Result<xla::PjRtLoadedExecutable> {
+            let path = manifest.artifact_path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let grad_step = compile("grad_step")?;
+        let dcd_step = compile("dcd_step").ok();
+        let quantize = compile("quantize8").ok();
+        let gossip = compile("gossip").ok();
+        Ok(PjrtEngine {
+            manifest,
+            client,
+            grad_step,
+            dcd_step,
+            quantize,
+            gossip,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn lit_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    fn lit_i32(data: &[i32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    /// (loss, grads) = grad_step(params, tokens). `tokens` is row-major
+    /// (batch, seq_len + 1).
+    pub fn grad_step(&self, params: &[f32], tokens: &[i32]) -> anyhow::Result<(f32, Vec<f32>)> {
+        let m = &self.manifest;
+        anyhow::ensure!(params.len() == m.param_count, "params len");
+        anyhow::ensure!(
+            tokens.len() == m.batch * (m.seq_len + 1),
+            "tokens len {} != {}x{}",
+            tokens.len(),
+            m.batch,
+            m.seq_len + 1
+        );
+        let p = Self::lit_f32(params, &[m.param_count as i64])?;
+        let t = Self::lit_i32(tokens, &[m.batch as i64, (m.seq_len + 1) as i64])?;
+        let result = self.grad_step.execute::<xla::Literal>(&[p, t])?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 2, "grad_step returned {} outputs", parts.len());
+        let loss = parts[0].to_vec::<f32>()?[0];
+        let grads = parts[1].to_vec::<f32>()?;
+        Ok((loss, grads))
+    }
+
+    /// The fused DCD-PSGD local step. All vectors use the padded dim.
+    pub fn dcd_step(
+        &self,
+        x: &[f32],
+        neighbors: &[f32], // (degree, padded_dim) row-major
+        weights: &[f32],   // (degree + 1), self first
+        gamma: f32,
+        tokens: &[i32],
+        seed: i32,
+    ) -> anyhow::Result<DcdStepOut> {
+        let exe = self
+            .dcd_step
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("dcd_step artifact not loaded"))?;
+        let m = &self.manifest;
+        anyhow::ensure!(x.len() == m.padded_dim, "x len");
+        anyhow::ensure!(neighbors.len() == m.degree * m.padded_dim, "neighbors len");
+        anyhow::ensure!(weights.len() == m.degree + 1, "weights len");
+        let args = [
+            Self::lit_f32(x, &[m.padded_dim as i64])?,
+            Self::lit_f32(neighbors, &[m.degree as i64, m.padded_dim as i64])?,
+            Self::lit_f32(weights, &[(m.degree + 1) as i64])?,
+            Self::lit_f32(&[gamma], &[1])?,
+            Self::lit_i32(tokens, &[m.batch as i64, (m.seq_len + 1) as i64])?,
+            Self::lit_i32(&[seed], &[1])?,
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (loss, x_new, levels, scales) = {
+            let mut parts = result.to_tuple()?;
+            anyhow::ensure!(parts.len() == 4, "dcd_step returned {} outputs", parts.len());
+            let scales = parts.pop().unwrap().to_vec::<f32>()?;
+            let levels = parts.pop().unwrap().to_vec::<f32>()?;
+            let x_new = parts.pop().unwrap().to_vec::<f32>()?;
+            let loss = parts.pop().unwrap().to_vec::<f32>()?[0];
+            (loss, x_new, levels, scales)
+        };
+        Ok(DcdStepOut {
+            loss,
+            x_new,
+            levels,
+            scales,
+        })
+    }
+
+    /// (levels, scales) = quantize8(z, seed); z has the padded dim.
+    pub fn quantize(&self, z: &[f32], seed: i32) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let exe = self
+            .quantize
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("quantize8 artifact not loaded"))?;
+        let m = &self.manifest;
+        anyhow::ensure!(z.len() == m.padded_dim, "z len");
+        let args = [
+            Self::lit_f32(z, &[m.padded_dim as i64])?,
+            Self::lit_i32(&[seed], &[1])?,
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (levels, scales) = result.to_tuple2()?;
+        Ok((levels.to_vec::<f32>()?, scales.to_vec::<f32>()?))
+    }
+
+    /// x_half = gossip(x, neighbors, weights, gamma, grad).
+    pub fn gossip(
+        &self,
+        x: &[f32],
+        neighbors: &[f32],
+        weights: &[f32],
+        gamma: f32,
+        grad: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let exe = self
+            .gossip
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("gossip artifact not loaded"))?;
+        let m = &self.manifest;
+        let args = [
+            Self::lit_f32(x, &[m.padded_dim as i64])?,
+            Self::lit_f32(neighbors, &[m.degree as i64, m.padded_dim as i64])?,
+            Self::lit_f32(weights, &[(m.degree + 1) as i64])?,
+            Self::lit_f32(&[gamma], &[1])?,
+            Self::lit_f32(grad, &[m.padded_dim as i64])?,
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Dequantize levels/scales the same way the kernel does:
+    /// v = (q/(2^bits − 1)·2 − 1)·scale per chunk (0 where scale == 0).
+    /// Used by workers to apply a received wire message to a replica.
+    pub fn dequantize_levels(&self, levels: &[f32], scales: &[f32], out: &mut [f32]) {
+        let m = &self.manifest;
+        let lm1 = ((1u32 << m.bits) - 1) as f32;
+        for (ci, chunk) in out.chunks_mut(m.chunk).enumerate() {
+            let s = scales[ci];
+            for (o, &q) in chunk.iter_mut().zip(&levels[ci * m.chunk..]) {
+                *o = if s == 0.0 { 0.0 } else { (q / lm1 * 2.0 - 1.0) * s };
+            }
+        }
+    }
+}

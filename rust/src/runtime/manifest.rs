@@ -1,0 +1,138 @@
+//! `artifacts/manifest.json` — the AOT contract written by
+//! `python/compile/aot.py`: model configuration, flat-parameter layout,
+//! and the artifact file list with baked input shapes.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub param_count: usize,
+    pub padded_dim: usize,
+    pub nchunks: usize,
+    pub chunk: usize,
+    pub batch: usize,
+    pub degree: usize,
+    pub bits: u8,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub artifact_files: Vec<(String, String)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("reading manifest in {}: {e}", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let need =
+            |key: &str| -> anyhow::Result<&Json> { j.get(key).ok_or_else(|| anyhow::anyhow!("manifest missing '{key}'")) };
+        let usize_of = |v: &Json, key: &str| -> anyhow::Result<usize> {
+            v.as_usize().ok_or_else(|| anyhow::anyhow!("manifest field '{key}' not a usize"))
+        };
+        let model = need("model")?;
+        let artifacts = need("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("artifacts not an object"))?;
+        let artifact_files = artifacts
+            .iter()
+            .map(|(name, v)| {
+                let file = v
+                    .get("file")
+                    .and_then(|f| f.as_str())
+                    .unwrap_or_default()
+                    .to_string();
+                (name.clone(), file)
+            })
+            .collect();
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            param_count: usize_of(need("param_count")?, "param_count")?,
+            padded_dim: usize_of(need("padded_dim")?, "padded_dim")?,
+            nchunks: usize_of(need("nchunks")?, "nchunks")?,
+            chunk: usize_of(need("chunk")?, "chunk")?,
+            batch: usize_of(need("batch")?, "batch")?,
+            degree: usize_of(need("degree")?, "degree")?,
+            bits: usize_of(need("bits")?, "bits")? as u8,
+            vocab: usize_of(
+                model.get("vocab").ok_or_else(|| anyhow::anyhow!("model.vocab"))?,
+                "vocab",
+            )?,
+            seq_len: usize_of(
+                model
+                    .get("seq_len")
+                    .ok_or_else(|| anyhow::anyhow!("model.seq_len"))?,
+                "seq_len",
+            )?,
+            artifact_files,
+        })
+    }
+
+    pub fn artifact_path(&self, name: &str) -> anyhow::Result<PathBuf> {
+        self.artifact_files
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, f)| self.dir.join(f))
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Read `init_params.f32` (little-endian f32 dump of the shared x₁).
+    pub fn load_init_params(&self) -> anyhow::Result<Vec<f32>> {
+        let raw = std::fs::read(self.dir.join("init_params.f32"))?;
+        anyhow::ensure!(
+            raw.len() == 4 * self.param_count,
+            "init_params.f32 has {} bytes, expected {}",
+            raw.len(),
+            4 * self.param_count
+        );
+        Ok(raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_fixture(dir: &Path) {
+        let manifest = r#"{
+            "model": {"vocab": 64, "d_model": 32, "n_layers": 2, "n_heads": 2, "d_ff": 64, "seq_len": 16},
+            "param_count": 100, "padded_dim": 1024, "nchunks": 1, "chunk": 1024,
+            "batch": 2, "degree": 2, "bits": 8,
+            "artifacts": {"grad_step": {"file": "grad_step.hlo.txt", "inputs": [[100],[2,17]], "hlo_bytes": 5}}
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let mut f = std::fs::File::create(dir.join("init_params.f32")).unwrap();
+        for i in 0..100 {
+            f.write_all(&(i as f32).to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn parses_fixture() {
+        let dir = std::env::temp_dir().join(format!("decomp_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.param_count, 100);
+        assert_eq!(m.padded_dim, 1024);
+        assert_eq!(m.vocab, 64);
+        assert_eq!(m.seq_len, 16);
+        assert_eq!(m.bits, 8);
+        assert!(m.artifact_path("grad_step").unwrap().ends_with("grad_step.hlo.txt"));
+        assert!(m.artifact_path("nope").is_err());
+        let params = m.load_init_params().unwrap();
+        assert_eq!(params.len(), 100);
+        assert_eq!(params[7], 7.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        let dir = std::env::temp_dir().join("decomp_missing_manifest");
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from the rust hot path. Python never runs at training
+//! time — the `.hlo.txt` files plus `manifest.json` are the entire
+//! contract between the layers.
+
+mod engine;
+mod jax_model;
+mod manifest;
+
+pub use engine::{DcdStepOut, PjrtEngine};
+pub use jax_model::{JaxLm, TokenSampler};
+pub use manifest::Manifest;

@@ -1,0 +1,318 @@
+//! Undirected connected graphs over worker nodes.
+
+use crate::util::rng::Pcg64;
+
+/// Named topology families. `Ring` with n=8/16 is the paper's testbed;
+/// the others support the ablation benches (spectral gap vs compression
+/// tolerance) and future-work experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Every node talks to every other node (ρ = 0 with uniform weights).
+    FullyConnected,
+    /// Cycle: each node has exactly 2 neighbors (the paper's setup).
+    Ring,
+    /// Path graph: like ring minus one edge; worst-case spectral gap.
+    Chain,
+    /// One hub connected to all leaves (centralized-like communication).
+    Star,
+    /// 2-D torus on an r×c grid (n = r*c, degree 4; r,c ≥ 3 so the four
+    /// neighbor offsets stay distinct).
+    Torus2d { rows: usize, cols: usize },
+    /// d-dimensional hypercube (n = 2^d, degree d).
+    Hypercube,
+    /// Erdős–Rényi G(n, p), resampled until connected (seeded).
+    Random { p_percent: u8, seed: u64 },
+}
+
+impl Topology {
+    pub fn name(&self) -> String {
+        match self {
+            Topology::FullyConnected => "fully_connected".into(),
+            Topology::Ring => "ring".into(),
+            Topology::Chain => "chain".into(),
+            Topology::Star => "star".into(),
+            Topology::Torus2d { rows, cols } => format!("torus_{rows}x{cols}"),
+            Topology::Hypercube => "hypercube".into(),
+            Topology::Random { p_percent, seed } => format!("random_p{p_percent}_s{seed}"),
+        }
+    }
+}
+
+/// Adjacency-list graph. Neighbor lists are sorted and never include the
+/// node itself.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    pub n: usize,
+    pub neighbors: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    pub fn build(topo: Topology, n: usize) -> Graph {
+        assert!(n >= 2, "need at least 2 nodes, got {n}");
+        let mut g = match topo {
+            Topology::FullyConnected => Self::fully_connected(n),
+            Topology::Ring => Self::ring(n),
+            Topology::Chain => Self::chain(n),
+            Topology::Star => Self::star(n),
+            Topology::Torus2d { rows, cols } => {
+                assert_eq!(rows * cols, n, "torus {rows}x{cols} != n={n}");
+                assert!(rows >= 3 && cols >= 3, "torus needs rows,cols >= 3");
+                Self::torus(rows, cols)
+            }
+            Topology::Hypercube => {
+                assert!(n.is_power_of_two(), "hypercube needs n = 2^d, got {n}");
+                Self::hypercube(n)
+            }
+            Topology::Random { p_percent, seed } => Self::random(n, p_percent as f64 / 100.0, seed),
+        };
+        for nbrs in &mut g.neighbors {
+            nbrs.sort_unstable();
+            nbrs.dedup();
+        }
+        debug_assert!(g.is_connected());
+        g
+    }
+
+    fn empty(n: usize) -> Graph {
+        Graph {
+            n,
+            neighbors: vec![Vec::new(); n],
+        }
+    }
+
+    fn add_edge(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        if !self.neighbors[a].contains(&b) {
+            self.neighbors[a].push(b);
+            self.neighbors[b].push(a);
+        }
+    }
+
+    fn fully_connected(n: usize) -> Graph {
+        let mut g = Self::empty(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                g.add_edge(i, j);
+            }
+        }
+        g
+    }
+
+    fn ring(n: usize) -> Graph {
+        let mut g = Self::empty(n);
+        for i in 0..n {
+            g.add_edge(i, (i + 1) % n);
+        }
+        g
+    }
+
+    fn chain(n: usize) -> Graph {
+        let mut g = Self::empty(n);
+        for i in 0..n - 1 {
+            g.add_edge(i, i + 1);
+        }
+        g
+    }
+
+    fn star(n: usize) -> Graph {
+        let mut g = Self::empty(n);
+        for i in 1..n {
+            g.add_edge(0, i);
+        }
+        g
+    }
+
+    fn torus(rows: usize, cols: usize) -> Graph {
+        let n = rows * cols;
+        let mut g = Self::empty(n);
+        let id = |r: usize, c: usize| r * cols + c;
+        for r in 0..rows {
+            for c in 0..cols {
+                g.add_edge(id(r, c), id((r + 1) % rows, c));
+                g.add_edge(id(r, c), id(r, (c + 1) % cols));
+            }
+        }
+        g
+    }
+
+    fn hypercube(n: usize) -> Graph {
+        let mut g = Self::empty(n);
+        let d = n.trailing_zeros();
+        for i in 0..n {
+            for b in 0..d {
+                g.add_edge(i, i ^ (1 << b));
+            }
+        }
+        g
+    }
+
+    fn random(n: usize, p: f64, seed: u64) -> Graph {
+        let mut rng = Pcg64::new(seed, 0x70b0);
+        for _attempt in 0..1000 {
+            let mut g = Self::empty(n);
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if rng.bernoulli(p) {
+                        g.add_edge(i, j);
+                    }
+                }
+            }
+            if g.is_connected() {
+                return g;
+            }
+        }
+        // Extremely sparse p: fall back to a ring so callers always get a
+        // connected graph (documented behaviour, deterministic).
+        Self::ring(n)
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.neighbors[i].len()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|i| self.degree(i)).max().unwrap_or(0)
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.neighbors.iter().map(|v| v.len()).sum::<usize>() / 2
+    }
+
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = stack.pop() {
+            for &v in &self.neighbors[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    stack.push(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// True iff the adjacency relation is symmetric and irreflexive.
+    pub fn is_valid_undirected(&self) -> bool {
+        for (i, nbrs) in self.neighbors.iter().enumerate() {
+            for &j in nbrs {
+                if j == i || j >= self.n || !self.neighbors[j].contains(&i) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_structure() {
+        let g = Graph::build(Topology::Ring, 8);
+        assert_eq!(g.edge_count(), 8);
+        for i in 0..8 {
+            assert_eq!(g.degree(i), 2);
+            assert!(g.neighbors[i].contains(&((i + 1) % 8)));
+            assert!(g.neighbors[i].contains(&((i + 7) % 8)));
+        }
+    }
+
+    #[test]
+    fn ring_of_two_has_single_edge() {
+        let g = Graph::build(Topology::Ring, 2);
+        assert_eq!(g.edge_count(), 1);
+        assert_eq!(g.degree(0), 1);
+    }
+
+    #[test]
+    fn fully_connected_structure() {
+        let g = Graph::build(Topology::FullyConnected, 5);
+        assert_eq!(g.edge_count(), 10);
+        assert!((0..5).all(|i| g.degree(i) == 4));
+    }
+
+    #[test]
+    fn chain_endpoints() {
+        let g = Graph::build(Topology::Chain, 6);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(5), 1);
+        assert_eq!(g.degree(2), 2);
+        assert_eq!(g.edge_count(), 5);
+    }
+
+    #[test]
+    fn star_hub() {
+        let g = Graph::build(Topology::Star, 7);
+        assert_eq!(g.degree(0), 6);
+        assert!((1..7).all(|i| g.degree(i) == 1));
+    }
+
+    #[test]
+    fn torus_degree_four() {
+        let g = Graph::build(Topology::Torus2d { rows: 3, cols: 4 }, 12);
+        assert!((0..12).all(|i| g.degree(i) == 4));
+        assert_eq!(g.edge_count(), 24);
+    }
+
+    #[test]
+    fn hypercube_degree_log_n() {
+        let g = Graph::build(Topology::Hypercube, 16);
+        assert!((0..16).all(|i| g.degree(i) == 4));
+    }
+
+    #[test]
+    fn random_connected_and_valid() {
+        for seed in 0..5 {
+            let g = Graph::build(Topology::Random { p_percent: 30, seed }, 12);
+            assert!(g.is_connected());
+            assert!(g.is_valid_undirected());
+        }
+    }
+
+    #[test]
+    fn random_sparse_falls_back_connected() {
+        let g = Graph::build(Topology::Random { p_percent: 0, seed: 1 }, 6);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn all_topologies_valid() {
+        let topos = [
+            (Topology::Ring, 8),
+            (Topology::FullyConnected, 8),
+            (Topology::Chain, 8),
+            (Topology::Star, 8),
+            (Topology::Torus2d { rows: 3, cols: 3 }, 9),
+            (Topology::Hypercube, 8),
+            (Topology::Random { p_percent: 50, seed: 3 }, 8),
+        ];
+        for (t, n) in topos {
+            let g = Graph::build(t, n);
+            assert!(g.is_connected(), "{t:?}");
+            assert!(g.is_valid_undirected(), "{t:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn hypercube_rejects_non_power_of_two() {
+        Graph::build(Topology::Hypercube, 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn torus_rejects_size_mismatch() {
+        Graph::build(Topology::Torus2d { rows: 3, cols: 3 }, 12);
+    }
+}

@@ -1,0 +1,220 @@
+//! Doubly stochastic mixing matrices over a graph, with spectral stats.
+
+use super::graph::Graph;
+use crate::linalg::eig::{spectral_stats, SpectralStats};
+use crate::linalg::mat::Mat;
+
+/// A symmetric doubly stochastic mixing matrix W bound to its graph,
+/// together with the spectral quantities the paper's theory uses.
+#[derive(Debug, Clone)]
+pub struct MixingMatrix {
+    pub w: Mat,
+    pub graph: Graph,
+    pub stats: SpectralStats,
+    /// W_ii and the per-neighbor weights, cached in the layout the
+    /// algorithms consume: for node i, `weights[i][k]` pairs with
+    /// `graph.neighbors[i][k]`, and `self_weight[i]` is W_ii.
+    pub self_weight: Vec<f32>,
+    pub neighbor_weights: Vec<Vec<f32>>,
+}
+
+impl MixingMatrix {
+    fn from_w(w: Mat, graph: Graph) -> MixingMatrix {
+        debug_assert!(is_doubly_stochastic(&w, 1e-9));
+        let stats = spectral_stats(&w);
+        let n = graph.n;
+        let self_weight: Vec<f32> = (0..n).map(|i| w[(i, i)] as f32).collect();
+        let neighbor_weights: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                graph.neighbors[i]
+                    .iter()
+                    .map(|&j| w[(i, j)] as f32)
+                    .collect()
+            })
+            .collect();
+        MixingMatrix {
+            w,
+            graph,
+            stats,
+            self_weight,
+            neighbor_weights,
+        }
+    }
+
+    /// Uniform weights — valid only for regular graphs.
+    pub fn uniform(graph: Graph) -> MixingMatrix {
+        let w = uniform_neighbor_weights(&graph);
+        Self::from_w(w, graph)
+    }
+
+    /// Metropolis–Hastings weights — valid for any connected graph.
+    pub fn metropolis(graph: Graph) -> MixingMatrix {
+        let w = metropolis_weights(&graph);
+        Self::from_w(w, graph)
+    }
+
+    /// The maximal unbiased-compression signal-to-noise ratio α that
+    /// Theorem 1 admits for DCD-PSGD on this matrix:
+    /// α < (1−ρ) / (2µ)  ⇔  (1−ρ)² − 4µ²α² > 0.
+    pub fn dcd_alpha_bound(&self) -> f64 {
+        if self.stats.mu == 0.0 {
+            f64::INFINITY
+        } else {
+            self.stats.gap / (2.0 * self.stats.mu)
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.graph.n
+    }
+}
+
+/// W_ij = 1/(deg+1) on edges and the diagonal. Doubly stochastic iff the
+/// graph is regular; panics otherwise (use `metropolis_weights`).
+pub fn uniform_neighbor_weights(graph: &Graph) -> Mat {
+    let n = graph.n;
+    let d0 = graph.degree(0);
+    assert!(
+        (0..n).all(|i| graph.degree(i) == d0),
+        "uniform weights require a regular graph; use metropolis_weights"
+    );
+    let mut w = Mat::zeros(n, n);
+    let wgt = 1.0 / (d0 as f64 + 1.0);
+    for i in 0..n {
+        w[(i, i)] = wgt;
+        for &j in &graph.neighbors[i] {
+            w[(i, j)] = wgt;
+        }
+    }
+    w
+}
+
+/// Metropolis–Hastings weights: W_ij = 1/(1+max(d_i,d_j)) on edges,
+/// diagonal absorbs the slack. Symmetric doubly stochastic on any graph.
+pub fn metropolis_weights(graph: &Graph) -> Mat {
+    let n = graph.n;
+    let mut w = Mat::zeros(n, n);
+    for i in 0..n {
+        for &j in &graph.neighbors[i] {
+            w[(i, j)] = 1.0 / (1.0 + graph.degree(i).max(graph.degree(j)) as f64);
+        }
+    }
+    for i in 0..n {
+        let off: f64 = (0..n).filter(|&j| j != i).map(|j| w[(i, j)]).sum();
+        w[(i, i)] = 1.0 - off;
+    }
+    w
+}
+
+/// Check W = Wᵀ, W·1 = 1, 1ᵀ·W = 1ᵀ, W_ij ≥ 0 allowed to be slightly
+/// negative only within `tol` (Metropolis diagonals are ≥ 0 by
+/// construction; uniform too).
+pub fn is_doubly_stochastic(w: &Mat, tol: f64) -> bool {
+    if !w.is_symmetric(tol) {
+        return false;
+    }
+    let n = w.rows;
+    for i in 0..n {
+        let row_sum: f64 = w.row(i).iter().sum();
+        if (row_sum - 1.0).abs() > tol {
+            return false;
+        }
+        if w.row(i).iter().any(|&x| x < -tol) {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::graph::Topology;
+
+    #[test]
+    fn ring8_uniform_matches_paper_setup() {
+        let g = Graph::build(Topology::Ring, 8);
+        let m = MixingMatrix::uniform(g);
+        assert!(is_doubly_stochastic(&m.w, 1e-12));
+        // Each row: 1/3 self + two 1/3 neighbors.
+        assert!((m.w[(0, 0)] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((m.w[(0, 1)] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((m.w[(0, 7)] - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.w[(0, 2)], 0.0);
+        // Spectrum of the circulant: (1 + 2cos(2πk/8))/3.
+        let expect_rho = (1.0 + 2.0 * (std::f64::consts::TAU / 8.0).cos()) / 3.0;
+        assert!((m.stats.rho - expect_rho).abs() < 1e-9, "{}", m.stats.rho);
+        assert!(m.stats.gap > 0.0);
+    }
+
+    #[test]
+    fn fully_connected_has_zero_rho() {
+        let g = Graph::build(Topology::FullyConnected, 6);
+        let m = MixingMatrix::uniform(g);
+        // W = (1/n) 11^T → all non-leading eigenvalues are 0.
+        assert!(m.stats.rho.abs() < 1e-9);
+        assert!((m.stats.mu - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metropolis_on_star_is_doubly_stochastic() {
+        let g = Graph::build(Topology::Star, 9);
+        let m = MixingMatrix::metropolis(g);
+        assert!(is_doubly_stochastic(&m.w, 1e-12));
+        assert!(m.stats.rho < 1.0);
+    }
+
+    #[test]
+    fn metropolis_on_chain_is_doubly_stochastic() {
+        let g = Graph::build(Topology::Chain, 10);
+        let m = MixingMatrix::metropolis(g);
+        assert!(is_doubly_stochastic(&m.w, 1e-12));
+        assert!(m.stats.rho < 1.0);
+        assert!(m.stats.gap > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "regular")]
+    fn uniform_rejects_irregular_graph() {
+        let g = Graph::build(Topology::Star, 5);
+        uniform_neighbor_weights(&g);
+    }
+
+    #[test]
+    fn bigger_ring_smaller_gap() {
+        let m8 = MixingMatrix::uniform(Graph::build(Topology::Ring, 8));
+        let m16 = MixingMatrix::uniform(Graph::build(Topology::Ring, 16));
+        // Paper §4.2: spectral gap decreases with more workers.
+        assert!(m16.stats.gap < m8.stats.gap);
+    }
+
+    #[test]
+    fn dcd_alpha_bound_positive_and_gap_scaled() {
+        let m = MixingMatrix::uniform(Graph::build(Topology::Ring, 8));
+        let bound = m.dcd_alpha_bound();
+        assert!(bound > 0.0 && bound.is_finite());
+        assert!((bound - m.stats.gap / (2.0 * m.stats.mu)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cached_weights_match_matrix() {
+        let g = Graph::build(Topology::Ring, 8);
+        let m = MixingMatrix::uniform(g);
+        for i in 0..8 {
+            assert!((m.self_weight[i] as f64 - m.w[(i, i)]).abs() < 1e-7);
+            for (k, &j) in m.graph.neighbors[i].iter().enumerate() {
+                assert!((m.neighbor_weights[i][k] as f64 - m.w[(i, j)]).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn rows_of_w_1_equals_1() {
+        for topo in [Topology::Ring, Topology::Hypercube, Topology::FullyConnected] {
+            let m = MixingMatrix::uniform(Graph::build(topo, 8));
+            let ones = vec![1.0; 8];
+            let y = m.w.matvec(&ones);
+            assert!(y.iter().all(|v| (v - 1.0).abs() < 1e-12));
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Communication topologies and doubly stochastic mixing matrices.
+//!
+//! D-PSGD-family algorithms are parameterized by a symmetric doubly
+//! stochastic matrix W over a connected graph (Assumption 1.2–1.3). This
+//! module builds the graphs the paper and its follow-ups use (ring of 8/16
+//! nodes, etc.), converts them to mixing matrices, and exposes their
+//! spectral statistics (ρ, µ) which gate DCD-PSGD's admissible compression
+//! level via (1−ρ)² − 4µ²α² > 0.
+
+mod graph;
+mod mixing;
+
+pub use graph::{Graph, Topology};
+pub use mixing::{is_doubly_stochastic, metropolis_weights, uniform_neighbor_weights, MixingMatrix};

@@ -1,0 +1,9 @@
+//! Zero-dependency substrates: PRNG, JSON, CLI parsing, statistics, and a
+//! property-testing mini-framework (the offline environment has no rand /
+//! serde / clap / proptest).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,324 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline dependency universe has no `rand` crate, so we implement a
+//! small, fast, reproducible PRNG from scratch: PCG64 (Melissa O'Neill's
+//! permuted congruential generator, the `pcg_xsl_rr_128_64` variant), plus
+//! the distributions the training stack needs (uniform, normal via
+//! Box–Muller, Bernoulli, shuffles).
+//!
+//! Determinism matters here beyond tests: Assumption 1.5 of the paper
+//! requires compression noise *independent across nodes and time*, which we
+//! get by deriving per-(node, iteration) streams from a root seed with
+//! `Pcg64::split`.
+
+/// PCG64: 128-bit LCG state, XSL-RR output permutation to 64 bits.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id. Different stream ids
+    /// yield statistically independent sequences for the same seed.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        // SplitMix64-expand the two u64s into 128-bit state/increment so
+        // that nearby seeds do not produce correlated streams.
+        let mut sm = SplitMix64::new(seed ^ 0x9e3779b97f4a7c15);
+        let s0 = sm.next() as u128;
+        let s1 = sm.next() as u128;
+        let mut sm2 = SplitMix64::new(stream.wrapping_mul(0xbf58476d1ce4e5b9) ^ 0x94d049bb133111eb);
+        let i0 = sm2.next() as u128;
+        let i1 = sm2.next() as u128;
+        let mut rng = Pcg64 {
+            state: (s0 << 64) | s1,
+            inc: (((i0 << 64) | i1) << 1) | 1, // must be odd
+        };
+        // Decorrelate from the seeding arithmetic.
+        rng.next_u64();
+        rng.next_u64();
+        rng
+    }
+
+    /// Convenience: stream 0.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive an independent child generator. Used to give each
+    /// (node, iteration) its own compression-noise stream.
+    pub fn split(&self, tag: u64) -> Pcg64 {
+        // Child seed mixes the parent's *current* state with the tag, so
+        // splits at different times are distinct.
+        let s = (self.state >> 64) as u64 ^ (self.state as u64);
+        Pcg64::new(s ^ tag.wrapping_mul(0xd1342543de82ef95), tag ^ 0xda3e39cb94b95bdb)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        // XSL-RR: xor high and low halves, rotate by the top 6 bits.
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, bound) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (cached second value).
+    pub fn normal(&mut self) -> f64 {
+        // Non-cached variant: simple and branch-predictable enough for our
+        // data-generation paths (not on the training hot loop).
+        let mut u1 = self.f64();
+        if u1 <= f64::MIN_POSITIVE {
+            u1 = f64::MIN_POSITIVE;
+        }
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// N(mean, std^2).
+    #[inline]
+    pub fn normal_with(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Fill a slice with N(mean, std^2) f32 values.
+    pub fn fill_normal_f32(&mut self, out: &mut [f32], mean: f32, std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal_with(mean as f64, std as f64) as f32;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        let n = xs.len();
+        if n < 2 {
+            return;
+        }
+        for i in (1..n).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (k <= n), in random order.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        // Partial Fisher–Yates: only the first k positions matter.
+        for i in 0..k {
+            let j = i + self.below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// SplitMix64 — used only for seeding PCG64.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Pcg64::new(42, 7);
+        let mut b = Pcg64::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_streams_differ() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2, "streams nearly identical ({same}/64 equal)");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seed_from_u64(1);
+        let mut b = Pcg64::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::seed_from_u64(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Pcg64::seed_from_u64(4);
+        for _ in 0..10_000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut r = Pcg64::seed_from_u64(5);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_and_in_range() {
+        let mut r = Pcg64::seed_from_u64(6);
+        let bound = 10u64;
+        let mut counts = [0usize; 10];
+        let n = 100_000;
+        for _ in 0..n {
+            let x = r.below(bound);
+            assert!(x < bound);
+            counts[x as usize] += 1;
+        }
+        let expected = n as f64 / bound as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expected).abs() < 0.05 * expected,
+                "bucket {i}: {c} vs {expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seed_from_u64(7);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Pcg64::seed_from_u64(8);
+        let n = 100_000;
+        let hits = (0..n).filter(|_| r.bernoulli(0.3)).count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.01, "rate={rate}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seed_from_u64(9);
+        let mut xs: Vec<u32> = (0..1000).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..1000).collect::<Vec<u32>>());
+        assert_ne!(xs, (0..1000).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Pcg64::seed_from_u64(10);
+        let idx = r.sample_indices(100, 30);
+        assert_eq!(idx.len(), 30);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 30);
+        assert!(s.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let root = Pcg64::seed_from_u64(11);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn split_is_deterministic() {
+        let root = Pcg64::seed_from_u64(12);
+        let mut a = root.split(5);
+        let mut b = root.split(5);
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+}

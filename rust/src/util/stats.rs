@@ -1,0 +1,157 @@
+//! Summary statistics over measurement series: used by the bench harness
+//! and the experiment drivers (loss curves, timing distributions).
+
+/// Basic summary of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of on empty slice");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median: percentile_sorted(&sorted, 0.5),
+            p95: percentile_sorted(&sorted, 0.95),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice, q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Exponential moving average of a series (smoothing for loss curves).
+pub fn ema(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = None;
+    for &x in xs {
+        let v = match acc {
+            None => x,
+            Some(prev) => alpha * x + (1.0 - alpha) * prev,
+        };
+        out.push(v);
+        acc = Some(v);
+    }
+    out
+}
+
+/// Downsample a series to at most `k` evenly spaced points (keeps first and
+/// last). Used when logging long loss curves.
+pub fn downsample(xs: &[f64], k: usize) -> Vec<(usize, f64)> {
+    assert!(k >= 2);
+    if xs.len() <= k {
+        return xs.iter().copied().enumerate().collect();
+    }
+    let mut out = Vec::with_capacity(k);
+    for j in 0..k {
+        let i = j * (xs.len() - 1) / (k - 1);
+        out.push((i, xs[i]));
+    }
+    out.dedup_by_key(|p| p.0);
+    out
+}
+
+/// Ordinary least squares slope of y against x (for convergence-rate fits).
+pub fn ols_slope(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let cov: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let var: f64 = x.iter().map(|a| (a - mx).powi(2)).sum();
+    cov / var
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.std - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single_point() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.median, 7.0);
+        assert_eq!(s.p95, 7.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 0.95) - 9.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_smooths() {
+        let out = ema(&[0.0, 1.0, 1.0, 1.0], 0.5);
+        assert_eq!(out[0], 0.0);
+        assert!((out[1] - 0.5).abs() < 1e-12);
+        assert!(out[3] > out[1] && out[3] < 1.0);
+    }
+
+    #[test]
+    fn downsample_keeps_endpoints() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let d = downsample(&xs, 5);
+        assert_eq!(d.first().unwrap().0, 0);
+        assert_eq!(d.last().unwrap().0, 99);
+        assert!(d.len() <= 5);
+    }
+
+    #[test]
+    fn downsample_short_series_identity() {
+        let xs = [1.0, 2.0, 3.0];
+        let d = downsample(&xs, 10);
+        assert_eq!(d, vec![(0, 1.0), (1, 2.0), (2, 3.0)]);
+    }
+
+    #[test]
+    fn ols_slope_linear() {
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 * v + 1.0).collect();
+        assert!((ols_slope(&x, &y) - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,204 @@
+//! End-to-end integration: full training runs through the public API
+//! (TrainConfig → threaded coordinator), covering every algorithm ×
+//! model × topology combination at small scale, plus failure-injection
+//! checks on the config surface.
+
+use decomp::algorithms::{self, RunOpts};
+use decomp::coordinator::{run_threaded, TrainConfig};
+
+fn run_cfg(cfg: &TrainConfig) -> anyhow::Result<(f64, f64)> {
+    let algo_cfg = cfg.build_algo_config()?;
+    let (models, x0) = cfg.build_models()?;
+    let (eval, _) = cfg.build_models()?;
+    let run = run_threaded(&cfg.algo, &algo_cfg, models, &x0, cfg.gamma, cfg.iters)?;
+    let mean = run.mean_params();
+    let init: f64 = eval.iter().map(|m| m.full_loss(&x0)).sum::<f64>() / eval.len() as f64;
+    let fin: f64 = eval.iter().map(|m| m.full_loss(&mean)).sum::<f64>() / eval.len() as f64;
+    Ok((init, fin))
+}
+
+#[test]
+fn all_algorithms_train_logistic_on_ring() {
+    for algo in ["dpsgd", "dcd", "ecd", "naive", "allreduce"] {
+        let cfg = TrainConfig {
+            algo: algo.into(),
+            n_nodes: 6,
+            iters: 200,
+            gamma: 0.05,
+            dim: 32,
+            rows_per_node: 64,
+            ..Default::default()
+        };
+        let (init, fin) = run_cfg(&cfg).unwrap();
+        assert!(
+            fin < 0.8 * init,
+            "{algo}: expected progress, {init} -> {fin}"
+        );
+    }
+}
+
+#[test]
+fn all_models_train_with_dcd_q8() {
+    for model in ["quadratic", "linear", "logistic", "mlp"] {
+        let cfg = TrainConfig {
+            algo: "dcd".into(),
+            model: model.into(),
+            n_nodes: 4,
+            iters: 150,
+            gamma: if model == "mlp" { 0.1 } else { 0.05 },
+            dim: 16,
+            rows_per_node: 64,
+            batch: 4,
+            ..Default::default()
+        };
+        let (init, fin) = run_cfg(&cfg).unwrap();
+        assert!(
+            fin < init,
+            "{model}: expected progress, {init} -> {fin}"
+        );
+    }
+}
+
+#[test]
+fn all_topologies_train_with_ecd_q8() {
+    for (topo, n) in [("ring", 8), ("full", 8), ("chain", 6), ("star", 6), ("hypercube", 8)] {
+        let cfg = TrainConfig {
+            algo: "ecd".into(),
+            topology: topo.into(),
+            n_nodes: n,
+            iters: 200,
+            gamma: 0.05,
+            dim: 32,
+            rows_per_node: 64,
+            ..Default::default()
+        };
+        let (init, fin) = run_cfg(&cfg).unwrap();
+        assert!(fin < init, "{topo}: {init} -> {fin}");
+    }
+}
+
+#[test]
+fn simulator_and_coordinator_agree_through_public_config() {
+    let cfg = TrainConfig {
+        algo: "dcd".into(),
+        n_nodes: 5,
+        iters: 30,
+        gamma: 0.05,
+        dim: 24,
+        rows_per_node: 32,
+        ..Default::default()
+    };
+    // Simulator path.
+    let algo_cfg = cfg.build_algo_config().unwrap();
+    let (mut sim_models, x0) = cfg.build_models().unwrap();
+    let mut sim = algorithms::from_name(&cfg.algo, algo_cfg, &x0, cfg.n_nodes).unwrap();
+    for _ in 0..cfg.iters {
+        sim.step(&mut sim_models, cfg.gamma);
+    }
+    // Threaded path (fresh but identical config).
+    let algo_cfg2 = cfg.build_algo_config().unwrap();
+    let (thr_models, _) = cfg.build_models().unwrap();
+    let run = run_threaded(&cfg.algo, &algo_cfg2, thr_models, &x0, cfg.gamma, cfg.iters).unwrap();
+    for (a, b) in sim.params().iter().zip(run.final_params()) {
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}
+
+#[test]
+fn trace_driver_reports_monotone_bytes_and_time() {
+    let cfg = TrainConfig {
+        algo: "dcd".into(),
+        iters: 60,
+        ..Default::default()
+    };
+    let algo_cfg = cfg.build_algo_config().unwrap();
+    let (mut models, x0) = cfg.build_models().unwrap();
+    let mut algo = algorithms::from_name(&cfg.algo, algo_cfg, &x0, cfg.n_nodes).unwrap();
+    let trace = algorithms::run_training(
+        algo.as_mut(),
+        &mut models,
+        &RunOpts {
+            iters: 60,
+            gamma: 0.05,
+            eval_every: 20,
+            net: Some(decomp::network::cost::NetworkModel::new(1e8, 1e-3)),
+            compute_per_iter_s: 0.01,
+            decay_tau: None,
+        },
+    );
+    for w in trace.points.windows(2) {
+        assert!(w[1].bytes_sent > w[0].bytes_sent);
+        assert!(w[1].sim_time_s > w[0].sim_time_s);
+        assert!(w[1].iter > w[0].iter);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Failure injection: bad configs fail loudly, never silently.
+
+#[test]
+fn bad_algorithm_name_fails() {
+    let cfg = TrainConfig {
+        algo: "sgd9000".into(),
+        ..Default::default()
+    };
+    let algo_cfg = cfg.build_algo_config().unwrap();
+    let (models, x0) = cfg.build_models().unwrap();
+    assert!(run_threaded("sgd9000", &algo_cfg, models, &x0, 0.1, 5).is_err());
+}
+
+#[test]
+fn bad_compressor_fails() {
+    let cfg = TrainConfig {
+        compressor: "zstd".into(),
+        ..Default::default()
+    };
+    assert!(cfg.build_algo_config().is_err());
+}
+
+#[test]
+fn bad_topology_fails() {
+    let cfg = TrainConfig {
+        topology: "smallworld".into(),
+        ..Default::default()
+    };
+    assert!(cfg.build_mixing().is_err());
+}
+
+#[test]
+fn hypercube_with_non_power_of_two_panics() {
+    let cfg = TrainConfig {
+        topology: "hypercube".into(),
+        n_nodes: 6,
+        ..Default::default()
+    };
+    assert!(std::panic::catch_unwind(|| cfg.build_mixing()).is_err());
+}
+
+#[test]
+fn model_count_mismatch_fails() {
+    let cfg = TrainConfig::default();
+    let algo_cfg = cfg.build_algo_config().unwrap();
+    let (mut models, x0) = cfg.build_models().unwrap();
+    models.pop(); // one model short
+    assert!(run_threaded("dcd", &algo_cfg, models, &x0, 0.1, 5).is_err());
+}
+
+#[test]
+fn config_file_round_trip_via_cli_surface() {
+    // Write a config file, load it, train 20 iters — exercises the same
+    // path as `decomp train --config ...`.
+    let path = std::env::temp_dir().join(format!("decomp_e2e_{}.json", std::process::id()));
+    std::fs::write(
+        &path,
+        r#"{"algo":"ecd","n_nodes":4,"compressor":"q8","iters":20,"gamma":0.05,"dim":16,"rows_per_node":32}"#,
+    )
+    .unwrap();
+    let cfg = decomp::config::load_config(&path).unwrap();
+    assert_eq!(cfg.algo, "ecd");
+    let (init, fin) = run_cfg(&cfg).unwrap();
+    assert!(fin <= init);
+    std::fs::remove_file(path).ok();
+}

@@ -1,0 +1,205 @@
+//! Integration tests over the real PJRT runtime: load the AOT artifacts,
+//! execute grad_step / dcd_step / quantize from rust, and cross-check the
+//! numerics against invariants the python test suite pinned.
+//!
+//! Skipped (with a notice) when `artifacts/` has not been built — run
+//! `make artifacts` first.
+
+use decomp::runtime::{JaxLm, PjrtEngine, TokenSampler};
+use decomp::models::GradientModel;
+use decomp::util::rng::Pcg64;
+use std::path::Path;
+use std::sync::Arc;
+
+fn engine() -> Option<Arc<PjrtEngine>> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(PjrtEngine::load(&dir).expect("engine load")))
+}
+
+#[test]
+fn engine_loads_and_reports_cpu() {
+    let Some(e) = engine() else { return };
+    assert!(e.platform().to_lowercase().contains("cpu") || !e.platform().is_empty());
+    assert!(e.manifest.param_count > 0);
+    assert_eq!(e.manifest.padded_dim % e.manifest.chunk, 0);
+}
+
+#[test]
+fn grad_step_loss_near_log_vocab_at_init() {
+    let Some(e) = engine() else { return };
+    let params = e.manifest.load_init_params().expect("init params");
+    let sampler = TokenSampler {
+        vocab: e.manifest.vocab as i32,
+        seq_len: e.manifest.seq_len,
+        batch: e.manifest.batch,
+        node: 0,
+    };
+    let mut rng = Pcg64::seed_from_u64(1);
+    let tokens = sampler.sample(&mut rng);
+    let (loss, grads) = e.grad_step(&params, &tokens).expect("grad_step");
+    let expect = (e.manifest.vocab as f64).ln();
+    assert!(
+        (loss as f64 - expect).abs() < 1.0,
+        "init loss {loss} vs ln(V) {expect}"
+    );
+    assert_eq!(grads.len(), e.manifest.param_count);
+    let gnorm = decomp::linalg::vecops::norm2(&grads);
+    assert!(gnorm.is_finite() && gnorm > 1e-4, "grad norm {gnorm}");
+}
+
+#[test]
+fn grad_step_is_deterministic() {
+    let Some(e) = engine() else { return };
+    let params = e.manifest.load_init_params().unwrap();
+    let sampler = TokenSampler {
+        vocab: e.manifest.vocab as i32,
+        seq_len: e.manifest.seq_len,
+        batch: e.manifest.batch,
+        node: 0,
+    };
+    let mut rng = Pcg64::seed_from_u64(2);
+    let tokens = sampler.sample(&mut rng);
+    let (l1, g1) = e.grad_step(&params, &tokens).unwrap();
+    let (l2, g2) = e.grad_step(&params, &tokens).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(g1, g2);
+}
+
+#[test]
+fn sgd_on_pjrt_reduces_loss() {
+    let Some(e) = engine() else { return };
+    let mut params = e.manifest.load_init_params().unwrap();
+    let sampler = TokenSampler {
+        vocab: e.manifest.vocab as i32,
+        seq_len: e.manifest.seq_len,
+        batch: e.manifest.batch,
+        node: 0,
+    };
+    let mut rng = Pcg64::seed_from_u64(3);
+    // Overfit one fixed batch — a guaranteed descent direction check.
+    let t0 = sampler.sample(&mut rng);
+    let (l0, _) = e.grad_step(&params, &t0).unwrap();
+    for _ in 0..10 {
+        let (_, g) = e.grad_step(&params, &t0).unwrap();
+        decomp::linalg::vecops::axpy(-0.2, &g, &mut params);
+    }
+    let (l1, _) = e.grad_step(&params, &t0).unwrap();
+    assert!(l1 < l0 - 0.1, "loss should drop: {l0} -> {l1}");
+}
+
+#[test]
+fn quantize_artifact_matches_rust_dequant_contract() {
+    let Some(e) = engine() else { return };
+    let m = &e.manifest;
+    let mut rng = Pcg64::seed_from_u64(4);
+    let mut z = vec![0.0f32; m.padded_dim];
+    rng.fill_normal_f32(&mut z, 0.0, 0.1);
+    let (levels, scales) = e.quantize(&z, 42).expect("quantize");
+    assert_eq!(levels.len(), m.padded_dim);
+    assert_eq!(scales.len(), m.nchunks);
+    let lm1 = ((1u32 << m.bits) - 1) as f32;
+    assert!(levels.iter().all(|&q| (0.0..=lm1).contains(&q) && q.fract() == 0.0));
+    // Dequantize on the rust side: error bounded by one step per chunk.
+    let mut out = vec![0.0f32; m.padded_dim];
+    e.dequantize_levels(&levels, &scales, &mut out);
+    for (ci, chunk) in z.chunks(m.chunk).enumerate() {
+        let step = 2.0 * scales[ci] / lm1;
+        for (a, b) in chunk.iter().zip(&out[ci * m.chunk..]) {
+            assert!((a - b).abs() <= step + 1e-5, "{a} vs {b} (step {step})");
+        }
+    }
+}
+
+#[test]
+fn gossip_artifact_matches_rust_vecops() {
+    let Some(e) = engine() else { return };
+    let m = &e.manifest;
+    let n = m.padded_dim;
+    let mut rng = Pcg64::seed_from_u64(5);
+    let mut x = vec![0.0f32; n];
+    let mut nbrs = vec![0.0f32; m.degree * n];
+    let mut grad = vec![0.0f32; n];
+    rng.fill_normal_f32(&mut x, 0.0, 1.0);
+    rng.fill_normal_f32(&mut nbrs, 0.0, 1.0);
+    rng.fill_normal_f32(&mut grad, 0.0, 1.0);
+    let w = vec![1.0 / 3.0; m.degree + 1];
+    let gamma = 0.1f32;
+    let out = e.gossip(&x, &nbrs, &w, gamma, &grad).expect("gossip");
+    // Rust reference.
+    let mut expect = vec![0.0f32; n];
+    let mut cols: Vec<&[f32]> = vec![&x];
+    for d in 0..m.degree {
+        cols.push(&nbrs[d * n..(d + 1) * n]);
+    }
+    decomp::linalg::vecops::weighted_sum(&w, &cols, &mut expect);
+    decomp::linalg::vecops::axpy(-gamma, &grad, &mut expect);
+    for (a, b) in out.iter().zip(&expect) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn fused_dcd_step_consistent_with_parts() {
+    let Some(e) = engine() else { return };
+    let m = &e.manifest;
+    let n = m.padded_dim;
+    let params = e.manifest.load_init_params().unwrap();
+    let mut x = vec![0.0f32; n];
+    x[..m.param_count].copy_from_slice(&params);
+    // Neighbors = x plus small perturbations.
+    let mut rng = Pcg64::seed_from_u64(6);
+    let mut nbrs = vec![0.0f32; m.degree * n];
+    for d in 0..m.degree {
+        let row = &mut nbrs[d * n..(d + 1) * n];
+        row.copy_from_slice(&x);
+        for v in row.iter_mut() {
+            *v += rng.normal_with(0.0, 1e-3) as f32;
+        }
+    }
+    let w = vec![1.0 / 3.0; m.degree + 1];
+    let sampler = TokenSampler {
+        vocab: m.vocab as i32,
+        seq_len: m.seq_len,
+        batch: m.batch,
+        node: 0,
+    };
+    let tokens = sampler.sample(&mut rng);
+    let out = e
+        .dcd_step(&x, &nbrs, &w, 0.1, &tokens, 7)
+        .expect("dcd_step");
+    assert!(out.loss.is_finite());
+    assert_eq!(out.x_new.len(), n);
+    assert_eq!(out.levels.len(), n);
+    assert_eq!(out.scales.len(), m.nchunks);
+    // x_new = x + dequant(levels, scales) — exactly (kernel semantics).
+    let mut cz = vec![0.0f32; n];
+    e.dequantize_levels(&out.levels, &out.scales, &mut cz);
+    for i in 0..n {
+        let expect = x[i] + cz[i];
+        assert!(
+            (out.x_new[i] - expect).abs() < 1e-5,
+            "i={i}: {} vs {expect}",
+            out.x_new[i]
+        );
+    }
+}
+
+#[test]
+fn jaxlm_gradient_model_contract() {
+    let Some(e) = engine() else { return };
+    let mut lm = JaxLm::new(e.clone(), 0, 0xee);
+    assert_eq!(lm.dim(), e.manifest.param_count);
+    let params = e.manifest.load_init_params().unwrap();
+    let mut g = vec![0.0f32; lm.dim()];
+    let mut rng = Pcg64::seed_from_u64(7);
+    let loss = lm.stoch_grad(&params, &mut g, &mut rng);
+    assert!(loss.is_finite() && loss > 0.0);
+    let full = lm.full_loss(&params);
+    assert!(full.is_finite() && full > 0.0);
+    // full_loss is deterministic.
+    assert_eq!(full, lm.full_loss(&params));
+}

@@ -1,0 +1,374 @@
+//! Property-based tests over the library's core invariants, using the
+//! in-tree mini-framework (`decomp::util::prop`) — randomized inputs,
+//! deterministic seeds, failure cases reported by seed.
+
+use decomp::algorithms::{self, consensus_distance, AlgoConfig};
+use decomp::compression::{
+    from_name, Compressor, Identity, RandomSparsifier, StochasticQuantizer,
+};
+use decomp::linalg::eig::{spectral_stats, symmetric_eigen};
+use decomp::linalg::mat::Mat;
+use decomp::linalg::vecops;
+use decomp::models::{GradientModel, Quadratic};
+use decomp::topology::{is_doubly_stochastic, Graph, MixingMatrix, Topology};
+use decomp::util::prop::{check, Gen};
+use decomp::util::rng::Pcg64;
+use std::sync::Arc;
+
+const CASES: u64 = 40;
+
+fn random_topology(g: &mut Gen) -> (Topology, usize) {
+    match g.usize_in(0, 5) {
+        0 => (Topology::Ring, g.usize_in(3, 20)),
+        1 => (Topology::FullyConnected, g.usize_in(2, 12)),
+        2 => (Topology::Chain, g.usize_in(2, 16)),
+        3 => (Topology::Star, g.usize_in(3, 16)),
+        4 => {
+            let r = g.usize_in(3, 4);
+            let c = g.usize_in(3, 4);
+            (Topology::Torus2d { rows: r, cols: c }, r * c)
+        }
+        _ => (
+            Topology::Random {
+                p_percent: g.usize_in(20, 80) as u8,
+                seed: g.rng.next_u64(),
+            },
+            g.usize_in(4, 14),
+        ),
+    }
+}
+
+fn build_mixing(topo: Topology, n: usize) -> MixingMatrix {
+    let graph = Graph::build(topo, n);
+    let d0 = graph.degree(0);
+    let regular = (0..graph.n).all(|i| graph.degree(i) == d0);
+    if regular {
+        MixingMatrix::uniform(graph)
+    } else {
+        MixingMatrix::metropolis(graph)
+    }
+}
+
+#[test]
+fn prop_graphs_connected_and_symmetric() {
+    check("graphs connected+symmetric", CASES, |g| {
+        let (topo, n) = random_topology(g);
+        let graph = Graph::build(topo, n);
+        assert!(graph.is_connected());
+        assert!(graph.is_valid_undirected());
+        assert_eq!(graph.n, n);
+    });
+}
+
+#[test]
+fn prop_mixing_matrices_doubly_stochastic_with_rho_below_one() {
+    check("mixing doubly stochastic, rho<1", CASES, |g| {
+        let (topo, n) = random_topology(g);
+        let m = build_mixing(topo, n);
+        assert!(is_doubly_stochastic(&m.w, 1e-9));
+        assert!(m.stats.rho < 1.0 - 1e-9, "rho {} for {:?}", m.stats.rho, topo);
+        assert!(m.stats.gap > 0.0);
+        assert!(m.dcd_alpha_bound() > 0.0);
+    });
+}
+
+#[test]
+fn prop_eigensolver_reconstructs_matrix() {
+    check("eigensolver A = V Λ V^T", CASES, |g| {
+        let n = g.usize_in(2, 8);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = g.f64_in(-2.0, 2.0);
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        let e = symmetric_eigen(&a);
+        let mut lam = Mat::zeros(n, n);
+        for i in 0..n {
+            lam[(i, i)] = e.values[i];
+        }
+        let rebuilt = e.vectors.matmul(&lam).matmul(&e.vectors.transpose());
+        assert!(
+            rebuilt.max_abs_diff(&a) < 1e-8,
+            "reconstruction error {}",
+            rebuilt.max_abs_diff(&a)
+        );
+    });
+}
+
+#[test]
+fn prop_spectral_stats_bounded() {
+    check("spectral invariants of doubly stochastic W", CASES, |g| {
+        let (topo, n) = random_topology(g);
+        let graph = Graph::build(topo, n);
+        let d0 = graph.degree(0);
+        let regular = (0..graph.n).all(|i| graph.degree(i) == d0);
+        let w = if regular {
+            decomp::topology::uniform_neighbor_weights(&graph)
+        } else {
+            decomp::topology::metropolis_weights(&graph)
+        };
+        let s = spectral_stats(&w);
+        // Eigenvalues of a symmetric doubly stochastic matrix lie in
+        // [-1, 1] with λ₁ = 1; µ = max |λᵢ − 1| ≤ 2.
+        assert!(s.lambda2 <= 1.0 + 1e-9);
+        assert!(s.lambda_n >= -1.0 - 1e-9);
+        assert!(s.mu <= 2.0 + 1e-9);
+        assert!((0.0..=1.0 + 1e-9).contains(&s.rho));
+    });
+}
+
+#[test]
+fn prop_quantizer_roundtrip_error_bounded() {
+    check("quantizer |C(z)-z| <= step", CASES, |g| {
+        let bits = *g.choose(&[1u8, 2, 3, 4, 6, 8]);
+        let chunk = *g.choose(&[64usize, 256, 1024]);
+        let q = StochasticQuantizer::with_chunk(bits, chunk);
+        let scale_mag = g.f32_in(0.01, 100.0);
+        let z = g.vec_f32(1, 3000, scale_mag);
+        let mut out = vec![0.0f32; z.len()];
+        q.apply(&z, &mut g.rng.split(7), &mut out);
+        let lm1 = ((1u32 << bits) - 1) as f64;
+        for (ci, c) in z.chunks(chunk).enumerate() {
+            let scale = vecops::max_abs(c) as f64;
+            let step = 2.0 * scale / lm1;
+            for (a, b) in c.iter().zip(&out[ci * chunk..]) {
+                assert!(
+                    ((a - b).abs() as f64) <= step + 1e-4 * scale.max(1.0),
+                    "bits={bits} chunk={chunk}: |{a}-{b}| > {step}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_wire_bytes_matches_actual_payload() {
+    check("wire_bytes accounting exact for deterministic codecs", CASES, |g| {
+        let z = g.vec_f32(1, 5000, 1.0);
+        let mut rng = g.rng.split(3);
+        for name in ["fp32", "q8", "q4", "q1", "topk_10"] {
+            let c = from_name(name).unwrap();
+            let w = c.compress(&z, &mut rng);
+            assert_eq!(w.bytes(), c.wire_bytes(z.len()), "{name} at n={}", z.len());
+        }
+        // Sparsifier is stochastic: expected size within 30% for n ≥ 500.
+        if z.len() >= 500 {
+            let s = RandomSparsifier::new(0.25);
+            let w = s.compress(&z, &mut rng);
+            let expect = s.wire_bytes(z.len()) as f64;
+            assert!(
+                (w.bytes() as f64 - expect).abs() < 0.3 * expect,
+                "sparse: {} vs {expect}",
+                w.bytes()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_identity_bitwise_roundtrip() {
+    check("identity codec roundtrips bitwise incl. specials", CASES, |g| {
+        let mut z = g.vec_f32(1, 200, 1e20);
+        let n = z.len();
+        z[0] = 0.0;
+        if n > 1 {
+            z[n / 2] = f32::MIN_POSITIVE;
+        }
+        let w = Identity.compress(&z, &mut g.rng.split(1));
+        let mut out = vec![0.0f32; z.len()];
+        Identity.decompress(&w, &mut out);
+        for (a, b) in z.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    });
+}
+
+#[test]
+fn prop_gossip_preserves_mean_any_topology() {
+    check("gossip preserves the mean (1ᵀW = 1ᵀ)", CASES, |g| {
+        let (topo, n) = random_topology(g);
+        let mixing = Arc::new(build_mixing(topo, n));
+        let dim = g.usize_in(1, 32);
+        let fam: Vec<Quadratic> = (0..n)
+            .map(|_| Quadratic::new(g.vec_f32(dim, dim, 1.0), 0.0))
+            .collect();
+        let mut models: Vec<Box<dyn GradientModel>> = fam
+            .into_iter()
+            .map(|q| Box::new(q) as Box<dyn GradientModel>)
+            .collect();
+        let x0 = g.vec_f32(dim, dim, 1.0);
+        let cfg = AlgoConfig {
+            mixing,
+            compressor: Arc::new(Identity),
+            seed: g.rng.next_u64(),
+        };
+        let mut a = algorithms::from_name("dpsgd", cfg, &x0, n).unwrap();
+        let mut mean_before = vec![0.0f32; dim];
+        a.mean_params(&mut mean_before);
+        // γ=0 steps are pure gossip — the mean is invariant (1ᵀW = 1ᵀ).
+        for _ in 0..3 {
+            a.step(&mut models, 0.0);
+        }
+        let mut mean_after = vec![0.0f32; dim];
+        a.mean_params(&mut mean_after);
+        for (x, y) in mean_before.iter().zip(&mean_after) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    });
+}
+
+#[test]
+fn prop_pure_gossip_contracts_consensus() {
+    check("repeated mixing contracts consensus distance", CASES / 2, |g| {
+        let (topo, n) = random_topology(g);
+        if n < 3 {
+            return;
+        }
+        let mixing = Arc::new(build_mixing(topo, n));
+        let dim = 8;
+        let zero_fam: Vec<Quadratic> =
+            (0..n).map(|_| Quadratic::new(vec![0.0; dim], 0.0)).collect();
+        let mut models: Vec<Box<dyn GradientModel>> = zero_fam
+            .into_iter()
+            .map(|q| Box::new(q) as Box<dyn GradientModel>)
+            .collect();
+        let cfg = AlgoConfig {
+            mixing,
+            compressor: Arc::new(Identity),
+            seed: 1,
+        };
+        let x0 = vec![0.0f32; dim];
+        let mut a = algorithms::from_name("dpsgd", cfg, &x0, n).unwrap();
+        // Kick nodes apart: one step toward distinct random centers.
+        let fam2: Vec<Quadratic> = (0..n)
+            .map(|_| Quadratic::new(g.vec_f32(dim, dim, 5.0), 0.0))
+            .collect();
+        let mut kick: Vec<Box<dyn GradientModel>> = fam2
+            .into_iter()
+            .map(|q| Box::new(q) as Box<dyn GradientModel>)
+            .collect();
+        a.step(&mut kick, 1.0);
+        let mut prev = consensus_distance(a.params());
+        for _ in 0..5 {
+            a.step(&mut models, 0.0);
+            let cur = consensus_distance(a.params());
+            assert!(cur <= prev * (1.0 + 1e-5) + 1e-12, "{cur} > {prev}");
+            prev = cur;
+        }
+    });
+}
+
+#[test]
+fn prop_dcd_fp32_equals_dpsgd_all_topologies() {
+    check("DCD with identity codec ≡ D-PSGD", CASES / 2, |g| {
+        let (topo, n) = random_topology(g);
+        let mixing = Arc::new(build_mixing(topo, n));
+        let dim = g.usize_in(2, 24);
+        let seed = g.rng.next_u64();
+        let mk_models = |s: u64| -> Vec<Box<dyn GradientModel>> {
+            (0..n)
+                .map(|i| {
+                    let mut r = Pcg64::new(s, i as u64);
+                    let mut c = vec![0.0f32; dim];
+                    r.fill_normal_f32(&mut c, 0.0, 1.0);
+                    Box::new(Quadratic::new(c, 0.2)) as Box<dyn GradientModel>
+                })
+                .collect()
+        };
+        let x0 = vec![0.0f32; dim];
+        let mk_cfg = || AlgoConfig {
+            mixing: mixing.clone(),
+            compressor: Arc::new(Identity),
+            seed,
+        };
+        let mut dcd = algorithms::from_name("dcd", mk_cfg(), &x0, n).unwrap();
+        let mut dp = algorithms::from_name("dpsgd", mk_cfg(), &x0, n).unwrap();
+        let mut m1 = mk_models(seed ^ 1);
+        let mut m2 = mk_models(seed ^ 1);
+        for _ in 0..10 {
+            dcd.step(&mut m1, 0.1);
+            dp.step(&mut m2, 0.1);
+        }
+        for (a, b) in dcd.params().iter().zip(dp.params()) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_bitpack_roundtrip_random_widths() {
+    check("bit packer roundtrips random streams", CASES, |g| {
+        use decomp::compression::{BitReader, BitWriter};
+        let count = g.usize_in(1, 500);
+        let mut widths = Vec::with_capacity(count);
+        let mut values = Vec::with_capacity(count);
+        let mut w = BitWriter::new();
+        for _ in 0..count {
+            let width = g.usize_in(1, 32) as u32;
+            let max = if width == 32 { u32::MAX } else { (1u32 << width) - 1 };
+            let v = (g.rng.next_u64() as u32) & max;
+            w.push(v, width);
+            widths.push(width);
+            values.push(v);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for (width, v) in widths.iter().zip(&values) {
+            assert_eq!(r.read(*width), *v);
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    check("json parse(to_string(v)) == v", CASES, |g| {
+        use decomp::util::json::Json;
+        fn random_json(g: &mut Gen, depth: usize) -> Json {
+            match if depth > 2 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+                3 => Json::Str(format!("s{}_\"q\"\n", g.usize_in(0, 999))),
+                4 => Json::Arr(
+                    (0..g.usize_in(0, 4))
+                        .map(|_| random_json(g, depth + 1))
+                        .collect(),
+                ),
+                _ => Json::Obj(
+                    (0..g.usize_in(0, 4))
+                        .map(|i| (format!("k{i}"), random_json(g, depth + 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = random_json(g, 0);
+        let s = v.to_string();
+        let parsed = Json::parse(&s).unwrap_or_else(|e| panic!("parse '{s}': {e}"));
+        assert_eq!(parsed, v);
+        let pretty = v.to_pretty();
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+    });
+}
+
+#[test]
+fn prop_vecops_linearity() {
+    check("axpby linearity & dot symmetry", CASES, |g| {
+        let n = g.usize_in(1, 300);
+        let a = g.vec_f32(n, n, 1.0);
+        let b = g.vec_f32(n, n, 1.0);
+        assert!((vecops::dot(&a, &b) - vecops::dot(&b, &a)).abs() < 1e-6);
+        let alpha = g.f32_in(-2.0, 2.0);
+        let mut y = b.clone();
+        vecops::axpby(alpha, &a, 0.0, &mut y);
+        for (yi, ai) in y.iter().zip(&a) {
+            assert!((yi - alpha * ai).abs() < 1e-5);
+        }
+        let nrm = vecops::norm2(&a);
+        assert!((nrm * nrm - vecops::dot(&a, &a)).abs() < 1e-3 * (1.0 + nrm * nrm));
+    });
+}
