@@ -1,8 +1,13 @@
-//! Bench: regenerate Figure 3 (a–d) — epoch time vs bandwidth and
-//! latency for the three implementations (pure cost model; deterministic).
+//! Bench: regenerate Figure 3 — epoch time vs bandwidth and latency for
+//! the three implementations (closed-form cost model), plus the measured
+//! large-n ring sweep on the discrete-event engine (n up to 64).
 
 fn main() {
-    for t in decomp::experiments::fig3::run(false) {
+    println!(
+        "fig3 network sweep (experiment backend: {})\n",
+        decomp::bench_harness::backend_mode()
+    );
+    for t in decomp::experiments::fig3::run(decomp::bench_harness::quick_mode()) {
         t.print();
         println!();
     }

@@ -99,6 +99,15 @@ pub fn quick_mode() -> bool {
     std::env::var("DECOMP_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Execution backend requested for the experiment benches via
+/// `DECOMP_BACKEND` (`reference` | `sim` | `threads`); the figure drivers
+/// route their traced runs through it (see
+/// [`crate::experiments::ExecBackend`]). Returns the resolved name so
+/// benches can stamp their reports.
+pub fn backend_mode() -> &'static str {
+    crate::experiments::ExecBackend::from_env().name()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +138,11 @@ mod tests {
             std::hint::black_box((0..1000).sum::<u64>());
         });
         assert!(m.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn backend_mode_is_a_known_backend() {
+        assert!(["reference", "sim", "threads"].contains(&backend_mode()));
     }
 
     #[test]

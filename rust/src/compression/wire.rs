@@ -3,6 +3,20 @@
 
 /// A compressed message. `payload.len()` is exactly what the network
 /// simulator charges against bandwidth.
+///
+/// Compressors produce `Wire`s and the transports move them verbatim —
+/// the mailbox fabric as whole messages, the discrete-event engine batched
+/// into [`crate::network::sim::Frame`]s:
+///
+/// ```
+/// use decomp::compression::{Compressor, StochasticQuantizer};
+/// use decomp::util::rng::Pcg64;
+/// let q8 = StochasticQuantizer::new(8);
+/// let z = vec![0.5f32; 1024];
+/// let wire = q8.compress(&z, &mut Pcg64::seed_from_u64(1));
+/// assert_eq!(wire.len, 1024);                       // element count
+/// assert_eq!(wire.bytes(), q8.wire_bytes(z.len())); // honest size
+/// ```
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Wire {
     /// Original vector length (element count).
@@ -11,12 +25,28 @@ pub struct Wire {
 }
 
 impl Wire {
+    /// Bytes this message occupies on the network.
     pub fn bytes(&self) -> usize {
         self.payload.len()
     }
 }
 
 /// LSB-first bit writer. `width` ≤ 32.
+///
+/// Packs quantization levels shoulder to shoulder, so b-bit codes cost
+/// exactly `⌈count·b/8⌉` bytes on the wire:
+///
+/// ```
+/// use decomp::compression::{BitReader, BitWriter};
+/// let mut w = BitWriter::new();
+/// for v in [0b101u32, 0b010, 0b111] {
+///     w.push(v, 3); // three 3-bit codes -> 9 bits -> 2 bytes
+/// }
+/// let buf = w.finish();
+/// assert_eq!(buf.len(), 2);
+/// let mut r = BitReader::new(&buf);
+/// assert_eq!([r.read(3), r.read(3), r.read(3)], [0b101, 0b010, 0b111]);
+/// ```
 pub struct BitWriter {
     out: Vec<u8>,
     acc: u64,
@@ -79,6 +109,17 @@ impl Default for BitWriter {
 }
 
 /// LSB-first bit reader over a byte slice.
+///
+/// The mirror of [`BitWriter`]; reading past the end yields zeros (the
+/// writer's final partial byte is zero-padded, so decoders never need a
+/// length check per element):
+///
+/// ```
+/// use decomp::compression::BitReader;
+/// let mut r = BitReader::new(&[0xff]);
+/// assert_eq!(r.read(8), 0xff);
+/// assert_eq!(r.read(8), 0); // past the end: zero-fill
+/// ```
 pub struct BitReader<'a> {
     buf: &'a [u8],
     byte: usize,
@@ -182,5 +223,75 @@ mod tests {
         let mut r = BitReader::new(&[0xff]);
         assert_eq!(r.read(8), 0xff);
         assert_eq!(r.read(8), 0);
+    }
+
+    #[test]
+    fn every_sub_byte_width_round_trips_boundary_values() {
+        // Satellite coverage: each width 1..=7 explicitly, with the value
+        // extremes (0, max, alternating bits) that stress carry handling
+        // across byte boundaries.
+        for width in 1u32..=7 {
+            let max = (1u32 << width) - 1;
+            let alternating = 0x5555_5555u32 & max;
+            let values = [0u32, max, alternating, 1, max.saturating_sub(1)];
+            // Odd count so the final byte is partial for every width.
+            let stream: Vec<u32> = values.iter().cycle().take(33).copied().collect();
+            let mut w = BitWriter::new();
+            for &v in &stream {
+                w.push(v, width);
+            }
+            let buf = w.finish();
+            assert_eq!(buf.len(), (33 * width as usize).div_ceil(8), "width {width}");
+            let mut r = BitReader::new(&buf);
+            for (i, &v) in stream.iter().enumerate() {
+                assert_eq!(r.read(width), v, "width {width} index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn width_32_round_trips_extremes() {
+        let values = [0u32, 1, u32::MAX, u32::MAX - 1, 0x8000_0000, 0x7fff_ffff];
+        let mut w = BitWriter::new();
+        for &v in &values {
+            w.push(v, 32);
+        }
+        let buf = w.finish();
+        assert_eq!(buf.len(), 4 * values.len());
+        let mut r = BitReader::new(&buf);
+        for &v in &values {
+            assert_eq!(r.read(32), v);
+        }
+    }
+
+    #[test]
+    fn empty_payload_reader_and_writer() {
+        // A zero-element message is a legal wire payload.
+        let buf = BitWriter::with_capacity(0).finish();
+        assert!(buf.is_empty());
+        let mut r = BitReader::new(&buf);
+        for width in [1u32, 7, 8, 32] {
+            assert_eq!(r.read(width), 0, "empty buffer zero-fills width {width}");
+        }
+        assert_eq!(BitReader::new(&[]).align_rest(), &[] as &[u8]);
+    }
+
+    #[test]
+    fn empty_vector_compresses_to_empty_wire() {
+        use crate::compression::{Compressor, Identity, StochasticQuantizer};
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::seed_from_u64(3);
+        for c in [
+            Box::new(Identity) as Box<dyn Compressor>,
+            Box::new(StochasticQuantizer::new(4)),
+            Box::new(StochasticQuantizer::new(8)),
+        ] {
+            let w = c.compress(&[], &mut rng);
+            assert_eq!(w.len, 0, "{}", c.name());
+            assert_eq!(w.bytes(), 0, "{}", c.name());
+            assert_eq!(w.bytes(), c.wire_bytes(0), "{}", c.name());
+            let mut out: Vec<f32> = Vec::new();
+            c.decompress(&w, &mut out); // must not panic on empty
+        }
     }
 }

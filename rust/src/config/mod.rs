@@ -31,6 +31,7 @@ pub fn load_config(path: &Path) -> anyhow::Result<TrainConfig> {
             "rows_per_node" => cfg.rows_per_node = req_usize(v, k)?,
             "heterogeneity" => cfg.heterogeneity = req_f64(v, k)? as f32,
             "batch" => cfg.batch = req_usize(v, k)?,
+            "backend" => cfg.backend = req_str(v, k)?,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
     }
@@ -50,6 +51,9 @@ pub fn apply_cli_overrides(cfg: &mut TrainConfig, args: &Args) {
     }
     if let Some(v) = args.opt_str("model") {
         cfg.model = v.to_string();
+    }
+    if let Some(v) = args.opt_str("backend") {
+        cfg.backend = v.to_string();
     }
     cfg.n_nodes = args.usize("nodes", cfg.n_nodes);
     cfg.gamma = args.f64("gamma", cfg.gamma as f64) as f32;
@@ -136,7 +140,7 @@ mod tests {
     fn cli_overrides_win() {
         let mut cfg = TrainConfig::default();
         let args = Args::parse_from(
-            "--algo ecd --nodes 12 --gamma 0.5"
+            "--algo ecd --nodes 12 --gamma 0.5 --backend sim"
                 .split_whitespace()
                 .map(|s| s.to_string()),
         );
@@ -144,5 +148,16 @@ mod tests {
         assert_eq!(cfg.algo, "ecd");
         assert_eq!(cfg.n_nodes, 12);
         assert!((cfg.gamma - 0.5).abs() < 1e-7);
+        assert_eq!(cfg.backend, "sim");
+    }
+
+    #[test]
+    fn backend_key_loads_and_validates() {
+        let p = write_tmp("backend.json", r#"{"backend":"sim"}"#);
+        let cfg = load_config(&p).unwrap();
+        assert_eq!(cfg.backend, "sim");
+        cfg.parse_backend().unwrap();
+        std::fs::remove_file(p).ok();
+        assert_eq!(TrainConfig::default().backend, "threads");
     }
 }

@@ -1,0 +1,483 @@
+//! Per-node algorithm programs: every training algorithm written once as
+//! an emit/absorb state machine ([`NodeProgram`]) and executed by *either*
+//! backend — worker threads over the mailbox transport
+//! ([`super::run_threaded`]) or the discrete-event engine
+//! ([`crate::network::sim`]).
+//!
+//! Determinism contract (what makes the two backends — and the
+//! single-process reference simulator in [`crate::algorithms`] — bitwise
+//! identical): (a) RNG streams are laid out per node as grad `0x6000+i`,
+//! compression `0xc000+i`; (b) every weighted sum iterates
+//! `[self, sorted-neighbor...]` in the same order; (c) each node's
+//! floating-point operation sequence is fixed by the program, never by the
+//! executor. `rust/tests/coordinator_integration.rs` pins threads ≡
+//! reference and `rust/tests/backend_equivalence.rs` pins sim ≡ threads.
+
+use crate::algorithms::AlgoConfig;
+use crate::compression::{Compressor, Identity, Wire};
+use crate::linalg::vecops;
+use crate::models::GradientModel;
+use crate::network::sim::{NodeProgram, Outbox};
+use crate::network::transport::Channel;
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// State shared by every algorithm program.
+struct Common {
+    node: usize,
+    n: usize,
+    neighbors: Vec<usize>,
+    /// `[w_self, w_neighbor...]` in sorted-neighbor order.
+    weights: Vec<f32>,
+    compressor: Arc<dyn Compressor>,
+    gamma: f32,
+    grad_rng: Pcg64,
+    comp_rng: Pcg64,
+    dim: usize,
+    model: Box<dyn GradientModel>,
+    x: Vec<f32>,
+    g: Vec<f32>,
+    losses: Vec<f64>,
+}
+
+impl Common {
+    fn new(
+        cfg: &AlgoConfig,
+        node: usize,
+        model: Box<dyn GradientModel>,
+        x0: &[f32],
+        gamma: f32,
+        iters: usize,
+    ) -> Common {
+        let mut weights = Vec::with_capacity(1 + cfg.mixing.graph.neighbors[node].len());
+        weights.push(cfg.mixing.self_weight[node]);
+        weights.extend_from_slice(&cfg.mixing.neighbor_weights[node]);
+        Common {
+            node,
+            n: cfg.mixing.n(),
+            neighbors: cfg.mixing.graph.neighbors[node].clone(),
+            weights,
+            compressor: cfg.compressor.clone(),
+            gamma,
+            grad_rng: Pcg64::new(cfg.seed, 0x6000 + node as u64),
+            comp_rng: Pcg64::new(cfg.seed, 0xc000 + node as u64),
+            dim: x0.len(),
+            model,
+            x: x0.to_vec(),
+            g: vec![0.0f32; x0.len()],
+            losses: Vec::with_capacity(iters),
+        }
+    }
+
+    /// Sample a minibatch gradient at the current iterate, recording the
+    /// minibatch loss.
+    fn grad(&mut self) {
+        let loss = self
+            .model
+            .stoch_grad(&self.x, &mut self.g, &mut self.grad_rng);
+        self.losses.push(loss);
+    }
+
+    /// out = w_self·first + Σ_k w_k·received[k].
+    fn mix_weighted(&self, first: &[f32], received: &[Vec<f32>], out: &mut [f32]) {
+        let mut cols: Vec<&[f32]> = Vec::with_capacity(1 + received.len());
+        cols.push(first);
+        for r in received {
+            cols.push(r.as_slice());
+        }
+        vecops::weighted_sum(&self.weights, &cols, out);
+    }
+
+    /// Queue `wire` to every neighbor (clones, like the mailbox fabric).
+    fn broadcast(&self, out: &mut Outbox, wire: &Wire) {
+        for &to in &self.neighbors {
+            out.send(to, Channel::Gossip, wire.clone());
+        }
+    }
+
+    fn gossip_expects(&self) -> Vec<(usize, Channel)> {
+        self.neighbors.iter().map(|&f| (f, Channel::Gossip)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// D-PSGD: exchange full-precision models.
+
+struct DpsgdProgram {
+    c: Common,
+    mixed: Vec<f32>,
+    recv_bufs: Vec<Vec<f32>>,
+}
+
+impl NodeProgram for DpsgdProgram {
+    fn emit(&mut self, _t: u64, _phase: usize, out: &mut Outbox) {
+        self.c.grad();
+        let wire = Identity.compress(&self.c.x, &mut self.c.comp_rng);
+        self.c.broadcast(out, &wire);
+    }
+
+    fn expects(&self, _t: u64, _phase: usize) -> Vec<(usize, Channel)> {
+        self.c.gossip_expects()
+    }
+
+    fn absorb(&mut self, _t: u64, _phase: usize, msgs: Vec<Wire>) {
+        for (k, w) in msgs.iter().enumerate() {
+            Identity.decompress(w, &mut self.recv_bufs[k]);
+        }
+        let (c, mixed) = (&self.c, &mut self.mixed);
+        c.mix_weighted(&c.x, &self.recv_bufs, mixed);
+        vecops::axpy(-c.gamma, &c.g, mixed);
+        std::mem::swap(&mut self.c.x, &mut self.mixed);
+    }
+
+    fn set_gamma(&mut self, gamma: f32) {
+        self.c.gamma = gamma;
+    }
+
+    fn x(&self) -> &[f32] {
+        &self.c.x
+    }
+
+    fn into_result(self: Box<Self>) -> (Vec<f32>, Vec<f64>) {
+        (self.c.x, self.c.losses)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DCD-PSGD (Algorithm 1): exchange compressed model differences; maintain
+// literal replicas of neighbors.
+
+struct DcdProgram {
+    c: Common,
+    replicas: Vec<Vec<f32>>,
+    half: Vec<f32>,
+    z: Vec<f32>,
+    cz: Vec<f32>,
+}
+
+impl NodeProgram for DcdProgram {
+    fn emit(&mut self, _t: u64, _phase: usize, out: &mut Outbox) {
+        self.c.grad();
+        // x_{t+1/2} = W_ii x + Σ_j W_ij x̂_j − γ g.
+        let (c, half) = (&self.c, &mut self.half);
+        c.mix_weighted(&c.x, &self.replicas, half);
+        vecops::axpy(-c.gamma, &c.g, half);
+        // z_t = x_{t+1/2} − x_t; broadcast C(z_t).
+        vecops::sub(&self.half, &self.c.x, &mut self.z);
+        let wire = self
+            .c
+            .compressor
+            .compress(&self.z, &mut self.c.comp_rng);
+        self.c.broadcast(out, &wire);
+        // x_{t+1} = x_t + C(z_t) (the same compressed delta the
+        // neighbors apply to their replica of us).
+        self.c.compressor.decompress(&wire, &mut self.cz);
+        vecops::axpy(1.0, &self.cz, &mut self.c.x);
+    }
+
+    fn expects(&self, _t: u64, _phase: usize) -> Vec<(usize, Channel)> {
+        self.c.gossip_expects()
+    }
+
+    fn absorb(&mut self, _t: u64, _phase: usize, msgs: Vec<Wire>) {
+        // Apply neighbors' compressed deltas to their replicas.
+        for (k, w) in msgs.iter().enumerate() {
+            self.c.compressor.decompress(w, &mut self.cz);
+            vecops::axpy(1.0, &self.cz, &mut self.replicas[k]);
+        }
+    }
+
+    fn set_gamma(&mut self, gamma: f32) {
+        self.c.gamma = gamma;
+    }
+
+    fn x(&self) -> &[f32] {
+        &self.c.x
+    }
+
+    fn into_result(self: Box<Self>) -> (Vec<f32>, Vec<f64>) {
+        (self.c.x, self.c.losses)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ECD-PSGD (Algorithm 2): exchange compressed extrapolations; maintain
+// estimates x̃ for self and neighbors.
+
+struct EcdProgram {
+    c: Common,
+    tilde_self: Vec<f32>,
+    tilde_nbrs: Vec<Vec<f32>>,
+    x_new: Vec<f32>,
+    z: Vec<f32>,
+    cz: Vec<f32>,
+}
+
+impl NodeProgram for EcdProgram {
+    fn emit(&mut self, ti: u64, _phase: usize, out: &mut Outbox) {
+        let t = (ti + 1) as f32;
+        self.c.grad();
+        // x_{t+1/2} = Σ_j W_ij x̃_j (self estimate included), then SGD.
+        let (c, x_new) = (&self.c, &mut self.x_new);
+        c.mix_weighted(&self.tilde_self, &self.tilde_nbrs, x_new);
+        vecops::axpy(-c.gamma, &c.g, x_new);
+        // z = (1 − 0.5t) x_t + 0.5t x_{t+1}.
+        let a = 1.0 - 0.5 * t;
+        let b = 0.5 * t;
+        for (zd, (xo, xn)) in self
+            .z
+            .iter_mut()
+            .zip(self.c.x.iter().zip(&self.x_new))
+        {
+            *zd = a * xo + b * xn;
+        }
+        let wire = self
+            .c
+            .compressor
+            .compress(&self.z, &mut self.c.comp_rng);
+        self.c.broadcast(out, &wire);
+        // Own estimate update (same recursion neighbors apply).
+        self.c.compressor.decompress(&wire, &mut self.cz);
+        vecops::axpby(2.0 / t, &self.cz, 1.0 - 2.0 / t, &mut self.tilde_self);
+    }
+
+    fn expects(&self, _t: u64, _phase: usize) -> Vec<(usize, Channel)> {
+        self.c.gossip_expects()
+    }
+
+    fn absorb(&mut self, ti: u64, _phase: usize, msgs: Vec<Wire>) {
+        let t = (ti + 1) as f32;
+        for (k, w) in msgs.iter().enumerate() {
+            self.c.compressor.decompress(w, &mut self.cz);
+            vecops::axpby(2.0 / t, &self.cz, 1.0 - 2.0 / t, &mut self.tilde_nbrs[k]);
+        }
+        std::mem::swap(&mut self.c.x, &mut self.x_new);
+    }
+
+    fn set_gamma(&mut self, gamma: f32) {
+        self.c.gamma = gamma;
+    }
+
+    fn x(&self) -> &[f32] {
+        &self.c.x
+    }
+
+    fn into_result(self: Box<Self>) -> (Vec<f32>, Vec<f64>) {
+        (self.c.x, self.c.losses)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Naive compression (the Fig. 1 negative example).
+
+struct NaiveProgram {
+    c: Common,
+    mixed: Vec<f32>,
+    recv_bufs: Vec<Vec<f32>>,
+}
+
+impl NodeProgram for NaiveProgram {
+    fn emit(&mut self, _t: u64, _phase: usize, out: &mut Outbox) {
+        self.c.grad();
+        // Broadcast C(x_t); own update uses the exact local x.
+        let wire = self
+            .c
+            .compressor
+            .compress(&self.c.x, &mut self.c.comp_rng);
+        self.c.broadcast(out, &wire);
+    }
+
+    fn expects(&self, _t: u64, _phase: usize) -> Vec<(usize, Channel)> {
+        self.c.gossip_expects()
+    }
+
+    fn absorb(&mut self, _t: u64, _phase: usize, msgs: Vec<Wire>) {
+        for (k, w) in msgs.iter().enumerate() {
+            self.c.compressor.decompress(w, &mut self.recv_bufs[k]);
+        }
+        let (c, mixed) = (&self.c, &mut self.mixed);
+        c.mix_weighted(&c.x, &self.recv_bufs, mixed);
+        vecops::axpy(-c.gamma, &c.g, mixed);
+        std::mem::swap(&mut self.c.x, &mut self.mixed);
+    }
+
+    fn set_gamma(&mut self, gamma: f32) {
+        self.c.gamma = gamma;
+    }
+
+    fn x(&self) -> &[f32] {
+        &self.c.x
+    }
+
+    fn into_result(self: Box<Self>) -> (Vec<f32>, Vec<f64>) {
+        (self.c.x, self.c.losses)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Centralized Allreduce (hub-rooted reduce + broadcast), optionally with
+// QSGD-style gradient quantization (`quantized = true`).
+
+struct AllreduceProgram {
+    c: Common,
+    /// QSGD variant: ship compressed gradients to the hub.
+    quantized: bool,
+    mean: Vec<f32>,
+    buf: Vec<f32>,
+    rng_dummy: Pcg64,
+    /// Hub only (quantized): the hub's own compressed gradient, produced
+    /// in phase 0 and consumed in phase 0's absorb.
+    own_wire: Option<Wire>,
+}
+
+impl NodeProgram for AllreduceProgram {
+    fn phases(&self) -> usize {
+        2
+    }
+
+    fn emit(&mut self, _t: u64, phase: usize, out: &mut Outbox) {
+        match phase {
+            0 => {
+                self.c.grad();
+                if self.quantized {
+                    // Every node (hub included) compresses its own
+                    // gradient with its own stream — identical to the
+                    // reference simulator's per-node comp_rngs.
+                    let wire = self
+                        .c
+                        .compressor
+                        .compress(&self.c.g, &mut self.c.comp_rng);
+                    if self.c.node == 0 {
+                        self.own_wire = Some(wire);
+                    } else {
+                        out.send(0, Channel::Reduce, wire);
+                    }
+                } else if self.c.node != 0 {
+                    let wire = Identity.compress(&self.c.g, &mut self.rng_dummy);
+                    out.send(0, Channel::Reduce, wire);
+                }
+            }
+            _ => {
+                if self.c.node == 0 {
+                    let wire = Identity.compress(&self.mean, &mut self.rng_dummy);
+                    for to in 1..self.c.n {
+                        out.send(to, Channel::Reduce, wire.clone());
+                    }
+                }
+            }
+        }
+    }
+
+    fn expects(&self, _t: u64, phase: usize) -> Vec<(usize, Channel)> {
+        match (phase, self.c.node) {
+            (0, 0) => (1..self.c.n).map(|f| (f, Channel::Reduce)).collect(),
+            (0, _) => Vec::new(),
+            (_, 0) => Vec::new(),
+            (_, _) => vec![(0, Channel::Reduce)],
+        }
+    }
+
+    fn absorb(&mut self, _t: u64, phase: usize, msgs: Vec<Wire>) {
+        match phase {
+            0 => {
+                if self.c.node != 0 {
+                    return;
+                }
+                if self.quantized {
+                    self.mean.fill(0.0);
+                    let own = self.own_wire.take().expect("hub compressed in emit");
+                    self.c.compressor.decompress(&own, &mut self.buf);
+                    vecops::axpy(1.0 / self.c.n as f32, &self.buf, &mut self.mean);
+                    for w in &msgs {
+                        self.c.compressor.decompress(w, &mut self.buf);
+                        vecops::axpy(1.0 / self.c.n as f32, &self.buf, &mut self.mean);
+                    }
+                } else {
+                    // Gather gradients in node order (matching the
+                    // reference simulator's mean_of column order).
+                    let mut grads: Vec<Vec<f32>> = Vec::with_capacity(self.c.n);
+                    grads.push(self.c.g.clone());
+                    for w in &msgs {
+                        let mut buf = vec![0.0f32; self.c.dim];
+                        Identity.decompress(w, &mut buf);
+                        grads.push(buf);
+                    }
+                    let cols: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+                    vecops::mean_of(&cols, &mut self.mean);
+                }
+            }
+            _ => {
+                if self.c.node != 0 {
+                    Identity.decompress(&msgs[0], &mut self.mean);
+                }
+                vecops::axpy(-self.c.gamma, &self.mean, &mut self.c.x);
+            }
+        }
+    }
+
+    fn set_gamma(&mut self, gamma: f32) {
+        self.c.gamma = gamma;
+    }
+
+    fn x(&self) -> &[f32] {
+        &self.c.x
+    }
+
+    fn into_result(self: Box<Self>) -> (Vec<f32>, Vec<f64>) {
+        (self.c.x, self.c.losses)
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Build node `node`'s program for `algo_name`. Supported: `dpsgd`, `dcd`,
+/// `ecd`, `naive`, `allreduce`, `qallreduce`.
+pub fn build_program(
+    algo_name: &str,
+    cfg: &AlgoConfig,
+    node: usize,
+    model: Box<dyn GradientModel>,
+    x0: &[f32],
+    gamma: f32,
+    iters: usize,
+) -> Option<Box<dyn NodeProgram>> {
+    let c = Common::new(cfg, node, model, x0, gamma, iters);
+    let dim = x0.len();
+    let deg = c.neighbors.len();
+    Some(match algo_name {
+        "dpsgd" => Box::new(DpsgdProgram {
+            c,
+            mixed: vec![0.0f32; dim],
+            recv_bufs: vec![vec![0.0f32; dim]; deg],
+        }),
+        "dcd" => Box::new(DcdProgram {
+            replicas: vec![x0.to_vec(); deg],
+            c,
+            half: vec![0.0f32; dim],
+            z: vec![0.0f32; dim],
+            cz: vec![0.0f32; dim],
+        }),
+        "ecd" => Box::new(EcdProgram {
+            tilde_self: x0.to_vec(),
+            tilde_nbrs: vec![x0.to_vec(); deg],
+            c,
+            x_new: vec![0.0f32; dim],
+            z: vec![0.0f32; dim],
+            cz: vec![0.0f32; dim],
+        }),
+        "naive" => Box::new(NaiveProgram {
+            c,
+            mixed: vec![0.0f32; dim],
+            recv_bufs: vec![vec![0.0f32; dim]; deg],
+        }),
+        "allreduce" | "qallreduce" => Box::new(AllreduceProgram {
+            quantized: algo_name == "qallreduce",
+            c,
+            mean: vec![0.0f32; dim],
+            buf: vec![0.0f32; dim],
+            rng_dummy: Pcg64::new(0, 0),
+            own_wire: None,
+        }),
+        _ => return None,
+    })
+}

@@ -1,5 +1,11 @@
-//! Worker threads: the actually-decentralized execution of every
-//! algorithm over the mailbox transport.
+//! Worker threads: the actually-decentralized execution backend.
+//!
+//! Each node's algorithm lives in a [`NodeProgram`](crate::network::sim::NodeProgram)
+//! (see [`super::program`]); this module merely drives one program per OS
+//! thread over the mailbox transport — emit, send, blocking-receive the
+//! expected set, absorb. The identical programs run single-threaded on the
+//! discrete-event engine ([`crate::network::sim`]), which is what makes
+//! `threads` and `sim` backends bitwise-interchangeable.
 //!
 //! Determinism contract: a threaded run is *bitwise identical* to the
 //! single-process simulator ([`crate::algorithms`]) given the same seed,
@@ -9,24 +15,17 @@
 //! identity codec round-trips f32 exactly. The integration suite asserts
 //! this for every algorithm.
 
+use super::program::build_program;
 use crate::algorithms::AlgoConfig;
-use crate::compression::{Compressor, Identity, Wire};
-use crate::linalg::vecops;
+use crate::compression::Wire;
 use crate::models::GradientModel;
-use crate::network::transport::{Channel, Endpoint, Transport};
-use crate::util::rng::Pcg64;
-use std::sync::Arc;
+use crate::network::sim::{self, NodeProgram, Outbox};
+use crate::network::transport::{Endpoint, Transport};
 
-/// What each worker hands back when the run finishes.
-#[derive(Debug)]
-pub struct WorkerReport {
-    pub node: usize,
-    pub final_x: Vec<f32>,
-    /// Minibatch loss at every iteration (pre-step iterate).
-    pub losses: Vec<f64>,
-    pub bytes_sent: u64,
-    pub msgs_sent: u64,
-}
+/// What each worker hands back when the run finishes — the same report
+/// type the discrete-event backend produces, so the two are directly
+/// comparable.
+pub use crate::network::sim::NodeReport as WorkerReport;
 
 /// A completed threaded run, reports sorted by node id.
 #[derive(Debug)]
@@ -36,64 +35,58 @@ pub struct ThreadedRun {
 
 impl ThreadedRun {
     pub fn final_params(&self) -> Vec<Vec<f32>> {
-        self.reports.iter().map(|r| r.final_x.clone()).collect()
+        sim::final_params(&self.reports)
     }
 
     pub fn mean_params(&self) -> Vec<f32> {
-        let cols: Vec<&[f32]> = self.reports.iter().map(|r| r.final_x.as_slice()).collect();
-        let mut out = vec![0.0f32; cols[0].len()];
-        vecops::mean_of(&cols, &mut out);
-        out
+        sim::mean_params(&self.reports)
     }
 
     pub fn total_bytes(&self) -> u64 {
-        self.reports.iter().map(|r| r.bytes_sent).sum()
+        sim::total_bytes(&self.reports)
     }
 
     /// Mean minibatch loss per iteration across nodes.
     pub fn mean_losses(&self) -> Vec<f64> {
-        let iters = self.reports[0].losses.len();
-        (0..iters)
-            .map(|t| {
-                self.reports.iter().map(|r| r.losses[t]).sum::<f64>() / self.reports.len() as f64
-            })
-            .collect()
+        sim::mean_losses(&self.reports)
     }
 }
 
-struct WorkerCtx {
-    ep: Endpoint,
-    node: usize,
-    neighbors: Vec<usize>,
-    /// `[w_self, w_neighbor...]` in sorted-neighbor order.
-    weights: Vec<f32>,
-    compressor: Arc<dyn Compressor>,
-    gamma: f32,
-    iters: usize,
-    grad_rng: Pcg64,
-    comp_rng: Pcg64,
-    dim: usize,
-}
-
-impl WorkerCtx {
-    fn weights_of(cfg: &AlgoConfig, i: usize) -> Vec<f32> {
-        let mut w = Vec::with_capacity(1 + cfg.mixing.graph.neighbors[i].len());
-        w.push(cfg.mixing.self_weight[i]);
-        w.extend_from_slice(&cfg.mixing.neighbor_weights[i]);
-        w
-    }
-
-    fn broadcast(&mut self, iter: u64, wire: &Wire) {
-        for k in 0..self.neighbors.len() {
-            let to = self.neighbors[k];
-            self.ep.send(to, iter, Channel::Gossip, wire.clone());
+/// Drive one program to completion over its mailbox endpoint. The message
+/// key encodes (iteration, phase) so multi-phase algorithms (hub-rooted
+/// reductions) never collide across phases.
+fn run_node(mut prog: Box<dyn NodeProgram>, mut ep: Endpoint, iters: usize) -> WorkerReport {
+    let node = ep.id;
+    let phases = prog.phases() as u64;
+    for t in 0..iters as u64 {
+        for phase in 0..prog.phases() {
+            let key = t * phases + phase as u64;
+            let mut out = Outbox::new();
+            prog.emit(t, phase, &mut out);
+            for (to, channel, wire) in out.into_msgs() {
+                ep.send(to, key, channel, wire);
+            }
+            let expected = prog.expects(t, phase);
+            let msgs: Vec<Wire> = expected
+                .iter()
+                .map(|&(from, channel)| ep.recv_from(from, key, channel))
+                .collect();
+            prog.absorb(t, phase, msgs);
         }
+    }
+    let (final_x, losses) = prog.into_result();
+    WorkerReport {
+        node,
+        final_x,
+        losses,
+        bytes_sent: ep.bytes_sent,
+        msgs_sent: ep.msgs_sent,
     }
 }
 
 /// Run `iters` synchronous iterations of `algo_name` over worker threads.
 /// `models[i]` moves to thread i. Supported: `dpsgd`, `dcd`, `ecd`,
-/// `naive`, `allreduce`.
+/// `naive`, `allreduce`, `qallreduce`.
 pub fn run_threaded(
     algo_name: &str,
     cfg: &AlgoConfig,
@@ -104,8 +97,7 @@ pub fn run_threaded(
 ) -> anyhow::Result<ThreadedRun> {
     let n = cfg.mixing.n();
     anyhow::ensure!(models.len() == n, "need one model per node");
-    let algo = algo_name.to_string();
-    match algo.as_str() {
+    match algo_name {
         "dpsgd" | "dcd" | "ecd" | "naive" | "allreduce" | "qallreduce" => {}
         other => anyhow::bail!("unsupported threaded algorithm '{other}'"),
     }
@@ -115,279 +107,17 @@ pub fn run_threaded(
         let handles: Vec<_> = endpoints
             .into_iter()
             .zip(models)
-            .map(|(ep, mut model)| {
-                let node = ep.id;
-                let mut ctx = WorkerCtx {
-                    ep,
-                    node,
-                    neighbors: cfg.mixing.graph.neighbors[node].clone(),
-                    weights: WorkerCtx::weights_of(cfg, node),
-                    compressor: cfg.compressor.clone(),
-                    gamma,
-                    iters,
-                    grad_rng: Pcg64::new(cfg.seed, 0x6000 + node as u64),
-                    comp_rng: Pcg64::new(cfg.seed, 0xc000 + node as u64),
-                    dim: x0.len(),
-                };
-                let x0 = x0.to_vec();
-                let algo = algo.clone();
-                s.spawn(move || -> WorkerReport {
-                    match algo.as_str() {
-                        "dpsgd" => worker_dpsgd(&mut ctx, model.as_mut(), x0),
-                        "dcd" => worker_dcd(&mut ctx, model.as_mut(), x0),
-                        "ecd" => worker_ecd(&mut ctx, model.as_mut(), x0),
-                        "naive" => worker_naive(&mut ctx, model.as_mut(), x0),
-                        "allreduce" => worker_allreduce(&mut ctx, model.as_mut(), x0),
-                        "qallreduce" => worker_qallreduce(&mut ctx, model.as_mut(), x0),
-                        _ => unreachable!(),
-                    }
-                })
+            .map(|(ep, model)| {
+                let prog = build_program(algo_name, cfg, ep.id, model, x0, gamma, iters)
+                    .expect("algorithm validated above");
+                s.spawn(move || run_node(prog, ep, iters))
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect()
     });
     reports.sort_by_key(|r| r.node);
     Ok(ThreadedRun { reports })
-}
-
-fn report(ctx: &WorkerCtx, x: Vec<f32>, losses: Vec<f64>) -> WorkerReport {
-    WorkerReport {
-        node: ctx.node,
-        final_x: x,
-        losses,
-        bytes_sent: ctx.ep.bytes_sent,
-        msgs_sent: ctx.ep.msgs_sent,
-    }
-}
-
-/// Mix `[x | received-neighbor-vectors]` with ctx.weights into `out`.
-fn mix_into(ctx: &WorkerCtx, x: &[f32], received: &[Vec<f32>], out: &mut [f32]) {
-    let mut cols: Vec<&[f32]> = Vec::with_capacity(1 + received.len());
-    cols.push(x);
-    for r in received {
-        cols.push(r.as_slice());
-    }
-    vecops::weighted_sum(&ctx.weights, &cols, out);
-}
-
-// --------------------------------------------------------------------------
-// D-PSGD: exchange full-precision models.
-
-fn worker_dpsgd(ctx: &mut WorkerCtx, model: &mut dyn GradientModel, mut x: Vec<f32>) -> WorkerReport {
-    let codec = Identity;
-    let mut g = vec![0.0f32; ctx.dim];
-    let mut mixed = vec![0.0f32; ctx.dim];
-    let mut losses = Vec::with_capacity(ctx.iters);
-    let mut recv_bufs: Vec<Vec<f32>> = vec![vec![0.0f32; ctx.dim]; ctx.neighbors.len()];
-    for t in 0..ctx.iters as u64 {
-        losses.push(model.stoch_grad(&x, &mut g, &mut ctx.grad_rng));
-        let wire = codec.compress(&x, &mut ctx.comp_rng);
-        ctx.broadcast(t, &wire);
-        let neighbors = ctx.neighbors.clone();
-        for (k, &from) in neighbors.iter().enumerate() {
-            let w = ctx.ep.recv_from(from, t, Channel::Gossip);
-            codec.decompress(&w, &mut recv_bufs[k]);
-        }
-        mix_into(ctx, &x, &recv_bufs, &mut mixed);
-        vecops::axpy(-ctx.gamma, &g, &mut mixed);
-        std::mem::swap(&mut x, &mut mixed);
-    }
-    report(ctx, x, losses)
-}
-
-// --------------------------------------------------------------------------
-// DCD-PSGD (Algorithm 1): exchange compressed model differences; maintain
-// literal replicas of neighbors.
-
-fn worker_dcd(ctx: &mut WorkerCtx, model: &mut dyn GradientModel, mut x: Vec<f32>) -> WorkerReport {
-    let mut replicas: Vec<Vec<f32>> = vec![x.clone(); ctx.neighbors.len()];
-    let mut g = vec![0.0f32; ctx.dim];
-    let mut half = vec![0.0f32; ctx.dim];
-    let mut z = vec![0.0f32; ctx.dim];
-    let mut cz = vec![0.0f32; ctx.dim];
-    let mut losses = Vec::with_capacity(ctx.iters);
-    for t in 0..ctx.iters as u64 {
-        losses.push(model.stoch_grad(&x, &mut g, &mut ctx.grad_rng));
-        // x_{t+1/2} = W_ii x + Σ_j W_ij x̂_j − γ g.
-        mix_into(ctx, &x, &replicas, &mut half);
-        vecops::axpy(-ctx.gamma, &g, &mut half);
-        // z_t = x_{t+1/2} − x_t; broadcast C(z_t).
-        vecops::sub(&half, &x, &mut z);
-        let wire = ctx.compressor.compress(&z, &mut ctx.comp_rng);
-        ctx.broadcast(t, &wire);
-        // x_{t+1} = x_t + C(z_t) (the same compressed delta the
-        // neighbors apply to their replica of us).
-        ctx.compressor.decompress(&wire, &mut cz);
-        vecops::axpy(1.0, &cz, &mut x);
-        // Apply neighbors' compressed deltas to their replicas.
-        let neighbors = ctx.neighbors.clone();
-        for (k, &from) in neighbors.iter().enumerate() {
-            let w = ctx.ep.recv_from(from, t, Channel::Gossip);
-            ctx.compressor.decompress(&w, &mut cz);
-            vecops::axpy(1.0, &cz, &mut replicas[k]);
-        }
-    }
-    report(ctx, x, losses)
-}
-
-// --------------------------------------------------------------------------
-// ECD-PSGD (Algorithm 2): exchange compressed extrapolations; maintain
-// estimates x̃ for self and neighbors.
-
-fn worker_ecd(ctx: &mut WorkerCtx, model: &mut dyn GradientModel, mut x: Vec<f32>) -> WorkerReport {
-    let mut tilde_self = x.clone();
-    let mut tilde_nbrs: Vec<Vec<f32>> = vec![x.clone(); ctx.neighbors.len()];
-    let mut g = vec![0.0f32; ctx.dim];
-    let mut x_new = vec![0.0f32; ctx.dim];
-    let mut z = vec![0.0f32; ctx.dim];
-    let mut cz = vec![0.0f32; ctx.dim];
-    let mut losses = Vec::with_capacity(ctx.iters);
-    for ti in 0..ctx.iters as u64 {
-        let t = (ti + 1) as f32;
-        losses.push(model.stoch_grad(&x, &mut g, &mut ctx.grad_rng));
-        // x_{t+1/2} = Σ_j W_ij x̃_j (self estimate included), then SGD.
-        mix_into(ctx, &tilde_self, &tilde_nbrs, &mut x_new);
-        vecops::axpy(-ctx.gamma, &g, &mut x_new);
-        // z = (1 − 0.5t) x_t + 0.5t x_{t+1}.
-        let a = 1.0 - 0.5 * t;
-        let b = 0.5 * t;
-        for (zd, (xo, xn)) in z.iter_mut().zip(x.iter().zip(&x_new)) {
-            *zd = a * xo + b * xn;
-        }
-        let wire = ctx.compressor.compress(&z, &mut ctx.comp_rng);
-        ctx.broadcast(ti, &wire);
-        // Own estimate update (same recursion neighbors apply).
-        ctx.compressor.decompress(&wire, &mut cz);
-        vecops::axpby(2.0 / t, &cz, 1.0 - 2.0 / t, &mut tilde_self);
-        let neighbors = ctx.neighbors.clone();
-        for (k, &from) in neighbors.iter().enumerate() {
-            let w = ctx.ep.recv_from(from, ti, Channel::Gossip);
-            ctx.compressor.decompress(&w, &mut cz);
-            vecops::axpby(2.0 / t, &cz, 1.0 - 2.0 / t, &mut tilde_nbrs[k]);
-        }
-        std::mem::swap(&mut x, &mut x_new);
-    }
-    report(ctx, x, losses)
-}
-
-// --------------------------------------------------------------------------
-// Naive compression (the Fig. 1 negative example).
-
-fn worker_naive(ctx: &mut WorkerCtx, model: &mut dyn GradientModel, mut x: Vec<f32>) -> WorkerReport {
-    let mut g = vec![0.0f32; ctx.dim];
-    let mut mixed = vec![0.0f32; ctx.dim];
-    let mut losses = Vec::with_capacity(ctx.iters);
-    let mut recv_bufs: Vec<Vec<f32>> = vec![vec![0.0f32; ctx.dim]; ctx.neighbors.len()];
-    for t in 0..ctx.iters as u64 {
-        losses.push(model.stoch_grad(&x, &mut g, &mut ctx.grad_rng));
-        // Broadcast C(x_t); own update uses the exact local x.
-        let wire = ctx.compressor.compress(&x, &mut ctx.comp_rng);
-        ctx.broadcast(t, &wire);
-        let neighbors = ctx.neighbors.clone();
-        for (k, &from) in neighbors.iter().enumerate() {
-            let w = ctx.ep.recv_from(from, t, Channel::Gossip);
-            ctx.compressor.decompress(&w, &mut recv_bufs[k]);
-        }
-        mix_into(ctx, &x, &recv_bufs, &mut mixed);
-        vecops::axpy(-ctx.gamma, &g, &mut mixed);
-        std::mem::swap(&mut x, &mut mixed);
-    }
-    report(ctx, x, losses)
-}
-
-// --------------------------------------------------------------------------
-// Centralized Allreduce (hub-rooted reduce + broadcast over the fabric).
-
-fn worker_allreduce(
-    ctx: &mut WorkerCtx,
-    model: &mut dyn GradientModel,
-    mut x: Vec<f32>,
-) -> WorkerReport {
-    let codec = Identity;
-    // Hub needs the fleet size: the fabric width.
-    let n = ctx.ep_len();
-    let mut g = vec![0.0f32; ctx.dim];
-    let mut mean = vec![0.0f32; ctx.dim];
-    let mut losses = Vec::with_capacity(ctx.iters);
-    let mut rng_dummy = Pcg64::new(0, 0);
-    for t in 0..ctx.iters as u64 {
-        losses.push(model.stoch_grad(&x, &mut g, &mut ctx.grad_rng));
-        if ctx.node == 0 {
-            // Hub: gather gradients in node order (matching the
-            // simulator's mean_of column order), average, broadcast.
-            let mut grads: Vec<Vec<f32>> = Vec::with_capacity(n);
-            grads.push(g.clone());
-            for from in 1..n {
-                let w = ctx.ep.recv_from(from, t, Channel::Reduce);
-                let mut buf = vec![0.0f32; ctx.dim];
-                codec.decompress(&w, &mut buf);
-                grads.push(buf);
-            }
-            let cols: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
-            vecops::mean_of(&cols, &mut mean);
-            let wire = codec.compress(&mean, &mut rng_dummy);
-            for to in 1..n {
-                ctx.ep.send(to, t, Channel::Reduce, wire.clone());
-            }
-        } else {
-            let wire = codec.compress(&g, &mut rng_dummy);
-            ctx.ep.send(0, t, Channel::Reduce, wire);
-            let w = ctx.ep.recv_from(0, t, Channel::Reduce);
-            codec.decompress(&w, &mut mean);
-        }
-        vecops::axpy(-ctx.gamma, &mean, &mut x);
-    }
-    report(ctx, x, losses)
-}
-
-// --------------------------------------------------------------------------
-// Quantized centralized Allreduce (QSGD-style): each node ships its
-// *compressed* gradient to the hub; the model update uses the mean of the
-// decompressed gradients. Unlike the naive decentralized scheme, this
-// noise is damped by γ (plain unbiased-SGD analysis applies).
-
-fn worker_qallreduce(
-    ctx: &mut WorkerCtx,
-    model: &mut dyn GradientModel,
-    mut x: Vec<f32>,
-) -> WorkerReport {
-    let codec = Identity;
-    let n = ctx.ep_len();
-    let mut g = vec![0.0f32; ctx.dim];
-    let mut mean = vec![0.0f32; ctx.dim];
-    let mut buf = vec![0.0f32; ctx.dim];
-    let mut losses = Vec::with_capacity(ctx.iters);
-    let mut rng_dummy = Pcg64::new(0, 0);
-    for t in 0..ctx.iters as u64 {
-        losses.push(model.stoch_grad(&x, &mut g, &mut ctx.grad_rng));
-        // Every node (hub included) compresses its own gradient with its
-        // own stream — identical to the simulator's per-node comp_rngs.
-        let wire = ctx.compressor.compress(&g, &mut ctx.comp_rng);
-        if ctx.node == 0 {
-            mean.fill(0.0);
-            ctx.compressor.decompress(&wire, &mut buf);
-            vecops::axpy(1.0 / n as f32, &buf, &mut mean);
-            for from in 1..n {
-                let w = ctx.ep.recv_from(from, t, Channel::Reduce);
-                ctx.compressor.decompress(&w, &mut buf);
-                vecops::axpy(1.0 / n as f32, &buf, &mut mean);
-            }
-            let bwire = codec.compress(&mean, &mut rng_dummy);
-            for to in 1..n {
-                ctx.ep.send(to, t, Channel::Reduce, bwire.clone());
-            }
-        } else {
-            ctx.ep.send(0, t, Channel::Reduce, wire);
-            let w = ctx.ep.recv_from(0, t, Channel::Reduce);
-            codec.decompress(&w, &mut mean);
-        }
-        vecops::axpy(-ctx.gamma, &mean, &mut x);
-    }
-    report(ctx, x, losses)
-}
-
-impl WorkerCtx {
-    fn ep_len(&self) -> usize {
-        self.ep.fabric_width()
-    }
 }

@@ -2,6 +2,12 @@
 //! each to its bench target), plus the ablations the paper's theory
 //! motivates. Every driver returns [`Table`]s so benches, the CLI, and
 //! EXPERIMENTS.md all render the same rows.
+//!
+//! Every traced run goes through [`run_named`], which dispatches to an
+//! [`ExecBackend`]: the single-process reference math (default), the
+//! discrete-event engine (`DECOMP_BACKEND=sim` — virtual network time,
+//! scales to n ≥ 64), or the threaded coordinator
+//! (`DECOMP_BACKEND=threads` — real message passing).
 
 pub mod ablations;
 pub mod fig1;
@@ -9,12 +15,54 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 
-use crate::algorithms::{self, AlgoConfig, RunOpts, TrainTrace};
+use crate::algorithms::{self, AlgoConfig, RunOpts, TracePoint, TrainTrace};
 use crate::compression;
+use crate::coordinator;
 use crate::data::{build_models, ModelKind, SynthSpec};
 use crate::metrics::Table;
+use crate::network::cost::CostModel;
+use crate::network::sim::SimOpts;
 use crate::topology::{Graph, MixingMatrix, Topology};
 use std::sync::Arc;
+
+/// Which execution substrate a traced experiment runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecBackend {
+    /// Single-process reference math ([`algorithms::run_training`]) with
+    /// closed-form communication time.
+    Reference,
+    /// Discrete-event engine: same math, *measured* virtual network time.
+    Sim,
+    /// Thread-per-node coordinator over the mailbox transport.
+    Threads,
+}
+
+impl ExecBackend {
+    pub fn from_name(name: &str) -> Option<ExecBackend> {
+        match name {
+            "reference" | "ref" => Some(ExecBackend::Reference),
+            "sim" | "event" => Some(ExecBackend::Sim),
+            "threads" | "threaded" => Some(ExecBackend::Threads),
+            _ => None,
+        }
+    }
+
+    /// Backend requested via `DECOMP_BACKEND` (default: reference).
+    pub fn from_env() -> ExecBackend {
+        std::env::var("DECOMP_BACKEND")
+            .ok()
+            .and_then(|v| ExecBackend::from_name(&v))
+            .unwrap_or(ExecBackend::Reference)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecBackend::Reference => "reference",
+            ExecBackend::Sim => "sim",
+            ExecBackend::Threads => "threads",
+        }
+    }
+}
 
 /// The paper's testbed constants, shared by the runtime figures.
 pub mod testbed {
@@ -43,7 +91,8 @@ pub fn convergence_spec(n_nodes: usize, quick: bool) -> (SynthSpec, ModelKind) {
     (spec, ModelKind::Logistic { batch: 8 })
 }
 
-/// Build an algorithm + fresh models and run it.
+/// Build an algorithm + fresh models and run it on the backend selected
+/// by `DECOMP_BACKEND` (reference math when unset).
 pub fn run_named(
     algo: &str,
     compressor: &str,
@@ -53,15 +102,92 @@ pub fn run_named(
     opts: &RunOpts,
     seed: u64,
 ) -> TrainTrace {
+    run_named_on(ExecBackend::from_env(), algo, compressor, spec, kind, x0_override, opts, seed)
+}
+
+/// Build an algorithm + fresh models and run it on an explicit backend.
+#[allow(clippy::too_many_arguments)]
+pub fn run_named_on(
+    backend: ExecBackend,
+    algo: &str,
+    compressor: &str,
+    spec: &SynthSpec,
+    kind: &ModelKind,
+    x0_override: Option<&[f32]>,
+    opts: &RunOpts,
+    seed: u64,
+) -> TrainTrace {
     let (mut models, x0_built) = build_models(kind, spec);
-    let x0 = x0_override.unwrap_or(&x0_built);
-    let cfg = AlgoConfig {
+    let x0 = x0_override.unwrap_or(&x0_built).to_vec();
+    let mk_cfg = || AlgoConfig {
         mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, spec.n_nodes))),
         compressor: Arc::from(compression::from_name(compressor).expect("compressor")),
         seed,
     };
-    let mut algo = algorithms::from_name(algo, cfg, x0, spec.n_nodes).expect("algorithm");
-    algorithms::run_training(algo.as_mut(), &mut models, opts)
+    match backend {
+        ExecBackend::Reference => {
+            let mut algo = algorithms::from_name(algo, mk_cfg(), &x0, spec.n_nodes).expect("algorithm");
+            algorithms::run_training(algo.as_mut(), &mut models, opts)
+        }
+        ExecBackend::Sim => {
+            let (eval_models, _) = build_models(kind, spec);
+            let sim = SimOpts {
+                cost: opts.net.map(CostModel::Uniform).unwrap_or(CostModel::Ideal),
+                compute_per_iter_s: opts.compute_per_iter_s,
+            };
+            coordinator::run_sim_trace(algo, &mk_cfg(), models, &eval_models, &x0, opts, sim)
+                .expect("sim backend run")
+        }
+        ExecBackend::Threads => {
+            // Real concurrency: evaluation is end-of-run only (workers own
+            // their state; mid-run probes would perturb the schedule), and
+            // the worker loop runs a fixed γ — refuse annealing loudly
+            // rather than silently diverging from the other backends.
+            assert!(
+                opts.decay_tau.is_none(),
+                "the threads backend does not support γ-annealing (decay_tau); \
+                 use the reference or sim backend"
+            );
+            let (eval_models, _) = build_models(kind, spec);
+            let cfg = mk_cfg();
+            // Same closed-form time axis as the reference driver.
+            let comm_time = opts
+                .net
+                .map(|net| {
+                    algorithms::from_name(algo, mk_cfg(), &x0, spec.n_nodes)
+                        .expect("algorithm")
+                        .comm()
+                        .time(&net)
+                })
+                .unwrap_or(0.0);
+            let name = coordinator::trace_name(algo, &cfg);
+            let run = coordinator::run_threaded(algo, &cfg, models, &x0, opts.gamma, opts.iters)
+                .expect("threaded backend run");
+            let eval = |x: &[f32]| -> f64 {
+                eval_models.iter().map(|m| m.full_loss(x)).sum::<f64>() / eval_models.len() as f64
+            };
+            let params = run.final_params();
+            TrainTrace {
+                algo: name,
+                points: vec![
+                    TracePoint {
+                        iter: 0,
+                        global_loss: eval(&x0),
+                        consensus: 0.0,
+                        bytes_sent: 0,
+                        sim_time_s: 0.0,
+                    },
+                    TracePoint {
+                        iter: opts.iters,
+                        global_loss: eval(&run.mean_params()),
+                        consensus: algorithms::consensus_distance(&params),
+                        bytes_sent: run.total_bytes(),
+                        sim_time_s: opts.iters as f64 * (opts.compute_per_iter_s + comm_time),
+                    },
+                ],
+            }
+        }
+    }
 }
 
 /// Tabulate several traces side by side at shared eval points.
@@ -118,6 +244,58 @@ mod tests {
         let t = run_named("dcd", "q8", &spec, &kind, None, &opts, 1);
         assert_eq!(t.points.len(), 3);
         assert!(t.final_loss().is_finite());
+    }
+
+    #[test]
+    fn backend_names_round_trip() {
+        for b in [ExecBackend::Reference, ExecBackend::Sim, ExecBackend::Threads] {
+            assert_eq!(ExecBackend::from_name(b.name()), Some(b));
+        }
+        assert_eq!(ExecBackend::from_name("gpu-rdma"), None);
+    }
+
+    #[test]
+    fn sim_backend_trace_is_bitwise_equal_to_reference() {
+        // The event engine runs the same per-node programs as the
+        // reference math, so the whole evaluated trace — not just final
+        // params — must agree to the last bit.
+        let (spec, kind) = convergence_spec(4, true);
+        let opts = RunOpts {
+            iters: 20,
+            gamma: 0.05,
+            eval_every: 10,
+            ..Default::default()
+        };
+        let a = run_named_on(ExecBackend::Reference, "dcd", "q8", &spec, &kind, None, &opts, 1);
+        let b = run_named_on(ExecBackend::Sim, "dcd", "q8", &spec, &kind, None, &opts, 1);
+        assert_eq!(a.algo, b.algo);
+        assert_eq!(a.points.len(), b.points.len());
+        for (p, q) in a.points.iter().zip(&b.points) {
+            assert_eq!(p.iter, q.iter);
+            assert_eq!(p.global_loss.to_bits(), q.global_loss.to_bits());
+            assert_eq!(p.consensus.to_bits(), q.consensus.to_bits());
+            assert_eq!(p.bytes_sent, q.bytes_sent);
+        }
+    }
+
+    #[test]
+    fn threads_backend_trace_reaches_same_final_loss() {
+        let (spec, kind) = convergence_spec(4, true);
+        let opts = RunOpts {
+            iters: 20,
+            gamma: 0.05,
+            eval_every: 10,
+            ..Default::default()
+        };
+        let a = run_named_on(ExecBackend::Reference, "dcd", "q8", &spec, &kind, None, &opts, 1);
+        let c = run_named_on(ExecBackend::Threads, "dcd", "q8", &spec, &kind, None, &opts, 1);
+        assert_eq!(
+            a.final_loss().to_bits(),
+            c.final_loss().to_bits(),
+            "threads {} vs reference {}",
+            c.final_loss(),
+            a.final_loss()
+        );
     }
 
     #[test]

@@ -9,17 +9,29 @@
 //! Architecture (three layers, python never on the training path):
 //! - **L3 (this crate)** — the decentralized coordinator: topologies &
 //!   mixing matrices, unbiased compression codecs, training algorithms,
-//!   a bandwidth/latency network simulator, a threaded transport, metrics,
+//!   a bandwidth/latency network cost model plus a discrete-event
+//!   simulation engine ([`network::sim`]), a threaded transport, metrics,
 //!   config, CLI ([`coordinator`], [`algorithms`], [`compression`],
 //!   [`network`], [`topology`]).
 //! - **L2** — a JAX transformer whose `grad_step` is AOT-lowered to HLO
 //!   text by `python/compile/aot.py` and executed from rust via PJRT
-//!   ([`runtime`]).
+//!   ([`runtime`], behind the `pjrt` cargo feature).
 //! - **L1** — Pallas kernels (stochastic quantization, fused gossip-SGD)
 //!   called inside the L2 graph (`python/compile/kernels/`).
 //!
-//! See `DESIGN.md` for the full system inventory and experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! Training executes on one of two interchangeable backends — `threads`
+//! (one OS thread per node, real message passing) and `sim` (the event
+//! engine: virtual clock, per-link costs, scales to n ≥ 64) — that are
+//! pinned bitwise-identical by the integration suite.
+//!
+//! See `README.md` for the quickstart, `DESIGN.md` for the full system
+//! inventory and experiment index, and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+// Numeric-kernel style: index loops over multiple parallel buffers are
+// deliberate in the hot paths (they auto-vectorize and keep the per-node
+// operation order that the bitwise-determinism contract depends on).
+#![allow(clippy::needless_range_loop)]
 
 pub mod algorithms;
 pub mod compression;

@@ -1,8 +1,8 @@
 //! `decomp` — the leader CLI.
 //!
 //! Subcommands:
-//!   train      run a training job (threaded decentralized workers)
-//!   simulate   run the deterministic single-process simulator
+//!   train      run a training job (--backend threads|sim)
+//!   simulate   run the deterministic single-process reference simulator
 //!   spectra    print mixing-matrix spectral stats for a topology
 //!   fig1..fig4 regenerate a paper figure's table(s)
 //!   ablations  run the theory-driven ablation sweeps
@@ -10,15 +10,18 @@
 //!
 //! Examples:
 //!   decomp train --algo dcd --compressor q8 --nodes 8 --iters 500
+//!   decomp train --backend sim --nodes 64 --bandwidth-mbps 5 --latency-ms 5
 //!   decomp train --config experiments.json --gamma 0.05
 //!   decomp spectra --topology hypercube --nodes 16
 //!   decomp fig3
 
 use decomp::algorithms::{self, RunOpts};
 use decomp::config::{apply_cli_overrides, load_config};
-use decomp::coordinator::{run_threaded, TrainConfig};
+use decomp::coordinator::{run_sim_trace, run_threaded, Backend, TrainConfig};
 use decomp::experiments::{ablations, fig1, fig2, fig3, fig4};
-use decomp::metrics::{fmt_bytes, Table};
+use decomp::metrics::{fmt_bytes, fmt_secs, Table};
+use decomp::network::cost::{CostModel, NetworkModel};
+use decomp::network::sim::SimOpts;
 use decomp::util::cli::Args;
 
 fn main() {
@@ -54,16 +57,23 @@ const HELP: &str = "decomp — Communication Compression for Decentralized Train
 USAGE: decomp <command> [--flags]
 
 COMMANDS
-  train       threaded decentralized training (real message passing)
+  train       decentralized training on a chosen execution backend
+                --backend threads|sim   (threads: one OS thread per node,
+                  real message passing; sim: discrete-event engine with a
+                  virtual clock — scales to n >= 64 and reports modeled time)
                 --algo dpsgd|dcd|ecd|naive|allreduce  --compressor fp32|q8|q4|...
                 --nodes N --topology ring|full|chain|star|hypercube
                 --gamma F --iters N --model quadratic|linear|logistic|mlp
+                --bandwidth-mbps F --latency-ms F  (sim backend network condition)
                 --config file.json (CLI flags override file values)
-  simulate    same options, deterministic single-process simulator
+  simulate    same options, deterministic single-process reference simulator
   spectra     mixing-matrix spectral stats: --topology T --nodes N
   fig1..fig4  regenerate the paper figure tables (--quick for small runs)
   ablations   compressor/topology/heterogeneity sweeps
-  netmodel    per-iteration communication-time landscape";
+  netmodel    per-iteration communication-time landscape
+
+Set DECOMP_BACKEND=sim|threads|reference to re-route the figure
+experiments (fig1..fig4, ablations) through an execution backend.";
 
 fn load_train_config(args: &Args) -> anyhow::Result<TrainConfig> {
     let mut cfg = match args.opt_str("config") {
@@ -76,12 +86,21 @@ fn load_train_config(args: &Args) -> anyhow::Result<TrainConfig> {
 
 fn train(args: &Args, threaded: bool) -> anyhow::Result<()> {
     let cfg = load_train_config(args)?;
+    let backend = if threaded {
+        Some(cfg.parse_backend()?)
+    } else {
+        None
+    };
     let algo_cfg = cfg.build_algo_config()?;
     let (models, x0) = cfg.build_models()?;
     let (eval_models, _) = cfg.build_models()?;
     println!(
         "{} {} | n={} topo={} comp={} gamma={} iters={} model={} dim={}",
-        if threaded { "train(threaded)" } else { "simulate" },
+        match backend {
+            Some(Backend::Threads) => "train(threads)",
+            Some(Backend::Sim) => "train(sim)",
+            None => "simulate",
+        },
         cfg.algo,
         cfg.n_nodes,
         cfg.topology,
@@ -98,6 +117,51 @@ fn train(args: &Args, threaded: bool) -> anyhow::Result<()> {
         algo_cfg.mixing.stats.gap,
         algo_cfg.mixing.dcd_alpha_bound()
     );
+
+    if backend == Some(Backend::Sim) {
+        // Discrete-event backend: virtual clock, per-link costs, honest
+        // frame accounting. Network condition from --bandwidth-mbps /
+        // --latency-ms (defaults: the paper's worst case).
+        let net = NetworkModel::new(
+            args.f64("bandwidth-mbps", 5.0) * 1e6,
+            args.f64("latency-ms", 5.0) * 1e-3,
+        );
+        let opts = RunOpts {
+            iters: cfg.iters,
+            gamma: cfg.gamma,
+            eval_every: cfg.eval_every,
+            ..Default::default()
+        };
+        let sim = SimOpts {
+            cost: CostModel::Uniform(net),
+            compute_per_iter_s: args.f64("compute-ms", 0.0) * 1e-3,
+        };
+        let t0 = std::time::Instant::now();
+        let trace = run_sim_trace(&cfg.algo, &algo_cfg, models, &eval_models, &x0, &opts, sim)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let mut t = Table::new(
+            "sim-backend run (virtual time)",
+            &["iter", "f_mean", "consensus", "bytes", "virtual_t"],
+        );
+        for p in &trace.points {
+            t.row(vec![
+                p.iter.to_string(),
+                format!("{:.5}", p.global_loss),
+                format!("{:.3e}", p.consensus),
+                fmt_bytes(p.bytes_sent as f64),
+                fmt_secs(p.sim_time_s),
+            ]);
+        }
+        t.print();
+        let last = trace.points.last().unwrap();
+        println!(
+            "final f(x̄) = {:.5} | modeled time = {} for {} iters | host wall = {wall:.2}s",
+            last.global_loss,
+            fmt_secs(last.sim_time_s),
+            cfg.iters
+        );
+        return Ok(());
+    }
 
     if threaded {
         let t0 = std::time::Instant::now();

@@ -24,6 +24,13 @@
 //! both are bad (§5.3, Fig. 3).
 
 /// A homogeneous network condition (all links identical, full duplex).
+///
+/// ```
+/// use decomp::network::NetworkModel;
+/// let net = NetworkModel::new(8e6, 1e-3); // 1 MB/s, 1 ms one-way
+/// // 1 round + 1000 bytes: 1 ms latency + 1 ms on the wire.
+/// assert!((net.transfer_time(1, 1000.0) - 2e-3).abs() < 1e-12);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NetworkModel {
     /// Link bandwidth in bits per second.
@@ -41,10 +48,94 @@ impl NetworkModel {
         }
     }
 
+    /// An idealized link: infinite bandwidth, zero latency. Used by the
+    /// discrete-event engine when a run should charge compute time only.
+    pub fn ideal() -> NetworkModel {
+        NetworkModel {
+            bandwidth_bps: f64::INFINITY,
+            latency_s: 0.0,
+        }
+    }
+
+    /// Seconds a NIC spends serializing `bytes` onto this link (no
+    /// latency term).
+    pub fn tx_seconds(&self, bytes: f64) -> f64 {
+        bytes * 8.0 / self.bandwidth_bps
+    }
+
     /// Time to push `bytes` through one NIC after `rounds` sequential
     /// latency hits.
     pub fn transfer_time(&self, rounds: usize, bytes: f64) -> f64 {
-        rounds as f64 * self.latency_s + bytes * 8.0 / self.bandwidth_bps
+        rounds as f64 * self.latency_s + self.tx_seconds(bytes)
+    }
+}
+
+/// Per-link cost description for the discrete-event engine
+/// ([`crate::network::sim`]): where [`NetworkModel`] describes one
+/// homogeneous condition, `CostModel` assigns a (bandwidth, latency) pair
+/// to every ordered link so sweeps over heterogeneous grids — stragglers,
+/// slow cross-rack links, asymmetric uplinks — stay deterministic and
+/// closed under the same accounting.
+///
+/// ```
+/// use decomp::network::{CostModel, NetworkModel};
+/// let uniform = CostModel::Uniform(NetworkModel::new(5e6, 5e-3));
+/// assert_eq!(uniform.link(0, 1).latency_s, 5e-3);
+/// // A straggler node whose links are 10x slower:
+/// let strag = CostModel::uniform_with_stragglers(8, NetworkModel::new(5e6, 5e-3), &[3], 10.0);
+/// assert!(strag.link(3, 4).bandwidth_bps < strag.link(0, 1).bandwidth_bps);
+/// ```
+#[derive(Debug, Clone)]
+pub enum CostModel {
+    /// Infinite bandwidth, zero latency — charges compute time only.
+    Ideal,
+    /// All links identical (the paper's `tc`-shaped testbed).
+    Uniform(NetworkModel),
+    /// Explicit n×n grid, row-major by (from, to). The diagonal is
+    /// ignored (nodes never pay to talk to themselves).
+    PerLink { n: usize, links: Vec<NetworkModel> },
+}
+
+impl CostModel {
+    /// The model charged for a message from `from` to `to`.
+    pub fn link(&self, from: usize, to: usize) -> NetworkModel {
+        match self {
+            CostModel::Ideal => NetworkModel::ideal(),
+            CostModel::Uniform(m) => *m,
+            CostModel::PerLink { n, links } => {
+                assert!(from < *n && to < *n, "link ({from},{to}) out of range n={n}");
+                links[from * n + to]
+            }
+        }
+    }
+
+    /// Build an explicit grid from a closure over (from, to).
+    pub fn per_link(n: usize, mut f: impl FnMut(usize, usize) -> NetworkModel) -> CostModel {
+        let mut links = Vec::with_capacity(n * n);
+        for from in 0..n {
+            for to in 0..n {
+                links.push(f(from, to));
+            }
+        }
+        CostModel::PerLink { n, links }
+    }
+
+    /// Uniform condition except every link touching a straggler node is
+    /// `factor`× slower in bandwidth and `factor`× higher in latency.
+    pub fn uniform_with_stragglers(
+        n: usize,
+        base: NetworkModel,
+        stragglers: &[usize],
+        factor: f64,
+    ) -> CostModel {
+        assert!(factor >= 1.0, "straggler factor must be >= 1, got {factor}");
+        Self::per_link(n, |from, to| {
+            if stragglers.contains(&from) || stragglers.contains(&to) {
+                NetworkModel::new(base.bandwidth_bps / factor, base.latency_s * factor)
+            } else {
+                base
+            }
+        })
     }
 }
 
@@ -94,6 +185,16 @@ impl NetCondition {
 /// Per-iteration communication schedule of an algorithm: how many
 /// sequential rounds and how many bytes each node serializes through its
 /// NIC.
+///
+/// ```
+/// use decomp::network::{CommSchedule, NetCondition};
+/// // One gossip exchange to 2 ring neighbors vs ring Allreduce across 8
+/// // nodes: at high latency the 2(n−1)-round Allreduce loses (Fig. 2c).
+/// let net = NetCondition::HighLatency.model();
+/// let gossip = CommSchedule::gossip(2, 1 << 20).time(&net);
+/// let allreduce = CommSchedule::allreduce(8, 1 << 20).time(&net);
+/// assert!(gossip < allreduce);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CommSchedule {
     pub rounds: usize,
@@ -245,5 +346,33 @@ mod tests {
         let s = CommSchedule::parameter_server(8, MB);
         assert_eq!(s.rounds, 2);
         assert_eq!(s.bytes_per_node, 14.0 * MB as f64);
+    }
+
+    #[test]
+    fn ideal_link_costs_nothing() {
+        let m = NetworkModel::ideal();
+        assert_eq!(m.transfer_time(3, 1e9), 0.0);
+        assert_eq!(CostModel::Ideal.link(0, 1).tx_seconds(1e12), 0.0);
+    }
+
+    #[test]
+    fn cost_model_uniform_and_grid_agree() {
+        let base = NetworkModel::new(5e6, 5e-3);
+        let uni = CostModel::Uniform(base);
+        let grid = CostModel::per_link(4, |_, _| base);
+        for from in 0..4 {
+            for to in 0..4 {
+                assert_eq!(uni.link(from, to), grid.link(from, to));
+            }
+        }
+    }
+
+    #[test]
+    fn straggler_slows_only_its_links() {
+        let base = NetworkModel::new(1e8, 1e-3);
+        let cm = CostModel::uniform_with_stragglers(6, base, &[2], 4.0);
+        assert_eq!(cm.link(0, 1), base);
+        assert_eq!(cm.link(2, 5).bandwidth_bps, base.bandwidth_bps / 4.0);
+        assert_eq!(cm.link(5, 2).latency_s, base.latency_s * 4.0);
     }
 }

@@ -1,17 +1,25 @@
-//! Network modelling and transport.
+//! Network modelling, transport, and simulation.
 //!
-//! Two halves:
+//! Three halves:
 //! - [`cost`] — a deterministic bandwidth/latency cost model replicating
-//!   the paper's `tc`-shaped EC2 testbed (§5.1). Figures 2(b–d) and 3 are
-//!   pure communication accounting; this module provides the closed forms.
+//!   the paper's `tc`-shaped EC2 testbed (§5.1): closed-form per-iteration
+//!   communication times ([`CommSchedule`], [`NetworkModel`]) plus the
+//!   per-link [`CostModel`] grids the event engine charges against.
 //! - [`transport`] — an in-process message-passing fabric (per-node
 //!   mailboxes over `std::sync::mpsc`) over which the coordinator runs the
 //!   algorithms *actually decentralized*: worker threads exchange real
 //!   compressed [`crate::compression::Wire`] messages with no shared
 //!   model state.
+//! - [`sim`] — the discrete-event engine: a single-threaded event loop
+//!   with a virtual clock and per-link costs that executes the same
+//!   [`sim::NodeProgram`] state machines as the threaded coordinator,
+//!   bitwise-identically, while scaling experiments to n ≥ 64 nodes and
+//!   arbitrary network grids.
 
 pub mod cost;
+pub mod sim;
 pub mod transport;
 
-pub use cost::{CommSchedule, NetCondition, NetworkModel};
+pub use cost::{CommSchedule, CostModel, NetCondition, NetworkModel};
+pub use sim::{run_sim, Frame, NodeProgram, NodeReport, Outbox, SimEngine, SimOpts, SimRun};
 pub use transport::{Endpoint, Message, Transport};

@@ -1,0 +1,790 @@
+//! Deterministic discrete-event network engine.
+//!
+//! The threaded coordinator ([`crate::coordinator`]) runs one OS thread
+//! per node with blocking mailbox receives — faithful to deployment, but
+//! it caps realistic sweeps at ~8–16 nodes and measures *host* wall-clock,
+//! not the modeled network. This module replaces thread-per-node execution
+//! for experiments with a single-threaded event loop over a **virtual
+//! clock**:
+//!
+//! - every node advances a local clock; sends serialize through the
+//!   sender's NIC under a per-link bandwidth/latency [`CostModel`];
+//! - one iteration's payloads per link are coalesced into a single
+//!   [`Frame`] with a compact varint header (one latency charge per link
+//!   per phase, honest header accounting);
+//! - deliveries are processed from a time-ordered event queue, and a
+//!   receiver's clock waits on its slowest expected arrival.
+//!
+//! Algorithms plug in as [`NodeProgram`]s — the same per-node state
+//! machines the threaded coordinator executes — so the two backends
+//! produce **bitwise-identical trajectories** (pinned by
+//! `rust/tests/backend_equivalence.rs`) while the sim backend scales to
+//! n ≥ 64 nodes and arbitrary topology/latency/bandwidth grids in
+//! milliseconds of host time.
+//!
+//! The wire framing round-trips exactly:
+//!
+//! ```
+//! use decomp::compression::Wire;
+//! use decomp::network::sim::Frame;
+//! use decomp::network::transport::Channel;
+//! let frame = Frame {
+//!     msgs: vec![(Channel::Gossip, Wire { len: 3, payload: vec![1, 2, 3] })],
+//! };
+//! let bytes = frame.encode();
+//! assert_eq!(bytes.len(), frame.encoded_len());
+//! let back = Frame::decode(&bytes).unwrap();
+//! assert_eq!(back.msgs[0].1.payload, vec![1, 2, 3]);
+//! ```
+
+use crate::compression::Wire;
+use crate::network::cost::CostModel;
+use crate::network::transport::Channel;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+// ---------------------------------------------------------------------------
+// Node programs: the per-node algorithm state machines.
+
+/// Messages a node wants to send in the current (iteration, phase).
+#[derive(Debug, Default)]
+pub struct Outbox {
+    msgs: Vec<(usize, Channel, Wire)>,
+}
+
+impl Outbox {
+    pub fn new() -> Outbox {
+        Outbox { msgs: Vec::new() }
+    }
+
+    /// Queue `wire` for delivery to node `to`.
+    pub fn send(&mut self, to: usize, channel: Channel, wire: Wire) {
+        self.msgs.push((to, channel, wire));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.msgs.is_empty()
+    }
+
+    pub fn into_msgs(self) -> Vec<(usize, Channel, Wire)> {
+        self.msgs
+    }
+}
+
+/// One node of a synchronous decentralized algorithm, written as an
+/// emit/absorb state machine so the *same* per-node math runs on either
+/// execution backend:
+///
+/// - the threaded coordinator calls `emit` → sends over mailboxes →
+///   blocking-receives the `expects` set → `absorb`;
+/// - the discrete-event engine calls `emit` for every node, routes the
+///   frames through the virtual network, then calls `absorb` for every
+///   node.
+///
+/// Per iteration `t` the executor runs `phases()` communication phases;
+/// messages emitted in phase `p` are delivered (and consumed by `absorb`)
+/// in the same phase. Gossip algorithms use one phase; hub-rooted
+/// reductions use two (leaves → hub, hub → leaves).
+///
+/// Determinism contract: all state (RNG streams included) is owned by the
+/// program, and the executor never reorders one node's calls — so a
+/// trajectory depends only on the program, not the backend.
+pub trait NodeProgram: Send {
+    /// Communication phases per iteration (gossip: 1, reductions: 2).
+    fn phases(&self) -> usize {
+        1
+    }
+
+    /// Run this node's local computation for (t, phase) and queue sends.
+    fn emit(&mut self, t: u64, phase: usize, out: &mut Outbox);
+
+    /// The (sender, channel) messages this node consumes in (t, phase),
+    /// in consumption order.
+    fn expects(&self, t: u64, phase: usize) -> Vec<(usize, Channel)>;
+
+    /// Consume the expected messages (aligned with `expects` order) and
+    /// finish the phase's local update.
+    fn absorb(&mut self, t: u64, phase: usize, msgs: Vec<Wire>);
+
+    /// Update the step size before an iteration (drives γ-annealing).
+    fn set_gamma(&mut self, gamma: f32);
+
+    /// The node's current iterate x^{(i)}.
+    fn x(&self) -> &[f32];
+
+    /// Consume the program: (final iterate, per-iteration minibatch
+    /// losses).
+    fn into_result(self: Box<Self>) -> (Vec<f32>, Vec<f64>);
+}
+
+// ---------------------------------------------------------------------------
+// Wire framing: one frame per (link, phase), compact varint header.
+
+/// All payloads one node sends to one neighbor within a single
+/// communication phase, batched into one on-wire frame.
+///
+/// Layout: `varint(count)` then per message `u8 channel-tag`,
+/// `varint(element_count)`, `varint(payload_len)`, payload bytes. The
+/// engine charges bandwidth on [`Frame::encoded_len`], so header overhead
+/// is accounted honestly (it is ≤ ~11 bytes per message — negligible next
+/// to model payloads, but not free).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub msgs: Vec<(Channel, Wire)>,
+}
+
+fn channel_tag(c: Channel) -> u8 {
+    match c {
+        Channel::Gossip => 0,
+        Channel::Reduce => 1,
+    }
+}
+
+fn channel_from_tag(t: u8) -> Option<Channel> {
+    match t {
+        0 => Some(Channel::Gossip),
+        1 => Some(Channel::Reduce),
+        _ => None,
+    }
+}
+
+fn varint_len(mut v: u64) -> usize {
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
+}
+
+fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        out.push((v as u8 & 0x7f) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+fn read_varint(buf: &[u8], pos: &mut usize) -> Option<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf.get(*pos)?;
+        *pos += 1;
+        if shift >= 64 {
+            return None;
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Some(v);
+        }
+        shift += 7;
+    }
+}
+
+impl Frame {
+    /// Sum of payload bytes (what the unframed mailbox transport counts).
+    pub fn payload_bytes(&self) -> usize {
+        self.msgs.iter().map(|(_, w)| w.payload.len()).sum()
+    }
+
+    /// Exact on-wire size of [`Frame::encode`] without materializing it.
+    pub fn encoded_len(&self) -> usize {
+        let mut n = varint_len(self.msgs.len() as u64);
+        for (_, w) in &self.msgs {
+            n += 1 // channel tag
+                + varint_len(w.len as u64)
+                + varint_len(w.payload.len() as u64)
+                + w.payload.len();
+        }
+        n
+    }
+
+    /// Serialize the frame.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        write_varint(&mut out, self.msgs.len() as u64);
+        for (ch, w) in &self.msgs {
+            out.push(channel_tag(*ch));
+            write_varint(&mut out, w.len as u64);
+            write_varint(&mut out, w.payload.len() as u64);
+            out.extend_from_slice(&w.payload);
+        }
+        out
+    }
+
+    /// Parse a frame; `None` on truncation or unknown channel tags.
+    pub fn decode(buf: &[u8]) -> Option<Frame> {
+        let mut pos = 0usize;
+        let count = read_varint(buf, &mut pos)? as usize;
+        let mut msgs = Vec::with_capacity(count);
+        for _ in 0..count {
+            let ch = channel_from_tag(*buf.get(pos)?)?;
+            pos += 1;
+            let len = usize::try_from(read_varint(buf, &mut pos)?).ok()?;
+            let plen = usize::try_from(read_varint(buf, &mut pos)?).ok()?;
+            let end = pos.checked_add(plen)?;
+            let payload = buf.get(pos..end)?.to_vec();
+            pos = end;
+            msgs.push((ch, Wire { len, payload }));
+        }
+        if pos == buf.len() {
+            Some(Frame { msgs })
+        } else {
+            None
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The engine.
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct SimOpts {
+    /// Per-link bandwidth/latency charged on every frame.
+    pub cost: CostModel,
+    /// Modeled local compute seconds charged once per iteration per node.
+    pub compute_per_iter_s: f64,
+}
+
+impl Default for SimOpts {
+    fn default() -> SimOpts {
+        SimOpts {
+            cost: CostModel::Ideal,
+            compute_per_iter_s: 0.0,
+        }
+    }
+}
+
+/// The virtual-time state of a run, readable between iterations.
+#[derive(Debug, Clone)]
+pub struct SimClock {
+    /// Per-node local virtual time (seconds).
+    pub node_time: Vec<f64>,
+    /// Per-node NIC availability: when the next outgoing frame may start
+    /// serializing (models send-side bandwidth contention).
+    pub nic_free: Vec<f64>,
+    /// Cumulative payload bytes across all nodes (header-free, matching
+    /// the mailbox transport's accounting).
+    pub payload_bytes: u64,
+    /// Cumulative on-wire bytes including frame headers.
+    pub frame_bytes: u64,
+    /// Frames sent.
+    pub frames: u64,
+}
+
+impl SimClock {
+    fn new(n: usize) -> SimClock {
+        SimClock {
+            node_time: vec![0.0; n],
+            nic_free: vec![0.0; n],
+            payload_bytes: 0,
+            frame_bytes: 0,
+            frames: 0,
+        }
+    }
+
+    /// Global virtual time: the slowest node's clock.
+    pub fn now(&self) -> f64 {
+        self.node_time.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+/// A frame in flight, ordered by (arrival time, enqueue sequence) so the
+/// event queue pops deterministically.
+struct Arrival {
+    time: f64,
+    seq: u64,
+    from: usize,
+    to: usize,
+    frame: Frame,
+}
+
+impl PartialEq for Arrival {
+    fn eq(&self, other: &Arrival) -> bool {
+        self.seq == other.seq
+    }
+}
+
+impl Eq for Arrival {}
+
+impl PartialOrd for Arrival {
+    fn partial_cmp(&self, other: &Arrival) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Arrival {
+    fn cmp(&self, other: &Arrival) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// What one node hands back when a run finishes — shared by both
+/// execution backends (the threaded coordinator re-exports this as its
+/// `WorkerReport`), so backend-equivalence tests compare like for like.
+#[derive(Debug)]
+pub struct NodeReport {
+    pub node: usize,
+    pub final_x: Vec<f32>,
+    /// Minibatch loss at every iteration (pre-step iterate).
+    pub losses: Vec<f64>,
+    /// Payload bytes this node pushed through its NIC.
+    pub bytes_sent: u64,
+    /// Logical messages (pre-batching) this node sent.
+    pub msgs_sent: u64,
+}
+
+/// Per-node final iterates, in node order.
+pub fn final_params(reports: &[NodeReport]) -> Vec<Vec<f32>> {
+    reports.iter().map(|r| r.final_x.clone()).collect()
+}
+
+/// x̄ = (1/n) Σ_i x^{(i)} over the final iterates.
+pub fn mean_params(reports: &[NodeReport]) -> Vec<f32> {
+    let cols: Vec<&[f32]> = reports.iter().map(|r| r.final_x.as_slice()).collect();
+    let mut out = vec![0.0f32; cols[0].len()];
+    crate::linalg::vecops::mean_of(&cols, &mut out);
+    out
+}
+
+/// Total payload bytes across nodes.
+pub fn total_bytes(reports: &[NodeReport]) -> u64 {
+    reports.iter().map(|r| r.bytes_sent).sum()
+}
+
+/// Mean minibatch loss per iteration across nodes.
+pub fn mean_losses(reports: &[NodeReport]) -> Vec<f64> {
+    let iters = reports[0].losses.len();
+    (0..iters)
+        .map(|t| reports.iter().map(|r| r.losses[t]).sum::<f64>() / reports.len() as f64)
+        .collect()
+}
+
+/// A completed discrete-event run.
+#[derive(Debug)]
+pub struct SimRun {
+    /// Per-node reports, sorted by node id.
+    pub reports: Vec<NodeReport>,
+    /// Virtual seconds the run took (slowest node's clock).
+    pub virtual_time_s: f64,
+    /// Total payload bytes (header-free).
+    pub payload_bytes: u64,
+    /// Total on-wire bytes including frame headers.
+    pub frame_bytes: u64,
+    /// Frames that crossed the network.
+    pub frames: u64,
+}
+
+impl SimRun {
+    pub fn final_params(&self) -> Vec<Vec<f32>> {
+        final_params(&self.reports)
+    }
+
+    pub fn mean_params(&self) -> Vec<f32> {
+        mean_params(&self.reports)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        total_bytes(&self.reports)
+    }
+
+    /// Mean minibatch loss per iteration across nodes.
+    pub fn mean_losses(&self) -> Vec<f64> {
+        mean_losses(&self.reports)
+    }
+}
+
+/// The single-threaded discrete-event executor. Drive it one iteration at
+/// a time (interleaving evaluation, γ-annealing, or early stopping between
+/// iterations), or use [`run_sim`] for a fixed-length run.
+pub struct SimEngine {
+    opts: SimOpts,
+    clock: SimClock,
+    bytes_sent: Vec<u64>,
+    msgs_sent: Vec<u64>,
+    seq: u64,
+}
+
+impl SimEngine {
+    pub fn new(n: usize, opts: SimOpts) -> SimEngine {
+        SimEngine {
+            opts,
+            clock: SimClock::new(n),
+            bytes_sent: vec![0; n],
+            msgs_sent: vec![0; n],
+            seq: 0,
+        }
+    }
+
+    pub fn clock(&self) -> &SimClock {
+        &self.clock
+    }
+
+    /// Advance all programs through one synchronous iteration `t` (all
+    /// communication phases), charging compute and network virtual time.
+    pub fn step(&mut self, programs: &mut [Box<dyn NodeProgram>], t: u64) {
+        let n = programs.len();
+        assert_eq!(n, self.clock.node_time.len(), "engine sized for {} nodes", n);
+        let phases = programs[0].phases();
+        debug_assert!(
+            programs.iter().all(|p| p.phases() == phases),
+            "all nodes must run the same algorithm"
+        );
+
+        for i in 0..n {
+            self.clock.node_time[i] += self.opts.compute_per_iter_s;
+        }
+
+        for phase in 0..phases {
+            let mut queue: BinaryHeap<Arrival> = BinaryHeap::new();
+
+            // Emit: run each node's local computation, coalesce its sends
+            // into one frame per destination, charge the NIC and the link.
+            for (i, prog) in programs.iter_mut().enumerate() {
+                let mut out = Outbox::new();
+                prog.emit(t, phase, &mut out);
+                let msgs = out.into_msgs();
+                if msgs.is_empty() {
+                    continue;
+                }
+                // Group by destination preserving emit order.
+                let mut dests: Vec<usize> = Vec::new();
+                let mut frames: HashMap<usize, Frame> = HashMap::new();
+                for (to, ch, wire) in msgs {
+                    frames
+                        .entry(to)
+                        .or_insert_with(|| {
+                            dests.push(to);
+                            Frame { msgs: Vec::new() }
+                        })
+                        .msgs
+                        .push((ch, wire));
+                }
+                for to in dests {
+                    let frame = frames.remove(&to).expect("frame grouped above");
+                    let link = self.opts.cost.link(i, to);
+                    let on_wire = frame.encoded_len();
+                    let start = self.clock.node_time[i].max(self.clock.nic_free[i]);
+                    let tx = link.tx_seconds(on_wire as f64);
+                    self.clock.nic_free[i] = start + tx;
+                    self.bytes_sent[i] += frame.payload_bytes() as u64;
+                    self.msgs_sent[i] += frame.msgs.len() as u64;
+                    self.clock.payload_bytes += frame.payload_bytes() as u64;
+                    self.clock.frame_bytes += on_wire as u64;
+                    self.clock.frames += 1;
+                    queue.push(Arrival {
+                        time: start + tx + link.latency_s,
+                        seq: self.seq,
+                        from: i,
+                        to,
+                        frame,
+                    });
+                    self.seq += 1;
+                }
+            }
+
+            // Deliver in virtual-time order; a receiver's clock waits on
+            // its latest arrival.
+            let mut delivered: HashMap<(usize, usize, Channel), VecDeque<Wire>> = HashMap::new();
+            while let Some(a) = queue.pop() {
+                let nt = &mut self.clock.node_time[a.to];
+                *nt = nt.max(a.time);
+                for (ch, wire) in a.frame.msgs {
+                    delivered.entry((a.from, a.to, ch)).or_default().push_back(wire);
+                }
+            }
+
+            // Absorb: each node consumes exactly what it expects.
+            for (i, prog) in programs.iter_mut().enumerate() {
+                let expects = prog.expects(t, phase);
+                let msgs: Vec<Wire> = expects
+                    .iter()
+                    .map(|&(from, ch)| {
+                        delivered
+                            .get_mut(&(from, i, ch))
+                            .and_then(|q| q.pop_front())
+                            .unwrap_or_else(|| {
+                                panic!(
+                                    "sim: node {i} expected a message from {from} on {ch:?} \
+                                     at t={t} phase={phase} that was never sent"
+                                )
+                            })
+                    })
+                    .collect();
+                prog.absorb(t, phase, msgs);
+            }
+            debug_assert!(
+                delivered.values().all(|q| q.is_empty()),
+                "sim: undelivered messages at t={t} phase={phase}"
+            );
+        }
+    }
+
+    /// Consume the engine and programs into a [`SimRun`].
+    pub fn finish(self, programs: Vec<Box<dyn NodeProgram>>) -> SimRun {
+        let virtual_time_s = self.clock.now();
+        let reports = programs
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let (final_x, losses) = p.into_result();
+                NodeReport {
+                    node: i,
+                    final_x,
+                    losses,
+                    bytes_sent: self.bytes_sent[i],
+                    msgs_sent: self.msgs_sent[i],
+                }
+            })
+            .collect();
+        SimRun {
+            reports,
+            virtual_time_s,
+            payload_bytes: self.clock.payload_bytes,
+            frame_bytes: self.clock.frame_bytes,
+            frames: self.clock.frames,
+        }
+    }
+}
+
+/// Run `iters` synchronous iterations of `programs` on the event engine.
+pub fn run_sim(mut programs: Vec<Box<dyn NodeProgram>>, iters: usize, opts: SimOpts) -> SimRun {
+    let mut engine = SimEngine::new(programs.len(), opts);
+    for t in 0..iters as u64 {
+        engine.step(&mut programs, t);
+    }
+    engine.finish(programs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::cost::NetworkModel;
+
+    fn wire_of(bytes: &[u8]) -> Wire {
+        Wire {
+            len: bytes.len(),
+            payload: bytes.to_vec(),
+        }
+    }
+
+    #[test]
+    fn varint_round_trips() {
+        for v in [0u64, 1, 127, 128, 300, 16_383, 16_384, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            write_varint(&mut buf, v);
+            assert_eq!(buf.len(), varint_len(v));
+            let mut pos = 0;
+            assert_eq!(read_varint(&buf, &mut pos), Some(v));
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn frame_round_trips_multiple_channels() {
+        let f = Frame {
+            msgs: vec![
+                (Channel::Gossip, wire_of(&[1, 2, 3])),
+                (Channel::Reduce, wire_of(&[])),
+                (Channel::Gossip, wire_of(&[9; 300])),
+            ],
+        };
+        let enc = f.encode();
+        assert_eq!(enc.len(), f.encoded_len());
+        assert_eq!(Frame::decode(&enc).unwrap(), f);
+    }
+
+    #[test]
+    fn frame_decode_rejects_garbage() {
+        assert!(Frame::decode(&[]).is_none());
+        assert!(Frame::decode(&[1, 7]).is_none()); // unknown channel tag
+        let f = Frame {
+            msgs: vec![(Channel::Gossip, wire_of(&[1, 2, 3]))],
+        };
+        let mut enc = f.encode();
+        enc.pop(); // truncate payload
+        assert!(Frame::decode(&enc).is_none());
+        enc.push(3);
+        enc.push(42); // trailing junk
+        assert!(Frame::decode(&enc).is_none());
+    }
+
+    /// A trivial program: each node sends its id+t to both ring neighbors
+    /// and records what it receives.
+    struct RingEcho {
+        node: usize,
+        n: usize,
+        x: Vec<f32>,
+        losses: Vec<f64>,
+    }
+
+    impl NodeProgram for RingEcho {
+        fn emit(&mut self, t: u64, _phase: usize, out: &mut Outbox) {
+            let payload = vec![self.node as u8, t as u8];
+            let left = (self.node + self.n - 1) % self.n;
+            let right = (self.node + 1) % self.n;
+            out.send(left, Channel::Gossip, wire_of(&payload));
+            out.send(right, Channel::Gossip, wire_of(&payload));
+        }
+
+        fn expects(&self, _t: u64, _phase: usize) -> Vec<(usize, Channel)> {
+            let left = (self.node + self.n - 1) % self.n;
+            let right = (self.node + 1) % self.n;
+            vec![(left, Channel::Gossip), (right, Channel::Gossip)]
+        }
+
+        fn absorb(&mut self, t: u64, _phase: usize, msgs: Vec<Wire>) {
+            let left = (self.node + self.n - 1) % self.n;
+            let right = (self.node + 1) % self.n;
+            assert_eq!(msgs[0].payload, vec![left as u8, t as u8]);
+            assert_eq!(msgs[1].payload, vec![right as u8, t as u8]);
+            self.x[0] += 1.0;
+            self.losses.push(t as f64);
+        }
+
+        fn set_gamma(&mut self, _gamma: f32) {}
+
+        fn x(&self) -> &[f32] {
+            &self.x
+        }
+
+        fn into_result(self: Box<Self>) -> (Vec<f32>, Vec<f64>) {
+            (self.x, self.losses)
+        }
+    }
+
+    fn ring_programs(n: usize) -> Vec<Box<dyn NodeProgram>> {
+        (0..n)
+            .map(|node| {
+                Box::new(RingEcho {
+                    node,
+                    n,
+                    x: vec![0.0],
+                    losses: Vec::new(),
+                }) as Box<dyn NodeProgram>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ring_exchange_runs_and_accounts() {
+        let n = 8;
+        let iters = 50;
+        let run = run_sim(
+            ring_programs(n),
+            iters,
+            SimOpts {
+                cost: CostModel::Uniform(NetworkModel::new(8e6, 1e-3)),
+                compute_per_iter_s: 0.0,
+            },
+        );
+        for r in &run.reports {
+            assert_eq!(r.final_x[0], iters as f32);
+            assert_eq!(r.bytes_sent, (iters * 2 * 2) as u64);
+            assert_eq!(r.msgs_sent, (iters * 2) as u64);
+        }
+        assert_eq!(run.frames, (n * 2 * iters) as u64);
+        assert!(run.frame_bytes > run.payload_bytes, "headers are charged");
+        // Virtual time: iters sequential rounds, each ≥ one latency.
+        assert!(run.virtual_time_s >= iters as f64 * 1e-3);
+    }
+
+    #[test]
+    fn virtual_time_scales_with_latency_not_host_time() {
+        let slow = run_sim(
+            ring_programs(4),
+            10,
+            SimOpts {
+                cost: CostModel::Uniform(NetworkModel::new(1e9, 5e-3)),
+                compute_per_iter_s: 0.0,
+            },
+        );
+        let fast = run_sim(
+            ring_programs(4),
+            10,
+            SimOpts {
+                cost: CostModel::Uniform(NetworkModel::new(1e9, 0.13e-3)),
+                compute_per_iter_s: 0.0,
+            },
+        );
+        assert!(slow.virtual_time_s > 10.0 * fast.virtual_time_s);
+    }
+
+    #[test]
+    fn compute_time_charged_per_iteration() {
+        let run = run_sim(
+            ring_programs(4),
+            20,
+            SimOpts {
+                cost: CostModel::Ideal,
+                compute_per_iter_s: 0.11,
+            },
+        );
+        assert!((run.virtual_time_s - 20.0 * 0.11).abs() < 1e-9);
+    }
+
+    #[test]
+    fn straggler_dominates_virtual_time() {
+        let base = NetworkModel::new(1e8, 1e-3);
+        let uniform = run_sim(
+            ring_programs(8),
+            10,
+            SimOpts {
+                cost: CostModel::Uniform(base),
+                compute_per_iter_s: 0.0,
+            },
+        );
+        let straggled = run_sim(
+            ring_programs(8),
+            10,
+            SimOpts {
+                cost: CostModel::uniform_with_stragglers(8, base, &[3], 20.0),
+                compute_per_iter_s: 0.0,
+            },
+        );
+        assert!(straggled.virtual_time_s > 5.0 * uniform.virtual_time_s);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run_sim(
+            ring_programs(6),
+            30,
+            SimOpts {
+                cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+                compute_per_iter_s: 0.01,
+            },
+        );
+        let b = run_sim(
+            ring_programs(6),
+            30,
+            SimOpts {
+                cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+                compute_per_iter_s: 0.01,
+            },
+        );
+        assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits());
+        assert_eq!(a.frame_bytes, b.frame_bytes);
+    }
+
+    #[test]
+    fn scales_to_many_nodes() {
+        // The engine must handle n = 256 rings without breaking a sweat —
+        // the whole point of replacing thread-per-node for sweeps.
+        let run = run_sim(
+            ring_programs(256),
+            5,
+            SimOpts {
+                cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+                compute_per_iter_s: 0.0,
+            },
+        );
+        assert_eq!(run.reports.len(), 256);
+        assert!(run.virtual_time_s > 0.0);
+    }
+}

@@ -2,11 +2,23 @@
 //! and execute them from the rust hot path. Python never runs at training
 //! time — the `.hlo.txt` files plus `manifest.json` are the entire
 //! contract between the layers.
+//!
+//! The PJRT-executing half (`PjrtEngine`, `JaxLm`) is gated behind the
+//! `pjrt` cargo feature, which links the `xla` bindings; without it the
+//! manifest parsing and token sampling remain available so the rest of the
+//! crate (and its tests) build in the offline dependency set. See
+//! `DESIGN.md` §L2 for the layer contract.
 
+#[cfg(feature = "pjrt")]
 mod engine;
+#[cfg(feature = "pjrt")]
 mod jax_model;
 mod manifest;
+mod tokens;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{DcdStepOut, PjrtEngine};
-pub use jax_model::{JaxLm, TokenSampler};
+#[cfg(feature = "pjrt")]
+pub use jax_model::JaxLm;
 pub use manifest::Manifest;
+pub use tokens::TokenSampler;

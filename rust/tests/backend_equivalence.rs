@@ -1,0 +1,237 @@
+//! Discrete-event engine ≡ threaded coordinator, bitwise.
+//!
+//! The tentpole guarantee of the sim backend: executing the *same*
+//! per-node programs on the single-threaded event engine produces exactly
+//! the trajectory the thread-per-node coordinator produces — while the
+//! engine also scales the fig3 network sweep to n = 64, which
+//! thread-per-node cannot do representatively.
+
+use decomp::algorithms::AlgoConfig;
+use decomp::compression;
+use decomp::coordinator::{run_simulated, run_threaded};
+use decomp::data::{build_models, ModelKind, SynthSpec};
+use decomp::experiments::fig3;
+use decomp::models::GradientModel;
+use decomp::network::cost::{CostModel, NetworkModel};
+use decomp::network::sim::SimOpts;
+use decomp::topology::{Graph, MixingMatrix, Topology};
+use std::sync::Arc;
+
+fn setup(
+    n: usize,
+    dim: usize,
+    compressor: &str,
+    seed: u64,
+) -> (AlgoConfig, Vec<Box<dyn GradientModel>>, Vec<Box<dyn GradientModel>>, Vec<f32>) {
+    let spec = SynthSpec {
+        n_nodes: n,
+        rows_per_node: 64,
+        dim,
+        noise: 0.1,
+        heterogeneity: 0.5,
+        seed: 0xabc,
+    };
+    let kind = ModelKind::Logistic { batch: 4 };
+    let (m1, x0) = build_models(&kind, &spec);
+    let (m2, _) = build_models(&kind, &spec);
+    let cfg = AlgoConfig {
+        mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n))),
+        compressor: Arc::from(compression::from_name(compressor).unwrap()),
+        seed,
+    };
+    (cfg, m1, m2, x0)
+}
+
+fn clone_cfg(cfg: &AlgoConfig) -> AlgoConfig {
+    AlgoConfig {
+        mixing: cfg.mixing.clone(),
+        compressor: cfg.compressor.clone(),
+        seed: cfg.seed,
+    }
+}
+
+/// The acceptance shape: 8-node ring, 40 iterations, bitwise equality of
+/// every node's trajectory endpoint plus byte/loss accounting.
+fn assert_backends_bitwise(algo_name: &str, compressor: &str) {
+    let n = 8;
+    let dim = 48;
+    let iters = 40;
+    let gamma = 0.05;
+    let (cfg, m_sim, m_thr, x0) = setup(n, dim, compressor, 42);
+
+    let sim = run_simulated(
+        algo_name,
+        &clone_cfg(&cfg),
+        m_sim,
+        &x0,
+        gamma,
+        iters,
+        SimOpts {
+            // A non-trivial network: virtual time must not perturb math.
+            cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+            compute_per_iter_s: 0.01,
+        },
+    )
+    .unwrap();
+    let thr = run_threaded(algo_name, &cfg, m_thr, &x0, gamma, iters).unwrap();
+
+    assert_eq!(sim.reports.len(), thr.reports.len());
+    for (sr, tr) in sim.reports.iter().zip(&thr.reports) {
+        assert_eq!(sr.node, tr.node);
+        for (d, (x, y)) in sr.final_x.iter().zip(&tr.final_x).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{algo_name}/{compressor}: node {} dim {d}: sim {x} vs threaded {y}",
+                sr.node
+            );
+        }
+        // Per-iteration minibatch losses agree bitwise too.
+        assert_eq!(sr.losses.len(), tr.losses.len());
+        for (a, b) in sr.losses.iter().zip(&tr.losses) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Payload accounting matches the mailbox transport's.
+        assert_eq!(sr.bytes_sent, tr.bytes_sent, "node {} bytes", sr.node);
+        assert_eq!(sr.msgs_sent, tr.msgs_sent, "node {} msgs", sr.node);
+    }
+    // The sim run also measured virtual time the threads backend cannot.
+    assert!(sim.virtual_time_s > iters as f64 * 0.01);
+    assert!(sim.frame_bytes > sim.payload_bytes);
+}
+
+#[test]
+fn dcd_q8_sim_bitwise_equals_threads_on_8_ring() {
+    assert_backends_bitwise("dcd", "q8");
+}
+
+#[test]
+fn ecd_q8_sim_bitwise_equals_threads_on_8_ring() {
+    assert_backends_bitwise("ecd", "q8");
+}
+
+#[test]
+fn dpsgd_fp32_sim_bitwise_equals_threads() {
+    assert_backends_bitwise("dpsgd", "fp32");
+}
+
+#[test]
+fn naive_q8_sim_bitwise_equals_threads() {
+    assert_backends_bitwise("naive", "q8");
+}
+
+#[test]
+fn allreduce_fp32_sim_bitwise_equals_threads() {
+    assert_backends_bitwise("allreduce", "fp32");
+}
+
+#[test]
+fn qallreduce_q8_sim_bitwise_equals_threads() {
+    assert_backends_bitwise("qallreduce", "q8");
+}
+
+#[test]
+fn dcd_q4_sim_bitwise_equals_threads() {
+    assert_backends_bitwise("dcd", "q4");
+}
+
+#[test]
+fn fig3_sweep_runs_at_n64_on_sim_backend() {
+    // The acceptance bar for the tentpole: the fig3 network sweep at 64
+    // nodes, executed (not closed-formed) on the event engine.
+    let pts = fig3::sim_sweep_points(&[64], 3, NetworkModel::new(5e6, 5e-3));
+    assert_eq!(pts.len(), 3); // dpsgd_fp32, dcd_q8, ecd_q8
+    for p in &pts {
+        assert_eq!(p.n, 64);
+        assert!(p.virtual_s_per_iter.is_finite() && p.virtual_s_per_iter > 0.0);
+        assert!(p.payload_per_node_iter > 0.0);
+    }
+    let fp = pts.iter().find(|p| p.algo == "dpsgd_fp32").unwrap();
+    let q8 = pts.iter().find(|p| p.algo == "dcd_q8").unwrap();
+    assert!(
+        q8.virtual_s_per_iter < 0.5 * fp.virtual_s_per_iter,
+        "compression must win at 5 Mbps: q8 {} vs fp {}",
+        q8.virtual_s_per_iter,
+        fp.virtual_s_per_iter
+    );
+}
+
+#[test]
+fn sim_backend_trains_at_n64_ring() {
+    // A real (small) training run at a scale the threaded backend cannot
+    // sweep: 64 nodes, DCD q8, logistic shards.
+    let n = 64;
+    let (cfg, models, _, x0) = setup(n, 16, "q8", 7);
+    let eval: Vec<Box<dyn GradientModel>> = {
+        let spec = SynthSpec {
+            n_nodes: n,
+            rows_per_node: 64,
+            dim: 16,
+            noise: 0.1,
+            heterogeneity: 0.5,
+            seed: 0xabc,
+        };
+        build_models(&ModelKind::Logistic { batch: 4 }, &spec).0
+    };
+    let run = run_simulated(
+        "dcd",
+        &cfg,
+        models,
+        &x0,
+        0.05,
+        150,
+        SimOpts {
+            cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+            compute_per_iter_s: 0.0,
+        },
+    )
+    .unwrap();
+    assert_eq!(run.reports.len(), n);
+    let mean = run.mean_params();
+    let init: f64 = eval.iter().map(|m| m.full_loss(&x0)).sum::<f64>() / n as f64;
+    let fin: f64 = eval.iter().map(|m| m.full_loss(&mean)).sum::<f64>() / n as f64;
+    assert!(fin < 0.9 * init, "expected progress at n=64: {init} -> {fin}");
+    // Every node sent degree × iters messages, batched into as many frames.
+    for r in &run.reports {
+        assert_eq!(r.msgs_sent, 150 * 2);
+    }
+}
+
+#[test]
+fn sim_straggler_grid_slows_virtual_time_not_math() {
+    let (cfg, m_a, m_b, x0) = setup(8, 24, "q8", 9);
+    let base = NetworkModel::new(1e8, 1e-3);
+    let uniform = run_simulated(
+        "dcd",
+        &clone_cfg(&cfg),
+        m_a,
+        &x0,
+        0.05,
+        20,
+        SimOpts {
+            cost: CostModel::Uniform(base),
+            compute_per_iter_s: 0.0,
+        },
+    )
+    .unwrap();
+    let straggled = run_simulated(
+        "dcd",
+        &cfg,
+        m_b,
+        &x0,
+        0.05,
+        20,
+        SimOpts {
+            cost: CostModel::uniform_with_stragglers(8, base, &[5], 10.0),
+            compute_per_iter_s: 0.0,
+        },
+    )
+    .unwrap();
+    // The network grid changes time, never the trajectory.
+    for (a, b) in uniform.reports.iter().zip(&straggled.reports) {
+        for (x, y) in a.final_x.iter().zip(&b.final_x) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+    assert!(straggled.virtual_time_s > 5.0 * uniform.virtual_time_s);
+}

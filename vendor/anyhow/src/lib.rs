@@ -1,0 +1,135 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The repository builds in an environment with no crates.io access, so
+//! this shim provides exactly the surface `decomp` uses — [`Error`],
+//! [`Result`], and the [`anyhow!`], [`bail!`], [`ensure!`] macros — with
+//! the same semantics (message-carrying dynamic errors, `?`-conversion
+//! from any `std::error::Error`). Replace the path dependency with
+//! `anyhow = "1"` to use the real crate; no call site changes needed.
+
+use std::fmt;
+
+/// A message-carrying error. Unlike the real `anyhow::Error` it keeps no
+/// source chain or backtrace — only the rendered message — which is all
+/// this codebase relies on.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e:#}` (alternate) renders the same as `{e}`: there is no
+        // source chain to append.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes this blanket conversion coherent (same trick as the real
+// anyhow crate).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] as the
+/// default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Result;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let plain = crate::anyhow!("plain");
+        assert_eq!(plain.to_string(), "plain");
+        let x = 7;
+        let inline = crate::anyhow!("x = {x}");
+        assert_eq!(inline.to_string(), "x = 7");
+        let formatted = crate::anyhow!("{} + {}", 1, 2);
+        assert_eq!(formatted.to_string(), "1 + 2");
+        let from_value = crate::anyhow!(String::from("owned"));
+        assert_eq!(from_value.to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_and_ensure_return_err() {
+        fn f(flag: bool) -> Result<()> {
+            crate::ensure!(flag, "flag was {flag}");
+            crate::bail!("unreachable for flag=true? no: always bails")
+        }
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+        assert!(f(true).is_err());
+    }
+
+    #[test]
+    fn alternate_format_matches_display() {
+        let e = crate::anyhow!("msg");
+        assert_eq!(format!("{e:#}"), format!("{e}"));
+    }
+}
