@@ -50,6 +50,7 @@ fn main() -> anyhow::Result<()> {
                 mixing: mixing.clone(),
                 compressor: Arc::from(from_name(comp_name).unwrap()),
                 seed: 0x51fe,
+                eta: 1.0,
             };
             let x0 = vec![0.0f32; dim];
             let mut a = algorithms::from_name(algo, cfg, &x0, n).unwrap();

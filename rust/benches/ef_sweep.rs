@@ -1,0 +1,13 @@
+//! Bench: the error-feedback sweep — DCD/ECD/CHOCO/DeepSqueeze under the
+//! §5.2 bandwidth×latency grid at n = 64 on the discrete-event engine.
+
+fn main() {
+    println!(
+        "ef sweep (experiment backend: sim; quick: {})\n",
+        decomp::bench_harness::quick_mode()
+    );
+    for t in decomp::experiments::ef_sweep::run(decomp::bench_harness::quick_mode()) {
+        t.print();
+        println!();
+    }
+}

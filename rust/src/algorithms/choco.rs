@@ -1,0 +1,276 @@
+//! CHOCO-SGD (Koloskova et al., 2019): error-feedback gossip that makes
+//! *arbitrary* — including biased — compression converge.
+//!
+//! Every node keeps, besides its iterate x, a *public copy* x̂ of itself
+//! and of each neighbor; only compressed corrections to the public copies
+//! ever cross the network:
+//!
+//! 1. `x_{t+½}^{(i)} = x_t^{(i)} − γ ∇F_i(x_t^{(i)}; ξ)` (local SGD step)
+//! 2. `q_t^{(i)} = C(x_{t+½}^{(i)} − x̂_t^{(i)})`, broadcast to neighbors
+//! 3. `x̂_{t+1}^{(j)} = x̂_t^{(j)} + q_t^{(j)}` for all tracked j (self
+//!    included) — replicas of j stay exact mirrors, like DCD's
+//! 4. `x_{t+1}^{(i)} = x_{t+½}^{(i)} + η Σ_j W_ij (x̂_{t+1}^{(j)} −
+//!    x̂_{t+1}^{(i)})` (consensus step, step size η = `AlgoConfig::eta`)
+//!
+//! The memory is implicit: whatever C drops from `x_{t+½} − x̂` stays in
+//! that difference and is re-offered next iteration, so C only needs to be
+//! a δ-contraction (`‖z − C(z)‖² ≤ (1−δ)‖z‖²`) — no unbiasedness. That
+//! admits [`crate::compression::TopK`] and
+//! [`crate::compression::SignCompressor`], which the paper's DCD/ECD must
+//! reject. The price is the extra consensus knob η: 1 recovers a full
+//! gossip step (exact with C = identity), smaller values trade consensus
+//! speed for robustness to harsher compression.
+
+use super::{AlgoConfig, Algorithm, NodeStates, StepStats};
+use crate::models::GradientModel;
+use crate::network::cost::CommSchedule;
+
+pub struct ChocoSgd {
+    cfg: AlgoConfig,
+    s: NodeStates,
+    /// Public copies x̂^{(j)} — every neighbor replica of node j is
+    /// bitwise this vector, so the reference simulator keeps one copy.
+    hat: Vec<Vec<f32>>,
+    half: Vec<Vec<f32>>,
+    mixed: Vec<Vec<f32>>,
+    z: Vec<f32>,
+    cz: Vec<f32>,
+}
+
+impl ChocoSgd {
+    pub fn new(cfg: AlgoConfig, x0: &[f32], n_nodes: usize) -> ChocoSgd {
+        assert_eq!(cfg.mixing.n(), n_nodes);
+        assert!(
+            cfg.eta > 0.0 && cfg.eta <= 1.0,
+            "choco consensus step size eta must be in (0, 1], got {}",
+            cfg.eta
+        );
+        ChocoSgd {
+            s: NodeStates::new(n_nodes, x0, cfg.seed),
+            hat: vec![x0.to_vec(); n_nodes],
+            half: vec![vec![0.0f32; x0.len()]; n_nodes],
+            mixed: vec![vec![0.0f32; x0.len()]; n_nodes],
+            z: vec![0.0f32; x0.len()],
+            cz: vec![0.0f32; x0.len()],
+            cfg,
+        }
+    }
+
+    /// The public copies x̂^{(j)} (exposed for the tracking-error tests).
+    pub fn hats(&self) -> &[Vec<f32>] {
+        &self.hat
+    }
+}
+
+impl Algorithm for ChocoSgd {
+    fn name(&self) -> String {
+        format!("choco_{}", self.cfg.compressor.name())
+    }
+
+    fn step(&mut self, models: &mut [Box<dyn GradientModel>], gamma: f32) -> StepStats {
+        self.s.t += 1;
+        let n = self.s.n();
+        let (grads, loss) = self.s.all_grads(models);
+
+        let mut bytes = 0u64;
+        for i in 0..n {
+            // Step 1: x_{t+½} = x_t − γ g_t.
+            self.half[i].copy_from_slice(&self.s.x[i]);
+            crate::linalg::vecops::axpy(-gamma, &grads[i], &mut self.half[i]);
+            // Step 2: q = C(x_{t+½} − x̂); every neighbor receives it.
+            crate::linalg::vecops::sub(&self.half[i], &self.hat[i], &mut self.z);
+            let wire = self.cfg.compressor.compress(&self.z, &mut self.s.comp_rngs[i]);
+            bytes += (wire.bytes() * self.cfg.mixing.graph.degree(i)) as u64;
+            // Step 3: the same correction lands on every replica of i.
+            self.cfg.compressor.decompress(&wire, &mut self.cz);
+            crate::linalg::vecops::axpy(1.0, &self.cz, &mut self.hat[i]);
+        }
+        // Step 4: consensus on the public copies,
+        // x_{t+1} = x_{t+½} + η (Σ_j W_ij x̂^{(j)} − x̂^{(i)}).
+        NodeStates::gossip_average(&self.cfg.mixing, &self.hat, &mut self.mixed);
+        let eta = self.cfg.eta;
+        for i in 0..n {
+            for ((xd, hd), (md, sd)) in self.s.x[i]
+                .iter_mut()
+                .zip(&self.half[i])
+                .zip(self.mixed[i].iter().zip(&self.hat[i]))
+            {
+                *xd = *hd + eta * (*md - *sd);
+            }
+        }
+        StepStats {
+            minibatch_loss: loss,
+            bytes_sent: bytes,
+        }
+    }
+
+    fn params(&self) -> &[Vec<f32>] {
+        &self.s.x
+    }
+
+    fn comm(&self) -> CommSchedule {
+        CommSchedule::gossip(
+            self.cfg.mixing.graph.max_degree(),
+            self.cfg.compressor.wire_bytes(self.s.dim),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::test_support::*;
+    use crate::algorithms::AlgoConfig;
+    use crate::compression::{Compressor, SignCompressor, TopK};
+    use std::sync::Arc;
+
+    fn cfg_with(compressor: Arc<dyn Compressor>, eta: f32, n: usize, seed: u64) -> AlgoConfig {
+        AlgoConfig {
+            mixing: ring_mixing(n),
+            compressor,
+            seed,
+            eta,
+        }
+    }
+
+    #[test]
+    fn fp32_eta1_matches_gossip_after_step() {
+        // With C = identity and η = 1 the public copies track exactly
+        // (x̂ + (x_{t+½} − x̂) = x_{t+½} up to one f32 rounding), so CHOCO
+        // reduces to "step, then gossip": x_{t+1} = W (x_t − γ G).
+        // DeepSqueeze with the same settings is the same map — compare.
+        let n = 6;
+        let (mut m1, x0) = quad_setup(n, 8, 1.0, 0.5);
+        let (mut m2, _) = quad_setup(n, 8, 1.0, 0.5);
+        let mut choco = ChocoSgd::new(cfg_fp32(n, 5), &x0, n);
+        let mut ds = crate::algorithms::DeepSqueeze::new(cfg_fp32(n, 5), &x0, n);
+        for _ in 0..50 {
+            choco.step(&mut m1, 0.1);
+            ds.step(&mut m2, 0.1);
+        }
+        for (a, b) in choco.params().iter().zip(ds.params()) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn converges_with_8bit_compression() {
+        let n = 8;
+        let (mut models, x0) = quad_setup(n, 32, 1.0, 0.1);
+        let mut algo = ChocoSgd::new(cfg_q(n, 8, 6), &x0, n);
+        let loss = train_loss(&mut algo, &mut models, 0.1, 600);
+        let (mut ref_models, _) = quad_setup(n, 32, 1.0, 0.1);
+        let mut fp = crate::algorithms::DPsgd::new(cfg_fp32(n, 6), &x0, n);
+        let fp_loss = train_loss(&mut fp, &mut ref_models, 0.1, 600);
+        assert!(
+            loss < fp_loss + 0.05 * (1.0 + fp_loss.abs()),
+            "8-bit CHOCO {loss} vs fp32 D-PSGD {fp_loss}"
+        );
+    }
+
+    #[test]
+    fn biased_sign_converges_under_error_feedback() {
+        // The headline: the 1-bit *biased* sign operator — inadmissible
+        // for DCD/ECD — anneals to the optimum under CHOCO.
+        use crate::models::Quadratic;
+        let n = 8;
+        let dim = 32;
+        let fam = Quadratic::family(n, dim, 1.0, 0.0, 0xc0c0);
+        let opt = Quadratic::optimum(&fam);
+        let fstar: f64 = fam.iter().map(|q| q.full_loss(&opt)).sum::<f64>() / n as f64;
+        let x0 = vec![0.0f32; dim];
+        let mut models: Vec<Box<dyn crate::models::GradientModel>> =
+            fam.clone().into_iter().map(|q| Box::new(q) as _).collect();
+        let cfg = cfg_with(Arc::new(SignCompressor), 0.4, n, 7);
+        let mut algo = ChocoSgd::new(cfg, &x0, n);
+        let init: f64 = fam.iter().map(|q| q.full_loss(&x0)).sum::<f64>() / n as f64 - fstar;
+        for t in 0..1500u32 {
+            algo.step(&mut models, 0.1 / (1.0 + t as f32 / 150.0));
+        }
+        let mut mean = vec![0.0f32; dim];
+        algo.mean_params(&mut mean);
+        let subopt = fam.iter().map(|q| q.full_loss(&mean)).sum::<f64>() / n as f64 - fstar;
+        assert!(
+            subopt < 0.02 * init,
+            "sign CHOCO should anneal well below init: {subopt} vs init {init}"
+        );
+    }
+
+    #[test]
+    fn biased_topk_converges_under_error_feedback() {
+        use crate::models::Quadratic;
+        let n = 8;
+        let dim = 32;
+        let fam = Quadratic::family(n, dim, 1.0, 0.0, 0xc0c1);
+        let opt = Quadratic::optimum(&fam);
+        let fstar: f64 = fam.iter().map(|q| q.full_loss(&opt)).sum::<f64>() / n as f64;
+        let x0 = vec![0.0f32; dim];
+        let mut models: Vec<Box<dyn crate::models::GradientModel>> =
+            fam.clone().into_iter().map(|q| Box::new(q) as _).collect();
+        let cfg = cfg_with(Arc::new(TopK::new(0.25)), 0.4, n, 8);
+        let mut algo = ChocoSgd::new(cfg, &x0, n);
+        let init: f64 = fam.iter().map(|q| q.full_loss(&x0)).sum::<f64>() / n as f64 - fstar;
+        for t in 0..1500u32 {
+            algo.step(&mut models, 0.1 / (1.0 + t as f32 / 150.0));
+        }
+        let mut mean = vec![0.0f32; dim];
+        algo.mean_params(&mut mean);
+        let subopt = fam.iter().map(|q| q.full_loss(&mean)).sum::<f64>() / n as f64 - fstar;
+        assert!(
+            subopt < 0.02 * init,
+            "top-k CHOCO should anneal well below init: {subopt} vs init {init}"
+        );
+    }
+
+    #[test]
+    fn public_copies_track_iterates_up_to_consensus_scale() {
+        // After a step, x − x̂ = η·(W−I)x̂ plus the compression lag on the
+        // z-difference, so the public copies stay glued to the iterates at
+        // the consensus-disagreement scale — the EF-soundness invariant
+        // (a broken memory would let the gap grow without bound).
+        let n = 8;
+        let (mut models, x0) = quad_setup(n, 32, 1.0, 0.1);
+        let mut algo = ChocoSgd::new(cfg_q(n, 8, 9), &x0, n);
+        for _ in 0..200 {
+            algo.step(&mut models, 0.05);
+        }
+        let cd = crate::algorithms::consensus_distance(algo.params());
+        let track: f64 = algo
+            .params()
+            .iter()
+            .zip(algo.hats())
+            .map(|(x, hat)| crate::linalg::vecops::dist2_sq(x, hat))
+            .sum();
+        assert!(track.is_finite());
+        assert!(
+            track < 25.0 * cd + 1e-3,
+            "tracking error {track} vs consensus distance {cd}"
+        );
+    }
+
+    #[test]
+    fn wire_accounting_sign_is_one_bit() {
+        let n = 8;
+        let dim = 4096;
+        let (mut models, x0) = quad_setup(n, dim, 1.0, 0.0);
+        let cfg = cfg_with(Arc::new(SignCompressor), 0.5, n, 10);
+        let mut algo = ChocoSgd::new(cfg, &x0, n);
+        let stats = algo.step(&mut models, 0.1);
+        let fp_bytes = (n * 2 * 4 * dim) as u64; // degree 2, fp32
+        let ratio = stats.bytes_sent as f64 / fp_bytes as f64;
+        // 1 bit + scale ≈ 1/32 of fp32.
+        assert!((0.025..0.04).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn comm_schedule_uses_compressed_size() {
+        let n = 8;
+        let (_, x0) = quad_setup(n, 1024, 1.0, 0.0);
+        let cfg = cfg_with(Arc::new(SignCompressor), 0.5, n, 11);
+        let algo = ChocoSgd::new(cfg, &x0, n);
+        let c = algo.comm();
+        assert_eq!(c.bytes_per_node, (2 * (4 + 1024 / 8)) as f64);
+    }
+}

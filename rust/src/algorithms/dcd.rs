@@ -180,6 +180,7 @@ mod tests {
             mixing,
             compressor: Arc::new(sparsifier),
             seed: 8,
+            eta: 1.0,
         };
         let mut algo = DcdPsgd::new(cfg, &x0, n);
         let bad_loss = train_loss(&mut algo, &mut models, 0.1, 300);

@@ -1,0 +1,227 @@
+//! DeepSqueeze (Tang et al., 2019): error-compensated decentralized SGD.
+//!
+//! Where CHOCO compresses *corrections to public copies*, DeepSqueeze
+//! compresses the error-compensated local model itself and gossips the
+//! compressed models through an η-softened mixing matrix:
+//!
+//! 1. `z_t^{(i)} = x_t^{(i)} − γ ∇F_i(x_t^{(i)}; ξ) + δ_{t−1}^{(i)}`
+//!    (local SGD step plus the *replayed* compression error)
+//! 2. broadcast `C(z_t^{(i)})`; record `δ_t^{(i)} = z_t^{(i)} − C(z_t^{(i)})`
+//! 3. `x_{t+1}^{(i)} = C(z_t^{(i)}) + η Σ_j W_ij (C(z_t^{(j)}) −
+//!    C(z_t^{(i)}))` — i.e. one gossip step of W_η = (1−η)I + ηW over the
+//!    compressed models.
+//!
+//! The error memory δ replays whatever C dropped, so any δ-contraction
+//! (including the biased [`crate::compression::TopK`] /
+//! [`crate::compression::SignCompressor`]) converges — but note the
+//! iterates x themselves are mixtures of *compressed* models: under a
+//! harsh biased C the evaluated model carries the quantization pattern of
+//! C even at the optimum (the time-average, not the instantaneous iterate,
+//! is what error compensation repairs). CHOCO keeps exact local iterates
+//! instead; the EF sweep (`experiments::ef_sweep`) contrasts the two.
+//!
+//! With C = identity and η = 1 the recursion is exactly "step, then
+//! gossip": x_{t+1} = W (x_t − γ G_t).
+
+use super::{AlgoConfig, Algorithm, NodeStates, StepStats};
+use crate::models::GradientModel;
+use crate::network::cost::CommSchedule;
+
+pub struct DeepSqueeze {
+    cfg: AlgoConfig,
+    s: NodeStates,
+    /// δ^{(i)}: per-node compression-error memory.
+    err: Vec<Vec<f32>>,
+    /// C(z^{(i)}) for the current iteration (inputs to the gossip step).
+    cz: Vec<Vec<f32>>,
+    mixed: Vec<Vec<f32>>,
+    z: Vec<f32>,
+}
+
+impl DeepSqueeze {
+    pub fn new(cfg: AlgoConfig, x0: &[f32], n_nodes: usize) -> DeepSqueeze {
+        assert_eq!(cfg.mixing.n(), n_nodes);
+        assert!(
+            cfg.eta > 0.0 && cfg.eta <= 1.0,
+            "deepsqueeze consensus step size eta must be in (0, 1], got {}",
+            cfg.eta
+        );
+        DeepSqueeze {
+            s: NodeStates::new(n_nodes, x0, cfg.seed),
+            err: vec![vec![0.0f32; x0.len()]; n_nodes],
+            cz: vec![vec![0.0f32; x0.len()]; n_nodes],
+            mixed: vec![vec![0.0f32; x0.len()]; n_nodes],
+            z: vec![0.0f32; x0.len()],
+            cfg,
+        }
+    }
+
+    /// The error memories δ^{(i)} (exposed for the boundedness tests).
+    pub fn errors(&self) -> &[Vec<f32>] {
+        &self.err
+    }
+}
+
+impl Algorithm for DeepSqueeze {
+    fn name(&self) -> String {
+        format!("deepsqueeze_{}", self.cfg.compressor.name())
+    }
+
+    fn step(&mut self, models: &mut [Box<dyn GradientModel>], gamma: f32) -> StepStats {
+        self.s.t += 1;
+        let n = self.s.n();
+        let (grads, loss) = self.s.all_grads(models);
+
+        let mut bytes = 0u64;
+        for i in 0..n {
+            // Step 1: z = x − γ g + δ (error-compensated half-step).
+            self.z.copy_from_slice(&self.s.x[i]);
+            crate::linalg::vecops::axpy(-gamma, &grads[i], &mut self.z);
+            crate::linalg::vecops::axpy(1.0, &self.err[i], &mut self.z);
+            // Step 2: ship C(z); remember what compression dropped.
+            let wire = self.cfg.compressor.compress(&self.z, &mut self.s.comp_rngs[i]);
+            bytes += (wire.bytes() * self.cfg.mixing.graph.degree(i)) as u64;
+            self.cfg.compressor.decompress(&wire, &mut self.cz[i]);
+            crate::linalg::vecops::sub(&self.z, &self.cz[i], &mut self.err[i]);
+        }
+        // Step 3: gossip the compressed models under W_η.
+        NodeStates::gossip_average(&self.cfg.mixing, &self.cz, &mut self.mixed);
+        let eta = self.cfg.eta;
+        for i in 0..n {
+            for ((xd, cd), md) in self.s.x[i].iter_mut().zip(&self.cz[i]).zip(&self.mixed[i]) {
+                *xd = *cd + eta * (*md - *cd);
+            }
+        }
+        StepStats {
+            minibatch_loss: loss,
+            bytes_sent: bytes,
+        }
+    }
+
+    fn params(&self) -> &[Vec<f32>] {
+        &self.s.x
+    }
+
+    fn comm(&self) -> CommSchedule {
+        CommSchedule::gossip(
+            self.cfg.mixing.graph.max_degree(),
+            self.cfg.compressor.wire_bytes(self.s.dim),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::test_support::*;
+    use crate::algorithms::AlgoConfig;
+    use crate::compression::{Compressor, TopK};
+    use std::sync::Arc;
+
+    fn cfg_with(compressor: Arc<dyn Compressor>, eta: f32, n: usize, seed: u64) -> AlgoConfig {
+        AlgoConfig {
+            mixing: ring_mixing(n),
+            compressor,
+            seed,
+            eta,
+        }
+    }
+
+    #[test]
+    fn identity_error_memory_stays_zero() {
+        // With C = identity, δ = z − C(z) = 0 exactly, forever.
+        let n = 6;
+        let (mut models, x0) = quad_setup(n, 8, 1.0, 0.5);
+        let mut algo = DeepSqueeze::new(cfg_fp32(n, 3), &x0, n);
+        for _ in 0..20 {
+            algo.step(&mut models, 0.1);
+        }
+        for e in algo.errors() {
+            assert!(e.iter().all(|v| *v == 0.0));
+        }
+    }
+
+    #[test]
+    fn converges_with_4bit_compression() {
+        let n = 8;
+        let (mut models, x0) = quad_setup(n, 32, 1.0, 0.1);
+        let mut algo = DeepSqueeze::new(cfg_q(n, 4, 6), &x0, n);
+        let loss = train_loss(&mut algo, &mut models, 0.1, 600);
+        let (mut ref_models, _) = quad_setup(n, 32, 1.0, 0.1);
+        let mut fp = crate::algorithms::DPsgd::new(cfg_fp32(n, 6), &x0, n);
+        let fp_loss = train_loss(&mut fp, &mut ref_models, 0.1, 600);
+        assert!(
+            loss < fp_loss + 0.2 * (1.0 + fp_loss.abs()),
+            "4-bit DeepSqueeze {loss} vs fp32 D-PSGD {fp_loss}"
+        );
+    }
+
+    #[test]
+    fn topk_converges_under_error_feedback() {
+        // A biased compressor trains under error compensation. (Note the
+        // DeepSqueeze iterates are mixtures of *compressed* models, so
+        // under top-k the instantaneous loss carries a truncation
+        // residual; the node average smooths most of it out.)
+        use crate::models::Quadratic;
+        let n = 8;
+        let dim = 32;
+        let fam = Quadratic::family(n, dim, 1.0, 0.0, 0xd5d5);
+        let opt = Quadratic::optimum(&fam);
+        let fstar: f64 = fam.iter().map(|q| q.full_loss(&opt)).sum::<f64>() / n as f64;
+        // Start far from the optimum so the truncation floor (an O(1)
+        // residual set by the compressed-model iterates) is small next to
+        // the distance actually trained away.
+        let x0 = vec![5.0f32; dim];
+        let init: f64 = fam.iter().map(|q| q.full_loss(&x0)).sum::<f64>() / n as f64 - fstar;
+
+        let mut models: Vec<Box<dyn crate::models::GradientModel>> =
+            fam.clone().into_iter().map(|q| Box::new(q) as _).collect();
+        let cfg = cfg_with(Arc::new(TopK::new(0.5)), 0.5, n, 9);
+        let mut a = DeepSqueeze::new(cfg, &x0, n);
+        for t in 0..1500u32 {
+            a.step(&mut models, 0.1 / (1.0 + t as f32 / 150.0));
+        }
+        let mut mean = vec![0.0f32; dim];
+        a.mean_params(&mut mean);
+        let ds = fam.iter().map(|q| q.full_loss(&mean)).sum::<f64>() / n as f64 - fstar;
+        assert!(ds.is_finite(), "DeepSqueeze must stay bounded");
+        assert!(ds < 0.05 * init, "error feedback should train: {ds} vs init {init}");
+    }
+
+    #[test]
+    fn error_memory_bounded_under_topk() {
+        let n = 8;
+        let (mut models, x0) = quad_setup(n, 64, 1.0, 0.1);
+        let cfg = cfg_with(Arc::new(TopK::new(0.25)), 0.5, n, 10);
+        let mut algo = DeepSqueeze::new(cfg, &x0, n);
+        let mut max_err: f64 = 0.0;
+        for _ in 0..400 {
+            algo.step(&mut models, 0.05);
+            for e in algo.errors() {
+                max_err = max_err.max(crate::linalg::vecops::norm2(e));
+            }
+        }
+        let model_scale = algo
+            .params()
+            .iter()
+            .map(|x| crate::linalg::vecops::norm2(x))
+            .fold(0.0f64, f64::max);
+        assert!(max_err.is_finite());
+        // The EF fixpoint bound for a δ-contraction is (√(1−δ)/(1−√(1−δ)))
+        // times the compressed quantity's scale; δ = 1/4 gives ≈ 6.5×.
+        assert!(
+            max_err < 20.0 * model_scale.max(1.0),
+            "error memory should stay bounded: {max_err} vs model {model_scale}"
+        );
+    }
+
+    #[test]
+    fn comm_schedule_uses_compressed_size() {
+        let n = 8;
+        let (_, x0) = quad_setup(n, 1024, 1.0, 0.0);
+        let cfg = cfg_with(Arc::new(TopK::new(0.25)), 0.5, n, 11);
+        let algo = DeepSqueeze::new(cfg, &x0, n);
+        let c = algo.comm();
+        assert_eq!(c.bytes_per_node, (2 * 8 * 256) as f64);
+    }
+}

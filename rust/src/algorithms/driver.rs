@@ -111,7 +111,11 @@ impl Default for RunOpts {
 }
 
 /// Evaluate f(x̄) over the full shards.
-pub fn global_loss(algo: &dyn Algorithm, models: &[Box<dyn GradientModel>], mean_buf: &mut [f32]) -> f64 {
+pub fn global_loss(
+    algo: &dyn Algorithm,
+    models: &[Box<dyn GradientModel>],
+    mean_buf: &mut [f32],
+) -> f64 {
     algo.mean_params(mean_buf);
     models.iter().map(|m| m.full_loss(mean_buf)).sum::<f64>() / models.len() as f64
 }

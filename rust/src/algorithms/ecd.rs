@@ -192,6 +192,7 @@ mod tests {
             mixing: ring_mixing(n),
             compressor: Arc::new(RandomSparsifier::new(0.05)),
             seed,
+            eta: 1.0,
         };
         let init_loss: f64 =
             m_ecd.iter().map(|m| m.full_loss(&x0)).sum::<f64>() / n as f64;

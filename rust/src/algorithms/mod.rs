@@ -1,6 +1,8 @@
 //! The training algorithms: the paper's two contributions (DCD-PSGD,
 //! ECD-PSGD), the D-PSGD base, the naive-compression negative example
-//! (Fig. 1), and the centralized Allreduce baselines.
+//! (Fig. 1), the centralized Allreduce baselines, and the error-feedback
+//! family (CHOCO-SGD, DeepSqueeze) that extends the paper's design space
+//! to *biased* compressors (top-k, sign).
 //!
 //! All algorithms implement [`Algorithm`] over per-node [`GradientModel`]s
 //! and advance one *synchronous* iteration per [`Algorithm::step`] — the
@@ -11,14 +13,18 @@
 //! to each other.
 
 mod centralized;
+mod choco;
 mod dcd;
+mod deepsqueeze;
 mod dpsgd;
 mod driver;
 mod ecd;
 mod naive;
 
 pub use centralized::{CentralizedSgd, QuantizedCentralizedSgd};
+pub use choco::ChocoSgd;
 pub use dcd::DcdPsgd;
+pub use deepsqueeze::DeepSqueeze;
 pub use dpsgd::DPsgd;
 pub use driver::{global_loss, run_training, RunOpts, TracePoint, TrainTrace};
 pub use ecd::EcdPsgd;
@@ -136,10 +142,14 @@ pub struct AlgoConfig {
     pub mixing: Arc<MixingMatrix>,
     pub compressor: Arc<dyn Compressor>,
     pub seed: u64,
+    /// Consensus step size η ∈ (0, 1] for the error-feedback algorithms
+    /// (`choco`, `deepsqueeze`); η = 1 is a full gossip step. Ignored by
+    /// the paper's originals.
+    pub eta: f32,
 }
 
 /// Build an algorithm by name: `dpsgd`, `dcd`, `ecd`, `naive`,
-/// `allreduce`, `qallreduce`.
+/// `allreduce`, `qallreduce`, `choco`, `deepsqueeze`.
 pub fn from_name(
     name: &str,
     cfg: AlgoConfig,
@@ -153,8 +163,20 @@ pub fn from_name(
         "naive" => Some(Box::new(NaiveCompressedDPsgd::new(cfg, x0, n_nodes))),
         "allreduce" => Some(Box::new(CentralizedSgd::new(cfg, x0, n_nodes))),
         "qallreduce" => Some(Box::new(QuantizedCentralizedSgd::new(cfg, x0, n_nodes))),
+        "choco" | "chocosgd" => Some(Box::new(ChocoSgd::new(cfg, x0, n_nodes))),
+        "deepsqueeze" => Some(Box::new(DeepSqueeze::new(cfg, x0, n_nodes))),
         _ => None,
     }
+}
+
+/// Whether `algo_name` is sound only under an *unbiased* compressor
+/// (Assumption 1.5). The driver rejects biased compressors (top-k, sign)
+/// for these — a biased C silently corrupts the updates (for DCD/ECD it
+/// reproduces the Fig. 1 divergence; for QSGD-style allreduce it biases
+/// the averaged gradient with no error feedback to repair it) — while the
+/// error-feedback family (`choco`, `deepsqueeze`) accepts them.
+pub fn requires_unbiased_compressor(algo_name: &str) -> bool {
+    matches!(algo_name, "dcd" | "ecd" | "qallreduce")
 }
 
 #[cfg(test)]
@@ -187,6 +209,7 @@ pub(crate) mod test_support {
             mixing: ring_mixing(n),
             compressor: Arc::new(Identity),
             seed,
+            eta: 1.0,
         }
     }
 
@@ -195,6 +218,7 @@ pub(crate) mod test_support {
             mixing: ring_mixing(n),
             compressor: Arc::new(StochasticQuantizer::new(bits)),
             seed,
+            eta: 1.0,
         }
     }
 
@@ -275,11 +299,32 @@ mod tests {
 
     #[test]
     fn from_name_builds_everything() {
-        for name in ["dpsgd", "dcd", "ecd", "naive", "allreduce", "qallreduce"] {
+        for name in [
+            "dpsgd",
+            "dcd",
+            "ecd",
+            "naive",
+            "allreduce",
+            "qallreduce",
+            "choco",
+            "deepsqueeze",
+        ] {
             let cfg = cfg_q(4, 8, 7);
             let a = from_name(name, cfg, &[0.0; 4], 4).unwrap_or_else(|| panic!("{name}"));
             assert!(!a.name().is_empty());
         }
         assert!(from_name("bogus", cfg_fp32(4, 7), &[0.0; 4], 4).is_none());
+    }
+
+    #[test]
+    fn unbiasedness_requirement_covers_the_assumption_bound_algorithms() {
+        for name in ["dcd", "ecd", "qallreduce"] {
+            assert!(requires_unbiased_compressor(name), "{name}");
+        }
+        // naive is the deliberate Fig. 1 negative example; allreduce
+        // never compresses; the error-feedback family admits bias.
+        for name in ["choco", "deepsqueeze", "dpsgd", "naive", "allreduce"] {
+            assert!(!requires_unbiased_compressor(name), "{name}");
+        }
     }
 }

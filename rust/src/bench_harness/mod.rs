@@ -1,6 +1,10 @@
 //! Criterion-substitute benchmark harness (no `criterion` in the offline
 //! dependency set): warmup, repeated timed runs, summary statistics, and
-//! a uniform report format the `cargo bench` targets share.
+//! a uniform report format the `cargo bench` targets share. The
+//! [`summary`] submodule turns the quick-mode benches into the
+//! `BENCH_*.json` artifact CI guards the perf trajectory with.
+
+pub mod summary;
 
 use crate::metrics::{fmt_secs, Table};
 use crate::util::stats::Summary;

@@ -1,0 +1,356 @@
+//! `BENCH_*.json` — the repo's perf-trajectory artifact.
+//!
+//! `decomp bench-summary` collects a flat set of named metrics into
+//! `BENCH_pr.json`; CI uploads it per PR and `decomp bench-compare` fails
+//! the build when any metric regresses more than a tolerance against the
+//! checked-in `BENCH_baseline.json`.
+//!
+//! Three metric groups:
+//!
+//! - `iters_per_sec` (higher is better) — host throughput of the
+//!   reference simulator per algorithm-family member. Hardware-dependent:
+//!   the checked-in baseline ships these as `null` (= unenforced) until
+//!   refreshed from a pinned-hardware CI artifact.
+//! - `sim_epoch_s` (lower is better) — closed-form §5.3 epoch times per
+//!   network condition. Deterministic and hardware-independent: enforced.
+//! - `sim_virtual_s_per_iter` (lower is better) — the event engine's
+//!   measured virtual time per iteration on the 64-ring under the worst
+//!   condition. Also deterministic (virtual clock): enforced, and
+//!   sensitive to wire-format or engine-accounting regressions.
+
+use crate::algorithms::{self, AlgoConfig};
+use crate::compression;
+use crate::data::build_models;
+use crate::experiments::{convergence_spec, ef_sweep, fig3};
+use crate::metrics::Table;
+use crate::network::cost::NetCondition;
+use crate::topology::{Graph, MixingMatrix, Topology};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// A collected (or parsed) bench report: group → metric → value.
+pub struct BenchReport {
+    pub quick: bool,
+    pub groups: BTreeMap<String, BTreeMap<String, f64>>,
+}
+
+/// Comparison direction: every group is lower-is-better except
+/// throughput.
+pub fn lower_is_better(group: &str) -> bool {
+    group != "iters_per_sec"
+}
+
+/// Deterministic groups (simulated metrics) are gated *two-sided*: they
+/// must not move past the tolerance in either direction without an
+/// intentional baseline update — an "improvement" to ~0 is the signature
+/// of broken wire-format or engine accounting, not a win.
+pub fn deterministic(group: &str) -> bool {
+    group.starts_with("sim_")
+}
+
+/// Run the measurements. `quick` shrinks the host-timing workloads (the
+/// deterministic simulated groups are always collected in full).
+pub fn collect(quick: bool) -> BenchReport {
+    let mut groups: BTreeMap<String, BTreeMap<String, f64>> = BTreeMap::new();
+
+    // Host throughput: reference-simulator steps/sec per family member
+    // (8-ring, the fig2 logistic workload in miniature).
+    let mut thr = BTreeMap::new();
+    let (spec, kind) = convergence_spec(8, true);
+    let steps_per_run = if quick { 20 } else { 100 };
+    let opts = super::BenchOpts {
+        warmup_iters: 1,
+        measure_iters: if quick { 3 } else { 10 },
+    };
+    for (algo, comp, eta) in ef_sweep::FAMILY {
+        let (mut models, x0) = build_models(&kind, &spec);
+        let cfg = AlgoConfig {
+            mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, 8))),
+            compressor: Arc::from(compression::from_name(comp).expect("compressor")),
+            seed: 0xbe7c,
+            eta,
+        };
+        let mut a = algorithms::from_name(algo, cfg, &x0, 8).expect("algorithm");
+        let m = super::time_fn(algo, opts, || {
+            for _ in 0..steps_per_run {
+                a.step(&mut models, 0.05);
+            }
+        });
+        thr.insert(
+            format!("{algo}_{comp}"),
+            steps_per_run as f64 / m.summary.median,
+        );
+    }
+    groups.insert("iters_per_sec".into(), thr);
+
+    // Closed-form §5.3 epoch times (n = 8, testbed constants) per
+    // condition — deterministic, enforced against the baseline.
+    let mut epoch = BTreeMap::new();
+    for cond in NetCondition::all() {
+        let label = ef_sweep::short_condition_name(cond);
+        let (ar, d32, d8) = fig3::epoch_times(&cond.model(), 8);
+        epoch.insert(format!("allreduce_fp32@{label}"), ar);
+        epoch.insert(format!("decentralized_fp32@{label}"), d32);
+        epoch.insert(format!("decentralized_q8@{label}"), d8);
+    }
+    groups.insert("sim_epoch_s".into(), epoch);
+
+    // Measured event-engine virtual time per iteration at n = 64 under
+    // the worst condition — deterministic and cheap (3 iterations).
+    let mut per_iter = BTreeMap::new();
+    for p in fig3::sim_sweep_points(&[64], 3, NetCondition::Worst.model()) {
+        per_iter.insert(format!("{}@n64", p.algo), p.virtual_s_per_iter);
+    }
+    groups.insert("sim_virtual_s_per_iter".into(), per_iter);
+
+    BenchReport { quick, groups }
+}
+
+impl BenchReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str("decomp-bench-v1".into())),
+            ("quick", Json::Bool(self.quick)),
+            (
+                "groups",
+                Json::Obj(
+                    self.groups
+                        .iter()
+                        .map(|(g, ms)| {
+                            (
+                                g.clone(),
+                                Json::Obj(
+                                    ms.iter()
+                                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                                        .collect(),
+                                ),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse a `BENCH_*.json`. Metrics whose value is `null` are treated
+    /// as unrecorded and skipped by [`compare`] — the checked-in baseline
+    /// ships host-dependent metrics as null until refreshed from a CI
+    /// artifact.
+    pub fn from_json(j: &Json) -> anyhow::Result<BenchReport> {
+        let quick = j.get("quick").and_then(|q| q.as_bool()).unwrap_or(false);
+        let gobj = j
+            .get("groups")
+            .and_then(|g| g.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("bench json: missing 'groups' object"))?;
+        let mut groups = BTreeMap::new();
+        for (g, ms) in gobj {
+            let mobj = ms
+                .as_obj()
+                .ok_or_else(|| anyhow::anyhow!("bench json: group '{g}' must be an object"))?;
+            let mut metrics = BTreeMap::new();
+            for (k, v) in mobj {
+                if matches!(v, Json::Null) {
+                    continue;
+                }
+                let num = v.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("bench json: metric '{g}/{k}' must be a number or null")
+                })?;
+                metrics.insert(k.clone(), num);
+            }
+            groups.insert(g.clone(), metrics);
+        }
+        Ok(BenchReport { quick, groups })
+    }
+
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new("bench summary", &["metric", "value", "direction"]);
+        for (g, ms) in &self.groups {
+            let dir = if lower_is_better(g) { "lower" } else { "higher" };
+            for (k, v) in ms {
+                t.row(vec![format!("{g}/{k}"), format!("{v:.6}"), dir.into()]);
+            }
+        }
+        t
+    }
+}
+
+/// One metric that moved past the tolerance. For host metrics only the
+/// harmful direction flags; for deterministic groups any move does.
+pub struct Regression {
+    pub metric: String,
+    pub baseline: f64,
+    pub candidate: f64,
+    /// Relative change in the harmful direction (0.3 = 30% worse;
+    /// negative = an out-of-band "improvement" of a deterministic
+    /// metric, which needs an intentional baseline update).
+    pub worse_by: f64,
+}
+
+/// Outcome of gating a candidate report against a baseline.
+pub struct Comparison {
+    /// Metrics present (with a positive baseline) in both reports —
+    /// i.e. actually gated, not skipped.
+    pub compared: usize,
+    pub regressions: Vec<Regression>,
+}
+
+/// Compare `candidate` against `baseline`: a host metric regresses when
+/// it is worse than the baseline by more than `tolerance` (relative);
+/// [`deterministic`] groups flag moves past the tolerance in *either*
+/// direction. Metrics missing from either side (including `null`
+/// baselines) are skipped, so adding metrics never breaks an old
+/// baseline.
+pub fn compare(baseline: &BenchReport, candidate: &BenchReport, tolerance: f64) -> Comparison {
+    let mut compared = 0usize;
+    let mut regressions = Vec::new();
+    for (g, base_ms) in &baseline.groups {
+        let Some(cand_ms) = candidate.groups.get(g) else {
+            continue;
+        };
+        for (k, &b) in base_ms {
+            let Some(&c) = cand_ms.get(k) else {
+                continue;
+            };
+            if b <= 0.0 {
+                continue;
+            }
+            compared += 1;
+            let worse_by = if lower_is_better(g) {
+                c / b - 1.0
+            } else {
+                b / c - 1.0
+            };
+            let out_of_band = worse_by > tolerance
+                || (deterministic(g) && worse_by < -tolerance);
+            if out_of_band {
+                regressions.push(Regression {
+                    metric: format!("{g}/{k}"),
+                    baseline: b,
+                    candidate: c,
+                    worse_by,
+                });
+            }
+        }
+    }
+    Comparison {
+        compared,
+        regressions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(groups: &[(&str, &[(&str, f64)])]) -> BenchReport {
+        BenchReport {
+            quick: true,
+            groups: groups
+                .iter()
+                .map(|(g, ms)| {
+                    (
+                        g.to_string(),
+                        ms.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn json_round_trips_including_nulls() {
+        let r = report(&[
+            ("sim_epoch_s", &[("a@worst", 1.5)]),
+            ("iters_per_sec", &[("dpsgd_fp32", 100.0)]),
+        ]);
+        let j = r.to_json();
+        let parsed = BenchReport::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(parsed.groups, r.groups);
+        // Nulls parse as absent metrics.
+        let with_null =
+            r#"{"groups":{"iters_per_sec":{"x":null,"y":2}},"quick":false,"schema":"s"}"#;
+        let parsed = BenchReport::from_json(&Json::parse(with_null).unwrap()).unwrap();
+        assert_eq!(parsed.groups["iters_per_sec"].len(), 1);
+        assert_eq!(parsed.groups["iters_per_sec"]["y"], 2.0);
+    }
+
+    #[test]
+    fn compare_flags_only_harmful_moves() {
+        let base = report(&[
+            ("sim_epoch_s", &[("a", 10.0), ("b", 10.0)]),
+            ("iters_per_sec", &[("t", 100.0)]),
+        ]);
+        // a: 20% slower (within 25%), b: 50% slower (regression),
+        // t: throughput doubled (improvement).
+        let cand = report(&[
+            ("sim_epoch_s", &[("a", 12.0), ("b", 15.0)]),
+            ("iters_per_sec", &[("t", 200.0)]),
+        ]);
+        let out = compare(&base, &cand, 0.25);
+        assert_eq!(out.compared, 3);
+        assert_eq!(out.regressions.len(), 1);
+        assert_eq!(out.regressions[0].metric, "sim_epoch_s/b");
+        assert!((out.regressions[0].worse_by - 0.5).abs() < 1e-9);
+        // Throughput halving is a regression.
+        let cand2 = report(&[("iters_per_sec", &[("t", 40.0)])]);
+        let out = compare(&base, &cand2, 0.25);
+        assert_eq!(out.compared, 1);
+        assert_eq!(out.regressions.len(), 1);
+        assert_eq!(out.regressions[0].metric, "iters_per_sec/t");
+    }
+
+    #[test]
+    fn deterministic_collapse_to_zero_is_flagged_not_celebrated() {
+        // A simulated metric falling to ~0 is broken accounting, not a
+        // win: the two-sided band must catch it. Host throughput gains
+        // stay unflagged.
+        let base = report(&[
+            ("sim_virtual_s_per_iter", &[("dcd_q8@n64", 0.0083)]),
+            ("iters_per_sec", &[("t", 100.0)]),
+        ]);
+        let cand = report(&[
+            ("sim_virtual_s_per_iter", &[("dcd_q8@n64", 0.0)]),
+            ("iters_per_sec", &[("t", 300.0)]),
+        ]);
+        let out = compare(&base, &cand, 0.25);
+        assert_eq!(out.regressions.len(), 1);
+        assert_eq!(out.regressions[0].metric, "sim_virtual_s_per_iter/dcd_q8@n64");
+        assert!(out.regressions[0].worse_by < -0.25);
+    }
+
+    #[test]
+    fn missing_metrics_are_skipped_not_failed() {
+        let base = report(&[("sim_epoch_s", &[("gone", 1.0)])]);
+        let cand = report(&[("sim_epoch_s", &[("new", 9.0)])]);
+        let out = compare(&base, &cand, 0.25);
+        assert_eq!(out.compared, 0);
+        assert!(out.regressions.is_empty());
+    }
+
+    #[test]
+    fn collect_produces_all_groups() {
+        let r = collect(true);
+        assert!(r.groups["iters_per_sec"].len() == ef_sweep::FAMILY.len());
+        assert_eq!(r.groups["sim_epoch_s"].len(), 12);
+        assert_eq!(r.groups["sim_virtual_s_per_iter"].len(), 5);
+        for ms in r.groups.values() {
+            for (k, v) in ms {
+                assert!(v.is_finite() && *v > 0.0, "{k} = {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_groups_are_reproducible() {
+        // The enforced groups must be bit-stable across collects — that is
+        // what makes the checked-in baseline meaningful.
+        let a = collect(true);
+        let b = collect(true);
+        assert_eq!(a.groups["sim_epoch_s"], b.groups["sim_epoch_s"]);
+        assert_eq!(
+            a.groups["sim_virtual_s_per_iter"],
+            b.groups["sim_virtual_s_per_iter"]
+        );
+    }
+}

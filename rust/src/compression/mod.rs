@@ -1,12 +1,15 @@
-//! Unbiased stochastic compression operators C(·) (Assumption 1.5) and
-//! their wire formats.
+//! Compression operators C(·) and their wire formats.
 //!
 //! All decentralized communication in this crate goes through a
-//! [`Compressor`]: the full-precision [`Identity`], the paper's randomized
-//! quantization (footnote 1) as [`StochasticQuantizer`], randomized
-//! sparsification (footnote 2) as [`RandomSparsifier`], and — for the
-//! ablation benches only — the *biased* [`TopK`], which the theory
-//! excludes and which demonstrably breaks convergence.
+//! [`Compressor`]. The *unbiased* family (Assumption 1.5) serves the
+//! paper's DCD/ECD: the full-precision [`Identity`], the paper's
+//! randomized quantization (footnote 1) as [`StochasticQuantizer`], and
+//! randomized sparsification (footnote 2) as [`RandomSparsifier`]. The
+//! *biased* family — [`TopK`] and the 1-bit [`SignCompressor`] — violates
+//! that assumption (the driver rejects it for DCD/ECD) but is admissible
+//! under the error-feedback algorithms
+//! ([`crate::algorithms::ChocoSgd`], [`crate::algorithms::DeepSqueeze`]),
+//! which only need a δ-contraction.
 //!
 //! Compression is measured honestly: [`Wire`] is the actual byte buffer
 //! that would cross the network (bit-packed levels + per-chunk scales),
@@ -15,11 +18,13 @@
 
 mod estimate;
 mod quantize;
+mod sign;
 mod sparsify;
 mod wire;
 
 pub use estimate::{empirical_alpha, empirical_sigma_tilde_sq};
 pub use quantize::StochasticQuantizer;
+pub use sign::SignCompressor;
 pub use sparsify::{RandomSparsifier, TopK};
 pub use wire::{BitReader, BitWriter, Wire};
 
@@ -39,8 +44,9 @@ pub trait Compressor: Send + Sync {
     /// Reconstruct into `out` (must have the original length).
     fn decompress(&self, wire: &Wire, out: &mut [f32]);
 
-    /// Whether E[decompress(compress(z))] = z. True for everything except
-    /// `TopK`.
+    /// Whether E[decompress(compress(z))] = z (Assumption 1.5). False for
+    /// the contraction-only operators (`TopK`, `SignCompressor`), which
+    /// the driver admits only under the error-feedback algorithms.
     fn is_unbiased(&self) -> bool {
         true
     }
@@ -91,10 +97,14 @@ impl Compressor for Identity {
 }
 
 /// Build a compressor from its config name: `fp32`, `q8`, `q4`, `q2`,
-/// `q1`, `sparse_p25` (keep 25%), `topk_10` (keep top 10%).
+/// `q1`, `sparse_p25` (keep 25%), `topk_10` (keep top 10%, biased),
+/// `sign` (1 bit + scale, biased).
 pub fn from_name(name: &str) -> Option<Box<dyn Compressor>> {
     if name == "fp32" || name == "identity" {
         return Some(Box::new(Identity));
+    }
+    if name == "sign" {
+        return Some(Box::new(SignCompressor));
     }
     if let Some(bits) = name.strip_prefix('q').and_then(|b| b.parse::<u8>().ok()) {
         return Some(Box::new(StochasticQuantizer::new(bits)));
@@ -135,6 +145,7 @@ mod tests {
             ("q1", "q1"),
             ("sparse_p25", "sparse_p25"),
             ("topk_10", "topk_10"),
+            ("sign", "sign"),
         ] {
             let c = from_name(name).unwrap_or_else(|| panic!("{name}"));
             assert_eq!(c.name(), expect);

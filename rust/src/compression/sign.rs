@@ -1,0 +1,131 @@
+//! 1-bit sign compression with an ℓ₁-magnitude scale.
+//!
+//! `C(z) = (‖z‖₁/d) · sign(z)` — the classic biased 1-bit operator of
+//! EF-SignSGD (Karimireddy et al., 2019). It violates Assumption 1.5
+//! (`E[C(z)] ≠ z`), so the paper's DCD/ECD must reject it; the
+//! error-feedback algorithms ([`crate::algorithms::ChocoSgd`],
+//! [`crate::algorithms::DeepSqueeze`]) make it converge because it is a
+//! δ-*contraction*:
+//!
+//! `‖z − C(z)‖² = ‖z‖² − ‖z‖₁²/d ≤ (1 − 1/d)·‖z‖²`
+//!
+//! (exact identity — pinned by the property tests), with the effective δ
+//! around 2/π for dense vectors.
+//!
+//! Wire layout: `[scale: f32][sign bits: 1 × len, LSB-first]` — an honest
+//! 1 bit per coordinate plus one 4-byte scale, i.e. ~32× smaller than
+//! fp32 on the wire.
+
+use super::wire::{BitReader, BitWriter, Wire};
+use super::Compressor;
+use crate::util::rng::Pcg64;
+
+/// Biased 1-bit sign compressor (deterministic). See the module docs for
+/// the operator definition and the wire layout.
+#[derive(Debug, Clone, Default)]
+pub struct SignCompressor;
+
+impl Compressor for SignCompressor {
+    fn name(&self) -> String {
+        "sign".into()
+    }
+
+    fn is_unbiased(&self) -> bool {
+        false
+    }
+
+    fn compress(&self, z: &[f32], _rng: &mut Pcg64) -> Wire {
+        let l1: f64 = z.iter().map(|v| v.abs() as f64).sum();
+        let scale = if z.is_empty() {
+            0.0f32
+        } else {
+            (l1 / z.len() as f64) as f32
+        };
+        let mut payload = Vec::with_capacity(self.wire_bytes(z.len()));
+        payload.extend_from_slice(&scale.to_le_bytes());
+        let mut w = BitWriter::with_capacity(z.len().div_ceil(8));
+        for &v in z {
+            // Bit 1 ⇔ non-negative (ties, including ±0, round up).
+            w.push((v >= 0.0) as u32, 1);
+        }
+        payload.extend_from_slice(&w.finish());
+        Wire {
+            len: z.len(),
+            payload,
+        }
+    }
+
+    fn decompress(&self, wire: &Wire, out: &mut [f32]) {
+        assert_eq!(out.len(), wire.len);
+        let b: [u8; 4] = wire.payload[0..4].try_into().unwrap();
+        let scale = f32::from_le_bytes(b);
+        let mut r = BitReader::new(&wire.payload[4..]);
+        for o in out.iter_mut() {
+            *o = if r.read(1) == 1 { scale } else { -scale };
+        }
+    }
+
+    fn wire_bytes(&self, n: usize) -> usize {
+        4 + n.div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::{dist2_sq, norm2};
+
+    #[test]
+    fn round_trip_is_scaled_sign() {
+        let z = vec![0.5f32, -2.0, 0.25, -0.25];
+        let mut rng = Pcg64::seed_from_u64(1);
+        let w = SignCompressor.compress(&z, &mut rng);
+        assert_eq!(w.bytes(), SignCompressor.wire_bytes(z.len()));
+        let mut out = vec![0.0f32; z.len()];
+        SignCompressor.decompress(&w, &mut out);
+        let scale = (3.0f64 / 4.0) as f32; // ‖z‖₁/d = (0.5+2+0.25+0.25)/4
+        assert_eq!(out, vec![scale, -scale, scale, -scale]);
+    }
+
+    #[test]
+    fn one_bit_per_coordinate_on_the_wire() {
+        // 32× below fp32, modulo the single scale and bit padding.
+        assert_eq!(SignCompressor.wire_bytes(1024), 4 + 128);
+        assert_eq!(SignCompressor.wire_bytes(1), 4 + 1);
+        assert_eq!(SignCompressor.wire_bytes(0), 4);
+        let z = vec![1.0f32; 1024];
+        let mut rng = Pcg64::seed_from_u64(2);
+        let w = SignCompressor.compress(&z, &mut rng);
+        assert_eq!(w.bytes(), 132);
+    }
+
+    #[test]
+    fn contraction_identity_holds() {
+        // ‖z − C(z)‖² = ‖z‖² − ‖z‖₁²/d, exactly (up to f32 scale rounding).
+        let mut rng = Pcg64::seed_from_u64(3);
+        let mut z = vec![0.0f32; 512];
+        rng.fill_normal_f32(&mut z, 0.0, 1.0);
+        let mut out = vec![0.0f32; z.len()];
+        SignCompressor.apply(&z, &mut rng, &mut out);
+        let n2 = norm2(&z).powi(2);
+        let l1: f64 = z.iter().map(|v| v.abs() as f64).sum();
+        let expect = n2 - l1 * l1 / z.len() as f64;
+        let got = dist2_sq(&z, &out);
+        assert!((got - expect).abs() < 1e-3 * n2, "{got} vs {expect}");
+        assert!(got < n2, "sign must strictly contract nonzero inputs");
+    }
+
+    #[test]
+    fn zero_vector_round_trips_to_zero() {
+        let z = vec![0.0f32; 16];
+        let mut rng = Pcg64::seed_from_u64(4);
+        let mut out = vec![1.0f32; 16];
+        SignCompressor.apply(&z, &mut rng, &mut out);
+        assert!(out.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn biased_flag_set() {
+        assert!(!SignCompressor.is_unbiased());
+    }
+}

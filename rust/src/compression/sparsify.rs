@@ -73,9 +73,11 @@ impl Compressor for RandomSparsifier {
 }
 
 /// Biased top-k sparsification: keeps the k = frac·n largest-magnitude
-/// coordinates *unscaled*. Violates Assumption 1.5 (E[C(z)] ≠ z) — present
-/// only so the ablation bench can show why the paper restricts itself to
-/// unbiased operators.
+/// coordinates *unscaled*. Violates Assumption 1.5 (E[C(z)] ≠ z), so the
+/// driver rejects it for DCD/ECD (where it reproduces the Fig. 1 failure),
+/// but it is a (k/n)-contraction — `‖z − C(z)‖² ≤ (1 − k/n)‖z‖²` — which
+/// makes it admissible under the error-feedback algorithms
+/// ([`crate::algorithms::ChocoSgd`], [`crate::algorithms::DeepSqueeze`]).
 #[derive(Debug, Clone)]
 pub struct TopK {
     pub frac: f64,

@@ -173,7 +173,9 @@ mod tests {
     fn round_trip_various_widths() {
         for width in [1u32, 2, 3, 4, 5, 7, 8, 12, 16, 24, 32] {
             let max = if width == 32 { u32::MAX } else { (1 << width) - 1 };
-            let values: Vec<u32> = (0..50).map(|i| (i * 2654435761u64 % (max as u64 + 1)) as u32).collect();
+            let values: Vec<u32> = (0..50)
+                .map(|i| (i * 2654435761u64 % (max as u64 + 1)) as u32)
+                .collect();
             let mut w = BitWriter::new();
             for &v in &values {
                 w.push(v, width);

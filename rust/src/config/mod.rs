@@ -32,6 +32,7 @@ pub fn load_config(path: &Path) -> anyhow::Result<TrainConfig> {
             "heterogeneity" => cfg.heterogeneity = req_f64(v, k)? as f32,
             "batch" => cfg.batch = req_usize(v, k)?,
             "backend" => cfg.backend = req_str(v, k)?,
+            "eta" => cfg.eta = req_f64(v, k)? as f32,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
     }
@@ -64,6 +65,7 @@ pub fn apply_cli_overrides(cfg: &mut TrainConfig, args: &Args) {
     cfg.rows_per_node = args.usize("rows", cfg.rows_per_node);
     cfg.heterogeneity = args.f64("heterogeneity", cfg.heterogeneity as f64) as f32;
     cfg.batch = args.usize("batch", cfg.batch);
+    cfg.eta = args.f64("eta", cfg.eta as f64) as f32;
 }
 
 fn req_str(v: &Json, key: &str) -> anyhow::Result<String> {
@@ -149,6 +151,18 @@ mod tests {
         assert_eq!(cfg.n_nodes, 12);
         assert!((cfg.gamma - 0.5).abs() < 1e-7);
         assert_eq!(cfg.backend, "sim");
+    }
+
+    #[test]
+    fn eta_key_loads_and_overrides() {
+        let p = write_tmp("eta.json", r#"{"algo":"choco","compressor":"sign","eta":0.3}"#);
+        let mut cfg = load_config(&p).unwrap();
+        assert!((cfg.eta - 0.3).abs() < 1e-7);
+        let args = Args::parse_from(["--eta", "0.7"].iter().map(|s| s.to_string()));
+        apply_cli_overrides(&mut cfg, &args);
+        assert!((cfg.eta - 0.7).abs() < 1e-7);
+        std::fs::remove_file(p).ok();
+        assert_eq!(TrainConfig::default().eta, 1.0);
     }
 
     #[test]

@@ -80,6 +80,9 @@ pub struct TrainConfig {
     /// Execution backend: `threads` (real concurrency) or `sim`
     /// (discrete-event, virtual time).
     pub backend: String,
+    /// Consensus step size η ∈ (0, 1] for the error-feedback algorithms
+    /// (`choco`, `deepsqueeze`); 1.0 is a full gossip step.
+    pub eta: f32,
 }
 
 impl Default for TrainConfig {
@@ -99,6 +102,7 @@ impl Default for TrainConfig {
             heterogeneity: 0.5,
             batch: 8,
             backend: "threads".into(),
+            eta: 1.0,
         }
     }
 }
@@ -136,11 +140,14 @@ impl TrainConfig {
     pub fn build_algo_config(&self) -> anyhow::Result<AlgoConfig> {
         let compressor = compression::from_name(&self.compressor)
             .ok_or_else(|| anyhow::anyhow!("unknown compressor '{}'", self.compressor))?;
-        Ok(AlgoConfig {
+        let cfg = AlgoConfig {
             mixing: self.build_mixing()?,
             compressor: Arc::from(compressor),
             seed: self.seed,
-        })
+            eta: self.eta,
+        };
+        validate_algo_config(&self.algo, &cfg)?;
+        Ok(cfg)
     }
 
     pub fn build_model_kind(&self) -> anyhow::Result<ModelKind> {
@@ -179,6 +186,26 @@ impl TrainConfig {
     }
 }
 
+/// Validate an (algorithm, config) pair before building per-node
+/// programs — shared by *both* execution backends, so a hand-built
+/// `AlgoConfig` cannot smuggle an unsound combination past the
+/// `TrainConfig` gate on either path.
+pub(crate) fn validate_algo_config(algo_name: &str, cfg: &AlgoConfig) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !crate::algorithms::requires_unbiased_compressor(algo_name)
+            || cfg.compressor.is_unbiased(),
+        "compressor '{}' is biased and '{algo_name}' requires an unbiased compressor \
+         (Assumption 1.5); use an error-feedback algorithm (choco|deepsqueeze) instead",
+        cfg.compressor.name()
+    );
+    anyhow::ensure!(
+        cfg.eta > 0.0 && cfg.eta <= 1.0,
+        "consensus step size eta must be in (0, 1], got {}",
+        cfg.eta
+    );
+    Ok(())
+}
+
 /// Build one program per node for `algo_name` (validating the name).
 fn build_programs(
     algo_name: &str,
@@ -190,6 +217,7 @@ fn build_programs(
 ) -> anyhow::Result<Vec<Box<dyn NodeProgram>>> {
     let n = cfg.mixing.n();
     anyhow::ensure!(models.len() == n, "need one model per node");
+    validate_algo_config(algo_name, cfg)?;
     models
         .into_iter()
         .enumerate()
@@ -341,6 +369,84 @@ mod tests {
     }
 
     #[test]
+    fn biased_compressor_rejected_for_dcd_ecd_accepted_for_error_feedback() {
+        for comp in ["topk_10", "sign"] {
+            for algo in ["dcd", "ecd", "qallreduce"] {
+                let cfg = TrainConfig {
+                    algo: algo.into(),
+                    compressor: comp.into(),
+                    ..Default::default()
+                };
+                let err = cfg.build_algo_config().unwrap_err().to_string();
+                assert!(err.contains("biased"), "{algo}/{comp}: {err}");
+            }
+            for algo in ["choco", "deepsqueeze"] {
+                let cfg = TrainConfig {
+                    algo: algo.into(),
+                    compressor: comp.into(),
+                    eta: 0.5,
+                    ..Default::default()
+                };
+                assert!(cfg.build_algo_config().is_ok(), "{algo}/{comp}");
+            }
+        }
+    }
+
+    #[test]
+    fn biased_compressor_rejected_by_program_builders_too() {
+        // Both backends refuse the unsound combination even when handed a
+        // hand-built AlgoConfig (the CLI path is gated earlier).
+        let cfg = TrainConfig {
+            algo: "choco".into(),
+            compressor: "sign".into(),
+            n_nodes: 4,
+            dim: 8,
+            rows_per_node: 16,
+            ..Default::default()
+        };
+        let algo_cfg = cfg.build_algo_config().unwrap();
+        let (models, x0) = cfg.build_models().unwrap();
+        assert!(run_simulated("dcd", &algo_cfg, models, &x0, 0.1, 2, SimOpts::default()).is_err());
+        let (models, _) = cfg.build_models().unwrap();
+        assert!(run_threaded("dcd", &algo_cfg, models, &x0, 0.1, 2).is_err());
+        let (models, _) = cfg.build_models().unwrap();
+        assert!(run_simulated("choco", &algo_cfg, models, &x0, 0.1, 2, SimOpts::default()).is_ok());
+    }
+
+    #[test]
+    fn out_of_range_eta_rejected_by_program_builders_too() {
+        // A hand-built AlgoConfig with a disabled consensus step must not
+        // run silently on either backend.
+        let cfg = TrainConfig {
+            algo: "choco".into(),
+            n_nodes: 4,
+            dim: 8,
+            rows_per_node: 16,
+            ..Default::default()
+        };
+        let mut algo_cfg = cfg.build_algo_config().unwrap();
+        algo_cfg.eta = 0.0;
+        let (models, x0) = cfg.build_models().unwrap();
+        assert!(
+            run_simulated("choco", &algo_cfg, models, &x0, 0.1, 2, SimOpts::default()).is_err()
+        );
+        let (models, _) = cfg.build_models().unwrap();
+        assert!(run_threaded("choco", &algo_cfg, models, &x0, 0.1, 2).is_err());
+    }
+
+    #[test]
+    fn eta_out_of_range_rejected() {
+        for eta in [0.0f32, -0.5, 1.5] {
+            let cfg = TrainConfig {
+                algo: "choco".into(),
+                eta,
+                ..Default::default()
+            };
+            assert!(cfg.build_algo_config().is_err(), "eta {eta}");
+        }
+    }
+
+    #[test]
     fn backend_names_parse() {
         assert_eq!(Backend::from_name("threads"), Some(Backend::Threads));
         assert_eq!(Backend::from_name("sim"), Some(Backend::Sim));
@@ -400,6 +506,8 @@ mod tests {
         let cfg = TrainConfig::default();
         let algo_cfg = cfg.build_algo_config().unwrap();
         let (models, x0) = cfg.build_models().unwrap();
-        assert!(run_simulated("adpsgd", &algo_cfg, models, &x0, 0.1, 5, SimOpts::default()).is_err());
+        assert!(
+            run_simulated("adpsgd", &algo_cfg, models, &x0, 0.1, 5, SimOpts::default()).is_err()
+        );
     }
 }

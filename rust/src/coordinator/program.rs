@@ -315,6 +315,153 @@ impl NodeProgram for NaiveProgram {
 }
 
 // ---------------------------------------------------------------------------
+// CHOCO-SGD (Koloskova et al., 2019): error-feedback gossip over public
+// copies x̂. Every replica of node j is updated by the same compressed
+// correction q_j, so replicas mirror exactly (like DCD's) — the memory is
+// implicit in the uncompressed difference x_{t+½} − x̂, which admits
+// biased compressors (top-k, sign).
+
+struct ChocoProgram {
+    c: Common,
+    /// Consensus step size η ∈ (0, 1].
+    eta: f32,
+    /// x̂^{(i)}: this node's own public copy.
+    xhat_self: Vec<f32>,
+    /// x̂^{(j)}: replicas of the neighbors' public copies.
+    xhat_nbrs: Vec<Vec<f32>>,
+    half: Vec<f32>,
+    mixed: Vec<f32>,
+    z: Vec<f32>,
+    cz: Vec<f32>,
+}
+
+impl NodeProgram for ChocoProgram {
+    fn emit(&mut self, _t: u64, _phase: usize, out: &mut Outbox) {
+        self.c.grad();
+        // x_{t+½} = x_t − γ g_t.
+        self.half.copy_from_slice(&self.c.x);
+        vecops::axpy(-self.c.gamma, &self.c.g, &mut self.half);
+        // q = C(x_{t+½} − x̂); broadcast, and apply to the own copy (the
+        // identical update every neighbor applies to its replica of us).
+        vecops::sub(&self.half, &self.xhat_self, &mut self.z);
+        let wire = self
+            .c
+            .compressor
+            .compress(&self.z, &mut self.c.comp_rng);
+        self.c.broadcast(out, &wire);
+        self.c.compressor.decompress(&wire, &mut self.cz);
+        vecops::axpy(1.0, &self.cz, &mut self.xhat_self);
+    }
+
+    fn expects(&self, _t: u64, _phase: usize) -> Vec<(usize, Channel)> {
+        self.c.gossip_expects()
+    }
+
+    fn absorb(&mut self, _t: u64, _phase: usize, msgs: Vec<Wire>) {
+        // Apply the neighbors' corrections to their replicas.
+        for (k, w) in msgs.iter().enumerate() {
+            self.c.compressor.decompress(w, &mut self.cz);
+            vecops::axpy(1.0, &self.cz, &mut self.xhat_nbrs[k]);
+        }
+        // x_{t+1} = x_{t+½} + η (Σ_j W_ij x̂^{(j)} − x̂^{(i)}).
+        self.c
+            .mix_weighted(&self.xhat_self, &self.xhat_nbrs, &mut self.mixed);
+        let eta = self.eta;
+        for ((xd, hd), (md, sd)) in self
+            .c
+            .x
+            .iter_mut()
+            .zip(&self.half)
+            .zip(self.mixed.iter().zip(&self.xhat_self))
+        {
+            *xd = *hd + eta * (*md - *sd);
+        }
+    }
+
+    fn set_gamma(&mut self, gamma: f32) {
+        self.c.gamma = gamma;
+    }
+
+    fn x(&self) -> &[f32] {
+        &self.c.x
+    }
+
+    fn into_result(self: Box<Self>) -> (Vec<f32>, Vec<f64>) {
+        (self.c.x, self.c.losses)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DeepSqueeze (Tang et al., 2019): gossip error-compensated *compressed
+// models* under the η-softened mixing W_η = (1−η)I + ηW; the error memory
+// δ replays whatever compression dropped.
+
+struct DeepSqueezeProgram {
+    c: Common,
+    /// Consensus step size η ∈ (0, 1].
+    eta: f32,
+    /// δ: the compression-error memory.
+    e: Vec<f32>,
+    z: Vec<f32>,
+    cz_self: Vec<f32>,
+    recv_bufs: Vec<Vec<f32>>,
+    mixed: Vec<f32>,
+}
+
+impl NodeProgram for DeepSqueezeProgram {
+    fn emit(&mut self, _t: u64, _phase: usize, out: &mut Outbox) {
+        self.c.grad();
+        // z = x − γ g + δ (error-compensated half-step).
+        self.z.copy_from_slice(&self.c.x);
+        vecops::axpy(-self.c.gamma, &self.c.g, &mut self.z);
+        vecops::axpy(1.0, &self.e, &mut self.z);
+        let wire = self
+            .c
+            .compressor
+            .compress(&self.z, &mut self.c.comp_rng);
+        self.c.broadcast(out, &wire);
+        // δ = z − C(z): what compression dropped, replayed next step.
+        self.c.compressor.decompress(&wire, &mut self.cz_self);
+        vecops::sub(&self.z, &self.cz_self, &mut self.e);
+    }
+
+    fn expects(&self, _t: u64, _phase: usize) -> Vec<(usize, Channel)> {
+        self.c.gossip_expects()
+    }
+
+    fn absorb(&mut self, _t: u64, _phase: usize, msgs: Vec<Wire>) {
+        for (k, w) in msgs.iter().enumerate() {
+            self.c.compressor.decompress(w, &mut self.recv_bufs[k]);
+        }
+        // x_{t+1} = C(z^{(i)}) + η (Σ_j W_ij C(z^{(j)}) − C(z^{(i)})).
+        self.c
+            .mix_weighted(&self.cz_self, &self.recv_bufs, &mut self.mixed);
+        let eta = self.eta;
+        for ((xd, cd), md) in self
+            .c
+            .x
+            .iter_mut()
+            .zip(&self.cz_self)
+            .zip(&self.mixed)
+        {
+            *xd = *cd + eta * (*md - *cd);
+        }
+    }
+
+    fn set_gamma(&mut self, gamma: f32) {
+        self.c.gamma = gamma;
+    }
+
+    fn x(&self) -> &[f32] {
+        &self.c.x
+    }
+
+    fn into_result(self: Box<Self>) -> (Vec<f32>, Vec<f64>) {
+        (self.c.x, self.c.losses)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Centralized Allreduce (hub-rooted reduce + broadcast), optionally with
 // QSGD-style gradient quantization (`quantized = true`).
 
@@ -431,7 +578,7 @@ impl NodeProgram for AllreduceProgram {
 // ---------------------------------------------------------------------------
 
 /// Build node `node`'s program for `algo_name`. Supported: `dpsgd`, `dcd`,
-/// `ecd`, `naive`, `allreduce`, `qallreduce`.
+/// `ecd`, `naive`, `allreduce`, `qallreduce`, `choco`, `deepsqueeze`.
 pub fn build_program(
     algo_name: &str,
     cfg: &AlgoConfig,
@@ -469,6 +616,25 @@ pub fn build_program(
             c,
             mixed: vec![0.0f32; dim],
             recv_bufs: vec![vec![0.0f32; dim]; deg],
+        }),
+        "choco" | "chocosgd" => Box::new(ChocoProgram {
+            eta: cfg.eta,
+            xhat_self: x0.to_vec(),
+            xhat_nbrs: vec![x0.to_vec(); deg],
+            c,
+            half: vec![0.0f32; dim],
+            mixed: vec![0.0f32; dim],
+            z: vec![0.0f32; dim],
+            cz: vec![0.0f32; dim],
+        }),
+        "deepsqueeze" => Box::new(DeepSqueezeProgram {
+            eta: cfg.eta,
+            e: vec![0.0f32; dim],
+            c,
+            z: vec![0.0f32; dim],
+            cz_self: vec![0.0f32; dim],
+            recv_bufs: vec![vec![0.0f32; dim]; deg],
+            mixed: vec![0.0f32; dim],
         }),
         "allreduce" | "qallreduce" => Box::new(AllreduceProgram {
             quantized: algo_name == "qallreduce",

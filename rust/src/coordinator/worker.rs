@@ -86,7 +86,7 @@ fn run_node(mut prog: Box<dyn NodeProgram>, mut ep: Endpoint, iters: usize) -> W
 
 /// Run `iters` synchronous iterations of `algo_name` over worker threads.
 /// `models[i]` moves to thread i. Supported: `dpsgd`, `dcd`, `ecd`,
-/// `naive`, `allreduce`, `qallreduce`.
+/// `naive`, `allreduce`, `qallreduce`, `choco`, `deepsqueeze`.
 pub fn run_threaded(
     algo_name: &str,
     cfg: &AlgoConfig,
@@ -98,9 +98,11 @@ pub fn run_threaded(
     let n = cfg.mixing.n();
     anyhow::ensure!(models.len() == n, "need one model per node");
     match algo_name {
-        "dpsgd" | "dcd" | "ecd" | "naive" | "allreduce" | "qallreduce" => {}
+        "dpsgd" | "dcd" | "ecd" | "naive" | "allreduce" | "qallreduce" | "choco" | "chocosgd"
+        | "deepsqueeze" => {}
         other => anyhow::bail!("unsupported threaded algorithm '{other}'"),
     }
+    super::validate_algo_config(algo_name, cfg)?;
 
     let endpoints = Transport::fabric(n);
     let mut reports: Vec<WorkerReport> = std::thread::scope(|s| {

@@ -65,6 +65,7 @@ fn run_quad(
         mixing: Arc::new(mixing),
         compressor: Arc::from(compression::from_name(compressor).unwrap()),
         seed: 0xab1a,
+        eta: 1.0,
     };
     let x0 = vec![0.0f32; dim];
     let mut a = algorithms::from_name(algo, cfg, &x0, n).unwrap();
@@ -88,7 +89,15 @@ pub fn compressor_sweep(quick: bool) -> Table {
 
     let mut t = Table::new(
         "Ablation: compressor α vs DCD bound and observed behavior (ring n=8)",
-        &["compressor", "alpha", "alpha_bound", "dcd_subopt", "dcd_verdict", "ecd_subopt", "ecd_verdict"],
+        &[
+            "compressor",
+            "alpha",
+            "alpha_bound",
+            "dcd_subopt",
+            "dcd_verdict",
+            "ecd_subopt",
+            "ecd_verdict",
+        ],
     );
     for name in ["q8", "q4", "q2", "q1", "sparse_p50", "sparse_p25", "sparse_p10", "topk_25"] {
         let c = compression::from_name(name).unwrap();

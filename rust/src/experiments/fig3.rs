@@ -95,7 +95,13 @@ pub struct SimSweepPoint {
 pub fn sim_sweep_points(ns: &[usize], iters: usize, net: NetworkModel) -> Vec<SimSweepPoint> {
     let mut out = Vec::new();
     for &n in ns {
-        for (algo, comp) in [("dpsgd", "fp32"), ("dcd", "q8"), ("ecd", "q8")] {
+        for (algo, comp, eta) in [
+            ("dpsgd", "fp32", 1.0f32),
+            ("dcd", "q8", 1.0),
+            ("ecd", "q8", 1.0),
+            ("choco", "sign", 0.4),
+            ("deepsqueeze", "topk_25", 0.4),
+        ] {
             let spec = SynthSpec {
                 n_nodes: n,
                 dim: 1024,
@@ -108,6 +114,7 @@ pub fn sim_sweep_points(ns: &[usize], iters: usize, net: NetworkModel) -> Vec<Si
                 mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n))),
                 compressor: Arc::from(compression::from_name(comp).expect("compressor")),
                 seed: 0xf163,
+                eta,
             };
             let run = run_simulated(
                 algo,

@@ -1,6 +1,8 @@
 //! Experiment drivers: one module per paper figure (DESIGN.md §5 maps
-//! each to its bench target), plus the ablations the paper's theory
-//! motivates. Every driver returns [`Table`]s so benches, the CLI, and
+//! each to its bench target), the ablations the paper's theory motivates,
+//! and the error-feedback sweep ([`ef_sweep`]) that takes the
+//! CHOCO/DeepSqueeze family across the bandwidth×latency grid at n = 64.
+//! Every driver returns [`Table`]s so benches, the CLI, and
 //! EXPERIMENTS.md all render the same rows.
 //!
 //! Every traced run goes through [`run_named`], which dispatches to an
@@ -10,6 +12,7 @@
 //! (`DECOMP_BACKEND=threads` — real message passing).
 
 pub mod ablations;
+pub mod ef_sweep;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
@@ -123,10 +126,12 @@ pub fn run_named_on(
         mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, spec.n_nodes))),
         compressor: Arc::from(compression::from_name(compressor).expect("compressor")),
         seed,
+        eta: 1.0,
     };
     match backend {
         ExecBackend::Reference => {
-            let mut algo = algorithms::from_name(algo, mk_cfg(), &x0, spec.n_nodes).expect("algorithm");
+            let mut algo =
+                algorithms::from_name(algo, mk_cfg(), &x0, spec.n_nodes).expect("algorithm");
             algorithms::run_training(algo.as_mut(), &mut models, opts)
         }
         ExecBackend::Sim => {

@@ -6,13 +6,19 @@
 //! the centralized `O(1/√nT)` rate, plus every baseline and substrate the
 //! paper's evaluation needs.
 //!
+//! Beyond the paper, the crate carries the error-feedback algorithm
+//! family — CHOCO-SGD and DeepSqueeze ([`algorithms::ChocoSgd`],
+//! [`algorithms::DeepSqueeze`]) — which makes *biased* compression
+//! (top-k, 1-bit sign) converge where the paper's algorithms must
+//! reject it.
+//!
 //! Architecture (three layers, python never on the training path):
 //! - **L3 (this crate)** — the decentralized coordinator: topologies &
-//!   mixing matrices, unbiased compression codecs, training algorithms,
-//!   a bandwidth/latency network cost model plus a discrete-event
-//!   simulation engine ([`network::sim`]), a threaded transport, metrics,
-//!   config, CLI ([`coordinator`], [`algorithms`], [`compression`],
-//!   [`network`], [`topology`]).
+//!   mixing matrices, compression codecs with honest wire formats,
+//!   training algorithms, a bandwidth/latency network cost model plus a
+//!   discrete-event simulation engine ([`network::sim`]), a threaded
+//!   transport, metrics, config, CLI ([`coordinator`], [`algorithms`],
+//!   [`compression`], [`network`], [`topology`]).
 //! - **L2** — a JAX transformer whose `grad_step` is AOT-lowered to HLO
 //!   text by `python/compile/aot.py` and executed from rust via PJRT
 //!   ([`runtime`], behind the `pjrt` cargo feature).

@@ -1,28 +1,36 @@
 //! `decomp` — the leader CLI.
 //!
 //! Subcommands:
-//!   train      run a training job (--backend threads|sim)
-//!   simulate   run the deterministic single-process reference simulator
-//!   spectra    print mixing-matrix spectral stats for a topology
-//!   fig1..fig4 regenerate a paper figure's table(s)
-//!   ablations  run the theory-driven ablation sweeps
-//!   netmodel   print the per-iteration comm-time landscape
+//!   train         run a training job (--backend threads|sim)
+//!   simulate      run the deterministic single-process reference simulator
+//!   spectra       print mixing-matrix spectral stats for a topology
+//!   fig1..fig4    regenerate a paper figure's table(s)
+//!   efsweep       error-feedback family under the bandwidth×latency grid
+//!   ablations     run the theory-driven ablation sweeps
+//!   netmodel      print the per-iteration comm-time landscape
+//!   bench-summary collect the BENCH_*.json perf metrics
+//!   bench-compare gate a BENCH_pr.json against a baseline
 //!
 //! Examples:
 //!   decomp train --algo dcd --compressor q8 --nodes 8 --iters 500
+//!   decomp train --algo choco --compressor sign --eta 0.4 --nodes 8
 //!   decomp train --backend sim --nodes 64 --bandwidth-mbps 5 --latency-ms 5
 //!   decomp train --config experiments.json --gamma 0.05
 //!   decomp spectra --topology hypercube --nodes 16
 //!   decomp fig3
+//!   decomp bench-summary --quick --out BENCH_pr.json
+//!   decomp bench-compare BENCH_baseline.json BENCH_pr.json
 
 use decomp::algorithms::{self, RunOpts};
+use decomp::bench_harness::summary;
 use decomp::config::{apply_cli_overrides, load_config};
 use decomp::coordinator::{run_sim_trace, run_threaded, Backend, TrainConfig};
-use decomp::experiments::{ablations, fig1, fig2, fig3, fig4};
+use decomp::experiments::{ablations, ef_sweep, fig1, fig2, fig3, fig4};
 use decomp::metrics::{fmt_bytes, fmt_secs, Table};
 use decomp::network::cost::{CostModel, NetworkModel};
 use decomp::network::sim::SimOpts;
 use decomp::util::cli::Args;
+use decomp::util::json::Json;
 
 fn main() {
     if let Err(e) = run() {
@@ -43,8 +51,11 @@ fn run() -> anyhow::Result<()> {
         "fig2" => print_tables(fig2::run(quick)),
         "fig3" => print_tables(fig3::run(quick)),
         "fig4" => print_tables(fig4::run(quick)),
+        "efsweep" => print_tables(ef_sweep::run(quick)),
         "ablations" => print_tables(ablations::run(quick)),
         "netmodel" => print_tables(fig3::run(false)),
+        "bench-summary" => bench_summary(&args, quick),
+        "bench-compare" => bench_compare(&args),
         _ => {
             println!("{HELP}");
             Ok(())
@@ -61,16 +72,25 @@ COMMANDS
                 --backend threads|sim   (threads: one OS thread per node,
                   real message passing; sim: discrete-event engine with a
                   virtual clock — scales to n >= 64 and reports modeled time)
-                --algo dpsgd|dcd|ecd|naive|allreduce  --compressor fp32|q8|q4|...
+                --algo dpsgd|dcd|ecd|naive|allreduce|choco|deepsqueeze
+                --compressor fp32|q8|q4|...|sparse_p25|topk_10|sign
+                --eta F  (consensus step size for choco/deepsqueeze)
                 --nodes N --topology ring|full|chain|star|hypercube
                 --gamma F --iters N --model quadratic|linear|logistic|mlp
                 --bandwidth-mbps F --latency-ms F  (sim backend network condition)
                 --config file.json (CLI flags override file values)
+              note: biased compressors (topk_*, sign) are rejected for
+              dcd/ecd/qallreduce — only error-feedback algorithms admit them
   simulate    same options, deterministic single-process reference simulator
   spectra     mixing-matrix spectral stats: --topology T --nodes N
   fig1..fig4  regenerate the paper figure tables (--quick for small runs)
+  efsweep     DCD/ECD/CHOCO/DeepSqueeze under the bandwidth×latency grid
+              at n=64 on the event engine (--quick for small runs)
   ablations   compressor/topology/heterogeneity sweeps
   netmodel    per-iteration communication-time landscape
+  bench-summary  collect perf metrics: [--quick] [--out BENCH_pr.json]
+  bench-compare  <baseline.json> <candidate.json> [--tolerance 0.25];
+                 exits non-zero when a metric regresses past the tolerance
 
 Set DECOMP_BACKEND=sim|threads|reference to re-route the figure
 experiments (fig1..fig4, ablations) through an execution backend.";
@@ -241,4 +261,63 @@ fn print_tables(tables: Vec<Table>) -> anyhow::Result<()> {
         println!();
     }
     Ok(())
+}
+
+/// Collect the perf metrics and optionally persist them as BENCH JSON.
+fn bench_summary(args: &Args, quick: bool) -> anyhow::Result<()> {
+    let report = summary::collect(quick);
+    report.to_table().print();
+    if let Some(path) = args.opt_str("out") {
+        std::fs::write(path, report.to_json().to_pretty())?;
+        println!("bench summary written to {path}");
+    }
+    Ok(())
+}
+
+fn load_bench(path: &str) -> anyhow::Result<summary::BenchReport> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read bench file '{path}': {e}"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    summary::BenchReport::from_json(&j)
+}
+
+/// Gate a candidate BENCH json against a baseline; non-zero exit on
+/// regression (the CI bench-smoke contract).
+fn bench_compare(args: &Args) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        args.positional.len() == 3,
+        "usage: decomp bench-compare <baseline.json> <candidate.json> [--tolerance 0.25]"
+    );
+    let (base_path, cand_path) = (&args.positional[1], &args.positional[2]);
+    let tolerance = args.f64("tolerance", 0.25);
+    let base = load_bench(base_path)?;
+    let cand = load_bench(cand_path)?;
+    let out = summary::compare(&base, &cand, tolerance);
+    if out.regressions.is_empty() {
+        println!(
+            "bench-compare OK: {} metric(s) within {:.0}% of {base_path}",
+            out.compared,
+            tolerance * 100.0
+        );
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!("bench-compare: regressions past {:.0}%", tolerance * 100.0),
+        &["metric", "baseline", "candidate", "worse_by"],
+    );
+    for r in &out.regressions {
+        t.row(vec![
+            r.metric.clone(),
+            format!("{:.6}", r.baseline),
+            format!("{:.6}", r.candidate),
+            format!("{:.1}%", r.worse_by * 100.0),
+        ]);
+    }
+    t.print();
+    anyhow::bail!(
+        "{} of {} compared metric(s) regressed more than {:.0}% vs {base_path}",
+        out.regressions.len(),
+        out.compared,
+        tolerance * 100.0
+    );
 }

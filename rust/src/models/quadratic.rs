@@ -25,7 +25,13 @@ impl Quadratic {
 
     /// Build one Quadratic per node with centers drawn N(0, spread²) —
     /// `spread` directly sets ζ.
-    pub fn family(n_nodes: usize, dim: usize, spread: f32, noise_std: f32, seed: u64) -> Vec<Quadratic> {
+    pub fn family(
+        n_nodes: usize,
+        dim: usize,
+        spread: f32,
+        noise_std: f32,
+        seed: u64,
+    ) -> Vec<Quadratic> {
         (0..n_nodes)
             .map(|i| {
                 let mut rng = Pcg64::new(seed, i as u64);

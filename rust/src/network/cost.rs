@@ -240,7 +240,12 @@ impl CommSchedule {
 }
 
 /// Epoch time for an algorithm: `iters × (compute + comm)`.
-pub fn epoch_time(iters: usize, compute_per_iter_s: f64, sched: CommSchedule, net: &NetworkModel) -> f64 {
+pub fn epoch_time(
+    iters: usize,
+    compute_per_iter_s: f64,
+    sched: CommSchedule,
+    net: &NetworkModel,
+) -> f64 {
     iters as f64 * (compute_per_iter_s + sched.time(net))
 }
 

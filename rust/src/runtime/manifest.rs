@@ -25,8 +25,9 @@ impl Manifest {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .map_err(|e| anyhow::anyhow!("reading manifest in {}: {e}", dir.display()))?;
         let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
-        let need =
-            |key: &str| -> anyhow::Result<&Json> { j.get(key).ok_or_else(|| anyhow::anyhow!("manifest missing '{key}'")) };
+        let need = |key: &str| -> anyhow::Result<&Json> {
+            j.get(key).ok_or_else(|| anyhow::anyhow!("manifest missing '{key}'"))
+        };
         let usize_of = |v: &Json, key: &str| -> anyhow::Result<usize> {
             v.as_usize().ok_or_else(|| anyhow::anyhow!("manifest field '{key}' not a usize"))
         };

@@ -38,6 +38,7 @@ fn setup(
         mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n))),
         compressor: Arc::from(compression::from_name(compressor).unwrap()),
         seed,
+        eta: 1.0,
     };
     (cfg, m1, m2, x0)
 }
@@ -47,6 +48,7 @@ fn clone_cfg(cfg: &AlgoConfig) -> AlgoConfig {
         mixing: cfg.mixing.clone(),
         compressor: cfg.compressor.clone(),
         seed: cfg.seed,
+        eta: cfg.eta,
     }
 }
 
@@ -57,7 +59,11 @@ fn assert_backends_bitwise(algo_name: &str, compressor: &str) {
     let dim = 48;
     let iters = 40;
     let gamma = 0.05;
-    let (cfg, m_sim, m_thr, x0) = setup(n, dim, compressor, 42);
+    let (mut cfg, m_sim, m_thr, x0) = setup(n, dim, compressor, 42);
+    // Exercise the η ≠ 1 path for the error-feedback family.
+    if matches!(algo_name, "choco" | "deepsqueeze") {
+        cfg.eta = 0.4;
+    }
 
     let sim = run_simulated(
         algo_name,
@@ -136,11 +142,42 @@ fn dcd_q4_sim_bitwise_equals_threads() {
 }
 
 #[test]
+fn choco_q8_sim_bitwise_equals_threads_on_8_ring() {
+    assert_backends_bitwise("choco", "q8");
+}
+
+#[test]
+fn choco_sign_sim_bitwise_equals_threads() {
+    assert_backends_bitwise("choco", "sign");
+}
+
+#[test]
+fn choco_topk_sim_bitwise_equals_threads() {
+    assert_backends_bitwise("choco", "topk_25");
+}
+
+#[test]
+fn deepsqueeze_q4_sim_bitwise_equals_threads() {
+    assert_backends_bitwise("deepsqueeze", "q4");
+}
+
+#[test]
+fn deepsqueeze_topk_sim_bitwise_equals_threads() {
+    assert_backends_bitwise("deepsqueeze", "topk_25");
+}
+
+#[test]
+fn deepsqueeze_sign_sim_bitwise_equals_threads() {
+    assert_backends_bitwise("deepsqueeze", "sign");
+}
+
+#[test]
 fn fig3_sweep_runs_at_n64_on_sim_backend() {
-    // The acceptance bar for the tentpole: the fig3 network sweep at 64
-    // nodes, executed (not closed-formed) on the event engine.
+    // The fig3 network sweep at 64 nodes, executed (not closed-formed) on
+    // the event engine — now including the error-feedback family.
     let pts = fig3::sim_sweep_points(&[64], 3, NetworkModel::new(5e6, 5e-3));
-    assert_eq!(pts.len(), 3); // dpsgd_fp32, dcd_q8, ecd_q8
+    // dpsgd_fp32, dcd_q8, ecd_q8, choco_sign, deepsqueeze_topk_25.
+    assert_eq!(pts.len(), 5);
     for p in &pts {
         assert_eq!(p.n, 64);
         assert!(p.virtual_s_per_iter.is_finite() && p.virtual_s_per_iter > 0.0);
@@ -148,12 +185,42 @@ fn fig3_sweep_runs_at_n64_on_sim_backend() {
     }
     let fp = pts.iter().find(|p| p.algo == "dpsgd_fp32").unwrap();
     let q8 = pts.iter().find(|p| p.algo == "dcd_q8").unwrap();
+    let sign = pts.iter().find(|p| p.algo == "choco_sign").unwrap();
     assert!(
         q8.virtual_s_per_iter < 0.5 * fp.virtual_s_per_iter,
         "compression must win at 5 Mbps: q8 {} vs fp {}",
         q8.virtual_s_per_iter,
         fp.virtual_s_per_iter
     );
+    // 1-bit sign moves ~1/32 the payload of fp32.
+    assert!(
+        sign.payload_per_node_iter < 0.05 * fp.payload_per_node_iter,
+        "sign {} vs fp {}",
+        sign.payload_per_node_iter,
+        fp.payload_per_node_iter
+    );
+}
+
+#[test]
+fn ef_sweep_biased_compressors_converge_at_n64() {
+    // Acceptance: the EF sweep runs at n = 64 on the sim backend and the
+    // biased compressors (top-k, sign) land within 10% of full-precision
+    // D-PSGD in quick mode. (The same bar is asserted module-side; this
+    // pins it from the integration suite where the backend matrix lives.)
+    use decomp::experiments::ef_sweep;
+    use decomp::network::cost::NetCondition;
+    let rows = ef_sweep::sweep_condition(64, 150, true, NetCondition::Worst);
+    let loss = |name: &str| {
+        rows.iter()
+            .find(|r| r.algo == name)
+            .unwrap_or_else(|| panic!("{name} missing"))
+            .final_loss
+    };
+    let base = loss("dpsgd_fp32");
+    for name in ["choco_topk_25", "choco_sign"] {
+        let l = loss(name);
+        assert!(l.is_finite() && l <= 1.10 * base + 1e-9, "{name}: {l} vs {base}");
+    }
 }
 
 #[test]

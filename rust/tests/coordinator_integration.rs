@@ -40,6 +40,7 @@ fn setup(
         mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n))),
         compressor: Arc::from(compression::from_name(compressor).unwrap()),
         seed,
+        eta: 1.0,
     };
     (cfg, m1, m2, x0)
 }
@@ -49,6 +50,7 @@ fn clone_cfg(cfg: &AlgoConfig) -> AlgoConfig {
         mixing: cfg.mixing.clone(),
         compressor: cfg.compressor.clone(),
         seed: cfg.seed,
+        eta: cfg.eta,
     }
 }
 
@@ -57,7 +59,11 @@ fn assert_bitwise(algo_name: &str, compressor: &str) {
     let dim = 48;
     let iters = 40;
     let gamma = 0.05;
-    let (cfg, mut m_sim, m_thr, x0) = setup(n, dim, compressor, 42);
+    let (mut cfg, mut m_sim, m_thr, x0) = setup(n, dim, compressor, 42);
+    // Exercise the η ≠ 1 path for the error-feedback family.
+    if matches!(algo_name, "choco" | "deepsqueeze") {
+        cfg.eta = 0.4;
+    }
 
     let mut sim = algorithms::from_name(algo_name, clone_cfg(&cfg), &x0, n).unwrap();
     for _ in 0..iters {
@@ -111,6 +117,26 @@ fn allreduce_threaded_bitwise_equals_simulator() {
 #[test]
 fn qallreduce_threaded_bitwise_equals_simulator() {
     assert_bitwise("qallreduce", "q8");
+}
+
+#[test]
+fn choco_threaded_bitwise_equals_simulator() {
+    assert_bitwise("choco", "q8");
+}
+
+#[test]
+fn choco_sign_threaded_bitwise_equals_simulator() {
+    assert_bitwise("choco", "sign");
+}
+
+#[test]
+fn deepsqueeze_threaded_bitwise_equals_simulator() {
+    assert_bitwise("deepsqueeze", "q4");
+}
+
+#[test]
+fn deepsqueeze_topk_threaded_bitwise_equals_simulator() {
+    assert_bitwise("deepsqueeze", "topk_25");
 }
 
 #[test]

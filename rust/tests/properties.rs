@@ -4,7 +4,7 @@
 
 use decomp::algorithms::{self, consensus_distance, AlgoConfig};
 use decomp::compression::{
-    from_name, Compressor, Identity, RandomSparsifier, StochasticQuantizer,
+    from_name, Compressor, Identity, RandomSparsifier, SignCompressor, StochasticQuantizer, TopK,
 };
 use decomp::linalg::eig::{spectral_stats, symmetric_eigen};
 use decomp::linalg::mat::Mat;
@@ -149,7 +149,7 @@ fn prop_wire_bytes_matches_actual_payload() {
     check("wire_bytes accounting exact for deterministic codecs", CASES, |g| {
         let z = g.vec_f32(1, 5000, 1.0);
         let mut rng = g.rng.split(3);
-        for name in ["fp32", "q8", "q4", "q1", "topk_10"] {
+        for name in ["fp32", "q8", "q4", "q1", "topk_10", "sign"] {
             let c = from_name(name).unwrap();
             let w = c.compress(&z, &mut rng);
             assert_eq!(w.bytes(), c.wire_bytes(z.len()), "{name} at n={}", z.len());
@@ -204,6 +204,7 @@ fn prop_gossip_preserves_mean_any_topology() {
             mixing,
             compressor: Arc::new(Identity),
             seed: g.rng.next_u64(),
+            eta: 1.0,
         };
         let mut a = algorithms::from_name("dpsgd", cfg, &x0, n).unwrap();
         let mut mean_before = vec![0.0f32; dim];
@@ -239,6 +240,7 @@ fn prop_pure_gossip_contracts_consensus() {
             mixing,
             compressor: Arc::new(Identity),
             seed: 1,
+            eta: 1.0,
         };
         let x0 = vec![0.0f32; dim];
         let mut a = algorithms::from_name("dpsgd", cfg, &x0, n).unwrap();
@@ -283,6 +285,7 @@ fn prop_dcd_fp32_equals_dpsgd_all_topologies() {
             mixing: mixing.clone(),
             compressor: Arc::new(Identity),
             seed,
+            eta: 1.0,
         };
         let mut dcd = algorithms::from_name("dcd", mk_cfg(), &x0, n).unwrap();
         let mut dp = algorithms::from_name("dpsgd", mk_cfg(), &x0, n).unwrap();
@@ -352,6 +355,133 @@ fn prop_json_roundtrip_random_values() {
         assert_eq!(parsed, v);
         let pretty = v.to_pretty();
         assert_eq!(Json::parse(&pretty).unwrap(), v);
+    });
+}
+
+#[test]
+fn prop_sign_wire_round_trip_exact() {
+    check("sign wire round-trips to ±(‖z‖₁/d) with matching signs", CASES, |g| {
+        let z = g.vec_f32(1, 3000, g.f32_in(0.01, 100.0));
+        let c = SignCompressor;
+        let w = c.compress(&z, &mut g.rng.split(2));
+        assert_eq!(w.bytes(), c.wire_bytes(z.len()), "honest 1-bit wire size");
+        let mut out = vec![0.0f32; z.len()];
+        c.decompress(&w, &mut out);
+        // Recompute the scale exactly as the codec defines it.
+        let l1: f64 = z.iter().map(|v| v.abs() as f64).sum();
+        let scale = (l1 / z.len() as f64) as f32;
+        for (i, (zi, oi)) in z.iter().zip(&out).enumerate() {
+            let expect = if *zi >= 0.0 { scale } else { -scale };
+            assert_eq!(oi.to_bits(), expect.to_bits(), "index {i}: {oi} vs {expect}");
+        }
+    });
+}
+
+#[test]
+fn prop_biased_compressors_are_contractions() {
+    // The error-feedback admissibility condition: ‖z − C(z)‖² ≤ (1−δ)‖z‖²
+    // with δ = k/d for top-k (exact: the dropped mass is the smallest
+    // d−k squares) and δ = ‖z‖₁²/(d‖z‖²) for sign (exact identity).
+    check("top-k and sign are δ-contractions", CASES, |g| {
+        let z = g.vec_f32(8, 2000, 1.0);
+        let d = z.len();
+        let n2 = vecops::norm2(&z).powi(2);
+        if n2 == 0.0 {
+            return;
+        }
+        let mut out = vec![0.0f32; d];
+
+        let frac = *g.choose(&[0.1f64, 0.25, 0.5]);
+        let topk = TopK::new(frac);
+        topk.apply(&z, &mut g.rng.split(4), &mut out);
+        let err = vecops::dist2_sq(&z, &out);
+        let k = ((d as f64 * frac).ceil() as usize).clamp(1, d);
+        assert!(
+            err <= (1.0 - k as f64 / d as f64) * n2 + 1e-6,
+            "top-k: ‖z−C(z)‖²={err} vs (1−k/d)‖z‖²={}",
+            (1.0 - k as f64 / d as f64) * n2
+        );
+
+        SignCompressor.apply(&z, &mut g.rng.split(5), &mut out);
+        let err = vecops::dist2_sq(&z, &out);
+        let l1: f64 = z.iter().map(|v| v.abs() as f64).sum();
+        let expect = n2 - l1 * l1 / d as f64;
+        assert!(
+            (err - expect).abs() < 1e-3 * n2 + 1e-6,
+            "sign identity: {err} vs {expect}"
+        );
+        assert!(err < n2, "sign must strictly contract");
+    });
+}
+
+#[test]
+fn prop_error_feedback_residual_decays() {
+    // The EF recursion e ← (z + e) − C(z + e). Under a δ-contraction the
+    // residual stays bounded while z flows, and once z stops (z = 0) it
+    // drains: top-k zeroes k coordinates per step (gone in ≤ ⌈d/k⌉+1
+    // steps, exactly), sign contracts ‖e‖² by ‖e‖₁²/d ≥ ‖e‖²/d per step.
+    check("EF residual bounded while driven, decays when undriven", CASES / 2, |g| {
+        let d = g.usize_in(16, 256);
+        let z = {
+            let mut v = vec![0.0f32; d];
+            g.rng.fill_normal_f32(&mut v, 0.0, 1.0);
+            v
+        };
+        let z_norm = vecops::norm2(&z);
+        let mut rng = g.rng.split(6);
+
+        // Top-k, keep 25%.
+        let topk = TopK::new(0.25);
+        let mut e = vec![0.0f32; d];
+        let mut u = vec![0.0f32; d];
+        let mut cu = vec![0.0f32; d];
+        for _ in 0..40 {
+            u.copy_from_slice(&z);
+            vecops::axpy(1.0, &e, &mut u);
+            topk.apply(&u, &mut rng, &mut cu);
+            vecops::sub(&u, &cu, &mut e);
+            // Fixpoint bound for δ = 1/4 is ≈ 6.5·‖z‖; allow slack.
+            assert!(vecops::norm2(&e) <= 8.0 * z_norm + 1e-6, "EF residual blew up");
+        }
+        // Undriven: every nonzero coordinate is truncated exactly once.
+        let k = (d as f64 * 0.25).ceil() as usize;
+        for _ in 0..(d.div_ceil(k) + 1) {
+            u.copy_from_slice(&e);
+            topk.apply(&u, &mut rng, &mut cu);
+            vecops::sub(&u, &cu, &mut e);
+        }
+        assert!(e.iter().all(|v| *v == 0.0), "top-k EF must drain exactly");
+
+        // Sign: geometric-ish decay of the undriven residual.
+        let mut e = z.clone();
+        let e0 = vecops::norm2(&e);
+        for _ in 0..400 {
+            u.copy_from_slice(&e);
+            SignCompressor.apply(&u, &mut rng, &mut cu);
+            vecops::sub(&u, &cu, &mut e);
+        }
+        assert!(
+            vecops::norm2(&e) < 0.9 * e0 + 1e-6,
+            "sign EF residual should decay: {} vs {e0}",
+            vecops::norm2(&e)
+        );
+    });
+}
+
+#[test]
+fn prop_unbiasedness_flags_partition_the_codecs() {
+    check("is_unbiased partitions codecs", CASES / 4, |g| {
+        let q = StochasticQuantizer::new(*g.choose(&[1u8, 4, 8]));
+        let sp = RandomSparsifier::new(0.25);
+        let tk = TopK::new(0.25);
+        let unbiased: [&dyn Compressor; 3] = [&Identity, &q, &sp];
+        for c in unbiased {
+            assert!(c.is_unbiased(), "{}", c.name());
+        }
+        let biased: [&dyn Compressor; 2] = [&tk, &SignCompressor];
+        for c in biased {
+            assert!(!c.is_unbiased(), "{}", c.name());
+        }
     });
 }
 
