@@ -131,10 +131,7 @@ pub fn run_training(
     let mut points = Vec::with_capacity(opts.iters / opts.eval_every.max(1) + 2);
     let mut bytes = 0u64;
     let mut sim_time = 0.0f64;
-    let comm_time = opts
-        .net
-        .map(|net| algo.comm().time(&net))
-        .unwrap_or(0.0);
+    let comm_time = opts.net.map(|net| algo.comm().time(&net)).unwrap_or(0.0);
 
     // Initial point (iter 0).
     points.push(TracePoint {

@@ -72,11 +72,7 @@ impl Algorithm for EcdPsgd {
             // Step 3: z = (1 − 0.5t) x_t + 0.5t x_{t+1}.
             let a = 1.0 - 0.5 * t;
             let b = 0.5 * t;
-            for (zd, (xo, xn)) in self
-                .z
-                .iter_mut()
-                .zip(self.s.x[i].iter().zip(&self.half[i]))
-            {
+            for (zd, (xo, xn)) in self.z.iter_mut().zip(self.s.x[i].iter().zip(&self.half[i])) {
                 *zd = a * xo + b * xn;
             }
             let wire = self.cfg.compressor.compress(&self.z, &mut self.s.comp_rngs[i]);

@@ -38,8 +38,20 @@ pub trait Compressor: Send + Sync {
     /// Short identifier used in configs, metrics and bench tables.
     fn name(&self) -> String;
 
-    /// Compress `z` into a wire message.
-    fn compress(&self, z: &[f32], rng: &mut Pcg64) -> Wire;
+    /// Compress `z` into `wire`, reusing `wire`'s payload buffer (the
+    /// pooling primitive: steady-state compression allocates nothing once
+    /// buffers are warm). Implementations must fully reset `wire` first —
+    /// a recycled buffer must never leak stale bytes into a shorter
+    /// payload — and must produce bytes identical to a fresh
+    /// [`Compressor::compress`] (pinned by the property suite).
+    fn compress_into(&self, z: &[f32], rng: &mut Pcg64, wire: &mut Wire);
+
+    /// Compress `z` into a freshly allocated wire message.
+    fn compress(&self, z: &[f32], rng: &mut Pcg64) -> Wire {
+        let mut wire = Wire::empty();
+        self.compress_into(z, rng, &mut wire);
+        wire
+    }
 
     /// Reconstruct into `out` (must have the original length).
     fn decompress(&self, wire: &Wire, out: &mut [f32]);
@@ -72,14 +84,12 @@ impl Compressor for Identity {
         "fp32".into()
     }
 
-    fn compress(&self, z: &[f32], _rng: &mut Pcg64) -> Wire {
-        let mut payload = Vec::with_capacity(4 * z.len());
+    fn compress_into(&self, z: &[f32], _rng: &mut Pcg64, wire: &mut Wire) {
+        wire.clear();
+        wire.len = z.len();
+        wire.payload.reserve(4 * z.len());
         for v in z {
-            payload.extend_from_slice(&v.to_le_bytes());
-        }
-        Wire {
-            len: z.len(),
-            payload,
+            wire.payload.extend_from_slice(&v.to_le_bytes());
         }
     }
 

@@ -55,13 +55,17 @@ impl Compressor for StochasticQuantizer {
         format!("q{}", self.bits)
     }
 
-    fn compress(&self, z: &[f32], rng: &mut Pcg64) -> Wire {
+    fn compress_into(&self, z: &[f32], rng: &mut Pcg64, wire: &mut Wire) {
         let nchunks = z.len().div_ceil(self.chunk);
         let lm1 = (self.levels() - 1) as f32;
         let payload_cap = 4 * nchunks + (z.len() * self.bits as usize).div_ceil(8);
 
-        // Scales first (byte-aligned header).
-        let mut payload = Vec::with_capacity(payload_cap);
+        // Scales first (byte-aligned header), written straight into the
+        // (possibly recycled) wire buffer.
+        wire.clear();
+        wire.len = z.len();
+        let mut payload = std::mem::take(&mut wire.payload);
+        payload.reserve(payload_cap);
         let mut scales = Vec::with_capacity(nchunks);
         for c in z.chunks(self.chunk) {
             let s = crate::linalg::vecops::max_abs(c);
@@ -109,7 +113,9 @@ impl Compressor for StochasticQuantizer {
                 }
             }
         } else {
-            let mut w = BitWriter::with_capacity(payload_cap - payload.len());
+            // Bit-pack directly into the payload buffer (no intermediate
+            // level buffer; `finish` hands the same Vec back).
+            let mut w = BitWriter::from_vec(payload);
             for (ci, c) in z.chunks(self.chunk).enumerate() {
                 let s = scales[ci];
                 if s == 0.0 {
@@ -126,13 +132,10 @@ impl Compressor for StochasticQuantizer {
                     w.push(q.min(top), self.bits as u32);
                 }
             }
-            payload.extend_from_slice(&w.finish());
+            payload = w.finish();
         }
 
-        Wire {
-            len: z.len(),
-            payload,
-        }
+        wire.payload = payload;
     }
 
     fn decompress(&self, wire: &Wire, out: &mut [f32]) {

@@ -34,25 +34,24 @@ impl Compressor for SignCompressor {
         false
     }
 
-    fn compress(&self, z: &[f32], _rng: &mut Pcg64) -> Wire {
+    fn compress_into(&self, z: &[f32], _rng: &mut Pcg64, wire: &mut Wire) {
         let l1: f64 = z.iter().map(|v| v.abs() as f64).sum();
         let scale = if z.is_empty() {
             0.0f32
         } else {
             (l1 / z.len() as f64) as f32
         };
-        let mut payload = Vec::with_capacity(self.wire_bytes(z.len()));
+        wire.clear();
+        wire.len = z.len();
+        let mut payload = std::mem::take(&mut wire.payload);
+        payload.reserve(self.wire_bytes(z.len()));
         payload.extend_from_slice(&scale.to_le_bytes());
-        let mut w = BitWriter::with_capacity(z.len().div_ceil(8));
+        let mut w = BitWriter::from_vec(payload);
         for &v in z {
             // Bit 1 ⇔ non-negative (ties, including ±0, round up).
             w.push((v >= 0.0) as u32, 1);
         }
-        payload.extend_from_slice(&w.finish());
-        Wire {
-            len: z.len(),
-            payload,
-        }
+        wire.payload = w.finish();
     }
 
     fn decompress(&self, wire: &Wire, out: &mut [f32]) {

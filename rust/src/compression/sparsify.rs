@@ -27,8 +27,10 @@ impl Compressor for RandomSparsifier {
         format!("sparse_p{}", (self.p * 100.0).round() as u32)
     }
 
-    fn compress(&self, z: &[f32], rng: &mut Pcg64) -> Wire {
-        let mut w = BitWriter::with_capacity(z.len() / 8 + 16);
+    fn compress_into(&self, z: &[f32], rng: &mut Pcg64, wire: &mut Wire) {
+        wire.clear();
+        wire.len = z.len();
+        let mut w = BitWriter::from_vec(std::mem::take(&mut wire.payload));
         let mut kept: Vec<f32> = Vec::with_capacity((z.len() as f64 * self.p * 1.2) as usize + 8);
         let inv_p = (1.0 / self.p) as f32;
         for &v in z {
@@ -43,10 +45,7 @@ impl Compressor for RandomSparsifier {
             bytes.extend_from_slice(&v.to_le_bytes());
         }
         w.align_and_extend(&bytes);
-        Wire {
-            len: z.len(),
-            payload: w.finish(),
-        }
+        wire.payload = w.finish();
     }
 
     fn decompress(&self, wire: &Wire, out: &mut [f32]) {
@@ -103,7 +102,7 @@ impl Compressor for TopK {
         false
     }
 
-    fn compress(&self, z: &[f32], _rng: &mut Pcg64) -> Wire {
+    fn compress_into(&self, z: &[f32], _rng: &mut Pcg64, wire: &mut Wire) {
         let k = self.k(z.len());
         let mut idx: Vec<u32> = (0..z.len() as u32).collect();
         idx.select_nth_unstable_by(k - 1, |&a, &b| {
@@ -114,16 +113,14 @@ impl Compressor for TopK {
         });
         idx.truncate(k);
         idx.sort_unstable();
-        let mut payload = Vec::with_capacity(8 * k);
+        wire.clear();
+        wire.len = z.len();
+        wire.payload.reserve(8 * k);
         for &i in &idx {
-            payload.extend_from_slice(&i.to_le_bytes());
+            wire.payload.extend_from_slice(&i.to_le_bytes());
         }
         for &i in &idx {
-            payload.extend_from_slice(&z[i as usize].to_le_bytes());
-        }
-        Wire {
-            len: z.len(),
-            payload,
+            wire.payload.extend_from_slice(&z[i as usize].to_le_bytes());
         }
     }
 

@@ -17,7 +17,7 @@
 /// assert_eq!(wire.len, 1024);                       // element count
 /// assert_eq!(wire.bytes(), q8.wire_bytes(z.len())); // honest size
 /// ```
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Wire {
     /// Original vector length (element count).
     pub len: usize,
@@ -25,9 +25,36 @@ pub struct Wire {
 }
 
 impl Wire {
+    /// An empty message with no buffer behind it (allocates nothing;
+    /// same as `Wire::default()`).
+    pub fn empty() -> Wire {
+        Wire {
+            len: 0,
+            payload: Vec::new(),
+        }
+    }
+
     /// Bytes this message occupies on the network.
     pub fn bytes(&self) -> usize {
         self.payload.len()
+    }
+
+    /// Reset to an empty message, keeping the payload buffer's capacity —
+    /// the pooling primitive: a cleared wire is safe to hand to
+    /// [`Compressor::compress_into`](crate::compression::Compressor::compress_into)
+    /// because stale bytes are gone but the allocation is not.
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.payload.clear();
+    }
+
+    /// Become a byte-identical copy of `src`, reusing this wire's buffer
+    /// (no allocation when capacity suffices) — what pooled broadcast uses
+    /// instead of [`Clone::clone`].
+    pub fn copy_from(&mut self, src: &Wire) {
+        self.len = src.len;
+        self.payload.clear();
+        self.payload.extend_from_slice(&src.payload);
     }
 }
 
@@ -65,6 +92,18 @@ impl BitWriter {
     pub fn with_capacity(bytes: usize) -> BitWriter {
         BitWriter {
             out: Vec::with_capacity(bytes),
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    /// Continue writing into an existing buffer (bits are appended after
+    /// its current contents). [`BitWriter::finish`] returns the same
+    /// buffer, so codecs can bit-pack straight into a pooled payload
+    /// without an intermediate allocation.
+    pub fn from_vec(out: Vec<u8>) -> BitWriter {
+        BitWriter {
+            out,
             acc: 0,
             nbits: 0,
         }
@@ -218,6 +257,39 @@ mod tests {
     #[test]
     fn empty_writer() {
         assert!(BitWriter::new().finish().is_empty());
+    }
+
+    #[test]
+    fn from_vec_appends_after_existing_bytes() {
+        let mut head = vec![0xde, 0xad];
+        head.reserve(16);
+        let mut w = BitWriter::from_vec(head);
+        w.push(0xff, 8);
+        w.push(0b101, 3);
+        let buf = w.finish();
+        assert_eq!(&buf[..3], &[0xde, 0xad, 0xff]);
+        let mut r = BitReader::new(&buf[3..]);
+        assert_eq!(r.read(3), 0b101);
+    }
+
+    #[test]
+    fn wire_clear_and_copy_from_reuse_buffer() {
+        let mut w = Wire {
+            len: 4,
+            payload: vec![1, 2, 3, 4],
+        };
+        let cap = w.payload.capacity();
+        w.clear();
+        assert_eq!(w.len, 0);
+        assert!(w.payload.is_empty());
+        assert_eq!(w.payload.capacity(), cap, "clear must keep the buffer");
+        let src = Wire {
+            len: 2,
+            payload: vec![9, 8],
+        };
+        w.copy_from(&src);
+        assert_eq!(w, src);
+        assert_eq!(w.payload.capacity(), cap, "copy within capacity: no realloc");
     }
 
     #[test]

@@ -72,31 +72,48 @@ impl Common {
     /// Sample a minibatch gradient at the current iterate, recording the
     /// minibatch loss.
     fn grad(&mut self) {
-        let loss = self
-            .model
-            .stoch_grad(&self.x, &mut self.g, &mut self.grad_rng);
+        let loss = self.model.stoch_grad(&self.x, &mut self.g, &mut self.grad_rng);
         self.losses.push(loss);
     }
 
     /// out = w_self·first + Σ_k w_k·received[k].
+    ///
+    /// Allocation-free restatement of [`vecops::weighted_sum`] over
+    /// `[first, received...]`: same zero-weight skip, same column order,
+    /// same sequential `axpy` accumulation — so it is bitwise identical
+    /// to the column-vector form the reference simulator uses, without
+    /// building a per-call `Vec<&[f32]>`.
     fn mix_weighted(&self, first: &[f32], received: &[Vec<f32>], out: &mut [f32]) {
-        let mut cols: Vec<&[f32]> = Vec::with_capacity(1 + received.len());
-        cols.push(first);
-        for r in received {
-            cols.push(r.as_slice());
+        assert_eq!(self.weights.len(), 1 + received.len());
+        out.fill(0.0);
+        if self.weights[0] != 0.0 {
+            vecops::axpy(self.weights[0], first, out);
         }
-        vecops::weighted_sum(&self.weights, &cols, out);
-    }
-
-    /// Queue `wire` to every neighbor (clones, like the mailbox fabric).
-    fn broadcast(&self, out: &mut Outbox, wire: &Wire) {
-        for &to in &self.neighbors {
-            out.send(to, Channel::Gossip, wire.clone());
+        for (w, r) in self.weights[1..].iter().zip(received) {
+            if *w != 0.0 {
+                vecops::axpy(*w, r, out);
+            }
         }
     }
 
-    fn gossip_expects(&self) -> Vec<(usize, Channel)> {
-        self.neighbors.iter().map(|&f| (f, Channel::Gossip)).collect()
+    /// Queue `wire` to every neighbor in neighbor order. All copies come
+    /// from the outbox's buffer pool (the last neighbor receives the
+    /// original), so a warm pool makes broadcast allocation-free.
+    fn broadcast(&self, out: &mut Outbox, wire: Wire) {
+        let Some((&last, rest)) = self.neighbors.split_last() else {
+            out.recycle(wire);
+            return;
+        };
+        for &to in rest {
+            let mut copy = out.wire();
+            copy.copy_from(&wire);
+            out.send(to, Channel::Gossip, copy);
+        }
+        out.send(last, Channel::Gossip, wire);
+    }
+
+    fn gossip_expects(&self, out: &mut Vec<(usize, Channel)>) {
+        out.extend(self.neighbors.iter().map(|&f| (f, Channel::Gossip)));
     }
 }
 
@@ -112,15 +129,16 @@ struct DpsgdProgram {
 impl NodeProgram for DpsgdProgram {
     fn emit(&mut self, _t: u64, _phase: usize, out: &mut Outbox) {
         self.c.grad();
-        let wire = Identity.compress(&self.c.x, &mut self.c.comp_rng);
-        self.c.broadcast(out, &wire);
+        let mut wire = out.wire();
+        Identity.compress_into(&self.c.x, &mut self.c.comp_rng, &mut wire);
+        self.c.broadcast(out, wire);
     }
 
-    fn expects(&self, _t: u64, _phase: usize) -> Vec<(usize, Channel)> {
-        self.c.gossip_expects()
+    fn expects(&self, _t: u64, _phase: usize, out: &mut Vec<(usize, Channel)>) {
+        self.c.gossip_expects(out);
     }
 
-    fn absorb(&mut self, _t: u64, _phase: usize, msgs: Vec<Wire>) {
+    fn absorb(&mut self, _t: u64, _phase: usize, msgs: &[Wire]) {
         for (k, w) in msgs.iter().enumerate() {
             Identity.decompress(w, &mut self.recv_bufs[k]);
         }
@@ -164,22 +182,22 @@ impl NodeProgram for DcdProgram {
         vecops::axpy(-c.gamma, &c.g, half);
         // z_t = x_{t+1/2} − x_t; broadcast C(z_t).
         vecops::sub(&self.half, &self.c.x, &mut self.z);
-        let wire = self
-            .c
+        let mut wire = out.wire();
+        self.c
             .compressor
-            .compress(&self.z, &mut self.c.comp_rng);
-        self.c.broadcast(out, &wire);
+            .compress_into(&self.z, &mut self.c.comp_rng, &mut wire);
         // x_{t+1} = x_t + C(z_t) (the same compressed delta the
         // neighbors apply to their replica of us).
         self.c.compressor.decompress(&wire, &mut self.cz);
         vecops::axpy(1.0, &self.cz, &mut self.c.x);
+        self.c.broadcast(out, wire);
     }
 
-    fn expects(&self, _t: u64, _phase: usize) -> Vec<(usize, Channel)> {
-        self.c.gossip_expects()
+    fn expects(&self, _t: u64, _phase: usize, out: &mut Vec<(usize, Channel)>) {
+        self.c.gossip_expects(out);
     }
 
-    fn absorb(&mut self, _t: u64, _phase: usize, msgs: Vec<Wire>) {
+    fn absorb(&mut self, _t: u64, _phase: usize, msgs: &[Wire]) {
         // Apply neighbors' compressed deltas to their replicas.
         for (k, w) in msgs.iter().enumerate() {
             self.c.compressor.decompress(w, &mut self.cz);
@@ -224,28 +242,24 @@ impl NodeProgram for EcdProgram {
         // z = (1 − 0.5t) x_t + 0.5t x_{t+1}.
         let a = 1.0 - 0.5 * t;
         let b = 0.5 * t;
-        for (zd, (xo, xn)) in self
-            .z
-            .iter_mut()
-            .zip(self.c.x.iter().zip(&self.x_new))
-        {
+        for (zd, (xo, xn)) in self.z.iter_mut().zip(self.c.x.iter().zip(&self.x_new)) {
             *zd = a * xo + b * xn;
         }
-        let wire = self
-            .c
+        let mut wire = out.wire();
+        self.c
             .compressor
-            .compress(&self.z, &mut self.c.comp_rng);
-        self.c.broadcast(out, &wire);
+            .compress_into(&self.z, &mut self.c.comp_rng, &mut wire);
         // Own estimate update (same recursion neighbors apply).
         self.c.compressor.decompress(&wire, &mut self.cz);
         vecops::axpby(2.0 / t, &self.cz, 1.0 - 2.0 / t, &mut self.tilde_self);
+        self.c.broadcast(out, wire);
     }
 
-    fn expects(&self, _t: u64, _phase: usize) -> Vec<(usize, Channel)> {
-        self.c.gossip_expects()
+    fn expects(&self, _t: u64, _phase: usize, out: &mut Vec<(usize, Channel)>) {
+        self.c.gossip_expects(out);
     }
 
-    fn absorb(&mut self, ti: u64, _phase: usize, msgs: Vec<Wire>) {
+    fn absorb(&mut self, ti: u64, _phase: usize, msgs: &[Wire]) {
         let t = (ti + 1) as f32;
         for (k, w) in msgs.iter().enumerate() {
             self.c.compressor.decompress(w, &mut self.cz);
@@ -280,18 +294,18 @@ impl NodeProgram for NaiveProgram {
     fn emit(&mut self, _t: u64, _phase: usize, out: &mut Outbox) {
         self.c.grad();
         // Broadcast C(x_t); own update uses the exact local x.
-        let wire = self
-            .c
+        let mut wire = out.wire();
+        self.c
             .compressor
-            .compress(&self.c.x, &mut self.c.comp_rng);
-        self.c.broadcast(out, &wire);
+            .compress_into(&self.c.x, &mut self.c.comp_rng, &mut wire);
+        self.c.broadcast(out, wire);
     }
 
-    fn expects(&self, _t: u64, _phase: usize) -> Vec<(usize, Channel)> {
-        self.c.gossip_expects()
+    fn expects(&self, _t: u64, _phase: usize, out: &mut Vec<(usize, Channel)>) {
+        self.c.gossip_expects(out);
     }
 
-    fn absorb(&mut self, _t: u64, _phase: usize, msgs: Vec<Wire>) {
+    fn absorb(&mut self, _t: u64, _phase: usize, msgs: &[Wire]) {
         for (k, w) in msgs.iter().enumerate() {
             self.c.compressor.decompress(w, &mut self.recv_bufs[k]);
         }
@@ -344,20 +358,20 @@ impl NodeProgram for ChocoProgram {
         // q = C(x_{t+½} − x̂); broadcast, and apply to the own copy (the
         // identical update every neighbor applies to its replica of us).
         vecops::sub(&self.half, &self.xhat_self, &mut self.z);
-        let wire = self
-            .c
+        let mut wire = out.wire();
+        self.c
             .compressor
-            .compress(&self.z, &mut self.c.comp_rng);
-        self.c.broadcast(out, &wire);
+            .compress_into(&self.z, &mut self.c.comp_rng, &mut wire);
         self.c.compressor.decompress(&wire, &mut self.cz);
         vecops::axpy(1.0, &self.cz, &mut self.xhat_self);
+        self.c.broadcast(out, wire);
     }
 
-    fn expects(&self, _t: u64, _phase: usize) -> Vec<(usize, Channel)> {
-        self.c.gossip_expects()
+    fn expects(&self, _t: u64, _phase: usize, out: &mut Vec<(usize, Channel)>) {
+        self.c.gossip_expects(out);
     }
 
-    fn absorb(&mut self, _t: u64, _phase: usize, msgs: Vec<Wire>) {
+    fn absorb(&mut self, _t: u64, _phase: usize, msgs: &[Wire]) {
         // Apply the neighbors' corrections to their replicas.
         for (k, w) in msgs.iter().enumerate() {
             self.c.compressor.decompress(w, &mut self.cz);
@@ -415,21 +429,21 @@ impl NodeProgram for DeepSqueezeProgram {
         self.z.copy_from_slice(&self.c.x);
         vecops::axpy(-self.c.gamma, &self.c.g, &mut self.z);
         vecops::axpy(1.0, &self.e, &mut self.z);
-        let wire = self
-            .c
+        let mut wire = out.wire();
+        self.c
             .compressor
-            .compress(&self.z, &mut self.c.comp_rng);
-        self.c.broadcast(out, &wire);
+            .compress_into(&self.z, &mut self.c.comp_rng, &mut wire);
         // δ = z − C(z): what compression dropped, replayed next step.
         self.c.compressor.decompress(&wire, &mut self.cz_self);
         vecops::sub(&self.z, &self.cz_self, &mut self.e);
+        self.c.broadcast(out, wire);
     }
 
-    fn expects(&self, _t: u64, _phase: usize) -> Vec<(usize, Channel)> {
-        self.c.gossip_expects()
+    fn expects(&self, _t: u64, _phase: usize, out: &mut Vec<(usize, Channel)>) {
+        self.c.gossip_expects(out);
     }
 
-    fn absorb(&mut self, _t: u64, _phase: usize, msgs: Vec<Wire>) {
+    fn absorb(&mut self, _t: u64, _phase: usize, msgs: &[Wire]) {
         for (k, w) in msgs.iter().enumerate() {
             self.c.compressor.decompress(w, &mut self.recv_bufs[k]);
         }
@@ -437,13 +451,7 @@ impl NodeProgram for DeepSqueezeProgram {
         self.c
             .mix_weighted(&self.cz_self, &self.recv_bufs, &mut self.mixed);
         let eta = self.eta;
-        for ((xd, cd), md) in self
-            .c
-            .x
-            .iter_mut()
-            .zip(&self.cz_self)
-            .zip(&self.mixed)
-        {
+        for ((xd, cd), md) in self.c.x.iter_mut().zip(&self.cz_self).zip(&self.mixed) {
             *xd = *cd + eta * (*md - *cd);
         }
     }
@@ -490,41 +498,52 @@ impl NodeProgram for AllreduceProgram {
                     // Every node (hub included) compresses its own
                     // gradient with its own stream — identical to the
                     // reference simulator's per-node comp_rngs.
-                    let wire = self
-                        .c
+                    let mut wire = out.wire();
+                    self.c
                         .compressor
-                        .compress(&self.c.g, &mut self.c.comp_rng);
+                        .compress_into(&self.c.g, &mut self.c.comp_rng, &mut wire);
                     if self.c.node == 0 {
                         self.own_wire = Some(wire);
                     } else {
                         out.send(0, Channel::Reduce, wire);
                     }
                 } else if self.c.node != 0 {
-                    let wire = Identity.compress(&self.c.g, &mut self.rng_dummy);
+                    let mut wire = out.wire();
+                    Identity.compress_into(&self.c.g, &mut self.rng_dummy, &mut wire);
                     out.send(0, Channel::Reduce, wire);
                 }
             }
             _ => {
                 if self.c.node == 0 {
-                    let wire = Identity.compress(&self.mean, &mut self.rng_dummy);
-                    for to in 1..self.c.n {
-                        out.send(to, Channel::Reduce, wire.clone());
+                    // Broadcast the mean to 1..n in node order; every copy
+                    // comes from the pool, the last send moves the
+                    // original.
+                    let mut wire = out.wire();
+                    Identity.compress_into(&self.mean, &mut self.rng_dummy, &mut wire);
+                    if self.c.n > 1 {
+                        for to in 1..self.c.n - 1 {
+                            let mut copy = out.wire();
+                            copy.copy_from(&wire);
+                            out.send(to, Channel::Reduce, copy);
+                        }
+                        out.send(self.c.n - 1, Channel::Reduce, wire);
+                    } else {
+                        out.recycle(wire);
                     }
                 }
             }
         }
     }
 
-    fn expects(&self, _t: u64, phase: usize) -> Vec<(usize, Channel)> {
+    fn expects(&self, _t: u64, phase: usize, out: &mut Vec<(usize, Channel)>) {
         match (phase, self.c.node) {
-            (0, 0) => (1..self.c.n).map(|f| (f, Channel::Reduce)).collect(),
-            (0, _) => Vec::new(),
-            (_, 0) => Vec::new(),
-            (_, _) => vec![(0, Channel::Reduce)],
+            (0, 0) => out.extend((1..self.c.n).map(|f| (f, Channel::Reduce))),
+            (0, _) | (_, 0) => {}
+            (_, _) => out.push((0, Channel::Reduce)),
         }
     }
 
-    fn absorb(&mut self, _t: u64, phase: usize, msgs: Vec<Wire>) {
+    fn absorb(&mut self, _t: u64, phase: usize, msgs: &[Wire]) {
         match phase {
             0 => {
                 if self.c.node != 0 {
@@ -535,7 +554,7 @@ impl NodeProgram for AllreduceProgram {
                     let own = self.own_wire.take().expect("hub compressed in emit");
                     self.c.compressor.decompress(&own, &mut self.buf);
                     vecops::axpy(1.0 / self.c.n as f32, &self.buf, &mut self.mean);
-                    for w in &msgs {
+                    for w in msgs {
                         self.c.compressor.decompress(w, &mut self.buf);
                         vecops::axpy(1.0 / self.c.n as f32, &self.buf, &mut self.mean);
                     }
@@ -544,7 +563,7 @@ impl NodeProgram for AllreduceProgram {
                     // reference simulator's mean_of column order).
                     let mut grads: Vec<Vec<f32>> = Vec::with_capacity(self.c.n);
                     grads.push(self.c.g.clone());
-                    for w in &msgs {
+                    for w in msgs {
                         let mut buf = vec![0.0f32; self.c.dim];
                         Identity.decompress(w, &mut buf);
                         grads.push(buf);

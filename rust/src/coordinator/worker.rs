@@ -20,7 +20,7 @@ use crate::algorithms::AlgoConfig;
 use crate::compression::Wire;
 use crate::models::GradientModel;
 use crate::network::sim::{self, NodeProgram, Outbox};
-use crate::network::transport::{Endpoint, Transport};
+use crate::network::transport::{Channel, Endpoint, Transport};
 
 /// What each worker hands back when the run finishes — the same report
 /// type the discrete-event backend produces, so the two are directly
@@ -55,23 +55,34 @@ impl ThreadedRun {
 /// Drive one program to completion over its mailbox endpoint. The message
 /// key encodes (iteration, phase) so multi-phase algorithms (hub-rooted
 /// reductions) never collide across phases.
+///
+/// The outbox (with its wire pool) and the expects/receive buffers live
+/// for the whole run: sent wires move to the peer, but every *received*
+/// wire is recycled into the local pool after `absorb`, so in steady state
+/// a worker's emit path reuses the buffers its neighbors' messages arrived
+/// in (symmetric gossip keeps the sizes matched).
 fn run_node(mut prog: Box<dyn NodeProgram>, mut ep: Endpoint, iters: usize) -> WorkerReport {
     let node = ep.id;
     let phases = prog.phases() as u64;
+    let mut out = Outbox::new();
+    let mut expected: Vec<(usize, Channel)> = Vec::new();
+    let mut msgs: Vec<Wire> = Vec::new();
     for t in 0..iters as u64 {
         for phase in 0..prog.phases() {
             let key = t * phases + phase as u64;
-            let mut out = Outbox::new();
             prog.emit(t, phase, &mut out);
-            for (to, channel, wire) in out.into_msgs() {
+            for (to, channel, wire) in out.drain() {
                 ep.send(to, key, channel, wire);
             }
-            let expected = prog.expects(t, phase);
-            let msgs: Vec<Wire> = expected
-                .iter()
-                .map(|&(from, channel)| ep.recv_from(from, key, channel))
-                .collect();
-            prog.absorb(t, phase, msgs);
+            expected.clear();
+            prog.expects(t, phase, &mut expected);
+            for &(from, channel) in &expected {
+                msgs.push(ep.recv_from(from, key, channel));
+            }
+            prog.absorb(t, phase, &msgs);
+            for wire in msgs.drain(..) {
+                out.recycle(wire);
+            }
         }
     }
     let (final_x, losses) = prog.into_result();

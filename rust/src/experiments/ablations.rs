@@ -78,7 +78,9 @@ fn run_quad(
     loss - fstar
 }
 
-/// Ablation 1: compressor sweep on a ring of 8.
+/// Ablation 1: compressor sweep on a ring of 8. Each compressor's
+/// (α estimate, DCD run, ECD run) triple is an independent cell, fanned
+/// out over the parallel runner; rows stay in the serial order.
 pub fn compressor_sweep(quick: bool) -> Table {
     let n = 8;
     let dim = 64;
@@ -99,13 +101,17 @@ pub fn compressor_sweep(quick: bool) -> Table {
             "ecd_verdict",
         ],
     );
-    for name in ["q8", "q4", "q2", "q1", "sparse_p50", "sparse_p25", "sparse_p10", "topk_25"] {
+    let names = ["q8", "q4", "q2", "q1", "sparse_p50", "sparse_p25", "sparse_p10", "topk_25"];
+    let cells = super::runner::run_cells(&names, |_, &name| {
         let c = compression::from_name(name).unwrap();
         let alpha = empirical_alpha(c.as_ref(), 2048, 6, 0xa1);
         let dcd = run_quad("dcd", name, &fam, fstar, Topology::Ring, iters, 0.05);
         let ecd = run_quad("ecd", name, &fam, fstar, Topology::Ring, iters, 0.05);
+        (alpha, dcd, ecd)
+    });
+    for (name, (alpha, dcd, ecd)) in names.iter().zip(cells) {
         t.row(vec![
-            name.into(),
+            (*name).into(),
             format!("{alpha:.3}"),
             format!("{bound:.3}"),
             format!("{dcd:.3e}"),
@@ -158,7 +164,8 @@ pub fn heterogeneity_sweep(quick: bool) -> Table {
         "Ablation: heterogeneity ζ sweep (8-bit, ring n=8, logistic)",
         &["heterogeneity", "zeta_sq", "dcd_q8_loss", "ecd_q8_loss", "allreduce_loss"],
     );
-    for het in [0.1f32, 0.5, 1.0, 2.0] {
+    let hets = [0.1f32, 0.5, 1.0, 2.0];
+    let rows = super::runner::run_cells(&hets, |_, &het| {
         let spec = SynthSpec {
             n_nodes: 8,
             rows_per_node: if quick { 64 } else { 256 },
@@ -179,13 +186,16 @@ pub fn heterogeneity_sweep(quick: bool) -> Table {
         let dcd = super::run_named("dcd", "q8", &spec, &kind, None, &opts, 0xe7a);
         let ecd = super::run_named("ecd", "q8", &spec, &kind, None, &opts, 0xe7a);
         let ar = super::run_named("allreduce", "fp32", &spec, &kind, None, &opts, 0xe7a);
-        t.row(vec![
+        vec![
             format!("{het}"),
             format!("{zeta_sq:.3}"),
             format!("{:.4}", dcd.final_loss()),
             format!("{:.4}", ecd.final_loss()),
             format!("{:.4}", ar.final_loss()),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.row(row);
     }
     t
 }

@@ -11,6 +11,12 @@
 //! The trajectory is network-independent (the virtual clock never touches
 //! the math), so the convergence table is computed once while the
 //! measured virtual-time grid spans all four §5.2 conditions.
+//!
+//! Every (algorithm, condition) cell is an independent simulation, so the
+//! sweep fans out over the deterministic parallel runner
+//! ([`super::runner`]) — results are bit-identical at any thread count
+//! (`DECOMP_SWEEP_THREADS` / `--sweep-threads`), only host wall-clock
+//! changes.
 
 use crate::algorithms::{AlgoConfig, RunOpts};
 use crate::compression;
@@ -21,6 +27,9 @@ use crate::network::cost::{CostModel, NetCondition};
 use crate::network::sim::SimOpts;
 use crate::topology::{Graph, MixingMatrix, Topology};
 use std::sync::Arc;
+use std::time::Instant;
+
+use super::runner;
 
 /// The algorithm family every EF sweep/bench reports:
 /// `(algo, compressor, eta)`. The η values are the consensus step sizes
@@ -55,66 +64,131 @@ pub struct EfSweepRow {
     pub virtual_s: f64,
     /// Total payload bytes across all nodes.
     pub payload_bytes: u64,
+    /// Host wall-clock this cell took (build + simulate), seconds.
+    pub host_s: f64,
+}
+
+/// One fully self-contained sweep cell: builds its own models/config from
+/// the cell seed and runs on the discrete-event backend. Independent of
+/// every other cell — which is what lets the runner parallelize the grid
+/// without changing a single output bit.
+fn run_cell(
+    n: usize,
+    iters: usize,
+    quick: bool,
+    cond: NetCondition,
+    algo: &str,
+    comp: &str,
+    eta: f32,
+) -> EfSweepRow {
+    let t0 = Instant::now();
+    let (spec, kind) = super::convergence_spec(n, quick);
+    let cfg = AlgoConfig {
+        mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n))),
+        compressor: Arc::from(compression::from_name(comp).expect("compressor")),
+        seed: 0xef5,
+        eta,
+    };
+    let (models, x0) = build_models(&kind, &spec);
+    let (eval_models, _) = build_models(&kind, &spec);
+    let opts = RunOpts {
+        iters,
+        gamma: 0.05,
+        eval_every: iters,
+        ..Default::default()
+    };
+    let sim = SimOpts {
+        cost: CostModel::Uniform(cond.model()),
+        compute_per_iter_s: super::testbed::COMPUTE_PER_ITER_S,
+    };
+    let trace = run_sim_trace(algo, &cfg, models, &eval_models, &x0, &opts, sim)
+        .expect("ef sweep run");
+    let last = trace.points.last().unwrap();
+    EfSweepRow {
+        algo: trace.algo.clone(),
+        condition: short_condition_name(cond),
+        init_loss: trace.points[0].global_loss,
+        final_loss: last.global_loss,
+        virtual_s: last.sim_time_s,
+        payload_bytes: last.bytes_sent,
+        host_s: t0.elapsed().as_secs_f64(),
+    }
 }
 
 /// Run the whole [`FAMILY`] on an n-node ring for `iters` iterations under
-/// one network condition, on the discrete-event backend.
+/// one network condition, on the discrete-event backend — cells fanned out
+/// over the parallel runner, rows in family order.
 pub fn sweep_condition(n: usize, iters: usize, quick: bool, cond: NetCondition) -> Vec<EfSweepRow> {
-    let (spec, kind) = super::convergence_spec(n, quick);
-    let mut out = Vec::new();
-    for (algo, comp, eta) in FAMILY {
-        let cfg = AlgoConfig {
-            mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n))),
-            compressor: Arc::from(compression::from_name(comp).expect("compressor")),
-            seed: 0xef5,
-            eta,
-        };
-        let (models, x0) = build_models(&kind, &spec);
-        let (eval_models, _) = build_models(&kind, &spec);
-        let opts = RunOpts {
-            iters,
-            gamma: 0.05,
-            eval_every: iters,
-            ..Default::default()
-        };
-        let sim = SimOpts {
-            cost: CostModel::Uniform(cond.model()),
-            compute_per_iter_s: super::testbed::COMPUTE_PER_ITER_S,
-        };
-        let trace = run_sim_trace(algo, &cfg, models, &eval_models, &x0, &opts, sim)
-            .expect("ef sweep run");
-        let last = trace.points.last().unwrap();
-        out.push(EfSweepRow {
-            algo: trace.algo.clone(),
-            condition: short_condition_name(cond),
-            init_loss: trace.points[0].global_loss,
-            final_loss: last.global_loss,
-            virtual_s: last.sim_time_s,
-            payload_bytes: last.bytes_sent,
-        });
+    sweep_condition_on(runner::sweep_threads(), n, iters, quick, cond)
+}
+
+/// [`sweep_condition`] with an explicit runner thread count.
+pub fn sweep_condition_on(
+    threads: usize,
+    n: usize,
+    iters: usize,
+    quick: bool,
+    cond: NetCondition,
+) -> Vec<EfSweepRow> {
+    runner::run_cells_on(threads, &FAMILY, |_, &(algo, comp, eta)| {
+        run_cell(n, iters, quick, cond, algo, comp, eta)
+    })
+}
+
+/// Host wall-clock of the quick-mode §5.2 timing grid (all four
+/// conditions × the family, 20 iterations each) on `threads` runner
+/// threads. `bench-summary` records the serial and parallel readings so
+/// the speedup is measured on one host in one artifact.
+pub fn timing_grid_wall_s(threads: usize) -> f64 {
+    let conds = NetCondition::all();
+    let mut cells: Vec<(NetCondition, (&str, &str, f32))> = Vec::new();
+    for &c in conds.iter() {
+        for m in FAMILY {
+            cells.push((c, m));
+        }
     }
-    out
+    let t0 = Instant::now();
+    let rows = runner::run_cells_on(threads, &cells, |_, &(cond, (algo, comp, eta))| {
+        run_cell(64, 20, true, cond, algo, comp, eta)
+    });
+    assert_eq!(rows.len(), cells.len());
+    t0.elapsed().as_secs_f64()
 }
 
 pub fn run(quick: bool) -> Vec<Table> {
     let n = 64;
     let iters = if quick { 150 } else { 400 };
-    // The trajectory is network-independent, so convergence needs ONE
-    // full-length run; the virtual clock advances at a constant rate per
-    // iteration, so the per-condition timing grid only needs short runs.
-    let conv_rows = sweep_condition(n, iters, quick, NetCondition::Worst);
     let timing_iters = 20;
+    // The trajectory is network-independent, so convergence needs ONE
+    // full-length run per family member (under Worst); the virtual clock
+    // advances at a constant rate per iteration, so the per-condition
+    // timing grid only needs short runs. All 5×|FAMILY| cells go through
+    // the parallel runner as one flat grid.
+    let mut cells: Vec<(NetCondition, usize, (&str, &str, f32))> = Vec::new();
+    for m in FAMILY {
+        cells.push((NetCondition::Worst, iters, m));
+    }
+    for &c in NetCondition::all().iter() {
+        for m in FAMILY {
+            cells.push((c, timing_iters, m));
+        }
+    }
+    let mut rows = runner::run_cells(&cells, |_, &(cond, it, (algo, comp, eta))| {
+        run_cell(n, it, quick, cond, algo, comp, eta)
+    });
+    let conv_rows: Vec<EfSweepRow> = rows.drain(..FAMILY.len()).collect();
     let per_cond: Vec<Vec<EfSweepRow>> = NetCondition::all()
         .iter()
-        .map(|&c| sweep_condition(n, timing_iters, quick, c))
+        .map(|_| rows.drain(..FAMILY.len()).collect())
         .collect();
+    assert!(rows.is_empty());
 
     let mut conv = Table::new(
         &format!(
             "EF sweep: convergence on the n={n} ring, {iters} iters \
              (trajectory is network-independent)"
         ),
-        &["algo", "init_loss", "final_loss", "payload"],
+        &["algo", "init_loss", "final_loss", "payload", "host_s"],
     );
     let mut grid = Table::new(
         "EF sweep: measured virtual time per iteration under the §5.2 bandwidth×latency grid",
@@ -127,6 +201,7 @@ pub fn run(quick: bool) -> Vec<Table> {
             format!("{:.4}", row.init_loss),
             format!("{:.4}", row.final_loss),
             fmt_bytes(row.payload_bytes as f64),
+            format!("{:.2}", row.host_s),
         ]);
         grid.row(vec![
             row.algo.clone(),

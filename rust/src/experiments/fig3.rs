@@ -92,54 +92,60 @@ pub struct SimSweepPoint {
 /// `net`, for each ring size in `ns`, and *measure* virtual time. Where
 /// [`epoch_times`] is the closed form, these rows include NIC
 /// serialization order, frame batching, and header bytes.
+///
+/// Every (n, algorithm) cell is an independent deterministic simulation,
+/// so the grid fans out over the parallel runner ([`super::runner`]);
+/// rows come back in the serial order, bit-identical at any thread count
+/// (the `sim_virtual_s_per_iter` bench group pins this).
 pub fn sim_sweep_points(ns: &[usize], iters: usize, net: NetworkModel) -> Vec<SimSweepPoint> {
-    let mut out = Vec::new();
+    const ALGOS: [(&str, &str, f32); 5] = [
+        ("dpsgd", "fp32", 1.0f32),
+        ("dcd", "q8", 1.0),
+        ("ecd", "q8", 1.0),
+        ("choco", "sign", 0.4),
+        ("deepsqueeze", "topk_25", 0.4),
+    ];
+    let mut cells: Vec<(usize, (&str, &str, f32))> = Vec::new();
     for &n in ns {
-        for (algo, comp, eta) in [
-            ("dpsgd", "fp32", 1.0f32),
-            ("dcd", "q8", 1.0),
-            ("ecd", "q8", 1.0),
-            ("choco", "sign", 0.4),
-            ("deepsqueeze", "topk_25", 0.4),
-        ] {
-            let spec = SynthSpec {
-                n_nodes: n,
-                dim: 1024,
-                rows_per_node: 8,
-                ..Default::default()
-            };
-            let (models, x0) =
-                build_models(&ModelKind::Quadratic { spread: 1.0, noise: 0.1 }, &spec);
-            let cfg = AlgoConfig {
-                mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n))),
-                compressor: Arc::from(compression::from_name(comp).expect("compressor")),
-                seed: 0xf163,
-                eta,
-            };
-            let run = run_simulated(
-                algo,
-                &cfg,
-                models,
-                &x0,
-                0.05,
-                iters,
-                SimOpts {
-                    cost: CostModel::Uniform(net),
-                    compute_per_iter_s: 0.0,
-                },
-            )
-            .expect("sim sweep run");
-            out.push(SimSweepPoint {
-                n,
-                algo: format!("{algo}_{comp}"),
-                virtual_s_per_iter: run.virtual_time_s / iters as f64,
-                payload_per_node_iter: run.payload_bytes as f64 / (iters * n) as f64,
-                frame_overhead: (run.frame_bytes - run.payload_bytes) as f64
-                    / run.frame_bytes as f64,
-            });
+        for a in ALGOS {
+            cells.push((n, a));
         }
     }
-    out
+    super::runner::run_cells(&cells, |_, &(n, (algo, comp, eta))| {
+        let spec = SynthSpec {
+            n_nodes: n,
+            dim: 1024,
+            rows_per_node: 8,
+            ..Default::default()
+        };
+        let (models, x0) = build_models(&ModelKind::Quadratic { spread: 1.0, noise: 0.1 }, &spec);
+        let cfg = AlgoConfig {
+            mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n))),
+            compressor: Arc::from(compression::from_name(comp).expect("compressor")),
+            seed: 0xf163,
+            eta,
+        };
+        let run = run_simulated(
+            algo,
+            &cfg,
+            models,
+            &x0,
+            0.05,
+            iters,
+            SimOpts {
+                cost: CostModel::Uniform(net),
+                compute_per_iter_s: 0.0,
+            },
+        )
+        .expect("sim sweep run");
+        SimSweepPoint {
+            n,
+            algo: format!("{algo}_{comp}"),
+            virtual_s_per_iter: run.virtual_time_s / iters as f64,
+            payload_per_node_iter: run.payload_bytes as f64 / (iters * n) as f64,
+            frame_overhead: (run.frame_bytes - run.payload_bytes) as f64 / run.frame_bytes as f64,
+        }
+    })
 }
 
 /// Render [`sim_sweep_points`] as a table.

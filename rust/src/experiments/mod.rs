@@ -10,6 +10,11 @@
 //! discrete-event engine (`DECOMP_BACKEND=sim` — virtual network time,
 //! scales to n ≥ 64), or the threaded coordinator
 //! (`DECOMP_BACKEND=threads` — real message passing).
+//!
+//! Sweep grids (fig3's measured ring sweep, the EF grid, the ablations)
+//! fan their independent cells out over the deterministic parallel
+//! [`runner`] — output is bit-identical at any thread count
+//! (`--sweep-threads` / `DECOMP_SWEEP_THREADS`).
 
 pub mod ablations;
 pub mod ef_sweep;
@@ -17,6 +22,7 @@ pub mod fig1;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
+pub mod runner;
 
 use crate::algorithms::{self, AlgoConfig, RunOpts, TracePoint, TrainTrace};
 use crate::compression;

@@ -1,0 +1,139 @@
+//! Deterministic parallel sweep runner.
+//!
+//! Sweep grids (fig3's ring sweep, the EF bandwidth×latency grid, the
+//! ablation tables) are embarrassingly parallel: every cell builds its
+//! own models, RNG streams, and engine from per-cell seeds, shares no
+//! mutable state, and produces a deterministic result. This module fans
+//! such cells out over `std::thread::scope` worker threads and collects
+//! the results **in grid order**, so a parallel sweep's output is
+//! byte-identical to the serial one — only the host wall-clock changes.
+//!
+//! Thread count resolution (first match wins):
+//!
+//! 1. an explicit count passed to [`run_cells_on`];
+//! 2. the `DECOMP_SWEEP_THREADS` environment variable (the CLI's
+//!    `--sweep-threads N` flag sets it for the process);
+//! 3. [`std::thread::available_parallelism`].
+//!
+//! `DECOMP_SWEEP_THREADS=1` recovers the fully serial path (no threads
+//! are spawned at all), which is what `decomp bench-summary` uses to
+//! measure the parallel speedup on the same host.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Worker threads a sweep may use: `DECOMP_SWEEP_THREADS` if set to a
+/// positive integer, else the host's available parallelism.
+pub fn sweep_threads() -> usize {
+    std::env::var("DECOMP_SWEEP_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Run `f` over every cell of `items` on up to [`sweep_threads`] worker
+/// threads; results come back in `items` order. `f` receives the cell's
+/// grid index (for per-cell seeds or labels) and the cell itself.
+pub fn run_cells<I, O, F>(items: &[I], f: F) -> Vec<O>
+where
+    I: Sync,
+    O: Send,
+    F: Fn(usize, &I) -> O + Sync,
+{
+    run_cells_on(sweep_threads(), items, f)
+}
+
+/// [`run_cells`] with an explicit thread count. `threads <= 1` runs the
+/// cells inline on the calling thread (no spawn, bit-identical results);
+/// the count is capped at the number of cells. Work is distributed by an
+/// atomic cursor, so a straggler cell never idles the other workers.
+pub fn run_cells_on<I, O, F>(threads: usize, items: &[I], f: F) -> Vec<O>
+where
+    I: Sync,
+    O: Send,
+    F: Fn(usize, &I) -> O + Sync,
+{
+    let threads = threads.min(items.len());
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<O>> = Vec::with_capacity(items.len());
+    slots.resize_with(items.len(), || None);
+    let (tx, rx) = mpsc::channel::<(usize, O)>();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let out = f(i, &items[i]);
+                if tx.send((i, out)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        // Collect on the calling thread; the loop ends when every worker
+        // has dropped its sender. A panicking worker drops its sender
+        // early and the panic resurfaces when the scope joins.
+        for (i, out) in rx {
+            slots[i] = Some(out);
+        }
+    });
+    slots
+        .into_iter()
+        .map(|o| o.expect("every sweep cell completes"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_grid_order() {
+        let items: Vec<usize> = (0..37).collect();
+        let out = run_cells_on(4, &items, |i, &cell| {
+            assert_eq!(i, cell);
+            cell * 10
+        });
+        assert_eq!(out, (0..37).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        // The determinism contract: per-cell work keyed only on the cell
+        // index gives identical results at any thread count.
+        let items: Vec<u64> = (0..16).collect();
+        let cell = |i: usize, &seed: &u64| -> u64 {
+            let mut rng = crate::util::rng::Pcg64::new(seed, i as u64);
+            (0..100).map(|_| rng.next_u64() >> 32).sum()
+        };
+        let serial = run_cells_on(1, &items, cell);
+        let par2 = run_cells_on(2, &items, cell);
+        let par8 = run_cells_on(8, &items, cell);
+        assert_eq!(serial, par2);
+        assert_eq!(serial, par8);
+    }
+
+    #[test]
+    fn thread_count_clamped_to_cells() {
+        let items = [1, 2];
+        let out = run_cells_on(64, &items, |_, &x| x + 1);
+        assert_eq!(out, vec![2, 3]);
+        let empty: [u8; 0] = [];
+        assert!(run_cells_on(8, &empty, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn sweep_threads_is_positive() {
+        assert!(sweep_threads() >= 1);
+    }
+}

@@ -43,6 +43,16 @@ fn run() -> anyhow::Result<()> {
     let args = Args::parse();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let quick = args.bool("quick", false);
+    // Sweep parallelism: --sweep-threads N overrides DECOMP_SWEEP_THREADS
+    // for this process (the experiment drivers read the env through
+    // experiments::runner::sweep_threads).
+    if let Some(threads) = args.opt_str("sweep-threads") {
+        anyhow::ensure!(
+            threads.parse::<usize>().map(|t| t >= 1).unwrap_or(false),
+            "--sweep-threads expects a positive integer, got '{threads}'"
+        );
+        std::env::set_var("DECOMP_SWEEP_THREADS", threads);
+    }
     match cmd {
         "train" => train(&args, true),
         "simulate" => train(&args, false),
@@ -91,6 +101,11 @@ COMMANDS
   bench-summary  collect perf metrics: [--quick] [--out BENCH_pr.json]
   bench-compare  <baseline.json> <candidate.json> [--tolerance 0.25];
                  exits non-zero when a metric regresses past the tolerance
+
+Sweep grids (fig3, efsweep, ablations) run cells in parallel on the
+deterministic sweep runner; control the thread count with
+--sweep-threads N (or DECOMP_SWEEP_THREADS; 1 = serial). Results are
+bit-identical at any thread count.
 
 Set DECOMP_BACKEND=sim|threads|reference to re-route the figure
 experiments (fig1..fig4, ablations) through an execution backend.";

@@ -40,20 +40,33 @@
 use crate::compression::Wire;
 use crate::network::cost::CostModel;
 use crate::network::transport::Channel;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, VecDeque};
 
 // ---------------------------------------------------------------------------
 // Node programs: the per-node algorithm state machines.
 
-/// Messages a node wants to send in the current (iteration, phase).
+/// Messages a node wants to send in the current (iteration, phase), plus
+/// a pool of recycled [`Wire`] buffers.
+///
+/// The pool is what makes the emit path allocation-free in steady state:
+/// programs obtain payload buffers with [`Outbox::wire`] instead of
+/// allocating, and the executor returns every consumed wire via
+/// [`Outbox::recycle`] once `absorb` has read it. A recycled buffer keeps
+/// its capacity but never its bytes
+/// ([`Compressor::compress_into`](crate::compression::Compressor::compress_into)
+/// and [`Wire::copy_from`] both reset it first).
 #[derive(Debug, Default)]
 pub struct Outbox {
     msgs: Vec<(usize, Channel, Wire)>,
+    pool: Vec<Wire>,
 }
 
 impl Outbox {
     pub fn new() -> Outbox {
-        Outbox { msgs: Vec::new() }
+        Outbox {
+            msgs: Vec::new(),
+            pool: Vec::new(),
+        }
     }
 
     /// Queue `wire` for delivery to node `to`.
@@ -61,8 +74,27 @@ impl Outbox {
         self.msgs.push((to, channel, wire));
     }
 
+    /// Take a payload buffer from the pool (empty; retains the capacity
+    /// of whatever message it carried last). Allocates only when the pool
+    /// is dry — i.e. during warm-up.
+    pub fn wire(&mut self) -> Wire {
+        self.pool.pop().unwrap_or_else(Wire::empty)
+    }
+
+    /// Return a consumed wire's buffer to the pool for reuse.
+    pub fn recycle(&mut self, mut wire: Wire) {
+        wire.clear();
+        self.pool.push(wire);
+    }
+
     pub fn is_empty(&self) -> bool {
         self.msgs.is_empty()
+    }
+
+    /// Drain the queued messages in emit order, keeping the queue's
+    /// capacity (and the buffer pool) for the next phase.
+    pub fn drain(&mut self) -> std::vec::Drain<'_, (usize, Channel, Wire)> {
+        self.msgs.drain(..)
     }
 
     pub fn into_msgs(self) -> Vec<(usize, Channel, Wire)> {
@@ -95,15 +127,20 @@ pub trait NodeProgram: Send {
     }
 
     /// Run this node's local computation for (t, phase) and queue sends.
+    /// Payload buffers should come from [`Outbox::wire`] so the executor
+    /// can recycle them (steady-state zero-allocation contract).
     fn emit(&mut self, t: u64, phase: usize, out: &mut Outbox);
 
-    /// The (sender, channel) messages this node consumes in (t, phase),
-    /// in consumption order.
-    fn expects(&self, t: u64, phase: usize) -> Vec<(usize, Channel)>;
+    /// Append the (sender, channel) messages this node consumes in
+    /// (t, phase), in consumption order, to `out` (cleared by the caller;
+    /// passed in so the hot path reuses one buffer instead of allocating
+    /// a fresh `Vec` per node per phase).
+    fn expects(&self, t: u64, phase: usize, out: &mut Vec<(usize, Channel)>);
 
-    /// Consume the expected messages (aligned with `expects` order) and
-    /// finish the phase's local update.
-    fn absorb(&mut self, t: u64, phase: usize, msgs: Vec<Wire>);
+    /// Read the expected messages (aligned with `expects` order) and
+    /// finish the phase's local update. The executor owns the wires and
+    /// recycles their buffers afterwards.
+    fn absorb(&mut self, t: u64, phase: usize, msgs: &[Wire]);
 
     /// Update the step size before an iteration (drives γ-annealing).
     fn set_gamma(&mut self, gamma: f32);
@@ -127,7 +164,7 @@ pub trait NodeProgram: Send {
 /// engine charges bandwidth on [`Frame::encoded_len`], so header overhead
 /// is accounted honestly (it is ≤ ~11 bytes per message — negligible next
 /// to model payloads, but not free).
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Frame {
     pub msgs: Vec<(Channel, Wire)>,
 }
@@ -212,7 +249,10 @@ impl Frame {
         out
     }
 
-    /// Parse a frame; `None` on truncation or unknown channel tags.
+    /// Parse a frame; `None` on truncation, unknown channel tags, or
+    /// trailing junk — a frame must consume its buffer *exactly*, so a
+    /// valid frame followed by even one stray byte is rejected rather
+    /// than silently accepted.
     pub fn decode(buf: &[u8]) -> Option<Frame> {
         let mut pos = 0usize;
         let count = read_varint(buf, &mut pos)? as usize;
@@ -402,27 +442,85 @@ impl SimRun {
 /// The single-threaded discrete-event executor. Drive it one iteration at
 /// a time (interleaving evaluation, γ-annealing, or early stopping between
 /// iterations), or use [`run_sim`] for a fixed-length run.
+///
+/// ## Memory model (steady-state zero allocation)
+///
+/// Every per-phase structure is persistent scratch, sized once and reused
+/// for the run's lifetime (DESIGN.md §3b):
+///
+/// - the arrival heap keeps its backing storage across phases;
+/// - message routing uses **flat delivery slots** — a dense
+///   `Vec<VecDeque<Wire>>` indexed by `(from·n + to)·2 + channel` —
+///   instead of hash maps, so grouping and delivery are array index
+///   operations with no hashing and no per-phase map allocation;
+/// - [`Frame`]s and [`Wire`] payload buffers cycle through pools: a
+///   frame's wires are moved into delivery slots, read by `absorb`, then
+///   recycled into the shared [`Outbox`] pool that `emit` draws from.
+///
+/// After warm-up (one iteration fills every pool), the engine side of
+/// `step` performs zero heap allocations; end to end the full-precision
+/// gossip path is allocation-free (dpsgd_fp32@n64, asserted by the
+/// `alloc_steady_state` integration test under a counting allocator),
+/// while non-Identity codecs still allocate small bounded scratch
+/// (per-chunk scales, top-k index lists) inside compress/decompress.
 pub struct SimEngine {
     opts: SimOpts,
     clock: SimClock,
     bytes_sent: Vec<u64>,
     msgs_sent: Vec<u64>,
     seq: u64,
+    n: usize,
+    /// Shared outbox: `emit` fills it, the engine drains it; its wire
+    /// pool is refilled from absorbed messages.
+    outbox: Outbox,
+    /// Arrival event queue, reused across phases.
+    queue: BinaryHeap<Arrival>,
+    /// Per-destination frame being assembled during one node's emit
+    /// (index = destination node); empty frames between uses.
+    dest_frames: Vec<Frame>,
+    /// Destinations touched by the current emit, in first-send order.
+    dests: Vec<usize>,
+    /// Flat delivery slots: `(from * n + to) * 2 + channel_tag`.
+    slots: Vec<VecDeque<Wire>>,
+    /// Frame shells (empty `msgs` vecs with capacity) for reuse.
+    frame_pool: Vec<Frame>,
+    /// Scratch for `NodeProgram::expects`.
+    expects_buf: Vec<(usize, Channel)>,
+    /// Scratch for the messages handed to `NodeProgram::absorb`.
+    absorb_buf: Vec<Wire>,
 }
 
 impl SimEngine {
     pub fn new(n: usize, opts: SimOpts) -> SimEngine {
+        let mut slots = Vec::new();
+        slots.resize_with(n * n * 2, VecDeque::new);
+        let mut dest_frames = Vec::new();
+        dest_frames.resize_with(n, Frame::default);
         SimEngine {
             opts,
             clock: SimClock::new(n),
             bytes_sent: vec![0; n],
             msgs_sent: vec![0; n],
             seq: 0,
+            n,
+            outbox: Outbox::new(),
+            queue: BinaryHeap::new(),
+            dest_frames,
+            dests: Vec::new(),
+            slots,
+            frame_pool: Vec::new(),
+            expects_buf: Vec::new(),
+            absorb_buf: Vec::new(),
         }
     }
 
     pub fn clock(&self) -> &SimClock {
         &self.clock
+    }
+
+    #[inline]
+    fn slot_index(&self, from: usize, to: usize, ch: Channel) -> usize {
+        (from * self.n + to) * 2 + channel_tag(ch) as usize
     }
 
     /// Advance all programs through one synchronous iteration `t` (all
@@ -441,32 +539,31 @@ impl SimEngine {
         }
 
         for phase in 0..phases {
-            let mut queue: BinaryHeap<Arrival> = BinaryHeap::new();
-
             // Emit: run each node's local computation, coalesce its sends
             // into one frame per destination, charge the NIC and the link.
+            debug_assert!(self.queue.is_empty() && self.outbox.is_empty());
             for (i, prog) in programs.iter_mut().enumerate() {
-                let mut out = Outbox::new();
-                prog.emit(t, phase, &mut out);
-                let msgs = out.into_msgs();
-                if msgs.is_empty() {
+                prog.emit(t, phase, &mut self.outbox);
+                if self.outbox.is_empty() {
                     continue;
                 }
-                // Group by destination preserving emit order.
-                let mut dests: Vec<usize> = Vec::new();
-                let mut frames: HashMap<usize, Frame> = HashMap::new();
-                for (to, ch, wire) in msgs {
-                    frames
-                        .entry(to)
-                        .or_insert_with(|| {
-                            dests.push(to);
-                            Frame { msgs: Vec::new() }
-                        })
-                        .msgs
-                        .push((ch, wire));
+                // Group by destination preserving emit order, into the
+                // persistent per-destination frame slots.
+                debug_assert!(self.dests.is_empty());
+                for (to, ch, wire) in self.outbox.msgs.drain(..) {
+                    let frame = &mut self.dest_frames[to];
+                    if frame.msgs.is_empty() {
+                        self.dests.push(to);
+                    }
+                    frame.msgs.push((ch, wire));
                 }
-                for to in dests {
-                    let frame = frames.remove(&to).expect("frame grouped above");
+                // (take/restore keeps the borrow checker happy without
+                // losing the vec's capacity; `mem::take` swaps in an
+                // unallocated empty vec.)
+                let dests = std::mem::take(&mut self.dests);
+                for &to in &dests {
+                    let shell = self.frame_pool.pop().unwrap_or_default();
+                    let frame = std::mem::replace(&mut self.dest_frames[to], shell);
                     let link = self.opts.cost.link(i, to);
                     let on_wire = frame.encoded_len();
                     let start = self.clock.node_time[i].max(self.clock.nic_free[i]);
@@ -477,7 +574,7 @@ impl SimEngine {
                     self.clock.payload_bytes += frame.payload_bytes() as u64;
                     self.clock.frame_bytes += on_wire as u64;
                     self.clock.frames += 1;
-                    queue.push(Arrival {
+                    self.queue.push(Arrival {
                         time: start + tx + link.latency_s,
                         seq: self.seq,
                         from: i,
@@ -486,40 +583,48 @@ impl SimEngine {
                     });
                     self.seq += 1;
                 }
+                self.dests = dests;
+                self.dests.clear();
             }
 
             // Deliver in virtual-time order; a receiver's clock waits on
-            // its latest arrival.
-            let mut delivered: HashMap<(usize, usize, Channel), VecDeque<Wire>> = HashMap::new();
-            while let Some(a) = queue.pop() {
+            // its latest arrival. Wires move into their flat (from, to,
+            // channel) slot; the emptied frame shell goes back to the
+            // pool.
+            while let Some(a) = self.queue.pop() {
                 let nt = &mut self.clock.node_time[a.to];
                 *nt = nt.max(a.time);
-                for (ch, wire) in a.frame.msgs {
-                    delivered.entry((a.from, a.to, ch)).or_default().push_back(wire);
+                let mut frame = a.frame;
+                for (ch, wire) in frame.msgs.drain(..) {
+                    let idx = self.slot_index(a.from, a.to, ch);
+                    self.slots[idx].push_back(wire);
                 }
+                self.frame_pool.push(frame);
             }
 
-            // Absorb: each node consumes exactly what it expects.
+            // Absorb: each node reads exactly what it expects; consumed
+            // payload buffers are recycled into the outbox pool.
             for (i, prog) in programs.iter_mut().enumerate() {
-                let expects = prog.expects(t, phase);
-                let msgs: Vec<Wire> = expects
-                    .iter()
-                    .map(|&(from, ch)| {
-                        delivered
-                            .get_mut(&(from, i, ch))
-                            .and_then(|q| q.pop_front())
-                            .unwrap_or_else(|| {
-                                panic!(
-                                    "sim: node {i} expected a message from {from} on {ch:?} \
-                                     at t={t} phase={phase} that was never sent"
-                                )
-                            })
-                    })
-                    .collect();
-                prog.absorb(t, phase, msgs);
+                self.expects_buf.clear();
+                prog.expects(t, phase, &mut self.expects_buf);
+                debug_assert!(self.absorb_buf.is_empty());
+                for &(from, ch) in &self.expects_buf {
+                    let idx = self.slot_index(from, i, ch);
+                    let wire = self.slots[idx].pop_front().unwrap_or_else(|| {
+                        panic!(
+                            "sim: node {i} expected a message from {from} on {ch:?} \
+                             at t={t} phase={phase} that was never sent"
+                        )
+                    });
+                    self.absorb_buf.push(wire);
+                }
+                prog.absorb(t, phase, &self.absorb_buf);
+                for wire in self.absorb_buf.drain(..) {
+                    self.outbox.recycle(wire);
+                }
             }
             debug_assert!(
-                delivered.values().all(|q| q.is_empty()),
+                self.slots.iter().all(|q| q.is_empty()),
                 "sim: undelivered messages at t={t} phase={phase}"
             );
         }
@@ -609,9 +714,27 @@ mod tests {
         let mut enc = f.encode();
         enc.pop(); // truncate payload
         assert!(Frame::decode(&enc).is_none());
-        enc.push(3);
-        enc.push(42); // trailing junk
-        assert!(Frame::decode(&enc).is_none());
+    }
+
+    #[test]
+    fn frame_decode_rejects_trailing_junk() {
+        // Strict framing: a valid frame must consume the buffer exactly.
+        let f = Frame {
+            msgs: vec![
+                (Channel::Gossip, wire_of(&[1, 2, 3])),
+                (Channel::Reduce, wire_of(&[4])),
+            ],
+        };
+        let enc = f.encode();
+        assert_eq!(Frame::decode(&enc).unwrap(), f);
+        for junk in [&[0u8][..], &[42], &[0, 0, 0]] {
+            let mut with_junk = enc.clone();
+            with_junk.extend_from_slice(junk);
+            assert!(
+                Frame::decode(&with_junk).is_none(),
+                "frame + {junk:?} must not decode"
+            );
+        }
     }
 
     /// A trivial program: each node sends its id+t to both ring neighbors
@@ -625,20 +748,25 @@ mod tests {
 
     impl NodeProgram for RingEcho {
         fn emit(&mut self, t: u64, _phase: usize, out: &mut Outbox) {
-            let payload = vec![self.node as u8, t as u8];
+            let payload = [self.node as u8, t as u8];
             let left = (self.node + self.n - 1) % self.n;
             let right = (self.node + 1) % self.n;
-            out.send(left, Channel::Gossip, wire_of(&payload));
-            out.send(right, Channel::Gossip, wire_of(&payload));
+            // Pooled-buffer path: both sends draw recycled wires.
+            for to in [left, right] {
+                let mut w = out.wire();
+                w.copy_from(&wire_of(&payload));
+                out.send(to, Channel::Gossip, w);
+            }
         }
 
-        fn expects(&self, _t: u64, _phase: usize) -> Vec<(usize, Channel)> {
+        fn expects(&self, _t: u64, _phase: usize, out: &mut Vec<(usize, Channel)>) {
             let left = (self.node + self.n - 1) % self.n;
             let right = (self.node + 1) % self.n;
-            vec![(left, Channel::Gossip), (right, Channel::Gossip)]
+            out.push((left, Channel::Gossip));
+            out.push((right, Channel::Gossip));
         }
 
-        fn absorb(&mut self, t: u64, _phase: usize, msgs: Vec<Wire>) {
+        fn absorb(&mut self, t: u64, _phase: usize, msgs: &[Wire]) {
             let left = (self.node + self.n - 1) % self.n;
             let right = (self.node + 1) % self.n;
             assert_eq!(msgs[0].payload, vec![left as u8, t as u8]);
@@ -770,6 +898,28 @@ mod tests {
         );
         assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits());
         assert_eq!(a.frame_bytes, b.frame_bytes);
+    }
+
+    #[test]
+    fn engine_scratch_reaches_steady_state() {
+        // After warm-up the pools neither grow nor drain: every wire and
+        // frame taken in a phase comes back by the end of it.
+        let n = 6;
+        let mut programs = ring_programs(n);
+        let mut engine = SimEngine::new(n, SimOpts::default());
+        for t in 0..3u64 {
+            engine.step(&mut programs, t);
+        }
+        let pool_wires = engine.outbox.pool.len();
+        let pool_frames = engine.frame_pool.len();
+        assert!(pool_wires > 0, "wire pool fills during warm-up");
+        assert!(pool_frames > 0, "frame pool fills during warm-up");
+        for t in 3..10u64 {
+            engine.step(&mut programs, t);
+        }
+        assert_eq!(engine.outbox.pool.len(), pool_wires);
+        assert_eq!(engine.frame_pool.len(), pool_frames);
+        assert!(engine.slots.iter().all(|q| q.is_empty()));
     }
 
     #[test]

@@ -1,0 +1,116 @@
+//! The zero-allocation contract of the simulation hot path.
+//!
+//! `SimEngine::step` must perform **zero heap allocations after warm-up**
+//! for the `dpsgd_fp32@n64` configuration (the fig3/bench sweep cell):
+//! every per-phase structure — arrival heap, flat delivery slots, frame
+//! shells, wire payload buffers, expects/absorb scratch — is persistent
+//! and pooled, so steady-state iterations only move bytes.
+//!
+//! Asserted with a counting `#[global_allocator]` wrapped around the
+//! system allocator. This file intentionally contains a single test:
+//! a concurrently running test would pollute the global counter.
+
+use decomp::algorithms::AlgoConfig;
+use decomp::compression;
+use decomp::coordinator::program::build_program;
+use decomp::data::{build_models, ModelKind, SynthSpec};
+use decomp::network::cost::{CostModel, NetworkModel};
+use decomp::network::sim::{NodeProgram, SimEngine, SimOpts};
+use decomp::topology::{Graph, MixingMatrix, Topology};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn sim_step_allocates_nothing_after_warmup_for_dpsgd_fp32_n64() {
+    // The dpsgd_fp32@n64 sweep cell: 64-ring, dim-1024 quadratic shards,
+    // worst §5.2 network condition — the same shape the fig3 measured
+    // sweep and the `sim_virtual_s_per_iter` bench group run.
+    let n = 64;
+    let iters = 25usize;
+    let spec = SynthSpec {
+        n_nodes: n,
+        dim: 1024,
+        rows_per_node: 8,
+        ..Default::default()
+    };
+    let (models, x0) = build_models(&ModelKind::Quadratic { spread: 1.0, noise: 0.1 }, &spec);
+    let cfg = AlgoConfig {
+        mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n))),
+        compressor: Arc::from(compression::from_name("fp32").expect("compressor")),
+        seed: 0xf163,
+        eta: 1.0,
+    };
+    let mut programs: Vec<Box<dyn NodeProgram>> = models
+        .into_iter()
+        .enumerate()
+        .map(|(node, model)| {
+            build_program("dpsgd", &cfg, node, model, &x0, 0.05, iters).expect("program")
+        })
+        .collect();
+    let mut engine = SimEngine::new(
+        n,
+        SimOpts {
+            cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+            compute_per_iter_s: 0.0,
+        },
+    );
+
+    // Warm-up: fills the wire/frame pools, the delivery slots, the
+    // arrival heap, and every scratch buffer to steady-state capacity.
+    for t in 0..5u64 {
+        engine.step(&mut programs, t);
+    }
+
+    let before = alloc_count();
+    for t in 5..iters as u64 {
+        engine.step(&mut programs, t);
+    }
+    let during = alloc_count() - before;
+    assert_eq!(
+        during, 0,
+        "SimEngine::step allocated {during} time(s) in steady state \
+         (expected zero after warm-up for dpsgd_fp32@n64)"
+    );
+
+    // Sanity: the run actually did work (payloads moved, clock advanced).
+    assert!(engine.clock().payload_bytes > 0);
+    assert!(engine.clock().now() > 0.0);
+    let run = engine.finish(programs);
+    assert_eq!(run.reports.len(), n);
+    for r in &run.reports {
+        assert_eq!(r.losses.len(), iters);
+    }
+}

@@ -5,11 +5,14 @@
 use decomp::algorithms::{self, consensus_distance, AlgoConfig};
 use decomp::compression::{
     from_name, Compressor, Identity, RandomSparsifier, SignCompressor, StochasticQuantizer, TopK,
+    Wire,
 };
 use decomp::linalg::eig::{spectral_stats, symmetric_eigen};
 use decomp::linalg::mat::Mat;
 use decomp::linalg::vecops;
 use decomp::models::{GradientModel, Quadratic};
+use decomp::network::sim::Frame;
+use decomp::network::transport::Channel;
 use decomp::topology::{is_doubly_stochastic, Graph, MixingMatrix, Topology};
 use decomp::util::prop::{check, Gen};
 use decomp::util::rng::Pcg64;
@@ -465,6 +468,65 @@ fn prop_error_feedback_residual_decays() {
             "sign EF residual should decay: {} vs {e0}",
             vecops::norm2(&e)
         );
+    });
+}
+
+#[test]
+fn prop_frame_roundtrip_multi_message_varint_boundaries() {
+    // Frames whose payload lengths straddle the varint width boundaries
+    // (1→2 bytes at 128, 2→3 bytes at 16384) must round-trip exactly,
+    // `encoded_len` must match the materialized encoding, and strict
+    // decoding must reject the frame the moment junk follows it.
+    const BOUNDARY_SIZES: [usize; 8] = [0, 1, 126, 127, 128, 129, 16_383, 16_384];
+    check("frame round-trips at varint boundaries", CASES, |g| {
+        let nmsgs = g.usize_in(1, 4);
+        let msgs: Vec<(Channel, Wire)> = (0..nmsgs)
+            .map(|_| {
+                let ch = if g.bool() { Channel::Gossip } else { Channel::Reduce };
+                let len = *g.choose(&BOUNDARY_SIZES);
+                let payload: Vec<u8> = (0..len).map(|_| g.rng.next_u64() as u8).collect();
+                (ch, Wire { len, payload })
+            })
+            .collect();
+        let frame = Frame { msgs };
+        let enc = frame.encode();
+        assert_eq!(enc.len(), frame.encoded_len(), "encoded_len is exact");
+        let back = Frame::decode(&enc).expect("valid frame decodes");
+        assert_eq!(back, frame);
+        // Trailing junk: one stray byte (any value, zero included) kills it.
+        let mut junked = enc.clone();
+        junked.push(g.rng.next_u64() as u8);
+        assert!(Frame::decode(&junked).is_none(), "trailing junk accepted");
+        // Truncation of a non-empty encoding is rejected too.
+        let mut cut = enc;
+        cut.pop();
+        if !cut.is_empty() {
+            assert!(Frame::decode(&cut).is_none(), "truncated frame accepted");
+        }
+    });
+}
+
+#[test]
+fn prop_recycled_wire_never_leaks_stale_bytes() {
+    // The pooling contract: compress_into over a recycled buffer that
+    // previously held a *longer* payload must produce a wire bitwise
+    // identical to a fresh compress — same len, same bytes, no stale
+    // tail. Same RNG stream on both sides makes stochastic codecs
+    // comparable draw-for-draw.
+    check("pooled wire reuse leaks nothing", CASES, |g| {
+        let long = g.vec_f32(1500, 3000, 1.0);
+        let short = g.vec_f32(1, 700, 1.0);
+        for name in ["fp32", "q8", "q4", "q1", "sign", "topk_25", "sparse_p25"] {
+            let c = from_name(name).unwrap();
+            let tag = g.rng.next_u64();
+            let fresh = c.compress(&short, &mut g.rng.split(tag));
+            // Pollute: a recycled wire arrives still holding the longer
+            // message's bytes and capacity.
+            let mut recycled = c.compress(&long, &mut g.rng.split(tag ^ 1));
+            c.compress_into(&short, &mut g.rng.split(tag), &mut recycled);
+            assert_eq!(recycled.len, fresh.len, "{name}: element count");
+            assert_eq!(recycled.payload, fresh.payload, "{name}: payload bytes");
+        }
     });
 }
 
