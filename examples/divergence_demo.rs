@@ -51,6 +51,7 @@ fn main() -> anyhow::Result<()> {
                 compressor: Arc::from(from_name(comp_name).unwrap()),
                 seed: 0x51fe,
                 eta: 1.0,
+                link: None,
             };
             let x0 = vec![0.0f32; dim];
             let mut a = algorithms::from_name(algo, cfg, &x0, n).unwrap();

@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
         ("dcd", "q4", 1.0),
         ("naive", "q8", 1.0),
         ("choco", "sign", 0.4),
+        ("choco", "lowrank_r2", 0.4),
         ("deepsqueeze", "q4", 1.0),
     ] {
         let cfg = TrainConfig {
@@ -69,6 +70,9 @@ fn main() -> anyhow::Result<()> {
     println!("\nNote: q8 rows should match fp32 convergence at ~1/4 the bytes;");
     println!("`naive` demonstrates why unmodified compression fails (Fig. 1);");
     println!("`choco sign` ships 1 bit/coordinate — error feedback makes the");
-    println!("biased operator sound where dcd/ecd would reject it.");
+    println!("biased operator sound where dcd/ecd would reject it;");
+    println!("`choco lowrank_r2` is PowerGossip: warm-started rank-2 factors");
+    println!("of the 8x8 parameter fold (see `decomp lowranksweep` for the");
+    println!("large-matrix regime where low rank is extreme compression).");
     Ok(())
 }

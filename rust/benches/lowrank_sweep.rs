@@ -1,0 +1,14 @@
+//! Bench: the low-rank sweep — PowerGossip (CHOCO + warm-started rank-r
+//! link compression) over the rank×(bandwidth,latency) grid at n = 64 on
+//! the discrete-event engine.
+
+fn main() {
+    println!(
+        "lowrank sweep (experiment backend: sim; quick: {})\n",
+        decomp::bench_harness::quick_mode()
+    );
+    for t in decomp::experiments::lowrank_sweep::run(decomp::bench_harness::quick_mode()) {
+        t.print();
+        println!();
+    }
+}

@@ -181,6 +181,7 @@ mod tests {
             compressor: Arc::new(sparsifier),
             seed: 8,
             eta: 1.0,
+            link: None,
         };
         let mut algo = DcdPsgd::new(cfg, &x0, n);
         let bad_loss = train_loss(&mut algo, &mut models, 0.1, 300);

@@ -124,6 +124,7 @@ mod tests {
             compressor,
             seed,
             eta,
+            link: None,
         }
     }
 

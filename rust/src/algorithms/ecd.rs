@@ -189,6 +189,7 @@ mod tests {
             compressor: Arc::new(RandomSparsifier::new(0.05)),
             seed,
             eta: 1.0,
+            link: None,
         };
         let init_loss: f64 =
             m_ecd.iter().map(|m| m.full_loss(&x0)).sum::<f64>() / n as f64;

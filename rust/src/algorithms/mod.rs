@@ -30,8 +30,8 @@ pub use driver::{global_loss, run_training, RunOpts, TracePoint, TrainTrace};
 pub use ecd::EcdPsgd;
 pub use naive::NaiveCompressedDPsgd;
 
-use crate::compression::Compressor;
-use crate::models::GradientModel;
+use crate::compression::{Compressor, LinkCompressor, LinkCompressorSpec, StatelessLink};
+use crate::models::{GradientModel, ShapeManifest};
 use crate::network::cost::CommSchedule;
 use crate::topology::MixingMatrix;
 use crate::util::rng::Pcg64;
@@ -146,16 +146,77 @@ pub struct AlgoConfig {
     /// (`choco`, `deepsqueeze`); η = 1 is a full gossip step. Ignored by
     /// the paper's originals.
     pub eta: f32,
+    /// Stateful per-link compressor family (PowerGossip-style low-rank;
+    /// `compression::resolve_name`). When set, the supporting algorithms
+    /// materialize warm-started per-link state from it and `compressor`
+    /// is inert; when `None`, the stateless `compressor` is used as
+    /// before.
+    pub link: Option<Arc<dyn LinkCompressorSpec>>,
+}
+
+impl AlgoConfig {
+    /// The compressor identifier for metrics/trace names: the link-state
+    /// family's when configured, else the stateless codec's.
+    pub fn compressor_name(&self) -> String {
+        match &self.link {
+            Some(spec) => spec.name(),
+            None => self.compressor.name(),
+        }
+    }
+
+    /// Whether the effective compressor satisfies E[C(z)] = z.
+    pub fn compressor_is_unbiased(&self) -> bool {
+        match &self.link {
+            Some(spec) => spec.is_unbiased(),
+            None => self.compressor.is_unbiased(),
+        }
+    }
+
+    /// The compression codec driving node `node`'s broadcast stream:
+    /// warm-started per-link state keyed `(node, node)` when a link spec
+    /// is configured (CHOCO-style broadcast shares one state across the
+    /// node's outgoing edges — its replica-mirror invariant requires
+    /// identical bytes per neighbor; see DESIGN.md §3c), else a wrapper
+    /// over the shared stateless compressor that is byte-identical to
+    /// calling it directly.
+    pub fn link_for(&self, node: usize, manifest: &ShapeManifest) -> Box<dyn LinkCompressor> {
+        match &self.link {
+            Some(spec) => spec.build(self.seed, node, node, manifest),
+            None => Box::new(StatelessLink::new(self.compressor.clone())),
+        }
+    }
+
+    /// Closed-form wire bytes of one `n`-element broadcast message under
+    /// this config (for [`CommSchedule`] accounting). For link-state
+    /// compressors the near-square [`ShapeManifest::folded`] manifest is
+    /// assumed — exact for the vector models; the MLP's structured
+    /// manifest differs slightly (real byte counts always come from the
+    /// materialized wires).
+    pub fn wire_bytes(&self, n: usize) -> usize {
+        match &self.link {
+            Some(spec) => spec.wire_bytes(&ShapeManifest::folded(n)),
+            None => self.compressor.wire_bytes(n),
+        }
+    }
 }
 
 /// Build an algorithm by name: `dpsgd`, `dcd`, `ecd`, `naive`,
 /// `allreduce`, `qallreduce`, `choco`, `deepsqueeze`.
+///
+/// Returns `None` for unknown names **and** for a link-state compressor
+/// spec paired with an algorithm that has no link code path (only
+/// CHOCO-SGD does) — the reference backend must fail loudly like the
+/// program builders do, never silently train on the inert stateless
+/// placeholder.
 pub fn from_name(
     name: &str,
     cfg: AlgoConfig,
     x0: &[f32],
     n_nodes: usize,
 ) -> Option<Box<dyn Algorithm>> {
+    if cfg.link.is_some() && !matches!(name, "choco" | "chocosgd") {
+        return None;
+    }
     match name {
         "dpsgd" => Some(Box::new(DPsgd::new(cfg, x0, n_nodes))),
         "dcd" => Some(Box::new(DcdPsgd::new(cfg, x0, n_nodes))),
@@ -210,6 +271,7 @@ pub(crate) mod test_support {
             compressor: Arc::new(Identity),
             seed,
             eta: 1.0,
+            link: None,
         }
     }
 
@@ -219,6 +281,7 @@ pub(crate) mod test_support {
             compressor: Arc::new(StochasticQuantizer::new(bits)),
             seed,
             eta: 1.0,
+            link: None,
         }
     }
 
@@ -314,6 +377,55 @@ mod tests {
             assert!(!a.name().is_empty());
         }
         assert!(from_name("bogus", cfg_fp32(4, 7), &[0.0; 4], 4).is_none());
+    }
+
+    #[test]
+    fn algo_config_resolves_both_compressor_families() {
+        let cfg = cfg_fp32(4, 1);
+        assert_eq!(cfg.compressor_name(), "fp32");
+        assert!(cfg.compressor_is_unbiased());
+        assert_eq!(cfg.wire_bytes(10), 40);
+        let (compressor, link) = crate::compression::resolve_name("lowrank_r2").unwrap();
+        let lcfg = AlgoConfig {
+            mixing: ring_mixing(4),
+            compressor,
+            seed: 1,
+            eta: 0.4,
+            link,
+        };
+        assert_eq!(lcfg.compressor_name(), "lowrank_r2");
+        assert!(!lcfg.compressor_is_unbiased());
+        // folded(64) = 8×8 → rank-2 factors are 2·(8+8) f32 = 128 B.
+        assert_eq!(lcfg.wire_bytes(64), 128);
+        let link = lcfg.link_for(0, &ShapeManifest::folded(64));
+        assert_eq!(link.name(), "lowrank_r2");
+        assert_eq!(link.wire_bytes(64), 128);
+        assert!(!link.is_unbiased());
+        // The stateless path wraps byte-identically.
+        let wrapped = cfg.link_for(0, &ShapeManifest::folded(10));
+        assert_eq!(wrapped.name(), "fp32");
+        assert_eq!(wrapped.wire_bytes(10), 40);
+    }
+
+    #[test]
+    fn from_name_refuses_link_specs_outside_choco() {
+        // The reference backend must not fall back to the inert
+        // stateless placeholder when a link-state compressor is paired
+        // with an algorithm that has no link code path.
+        let mk = || {
+            let (compressor, link) = crate::compression::resolve_name("lowrank_r2").unwrap();
+            AlgoConfig {
+                mixing: ring_mixing(4),
+                compressor,
+                seed: 1,
+                eta: 0.4,
+                link,
+            }
+        };
+        for name in ["dcd", "ecd", "dpsgd", "naive", "allreduce", "qallreduce", "deepsqueeze"] {
+            assert!(from_name(name, mk(), &[0.0; 4], 4).is_none(), "{name}");
+        }
+        assert!(from_name("choco", mk(), &[0.0; 4], 4).is_some());
     }
 
     #[test]

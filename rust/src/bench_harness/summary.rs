@@ -63,7 +63,7 @@ pub fn collect(quick: bool) -> BenchReport {
 }
 
 /// [`collect`] with the EF-grid wall-clock pair optional: the grid is the
-/// most expensive host measurement (2 × 28 n=64 simulations), and tests
+/// most expensive host measurement (2 × 36 n=64 simulations), and tests
 /// that only compare the deterministic `sim_*` groups skip it.
 fn collect_with(quick: bool, host_sweep: bool) -> BenchReport {
     let mut groups: BTreeMap<String, BTreeMap<String, f64>> = BTreeMap::new();
@@ -79,11 +79,13 @@ fn collect_with(quick: bool, host_sweep: bool) -> BenchReport {
     };
     for (algo, comp, eta) in ef_sweep::FAMILY {
         let (mut models, x0) = build_models(&kind, &spec);
+        let (compressor, link) = compression::resolve_name(comp).expect("compressor");
         let cfg = AlgoConfig {
             mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, 8))),
-            compressor: Arc::from(compression::from_name(comp).expect("compressor")),
+            compressor,
             seed: 0xbe7c,
             eta,
+            link,
         };
         let mut a = algorithms::from_name(algo, cfg, &x0, 8).expect("algorithm");
         let m = super::time_fn(algo, opts, || {
@@ -129,6 +131,11 @@ fn collect_with(quick: bool, host_sweep: bool) -> BenchReport {
     let mut per_iter = BTreeMap::new();
     for p in fig3::sim_sweep_points(&[64], 3, NetCondition::Worst.model()) {
         per_iter.insert(format!("{}@n64", p.algo), p.virtual_s_per_iter);
+    }
+    // The lowranksweep quick cells (dim-4096 fold): pins the low-rank
+    // wire format's factor sizes through the engine's accounting.
+    for (k, v) in crate::experiments::lowrank_sweep::bench_points() {
+        per_iter.insert(k, v);
     }
     groups.insert("sim_virtual_s_per_iter".into(), per_iter);
 
@@ -365,7 +372,8 @@ mod tests {
         assert!(r.groups["iters_per_sec"].len() == ef_sweep::FAMILY.len());
         assert_eq!(r.groups["host_sweep_wall_s"].len(), 2);
         assert_eq!(r.groups["sim_epoch_s"].len(), 12);
-        assert_eq!(r.groups["sim_virtual_s_per_iter"].len(), 5);
+        // 6 fig3 sweep algos + the 2 lowranksweep quick cells.
+        assert_eq!(r.groups["sim_virtual_s_per_iter"].len(), 8);
         for ms in r.groups.values() {
             for (k, v) in ms {
                 assert!(v.is_finite() && *v > 0.0, "{k} = {v}");

@@ -1,0 +1,159 @@
+//! Stateful per-link compression: the contract that makes compressor
+//! *state* a first-class resident of the engine.
+//!
+//! The original [`Compressor`](super::Compressor) family is stateless —
+//! shared behind an `Arc`, every call independent. The strongest
+//! practical compressors are not: PowerGossip-style low-rank codecs
+//! ([`super::LowRank`]) warm-start a power-iteration factor across
+//! rounds, so each *directed link* owns evolving state. [`LinkCompressor`]
+//! is the `&mut self` surface for that family; [`LinkCompressorSpec`] is
+//! the shared, thread-safe description carried by
+//! [`AlgoConfig`](crate::algorithms::AlgoConfig) from which every
+//! node/edge materializes its own state.
+//!
+//! [`StatelessLink`] adapts any stateless compressor to the link surface
+//! byte-for-byte (it simply delegates), so algorithm programs hold one
+//! `Box<dyn LinkCompressor>` and run a single code path for both
+//! families — which is what keeps the bitwise backend-equivalence pins
+//! intact for the stateless family.
+//!
+//! **Where state lives** (DESIGN.md §3c): a link's key is the directed
+//! pair `(from, to)`. Broadcast-style algorithms (CHOCO-SGD, which sends
+//! one identical correction to every neighbor — its replica-mirror
+//! invariant *requires* identical bytes per neighbor) key their single
+//! broadcast stream as the self-link `(i, i)`. The wire formats here ship
+//! both factors, so *decoding* needs no per-link state — only the encoder
+//! warm-starts — which is why any node can decode any other node's
+//! low-rank wire.
+
+use super::{Compressor, Wire};
+use crate::models::ShapeManifest;
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// A stateful compression codec bound to one directed link. Unlike
+/// [`Compressor`], methods take `&mut self`: calls may advance
+/// warm-started state (and therefore the call *order* is part of the
+/// determinism contract — one compress per node per iteration, executed
+/// identically on every backend).
+pub trait LinkCompressor: Send {
+    /// Short identifier used in configs, metrics and bench tables.
+    fn name(&self) -> String;
+
+    /// Compress `z` into `wire` (reusing its payload buffer, like
+    /// [`Compressor::compress_into`]), advancing any warm-started state.
+    fn compress_into(&mut self, z: &[f32], rng: &mut Pcg64, wire: &mut Wire);
+
+    /// Compress into a freshly allocated wire.
+    fn compress(&mut self, z: &[f32], rng: &mut Pcg64) -> Wire {
+        let mut wire = Wire::empty();
+        self.compress_into(z, rng, &mut wire);
+        wire
+    }
+
+    /// Reconstruct into `out` (must have the original length). State-free
+    /// for the codecs in-tree (wires are self-describing given the spec),
+    /// but `&mut self` so implementations may reuse owned scratch.
+    fn decompress(&mut self, wire: &Wire, out: &mut [f32]);
+
+    /// Exact wire bytes for an `n`-element message on this link.
+    fn wire_bytes(&self, n: usize) -> usize;
+
+    /// Whether E[C(z)] = z (Assumption 1.5). Low-rank projection is
+    /// biased; the driver admits it only under error feedback.
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+}
+
+/// Shared, thread-safe description of a link-compressor family: what
+/// [`AlgoConfig`](crate::algorithms::AlgoConfig) carries. Each node/edge
+/// calls [`LinkCompressorSpec::build`] to materialize its own state.
+pub trait LinkCompressorSpec: Send + Sync {
+    /// Config/metric identifier (e.g. `lowrank_r4`).
+    fn name(&self) -> String;
+
+    /// Whether the family satisfies E[C(z)] = z.
+    fn is_unbiased(&self) -> bool;
+
+    /// Exact wire bytes for one message over `manifest`.
+    fn wire_bytes(&self, manifest: &ShapeManifest) -> usize;
+
+    /// Materialize the warm-started state for the directed link
+    /// `from → to` over parameters shaped by `manifest`. Initial state is
+    /// a pure function of `(seed, from, to, manifest)` — the determinism
+    /// contract across backends.
+    fn build(
+        &self,
+        seed: u64,
+        from: usize,
+        to: usize,
+        manifest: &ShapeManifest,
+    ) -> Box<dyn LinkCompressor>;
+}
+
+/// Adapter: any stateless [`Compressor`] used as a (trivially stateful)
+/// link compressor. Byte-identical to calling the inner codec directly —
+/// same RNG draws, same wires — so routing an algorithm through the link
+/// surface changes nothing for the stateless family (pinned by the
+/// backend-equivalence suite).
+pub struct StatelessLink {
+    inner: Arc<dyn Compressor>,
+}
+
+impl StatelessLink {
+    pub fn new(inner: Arc<dyn Compressor>) -> StatelessLink {
+        StatelessLink { inner }
+    }
+}
+
+impl LinkCompressor for StatelessLink {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn compress_into(&mut self, z: &[f32], rng: &mut Pcg64, wire: &mut Wire) {
+        self.inner.compress_into(z, rng, wire);
+    }
+
+    fn decompress(&mut self, wire: &Wire, out: &mut [f32]) {
+        self.inner.decompress(wire, out);
+    }
+
+    fn wire_bytes(&self, n: usize) -> usize {
+        self.inner.wire_bytes(n)
+    }
+
+    fn is_unbiased(&self) -> bool {
+        self.inner.is_unbiased()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::{Identity, StochasticQuantizer};
+
+    #[test]
+    fn stateless_link_is_byte_identical_to_inner() {
+        let z: Vec<f32> = (0..300).map(|i| (i as f32 * 0.13).sin()).collect();
+        for inner in [
+            Arc::new(Identity) as Arc<dyn Compressor>,
+            Arc::new(StochasticQuantizer::new(4)),
+        ] {
+            let mut direct_rng = Pcg64::new(7, 9);
+            let mut link_rng = Pcg64::new(7, 9);
+            let direct = inner.compress(&z, &mut direct_rng);
+            let mut link = StatelessLink::new(inner.clone());
+            let wired = link.compress(&z, &mut link_rng);
+            assert_eq!(direct, wired, "{}", inner.name());
+            assert_eq!(link.wire_bytes(z.len()), inner.wire_bytes(z.len()));
+            assert_eq!(link.is_unbiased(), inner.is_unbiased());
+            let mut a = vec![0.0f32; z.len()];
+            let mut b = vec![0.0f32; z.len()];
+            inner.decompress(&direct, &mut a);
+            link.decompress(&wired, &mut b);
+            assert_eq!(a, b);
+        }
+    }
+}

@@ -1,0 +1,477 @@
+//! Rank-r PowerGossip compression (Vogels et al., 2020): one warm-started
+//! power-iteration step per round over the tensor views a
+//! [`ShapeManifest`] exposes.
+//!
+//! Per matrix segment `M` (rows × cols, row-major view of the flat
+//! vector) with link state `Q` (cols × r, orthonormal, warm-started from
+//! the previous round):
+//!
+//! 1. `P = M·Q`, orthonormalized (modified Gram–Schmidt) → `P̂`;
+//! 2. `Q' = Mᵀ·P̂` (carries the singular values);
+//! 3. ship `P̂` and `Q'`; the receiver reconstructs `M̂ = P̂·Q'ᵀ`;
+//! 4. warm start: `Q ← orthonormalize(Q')` for the next round
+//!    (degenerate columns re-seeded from the link's deterministic RNG).
+//!
+//! Because `Q' = MᵀP̂`, the reconstruction is `M̂ = P̂P̂ᵀM` — an
+//! **orthogonal projection** of `M` onto span(P̂). Hence exactly (up to
+//! f32 rounding) `‖M − M̂‖² = ‖M‖² − ‖M̂‖² ≤ ‖M‖²`: a contraction, the
+//! only property error feedback needs (the operator is *biased*, so the
+//! driver rejects it for DCD/ECD and admits it under CHOCO-SGD — the
+//! PowerGossip algorithm is precisely CHOCO-SGD with this codec).
+//! Warm-starting aligns span(P̂) with the top singular directions of the
+//! (slowly changing) error-feedback stream, which is what buys extreme
+//! compression at negligible variance.
+//!
+//! Vector segments (biases, folding remainders) ride full precision.
+//!
+//! Wire layout, segments in manifest order:
+//! `[Matrix: P̂ (rows·r_eff f32 LE, column-major) | Q' (cols·r_eff f32 LE,
+//! column-major)] · [Vector: len f32 LE]`, with
+//! `r_eff = min(rank, rows, cols)` — sizes are implied by the spec +
+//! manifest both ends share, so there is no header and `wire_bytes` is an
+//! exact closed form (`4 · manifest.lowrank_floats(rank)`).
+//!
+//! Memory discipline: every factor and both decode scratch buffers are
+//! sized once at build, so steady-state compress/decompress performs zero
+//! heap allocations (the payload buffer itself cycles through the
+//! [`Outbox`](crate::network::sim::Outbox) wire pool).
+
+use super::link::{LinkCompressor, LinkCompressorSpec};
+use super::Wire;
+use crate::linalg::{mat, vecops};
+use crate::models::{ShapeManifest, TensorShape};
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// RNG stream base for per-link state: `0x7000_0000_0000 + (from << 20)
+/// + to`, disjoint from the per-node grad (`0x6000+i`) and compression
+/// (`0xc000+i`) streams (DESIGN.md §3).
+const LINK_STREAM_BASE: u64 = 0x7000_0000_0000;
+
+/// The shared description of a rank-`rank` PowerGossip family — what
+/// `AlgoConfig` carries; every link materializes its own [`LowRank`]
+/// state from it.
+#[derive(Debug, Clone)]
+pub struct LowRankSpec {
+    pub rank: usize,
+}
+
+impl LowRankSpec {
+    pub fn new(rank: usize) -> LowRankSpec {
+        assert!(rank >= 1, "lowrank rank must be >= 1, got {rank}");
+        LowRankSpec { rank }
+    }
+}
+
+/// Parse `lowrank_rN` (N >= 1) into a spec.
+pub fn spec_from_name(name: &str) -> Option<Arc<dyn LinkCompressorSpec>> {
+    let rank = name.strip_prefix("lowrank_r")?.parse::<usize>().ok()?;
+    if rank == 0 {
+        return None;
+    }
+    Some(Arc::new(LowRankSpec::new(rank)))
+}
+
+impl LinkCompressorSpec for LowRankSpec {
+    fn name(&self) -> String {
+        format!("lowrank_r{}", self.rank)
+    }
+
+    fn is_unbiased(&self) -> bool {
+        false
+    }
+
+    fn wire_bytes(&self, manifest: &ShapeManifest) -> usize {
+        4 * manifest.lowrank_floats(self.rank)
+    }
+
+    fn build(
+        &self,
+        seed: u64,
+        from: usize,
+        to: usize,
+        manifest: &ShapeManifest,
+    ) -> Box<dyn LinkCompressor> {
+        Box::new(LowRank::new(self.rank, seed, from, to, manifest.clone()))
+    }
+}
+
+/// Per-matrix-segment link state and scratch (the segment's rows/cols
+/// come from the manifest at every use).
+struct MatState {
+    r_eff: usize,
+    /// Warm-started orthonormal factor (cols × r_eff, column-major).
+    q: Vec<f32>,
+    /// P̂ scratch (rows × r_eff, column-major).
+    p: Vec<f32>,
+    /// Q' = MᵀP̂ scratch (cols × r_eff, column-major).
+    qn: Vec<f32>,
+    /// Decode scratch for the received factors.
+    dec_p: Vec<f32>,
+    dec_q: Vec<f32>,
+}
+
+/// One directed link's PowerGossip state. Build via
+/// [`LinkCompressorSpec::build`] (or [`LowRank::new`] directly in tests).
+pub struct LowRank {
+    rank: usize,
+    manifest: ShapeManifest,
+    mats: Vec<MatState>,
+    /// Deterministic stream for Q₀ and degenerate-column re-seeding —
+    /// part of the link state, a pure function of (seed, from, to).
+    reseed: Pcg64,
+}
+
+/// Refill exactly-zero columns of a column-major orthonormal factor from
+/// `rng`, re-orthogonalized against the nonzero columns (via the same
+/// [`mat::orthonormalize_column_against`] step `orthonormalize_columns`
+/// uses — one implementation, so the two can never drift numerically).
+/// Keeps the warm start a full basis even when the compressed stream
+/// transiently drops rank (a stuck zero column would never recover under
+/// power iteration).
+fn fix_degenerate_columns(a: &mut [f32], nrows: usize, rng: &mut Pcg64) {
+    let ncols = if nrows == 0 { 0 } else { a.len() / nrows };
+    for k in 0..ncols {
+        for _attempt in 0..4 {
+            let (prev, rest) = a.split_at_mut(k * nrows);
+            let col = &mut rest[..nrows];
+            if col.iter().any(|v| *v != 0.0) {
+                break;
+            }
+            rng.fill_normal_f32(col, 0.0, 1.0);
+            if mat::orthonormalize_column_against(prev, col) {
+                break;
+            }
+            // Degenerated again (astronomically unlikely): col is zeroed
+            // by the helper; retry with a fresh draw.
+        }
+    }
+}
+
+fn read_f32s(payload: &[u8], pos: &mut usize, out: &mut [f32]) {
+    for o in out.iter_mut() {
+        let b: [u8; 4] = payload[*pos..*pos + 4].try_into().unwrap();
+        *o = f32::from_le_bytes(b);
+        *pos += 4;
+    }
+}
+
+impl LowRank {
+    pub fn new(rank: usize, seed: u64, from: usize, to: usize, manifest: ShapeManifest) -> LowRank {
+        assert!(rank >= 1, "lowrank rank must be >= 1, got {rank}");
+        let stream = LINK_STREAM_BASE + ((from as u64) << 20) + to as u64;
+        let mut reseed = Pcg64::new(seed, stream);
+        let mut mats = Vec::new();
+        for &t in &manifest.tensors {
+            if let TensorShape::Matrix { rows, cols } = t {
+                let r_eff = rank.min(rows).min(cols);
+                let mut q = vec![0.0f32; cols * r_eff];
+                reseed.fill_normal_f32(&mut q, 0.0, 1.0);
+                mat::orthonormalize_columns(&mut q, cols);
+                fix_degenerate_columns(&mut q, cols, &mut reseed);
+                mats.push(MatState {
+                    r_eff,
+                    q,
+                    p: vec![0.0f32; rows * r_eff],
+                    qn: vec![0.0f32; cols * r_eff],
+                    dec_p: vec![0.0f32; rows * r_eff],
+                    dec_q: vec![0.0f32; cols * r_eff],
+                });
+            }
+        }
+        LowRank { rank, manifest, mats, reseed }
+    }
+}
+
+impl LinkCompressor for LowRank {
+    fn name(&self) -> String {
+        format!("lowrank_r{}", self.rank)
+    }
+
+    fn is_unbiased(&self) -> bool {
+        false
+    }
+
+    fn compress_into(&mut self, z: &[f32], _rng: &mut Pcg64, wire: &mut Wire) {
+        let LowRank { rank, manifest, mats, reseed } = self;
+        assert_eq!(z.len(), manifest.total_len(), "lowrank: vector/manifest length mismatch");
+        wire.clear();
+        wire.len = z.len();
+        let mut payload = std::mem::take(&mut wire.payload);
+        payload.reserve(4 * manifest.lowrank_floats(*rank));
+        let mut off = 0usize;
+        let mut mi = 0usize;
+        for &t in &manifest.tensors {
+            match t {
+                TensorShape::Matrix { rows, cols } => {
+                    let st = &mut mats[mi];
+                    mi += 1;
+                    let m = &z[off..off + rows * cols];
+                    let r = st.r_eff;
+                    // P = M·Q: each P column is M against one Q column
+                    // (contiguous dot per row, f64 accumulation).
+                    for k in 0..r {
+                        let qk = &st.q[k * cols..(k + 1) * cols];
+                        for i in 0..rows {
+                            st.p[k * rows + i] =
+                                vecops::dot(&m[i * cols..(i + 1) * cols], qk) as f32;
+                        }
+                    }
+                    mat::orthonormalize_columns(&mut st.p, rows);
+                    // Q' = Mᵀ·P̂ accumulated row-wise (contiguous axpy).
+                    st.qn.fill(0.0);
+                    for k in 0..r {
+                        let pk = &st.p[k * rows..(k + 1) * rows];
+                        let qnk = &mut st.qn[k * cols..(k + 1) * cols];
+                        for i in 0..rows {
+                            vecops::axpy(pk[i], &m[i * cols..(i + 1) * cols], qnk);
+                        }
+                    }
+                    for v in &st.p {
+                        payload.extend_from_slice(&v.to_le_bytes());
+                    }
+                    for v in &st.qn {
+                        payload.extend_from_slice(&v.to_le_bytes());
+                    }
+                    // Warm start for the next round.
+                    st.q.copy_from_slice(&st.qn);
+                    mat::orthonormalize_columns(&mut st.q, cols);
+                    fix_degenerate_columns(&mut st.q, cols, reseed);
+                }
+                TensorShape::Vector { len } => {
+                    for v in &z[off..off + len] {
+                        payload.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+            off += t.len();
+        }
+        wire.payload = payload;
+    }
+
+    fn decompress(&mut self, wire: &Wire, out: &mut [f32]) {
+        let LowRank { manifest, mats, .. } = self;
+        assert_eq!(out.len(), wire.len);
+        assert_eq!(out.len(), manifest.total_len(), "lowrank: vector/manifest length mismatch");
+        let payload = &wire.payload;
+        let mut pos = 0usize;
+        let mut off = 0usize;
+        let mut mi = 0usize;
+        for &t in &manifest.tensors {
+            match t {
+                TensorShape::Matrix { rows, cols } => {
+                    let st = &mut mats[mi];
+                    mi += 1;
+                    read_f32s(payload, &mut pos, &mut st.dec_p);
+                    read_f32s(payload, &mut pos, &mut st.dec_q);
+                    let seg = &mut out[off..off + rows * cols];
+                    seg.fill(0.0);
+                    // M̂ = P̂·Q'ᵀ, rank-1 term by rank-1 term.
+                    for k in 0..st.r_eff {
+                        let pk = &st.dec_p[k * rows..(k + 1) * rows];
+                        let qk = &st.dec_q[k * cols..(k + 1) * cols];
+                        for i in 0..rows {
+                            vecops::axpy(pk[i], qk, &mut seg[i * cols..(i + 1) * cols]);
+                        }
+                    }
+                }
+                TensorShape::Vector { len } => {
+                    read_f32s(payload, &mut pos, &mut out[off..off + len]);
+                }
+            }
+            off += t.len();
+        }
+        debug_assert_eq!(pos, payload.len(), "lowrank wire not fully consumed");
+    }
+
+    fn wire_bytes(&self, n: usize) -> usize {
+        assert_eq!(
+            n,
+            self.manifest.total_len(),
+            "lowrank wire_bytes: n must equal the manifest length"
+        );
+        4 * self.manifest.lowrank_floats(self.rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link(rank: usize, manifest: &ShapeManifest) -> Box<dyn LinkCompressor> {
+        LowRankSpec::new(rank).build(0x10a0, 0, 0, manifest)
+    }
+
+    fn rng() -> Pcg64 {
+        Pcg64::seed_from_u64(42)
+    }
+
+    fn random_z(len: usize, seed: u64) -> Vec<f32> {
+        let mut r = Pcg64::seed_from_u64(seed);
+        let mut z = vec![0.0f32; len];
+        r.fill_normal_f32(&mut z, 0.0, 1.0);
+        z
+    }
+
+    #[test]
+    fn wire_bytes_exact_and_round_trip_shapes() {
+        for (len, rank) in [(1usize, 1usize), (7, 2), (64, 2), (128, 4), (1024, 4)] {
+            let m = ShapeManifest::folded(len);
+            let mut l = link(rank, &m);
+            let z = random_z(len, len as u64);
+            let w = l.compress(&z, &mut rng());
+            assert_eq!(w.len, len);
+            assert_eq!(w.bytes(), l.wire_bytes(len), "len {len} rank {rank}");
+            assert_eq!(w.bytes(), LowRankSpec::new(rank).wire_bytes(&m));
+            let mut out = vec![0.0f32; len];
+            l.decompress(&w, &mut out);
+            assert!(out.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn reconstruction_is_an_orthogonal_projection() {
+        // M̂ = P̂P̂ᵀM ⟹ Pythagoras: ‖M−M̂‖² + ‖M̂‖² = ‖M‖² (up to f32),
+        // and in particular the operator contracts: ‖z − C(z)‖ ≤ ‖z‖.
+        let len = 1024; // 32×32
+        let m = ShapeManifest::folded(len);
+        let mut l = link(4, &m);
+        let z = random_z(len, 9);
+        let w = l.compress(&z, &mut rng());
+        let mut out = vec![0.0f32; len];
+        l.decompress(&w, &mut out);
+        let n2 = vecops::dot(&z, &z);
+        let c2 = vecops::dot(&out, &out);
+        let e2 = vecops::dist2_sq(&z, &out);
+        assert!((e2 + c2 - n2).abs() < 1e-3 * n2, "pythagoras: {e2} + {c2} vs {n2}");
+        assert!(e2 < n2, "must strictly contract a generic vector");
+        assert!(c2 > 0.0, "must capture some energy");
+    }
+
+    #[test]
+    fn vector_tail_passes_through_bitwise() {
+        let len = 67; // 8×8 matrix + 3-tail
+        let m = ShapeManifest::folded(len);
+        let mut l = link(2, &m);
+        let z = random_z(len, 5);
+        let w = l.compress(&z, &mut rng());
+        let mut out = vec![0.0f32; len];
+        l.decompress(&w, &mut out);
+        for (a, b) in z[64..].iter().zip(&out[64..]) {
+            assert_eq!(a.to_bits(), b.to_bits(), "tail must ride full precision");
+        }
+    }
+
+    #[test]
+    fn full_rank_reconstructs_exactly_enough() {
+        // r_eff = min(rows, cols) makes P̂ a square orthonormal basis:
+        // the projection is the identity up to f32 rounding.
+        let len = 36; // 6×6
+        let m = ShapeManifest::folded(len);
+        let mut l = link(100, &m); // clamps to r_eff = 6
+        let z = random_z(len, 7);
+        let w = l.compress(&z, &mut rng());
+        assert_eq!(w.bytes(), 4 * 6 * (6 + 6));
+        let mut out = vec![0.0f32; len];
+        l.decompress(&w, &mut out);
+        let rel = vecops::dist2_sq(&z, &out).sqrt() / vecops::norm2(&z);
+        assert!(rel < 1e-4, "full-rank relative error {rel}");
+    }
+
+    #[test]
+    fn warm_start_improves_on_a_fixed_matrix() {
+        // Power iteration on a fixed M: the captured energy is
+        // non-decreasing round over round, so the round-10 error is no
+        // worse than round-1 (and strictly better for a generic M).
+        let len = 4096; // 64×64
+        let m = ShapeManifest::folded(len);
+        let mut l = link(2, &m);
+        let z = random_z(len, 11);
+        let mut out = vec![0.0f32; len];
+        let mut first = f64::NAN;
+        let mut last = f64::NAN;
+        for round in 0..10 {
+            let w = l.compress(&z, &mut rng());
+            l.decompress(&w, &mut out);
+            let e = vecops::dist2_sq(&z, &out);
+            if round == 0 {
+                first = e;
+            }
+            last = e;
+        }
+        assert!(last <= first * (1.0 + 1e-4), "warm start regressed: {first} -> {last}");
+        assert!(last < 0.999 * first, "warm start should make progress: {first} -> {last}");
+    }
+
+    #[test]
+    fn zero_input_is_zero_and_state_recovers() {
+        let len = 64;
+        let m = ShapeManifest::folded(len);
+        let mut l = link(2, &m);
+        let z0 = vec![0.0f32; len];
+        let w = l.compress(&z0, &mut rng());
+        let mut out = vec![1.0f32; len];
+        l.decompress(&w, &mut out);
+        assert!(out.iter().all(|v| *v == 0.0), "C(0) must be 0");
+        // The degenerate round re-seeded Q; a real vector still compresses.
+        let z = random_z(len, 3);
+        let w = l.compress(&z, &mut rng());
+        l.decompress(&w, &mut out);
+        let n2 = vecops::dot(&z, &z);
+        let c2 = vecops::dot(&out, &out);
+        assert!(c2 > 0.0 && c2 <= n2 * (1.0 + 1e-4), "recovered state captures energy");
+    }
+
+    #[test]
+    fn deterministic_given_link_key() {
+        let len = 128;
+        let m = ShapeManifest::folded(len);
+        let mut a = LowRankSpec::new(2).build(7, 3, 5, &m);
+        let mut b = LowRankSpec::new(2).build(7, 3, 5, &m);
+        let mut c = LowRankSpec::new(2).build(7, 5, 3, &m); // different key
+        let z = random_z(len, 13);
+        let (mut same, mut diff) = (true, true);
+        for _ in 0..3 {
+            let wa = a.compress(&z, &mut rng());
+            let wb = b.compress(&z, &mut rng());
+            let wc = c.compress(&z, &mut rng());
+            same &= wa == wb;
+            diff &= wa != wc;
+        }
+        assert!(same, "identical keys must produce identical wires");
+        assert!(diff, "distinct link keys must seed distinct states");
+    }
+
+    #[test]
+    fn mlp_manifest_factorizes_both_weight_matrices() {
+        let m = ShapeManifest::mlp(16, 8, 3);
+        let mut l = link(2, &m);
+        let z = random_z(m.total_len(), 17);
+        let w = l.compress(&z, &mut rng());
+        // W1 8×16 at r=2: 2·24; b1 8; W2 3×8 at r_eff=2: 2·11; b2 3.
+        assert_eq!(w.bytes(), 4 * (2 * 24 + 8 + 2 * 11 + 3));
+        let mut out = vec![0.0f32; z.len()];
+        l.decompress(&w, &mut out);
+        // Biases bitwise; matrices contracted.
+        use crate::models::TensorView;
+        let views = m.views(&z);
+        let out_views = m.views(&out);
+        for (v, ov) in views.iter().zip(&out_views) {
+            if let (TensorView::Vector { data: a }, TensorView::Vector { data: b }) = (v, ov) {
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spec_from_name_parses() {
+        assert_eq!(spec_from_name("lowrank_r4").unwrap().name(), "lowrank_r4");
+        assert!(!spec_from_name("lowrank_r1").unwrap().is_unbiased());
+        assert!(spec_from_name("lowrank_r0").is_none());
+        assert!(spec_from_name("lowrank_").is_none());
+        assert!(spec_from_name("lowrankr4").is_none());
+        assert!(spec_from_name("q8").is_none());
+    }
+}

@@ -11,24 +11,40 @@
 //! ([`crate::algorithms::ChocoSgd`], [`crate::algorithms::DeepSqueeze`]),
 //! which only need a δ-contraction.
 //!
+//! Beyond the stateless operators, the *link-state* family
+//! ([`LinkCompressor`] / [`LinkCompressorSpec`]) makes compressor state a
+//! first-class resident of the engine: [`LowRank`] is rank-r PowerGossip
+//! (Vogels et al., 2020) — one warm-started power-iteration step per
+//! round over the tensor views a
+//! [`ShapeManifest`](crate::models::ShapeManifest) exposes, biased but an
+//! orthogonal-projection contraction, admitted under CHOCO-SGD only.
+//! [`StatelessLink`] adapts any stateless codec to the same surface
+//! byte-for-byte; [`resolve_name`] resolves a config string into
+//! whichever family it names.
+//!
 //! Compression is measured honestly: [`Wire`] is the actual byte buffer
-//! that would cross the network (bit-packed levels + per-chunk scales),
-//! so the network simulator charges real message sizes, not idealized
-//! `N·bits/8` estimates.
+//! that would cross the network (bit-packed levels + per-chunk scales,
+//! or low-rank factors), so the network simulator charges real message
+//! sizes, not idealized `N·bits/8` estimates.
 
 mod estimate;
+mod link;
+mod lowrank;
 mod quantize;
 mod sign;
 mod sparsify;
 mod wire;
 
 pub use estimate::{empirical_alpha, empirical_sigma_tilde_sq};
+pub use link::{LinkCompressor, LinkCompressorSpec, StatelessLink};
+pub use lowrank::{spec_from_name as lowrank_spec_from_name, LowRank, LowRankSpec};
 pub use quantize::StochasticQuantizer;
 pub use sign::SignCompressor;
 pub use sparsify::{RandomSparsifier, TopK};
 pub use wire::{BitReader, BitWriter, Wire};
 
 use crate::util::rng::Pcg64;
+use std::sync::Arc;
 
 /// A (possibly stochastic) compression operator on parameter-delta
 /// vectors. Implementations must be `Send + Sync`: every worker thread
@@ -131,6 +147,23 @@ pub fn from_name(name: &str) -> Option<Box<dyn Compressor>> {
     None
 }
 
+/// Resolve a compressor spec name into the pair an
+/// [`AlgoConfig`](crate::algorithms::AlgoConfig) carries: a stateless
+/// name yields `(codec, None)`; a link-state family (`lowrank_rN`) yields
+/// `(Identity, Some(spec))` — the `Identity` placeholder is never used on
+/// a link-compressed path (programs route through the spec), it only
+/// keeps the stateless field total.
+pub fn resolve_name(
+    name: &str,
+) -> Option<(Arc<dyn Compressor>, Option<Arc<dyn LinkCompressorSpec>>)> {
+    if let Some(spec) = lowrank_spec_from_name(name) {
+        let placeholder: Arc<dyn Compressor> = Arc::new(Identity);
+        return Some((placeholder, Some(spec)));
+    }
+    let c = from_name(name)?;
+    Some((Arc::from(c), None))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,6 +195,21 @@ mod tests {
         }
         assert!(from_name("nope").is_none());
         assert!(from_name("qx").is_none());
+        // Link-state families are not stateless codecs.
+        assert!(from_name("lowrank_r4").is_none());
+    }
+
+    #[test]
+    fn resolve_name_splits_the_two_families() {
+        let (c, link) = resolve_name("q8").unwrap();
+        assert_eq!(c.name(), "q8");
+        assert!(link.is_none());
+        let (c, link) = resolve_name("lowrank_r4").unwrap();
+        assert_eq!(c.name(), "fp32"); // inert placeholder
+        let link = link.expect("lowrank resolves to a link spec");
+        assert_eq!(link.name(), "lowrank_r4");
+        assert!(!link.is_unbiased());
+        assert!(resolve_name("zstd").is_none());
     }
 
     #[test]

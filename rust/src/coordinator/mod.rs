@@ -138,13 +138,17 @@ impl TrainConfig {
     }
 
     pub fn build_algo_config(&self) -> anyhow::Result<AlgoConfig> {
-        let compressor = compression::from_name(&self.compressor)
+        // Both compressor families resolve from the one `compressor` key:
+        // stateless codecs (`fp32`, `q8`, ..., `sign`) and the link-state
+        // low-rank family (`lowrank_rN`).
+        let (compressor, link) = compression::resolve_name(&self.compressor)
             .ok_or_else(|| anyhow::anyhow!("unknown compressor '{}'", self.compressor))?;
         let cfg = AlgoConfig {
             mixing: self.build_mixing()?,
-            compressor: Arc::from(compressor),
+            compressor,
             seed: self.seed,
             eta: self.eta,
+            link,
         };
         validate_algo_config(&self.algo, &cfg)?;
         Ok(cfg)
@@ -193,11 +197,24 @@ impl TrainConfig {
 pub(crate) fn validate_algo_config(algo_name: &str, cfg: &AlgoConfig) -> anyhow::Result<()> {
     anyhow::ensure!(
         !crate::algorithms::requires_unbiased_compressor(algo_name)
-            || cfg.compressor.is_unbiased(),
+            || cfg.compressor_is_unbiased(),
         "compressor '{}' is biased and '{algo_name}' requires an unbiased compressor \
          (Assumption 1.5); use an error-feedback algorithm (choco|deepsqueeze) instead",
-        cfg.compressor.name()
+        cfg.compressor_name()
     );
+    // Link-state (per-edge, warm-started) compressors need an algorithm
+    // whose program routes through the link surface; CHOCO-SGD is the
+    // one in-tree (PowerGossip = CHOCO + low-rank). Everything else gets
+    // a clear error rather than silently falling back to the inert
+    // stateless placeholder.
+    if let Some(link) = &cfg.link {
+        anyhow::ensure!(
+            matches!(algo_name, "choco" | "chocosgd"),
+            "link-state compressor '{}' requires per-edge warm-started state, which only \
+             'choco' implements; pick a stateless compressor for '{algo_name}'",
+            link.name()
+        );
+    }
     anyhow::ensure!(
         cfg.eta > 0.0 && cfg.eta <= 1.0,
         "consensus step size eta must be in (0, 1], got {}",
@@ -251,8 +268,8 @@ pub fn trace_name(algo_name: &str, cfg: &AlgoConfig) -> String {
     match algo_name {
         "dpsgd" => "dpsgd_fp32".into(),
         "allreduce" => "allreduce_fp32".into(),
-        "qallreduce" => format!("allreduce_{}", cfg.compressor.name()),
-        other => format!("{other}_{}", cfg.compressor.name()),
+        "qallreduce" => format!("allreduce_{}", cfg.compressor_name()),
+        other => format!("{other}_{}", cfg.compressor_name()),
     }
 }
 
@@ -432,6 +449,55 @@ mod tests {
         );
         let (models, _) = cfg.build_models().unwrap();
         assert!(run_threaded("choco", &algo_cfg, models, &x0, 0.1, 2).is_err());
+    }
+
+    #[test]
+    fn lowrank_accepted_for_choco_rejected_elsewhere() {
+        let ok = TrainConfig {
+            algo: "choco".into(),
+            compressor: "lowrank_r4".into(),
+            eta: 0.4,
+            ..Default::default()
+        };
+        let cfg = ok.build_algo_config().unwrap();
+        assert_eq!(cfg.compressor_name(), "lowrank_r4");
+        assert!(!cfg.compressor_is_unbiased());
+        assert!(cfg.link.is_some());
+        assert_eq!(trace_name("choco", &cfg), "choco_lowrank_r4");
+        // Stateless names resolve with no link spec.
+        let plain = TrainConfig::default().build_algo_config().unwrap();
+        assert!(plain.link.is_none());
+        for algo in ["dcd", "deepsqueeze", "dpsgd"] {
+            let bad = TrainConfig {
+                algo: algo.into(),
+                compressor: "lowrank_r4".into(),
+                eta: 0.5,
+                ..Default::default()
+            };
+            assert!(bad.build_algo_config().is_err(), "{algo} must reject lowrank");
+        }
+    }
+
+    #[test]
+    fn lowrank_runs_on_sim_backend_through_validation() {
+        let cfg = TrainConfig {
+            algo: "choco".into(),
+            compressor: "lowrank_r2".into(),
+            eta: 0.4,
+            n_nodes: 4,
+            dim: 16,
+            rows_per_node: 16,
+            ..Default::default()
+        };
+        let algo_cfg = cfg.build_algo_config().unwrap();
+        let (models, x0) = cfg.build_models().unwrap();
+        let run =
+            run_simulated("choco", &algo_cfg, models, &x0, 0.05, 3, SimOpts::default()).unwrap();
+        // 4×4 fold at rank 2: each wire is 2·(4+4)·4 = 64 B, two
+        // neighbors, three iterations.
+        for r in &run.reports {
+            assert_eq!(r.bytes_sent, 3 * 2 * 64);
+        }
     }
 
     #[test]

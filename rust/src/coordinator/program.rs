@@ -14,7 +14,7 @@
 //! reference and `rust/tests/backend_equivalence.rs` pins sim ≡ threads.
 
 use crate::algorithms::AlgoConfig;
-use crate::compression::{Compressor, Identity, Wire};
+use crate::compression::{Compressor, Identity, LinkCompressor, Wire};
 use crate::linalg::vecops;
 use crate::models::GradientModel;
 use crate::network::sim::{NodeProgram, Outbox};
@@ -339,6 +339,12 @@ struct ChocoProgram {
     c: Common,
     /// Consensus step size η ∈ (0, 1].
     eta: f32,
+    /// The broadcast-stream codec: a warm-started per-link state for the
+    /// low-rank family, or a byte-identical wrapper over the shared
+    /// stateless compressor. One state per node — CHOCO sends the same
+    /// correction to every neighbor, so its replica-mirror invariant
+    /// requires one stream, keyed `(node, node)` (DESIGN.md §3c).
+    link: Box<dyn LinkCompressor>,
     /// x̂^{(i)}: this node's own public copy.
     xhat_self: Vec<f32>,
     /// x̂^{(j)}: replicas of the neighbors' public copies.
@@ -357,12 +363,13 @@ impl NodeProgram for ChocoProgram {
         vecops::axpy(-self.c.gamma, &self.c.g, &mut self.half);
         // q = C(x_{t+½} − x̂); broadcast, and apply to the own copy (the
         // identical update every neighbor applies to its replica of us).
+        // This is the one compress per node per iteration that advances
+        // the link state.
         vecops::sub(&self.half, &self.xhat_self, &mut self.z);
         let mut wire = out.wire();
-        self.c
-            .compressor
+        self.link
             .compress_into(&self.z, &mut self.c.comp_rng, &mut wire);
-        self.c.compressor.decompress(&wire, &mut self.cz);
+        self.link.decompress(&wire, &mut self.cz);
         vecops::axpy(1.0, &self.cz, &mut self.xhat_self);
         self.c.broadcast(out, wire);
     }
@@ -372,9 +379,10 @@ impl NodeProgram for ChocoProgram {
     }
 
     fn absorb(&mut self, _t: u64, _phase: usize, msgs: &[Wire]) {
-        // Apply the neighbors' corrections to their replicas.
+        // Apply the neighbors' corrections to their replicas (decoding is
+        // state-free: the wires carry both factors).
         for (k, w) in msgs.iter().enumerate() {
-            self.c.compressor.decompress(w, &mut self.cz);
+            self.link.decompress(w, &mut self.cz);
             vecops::axpy(1.0, &self.cz, &mut self.xhat_nbrs[k]);
         }
         // x_{t+1} = x_{t+½} + η (Σ_j W_ij x̂^{(j)} − x̂^{(i)}).
@@ -607,6 +615,9 @@ pub fn build_program(
     gamma: f32,
     iters: usize,
 ) -> Option<Box<dyn NodeProgram>> {
+    // Tensor structure for the link-state compressors (needed before the
+    // model moves into `Common`).
+    let manifest = model.shape_manifest();
     let c = Common::new(cfg, node, model, x0, gamma, iters);
     let dim = x0.len();
     let deg = c.neighbors.len();
@@ -638,6 +649,7 @@ pub fn build_program(
         }),
         "choco" | "chocosgd" => Box::new(ChocoProgram {
             eta: cfg.eta,
+            link: cfg.link_for(node, &manifest),
             xhat_self: x0.to_vec(),
             xhat_nbrs: vec![x0.to_vec(); deg],
             c,

@@ -66,6 +66,7 @@ fn run_quad(
         compressor: Arc::from(compression::from_name(compressor).unwrap()),
         seed: 0xab1a,
         eta: 1.0,
+        link: None,
     };
     let x0 = vec![0.0f32; dim];
     let mut a = algorithms::from_name(algo, cfg, &x0, n).unwrap();

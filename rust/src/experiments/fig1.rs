@@ -51,6 +51,7 @@ fn run_subopt(
         compressor: Arc::from(crate::compression::from_name(comp).unwrap()),
         seed: 0xf161,
         eta: 1.0,
+        link: None,
     };
     let x0 = vec![0.0f32; s.dim];
     let mut a = algorithms::from_name(algo, cfg, &x0, s.n).unwrap();

@@ -98,11 +98,12 @@ pub struct SimSweepPoint {
 /// rows come back in the serial order, bit-identical at any thread count
 /// (the `sim_virtual_s_per_iter` bench group pins this).
 pub fn sim_sweep_points(ns: &[usize], iters: usize, net: NetworkModel) -> Vec<SimSweepPoint> {
-    const ALGOS: [(&str, &str, f32); 5] = [
+    const ALGOS: [(&str, &str, f32); 6] = [
         ("dpsgd", "fp32", 1.0f32),
         ("dcd", "q8", 1.0),
         ("ecd", "q8", 1.0),
         ("choco", "sign", 0.4),
+        ("choco", "lowrank_r4", 0.4),
         ("deepsqueeze", "topk_25", 0.4),
     ];
     let mut cells: Vec<(usize, (&str, &str, f32))> = Vec::new();
@@ -119,11 +120,13 @@ pub fn sim_sweep_points(ns: &[usize], iters: usize, net: NetworkModel) -> Vec<Si
             ..Default::default()
         };
         let (models, x0) = build_models(&ModelKind::Quadratic { spread: 1.0, noise: 0.1 }, &spec);
+        let (compressor, link) = compression::resolve_name(comp).expect("compressor");
         let cfg = AlgoConfig {
             mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n))),
-            compressor: Arc::from(compression::from_name(comp).expect("compressor")),
+            compressor,
             seed: 0xf163,
             eta,
+            link,
         };
         let run = run_simulated(
             algo,

@@ -22,6 +22,7 @@ pub mod fig1;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
+pub mod lowrank_sweep;
 pub mod runner;
 
 use crate::algorithms::{self, AlgoConfig, RunOpts, TracePoint, TrainTrace};
@@ -128,11 +129,15 @@ pub fn run_named_on(
 ) -> TrainTrace {
     let (mut models, x0_built) = build_models(kind, spec);
     let x0 = x0_override.unwrap_or(&x0_built).to_vec();
-    let mk_cfg = || AlgoConfig {
-        mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, spec.n_nodes))),
-        compressor: Arc::from(compression::from_name(compressor).expect("compressor")),
-        seed,
-        eta: 1.0,
+    let mk_cfg = || {
+        let (comp, link) = compression::resolve_name(compressor).expect("compressor");
+        AlgoConfig {
+            mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, spec.n_nodes))),
+            compressor: comp,
+            seed,
+            eta: 1.0,
+            link,
+        }
     };
     match backend {
         ExecBackend::Reference => {

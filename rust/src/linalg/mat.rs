@@ -115,6 +115,68 @@ impl Mat {
     }
 }
 
+/// Column norms below this (f64, post-projection) count as degenerate:
+/// the column is zeroed instead of being blown up by a near-zero divide.
+pub const DEGENERATE_COL_NORM: f64 = 1e-30;
+
+/// The single modified-Gram–Schmidt step: project `col` against the
+/// orthonormal columns packed in `prev` (column-major, `col.len()` rows
+/// each) and normalize it in place. Returns `false` — with `col` zeroed
+/// exactly — when the column degenerates (zero input, or numerically
+/// inside the span of `prev`).
+///
+/// This is THE inner step of [`orthonormalize_columns`] and of the
+/// low-rank codec's degenerate-column reseeding
+/// ([`crate::compression::LowRank`]): both must stay numerically
+/// bitwise-identical, which is why there is exactly one implementation.
+pub fn orthonormalize_column_against(prev: &[f32], col: &mut [f32]) -> bool {
+    use super::vecops;
+    let nrows = col.len();
+    assert!(nrows > 0, "orthonormalize_column_against: empty column");
+    assert_eq!(prev.len() % nrows, 0, "orthonormalize_column_against: ragged factor");
+    let k = prev.len() / nrows;
+    for j in 0..k {
+        let pj = &prev[j * nrows..(j + 1) * nrows];
+        let proj = vecops::dot(pj, col) as f32;
+        if proj != 0.0 {
+            vecops::axpy(-proj, pj, col);
+        }
+    }
+    let norm = vecops::dot(col, col).sqrt();
+    if norm > DEGENERATE_COL_NORM {
+        let inv = (1.0 / norm) as f32;
+        for v in col.iter_mut() {
+            *v *= inv;
+        }
+        true
+    } else {
+        col.fill(0.0);
+        false
+    }
+}
+
+/// In-place modified Gram–Schmidt over a **column-major f32 factor**:
+/// `a` holds `a.len() / nrows` columns of length `nrows` shoulder to
+/// shoulder. After the call the nonzero columns are orthonormal (f32
+/// storage, f64 accumulation) and any column that degenerates — zero
+/// input, or numerically inside the span of its predecessors — is zeroed
+/// exactly (callers that need a full basis reseed those columns; see
+/// [`crate::compression::LowRank`]).
+///
+/// Deterministic and allocation-free: this runs on the per-link hot path
+/// of the low-rank codecs, where it must neither allocate nor depend on
+/// anything but its input (the backend-equivalence suite pins the
+/// resulting trajectories bitwise).
+pub fn orthonormalize_columns(a: &mut [f32], nrows: usize) {
+    assert!(nrows > 0, "orthonormalize_columns: nrows must be positive");
+    assert_eq!(a.len() % nrows, 0, "orthonormalize_columns: ragged factor");
+    let ncols = a.len() / nrows;
+    for k in 0..ncols {
+        let (prev, rest) = a.split_at_mut(k * nrows);
+        orthonormalize_column_against(prev, &mut rest[..nrows]);
+    }
+}
+
 impl Index<(usize, usize)> for Mat {
     type Output = f64;
     #[inline]
@@ -189,5 +251,39 @@ mod tests {
     fn fro_norm_known() {
         let a = Mat::from_rows(&[&[3., 4.]]);
         assert!((a.fro_norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn orthonormalize_columns_produces_orthonormal_basis() {
+        // Three length-4 columns, column-major.
+        let mut a = vec![
+            1.0f32, 1.0, 0.0, 0.0, // col 0
+            1.0, 0.0, 1.0, 0.0, // col 1
+            0.0, 1.0, 0.0, 1.0, // col 2
+        ];
+        orthonormalize_columns(&mut a, 4);
+        for k in 0..3 {
+            for j in 0..=k {
+                let ck = &a[k * 4..(k + 1) * 4];
+                let cj = &a[j * 4..(j + 1) * 4];
+                let d = crate::linalg::vecops::dot(ck, cj);
+                let expect = if j == k { 1.0 } else { 0.0 };
+                assert!((d - expect).abs() < 1e-6, "cols {j},{k}: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn orthonormalize_columns_zeroes_dependent_columns() {
+        // Column 1 is 2× column 0 — linearly dependent, must zero out.
+        let mut a = vec![1.0f32, 2.0, 2.0, 4.0];
+        orthonormalize_columns(&mut a, 2);
+        let n0 = crate::linalg::vecops::norm2(&a[..2]);
+        assert!((n0 - 1.0).abs() < 1e-6);
+        assert_eq!(&a[2..], &[0.0, 0.0]);
+        // All-zero input stays zero.
+        let mut z = vec![0.0f32; 6];
+        orthonormalize_columns(&mut z, 3);
+        assert!(z.iter().all(|v| *v == 0.0));
     }
 }

@@ -6,6 +6,7 @@
 //!   spectra       print mixing-matrix spectral stats for a topology
 //!   fig1..fig4    regenerate a paper figure's table(s)
 //!   efsweep       error-feedback family under the bandwidth×latency grid
+//!   lowranksweep  PowerGossip rank×(bandwidth,latency) grid at n=64
 //!   ablations     run the theory-driven ablation sweeps
 //!   netmodel      print the per-iteration comm-time landscape
 //!   bench-summary collect the BENCH_*.json perf metrics
@@ -25,7 +26,7 @@ use decomp::algorithms::{self, RunOpts};
 use decomp::bench_harness::summary;
 use decomp::config::{apply_cli_overrides, load_config};
 use decomp::coordinator::{run_sim_trace, run_threaded, Backend, TrainConfig};
-use decomp::experiments::{ablations, ef_sweep, fig1, fig2, fig3, fig4};
+use decomp::experiments::{ablations, ef_sweep, fig1, fig2, fig3, fig4, lowrank_sweep};
 use decomp::metrics::{fmt_bytes, fmt_secs, Table};
 use decomp::network::cost::{CostModel, NetworkModel};
 use decomp::network::sim::SimOpts;
@@ -62,6 +63,7 @@ fn run() -> anyhow::Result<()> {
         "fig3" => print_tables(fig3::run(quick)),
         "fig4" => print_tables(fig4::run(quick)),
         "efsweep" => print_tables(ef_sweep::run(quick)),
+        "lowranksweep" => print_tables(lowrank_sweep::run(quick)),
         "ablations" => print_tables(ablations::run(quick)),
         "netmodel" => print_tables(fig3::run(false)),
         "bench-summary" => bench_summary(&args, quick),
@@ -83,19 +85,23 @@ COMMANDS
                   real message passing; sim: discrete-event engine with a
                   virtual clock — scales to n >= 64 and reports modeled time)
                 --algo dpsgd|dcd|ecd|naive|allreduce|choco|deepsqueeze
-                --compressor fp32|q8|q4|...|sparse_p25|topk_10|sign
+                --compressor fp32|q8|q4|...|sparse_p25|topk_10|sign|lowrank_rN
                 --eta F  (consensus step size for choco/deepsqueeze)
                 --nodes N --topology ring|full|chain|star|hypercube
                 --gamma F --iters N --model quadratic|linear|logistic|mlp
                 --bandwidth-mbps F --latency-ms F  (sim backend network condition)
                 --config file.json (CLI flags override file values)
-              note: biased compressors (topk_*, sign) are rejected for
-              dcd/ecd/qallreduce — only error-feedback algorithms admit them
+              note: biased compressors (topk_*, sign, lowrank_rN) are rejected
+              for dcd/ecd/qallreduce — only error-feedback algorithms admit
+              them; the stateful lowrank_rN family (warm-started per-link
+              PowerGossip state) is admitted by choco only
   simulate    same options, deterministic single-process reference simulator
   spectra     mixing-matrix spectral stats: --topology T --nodes N
   fig1..fig4  regenerate the paper figure tables (--quick for small runs)
   efsweep     DCD/ECD/CHOCO/DeepSqueeze under the bandwidth×latency grid
               at n=64 on the event engine (--quick for small runs)
+  lowranksweep  PowerGossip (choco+lowrank_rN) rank×condition grid at n=64,
+              dim 10000 (100×100 fold) — the extreme-compression regime
   ablations   compressor/topology/heterogeneity sweeps
   netmodel    per-iteration communication-time landscape
   bench-summary  collect perf metrics: [--quick] [--out BENCH_pr.json]

@@ -62,6 +62,12 @@ impl GradientModel for LinearRegression {
         self.shard.dim
     }
 
+    /// The weight vector has no matrix structure: fold near-square for
+    /// the low-rank codecs.
+    fn shape_manifest(&self) -> super::ShapeManifest {
+        super::ShapeManifest::folded(self.dim())
+    }
+
     fn stoch_grad(&mut self, x: &[f32], out: &mut [f32], rng: &mut Pcg64) -> f64 {
         out.fill(0.0);
         let m = self.shard.rows();
@@ -139,6 +145,12 @@ impl LogisticRegression {
 impl GradientModel for LogisticRegression {
     fn dim(&self) -> usize {
         self.shard.dim
+    }
+
+    /// The weight vector has no matrix structure: fold near-square for
+    /// the low-rank codecs.
+    fn shape_manifest(&self) -> super::ShapeManifest {
+        super::ShapeManifest::folded(self.dim())
     }
 
     fn stoch_grad(&mut self, x: &[f32], out: &mut [f32], rng: &mut Pcg64) -> f64 {

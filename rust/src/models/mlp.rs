@@ -129,6 +129,13 @@ impl GradientModel for Mlp {
         Self::param_dim(self.shard.dim, self.hidden, self.classes)
     }
 
+    /// The documented flat layout, now exposed as tensors:
+    /// `[W1 (h×d) | b1 | W2 (k×h) | b2]` — weight matrices factorize under
+    /// the low-rank codecs, biases ride full precision.
+    fn shape_manifest(&self) -> super::ShapeManifest {
+        super::ShapeManifest::mlp(self.shard.dim, self.hidden, self.classes)
+    }
+
     fn stoch_grad(&mut self, x: &[f32], out: &mut [f32], rng: &mut Pcg64) -> f64 {
         assert_eq!(x.len(), self.dim());
         out.fill(0.0);

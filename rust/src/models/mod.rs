@@ -11,10 +11,12 @@
 pub mod linear;
 mod mlp;
 mod quadratic;
+pub mod shapes;
 
 pub use linear::{LinearRegression, LogisticRegression, Shard};
 pub use mlp::Mlp;
 pub use quadratic::Quadratic;
+pub use shapes::{ShapeManifest, TensorShape, TensorView, TensorViewMut};
 
 use crate::util::rng::Pcg64;
 
@@ -23,6 +25,14 @@ use crate::util::rng::Pcg64;
 pub trait GradientModel: Send {
     /// Parameter dimension N.
     fn dim(&self) -> usize;
+
+    /// Tensor structure of the flat parameter vector — what the low-rank
+    /// link compressors factorize ([`ShapeManifest`]). Vector models fold
+    /// into a near-square matrix by default; structured models (the MLP)
+    /// override with their true layer layout.
+    fn shape_manifest(&self) -> ShapeManifest {
+        ShapeManifest::folded(self.dim())
+    }
 
     /// Sample a minibatch ξ and write ∇F_i(x; ξ) into `out`; returns the
     /// minibatch loss F_i(x; ξ).

@@ -59,6 +59,12 @@ impl GradientModel for Quadratic {
         self.center.len()
     }
 
+    /// No inherent matrix structure: the parameter vector folds into the
+    /// near-square matrix the low-rank codecs need.
+    fn shape_manifest(&self) -> super::ShapeManifest {
+        super::ShapeManifest::folded(self.dim())
+    }
+
     fn stoch_grad(&mut self, x: &[f32], out: &mut [f32], rng: &mut Pcg64) -> f64 {
         assert_eq!(x.len(), self.dim());
         for ((o, xi), ci) in out.iter_mut().zip(x).zip(&self.center) {

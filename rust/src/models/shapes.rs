@@ -1,0 +1,288 @@
+//! Tensor shape manifests: the bridge between the flat parameter vector
+//! x ∈ R^N that every algorithm and codec moves around and the *tensor*
+//! structure the model documents but never exposed — `[W1 (h×d) | b1 |
+//! W2 (k×h) | b2]` for the MLP, a near-square fold for the vector models.
+//!
+//! A [`ShapeManifest`] is a partition of `0..N` into row-major matrix and
+//! vector segments, in layout order. [`ShapeManifest::views`] hands back
+//! **zero-copy** slices into the flat buffer (pinned by a property test:
+//! `flatten(views(x)) == x`, pointer-identical, no copies), which is what
+//! lets the low-rank link compressors ([`crate::compression::LowRank`])
+//! run power iterations directly on the wire-bound vector.
+//!
+//! Vector models (quadratic, linear/logistic regression) get the
+//! [`ShapeManifest::folded`] manifest: the length-N vector reshaped
+//! row-major into the largest ⌊√N⌋ × (N / ⌊√N⌋) matrix, with the
+//! remainder as a trailing vector segment (sent full precision by the
+//! low-rank codec). This is the standard PowerGossip/PowerSGD treatment
+//! of non-matrix parameters.
+
+/// One segment of the flat parameter vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorShape {
+    /// A row-major `rows × cols` matrix.
+    Matrix { rows: usize, cols: usize },
+    /// A plain vector (biases, folding remainders).
+    Vector { len: usize },
+}
+
+impl TensorShape {
+    /// Flat elements this segment occupies.
+    pub fn len(&self) -> usize {
+        match *self {
+            TensorShape::Matrix { rows, cols } => rows * cols,
+            TensorShape::Vector { len } => len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A read-only zero-copy view of one segment.
+#[derive(Debug, Clone, Copy)]
+pub enum TensorView<'a> {
+    Matrix {
+        /// Row-major `rows × cols` data, a direct slice of the flat vector.
+        data: &'a [f32],
+        rows: usize,
+        cols: usize,
+    },
+    Vector { data: &'a [f32] },
+}
+
+impl<'a> TensorView<'a> {
+    /// The underlying flat slice (row-major for matrices).
+    pub fn data(&self) -> &'a [f32] {
+        match self {
+            TensorView::Matrix { data, .. } => data,
+            TensorView::Vector { data } => data,
+        }
+    }
+}
+
+/// A mutable zero-copy view of one segment.
+#[derive(Debug)]
+pub enum TensorViewMut<'a> {
+    Matrix {
+        data: &'a mut [f32],
+        rows: usize,
+        cols: usize,
+    },
+    Vector { data: &'a mut [f32] },
+}
+
+/// Ordered partition of a flat parameter vector into tensor segments.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShapeManifest {
+    pub tensors: Vec<TensorShape>,
+}
+
+/// ⌊√n⌋ without float-rounding surprises.
+fn isqrt(n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let mut r = (n as f64).sqrt() as usize;
+    while (r + 1) * (r + 1) <= n {
+        r += 1;
+    }
+    while r * r > n {
+        r -= 1;
+    }
+    r
+}
+
+impl ShapeManifest {
+    /// A single vector segment — the trivial manifest (no matrix
+    /// structure; low-rank codecs pass it through full precision).
+    pub fn flat(len: usize) -> ShapeManifest {
+        ShapeManifest {
+            tensors: vec![TensorShape::Vector { len }],
+        }
+    }
+
+    /// Fold a length-`len` vector into the largest near-square row-major
+    /// matrix `⌊√len⌋ × (len / ⌊√len⌋)`, with the division remainder as a
+    /// trailing full-precision vector. `folded(0)` is the empty manifest.
+    pub fn folded(len: usize) -> ShapeManifest {
+        let rows = isqrt(len);
+        if rows == 0 {
+            return ShapeManifest { tensors: Vec::new() };
+        }
+        let cols = len / rows;
+        let tail = len - rows * cols;
+        let mut tensors = vec![TensorShape::Matrix { rows, cols }];
+        if tail > 0 {
+            tensors.push(TensorShape::Vector { len: tail });
+        }
+        ShapeManifest { tensors }
+    }
+
+    /// The one-hidden-layer MLP layout ([`crate::models::Mlp`]):
+    /// `[W1 (h×d) | b1 (h) | W2 (k×h) | b2 (k)]`, all row-major.
+    pub fn mlp(d: usize, h: usize, k: usize) -> ShapeManifest {
+        ShapeManifest {
+            tensors: vec![
+                TensorShape::Matrix { rows: h, cols: d },
+                TensorShape::Vector { len: h },
+                TensorShape::Matrix { rows: k, cols: h },
+                TensorShape::Vector { len: k },
+            ],
+        }
+    }
+
+    /// Total flat length covered by the manifest.
+    pub fn total_len(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// `(offset, shape)` per segment, in layout order.
+    pub fn segments(&self) -> Vec<(usize, TensorShape)> {
+        let mut out = Vec::with_capacity(self.tensors.len());
+        let mut off = 0;
+        for &t in &self.tensors {
+            out.push((off, t));
+            off += t.len();
+        }
+        out
+    }
+
+    /// Zero-copy views over `x` (one slice per segment, in order; the
+    /// concatenation of the views *is* `x`). Panics when `x.len()` does
+    /// not match [`ShapeManifest::total_len`].
+    pub fn views<'a>(&self, x: &'a [f32]) -> Vec<TensorView<'a>> {
+        assert_eq!(x.len(), self.total_len(), "manifest/vector length mismatch");
+        let mut out = Vec::with_capacity(self.tensors.len());
+        let mut off = 0;
+        for &t in &self.tensors {
+            let data = &x[off..off + t.len()];
+            off += t.len();
+            out.push(match t {
+                TensorShape::Matrix { rows, cols } => TensorView::Matrix { data, rows, cols },
+                TensorShape::Vector { .. } => TensorView::Vector { data },
+            });
+        }
+        out
+    }
+
+    /// Mutable zero-copy views over `x` (disjoint via `split_at_mut`).
+    pub fn views_mut<'a>(&self, x: &'a mut [f32]) -> Vec<TensorViewMut<'a>> {
+        assert_eq!(x.len(), self.total_len(), "manifest/vector length mismatch");
+        let mut out = Vec::with_capacity(self.tensors.len());
+        let mut rest = x;
+        for &t in &self.tensors {
+            let (data, tail) = rest.split_at_mut(t.len());
+            rest = tail;
+            out.push(match t {
+                TensorShape::Matrix { rows, cols } => TensorViewMut::Matrix { data, rows, cols },
+                TensorShape::Vector { .. } => TensorViewMut::Vector { data },
+            });
+        }
+        out
+    }
+
+    /// f32 elements a rank-`rank` factorization of this manifest ships:
+    /// each matrix contributes `r_eff·(rows + cols)` (the P̂ and Q
+    /// factors, `r_eff = min(rank, rows, cols)`); vector segments ride
+    /// full precision. This is the exact element count behind
+    /// [`crate::compression::LowRank`]'s `wire_bytes`.
+    pub fn lowrank_floats(&self, rank: usize) -> usize {
+        self.tensors
+            .iter()
+            .map(|t| match *t {
+                TensorShape::Matrix { rows, cols } => {
+                    let r_eff = rank.min(rows).min(cols);
+                    r_eff * (rows + cols)
+                }
+                TensorShape::Vector { len } => len,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isqrt_exact_on_squares_and_neighbors() {
+        for n in [0usize, 1, 2, 3, 4, 8, 9, 15, 16, 17, 1023, 1024, 1025, 16384] {
+            let r = isqrt(n);
+            assert!(r * r <= n, "isqrt({n}) = {r}");
+            assert!((r + 1) * (r + 1) > n, "isqrt({n}) = {r}");
+        }
+    }
+
+    #[test]
+    fn folded_covers_exactly_with_tail() {
+        for len in [1usize, 7, 64, 128, 1024, 16384] {
+            let m = ShapeManifest::folded(len);
+            assert_eq!(m.total_len(), len, "folded({len})");
+            match m.tensors[0] {
+                TensorShape::Matrix { rows, cols } => {
+                    assert_eq!(rows, isqrt(len));
+                    assert_eq!(cols, len / rows);
+                }
+                _ => panic!("folded manifest must lead with a matrix"),
+            }
+        }
+        // 128 = 11×11 + 7-tail; 1024 and 16384 fold square with no tail.
+        assert_eq!(ShapeManifest::folded(128).tensors.len(), 2);
+        assert_eq!(ShapeManifest::folded(1024).tensors.len(), 1);
+        assert_eq!(ShapeManifest::folded(16384).tensors.len(), 1);
+    }
+
+    #[test]
+    fn mlp_manifest_matches_param_dim() {
+        let (d, h, k) = (17, 32, 4);
+        let m = ShapeManifest::mlp(d, h, k);
+        assert_eq!(m.total_len(), crate::models::Mlp::param_dim(d, h, k));
+        assert_eq!(m.tensors.len(), 4);
+    }
+
+    #[test]
+    fn views_are_zero_copy_and_cover_in_order() {
+        let m = ShapeManifest::mlp(3, 4, 2);
+        let x: Vec<f32> = (0..m.total_len()).map(|i| i as f32).collect();
+        let views = m.views(&x);
+        let mut off = 0;
+        for v in &views {
+            let data = v.data();
+            // Pointer identity: the view *is* the flat buffer's memory.
+            assert!(std::ptr::eq(data.as_ptr(), x[off..].as_ptr()));
+            off += data.len();
+        }
+        assert_eq!(off, x.len());
+    }
+
+    #[test]
+    fn views_mut_cover_disjointly() {
+        let m = ShapeManifest::folded(67); // 8×8 matrix + 3-tail
+        let mut x = vec![0.0f32; 67];
+        for (i, v) in m.views_mut(&mut x).into_iter().enumerate() {
+            match v {
+                TensorViewMut::Matrix { data, .. } | TensorViewMut::Vector { data } => {
+                    data.fill(i as f32 + 1.0);
+                }
+            }
+        }
+        assert!(x[..64].iter().all(|v| *v == 1.0));
+        assert!(x[64..].iter().all(|v| *v == 2.0));
+    }
+
+    #[test]
+    fn lowrank_floats_closed_form() {
+        // 32×32 fold at rank 4: 4·(32+32) = 256 floats of 1024 — 25%.
+        assert_eq!(ShapeManifest::folded(1024).lowrank_floats(4), 256);
+        // 128×128 fold at rank 4: 4·256 = 1024 floats of 16384 — 6.25%.
+        assert_eq!(ShapeManifest::folded(16384).lowrank_floats(4), 1024);
+        // Rank clamps at min(rows, cols); tails ride full precision.
+        let m = ShapeManifest::folded(67); // 8×8 + 3
+        assert_eq!(m.lowrank_floats(100), 8 * (8 + 8) + 3);
+        // MLP: biases full precision.
+        let mlp = ShapeManifest::mlp(64, 32, 4);
+        assert_eq!(mlp.lowrank_floats(2), 2 * (32 + 64) + 32 + 2 * (4 + 32) + 4);
+    }
+}

@@ -1,14 +1,18 @@
 //! The zero-allocation contract of the simulation hot path.
 //!
 //! `SimEngine::step` must perform **zero heap allocations after warm-up**
-//! for the `dpsgd_fp32@n64` configuration (the fig3/bench sweep cell):
+//! for the `dpsgd_fp32@n64` configuration (the fig3/bench sweep cell)
+//! and for `choco_lowrank_r4@n64` (the link-state compressor family —
+//! its power-iteration factors and decode scratch are sized once at link
+//! build, and factor payloads cycle through the `Outbox` wire pool):
 //! every per-phase structure — arrival heap, flat delivery slots, frame
 //! shells, wire payload buffers, expects/absorb scratch — is persistent
 //! and pooled, so steady-state iterations only move bytes.
 //!
 //! Asserted with a counting `#[global_allocator]` wrapped around the
-//! system allocator. This file intentionally contains a single test:
-//! a concurrently running test would pollute the global counter.
+//! system allocator. This file intentionally contains a single test
+//! (phases run sequentially inside it): a concurrently running test
+//! would pollute the global counter.
 
 use decomp::algorithms::AlgoConfig;
 use decomp::compression;
@@ -53,11 +57,11 @@ fn alloc_count() -> u64 {
     ALLOCS.load(Ordering::SeqCst)
 }
 
-#[test]
-fn sim_step_allocates_nothing_after_warmup_for_dpsgd_fp32_n64() {
-    // The dpsgd_fp32@n64 sweep cell: 64-ring, dim-1024 quadratic shards,
-    // worst §5.2 network condition — the same shape the fig3 measured
-    // sweep and the `sim_virtual_s_per_iter` bench group run.
+/// Build the `@n64` sweep-cell shape (64-ring, dim-1024 quadratic
+/// shards, worst §5.2 condition) for one algorithm × compressor, run it
+/// to steady state, and return the allocation delta across the
+/// post-warm-up iterations.
+fn steady_state_allocs(algo: &str, compressor: &str) -> u64 {
     let n = 64;
     let iters = 25usize;
     let spec = SynthSpec {
@@ -67,17 +71,19 @@ fn sim_step_allocates_nothing_after_warmup_for_dpsgd_fp32_n64() {
         ..Default::default()
     };
     let (models, x0) = build_models(&ModelKind::Quadratic { spread: 1.0, noise: 0.1 }, &spec);
+    let (comp, link) = compression::resolve_name(compressor).expect("compressor");
     let cfg = AlgoConfig {
         mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n))),
-        compressor: Arc::from(compression::from_name("fp32").expect("compressor")),
+        compressor: comp,
         seed: 0xf163,
-        eta: 1.0,
+        eta: if algo == "choco" { 0.4 } else { 1.0 },
+        link,
     };
     let mut programs: Vec<Box<dyn NodeProgram>> = models
         .into_iter()
         .enumerate()
         .map(|(node, model)| {
-            build_program("dpsgd", &cfg, node, model, &x0, 0.05, iters).expect("program")
+            build_program(algo, &cfg, node, model, &x0, 0.05, iters).expect("program")
         })
         .collect();
     let mut engine = SimEngine::new(
@@ -99,11 +105,6 @@ fn sim_step_allocates_nothing_after_warmup_for_dpsgd_fp32_n64() {
         engine.step(&mut programs, t);
     }
     let during = alloc_count() - before;
-    assert_eq!(
-        during, 0,
-        "SimEngine::step allocated {during} time(s) in steady state \
-         (expected zero after warm-up for dpsgd_fp32@n64)"
-    );
 
     // Sanity: the run actually did work (payloads moved, clock advanced).
     assert!(engine.clock().payload_bytes > 0);
@@ -113,4 +114,30 @@ fn sim_step_allocates_nothing_after_warmup_for_dpsgd_fp32_n64() {
     for r in &run.reports {
         assert_eq!(r.losses.len(), iters);
     }
+    during
+}
+
+#[test]
+fn sim_step_allocates_nothing_after_warmup_at_n64() {
+    // Phases run sequentially inside one test: a concurrently running
+    // test would pollute the global allocation counter.
+    //
+    // dpsgd_fp32@n64 — the fig3/bench sweep cell, pinned since PR 3.
+    let d = steady_state_allocs("dpsgd", "fp32");
+    assert_eq!(
+        d, 0,
+        "SimEngine::step allocated {d} time(s) in steady state \
+         (expected zero after warm-up for dpsgd_fp32@n64)"
+    );
+    // choco_lowrank_r4@n64 — the link-state family: power-iteration
+    // factors, decode scratch, and the warm-started Q all live in
+    // per-link state sized at build, and factor payloads cycle through
+    // the Outbox wire pool, so the steady-state contract extends to the
+    // strongest compressor in the tree.
+    let c = steady_state_allocs("choco", "lowrank_r4");
+    assert_eq!(
+        c, 0,
+        "SimEngine::step allocated {c} time(s) in steady state \
+         (expected zero after warm-up for choco_lowrank_r4@n64)"
+    );
 }

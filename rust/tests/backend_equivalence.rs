@@ -34,11 +34,13 @@ fn setup(
     let kind = ModelKind::Logistic { batch: 4 };
     let (m1, x0) = build_models(&kind, &spec);
     let (m2, _) = build_models(&kind, &spec);
+    let (comp, link) = compression::resolve_name(compressor).unwrap();
     let cfg = AlgoConfig {
         mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n))),
-        compressor: Arc::from(compression::from_name(compressor).unwrap()),
+        compressor: comp,
         seed,
         eta: 1.0,
+        link,
     };
     (cfg, m1, m2, x0)
 }
@@ -49,6 +51,7 @@ fn clone_cfg(cfg: &AlgoConfig) -> AlgoConfig {
         compressor: cfg.compressor.clone(),
         seed: cfg.seed,
         eta: cfg.eta,
+        link: cfg.link.clone(),
     }
 }
 
@@ -172,12 +175,27 @@ fn deepsqueeze_sign_sim_bitwise_equals_threads() {
 }
 
 #[test]
+fn choco_lowrank_r2_sim_bitwise_equals_threads() {
+    // The link-state family: warm-started per-link power-iteration state
+    // must evolve identically on both backends (one compress per node
+    // per iteration, executor-independent).
+    assert_backends_bitwise("choco", "lowrank_r2");
+}
+
+#[test]
+fn choco_lowrank_r4_sim_bitwise_equals_threads() {
+    assert_backends_bitwise("choco", "lowrank_r4");
+}
+
+#[test]
 fn fig3_sweep_runs_at_n64_on_sim_backend() {
     // The fig3 network sweep at 64 nodes, executed (not closed-formed) on
-    // the event engine — now including the error-feedback family.
+    // the event engine — now including the error-feedback family and the
+    // low-rank link family.
     let pts = fig3::sim_sweep_points(&[64], 3, NetworkModel::new(5e6, 5e-3));
-    // dpsgd_fp32, dcd_q8, ecd_q8, choco_sign, deepsqueeze_topk_25.
-    assert_eq!(pts.len(), 5);
+    // dpsgd_fp32, dcd_q8, ecd_q8, choco_sign, choco_lowrank_r4,
+    // deepsqueeze_topk_25.
+    assert_eq!(pts.len(), 6);
     for p in &pts {
         assert_eq!(p.n, 64);
         assert!(p.virtual_s_per_iter.is_finite() && p.virtual_s_per_iter > 0.0);
@@ -221,6 +239,41 @@ fn ef_sweep_biased_compressors_converge_at_n64() {
         let l = loss(name);
         assert!(l.is_finite() && l <= 1.10 * base + 1e-9, "{name}: {l} vs {base}");
     }
+}
+
+#[test]
+fn choco_lowrank_r4_within_10pct_of_dpsgd_at_10pct_wire() {
+    // The low-rank acceptance bar, in the same harness shape as the PR 2
+    // EF pins (n = 64 ring, sim backend, worst §5.2 condition, final
+    // loss within 10% of dpsgd_fp32) — run at the lowranksweep workload
+    // (dim 10000 → 100×100 fold), the regime where rank-4 factors are an
+    // extreme compression.
+    use decomp::experiments::lowrank_sweep;
+    let rows = lowrank_sweep::acceptance_rows(100);
+    assert_eq!(rows.len(), 2);
+    let (fp, lr) = (&rows[0], &rows[1]);
+    assert_eq!(fp.algo, "dpsgd_fp32");
+    assert_eq!(lr.algo, "choco_lowrank_r4");
+    assert!(lr.final_loss.is_finite(), "lowrank diverged");
+    assert!(
+        lr.final_loss <= 1.10 * fp.final_loss + 1e-9,
+        "choco_lowrank_r4 {} vs dpsgd_fp32 {}",
+        lr.final_loss,
+        fp.final_loss
+    );
+    assert!(
+        lr.final_loss < lr.init_loss,
+        "choco_lowrank_r4 should improve: {} vs init {}",
+        lr.final_loss,
+        lr.init_loss
+    );
+    // Wire economy: rank-4 factors over the 100×100 fold are 8% of the
+    // fp32 payload — the ≤10% acceptance bound with real margin.
+    let ratio = lr.payload_bytes as f64 / fp.payload_bytes as f64;
+    assert!(ratio <= 0.10, "lowrank payload ratio {ratio} above 10%");
+    assert!(ratio > 0.0, "lowrank payload must be accounted");
+    // And the measured virtual clock reflects it.
+    assert!(lr.virtual_s < fp.virtual_s, "lowrank must be faster under Worst");
 }
 
 #[test]

@@ -36,11 +36,13 @@ fn setup(
     let kind = ModelKind::Linear { batch: 4 };
     let (m1, x0) = build_models(&kind, &spec);
     let (m2, _) = build_models(&kind, &spec);
+    let (comp, link) = compression::resolve_name(compressor).unwrap();
     let cfg = AlgoConfig {
         mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n))),
-        compressor: Arc::from(compression::from_name(compressor).unwrap()),
+        compressor: comp,
         seed,
         eta: 1.0,
+        link,
     };
     (cfg, m1, m2, x0)
 }
@@ -51,6 +53,7 @@ fn clone_cfg(cfg: &AlgoConfig) -> AlgoConfig {
         compressor: cfg.compressor.clone(),
         seed: cfg.seed,
         eta: cfg.eta,
+        link: cfg.link.clone(),
     }
 }
 
@@ -137,6 +140,15 @@ fn deepsqueeze_threaded_bitwise_equals_simulator() {
 #[test]
 fn deepsqueeze_topk_threaded_bitwise_equals_simulator() {
     assert_bitwise("deepsqueeze", "topk_25");
+}
+
+#[test]
+fn choco_lowrank_threaded_bitwise_equals_simulator() {
+    // The link-state family closes the triangle: reference ≡ threads
+    // (backend_equivalence pins threads ≡ sim), warm-started per-link
+    // power-iteration state included.
+    assert_bitwise("choco", "lowrank_r2");
+    assert_bitwise("choco", "lowrank_r4");
 }
 
 #[test]

@@ -135,6 +135,47 @@ fn trace_driver_reports_monotone_bytes_and_time() {
     }
 }
 
+#[test]
+fn choco_lowrank_trains_through_public_config() {
+    // The link-state compressor family end to end on the threaded
+    // backend: TrainConfig string → link spec → per-node warm-started
+    // state → real wire messages.
+    let cfg = TrainConfig {
+        algo: "choco".into(),
+        compressor: "lowrank_r2".into(),
+        eta: 0.4,
+        n_nodes: 6,
+        iters: 200,
+        gamma: 0.05,
+        dim: 32,
+        rows_per_node: 64,
+        ..Default::default()
+    };
+    let (init, fin) = run_cfg(&cfg).unwrap();
+    assert!(fin < init, "choco+lowrank should train: {init} -> {fin}");
+}
+
+#[test]
+fn lowrank_rejected_outside_choco_with_clear_error() {
+    // Biased AND stateful: dcd/ecd/qallreduce trip the unbiasedness gate,
+    // everything else trips the link-state gate — never a silent
+    // fallback to the inert placeholder codec.
+    for algo in ["dcd", "ecd", "qallreduce", "dpsgd", "naive", "deepsqueeze"] {
+        let cfg = TrainConfig {
+            algo: algo.into(),
+            compressor: "lowrank_r4".into(),
+            eta: 0.5,
+            ..Default::default()
+        };
+        let err = cfg.build_algo_config().unwrap_err().to_string();
+        assert!(
+            err.contains("biased") || err.contains("link-state"),
+            "{algo}: unexpected error '{err}'"
+        );
+        assert!(err.contains("lowrank_r4"), "{algo}: error must name the compressor: '{err}'");
+    }
+}
+
 // ---------------------------------------------------------------------
 // Failure injection: bad configs fail loudly, never silently.
 
