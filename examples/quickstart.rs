@@ -4,7 +4,7 @@
 //!   cargo run --release --example quickstart
 //!
 //! 8 workers on a ring, heterogeneous logistic-regression shards (the
-//! CIFAR substitute — see DESIGN.md §4), 500 synchronous iterations.
+//! CIFAR substitute — see DESIGN.md §5), 500 synchronous iterations.
 //! Expected output: DCD/ECD at 8 bits match full-precision convergence
 //! while sending ~4x fewer bytes; the naive scheme stalls; CHOCO with the
 //! biased 1-bit sign compressor still tracks full precision at ~1/32 the

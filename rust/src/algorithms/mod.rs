@@ -137,7 +137,10 @@ impl NodeStates {
     }
 }
 
-/// Everything an algorithm needs at construction time.
+/// Everything an algorithm needs at construction time. Cloneable (the
+/// fields are `Arc`-backed or `Copy`), so a validated config can fan out
+/// to several backends.
+#[derive(Clone)]
 pub struct AlgoConfig {
     pub mixing: Arc<MixingMatrix>,
     pub compressor: Arc<dyn Compressor>,
@@ -200,44 +203,38 @@ impl AlgoConfig {
     }
 }
 
-/// Build an algorithm by name: `dpsgd`, `dcd`, `ecd`, `naive`,
-/// `allreduce`, `qallreduce`, `choco`, `deepsqueeze`.
+/// Build an algorithm by name via the spec registry (`dpsgd`, `dcd`,
+/// `ecd`, `naive`, `allreduce`, `qallreduce`, `choco`, `deepsqueeze`).
 ///
-/// Returns `None` for unknown names **and** for a link-state compressor
-/// spec paired with an algorithm that has no link code path (only
-/// CHOCO-SGD does) — the reference backend must fail loudly like the
-/// program builders do, never silently train on the inert stateless
-/// placeholder.
+/// Returns `None` for unregistered names **and** for a link-state
+/// compressor spec paired with an algorithm whose capabilities lack a
+/// link code path (only CHOCO-SGD has one) — the reference backend must
+/// fail loudly like the program builders do, never silently train on the
+/// inert stateless placeholder.
 pub fn from_name(
     name: &str,
     cfg: AlgoConfig,
     x0: &[f32],
     n_nodes: usize,
 ) -> Option<Box<dyn Algorithm>> {
-    if cfg.link.is_some() && !matches!(name, "choco" | "chocosgd") {
+    let algo: crate::spec::AlgoSpec = name.parse().ok()?;
+    if cfg.link.is_some() && !algo.caps().accepts_link_state {
         return None;
     }
-    match name {
-        "dpsgd" => Some(Box::new(DPsgd::new(cfg, x0, n_nodes))),
-        "dcd" => Some(Box::new(DcdPsgd::new(cfg, x0, n_nodes))),
-        "ecd" => Some(Box::new(EcdPsgd::new(cfg, x0, n_nodes))),
-        "naive" => Some(Box::new(NaiveCompressedDPsgd::new(cfg, x0, n_nodes))),
-        "allreduce" => Some(Box::new(CentralizedSgd::new(cfg, x0, n_nodes))),
-        "qallreduce" => Some(Box::new(QuantizedCentralizedSgd::new(cfg, x0, n_nodes))),
-        "choco" | "chocosgd" => Some(Box::new(ChocoSgd::new(cfg, x0, n_nodes))),
-        "deepsqueeze" => Some(Box::new(DeepSqueeze::new(cfg, x0, n_nodes))),
-        _ => None,
-    }
+    Some((algo.entry().make_reference)(cfg, x0, n_nodes))
 }
 
 /// Whether `algo_name` is sound only under an *unbiased* compressor
-/// (Assumption 1.5). The driver rejects biased compressors (top-k, sign)
-/// for these — a biased C silently corrupts the updates (for DCD/ECD it
+/// (Assumption 1.5) — the `needs_unbiased` capability flag from the spec
+/// registry. A biased C silently corrupts the updates (for DCD/ECD it
 /// reproduces the Fig. 1 divergence; for QSGD-style allreduce it biases
 /// the averaged gradient with no error feedback to repair it) — while the
 /// error-feedback family (`choco`, `deepsqueeze`) accepts them.
 pub fn requires_unbiased_compressor(algo_name: &str) -> bool {
-    matches!(algo_name, "dcd" | "ecd" | "qallreduce")
+    algo_name
+        .parse::<crate::spec::AlgoSpec>()
+        .map(|a| a.caps().needs_unbiased)
+        .unwrap_or(false)
 }
 
 #[cfg(test)]

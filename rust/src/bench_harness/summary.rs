@@ -25,16 +25,13 @@
 //!   condition. Also deterministic (virtual clock): enforced, and
 //!   sensitive to wire-format or engine-accounting regressions.
 
-use crate::algorithms::{self, AlgoConfig};
-use crate::compression;
 use crate::data::build_models;
 use crate::experiments::{convergence_spec, ef_sweep, fig3};
 use crate::metrics::Table;
 use crate::network::cost::NetCondition;
-use crate::topology::{Graph, MixingMatrix, Topology};
+use crate::spec::{ExperimentSpec, TopologySpec};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
-use std::sync::Arc;
 
 /// A collected (or parsed) bench report: group → metric → value.
 pub struct BenchReport {
@@ -79,15 +76,18 @@ fn collect_with(quick: bool, host_sweep: bool) -> BenchReport {
     };
     for (algo, comp, eta) in ef_sweep::FAMILY {
         let (mut models, x0) = build_models(&kind, &spec);
-        let (compressor, link) = compression::resolve_name(comp).expect("compressor");
-        let cfg = AlgoConfig {
-            mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, 8))),
-            compressor,
+        let exp = ExperimentSpec {
+            algo: algo.parse().unwrap_or_else(|e| panic!("{e}")),
+            compressor: comp.parse().unwrap_or_else(|e| panic!("{e}")),
+            topology: TopologySpec::Ring,
+            n_nodes: 8,
             seed: 0xbe7c,
             eta,
-            link,
         };
-        let mut a = algorithms::from_name(algo, cfg, &x0, 8).expect("algorithm");
+        let mut a = exp
+            .session()
+            .unwrap_or_else(|e| panic!("{e}"))
+            .reference(&x0, 8);
         let m = super::time_fn(algo, opts, || {
             for _ in 0..steps_per_run {
                 a.step(&mut models, 0.05);

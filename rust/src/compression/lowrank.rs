@@ -63,13 +63,11 @@ impl LowRankSpec {
     }
 }
 
-/// Parse `lowrank_rN` (N >= 1) into a spec.
+/// Parse `lowrank_rN` (N >= 1) into a spec. Delegates to the typed spec
+/// layer so the `lowrank_rN` grammar lives in exactly one parser
+/// ([`crate::spec::CompressorSpec`]); non-link-state names return `None`.
 pub fn spec_from_name(name: &str) -> Option<Arc<dyn LinkCompressorSpec>> {
-    let rank = name.strip_prefix("lowrank_r")?.parse::<usize>().ok()?;
-    if rank == 0 {
-        return None;
-    }
-    Some(Arc::new(LowRankSpec::new(rank)))
+    name.parse::<crate::spec::CompressorSpec>().ok()?.link_spec()
 }
 
 impl LinkCompressorSpec for LowRankSpec {

@@ -122,29 +122,15 @@ impl Compressor for Identity {
     }
 }
 
-/// Build a compressor from its config name: `fp32`, `q8`, `q4`, `q2`,
-/// `q1`, `sparse_p25` (keep 25%), `topk_10` (keep top 10%, biased),
-/// `sign` (1 bit + scale, biased).
+/// Build a *stateless* compressor from its config name (`fp32`, `q8`,
+/// `q4`, …, `sparse_p25`, `topk_10`, `sign`). Parsing goes through the
+/// typed spec layer ([`crate::spec::CompressorSpec`]) — this is a thin
+/// string-keyed wrapper; link-state names (`lowrank_rN`) return `None`
+/// because they are not stateless codecs.
 pub fn from_name(name: &str) -> Option<Box<dyn Compressor>> {
-    if name == "fp32" || name == "identity" {
-        return Some(Box::new(Identity));
-    }
-    if name == "sign" {
-        return Some(Box::new(SignCompressor));
-    }
-    if let Some(bits) = name.strip_prefix('q').and_then(|b| b.parse::<u8>().ok()) {
-        return Some(Box::new(StochasticQuantizer::new(bits)));
-    }
-    if let Some(pct) = name
-        .strip_prefix("sparse_p")
-        .and_then(|p| p.parse::<u8>().ok())
-    {
-        return Some(Box::new(RandomSparsifier::new(pct as f64 / 100.0)));
-    }
-    if let Some(pct) = name.strip_prefix("topk_").and_then(|p| p.parse::<u8>().ok()) {
-        return Some(Box::new(TopK::new(pct as f64 / 100.0)));
-    }
-    None
+    name.parse::<crate::spec::CompressorSpec>()
+        .ok()?
+        .build_stateless()
 }
 
 /// Resolve a compressor spec name into the pair an
@@ -152,16 +138,12 @@ pub fn from_name(name: &str) -> Option<Box<dyn Compressor>> {
 /// name yields `(codec, None)`; a link-state family (`lowrank_rN`) yields
 /// `(Identity, Some(spec))` — the `Identity` placeholder is never used on
 /// a link-compressed path (programs route through the spec), it only
-/// keeps the stateless field total.
+/// keeps the stateless field total. Thin wrapper over
+/// [`crate::spec::CompressorSpec::resolve`].
 pub fn resolve_name(
     name: &str,
 ) -> Option<(Arc<dyn Compressor>, Option<Arc<dyn LinkCompressorSpec>>)> {
-    if let Some(spec) = lowrank_spec_from_name(name) {
-        let placeholder: Arc<dyn Compressor> = Arc::new(Identity);
-        return Some((placeholder, Some(spec)));
-    }
-    let c = from_name(name)?;
-    Some((Arc::from(c), None))
+    Some(name.parse::<crate::spec::CompressorSpec>().ok()?.resolve())
 }
 
 #[cfg(test)]

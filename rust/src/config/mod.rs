@@ -1,8 +1,14 @@
 //! Config-file loading: `TrainConfig` from a JSON file with CLI
 //! overrides. (The offline environment has no serde, so this maps fields
 //! explicitly through [`crate::util::json::Json`].)
+//!
+//! The spec-shaped keys (`algo`, `compressor`, `topology`) parse through
+//! the typed spec layer at load time — a typo'd value fails *here* with
+//! the registered-name list, not deep inside a run — and are stored in
+//! canonical form (`chocosgd` → `choco`, `full` → `fully_connected`).
 
 use crate::coordinator::TrainConfig;
+use crate::spec::{AlgoSpec, CompressorSpec, TopologySpec};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use std::path::Path;
@@ -18,10 +24,10 @@ pub fn load_config(path: &Path) -> anyhow::Result<TrainConfig> {
     let mut cfg = TrainConfig::default();
     for (k, v) in obj {
         match k.as_str() {
-            "algo" => cfg.algo = req_str(v, k)?,
+            "algo" => cfg.algo = req_spec::<AlgoSpec>(v, k)?,
             "n_nodes" => cfg.n_nodes = req_usize(v, k)?,
-            "topology" => cfg.topology = req_str(v, k)?,
-            "compressor" => cfg.compressor = req_str(v, k)?,
+            "topology" => cfg.topology = req_spec::<TopologySpec>(v, k)?,
+            "compressor" => cfg.compressor = req_spec::<CompressorSpec>(v, k)?,
             "gamma" => cfg.gamma = req_f64(v, k)? as f32,
             "iters" => cfg.iters = req_usize(v, k)?,
             "eval_every" => cfg.eval_every = req_usize(v, k)?,
@@ -72,6 +78,20 @@ fn req_str(v: &Json, key: &str) -> anyhow::Result<String> {
     v.as_str()
         .map(|s| s.to_string())
         .ok_or_else(|| anyhow::anyhow!("config key '{key}' must be a string"))
+}
+
+/// Parse a string key through a typed spec and store its canonical
+/// `Display` form; the error names the key and lists the registered
+/// names.
+fn req_spec<T>(v: &Json, key: &str) -> anyhow::Result<String>
+where
+    T: std::str::FromStr<Err = crate::spec::SpecParseError> + std::fmt::Display,
+{
+    let s = req_str(v, key)?;
+    let spec: T = s
+        .parse()
+        .map_err(|e| anyhow::anyhow!("config key '{key}': {e}"))?;
+    Ok(spec.to_string())
 }
 
 fn req_usize(v: &Json, key: &str) -> anyhow::Result<usize> {
@@ -135,6 +155,28 @@ mod tests {
     fn wrong_type_rejected() {
         let p = write_tmp("type.json", r#"{"n_nodes":"eight"}"#);
         assert!(load_config(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn spec_keys_validate_and_canonicalize_at_load() {
+        // A typo'd spec value fails at load time with the registered list.
+        let p = write_tmp("badalgo.json", r#"{"algo":"sgd9000"}"#);
+        let err = load_config(&p).unwrap_err().to_string();
+        assert!(err.contains("registered") && err.contains("dpsgd"), "{err}");
+        std::fs::remove_file(p).ok();
+        let p = write_tmp("badcomp.json", r#"{"compressor":"zstd"}"#);
+        assert!(load_config(&p).is_err());
+        std::fs::remove_file(p).ok();
+        // Aliases canonicalize; parameterized topologies parse.
+        let p = write_tmp(
+            "canon.json",
+            r#"{"algo":"chocosgd","compressor":"identity","topology":"torus_3x4","eta":0.4}"#,
+        );
+        let cfg = load_config(&p).unwrap();
+        assert_eq!(cfg.algo, "choco");
+        assert_eq!(cfg.compressor, "fp32");
+        assert_eq!(cfg.topology, "torus_3x4");
         std::fs::remove_file(p).ok();
     }
 

@@ -26,13 +26,14 @@ pub mod program;
 mod worker;
 
 pub use worker::{run_threaded, ThreadedRun, WorkerReport};
+pub(crate) use worker::run_threaded_entry;
 
 use crate::algorithms::{consensus_distance, AlgoConfig, RunOpts, TracePoint, TrainTrace};
-use crate::compression;
 use crate::data::{build_models, ModelKind, SynthSpec};
 use crate::models::GradientModel;
 use crate::network::sim::{NodeProgram, SimEngine, SimOpts, SimRun};
-use crate::topology::{Graph, MixingMatrix, Topology};
+use crate::spec::{AlgoEntry, AlgoSpec, ExperimentSpec};
+use crate::topology::{MixingMatrix, Topology};
 use std::sync::Arc;
 
 /// Which executor runs a training job.
@@ -113,45 +114,34 @@ impl TrainConfig {
             .ok_or_else(|| anyhow::anyhow!("unknown backend '{}' (threads|sim)", self.backend))
     }
 
+    /// Parse the topology key via the spec layer — a *total* inverse of
+    /// `Topology::name()`, so `torus_RxC` and `random_pP_sS` strings
+    /// round-trip like the simple names.
     pub fn parse_topology(&self) -> anyhow::Result<Topology> {
-        Ok(match self.topology.as_str() {
-            "ring" => Topology::Ring,
-            "full" | "fully_connected" => Topology::FullyConnected,
-            "chain" => Topology::Chain,
-            "star" => Topology::Star,
-            "hypercube" => Topology::Hypercube,
-            other => anyhow::bail!("unknown topology '{other}'"),
-        })
+        Ok(self.topology.parse::<Topology>()?)
     }
 
     pub fn build_mixing(&self) -> anyhow::Result<Arc<MixingMatrix>> {
-        let graph = Graph::build(self.parse_topology()?, self.n_nodes);
-        // Metropolis handles irregular graphs (star/chain); uniform for
-        // regular ones matches the paper's 1/3-weights ring.
-        let d0 = graph.degree(0);
-        let regular = (0..graph.n).all(|i| graph.degree(i) == d0);
-        Ok(Arc::new(if regular {
-            MixingMatrix::uniform(graph)
-        } else {
-            MixingMatrix::metropolis(graph)
-        }))
+        crate::spec::try_build_mixing(self.parse_topology()?, self.n_nodes)
+    }
+
+    /// The typed spec this config describes (every string key parsed, with
+    /// errors that list the registered names).
+    pub fn experiment_spec(&self) -> anyhow::Result<ExperimentSpec> {
+        ExperimentSpec::parse(
+            &self.algo,
+            &self.compressor,
+            &self.topology,
+            self.n_nodes,
+            self.seed,
+            self.eta,
+        )
     }
 
     pub fn build_algo_config(&self) -> anyhow::Result<AlgoConfig> {
-        // Both compressor families resolve from the one `compressor` key:
-        // stateless codecs (`fp32`, `q8`, ..., `sign`) and the link-state
-        // low-rank family (`lowrank_rN`).
-        let (compressor, link) = compression::resolve_name(&self.compressor)
-            .ok_or_else(|| anyhow::anyhow!("unknown compressor '{}'", self.compressor))?;
-        let cfg = AlgoConfig {
-            mixing: self.build_mixing()?,
-            compressor,
-            seed: self.seed,
-            eta: self.eta,
-            link,
-        };
-        validate_algo_config(&self.algo, &cfg)?;
-        Ok(cfg)
+        // One construction path: parse into the typed spec, admit once,
+        // and take the session's validated config.
+        Ok(self.experiment_spec()?.session()?.algo_config())
     }
 
     pub fn build_model_kind(&self) -> anyhow::Result<ModelKind> {
@@ -190,42 +180,19 @@ impl TrainConfig {
     }
 }
 
-/// Validate an (algorithm, config) pair before building per-node
-/// programs — shared by *both* execution backends, so a hand-built
-/// `AlgoConfig` cannot smuggle an unsound combination past the
-/// `TrainConfig` gate on either path.
-pub(crate) fn validate_algo_config(algo_name: &str, cfg: &AlgoConfig) -> anyhow::Result<()> {
-    anyhow::ensure!(
-        !crate::algorithms::requires_unbiased_compressor(algo_name)
-            || cfg.compressor_is_unbiased(),
-        "compressor '{}' is biased and '{algo_name}' requires an unbiased compressor \
-         (Assumption 1.5); use an error-feedback algorithm (choco|deepsqueeze) instead",
-        cfg.compressor_name()
-    );
-    // Link-state (per-edge, warm-started) compressors need an algorithm
-    // whose program routes through the link surface; CHOCO-SGD is the
-    // one in-tree (PowerGossip = CHOCO + low-rank). Everything else gets
-    // a clear error rather than silently falling back to the inert
-    // stateless placeholder.
-    if let Some(link) = &cfg.link {
-        anyhow::ensure!(
-            matches!(algo_name, "choco" | "chocosgd"),
-            "link-state compressor '{}' requires per-edge warm-started state, which only \
-             'choco' implements; pick a stateless compressor for '{algo_name}'",
-            link.name()
-        );
-    }
-    anyhow::ensure!(
-        cfg.eta > 0.0 && cfg.eta <= 1.0,
-        "consensus step size eta must be in (0, 1], got {}",
-        cfg.eta
-    );
-    Ok(())
+/// Parse an algorithm name into its registry handle (error lists the
+/// registered names).
+pub(crate) fn parse_algo(algo_name: &str) -> anyhow::Result<AlgoSpec> {
+    Ok(algo_name.parse::<AlgoSpec>()?)
 }
 
-/// Build one program per node for `algo_name` (validating the name).
-fn build_programs(
-    algo_name: &str,
+/// Build one program per node from a registry entry, gating the
+/// (possibly hand-built) `AlgoConfig` through the spec layer's single
+/// admission function — shared by *both* execution backends, so an
+/// unsound combination cannot smuggle past the `TrainConfig` gate on
+/// either path.
+pub(crate) fn build_programs_entry(
+    entry: &'static AlgoEntry,
     cfg: &AlgoConfig,
     models: Vec<Box<dyn GradientModel>>,
     x0: &[f32],
@@ -234,15 +201,12 @@ fn build_programs(
 ) -> anyhow::Result<Vec<Box<dyn NodeProgram>>> {
     let n = cfg.mixing.n();
     anyhow::ensure!(models.len() == n, "need one model per node");
-    validate_algo_config(algo_name, cfg)?;
-    models
+    crate::spec::admit_config(entry.spec, cfg)?;
+    Ok(models
         .into_iter()
         .enumerate()
-        .map(|(node, model)| {
-            program::build_program(algo_name, cfg, node, model, x0, gamma, iters)
-                .ok_or_else(|| anyhow::anyhow!("unsupported algorithm '{algo_name}'"))
-        })
-        .collect()
+        .map(|(node, model)| (entry.make_program)(cfg, node, model, x0, gamma, iters))
+        .collect())
 }
 
 /// Run `iters` synchronous iterations of `algo_name` on the discrete-event
@@ -258,18 +222,32 @@ pub fn run_simulated(
     iters: usize,
     sim: SimOpts,
 ) -> anyhow::Result<SimRun> {
-    let programs = build_programs(algo_name, cfg, models, x0, gamma, iters)?;
+    run_simulated_entry(parse_algo(algo_name)?.entry(), cfg, models, x0, gamma, iters, sim)
+}
+
+/// [`run_simulated`] from a registry entry (the [`crate::spec::Session`]
+/// path — the name is already resolved and admitted).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_simulated_entry(
+    entry: &'static AlgoEntry,
+    cfg: &AlgoConfig,
+    models: Vec<Box<dyn GradientModel>>,
+    x0: &[f32],
+    gamma: f32,
+    iters: usize,
+    sim: SimOpts,
+) -> anyhow::Result<SimRun> {
+    let programs = build_programs_entry(entry, cfg, models, x0, gamma, iters)?;
     Ok(crate::network::sim::run_sim(programs, iters, sim))
 }
 
 /// The metric/trace name an algorithm reports under (matches
-/// [`crate::algorithms::Algorithm::name`]).
+/// [`crate::algorithms::Algorithm::name`]). The rule lives in the
+/// registry entry; unregistered names fall back to `<name>_<compressor>`.
 pub fn trace_name(algo_name: &str, cfg: &AlgoConfig) -> String {
-    match algo_name {
-        "dpsgd" => "dpsgd_fp32".into(),
-        "allreduce" => "allreduce_fp32".into(),
-        "qallreduce" => format!("allreduce_{}", cfg.compressor_name()),
-        other => format!("{other}_{}", cfg.compressor_name()),
+    match algo_name.parse::<AlgoSpec>() {
+        Ok(algo) => algo.entry().trace_name(cfg),
+        Err(_) => format!("{algo_name}_{}", cfg.compressor_name()),
     }
 }
 
@@ -289,8 +267,23 @@ pub fn run_sim_trace(
     opts: &RunOpts,
     sim: SimOpts,
 ) -> anyhow::Result<TrainTrace> {
-    let mut programs = build_programs(algo_name, cfg, models, x0, opts.gamma, opts.iters)?;
-    let name = trace_name(algo_name, cfg);
+    run_sim_trace_entry(parse_algo(algo_name)?.entry(), cfg, models, eval_models, x0, opts, sim)
+}
+
+/// [`run_sim_trace`] from a registry entry (the [`crate::spec::Session`]
+/// path).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_sim_trace_entry(
+    entry: &'static AlgoEntry,
+    cfg: &AlgoConfig,
+    models: Vec<Box<dyn GradientModel>>,
+    eval_models: &[Box<dyn GradientModel>],
+    x0: &[f32],
+    opts: &RunOpts,
+    sim: SimOpts,
+) -> anyhow::Result<TrainTrace> {
+    let mut programs = build_programs_entry(entry, cfg, models, x0, opts.gamma, opts.iters)?;
+    let name = entry.trace_name(cfg);
     let mut engine = SimEngine::new(programs.len(), sim);
 
     let eval = |programs: &[Box<dyn NodeProgram>], mean: &mut [f32]| -> (f64, f64) {
@@ -351,12 +344,24 @@ mod tests {
 
     #[test]
     fn all_topologies_parse() {
-        for topo in ["ring", "full", "chain", "star", "hypercube"] {
+        // Including the parameterized families that were unparseable
+        // before the spec layer (`torus_RxC`, `random_pP_sS` — the exact
+        // outputs of `Topology::name()`).
+        for (topo, n) in [
+            ("ring", 8),
+            ("full", 8),
+            ("chain", 8),
+            ("star", 8),
+            ("hypercube", 8),
+            ("torus_3x3", 9),
+            ("random_p40_s7", 8),
+        ] {
             let cfg = TrainConfig {
                 topology: topo.into(),
+                n_nodes: n,
                 ..Default::default()
             };
-            cfg.build_mixing().unwrap();
+            cfg.build_mixing().unwrap_or_else(|e| panic!("{topo}: {e}"));
         }
         let bad = TrainConfig {
             topology: "moebius".into(),
@@ -385,29 +390,11 @@ mod tests {
         assert!(cfg.build_algo_config().is_err());
     }
 
-    #[test]
-    fn biased_compressor_rejected_for_dcd_ecd_accepted_for_error_feedback() {
-        for comp in ["topk_10", "sign"] {
-            for algo in ["dcd", "ecd", "qallreduce"] {
-                let cfg = TrainConfig {
-                    algo: algo.into(),
-                    compressor: comp.into(),
-                    ..Default::default()
-                };
-                let err = cfg.build_algo_config().unwrap_err().to_string();
-                assert!(err.contains("biased"), "{algo}/{comp}: {err}");
-            }
-            for algo in ["choco", "deepsqueeze"] {
-                let cfg = TrainConfig {
-                    algo: algo.into(),
-                    compressor: comp.into(),
-                    eta: 0.5,
-                    ..Default::default()
-                };
-                assert!(cfg.build_algo_config().is_ok(), "{algo}/{comp}");
-            }
-        }
-    }
+    // NOTE: the accept/reject combinatorics (biased × DCD/ECD, lowrank ×
+    // everything) are pinned exhaustively by the rejection matrix in
+    // rust/tests/spec_registry.rs; only the hand-built-AlgoConfig gates
+    // remain here (they exercise the program-builder layer, which the
+    // TrainConfig matrix cannot reach).
 
     #[test]
     fn biased_compressor_rejected_by_program_builders_too() {
@@ -452,7 +439,7 @@ mod tests {
     }
 
     #[test]
-    fn lowrank_accepted_for_choco_rejected_elsewhere() {
+    fn lowrank_config_resolves_through_the_spec_layer() {
         let ok = TrainConfig {
             algo: "choco".into(),
             compressor: "lowrank_r4".into(),
@@ -467,15 +454,6 @@ mod tests {
         // Stateless names resolve with no link spec.
         let plain = TrainConfig::default().build_algo_config().unwrap();
         assert!(plain.link.is_none());
-        for algo in ["dcd", "deepsqueeze", "dpsgd"] {
-            let bad = TrainConfig {
-                algo: algo.into(),
-                compressor: "lowrank_r4".into(),
-                eta: 0.5,
-                ..Default::default()
-            };
-            assert!(bad.build_algo_config().is_err(), "{algo} must reject lowrank");
-        }
     }
 
     #[test]

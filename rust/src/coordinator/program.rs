@@ -603,9 +603,177 @@ impl NodeProgram for AllreduceProgram {
 }
 
 // ---------------------------------------------------------------------------
+// Per-algorithm program constructors. These are what the spec registry
+// ([`crate::spec::registry::REGISTRY`]) points at — one fn per entry,
+// shared verbatim by the threaded coordinator and the discrete-event
+// engine. No name dispatch happens here; the registry is the one table.
 
-/// Build node `node`'s program for `algo_name`. Supported: `dpsgd`, `dcd`,
-/// `ecd`, `naive`, `allreduce`, `qallreduce`, `choco`, `deepsqueeze`.
+pub(crate) fn dpsgd_program(
+    cfg: &AlgoConfig,
+    node: usize,
+    model: Box<dyn GradientModel>,
+    x0: &[f32],
+    gamma: f32,
+    iters: usize,
+) -> Box<dyn NodeProgram> {
+    let c = Common::new(cfg, node, model, x0, gamma, iters);
+    let (dim, deg) = (x0.len(), c.neighbors.len());
+    Box::new(DpsgdProgram {
+        c,
+        mixed: vec![0.0f32; dim],
+        recv_bufs: vec![vec![0.0f32; dim]; deg],
+    })
+}
+
+pub(crate) fn dcd_program(
+    cfg: &AlgoConfig,
+    node: usize,
+    model: Box<dyn GradientModel>,
+    x0: &[f32],
+    gamma: f32,
+    iters: usize,
+) -> Box<dyn NodeProgram> {
+    let c = Common::new(cfg, node, model, x0, gamma, iters);
+    let (dim, deg) = (x0.len(), c.neighbors.len());
+    Box::new(DcdProgram {
+        replicas: vec![x0.to_vec(); deg],
+        c,
+        half: vec![0.0f32; dim],
+        z: vec![0.0f32; dim],
+        cz: vec![0.0f32; dim],
+    })
+}
+
+pub(crate) fn ecd_program(
+    cfg: &AlgoConfig,
+    node: usize,
+    model: Box<dyn GradientModel>,
+    x0: &[f32],
+    gamma: f32,
+    iters: usize,
+) -> Box<dyn NodeProgram> {
+    let c = Common::new(cfg, node, model, x0, gamma, iters);
+    let (dim, deg) = (x0.len(), c.neighbors.len());
+    Box::new(EcdProgram {
+        tilde_self: x0.to_vec(),
+        tilde_nbrs: vec![x0.to_vec(); deg],
+        c,
+        x_new: vec![0.0f32; dim],
+        z: vec![0.0f32; dim],
+        cz: vec![0.0f32; dim],
+    })
+}
+
+pub(crate) fn naive_program(
+    cfg: &AlgoConfig,
+    node: usize,
+    model: Box<dyn GradientModel>,
+    x0: &[f32],
+    gamma: f32,
+    iters: usize,
+) -> Box<dyn NodeProgram> {
+    let c = Common::new(cfg, node, model, x0, gamma, iters);
+    let (dim, deg) = (x0.len(), c.neighbors.len());
+    Box::new(NaiveProgram {
+        c,
+        mixed: vec![0.0f32; dim],
+        recv_bufs: vec![vec![0.0f32; dim]; deg],
+    })
+}
+
+pub(crate) fn choco_program(
+    cfg: &AlgoConfig,
+    node: usize,
+    model: Box<dyn GradientModel>,
+    x0: &[f32],
+    gamma: f32,
+    iters: usize,
+) -> Box<dyn NodeProgram> {
+    // Tensor structure for the link-state compressors (needed before the
+    // model moves into `Common`).
+    let manifest = model.shape_manifest();
+    let c = Common::new(cfg, node, model, x0, gamma, iters);
+    let (dim, deg) = (x0.len(), c.neighbors.len());
+    Box::new(ChocoProgram {
+        eta: cfg.eta,
+        link: cfg.link_for(node, &manifest),
+        xhat_self: x0.to_vec(),
+        xhat_nbrs: vec![x0.to_vec(); deg],
+        c,
+        half: vec![0.0f32; dim],
+        mixed: vec![0.0f32; dim],
+        z: vec![0.0f32; dim],
+        cz: vec![0.0f32; dim],
+    })
+}
+
+pub(crate) fn deepsqueeze_program(
+    cfg: &AlgoConfig,
+    node: usize,
+    model: Box<dyn GradientModel>,
+    x0: &[f32],
+    gamma: f32,
+    iters: usize,
+) -> Box<dyn NodeProgram> {
+    let c = Common::new(cfg, node, model, x0, gamma, iters);
+    let (dim, deg) = (x0.len(), c.neighbors.len());
+    Box::new(DeepSqueezeProgram {
+        eta: cfg.eta,
+        e: vec![0.0f32; dim],
+        c,
+        z: vec![0.0f32; dim],
+        cz_self: vec![0.0f32; dim],
+        recv_bufs: vec![vec![0.0f32; dim]; deg],
+        mixed: vec![0.0f32; dim],
+    })
+}
+
+fn allreduce_common(
+    cfg: &AlgoConfig,
+    node: usize,
+    model: Box<dyn GradientModel>,
+    x0: &[f32],
+    gamma: f32,
+    iters: usize,
+    quantized: bool,
+) -> Box<dyn NodeProgram> {
+    let c = Common::new(cfg, node, model, x0, gamma, iters);
+    let dim = x0.len();
+    Box::new(AllreduceProgram {
+        quantized,
+        c,
+        mean: vec![0.0f32; dim],
+        buf: vec![0.0f32; dim],
+        rng_dummy: Pcg64::new(0, 0),
+        own_wire: None,
+    })
+}
+
+pub(crate) fn allreduce_program(
+    cfg: &AlgoConfig,
+    node: usize,
+    model: Box<dyn GradientModel>,
+    x0: &[f32],
+    gamma: f32,
+    iters: usize,
+) -> Box<dyn NodeProgram> {
+    allreduce_common(cfg, node, model, x0, gamma, iters, false)
+}
+
+pub(crate) fn qallreduce_program(
+    cfg: &AlgoConfig,
+    node: usize,
+    model: Box<dyn GradientModel>,
+    x0: &[f32],
+    gamma: f32,
+    iters: usize,
+) -> Box<dyn NodeProgram> {
+    allreduce_common(cfg, node, model, x0, gamma, iters, true)
+}
+
+/// Build node `node`'s program for `algo_name` via the spec registry
+/// (`None` for unregistered names). Kept as the string-keyed compat
+/// surface; the registry entry's `make_program` is the real constructor.
 pub fn build_program(
     algo_name: &str,
     cfg: &AlgoConfig,
@@ -615,66 +783,6 @@ pub fn build_program(
     gamma: f32,
     iters: usize,
 ) -> Option<Box<dyn NodeProgram>> {
-    // Tensor structure for the link-state compressors (needed before the
-    // model moves into `Common`).
-    let manifest = model.shape_manifest();
-    let c = Common::new(cfg, node, model, x0, gamma, iters);
-    let dim = x0.len();
-    let deg = c.neighbors.len();
-    Some(match algo_name {
-        "dpsgd" => Box::new(DpsgdProgram {
-            c,
-            mixed: vec![0.0f32; dim],
-            recv_bufs: vec![vec![0.0f32; dim]; deg],
-        }),
-        "dcd" => Box::new(DcdProgram {
-            replicas: vec![x0.to_vec(); deg],
-            c,
-            half: vec![0.0f32; dim],
-            z: vec![0.0f32; dim],
-            cz: vec![0.0f32; dim],
-        }),
-        "ecd" => Box::new(EcdProgram {
-            tilde_self: x0.to_vec(),
-            tilde_nbrs: vec![x0.to_vec(); deg],
-            c,
-            x_new: vec![0.0f32; dim],
-            z: vec![0.0f32; dim],
-            cz: vec![0.0f32; dim],
-        }),
-        "naive" => Box::new(NaiveProgram {
-            c,
-            mixed: vec![0.0f32; dim],
-            recv_bufs: vec![vec![0.0f32; dim]; deg],
-        }),
-        "choco" | "chocosgd" => Box::new(ChocoProgram {
-            eta: cfg.eta,
-            link: cfg.link_for(node, &manifest),
-            xhat_self: x0.to_vec(),
-            xhat_nbrs: vec![x0.to_vec(); deg],
-            c,
-            half: vec![0.0f32; dim],
-            mixed: vec![0.0f32; dim],
-            z: vec![0.0f32; dim],
-            cz: vec![0.0f32; dim],
-        }),
-        "deepsqueeze" => Box::new(DeepSqueezeProgram {
-            eta: cfg.eta,
-            e: vec![0.0f32; dim],
-            c,
-            z: vec![0.0f32; dim],
-            cz_self: vec![0.0f32; dim],
-            recv_bufs: vec![vec![0.0f32; dim]; deg],
-            mixed: vec![0.0f32; dim],
-        }),
-        "allreduce" | "qallreduce" => Box::new(AllreduceProgram {
-            quantized: algo_name == "qallreduce",
-            c,
-            mean: vec![0.0f32; dim],
-            buf: vec![0.0f32; dim],
-            rng_dummy: Pcg64::new(0, 0),
-            own_wire: None,
-        }),
-        _ => return None,
-    })
+    let algo: crate::spec::AlgoSpec = algo_name.parse().ok()?;
+    Some((algo.entry().make_program)(cfg, node, model, x0, gamma, iters))
 }

@@ -15,12 +15,12 @@
 //! identity codec round-trips f32 exactly. The integration suite asserts
 //! this for every algorithm.
 
-use super::program::build_program;
 use crate::algorithms::AlgoConfig;
 use crate::compression::Wire;
 use crate::models::GradientModel;
 use crate::network::sim::{self, NodeProgram, Outbox};
 use crate::network::transport::{Channel, Endpoint, Transport};
+use crate::spec::AlgoEntry;
 
 /// What each worker hands back when the run finishes — the same report
 /// type the discrete-event backend produces, so the two are directly
@@ -95,9 +95,10 @@ fn run_node(mut prog: Box<dyn NodeProgram>, mut ep: Endpoint, iters: usize) -> W
     }
 }
 
-/// Run `iters` synchronous iterations of `algo_name` over worker threads.
-/// `models[i]` moves to thread i. Supported: `dpsgd`, `dcd`, `ecd`,
-/// `naive`, `allreduce`, `qallreduce`, `choco`, `deepsqueeze`.
+/// Run `iters` synchronous iterations of `algo_name` over worker
+/// threads. `models[i]` moves to thread i. The algorithm name resolves
+/// through the spec registry; unknown names error with the registered
+/// list.
 pub fn run_threaded(
     algo_name: &str,
     cfg: &AlgoConfig,
@@ -106,14 +107,23 @@ pub fn run_threaded(
     gamma: f32,
     iters: usize,
 ) -> anyhow::Result<ThreadedRun> {
+    run_threaded_entry(super::parse_algo(algo_name)?.entry(), cfg, models, x0, gamma, iters)
+}
+
+/// [`run_threaded`] from a registry entry (the [`crate::spec::Session`]
+/// path). Gated by the spec layer's single admission function, same as
+/// the sim backend.
+pub(crate) fn run_threaded_entry(
+    entry: &'static AlgoEntry,
+    cfg: &AlgoConfig,
+    models: Vec<Box<dyn GradientModel>>,
+    x0: &[f32],
+    gamma: f32,
+    iters: usize,
+) -> anyhow::Result<ThreadedRun> {
     let n = cfg.mixing.n();
     anyhow::ensure!(models.len() == n, "need one model per node");
-    match algo_name {
-        "dpsgd" | "dcd" | "ecd" | "naive" | "allreduce" | "qallreduce" | "choco" | "chocosgd"
-        | "deepsqueeze" => {}
-        other => anyhow::bail!("unsupported threaded algorithm '{other}'"),
-    }
-    super::validate_algo_config(algo_name, cfg)?;
+    crate::spec::admit_config(entry.spec, cfg)?;
 
     let endpoints = Transport::fabric(n);
     let mut reports: Vec<WorkerReport> = std::thread::scope(|s| {
@@ -121,8 +131,7 @@ pub fn run_threaded(
             .into_iter()
             .zip(models)
             .map(|(ep, model)| {
-                let prog = build_program(algo_name, cfg, ep.id, model, x0, gamma, iters)
-                    .expect("algorithm validated above");
+                let prog = (entry.make_program)(cfg, ep.id, model, x0, gamma, iters);
                 s.spawn(move || run_node(prog, ep, iters))
             })
             .collect();

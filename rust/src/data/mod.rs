@@ -1,7 +1,7 @@
 //! Synthetic dataset generators with controllable inter-node
 //! heterogeneity.
 //!
-//! The paper's CIFAR-10 shards are replaced (see DESIGN.md §4) by
+//! The paper's CIFAR-10 shards are replaced (see DESIGN.md §5) by
 //! generators whose ζ — the cross-node gradient variation of Assumption
 //! 1.4 — is a direct knob: every node's data is drawn around a common
 //! ground truth plus a node-specific perturbation of magnitude

@@ -11,13 +11,13 @@
 //!    inter-node variation grows (the paper: DCD's rate is slightly
 //!    better under large ζ; ECD pays extra σ̃-noise terms).
 
-use crate::algorithms::{self, AlgoConfig};
-use crate::compression::{self, empirical_alpha};
+use crate::algorithms;
+use crate::compression::empirical_alpha;
 use crate::data::{build_models, ModelKind, SynthSpec};
 use crate::metrics::Table;
 use crate::models::{GradientModel, Quadratic};
-use crate::topology::{Graph, MixingMatrix, Topology};
-use std::sync::Arc;
+use crate::spec::{self, CompressorSpec, ExperimentSpec};
+use crate::topology::Topology;
 
 /// Outcome label for a training run against a full-precision reference.
 fn verdict(final_subopt: f64, ref_subopt: f64) -> &'static str {
@@ -53,23 +53,20 @@ fn run_quad(
         .cloned()
         .map(|q| Box::new(q) as Box<dyn GradientModel>)
         .collect();
-    let graph = Graph::build(topo, n);
-    let d0 = graph.degree(0);
-    let regular = (0..n).all(|i| graph.degree(i) == d0);
-    let mixing = if regular {
-        MixingMatrix::uniform(graph)
-    } else {
-        MixingMatrix::metropolis(graph)
-    };
-    let cfg = AlgoConfig {
-        mixing: Arc::new(mixing),
-        compressor: Arc::from(compression::from_name(compressor).unwrap()),
+    let exp = ExperimentSpec {
+        algo: algo.parse().unwrap_or_else(|e| panic!("{e}")),
+        compressor: compressor.parse().unwrap_or_else(|e| panic!("{e}")),
+        topology: topo,
+        n_nodes: n,
         seed: 0xab1a,
         eta: 1.0,
-        link: None,
     };
     let x0 = vec![0.0f32; dim];
-    let mut a = algorithms::from_name(algo, cfg, &x0, n).unwrap();
+    // session_unchecked: this ablation *deliberately* runs inadmissible
+    // combinations (biased top-k under DCD/ECD) on the reference backend
+    // to exhibit the theory's failure modes; the verdict column is the
+    // point.
+    let mut a = exp.session_unchecked().reference(&x0, n);
     for _ in 0..iters {
         a.step(&mut models, gamma);
     }
@@ -87,7 +84,7 @@ pub fn compressor_sweep(quick: bool) -> Table {
     let dim = 64;
     let iters = if quick { 400 } else { 2000 };
     let (fam, fstar, _) = quad_family(n, dim, 1.0);
-    let bound = MixingMatrix::uniform(Graph::build(Topology::Ring, n)).dcd_alpha_bound();
+    let bound = spec::build_mixing(Topology::Ring, n).dcd_alpha_bound();
     let ref_subopt = run_quad("dpsgd", "fp32", &fam, fstar, Topology::Ring, iters, 0.05);
 
     let mut t = Table::new(
@@ -104,7 +101,11 @@ pub fn compressor_sweep(quick: bool) -> Table {
     );
     let names = ["q8", "q4", "q2", "q1", "sparse_p50", "sparse_p25", "sparse_p10", "topk_25"];
     let cells = super::runner::run_cells(&names, |_, &name| {
-        let c = compression::from_name(name).unwrap();
+        let c = name
+            .parse::<CompressorSpec>()
+            .unwrap_or_else(|e| panic!("{e}"))
+            .build_stateless()
+            .expect("ablation codecs are stateless");
         let alpha = empirical_alpha(c.as_ref(), 2048, 6, 0xa1);
         let dcd = run_quad("dcd", name, &fam, fstar, Topology::Ring, iters, 0.05);
         let ecd = run_quad("ecd", name, &fam, fstar, Topology::Ring, iters, 0.05);
@@ -137,15 +138,10 @@ pub fn topology_sweep() -> Table {
         (Topology::Hypercube, 16),
         (Topology::FullyConnected, 16),
     ] {
-        let graph = Graph::build(topo, n);
-        let deg = graph.max_degree();
-        let d0 = graph.degree(0);
-        let regular = (0..n).all(|i| graph.degree(i) == d0);
-        let m = if regular {
-            MixingMatrix::uniform(graph)
-        } else {
-            MixingMatrix::metropolis(graph)
-        };
+        // The one shared mixing rule (uniform on regular graphs,
+        // Metropolis on irregular) — same function every backend uses.
+        let m = spec::build_mixing(topo, n);
+        let deg = m.graph.max_degree();
         t.row(vec![
             topo.name(),
             deg.to_string(),

@@ -18,15 +18,12 @@
 //! (`DECOMP_SWEEP_THREADS` / `--sweep-threads`), only host wall-clock
 //! changes.
 
-use crate::algorithms::{AlgoConfig, RunOpts};
-use crate::compression;
-use crate::coordinator::run_sim_trace;
+use crate::algorithms::RunOpts;
 use crate::data::build_models;
 use crate::metrics::{fmt_bytes, fmt_secs, Table};
 use crate::network::cost::{CostModel, NetCondition};
 use crate::network::sim::SimOpts;
-use crate::topology::{Graph, MixingMatrix, Topology};
-use std::sync::Arc;
+use crate::spec::{ExperimentSpec, TopologySpec};
 use std::time::Instant;
 
 use super::runner;
@@ -91,14 +88,17 @@ fn run_cell(
 ) -> EfSweepRow {
     let t0 = Instant::now();
     let (spec, kind) = super::convergence_spec(n, quick);
-    let (compressor, link) = compression::resolve_name(comp).expect("compressor");
-    let cfg = AlgoConfig {
-        mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n))),
-        compressor,
+    // One construction path: typed spec → session (parse errors list the
+    // registered names; admission happens exactly once, in the session).
+    let exp = ExperimentSpec {
+        algo: algo.parse().unwrap_or_else(|e| panic!("{e}")),
+        compressor: comp.parse().unwrap_or_else(|e| panic!("{e}")),
+        topology: TopologySpec::Ring,
+        n_nodes: n,
         seed: 0xef5,
         eta,
-        link,
     };
+    let session = exp.session().unwrap_or_else(|e| panic!("{e}"));
     let (models, x0) = build_models(&kind, &spec);
     let (eval_models, _) = build_models(&kind, &spec);
     let opts = RunOpts {
@@ -111,7 +111,8 @@ fn run_cell(
         cost: CostModel::Uniform(cond.model()),
         compute_per_iter_s: super::testbed::COMPUTE_PER_ITER_S,
     };
-    let trace = run_sim_trace(algo, &cfg, models, &eval_models, &x0, &opts, sim)
+    let trace = session
+        .run_sim_trace(models, &eval_models, &x0, &opts, sim)
         .expect("ef sweep run");
     let last = trace.points.last().unwrap();
     EfSweepRow {

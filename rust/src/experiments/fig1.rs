@@ -9,11 +9,10 @@
 //! ~0 while the naive schemes stall at a quantizer-set floor (orders of
 //! magnitude higher, growing with aggressiveness).
 
-use crate::algorithms::{self, AlgoConfig};
+use crate::algorithms;
 use crate::metrics::Table;
 use crate::models::{GradientModel, Quadratic};
-use crate::topology::{Graph, MixingMatrix, Topology};
-use std::sync::Arc;
+use crate::spec::{ExperimentSpec, TopologySpec};
 
 struct Fig1Setup {
     fam: Vec<Quadratic>,
@@ -46,15 +45,19 @@ fn run_subopt(
         .cloned()
         .map(|q| Box::new(q) as Box<dyn GradientModel>)
         .collect();
-    let cfg = AlgoConfig {
-        mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, s.n))),
-        compressor: Arc::from(crate::compression::from_name(comp).unwrap()),
+    let exp = ExperimentSpec {
+        algo: algo.parse().unwrap_or_else(|e| panic!("{e}")),
+        compressor: comp.parse().unwrap_or_else(|e| panic!("{e}")),
+        topology: TopologySpec::Ring,
+        n_nodes: s.n,
         seed: 0xf161,
         eta: 1.0,
-        link: None,
     };
     let x0 = vec![0.0f32; s.dim];
-    let mut a = algorithms::from_name(algo, cfg, &x0, s.n).unwrap();
+    let mut a = exp
+        .session()
+        .unwrap_or_else(|e| panic!("{e}"))
+        .reference(&x0, s.n);
     let mut mean = vec![0.0f32; s.dim];
     let mut points = Vec::new();
     let subopt = |a: &dyn algorithms::Algorithm, mean: &mut [f32], s: &Fig1Setup| -> f64 {

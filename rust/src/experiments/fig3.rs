@@ -15,15 +15,12 @@
 //! decentralized stays fast.
 
 use super::testbed;
-use crate::algorithms::AlgoConfig;
-use crate::compression::{self, Compressor, StochasticQuantizer};
-use crate::coordinator::run_simulated;
+use crate::compression::{Compressor, StochasticQuantizer};
 use crate::data::{build_models, ModelKind, SynthSpec};
 use crate::metrics::{fmt_bytes, fmt_secs, Table};
 use crate::network::cost::{epoch_time, CommSchedule, CostModel, NetworkModel};
 use crate::network::sim::SimOpts;
-use crate::topology::{Graph, MixingMatrix, Topology};
-use std::sync::Arc;
+use crate::spec::{ExperimentSpec, TopologySpec};
 
 pub const BANDWIDTHS: [(f64, &str); 5] = [
     (1.4e9, "1.4Gbps"),
@@ -120,27 +117,28 @@ pub fn sim_sweep_points(ns: &[usize], iters: usize, net: NetworkModel) -> Vec<Si
             ..Default::default()
         };
         let (models, x0) = build_models(&ModelKind::Quadratic { spread: 1.0, noise: 0.1 }, &spec);
-        let (compressor, link) = compression::resolve_name(comp).expect("compressor");
-        let cfg = AlgoConfig {
-            mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n))),
-            compressor,
+        let exp = ExperimentSpec {
+            algo: algo.parse().unwrap_or_else(|e| panic!("{e}")),
+            compressor: comp.parse().unwrap_or_else(|e| panic!("{e}")),
+            topology: TopologySpec::Ring,
+            n_nodes: n,
             seed: 0xf163,
             eta,
-            link,
         };
-        let run = run_simulated(
-            algo,
-            &cfg,
-            models,
-            &x0,
-            0.05,
-            iters,
-            SimOpts {
-                cost: CostModel::Uniform(net),
-                compute_per_iter_s: 0.0,
-            },
-        )
-        .expect("sim sweep run");
+        let run = exp
+            .session()
+            .unwrap_or_else(|e| panic!("{e}"))
+            .run_simulated(
+                models,
+                &x0,
+                0.05,
+                iters,
+                SimOpts {
+                    cost: CostModel::Uniform(net),
+                    compute_per_iter_s: 0.0,
+                },
+            )
+            .expect("sim sweep run");
         SimSweepPoint {
             n,
             algo: format!("{algo}_{comp}"),

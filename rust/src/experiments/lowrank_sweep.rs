@@ -13,15 +13,12 @@
 //! simulation fanned out over the parallel [`super::runner`] — rows come
 //! back in grid order, bit-identical at any thread count.
 
-use crate::algorithms::{AlgoConfig, RunOpts};
-use crate::compression;
-use crate::coordinator::run_sim_trace;
+use crate::algorithms::RunOpts;
 use crate::data::{build_models, ModelKind, SynthSpec};
 use crate::metrics::{fmt_bytes, fmt_secs, Table};
 use crate::network::cost::{CostModel, NetCondition};
 use crate::network::sim::SimOpts;
-use crate::topology::{Graph, MixingMatrix, Topology};
-use std::sync::Arc;
+use crate::spec::{ExperimentSpec, TopologySpec};
 use std::time::Instant;
 
 use super::ef_sweep::short_condition_name;
@@ -71,14 +68,15 @@ fn run_cell(
         seed: 0x10e4,
     };
     let kind = ModelKind::Quadratic { spread: 1.0, noise: 0.1 };
-    let (compressor, link) = compression::resolve_name(comp).expect("compressor");
-    let cfg = AlgoConfig {
-        mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n))),
-        compressor,
+    let exp = ExperimentSpec {
+        algo: algo.parse().unwrap_or_else(|e| panic!("{e}")),
+        compressor: comp.parse().unwrap_or_else(|e| panic!("{e}")),
+        topology: TopologySpec::Ring,
+        n_nodes: n,
         seed: 0x10e4,
         eta,
-        link,
     };
+    let session = exp.session().unwrap_or_else(|e| panic!("{e}"));
     let (models, x0) = build_models(&kind, &spec);
     let (eval_models, _) = build_models(&kind, &spec);
     let opts = RunOpts {
@@ -91,8 +89,9 @@ fn run_cell(
         cost: CostModel::Uniform(cond.model()),
         compute_per_iter_s: compute_s,
     };
-    let trace =
-        run_sim_trace(algo, &cfg, models, &eval_models, &x0, &opts, sim).expect("lowrank sweep");
+    let trace = session
+        .run_sim_trace(models, &eval_models, &x0, &opts, sim)
+        .expect("lowrank sweep");
     let last = trace.points.last().unwrap();
     LowRankRow {
         algo: trace.algo.clone(),

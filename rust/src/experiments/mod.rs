@@ -1,4 +1,4 @@
-//! Experiment drivers: one module per paper figure (DESIGN.md §5 maps
+//! Experiment drivers: one module per paper figure (DESIGN.md §6 maps
 //! each to its bench target), the ablations the paper's theory motivates,
 //! and the error-feedback sweep ([`ef_sweep`]) that takes the
 //! CHOCO/DeepSqueeze family across the bandwidth×latency grid at n = 64.
@@ -15,6 +15,13 @@
 //! fan their independent cells out over the deterministic parallel
 //! [`runner`] — output is bit-identical at any thread count
 //! (`--sweep-threads` / `DECOMP_SWEEP_THREADS`).
+//!
+//! Every run is constructed through the typed spec layer
+//! ([`crate::spec::ExperimentSpec`] → `Session`): one registry, one
+//! admission check, identical objects on every backend. The gossip
+//! topology of a `run_named` experiment is selectable via
+//! `DECOMP_TOPOLOGY` (any registered topology string, e.g. `torus_4x4`
+//! or `random_p30_s7`; default `ring` — the paper's testbed).
 
 pub mod ablations;
 pub mod ef_sweep;
@@ -25,15 +32,12 @@ pub mod fig4;
 pub mod lowrank_sweep;
 pub mod runner;
 
-use crate::algorithms::{self, AlgoConfig, RunOpts, TracePoint, TrainTrace};
-use crate::compression;
-use crate::coordinator;
+use crate::algorithms::{self, RunOpts, TracePoint, TrainTrace};
 use crate::data::{build_models, ModelKind, SynthSpec};
 use crate::metrics::Table;
 use crate::network::cost::CostModel;
 use crate::network::sim::SimOpts;
-use crate::topology::{Graph, MixingMatrix, Topology};
-use std::sync::Arc;
+use crate::spec::{ExperimentSpec, TopologySpec};
 
 /// Which execution substrate a traced experiment runs on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -88,7 +92,7 @@ pub mod testbed {
 
 /// Common workload for the convergence figures: logistic regression on
 /// heterogeneous synthetic shards (the CIFAR/ResNet substitute; DESIGN.md
-/// §4).
+/// §5).
 pub fn convergence_spec(n_nodes: usize, quick: bool) -> (SynthSpec, ModelKind) {
     let spec = SynthSpec {
         n_nodes,
@@ -101,8 +105,22 @@ pub fn convergence_spec(n_nodes: usize, quick: bool) -> (SynthSpec, ModelKind) {
     (spec, ModelKind::Logistic { batch: 8 })
 }
 
+/// The gossip topology `run_named` experiments use: the
+/// `DECOMP_TOPOLOGY` environment knob (any registered topology string),
+/// defaulting to the paper's ring. An unparseable value panics with the
+/// registered-topology list rather than silently falling back.
+pub fn sweep_topology() -> TopologySpec {
+    match std::env::var("DECOMP_TOPOLOGY") {
+        Ok(v) => v
+            .parse::<TopologySpec>()
+            .unwrap_or_else(|e| panic!("DECOMP_TOPOLOGY: {e}")),
+        Err(_) => TopologySpec::Ring,
+    }
+}
+
 /// Build an algorithm + fresh models and run it on the backend selected
-/// by `DECOMP_BACKEND` (reference math when unset).
+/// by `DECOMP_BACKEND` (reference math when unset) over the topology
+/// selected by `DECOMP_TOPOLOGY` (ring when unset).
 pub fn run_named(
     algo: &str,
     compressor: &str,
@@ -115,7 +133,8 @@ pub fn run_named(
     run_named_on(ExecBackend::from_env(), algo, compressor, spec, kind, x0_override, opts, seed)
 }
 
-/// Build an algorithm + fresh models and run it on an explicit backend.
+/// [`run_named`] on an explicit backend (topology still from the env
+/// knob).
 #[allow(clippy::too_many_arguments)]
 pub fn run_named_on(
     backend: ExecBackend,
@@ -127,22 +146,37 @@ pub fn run_named_on(
     opts: &RunOpts,
     seed: u64,
 ) -> TrainTrace {
+    run_named_topo(backend, sweep_topology(), algo, compressor, spec, kind, x0_override, opts, seed)
+}
+
+/// The fully explicit form: one spec, one session, any backend, any
+/// topology. All `run_named` variants funnel here.
+#[allow(clippy::too_many_arguments)]
+pub fn run_named_topo(
+    backend: ExecBackend,
+    topology: TopologySpec,
+    algo: &str,
+    compressor: &str,
+    spec: &SynthSpec,
+    kind: &ModelKind,
+    x0_override: Option<&[f32]>,
+    opts: &RunOpts,
+    seed: u64,
+) -> TrainTrace {
     let (mut models, x0_built) = build_models(kind, spec);
     let x0 = x0_override.unwrap_or(&x0_built).to_vec();
-    let mk_cfg = || {
-        let (comp, link) = compression::resolve_name(compressor).expect("compressor");
-        AlgoConfig {
-            mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, spec.n_nodes))),
-            compressor: comp,
-            seed,
-            eta: 1.0,
-            link,
-        }
+    let exp = ExperimentSpec {
+        algo: algo.parse().unwrap_or_else(|e| panic!("{e}")),
+        compressor: compressor.parse().unwrap_or_else(|e| panic!("{e}")),
+        topology,
+        n_nodes: spec.n_nodes,
+        seed,
+        eta: 1.0,
     };
+    let session = exp.session().unwrap_or_else(|e| panic!("{e}"));
     match backend {
         ExecBackend::Reference => {
-            let mut algo =
-                algorithms::from_name(algo, mk_cfg(), &x0, spec.n_nodes).expect("algorithm");
+            let mut algo = session.reference(&x0, spec.n_nodes);
             algorithms::run_training(algo.as_mut(), &mut models, opts)
         }
         ExecBackend::Sim => {
@@ -151,7 +185,8 @@ pub fn run_named_on(
                 cost: opts.net.map(CostModel::Uniform).unwrap_or(CostModel::Ideal),
                 compute_per_iter_s: opts.compute_per_iter_s,
             };
-            coordinator::run_sim_trace(algo, &mk_cfg(), models, &eval_models, &x0, opts, sim)
+            session
+                .run_sim_trace(models, &eval_models, &x0, opts, sim)
                 .expect("sim backend run")
         }
         ExecBackend::Threads => {
@@ -165,19 +200,14 @@ pub fn run_named_on(
                  use the reference or sim backend"
             );
             let (eval_models, _) = build_models(kind, spec);
-            let cfg = mk_cfg();
             // Same closed-form time axis as the reference driver.
             let comm_time = opts
                 .net
-                .map(|net| {
-                    algorithms::from_name(algo, mk_cfg(), &x0, spec.n_nodes)
-                        .expect("algorithm")
-                        .comm()
-                        .time(&net)
-                })
+                .map(|net| session.reference(&x0, spec.n_nodes).comm().time(&net))
                 .unwrap_or(0.0);
-            let name = coordinator::trace_name(algo, &cfg);
-            let run = coordinator::run_threaded(algo, &cfg, models, &x0, opts.gamma, opts.iters)
+            let name = session.trace_name();
+            let run = session
+                .run_threaded(models, &x0, opts.gamma, opts.iters)
                 .expect("threaded backend run");
             let eval = |x: &[f32]| -> f64 {
                 eval_models.iter().map(|m| m.full_loss(x)).sum::<f64>() / eval_models.len() as f64
@@ -312,6 +342,44 @@ mod tests {
             c.final_loss(),
             a.final_loss()
         );
+    }
+
+    #[test]
+    fn run_named_topology_is_selectable() {
+        // The topology knob reaches the mixing matrix: the same workload
+        // on a ring vs the complete graph takes different trajectories.
+        let (spec, kind) = convergence_spec(4, true);
+        let opts = RunOpts {
+            iters: 10,
+            gamma: 0.05,
+            eval_every: 5,
+            ..Default::default()
+        };
+        let ring = run_named_topo(
+            ExecBackend::Reference,
+            TopologySpec::Ring,
+            "dcd",
+            "q8",
+            &spec,
+            &kind,
+            None,
+            &opts,
+            1,
+        );
+        let full = run_named_topo(
+            ExecBackend::Reference,
+            TopologySpec::FullyConnected,
+            "dcd",
+            "q8",
+            &spec,
+            &kind,
+            None,
+            &opts,
+            1,
+        );
+        assert!(ring.final_loss().is_finite());
+        assert!(full.final_loss().is_finite());
+        assert_ne!(ring.final_loss().to_bits(), full.final_loss().to_bits());
     }
 
     #[test]

@@ -18,7 +18,9 @@
 //!   training algorithms, a bandwidth/latency network cost model plus a
 //!   discrete-event simulation engine ([`network::sim`]), a threaded
 //!   transport, metrics, config, CLI ([`coordinator`], [`algorithms`],
-//!   [`compression`], [`network`], [`topology`]).
+//!   [`compression`], [`network`], [`topology`]) — all constructed
+//!   through the typed [`spec`] layer and its single registry
+//!   (`decomp list` prints it).
 //! - **L2** — a JAX transformer whose `grad_step` is AOT-lowered to HLO
 //!   text by `python/compile/aot.py` and executed from rust via PJRT
 //!   ([`runtime`], behind the `pjrt` cargo feature).
@@ -51,5 +53,6 @@ pub mod metrics;
 pub mod models;
 pub mod network;
 pub mod runtime;
+pub mod spec;
 pub mod topology;
 pub mod util;

@@ -1,0 +1,768 @@
+//! The typed spec layer: **one construction path** for algorithms,
+//! compressors, and topologies across all three execution backends.
+//!
+//! Before this module existed, the combinatorics the paper's claim rests
+//! on — compression strategy × decentralized topology × network regime —
+//! lived in stringly-typed `match` blocks duplicated across four
+//! construction sites (the reference builder, the threads builder, the
+//! sim program builder, and the worker whitelist), each re-enforcing its
+//! own capability gates. Now:
+//!
+//! - [`AlgoSpec`], [`CompressorSpec`], and [`TopologySpec`] are typed
+//!   specs with *total* `FromStr` ↔ `Display` round-trips, backward
+//!   compatible with every CLI/config string accepted before
+//!   (`choco`, `lowrank_r4`, `q8`, `torus_4x4`, `random_p30_s7`, …).
+//! - [`AlgoCaps`] is the declarative capability model
+//!   (`needs_unbiased`, `accepts_link_state`, `uses_eta`); [`admit`] is
+//!   the **one** admission function every backend consults.
+//! - [`registry::REGISTRY`] is the single table mapping each algorithm
+//!   to its reference constructor, its per-node program constructor, its
+//!   capabilities, and its trace name — adding an algorithm is one entry
+//!   there, not five synchronized edits.
+//! - [`ExperimentSpec`] → [`Session`] validates once and then yields the
+//!   reference [`Algorithm`], the threads runner, and the sim runner
+//!   from that registry.
+//!
+//! `decomp list` prints the registry (and self-checks that every entry
+//! constructs on the sim backend), so the CLI surface and the code can
+//! never silently drift apart.
+
+pub mod registry;
+
+pub use registry::{
+    AlgoEntry, CompressorFamily, TopologyFamily, COMPRESSOR_FAMILIES, REGISTRY, TOPOLOGY_FAMILIES,
+};
+
+use crate::algorithms::{AlgoConfig, Algorithm, RunOpts, TrainTrace};
+use crate::compression::{Compressor, Identity, LinkCompressorSpec};
+use crate::coordinator::ThreadedRun;
+use crate::models::GradientModel;
+use crate::network::sim::{SimOpts, SimRun};
+use crate::topology::{Graph, MixingMatrix, Topology};
+use std::fmt;
+use std::str::FromStr;
+use std::sync::Arc;
+
+/// The public alias the spec layer exposes for topologies: the
+/// [`Topology`] enum itself, now carrying total `FromStr`/`Display`
+/// impls (every `Topology::name()` output parses back, including
+/// `torus_RxC` and `random_pP_sS`).
+pub type TopologySpec = Topology;
+
+// ---------------------------------------------------------------------------
+// Parse errors
+
+/// A spec-string rejection: names the rejected string and lists the
+/// registered names, so a typo'd `--algo`/`--compressor`/`--topology`
+/// never dies with a bare `expect`.
+#[derive(Debug, Clone)]
+pub struct SpecParseError {
+    /// What kind of spec was being parsed (`algorithm`, `compressor`,
+    /// `topology`).
+    pub kind: &'static str,
+    /// The rejected input.
+    pub given: String,
+    /// Human-readable list of the registered names/patterns.
+    pub registered: String,
+}
+
+impl fmt::Display for SpecParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown {} '{}'; registered: {}",
+            self.kind, self.given, self.registered
+        )
+    }
+}
+
+impl std::error::Error for SpecParseError {}
+
+/// Comma-joined canonical algorithm names (for error messages and the
+/// registry listing).
+pub fn registered_algorithms() -> String {
+    REGISTRY
+        .iter()
+        .map(|e| e.canonical)
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Comma-joined compressor family patterns.
+pub fn registered_compressors() -> String {
+    COMPRESSOR_FAMILIES
+        .iter()
+        .map(|f| f.pattern)
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Comma-joined topology family patterns.
+pub fn registered_topologies() -> String {
+    TOPOLOGY_FAMILIES
+        .iter()
+        .map(|f| f.pattern)
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+// ---------------------------------------------------------------------------
+// AlgoSpec
+
+/// Typed algorithm identifier. One variant per registry entry; parsing
+/// accepts the canonical name and every registered alias
+/// (`chocosgd` → [`AlgoSpec::Choco`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgoSpec {
+    /// D-PSGD: full-precision decentralized baseline.
+    Dpsgd,
+    /// DCD-PSGD (paper Algorithm 1): compressed model differences.
+    Dcd,
+    /// ECD-PSGD (paper Algorithm 2): compressed extrapolations.
+    Ecd,
+    /// Naive compressed gossip: the Fig. 1 negative example.
+    Naive,
+    /// Centralized Allreduce SGD (fp32).
+    Allreduce,
+    /// QSGD-style Allreduce over compressed gradients.
+    Qallreduce,
+    /// CHOCO-SGD: error-feedback gossip over public copies.
+    Choco,
+    /// DeepSqueeze: error-compensated compressed-model gossip.
+    DeepSqueeze,
+}
+
+impl AlgoSpec {
+    /// Every registered algorithm, in registry order.
+    pub const ALL: [AlgoSpec; 8] = [
+        AlgoSpec::Dpsgd,
+        AlgoSpec::Dcd,
+        AlgoSpec::Ecd,
+        AlgoSpec::Naive,
+        AlgoSpec::Allreduce,
+        AlgoSpec::Qallreduce,
+        AlgoSpec::Choco,
+        AlgoSpec::DeepSqueeze,
+    ];
+
+    /// This algorithm's registry entry (constructors, capabilities,
+    /// trace naming).
+    pub fn entry(self) -> &'static AlgoEntry {
+        REGISTRY
+            .iter()
+            .find(|e| e.spec == self)
+            .expect("every AlgoSpec variant has a registry entry")
+    }
+
+    /// Canonical config/CLI name.
+    pub fn name(self) -> &'static str {
+        self.entry().canonical
+    }
+
+    /// Declarative capability flags.
+    pub fn caps(self) -> AlgoCaps {
+        self.entry().caps
+    }
+}
+
+impl fmt::Display for AlgoSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for AlgoSpec {
+    type Err = SpecParseError;
+
+    fn from_str(s: &str) -> Result<AlgoSpec, SpecParseError> {
+        for e in REGISTRY.iter() {
+            if e.canonical == s || e.aliases.contains(&s) {
+                return Ok(e.spec);
+            }
+        }
+        Err(SpecParseError {
+            kind: "algorithm",
+            given: s.to_string(),
+            registered: registered_algorithms(),
+        })
+    }
+}
+
+/// What an algorithm can soundly run with — the declarative capability
+/// model that replaces the scattered `requires_unbiased_compressor` /
+/// choco-only-lowrank checks. Enforced in exactly one place: [`admit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AlgoCaps {
+    /// Sound only under E[C(z)] = z (Assumption 1.5). A biased codec
+    /// silently corrupts the updates (DCD/ECD reproduce the Fig. 1
+    /// divergence; quantized Allreduce biases the averaged gradient with
+    /// no error feedback to repair it).
+    pub needs_unbiased: bool,
+    /// Routes its broadcast stream through the stateful per-link
+    /// compressor surface (warm-started PowerGossip state).
+    pub accepts_link_state: bool,
+    /// Consumes the consensus step size η (error-feedback family);
+    /// algorithms without this flag ignore η.
+    pub uses_eta: bool,
+}
+
+// ---------------------------------------------------------------------------
+// CompressorSpec
+
+/// Typed compressor identifier — the stateless and link-state families
+/// unified under one parse/display surface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CompressorSpec {
+    /// Full-precision f32 (the identity operator, α = 0).
+    Fp32,
+    /// Stochastic quantization to `bits` bits (paper footnote 1).
+    Quantize { bits: u8 },
+    /// Randomized sparsification keeping `keep_percent`% in expectation
+    /// (paper footnote 2), rescaled to stay unbiased.
+    Sparsify { keep_percent: u8 },
+    /// Biased top-k by magnitude, keeping `keep_percent`% unscaled.
+    TopK { keep_percent: u8 },
+    /// Biased 1-bit sign with a mean-magnitude scale.
+    Sign,
+    /// PowerGossip rank-`rank` low-rank link compression (stateful,
+    /// per-edge warm-started).
+    LowRank { rank: usize },
+}
+
+impl CompressorSpec {
+    /// Whether E[C(z)] = z (Assumption 1.5).
+    pub fn is_unbiased(&self) -> bool {
+        !matches!(
+            self,
+            CompressorSpec::TopK { .. } | CompressorSpec::Sign | CompressorSpec::LowRank { .. }
+        )
+    }
+
+    /// Whether this family keeps warm-started per-link state (and so
+    /// needs an algorithm whose program routes through the link
+    /// surface).
+    pub fn is_link_state(&self) -> bool {
+        matches!(self, CompressorSpec::LowRank { .. })
+    }
+
+    /// Build the stateless codec, or `None` for the link-state family.
+    pub fn build_stateless(&self) -> Option<Box<dyn Compressor>> {
+        Some(match *self {
+            CompressorSpec::Fp32 => Box::new(Identity),
+            CompressorSpec::Quantize { bits } => {
+                Box::new(crate::compression::StochasticQuantizer::new(bits))
+            }
+            CompressorSpec::Sparsify { keep_percent } => Box::new(
+                crate::compression::RandomSparsifier::new(keep_percent as f64 / 100.0),
+            ),
+            CompressorSpec::TopK { keep_percent } => {
+                Box::new(crate::compression::TopK::new(keep_percent as f64 / 100.0))
+            }
+            CompressorSpec::Sign => Box::new(crate::compression::SignCompressor),
+            CompressorSpec::LowRank { .. } => return None,
+        })
+    }
+
+    /// The link-state family description, or `None` for stateless codecs.
+    pub fn link_spec(&self) -> Option<Arc<dyn LinkCompressorSpec>> {
+        match *self {
+            CompressorSpec::LowRank { rank } => {
+                Some(Arc::new(crate::compression::LowRankSpec::new(rank)))
+            }
+            _ => None,
+        }
+    }
+
+    /// Resolve into the pair an [`AlgoConfig`] carries: a stateless name
+    /// yields `(codec, None)`; a link-state family yields
+    /// `(Identity, Some(spec))` — the `Identity` placeholder is never
+    /// used on a link-compressed path, it only keeps the stateless field
+    /// total.
+    pub fn resolve(&self) -> (Arc<dyn Compressor>, Option<Arc<dyn LinkCompressorSpec>>) {
+        match self.build_stateless() {
+            Some(codec) => (Arc::from(codec), None),
+            None => (Arc::new(Identity), self.link_spec()),
+        }
+    }
+}
+
+impl fmt::Display for CompressorSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            CompressorSpec::Fp32 => f.write_str("fp32"),
+            CompressorSpec::Quantize { bits } => write!(f, "q{bits}"),
+            CompressorSpec::Sparsify { keep_percent } => write!(f, "sparse_p{keep_percent}"),
+            CompressorSpec::TopK { keep_percent } => write!(f, "topk_{keep_percent}"),
+            CompressorSpec::Sign => f.write_str("sign"),
+            CompressorSpec::LowRank { rank } => write!(f, "lowrank_r{rank}"),
+        }
+    }
+}
+
+impl FromStr for CompressorSpec {
+    type Err = SpecParseError;
+
+    fn from_str(s: &str) -> Result<CompressorSpec, SpecParseError> {
+        let reject = || SpecParseError {
+            kind: "compressor",
+            given: s.to_string(),
+            registered: registered_compressors(),
+        };
+        if s == "fp32" || s == "identity" {
+            return Ok(CompressorSpec::Fp32);
+        }
+        if s == "sign" {
+            return Ok(CompressorSpec::Sign);
+        }
+        if let Some(bits) = s.strip_prefix('q').and_then(|b| b.parse::<u8>().ok()) {
+            // Same admissible range the quantizer itself enforces; out of
+            // range is a parse error here instead of a construction panic.
+            if (1..=16).contains(&bits) {
+                return Ok(CompressorSpec::Quantize { bits });
+            }
+            return Err(reject());
+        }
+        if let Some(pct) = s.strip_prefix("sparse_p").and_then(|p| p.parse::<u8>().ok()) {
+            if (1..=100).contains(&pct) {
+                return Ok(CompressorSpec::Sparsify { keep_percent: pct });
+            }
+            return Err(reject());
+        }
+        if let Some(pct) = s.strip_prefix("topk_").and_then(|p| p.parse::<u8>().ok()) {
+            if (1..=100).contains(&pct) {
+                return Ok(CompressorSpec::TopK { keep_percent: pct });
+            }
+            return Err(reject());
+        }
+        if let Some(rank) = s.strip_prefix("lowrank_r").and_then(|r| r.parse::<usize>().ok()) {
+            if rank >= 1 {
+                return Ok(CompressorSpec::LowRank { rank });
+            }
+            return Err(reject());
+        }
+        Err(reject())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TopologySpec: total FromStr/Display on the Topology enum itself.
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+impl FromStr for Topology {
+    type Err = SpecParseError;
+
+    /// Total inverse of [`Topology::name`]: every name the enum can
+    /// print parses back to the same variant, plus the legacy aliases
+    /// (`full`).
+    fn from_str(s: &str) -> Result<Topology, SpecParseError> {
+        match s {
+            "ring" => return Ok(Topology::Ring),
+            "full" | "fully_connected" => return Ok(Topology::FullyConnected),
+            "chain" => return Ok(Topology::Chain),
+            "star" => return Ok(Topology::Star),
+            "hypercube" => return Ok(Topology::Hypercube),
+            _ => {}
+        }
+        if let Some(dims) = s.strip_prefix("torus_") {
+            if let Some((r, c)) = dims.split_once('x') {
+                if let (Ok(rows), Ok(cols)) = (r.parse::<usize>(), c.parse::<usize>()) {
+                    return Ok(Topology::Torus2d { rows, cols });
+                }
+            }
+        }
+        if let Some(body) = s.strip_prefix("random_p") {
+            if let Some((p, seed)) = body.split_once("_s") {
+                if let (Ok(p_percent), Ok(seed)) = (p.parse::<u8>(), seed.parse::<u64>()) {
+                    return Ok(Topology::Random { p_percent, seed });
+                }
+            }
+        }
+        Err(SpecParseError {
+            kind: "topology",
+            given: s.to_string(),
+            registered: registered_topologies(),
+        })
+    }
+}
+
+/// Validate a (topology, node-count) pairing *before* building — the
+/// graph builder enforces the same constraints with asserts, so every
+/// `Result`-returning construction path checks here first to turn a bad
+/// CLI/config value into a clean error instead of a panic.
+pub fn check_topology(topology: Topology, n_nodes: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(n_nodes >= 2, "need at least 2 nodes, got {n_nodes}");
+    match topology {
+        Topology::Torus2d { rows, cols } => {
+            anyhow::ensure!(
+                rows >= 3 && cols >= 3,
+                "torus needs rows,cols >= 3, got {rows}x{cols}"
+            );
+            anyhow::ensure!(
+                rows * cols == n_nodes,
+                "torus_{rows}x{cols} needs n = {}, got n = {n_nodes}",
+                rows * cols
+            );
+        }
+        Topology::Hypercube => {
+            anyhow::ensure!(
+                n_nodes.is_power_of_two(),
+                "hypercube needs n = 2^d, got {n_nodes}"
+            );
+        }
+        _ => {}
+    }
+    Ok(())
+}
+
+/// [`build_mixing`] behind the [`check_topology`] gate: the
+/// `Result`-returning form config/CLI paths use.
+pub fn try_build_mixing(topology: Topology, n_nodes: usize) -> anyhow::Result<Arc<MixingMatrix>> {
+    check_topology(topology, n_nodes)?;
+    Ok(build_mixing(topology, n_nodes))
+}
+
+/// Build the mixing matrix for a topology: uniform weights on regular
+/// graphs (the paper's 1/3-weights ring), Metropolis–Hastings on
+/// irregular ones (star/chain) — the one rule every construction path
+/// shares. Panics (via the graph builder's asserts) on a size mismatch;
+/// use [`try_build_mixing`] where user input can reach.
+pub fn build_mixing(topology: Topology, n_nodes: usize) -> Arc<MixingMatrix> {
+    let graph = Graph::build(topology, n_nodes);
+    let d0 = graph.degree(0);
+    let regular = (0..graph.n).all(|i| graph.degree(i) == d0);
+    Arc::new(if regular {
+        MixingMatrix::uniform(graph)
+    } else {
+        MixingMatrix::metropolis(graph)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Admission
+
+/// The **one** admission function: may `algo` run with the described
+/// compressor and consensus step size? Every construction path — the
+/// typed [`ExperimentSpec::session`] and the hand-built-`AlgoConfig`
+/// runners on both backends — funnels through here, so an unsound
+/// combination cannot smuggle past any of them.
+pub fn admit(
+    algo: AlgoSpec,
+    compressor_name: &str,
+    unbiased: bool,
+    link_state: bool,
+    eta: f32,
+) -> anyhow::Result<()> {
+    let caps = algo.caps();
+    anyhow::ensure!(
+        !caps.needs_unbiased || unbiased,
+        "compressor '{compressor_name}' is biased and '{algo}' requires an unbiased compressor \
+         (Assumption 1.5); use an error-feedback algorithm (choco|deepsqueeze) instead",
+    );
+    if link_state {
+        anyhow::ensure!(
+            caps.accepts_link_state,
+            "link-state compressor '{compressor_name}' requires per-edge warm-started state, \
+             which only 'choco' implements; pick a stateless compressor for '{algo}'",
+        );
+    }
+    anyhow::ensure!(
+        eta > 0.0 && eta <= 1.0,
+        "consensus step size eta must be in (0, 1], got {eta}",
+    );
+    Ok(())
+}
+
+/// [`admit`] over typed specs (the `ExperimentSpec` path).
+pub fn admit_spec(algo: AlgoSpec, compressor: &CompressorSpec, eta: f32) -> anyhow::Result<()> {
+    admit(
+        algo,
+        &compressor.to_string(),
+        compressor.is_unbiased(),
+        compressor.is_link_state(),
+        eta,
+    )
+}
+
+/// [`admit`] over a (possibly hand-built) [`AlgoConfig`] — what the
+/// program builders on both backends consult, so a config assembled
+/// without the typed layer is still gated by the same rules.
+pub fn admit_config(algo: AlgoSpec, cfg: &AlgoConfig) -> anyhow::Result<()> {
+    admit(
+        algo,
+        &cfg.compressor_name(),
+        cfg.compressor_is_unbiased(),
+        cfg.link.is_some(),
+        cfg.eta,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// ExperimentSpec → Session
+
+/// A fully typed run description: what the CLI flags, the config JSON,
+/// and every experiment sweep resolve into before anything is built.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    pub algo: AlgoSpec,
+    pub compressor: CompressorSpec,
+    pub topology: TopologySpec,
+    pub n_nodes: usize,
+    pub seed: u64,
+    /// Consensus step size η ∈ (0, 1]; ignored by algorithms whose caps
+    /// lack `uses_eta`.
+    pub eta: f32,
+}
+
+impl ExperimentSpec {
+    /// Parse the string triple into a typed spec (each failure lists the
+    /// registered names).
+    pub fn parse(
+        algo: &str,
+        compressor: &str,
+        topology: &str,
+        n_nodes: usize,
+        seed: u64,
+        eta: f32,
+    ) -> anyhow::Result<ExperimentSpec> {
+        Ok(ExperimentSpec {
+            algo: algo.parse::<AlgoSpec>()?,
+            compressor: compressor.parse::<CompressorSpec>()?,
+            topology: topology.parse::<TopologySpec>()?,
+            n_nodes,
+            seed,
+            eta,
+        })
+    }
+
+    /// Mixing matrix for this spec's topology (see [`build_mixing`]).
+    pub fn build_mixing(&self) -> Arc<MixingMatrix> {
+        build_mixing(self.topology, self.n_nodes)
+    }
+
+    /// Admit the combination (the one admission check), validate the
+    /// topology/node-count pairing, and yield the [`Session`] every
+    /// backend constructs from.
+    pub fn session(&self) -> anyhow::Result<Session> {
+        check_topology(self.topology, self.n_nodes)?;
+        admit_spec(self.algo, &self.compressor, self.eta)?;
+        Ok(self.session_unchecked())
+    }
+
+    /// [`ExperimentSpec::session`] **without** the admission check — the
+    /// escape hatch for the theory ablations, which deliberately run
+    /// inadmissible combinations (e.g. biased top-k under DCD) on the
+    /// *reference* backend to exhibit the paper's predicted failure
+    /// modes. Construction still goes through the registry; only the
+    /// capability gate is skipped. The coordinator backends re-consult
+    /// [`admit_config`] at run time, so this cannot smuggle an unsound
+    /// combination onto the threaded or sim executors.
+    pub fn session_unchecked(&self) -> Session {
+        let (compressor, link) = self.compressor.resolve();
+        let cfg = AlgoConfig {
+            mixing: self.build_mixing(),
+            compressor,
+            seed: self.seed,
+            eta: self.eta,
+            link,
+        };
+        Session {
+            entry: self.algo.entry(),
+            cfg,
+        }
+    }
+}
+
+/// A validated experiment. Admission already happened (exactly once, in
+/// [`ExperimentSpec::session`]); the reference [`Algorithm`], the
+/// threaded runner, and the discrete-event runner all construct from
+/// this via the registry entry.
+pub struct Session {
+    entry: &'static AlgoEntry,
+    cfg: AlgoConfig,
+}
+
+impl Session {
+    pub fn algo(&self) -> AlgoSpec {
+        self.entry.spec
+    }
+
+    /// The validated algorithm configuration (cloneable; Arc-backed).
+    pub fn algo_config(&self) -> AlgoConfig {
+        self.cfg.clone()
+    }
+
+    /// The metric/trace name this run reports under.
+    pub fn trace_name(&self) -> String {
+        self.entry.trace_name(&self.cfg)
+    }
+
+    /// Build the single-process reference [`Algorithm`].
+    ///
+    /// Panics if a link-state compressor is paired with an algorithm
+    /// that has no reference link code path — only reachable via
+    /// [`ExperimentSpec::session_unchecked`], and better a loud panic
+    /// than silently training full-precision under a low-rank label.
+    pub fn reference(&self, x0: &[f32], n_nodes: usize) -> Box<dyn Algorithm> {
+        assert!(
+            self.cfg.link.is_none() || self.entry.caps.accepts_link_state,
+            "link-state compressor '{}' has no reference code path in '{}'",
+            self.cfg.compressor_name(),
+            self.entry.canonical
+        );
+        (self.entry.make_reference)(self.cfg.clone(), x0, n_nodes)
+    }
+
+    /// Run on the thread-per-node mailbox backend.
+    pub fn run_threaded(
+        &self,
+        models: Vec<Box<dyn GradientModel>>,
+        x0: &[f32],
+        gamma: f32,
+        iters: usize,
+    ) -> anyhow::Result<ThreadedRun> {
+        crate::coordinator::run_threaded_entry(self.entry, &self.cfg, models, x0, gamma, iters)
+    }
+
+    /// Run on the discrete-event engine (virtual clock, per-link costs).
+    pub fn run_simulated(
+        &self,
+        models: Vec<Box<dyn GradientModel>>,
+        x0: &[f32],
+        gamma: f32,
+        iters: usize,
+        sim: SimOpts,
+    ) -> anyhow::Result<SimRun> {
+        crate::coordinator::run_simulated_entry(
+            self.entry,
+            &self.cfg,
+            models,
+            x0,
+            gamma,
+            iters,
+            sim,
+        )
+    }
+
+    /// Full traced run on the sim backend (loss/consensus/bytes at the
+    /// evaluation cadence, virtual time measured by the engine).
+    pub fn run_sim_trace(
+        &self,
+        models: Vec<Box<dyn GradientModel>>,
+        eval_models: &[Box<dyn GradientModel>],
+        x0: &[f32],
+        opts: &RunOpts,
+        sim: SimOpts,
+    ) -> anyhow::Result<TrainTrace> {
+        crate::coordinator::run_sim_trace_entry(
+            self.entry,
+            &self.cfg,
+            models,
+            eval_models,
+            x0,
+            opts,
+            sim,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_round_trip_and_aliases() {
+        for a in AlgoSpec::ALL {
+            assert_eq!(a.to_string().parse::<AlgoSpec>().unwrap(), a);
+        }
+        assert_eq!("chocosgd".parse::<AlgoSpec>().unwrap(), AlgoSpec::Choco);
+        let err = "sgd9000".parse::<AlgoSpec>().unwrap_err().to_string();
+        assert!(err.contains("deepsqueeze") && err.contains("dcd"), "{err}");
+    }
+
+    #[test]
+    fn compressor_round_trip_matches_codec_names() {
+        let specs = [
+            CompressorSpec::Fp32,
+            CompressorSpec::Quantize { bits: 8 },
+            CompressorSpec::Sparsify { keep_percent: 25 },
+            CompressorSpec::TopK { keep_percent: 10 },
+            CompressorSpec::Sign,
+            CompressorSpec::LowRank { rank: 4 },
+        ];
+        for s in specs {
+            assert_eq!(s.to_string().parse::<CompressorSpec>().unwrap(), s);
+            if let Some(codec) = s.build_stateless() {
+                assert_eq!(codec.name(), s.to_string());
+            }
+        }
+        assert_eq!("identity".parse::<CompressorSpec>().unwrap(), CompressorSpec::Fp32);
+        assert!("q0".parse::<CompressorSpec>().is_err());
+        assert!("q17".parse::<CompressorSpec>().is_err());
+        assert!("sparse_p0".parse::<CompressorSpec>().is_err());
+        assert!("lowrank_r0".parse::<CompressorSpec>().is_err());
+        let err = "zstd".parse::<CompressorSpec>().unwrap_err().to_string();
+        assert!(err.contains("lowrank_r<rank>"), "{err}");
+    }
+
+    #[test]
+    fn topology_round_trip_is_total() {
+        let topos = [
+            Topology::Ring,
+            Topology::FullyConnected,
+            Topology::Chain,
+            Topology::Star,
+            Topology::Hypercube,
+            Topology::Torus2d { rows: 3, cols: 4 },
+            Topology::Random { p_percent: 30, seed: 7 },
+        ];
+        for t in topos {
+            assert_eq!(t.to_string(), t.name());
+            assert_eq!(t.name().parse::<Topology>().unwrap(), t);
+        }
+        assert_eq!("full".parse::<Topology>().unwrap(), Topology::FullyConnected);
+        assert!("torus_3by4".parse::<Topology>().is_err());
+        assert!("random_p30".parse::<Topology>().is_err());
+        assert!("moebius".parse::<Topology>().is_err());
+    }
+
+    #[test]
+    fn admission_gates_each_capability() {
+        // Biased codec under an unbiased-only algorithm.
+        let sign = CompressorSpec::Sign;
+        assert!(admit_spec(AlgoSpec::Dcd, &sign, 1.0).is_err());
+        assert!(admit_spec(AlgoSpec::Choco, &sign, 0.4).is_ok());
+        // Link-state codec outside choco.
+        let lr = CompressorSpec::LowRank { rank: 2 };
+        assert!(admit_spec(AlgoSpec::DeepSqueeze, &lr, 0.4).is_err());
+        assert!(admit_spec(AlgoSpec::Choco, &lr, 0.4).is_ok());
+        // Eta range.
+        assert!(admit_spec(AlgoSpec::Choco, &CompressorSpec::Fp32, 0.0).is_err());
+        assert!(admit_spec(AlgoSpec::Choco, &CompressorSpec::Fp32, 1.5).is_err());
+    }
+
+    #[test]
+    fn session_builds_and_names_traces() {
+        let spec = ExperimentSpec::parse("choco", "lowrank_r4", "ring", 4, 7, 0.4).unwrap();
+        let session = spec.session().unwrap();
+        assert_eq!(session.trace_name(), "choco_lowrank_r4");
+        assert_eq!(session.algo(), AlgoSpec::Choco);
+        let cfg = session.algo_config();
+        assert!(cfg.link.is_some());
+        // The reference constructor comes from the same registry entry.
+        let a = session.reference(&[0.0; 16], 4);
+        assert_eq!(a.name(), "choco_lowrank_r4");
+    }
+
+    #[test]
+    fn mixing_rule_uniform_on_regular_metropolis_on_irregular() {
+        let ring = build_mixing(Topology::Ring, 8);
+        assert_eq!(ring.self_weight[0], ring.self_weight[1]);
+        let star = build_mixing(Topology::Star, 6);
+        assert_ne!(star.self_weight[0], star.self_weight[1]);
+    }
+}

@@ -1,0 +1,477 @@
+//! The registry: **the one table** over algorithm names in the tree.
+//!
+//! Each [`AlgoEntry`] binds a typed [`AlgoSpec`] to everything the rest
+//! of the system needs to construct it — canonical name and aliases,
+//! declarative [`AlgoCaps`], the reference-[`Algorithm`] constructor,
+//! the per-node [`NodeProgram`] constructor both execution backends
+//! share, and the trace-name rule. Adding an algorithm is one entry
+//! here (plus its implementation); the CLI, the config layer, all three
+//! backends, and `decomp list` pick it up from this table.
+//!
+//! [`COMPRESSOR_FAMILIES`] and [`TOPOLOGY_FAMILIES`] are the matching
+//! listing tables for the other two spec axes: name patterns, capability
+//! flags, and the exact `wire_bytes` formula each codec charges.
+
+use super::{AlgoCaps, AlgoSpec, CompressorSpec, ExperimentSpec};
+use crate::algorithms::{
+    AlgoConfig, Algorithm, CentralizedSgd, ChocoSgd, DPsgd, DcdPsgd, DeepSqueeze, EcdPsgd,
+    NaiveCompressedDPsgd, QuantizedCentralizedSgd,
+};
+use crate::coordinator::program;
+use crate::metrics::Table;
+use crate::models::GradientModel;
+use crate::network::sim::{NodeProgram, SimOpts};
+use crate::topology::Topology;
+
+/// Constructor for the single-process reference algorithm.
+pub type MakeReference = fn(AlgoConfig, &[f32], usize) -> Box<dyn Algorithm>;
+
+/// Constructor for one node's emit/absorb state machine — the program
+/// both the threaded coordinator and the discrete-event engine execute.
+/// Arguments: `(cfg, node, model, x0, gamma, iters)`.
+pub type MakeProgram =
+    fn(&AlgoConfig, usize, Box<dyn GradientModel>, &[f32], f32, usize) -> Box<dyn NodeProgram>;
+
+/// How an algorithm's metric/trace name is derived.
+#[derive(Debug, Clone, Copy)]
+pub enum TraceName {
+    /// Always the same label (compressor-independent algorithms).
+    Fixed(&'static str),
+    /// `<base>_<compressor_name>`.
+    WithCompressor(&'static str),
+}
+
+/// One registry row: everything the tree knows about an algorithm.
+pub struct AlgoEntry {
+    pub spec: AlgoSpec,
+    /// Canonical config/CLI name (what `Display` prints).
+    pub canonical: &'static str,
+    /// Accepted alternate spellings.
+    pub aliases: &'static [&'static str],
+    pub caps: AlgoCaps,
+    /// One-line description for `decomp list`.
+    pub summary: &'static str,
+    trace: TraceName,
+    pub make_reference: MakeReference,
+    pub make_program: MakeProgram,
+}
+
+impl AlgoEntry {
+    /// The metric/trace name a run with this config reports under.
+    pub fn trace_name(&self, cfg: &AlgoConfig) -> String {
+        match self.trace {
+            TraceName::Fixed(label) => label.to_string(),
+            TraceName::WithCompressor(base) => format!("{base}_{}", cfg.compressor_name()),
+        }
+    }
+}
+
+// Named constructor shims (fn items, so the table needs no closures).
+fn mk_dpsgd(cfg: AlgoConfig, x0: &[f32], n: usize) -> Box<dyn Algorithm> {
+    Box::new(DPsgd::new(cfg, x0, n))
+}
+fn mk_dcd(cfg: AlgoConfig, x0: &[f32], n: usize) -> Box<dyn Algorithm> {
+    Box::new(DcdPsgd::new(cfg, x0, n))
+}
+fn mk_ecd(cfg: AlgoConfig, x0: &[f32], n: usize) -> Box<dyn Algorithm> {
+    Box::new(EcdPsgd::new(cfg, x0, n))
+}
+fn mk_naive(cfg: AlgoConfig, x0: &[f32], n: usize) -> Box<dyn Algorithm> {
+    Box::new(NaiveCompressedDPsgd::new(cfg, x0, n))
+}
+fn mk_allreduce(cfg: AlgoConfig, x0: &[f32], n: usize) -> Box<dyn Algorithm> {
+    Box::new(CentralizedSgd::new(cfg, x0, n))
+}
+fn mk_qallreduce(cfg: AlgoConfig, x0: &[f32], n: usize) -> Box<dyn Algorithm> {
+    Box::new(QuantizedCentralizedSgd::new(cfg, x0, n))
+}
+fn mk_choco(cfg: AlgoConfig, x0: &[f32], n: usize) -> Box<dyn Algorithm> {
+    Box::new(ChocoSgd::new(cfg, x0, n))
+}
+fn mk_deepsqueeze(cfg: AlgoConfig, x0: &[f32], n: usize) -> Box<dyn Algorithm> {
+    Box::new(DeepSqueeze::new(cfg, x0, n))
+}
+
+/// The registry. Order is presentation order for `decomp list` and the
+/// iteration order of [`AlgoSpec::ALL`].
+pub static REGISTRY: [AlgoEntry; 8] = [
+    AlgoEntry {
+        spec: AlgoSpec::Dpsgd,
+        canonical: "dpsgd",
+        aliases: &[],
+        caps: AlgoCaps {
+            needs_unbiased: false,
+            accepts_link_state: false,
+            uses_eta: false,
+        },
+        summary: "D-PSGD (Lian et al., 2017): full-precision gossip, the decentralized baseline",
+        trace: TraceName::Fixed("dpsgd_fp32"),
+        make_reference: mk_dpsgd,
+        make_program: program::dpsgd_program,
+    },
+    AlgoEntry {
+        spec: AlgoSpec::Dcd,
+        canonical: "dcd",
+        aliases: &[],
+        caps: AlgoCaps {
+            needs_unbiased: true,
+            accepts_link_state: false,
+            uses_eta: false,
+        },
+        summary: "DCD-PSGD (Alg. 1): compressed model differences over literal neighbor replicas",
+        trace: TraceName::WithCompressor("dcd"),
+        make_reference: mk_dcd,
+        make_program: program::dcd_program,
+    },
+    AlgoEntry {
+        spec: AlgoSpec::Ecd,
+        canonical: "ecd",
+        aliases: &[],
+        caps: AlgoCaps {
+            needs_unbiased: true,
+            accepts_link_state: false,
+            uses_eta: false,
+        },
+        summary: "ECD-PSGD (Alg. 2): compressed extrapolations over neighbor estimates",
+        trace: TraceName::WithCompressor("ecd"),
+        make_reference: mk_ecd,
+        make_program: program::ecd_program,
+    },
+    AlgoEntry {
+        spec: AlgoSpec::Naive,
+        canonical: "naive",
+        aliases: &[],
+        caps: AlgoCaps {
+            needs_unbiased: false,
+            accepts_link_state: false,
+            uses_eta: false,
+        },
+        summary: "naively compressed gossip: the Fig. 1 negative example (stalls by design)",
+        trace: TraceName::WithCompressor("naive"),
+        make_reference: mk_naive,
+        make_program: program::naive_program,
+    },
+    AlgoEntry {
+        spec: AlgoSpec::Allreduce,
+        canonical: "allreduce",
+        aliases: &[],
+        caps: AlgoCaps {
+            needs_unbiased: false,
+            accepts_link_state: false,
+            uses_eta: false,
+        },
+        summary: "centralized Allreduce SGD (hub-rooted reduce + broadcast), fp32",
+        trace: TraceName::Fixed("allreduce_fp32"),
+        make_reference: mk_allreduce,
+        make_program: program::allreduce_program,
+    },
+    AlgoEntry {
+        spec: AlgoSpec::Qallreduce,
+        canonical: "qallreduce",
+        aliases: &[],
+        caps: AlgoCaps {
+            needs_unbiased: true,
+            accepts_link_state: false,
+            uses_eta: false,
+        },
+        summary: "QSGD-style Allreduce: hub averages compressed gradients",
+        trace: TraceName::WithCompressor("allreduce"),
+        make_reference: mk_qallreduce,
+        make_program: program::qallreduce_program,
+    },
+    AlgoEntry {
+        spec: AlgoSpec::Choco,
+        canonical: "choco",
+        aliases: &["chocosgd"],
+        caps: AlgoCaps {
+            needs_unbiased: false,
+            accepts_link_state: true,
+            uses_eta: true,
+        },
+        summary: "CHOCO-SGD (Koloskova et al., 2019): error-feedback gossip over public copies; \
+                  admits biased and link-state codecs",
+        trace: TraceName::WithCompressor("choco"),
+        make_reference: mk_choco,
+        make_program: program::choco_program,
+    },
+    AlgoEntry {
+        spec: AlgoSpec::DeepSqueeze,
+        canonical: "deepsqueeze",
+        aliases: &[],
+        caps: AlgoCaps {
+            needs_unbiased: false,
+            accepts_link_state: false,
+            uses_eta: true,
+        },
+        summary: "DeepSqueeze (Tang et al., 2019): error-compensated compressed-model gossip \
+                  under eta-softened mixing",
+        trace: TraceName::WithCompressor("deepsqueeze"),
+        make_reference: mk_deepsqueeze,
+        make_program: program::deepsqueeze_program,
+    },
+];
+
+/// One compressor family for the listing: its name pattern, capability
+/// flags, and the exact wire-bytes formula its codec charges.
+pub struct CompressorFamily {
+    pub pattern: &'static str,
+    pub example: &'static str,
+    pub unbiased: bool,
+    pub link_state: bool,
+    /// Exact bytes of one n-element message (matches `wire_bytes`).
+    pub wire_bytes: &'static str,
+    pub summary: &'static str,
+}
+
+pub static COMPRESSOR_FAMILIES: [CompressorFamily; 6] = [
+    CompressorFamily {
+        pattern: "fp32",
+        example: "fp32",
+        unbiased: true,
+        link_state: false,
+        wire_bytes: "4n",
+        summary: "full-precision f32 (identity; alpha = 0); alias: identity",
+    },
+    CompressorFamily {
+        pattern: "q<bits>",
+        example: "q8",
+        unbiased: true,
+        link_state: false,
+        wire_bytes: "4*ceil(n/1024) + ceil(n*bits/8)",
+        summary: "stochastic quantization (footnote 1), per-1024-chunk scales; bits in 1..=16",
+    },
+    CompressorFamily {
+        pattern: "sparse_p<pct>",
+        example: "sparse_p25",
+        unbiased: true,
+        link_state: false,
+        wire_bytes: "ceil(n/8) + 4*round(n*p)  (expected)",
+        summary: "randomized sparsification (footnote 2), kept entries rescaled by 1/p",
+    },
+    CompressorFamily {
+        pattern: "topk_<pct>",
+        example: "topk_25",
+        unbiased: false,
+        link_state: false,
+        wire_bytes: "8*ceil(n*p)",
+        summary: "top-k by magnitude, unscaled; error-feedback algorithms only",
+    },
+    CompressorFamily {
+        pattern: "sign",
+        example: "sign",
+        unbiased: false,
+        link_state: false,
+        wire_bytes: "4 + ceil(n/8)",
+        summary: "1-bit sign with mean-|z| scale; error-feedback algorithms only",
+    },
+    CompressorFamily {
+        pattern: "lowrank_r<rank>",
+        example: "lowrank_r4",
+        unbiased: false,
+        link_state: true,
+        wire_bytes: "4 * sum_seg min(r,rows,cols)*(rows+cols)  (vector tails fp32)",
+        summary: "PowerGossip rank-r warm-started per-link power iteration; choco only",
+    },
+];
+
+/// One topology family for the listing.
+pub struct TopologyFamily {
+    pub pattern: &'static str,
+    pub example: &'static str,
+    /// Size constraint `Graph::build` enforces.
+    pub constraint: &'static str,
+    pub summary: &'static str,
+}
+
+pub static TOPOLOGY_FAMILIES: [TopologyFamily; 7] = [
+    TopologyFamily {
+        pattern: "ring",
+        example: "ring",
+        constraint: "n >= 2",
+        summary: "cycle, degree 2 (the paper's testbed)",
+    },
+    TopologyFamily {
+        pattern: "fully_connected",
+        example: "fully_connected",
+        constraint: "n >= 2",
+        summary: "complete graph (rho = 0); alias: full",
+    },
+    TopologyFamily {
+        pattern: "chain",
+        example: "chain",
+        constraint: "n >= 2",
+        summary: "path graph; worst-case spectral gap",
+    },
+    TopologyFamily {
+        pattern: "star",
+        example: "star",
+        constraint: "n >= 2",
+        summary: "hub + leaves (centralized-like communication)",
+    },
+    TopologyFamily {
+        pattern: "hypercube",
+        example: "hypercube",
+        constraint: "n = 2^d",
+        summary: "d-dimensional hypercube, degree d",
+    },
+    TopologyFamily {
+        pattern: "torus_<r>x<c>",
+        example: "torus_4x4",
+        constraint: "n = r*c, r,c >= 3",
+        summary: "2-D torus, degree 4",
+    },
+    TopologyFamily {
+        pattern: "random_p<pct>_s<seed>",
+        example: "random_p30_s7",
+        constraint: "n >= 2",
+        summary: "Erdos-Renyi G(n, p), resampled until connected (seeded)",
+    },
+];
+
+/// Render the registry as printable tables (the `decomp list` body).
+pub fn list_tables() -> Vec<Table> {
+    let mut algos = Table::new(
+        "registry: algorithms",
+        &["algo", "aliases", "needs_unbiased", "link_state", "uses_eta", "trace", "summary"],
+    );
+    for e in REGISTRY.iter() {
+        algos.row(vec![
+            e.canonical.into(),
+            e.aliases.join(","),
+            e.caps.needs_unbiased.to_string(),
+            e.caps.accepts_link_state.to_string(),
+            e.caps.uses_eta.to_string(),
+            match e.trace {
+                TraceName::Fixed(label) => label.to_string(),
+                TraceName::WithCompressor(base) => format!("{base}_<compressor>"),
+            },
+            e.summary.split_whitespace().collect::<Vec<_>>().join(" "),
+        ]);
+    }
+    let mut comps = Table::new(
+        "registry: compressors",
+        &["pattern", "example", "unbiased", "link_state", "wire_bytes(n)", "summary"],
+    );
+    for f in COMPRESSOR_FAMILIES.iter() {
+        comps.row(vec![
+            f.pattern.into(),
+            f.example.into(),
+            f.unbiased.to_string(),
+            f.link_state.to_string(),
+            f.wire_bytes.into(),
+            f.summary.into(),
+        ]);
+    }
+    let mut topos = Table::new(
+        "registry: topologies",
+        &["pattern", "example", "constraint", "summary"],
+    );
+    for f in TOPOLOGY_FAMILIES.iter() {
+        topos.row(vec![
+            f.pattern.into(),
+            f.example.into(),
+            f.constraint.into(),
+            f.summary.into(),
+        ]);
+    }
+    vec![algos, comps, topos]
+}
+
+/// Registry ↔ implementation drift check: construct **every** registry
+/// entry on the sim backend at `n` nodes and step it twice (plus one
+/// link-state cell, choco+lowrank_r2, exercising the per-link path).
+/// Returns the number of cells run. This is the `decomp list` / CI smoke
+/// contract: an entry that parses but cannot build fails loudly here.
+pub fn self_check(n: usize) -> anyhow::Result<usize> {
+    use crate::data::{build_models, ModelKind, SynthSpec};
+    let spec = SynthSpec {
+        n_nodes: n,
+        rows_per_node: 8,
+        dim: 16,
+        noise: 0.1,
+        heterogeneity: 0.5,
+        seed: 0x11f7,
+    };
+    let kind = ModelKind::Quadratic { spread: 0.5, noise: 0.1 };
+    let mut cells: Vec<ExperimentSpec> = REGISTRY
+        .iter()
+        .map(|e| ExperimentSpec {
+            algo: e.spec,
+            // q8 is admissible under every registered capability set.
+            compressor: CompressorSpec::Quantize { bits: 8 },
+            topology: Topology::Ring,
+            n_nodes: n,
+            seed: 0x11f7,
+            eta: if e.caps.uses_eta { 0.5 } else { 1.0 },
+        })
+        .collect();
+    cells.push(ExperimentSpec {
+        algo: AlgoSpec::Choco,
+        compressor: CompressorSpec::LowRank { rank: 2 },
+        topology: Topology::Ring,
+        n_nodes: n,
+        seed: 0x11f7,
+        eta: 0.5,
+    });
+    for cell in &cells {
+        let (models, x0) = build_models(&kind, &spec);
+        let session = cell.session()?;
+        let run = session
+            .run_simulated(models, &x0, 0.05, 2, SimOpts::default())
+            .map_err(|e| anyhow::anyhow!("registry self-check: {} failed to run: {e}", cell.algo))?;
+        anyhow::ensure!(
+            run.reports.len() == n
+                && run.reports.iter().all(|r| r.final_x.iter().all(|v| v.is_finite())),
+            "registry self-check: {} produced a non-finite iterate",
+            cell.algo
+        );
+    }
+    Ok(cells.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_algo_spec_exactly_once() {
+        assert_eq!(REGISTRY.len(), AlgoSpec::ALL.len());
+        for (entry, spec) in REGISTRY.iter().zip(AlgoSpec::ALL) {
+            assert_eq!(entry.spec, spec, "registry order matches AlgoSpec::ALL");
+        }
+        // Canonical names and aliases are globally unique.
+        let mut names: Vec<&str> = REGISTRY
+            .iter()
+            .flat_map(|e| std::iter::once(e.canonical).chain(e.aliases.iter().copied()))
+            .collect();
+        let total = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), total, "duplicate registered name");
+    }
+
+    #[test]
+    fn self_check_runs_every_entry() {
+        let cells = self_check(4).unwrap();
+        assert_eq!(cells, REGISTRY.len() + 1);
+    }
+
+    #[test]
+    fn list_tables_cover_all_three_axes() {
+        let tables = list_tables();
+        assert_eq!(tables.len(), 3);
+        assert_eq!(tables[0].rows.len(), REGISTRY.len());
+        assert_eq!(tables[1].rows.len(), COMPRESSOR_FAMILIES.len());
+        assert_eq!(tables[2].rows.len(), TOPOLOGY_FAMILIES.len());
+        // Every compressor example parses to its family's capability bits.
+        for f in COMPRESSOR_FAMILIES.iter() {
+            let spec: CompressorSpec = f.example.parse().unwrap();
+            assert_eq!(spec.is_unbiased(), f.unbiased, "{}", f.example);
+            assert_eq!(spec.is_link_state(), f.link_state, "{}", f.example);
+        }
+        // Every topology example parses.
+        for f in TOPOLOGY_FAMILIES.iter() {
+            f.example.parse::<Topology>().unwrap();
+        }
+    }
+}

@@ -155,38 +155,27 @@ fn choco_lowrank_trains_through_public_config() {
     assert!(fin < init, "choco+lowrank should train: {init} -> {fin}");
 }
 
-#[test]
-fn lowrank_rejected_outside_choco_with_clear_error() {
-    // Biased AND stateful: dcd/ecd/qallreduce trip the unbiasedness gate,
-    // everything else trips the link-state gate — never a silent
-    // fallback to the inert placeholder codec.
-    for algo in ["dcd", "ecd", "qallreduce", "dpsgd", "naive", "deepsqueeze"] {
-        let cfg = TrainConfig {
-            algo: algo.into(),
-            compressor: "lowrank_r4".into(),
-            eta: 0.5,
-            ..Default::default()
-        };
-        let err = cfg.build_algo_config().unwrap_err().to_string();
-        assert!(
-            err.contains("biased") || err.contains("link-state"),
-            "{algo}: unexpected error '{err}'"
-        );
-        assert!(err.contains("lowrank_r4"), "{algo}: error must name the compressor: '{err}'");
-    }
-}
+// NOTE: the per-combination rejection tests that used to live here
+// (lowrank-outside-choco, biased-for-DCD/ECD) are subsumed by the
+// exhaustive rejection matrix in `rust/tests/spec_registry.rs`.
 
 // ---------------------------------------------------------------------
 // Failure injection: bad configs fail loudly, never silently.
 
 #[test]
 fn bad_algorithm_name_fails() {
+    // The typed spec layer rejects the name at config-build time, with
+    // the registered list in the message…
     let cfg = TrainConfig {
         algo: "sgd9000".into(),
         ..Default::default()
     };
-    let algo_cfg = cfg.build_algo_config().unwrap();
-    let (models, x0) = cfg.build_models().unwrap();
+    let err = cfg.build_algo_config().unwrap_err().to_string();
+    assert!(err.contains("registered") && err.contains("dpsgd"), "{err}");
+    // …and a hand-built config still fails at the runner.
+    let ok = TrainConfig::default();
+    let algo_cfg = ok.build_algo_config().unwrap();
+    let (models, x0) = ok.build_models().unwrap();
     assert!(run_threaded("sgd9000", &algo_cfg, models, &x0, 0.1, 5).is_err());
 }
 
@@ -209,13 +198,22 @@ fn bad_topology_fails() {
 }
 
 #[test]
-fn hypercube_with_non_power_of_two_panics() {
-    let cfg = TrainConfig {
-        topology: "hypercube".into(),
-        n_nodes: 6,
-        ..Default::default()
-    };
-    assert!(std::panic::catch_unwind(|| cfg.build_mixing()).is_err());
+fn topology_size_mismatches_fail_cleanly() {
+    // The spec layer pre-validates (topology, n) pairings, so bad sizes
+    // reaching from CLI/config input are clean errors, not panics.
+    for (topo, n, needle) in [
+        ("hypercube", 6, "2^d"),
+        ("torus_4x4", 8, "n = 16"),
+        ("torus_2x4", 8, ">= 3"),
+    ] {
+        let cfg = TrainConfig {
+            topology: topo.into(),
+            n_nodes: n,
+            ..Default::default()
+        };
+        let err = cfg.build_mixing().unwrap_err().to_string();
+        assert!(err.contains(needle), "{topo}/n={n}: '{err}'");
+    }
 }
 
 #[test]

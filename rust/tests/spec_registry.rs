@@ -1,0 +1,218 @@
+//! The spec layer's integration contract:
+//!
+//! 1. **Total round-trips** — every registered algorithm, compressor
+//!    family, and topology parses from its own `Display`/`name()` output
+//!    (including the parameterized `torus_RxC` / `random_pP_sS` /
+//!    `lowrank_rN` strings that used to be unparseable or scattered).
+//! 2. **The rejection matrix** — every algorithm × every compressor
+//!    family, with hard-coded accept/reject expectations, asserted
+//!    against both the one admission function and the public
+//!    `TrainConfig` path. This subsumes the per-PR rejection tests the
+//!    earlier suites accumulated (biased-for-DCD/ECD, lowrank-outside-
+//!    choco, eta range).
+//! 3. **Registry ↔ implementation coherence** — every entry constructs
+//!    and steps on the sim backend (the same check `decomp list` and the
+//!    CI smoke step run).
+
+use decomp::coordinator::TrainConfig;
+use decomp::spec::{self, AlgoSpec, CompressorSpec, TopologySpec};
+
+#[test]
+fn every_algorithm_round_trips_from_str_to_display() {
+    for algo in AlgoSpec::ALL {
+        let printed = algo.to_string();
+        assert_eq!(printed.parse::<AlgoSpec>().unwrap(), algo, "{printed}");
+        // Canonical name matches the registry entry.
+        assert_eq!(printed, algo.entry().canonical);
+    }
+    // Every registered alias parses to its entry's spec.
+    for entry in spec::REGISTRY.iter() {
+        for alias in entry.aliases {
+            assert_eq!(alias.parse::<AlgoSpec>().unwrap(), entry.spec, "{alias}");
+        }
+    }
+    // Unknown names list the registry.
+    let err = "sgd9000".parse::<AlgoSpec>().unwrap_err().to_string();
+    for entry in spec::REGISTRY.iter() {
+        assert!(err.contains(entry.canonical), "'{err}' missing {}", entry.canonical);
+    }
+}
+
+#[test]
+fn every_compressor_family_round_trips_from_str_to_display() {
+    let instances = [
+        CompressorSpec::Fp32,
+        CompressorSpec::Quantize { bits: 1 },
+        CompressorSpec::Quantize { bits: 2 },
+        CompressorSpec::Quantize { bits: 4 },
+        CompressorSpec::Quantize { bits: 8 },
+        CompressorSpec::Quantize { bits: 16 },
+        CompressorSpec::Sparsify { keep_percent: 10 },
+        CompressorSpec::Sparsify { keep_percent: 25 },
+        CompressorSpec::Sparsify { keep_percent: 50 },
+        CompressorSpec::Sparsify { keep_percent: 100 },
+        CompressorSpec::TopK { keep_percent: 10 },
+        CompressorSpec::TopK { keep_percent: 25 },
+        CompressorSpec::Sign,
+        CompressorSpec::LowRank { rank: 1 },
+        CompressorSpec::LowRank { rank: 2 },
+        CompressorSpec::LowRank { rank: 4 },
+        CompressorSpec::LowRank { rank: 8 },
+        CompressorSpec::LowRank { rank: 64 },
+    ];
+    for c in instances {
+        let printed = c.to_string();
+        assert_eq!(printed.parse::<CompressorSpec>().unwrap(), c, "{printed}");
+        // The codec (or link spec) the string builds reports the same name,
+        // so config strings, metrics, and bench tables can never disagree.
+        match c.build_stateless() {
+            Some(codec) => assert_eq!(codec.name(), printed),
+            None => {
+                let link = c.link_spec().expect("non-stateless spec is link-state");
+                assert_eq!(link.name(), printed);
+            }
+        }
+    }
+    // Legacy aliases still accepted.
+    assert_eq!("identity".parse::<CompressorSpec>().unwrap(), CompressorSpec::Fp32);
+    // Unknown names list the families.
+    let err = "zstd".parse::<CompressorSpec>().unwrap_err().to_string();
+    for family in spec::COMPRESSOR_FAMILIES.iter() {
+        assert!(err.contains(family.pattern), "'{err}' missing {}", family.pattern);
+    }
+}
+
+#[test]
+fn every_topology_round_trips_name_to_parse() {
+    // The former parse gap: `Topology::name()` emitted `torus_RxC` and
+    // `random_pP_sS` strings nothing could parse. The round trip is now
+    // total over every variant, parameterized ones included.
+    let topos = [
+        TopologySpec::Ring,
+        TopologySpec::FullyConnected,
+        TopologySpec::Chain,
+        TopologySpec::Star,
+        TopologySpec::Hypercube,
+        TopologySpec::Torus2d { rows: 3, cols: 5 },
+        TopologySpec::Torus2d { rows: 8, cols: 8 },
+        TopologySpec::Random { p_percent: 30, seed: 7 },
+        TopologySpec::Random { p_percent: 5, seed: 0xdeca },
+    ];
+    for t in topos {
+        assert_eq!(t.to_string(), t.name());
+        assert_eq!(t.name().parse::<TopologySpec>().unwrap(), t, "{}", t.name());
+    }
+    assert_eq!("full".parse::<TopologySpec>().unwrap(), TopologySpec::FullyConnected);
+    let err = "moebius".parse::<TopologySpec>().unwrap_err().to_string();
+    assert!(err.contains("torus_<r>x<c>") && err.contains("ring"), "{err}");
+}
+
+#[test]
+fn parameterized_topologies_build_through_train_config() {
+    for (topo, n) in [("torus_3x4", 12), ("torus_3x3", 9), ("random_p40_s7", 8)] {
+        let cfg = TrainConfig {
+            topology: topo.into(),
+            n_nodes: n,
+            ..Default::default()
+        };
+        let mixing = cfg.build_mixing().unwrap_or_else(|e| panic!("{topo}: {e}"));
+        assert_eq!(mixing.n(), n, "{topo}");
+    }
+}
+
+/// The rejection matrix: every algorithm × a representative of every
+/// compressor family → hard-coded accept/reject. Asserted against the
+/// single admission function AND the public `TrainConfig` construction
+/// path, so the declarative capability table cannot drift from either.
+#[test]
+fn rejection_matrix_every_algorithm_times_every_family() {
+    // (compressor, unbiased, link_state)
+    let compressors = [
+        ("fp32", true, false),
+        ("q8", true, false),
+        ("sparse_p25", true, false),
+        ("topk_25", false, false),
+        ("sign", false, false),
+        ("lowrank_r2", false, true),
+    ];
+    // Hard-coded capability expectations (NOT read from the registry —
+    // this is what pins the registry).
+    let needs_unbiased = ["dcd", "ecd", "qallreduce"];
+    let accepts_link = ["choco"];
+    let uses_eta = ["choco", "deepsqueeze"];
+
+    for algo in AlgoSpec::ALL {
+        let name = algo.to_string();
+        for (comp, unbiased, link_state) in compressors {
+            let expect_ok = (unbiased || !needs_unbiased.contains(&name.as_str()))
+                && (!link_state || accepts_link.contains(&name.as_str()));
+            let eta = if uses_eta.contains(&name.as_str()) { 0.4 } else { 1.0 };
+
+            // (a) the one admission function.
+            let admitted =
+                spec::admit_spec(algo, &comp.parse::<CompressorSpec>().unwrap(), eta);
+            assert_eq!(admitted.is_ok(), expect_ok, "admit: {name}/{comp}");
+
+            // (b) the public TrainConfig path agrees bit for bit.
+            let cfg = TrainConfig {
+                algo: name.clone(),
+                compressor: comp.into(),
+                eta,
+                ..Default::default()
+            };
+            let built = cfg.build_algo_config();
+            assert_eq!(built.is_ok(), expect_ok, "TrainConfig: {name}/{comp}");
+
+            // (c) rejections carry an actionable message naming the
+            // compressor and the violated capability.
+            if !expect_ok {
+                let err = built.unwrap_err().to_string();
+                assert!(
+                    err.contains("biased") || err.contains("link-state"),
+                    "{name}/{comp}: '{err}'"
+                );
+                assert!(err.contains(comp), "{name}/{comp}: error must name codec: '{err}'");
+            }
+        }
+    }
+}
+
+#[test]
+fn eta_range_gated_for_every_algorithm_that_uses_it() {
+    for algo in ["choco", "deepsqueeze"] {
+        for eta in [0.0f32, -0.5, 1.5] {
+            let cfg = TrainConfig {
+                algo: algo.into(),
+                eta,
+                ..Default::default()
+            };
+            assert!(cfg.build_algo_config().is_err(), "{algo} eta {eta}");
+        }
+    }
+}
+
+#[test]
+fn registry_self_check_constructs_every_entry_on_sim() {
+    // Same check `decomp list` and the CI smoke step run: every registry
+    // entry (plus the link-state cell) builds and steps at n=4.
+    let cells = spec::registry::self_check(4).unwrap();
+    assert_eq!(cells, spec::REGISTRY.len() + 1);
+}
+
+#[test]
+fn unknown_algorithm_errors_list_the_registry_on_both_backends() {
+    use decomp::coordinator::{run_simulated, run_threaded};
+    use decomp::network::sim::SimOpts;
+    let cfg = TrainConfig::default();
+    let algo_cfg = cfg.build_algo_config().unwrap();
+    let (models, x0) = cfg.build_models().unwrap();
+    let err = run_threaded("adpsgd", &algo_cfg, models, &x0, 0.1, 2)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("registered") && err.contains("dpsgd"), "{err}");
+    let (models, _) = cfg.build_models().unwrap();
+    let err = run_simulated("adpsgd", &algo_cfg, models, &x0, 0.1, 2, SimOpts::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("registered") && err.contains("dpsgd"), "{err}");
+}
