@@ -1,0 +1,14 @@
+//! Bench: the scenario sweep — the fault-injection grid (churn × lossy
+//! links × non-IID shards) over the six-member algorithm panel at n = 64
+//! on the discrete-event engine.
+
+fn main() {
+    println!(
+        "scenario sweep (experiment backend: sim; quick: {})\n",
+        decomp::bench_harness::quick_mode()
+    );
+    for t in decomp::experiments::scenario_sweep::run(decomp::bench_harness::quick_mode()) {
+        t.print();
+        println!();
+    }
+}

@@ -144,6 +144,7 @@ mod tests {
             seed,
             eta,
             link: None,
+            scenario: None,
         }
     }
 
@@ -273,6 +274,7 @@ mod tests {
             seed,
             eta,
             link,
+            scenario: None,
         }
     }
 

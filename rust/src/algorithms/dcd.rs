@@ -182,6 +182,7 @@ mod tests {
             seed: 8,
             eta: 1.0,
             link: None,
+            scenario: None,
         };
         let mut algo = DcdPsgd::new(cfg, &x0, n);
         let bad_loss = train_loss(&mut algo, &mut models, 0.1, 300);

@@ -125,6 +125,7 @@ mod tests {
             seed,
             eta,
             link: None,
+            scenario: None,
         }
     }
 

@@ -190,6 +190,7 @@ mod tests {
             seed,
             eta: 1.0,
             link: None,
+            scenario: None,
         };
         let init_loss: f64 =
             m_ecd.iter().map(|m| m.full_loss(&x0)).sum::<f64>() / n as f64;

@@ -155,6 +155,13 @@ pub struct AlgoConfig {
     /// is inert; when `None`, the stateless `compressor` is used as
     /// before.
     pub link: Option<Arc<dyn LinkCompressorSpec>>,
+    /// Fault-injection runtime (churn/drop/bandwidth oracles), shared
+    /// with the sim engine. `None` — the default for every hand-built
+    /// config — is the static lossless world; `Session` binds one here
+    /// when an [`crate::spec::ExperimentSpec`] carries a scenario.
+    /// Honored by the sim-backend node programs; the reference and
+    /// threaded backends ignore it (see DESIGN.md, "Scenario layer").
+    pub scenario: Option<Arc<crate::spec::ScenarioRuntime>>,
 }
 
 impl AlgoConfig {
@@ -269,6 +276,7 @@ pub(crate) mod test_support {
             seed,
             eta: 1.0,
             link: None,
+            scenario: None,
         }
     }
 
@@ -279,6 +287,7 @@ pub(crate) mod test_support {
             seed,
             eta: 1.0,
             link: None,
+            scenario: None,
         }
     }
 
@@ -389,6 +398,7 @@ mod tests {
             seed: 1,
             eta: 0.4,
             link,
+            scenario: None,
         };
         assert_eq!(lcfg.compressor_name(), "lowrank_r2");
         assert!(!lcfg.compressor_is_unbiased());
@@ -417,6 +427,7 @@ mod tests {
                 seed: 1,
                 eta: 0.4,
                 link,
+                scenario: None,
             }
         };
         for name in ["dcd", "ecd", "dpsgd", "naive", "allreduce", "qallreduce", "deepsqueeze"] {

@@ -83,6 +83,7 @@ fn collect_with(quick: bool, host_sweep: bool) -> BenchReport {
             n_nodes: 8,
             seed: 0xbe7c,
             eta,
+            scenario: Default::default(),
         };
         let mut a = exp
             .session()
@@ -135,6 +136,12 @@ fn collect_with(quick: bool, host_sweep: bool) -> BenchReport {
     // The lowranksweep quick cells (dim-4096 fold): pins the low-rank
     // wire format's factor sizes through the engine's accounting.
     for (k, v) in crate::experiments::lowrank_sweep::bench_points() {
+        per_iter.insert(k, v);
+    }
+    // The scenariosweep churn cell: pins the engine's round cadence with
+    // the churn/drop machinery engaged (value is closed-form — see
+    // EXPERIMENTS.md).
+    for (k, v) in crate::experiments::scenario_sweep::bench_points() {
         per_iter.insert(k, v);
     }
     groups.insert("sim_virtual_s_per_iter".into(), per_iter);
@@ -372,8 +379,8 @@ mod tests {
         assert!(r.groups["iters_per_sec"].len() == ef_sweep::FAMILY.len());
         assert_eq!(r.groups["host_sweep_wall_s"].len(), 2);
         assert_eq!(r.groups["sim_epoch_s"].len(), 12);
-        // 6 fig3 sweep algos + the 2 lowranksweep quick cells.
-        assert_eq!(r.groups["sim_virtual_s_per_iter"].len(), 8);
+        // 6 fig3 sweep algos + 2 lowranksweep cells + the churn cell.
+        assert_eq!(r.groups["sim_virtual_s_per_iter"].len(), 9);
         for ms in r.groups.values() {
             for (k, v) in ms {
                 assert!(v.is_finite() && *v > 0.0, "{k} = {v}");

@@ -8,7 +8,7 @@
 //! canonical form (`chocosgd` → `choco`, `full` → `fully_connected`).
 
 use crate::coordinator::TrainConfig;
-use crate::spec::{AlgoSpec, CompressorSpec, TopologySpec};
+use crate::spec::{AlgoSpec, CompressorSpec, ScenarioSpec, TopologySpec};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use std::path::Path;
@@ -39,6 +39,7 @@ pub fn load_config(path: &Path) -> anyhow::Result<TrainConfig> {
             "batch" => cfg.batch = req_usize(v, k)?,
             "backend" => cfg.backend = req_str(v, k)?,
             "eta" => cfg.eta = req_f64(v, k)? as f32,
+            "scenario" => cfg.scenario = req_spec::<ScenarioSpec>(v, k)?,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
     }
@@ -72,6 +73,9 @@ pub fn apply_cli_overrides(cfg: &mut TrainConfig, args: &Args) {
     cfg.heterogeneity = args.f64("heterogeneity", cfg.heterogeneity as f64) as f32;
     cfg.batch = args.usize("batch", cfg.batch);
     cfg.eta = args.f64("eta", cfg.eta as f64) as f32;
+    if let Some(v) = args.opt_str("scenario") {
+        cfg.scenario = v.to_string();
+    }
 }
 
 fn req_str(v: &Json, key: &str) -> anyhow::Result<String> {
@@ -205,6 +209,26 @@ mod tests {
         assert!((cfg.eta - 0.7).abs() < 1e-7);
         std::fs::remove_file(p).ok();
         assert_eq!(TrainConfig::default().eta, 1.0);
+    }
+
+    #[test]
+    fn scenario_key_loads_canonicalizes_and_overrides() {
+        // Parses through the typed spec at load time and stores the
+        // canonical Display form (part order is normalized).
+        let p = write_tmp("scen.json", r#"{"scenario":"drop_p5+churn_p10_l150_j300"}"#);
+        let mut cfg = load_config(&p).unwrap();
+        assert_eq!(cfg.scenario, "churn_p10_l150_j300+drop_p5");
+        std::fs::remove_file(p).ok();
+        // A malformed schedule fails at load, naming the key.
+        let p = write_tmp("scenbad.json", r#"{"scenario":"churn_p0_l1_j2"}"#);
+        let err = load_config(&p).unwrap_err().to_string();
+        assert!(err.contains("scenario"), "{err}");
+        std::fs::remove_file(p).ok();
+        // CLI wins over file.
+        let args = Args::parse_from(["--scenario", "drop_p1"].iter().map(|s| s.to_string()));
+        apply_cli_overrides(&mut cfg, &args);
+        assert_eq!(cfg.scenario, "drop_p1");
+        assert_eq!(TrainConfig::default().scenario, "static");
     }
 
     #[test]

@@ -84,6 +84,10 @@ pub struct TrainConfig {
     /// Consensus step size η ∈ (0, 1] for the error-feedback algorithms
     /// (`choco`, `deepsqueeze`); 1.0 is a full gossip step.
     pub eta: f32,
+    /// Fault-injection scenario key (`static`, or a `+`-joined schedule
+    /// like `churn_p10_l150_j300+drop_p1+dirichlet_a30`); sim backend
+    /// only. See [`crate::spec::ScenarioSpec`] for the grammar.
+    pub scenario: String,
 }
 
 impl Default for TrainConfig {
@@ -104,6 +108,7 @@ impl Default for TrainConfig {
             batch: 8,
             backend: "threads".into(),
             eta: 1.0,
+            scenario: "static".into(),
         }
     }
 }
@@ -135,7 +140,8 @@ impl TrainConfig {
             self.n_nodes,
             self.seed,
             self.eta,
-        )
+        )?
+        .with_scenario(&self.scenario)
     }
 
     pub fn build_algo_config(&self) -> anyhow::Result<AlgoConfig> {
@@ -491,6 +497,29 @@ mod tests {
     }
 
     #[test]
+    fn scenario_key_parses_and_gates_admission() {
+        let ok = TrainConfig {
+            algo: "choco".into(),
+            eta: 0.4,
+            scenario: "churn_p10_l20_j40+drop_p1".into(),
+            ..Default::default()
+        };
+        assert!(ok.build_algo_config().is_ok());
+        let bad_key = TrainConfig {
+            scenario: "churn_p200".into(),
+            ..Default::default()
+        };
+        assert!(bad_key.experiment_spec().is_err());
+        // The default algo is dcd: no error-feedback path across churn,
+        // so the same schedule is refused at admission.
+        let unsafe_combo = TrainConfig {
+            scenario: "churn_p10_l20_j40".into(),
+            ..Default::default()
+        };
+        assert!(unsafe_combo.build_algo_config().is_err());
+    }
+
+    #[test]
     fn backend_names_parse() {
         assert_eq!(Backend::from_name("threads"), Some(Backend::Threads));
         assert_eq!(Backend::from_name("sim"), Some(Backend::Sim));
@@ -532,6 +561,7 @@ mod tests {
             SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
                 compute_per_iter_s: 0.01,
+                scenario: None,
             },
         )
         .unwrap();

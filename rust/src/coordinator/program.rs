@@ -16,9 +16,10 @@
 use crate::algorithms::AlgoConfig;
 use crate::compression::{Compressor, Identity, LinkCompressor, Wire};
 use crate::linalg::vecops;
-use crate::models::GradientModel;
+use crate::models::{GradientModel, ShapeManifest};
 use crate::network::sim::{NodeProgram, Outbox};
 use crate::network::transport::Channel;
+use crate::spec::ScenarioRuntime;
 use crate::util::rng::Pcg64;
 use std::sync::Arc;
 
@@ -29,6 +30,17 @@ struct Common {
     neighbors: Vec<usize>,
     /// `[w_self, w_neighbor...]` in sorted-neighbor order.
     weights: Vec<f32>,
+    /// Masked Metropolis rows in the same `[self, neighbor...]` layout,
+    /// applied while the churn window is open (empty when the scenario
+    /// schedules no churn).
+    masked_weights: Vec<f32>,
+    /// Per-round scratch: the epoch weights with every non-delivering
+    /// neighbor's entry folded into the self weight and the survivors
+    /// compacted against the received-message prefix.
+    round_weights: Vec<f32>,
+    /// Fault-injection oracles shared with the sim engine (`None` in the
+    /// static lossless world — the only world the threaded backend runs).
+    scenario: Option<Arc<ScenarioRuntime>>,
     compressor: Arc<dyn Compressor>,
     gamma: f32,
     grad_rng: Pcg64,
@@ -52,11 +64,23 @@ impl Common {
         let mut weights = Vec::with_capacity(1 + cfg.mixing.graph.neighbors[node].len());
         weights.push(cfg.mixing.self_weight[node]);
         weights.extend_from_slice(&cfg.mixing.neighbor_weights[node]);
+        let scenario = cfg.scenario.clone();
+        let mut masked_weights = Vec::new();
+        if let Some(rt) = &scenario {
+            if rt.spec().churn.is_some() {
+                masked_weights.reserve(weights.len());
+                masked_weights.push(rt.masked_self_weight(node));
+                masked_weights.extend_from_slice(rt.masked_neighbor_weights(node));
+            }
+        }
         Common {
             node,
             n: cfg.mixing.n(),
             neighbors: cfg.mixing.graph.neighbors[node].clone(),
+            round_weights: Vec::with_capacity(weights.len()),
             weights,
+            masked_weights,
+            scenario,
             compressor: cfg.compressor.clone(),
             gamma,
             grad_rng: Pcg64::new(cfg.seed, 0x6000 + node as u64),
@@ -76,20 +100,94 @@ impl Common {
         self.losses.push(loss);
     }
 
-    /// out = w_self·first + Σ_k w_k·received[k].
+    /// Is this node up at iteration `t` (always, without a scenario)?
+    fn live_self(&self, t: u64) -> bool {
+        match self.scenario.as_deref() {
+            Some(rt) => rt.live(self.node, t),
+            None => true,
+        }
+    }
+
+    /// Is this node's own broadcast for `(t, phase)` condemned? The
+    /// engine discards the frames either way; error-feedback senders
+    /// also consult this at emit time to skip the compress entirely.
+    fn own_drop(&self, t: u64, phase: usize) -> bool {
+        self.scenario
+            .as_deref()
+            .is_some_and(|rt| rt.dropped_broadcast(t, phase, self.node))
+    }
+
+    /// Does neighbor `j`'s broadcast reach this node in `(t, phase)`? The
+    /// same predicate the engine applies when discarding frames, so the
+    /// expected set always matches what was actually delivered.
+    fn delivers(&self, j: usize, t: u64, phase: usize) -> bool {
+        match self.scenario.as_deref() {
+            Some(rt) => rt.live(j, t) && !rt.dropped_broadcast(t, phase, j),
+            None => true,
+        }
+    }
+
+    /// A frozen node repeats its last recorded loss so every program
+    /// reports one loss per iteration (churn validation pins `leave ≥ 1`,
+    /// so a prior loss always exists).
+    fn push_frozen_loss(&mut self) {
+        let last = *self.losses.last().expect("churn leave >= 1 guarantees a prior loss");
+        self.losses.push(last);
+    }
+
+    /// The iteration's mixing row: the masked Metropolis row while the
+    /// churn window is open, the static row otherwise. Same
+    /// `[self, neighbor...]` layout either way; dead neighbors carry
+    /// weight zero in the masked row.
+    fn epoch_weights(&self, t: u64) -> &[f32] {
+        match self.scenario.as_deref() {
+            Some(rt) if rt.masked_at(t) => &self.masked_weights,
+            _ => &self.weights,
+        }
+    }
+
+    /// Fill `round_weights` for `(t, phase)`: start from the epoch row,
+    /// fold every non-delivering neighbor's weight into the self entry
+    /// (keeping the row stochastic), and compact the survivors so they
+    /// align index-for-index with the received prefix `absorb` gets.
+    /// Without a scenario this is a plain copy of the static row.
+    fn resolve_round_weights(&mut self, t: u64, phase: usize) {
+        let rt = self.scenario.as_deref();
+        let epoch: &[f32] = match rt {
+            Some(r) if r.masked_at(t) => &self.masked_weights,
+            _ => &self.weights,
+        };
+        self.round_weights.clear();
+        self.round_weights.push(epoch[0]);
+        for (k, &j) in self.neighbors.iter().enumerate() {
+            let w = epoch[1 + k];
+            let delivered = match rt {
+                Some(r) => r.live(j, t) && !r.dropped_broadcast(t, phase, j),
+                None => true,
+            };
+            if delivered {
+                self.round_weights.push(w);
+            } else {
+                self.round_weights[0] += w;
+            }
+        }
+    }
+
+    /// out = weights[0]·first + Σ_k weights[1+k]·received[k].
     ///
     /// Allocation-free restatement of [`vecops::weighted_sum`] over
     /// `[first, received...]`: same zero-weight skip, same column order,
     /// same sequential `axpy` accumulation — so it is bitwise identical
     /// to the column-vector form the reference simulator uses, without
-    /// building a per-call `Vec<&[f32]>`.
-    fn mix_weighted(&self, first: &[f32], received: &[Vec<f32>], out: &mut [f32]) {
-        assert_eq!(self.weights.len(), 1 + received.len());
+    /// building a per-call `Vec<&[f32]>`. `weights` is the static row,
+    /// the masked epoch row, or the per-round `round_weights` scratch.
+    fn mix_weighted(&self, weights: &[f32], first: &[f32], received: &[Vec<f32>], out: &mut [f32]) {
+        assert_eq!(weights.len(), 1 + received.len());
         out.fill(0.0);
-        if self.weights[0] != 0.0 {
-            vecops::axpy(self.weights[0], first, out);
+        if weights[0] != 0.0 {
+            vecops::axpy(weights[0], first, out);
         }
-        for (w, r) in self.weights[1..].iter().zip(received) {
+        for (w, r) in weights[1..].iter().zip(received) {
             if *w != 0.0 {
                 vecops::axpy(*w, r, out);
             }
@@ -115,6 +213,26 @@ impl Common {
     fn gossip_expects(&self, out: &mut Vec<(usize, Channel)>) {
         out.extend(self.neighbors.iter().map(|&f| (f, Channel::Gossip)));
     }
+
+    /// Gossip expects under fault injection: a dead receiver expects
+    /// nothing, and senders whose broadcast is condemned (dead, dropped,
+    /// or timed out) are excluded — mirroring exactly the frames the
+    /// engine discards.
+    fn scenario_expects(&self, t: u64, phase: usize, out: &mut Vec<(usize, Channel)>) {
+        match self.scenario.as_deref() {
+            None => self.gossip_expects(out),
+            Some(rt) => {
+                if !rt.live(self.node, t) {
+                    return;
+                }
+                for &j in &self.neighbors {
+                    if rt.live(j, t) && !rt.dropped_broadcast(t, phase, j) {
+                        out.push((j, Channel::Gossip));
+                    }
+                }
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -127,23 +245,31 @@ struct DpsgdProgram {
 }
 
 impl NodeProgram for DpsgdProgram {
-    fn emit(&mut self, _t: u64, _phase: usize, out: &mut Outbox) {
+    fn emit(&mut self, t: u64, _phase: usize, out: &mut Outbox) {
+        if !self.c.live_self(t) {
+            self.c.push_frozen_loss();
+            return;
+        }
         self.c.grad();
         let mut wire = out.wire();
         Identity.compress_into(&self.c.x, &mut self.c.comp_rng, &mut wire);
         self.c.broadcast(out, wire);
     }
 
-    fn expects(&self, _t: u64, _phase: usize, out: &mut Vec<(usize, Channel)>) {
-        self.c.gossip_expects(out);
+    fn expects(&self, t: u64, phase: usize, out: &mut Vec<(usize, Channel)>) {
+        self.c.scenario_expects(t, phase, out);
     }
 
-    fn absorb(&mut self, _t: u64, _phase: usize, msgs: &[Wire]) {
+    fn absorb(&mut self, t: u64, phase: usize, msgs: &[Wire]) {
+        if !self.c.live_self(t) {
+            return;
+        }
         for (k, w) in msgs.iter().enumerate() {
             Identity.decompress(w, &mut self.recv_bufs[k]);
         }
+        self.c.resolve_round_weights(t, phase);
         let (c, mixed) = (&self.c, &mut self.mixed);
-        c.mix_weighted(&c.x, &self.recv_bufs, mixed);
+        c.mix_weighted(&c.round_weights, &c.x, &self.recv_bufs[..msgs.len()], mixed);
         vecops::axpy(-c.gamma, &c.g, mixed);
         std::mem::swap(&mut self.c.x, &mut self.mixed);
     }
@@ -174,11 +300,20 @@ struct DcdProgram {
 }
 
 impl NodeProgram for DcdProgram {
-    fn emit(&mut self, _t: u64, _phase: usize, out: &mut Outbox) {
+    fn emit(&mut self, t: u64, _phase: usize, out: &mut Outbox) {
+        if !self.c.live_self(t) {
+            self.c.push_frozen_loss();
+            return;
+        }
         self.c.grad();
-        // x_{t+1/2} = W_ii x + Σ_j W_ij x̂_j − γ g.
+        // x_{t+1/2} = W_ii x + Σ_j W_ij x̂_j − γ g. Always the full
+        // static row: DCD's update is defined over its replicas, and it
+        // has no mechanism to learn which of them went stale — mixing
+        // frozen replicas of dead neighbors (and advancing x by a C(z)
+        // nobody received on an own-dropped round) is precisely the
+        // honest no-error-feedback degradation the scenario suite pins.
         let (c, half) = (&self.c, &mut self.half);
-        c.mix_weighted(&c.x, &self.replicas, half);
+        c.mix_weighted(&c.weights, &c.x, &self.replicas, half);
         vecops::axpy(-c.gamma, &c.g, half);
         // z_t = x_{t+1/2} − x_t; broadcast C(z_t).
         vecops::sub(&self.half, &self.c.x, &mut self.z);
@@ -193,16 +328,25 @@ impl NodeProgram for DcdProgram {
         self.c.broadcast(out, wire);
     }
 
-    fn expects(&self, _t: u64, _phase: usize, out: &mut Vec<(usize, Channel)>) {
-        self.c.gossip_expects(out);
+    fn expects(&self, t: u64, phase: usize, out: &mut Vec<(usize, Channel)>) {
+        self.c.scenario_expects(t, phase, out);
     }
 
-    fn absorb(&mut self, _t: u64, _phase: usize, msgs: &[Wire]) {
-        // Apply neighbors' compressed deltas to their replicas.
-        for (k, w) in msgs.iter().enumerate() {
-            self.c.compressor.decompress(w, &mut self.cz);
-            vecops::axpy(1.0, &self.cz, &mut self.replicas[k]);
+    fn absorb(&mut self, t: u64, phase: usize, msgs: &[Wire]) {
+        if !self.c.live_self(t) {
+            return;
         }
+        // Apply the delivered neighbors' compressed deltas to their
+        // replicas; a missed delta is a permanent replica offset.
+        let mut k = 0;
+        for (idx, &j) in self.c.neighbors.iter().enumerate() {
+            if self.c.delivers(j, t, phase) {
+                self.c.compressor.decompress(&msgs[k], &mut self.cz);
+                vecops::axpy(1.0, &self.cz, &mut self.replicas[idx]);
+                k += 1;
+            }
+        }
+        debug_assert_eq!(k, msgs.len());
     }
 
     fn set_gamma(&mut self, gamma: f32) {
@@ -233,11 +377,18 @@ struct EcdProgram {
 
 impl NodeProgram for EcdProgram {
     fn emit(&mut self, ti: u64, _phase: usize, out: &mut Outbox) {
+        if !self.c.live_self(ti) {
+            self.c.push_frozen_loss();
+            return;
+        }
         let t = (ti + 1) as f32;
         self.c.grad();
         // x_{t+1/2} = Σ_j W_ij x̃_j (self estimate included), then SGD.
+        // Like DCD, always the full static row over the estimates: ECD
+        // cannot tell a stale x̃_j from a fresh one, so churn and drops
+        // surface as permanently divergent extrapolation state.
         let (c, x_new) = (&self.c, &mut self.x_new);
-        c.mix_weighted(&self.tilde_self, &self.tilde_nbrs, x_new);
+        c.mix_weighted(&c.weights, &self.tilde_self, &self.tilde_nbrs, x_new);
         vecops::axpy(-c.gamma, &c.g, x_new);
         // z = (1 − 0.5t) x_t + 0.5t x_{t+1}.
         let a = 1.0 - 0.5 * t;
@@ -255,16 +406,26 @@ impl NodeProgram for EcdProgram {
         self.c.broadcast(out, wire);
     }
 
-    fn expects(&self, _t: u64, _phase: usize, out: &mut Vec<(usize, Channel)>) {
-        self.c.gossip_expects(out);
+    fn expects(&self, t: u64, phase: usize, out: &mut Vec<(usize, Channel)>) {
+        self.c.scenario_expects(t, phase, out);
     }
 
-    fn absorb(&mut self, ti: u64, _phase: usize, msgs: &[Wire]) {
-        let t = (ti + 1) as f32;
-        for (k, w) in msgs.iter().enumerate() {
-            self.c.compressor.decompress(w, &mut self.cz);
-            vecops::axpby(2.0 / t, &self.cz, 1.0 - 2.0 / t, &mut self.tilde_nbrs[k]);
+    fn absorb(&mut self, ti: u64, phase: usize, msgs: &[Wire]) {
+        if !self.c.live_self(ti) {
+            // Frozen: no estimate recursion, and x_new was never formed,
+            // so the x ↔ x_new swap is skipped too.
+            return;
         }
+        let t = (ti + 1) as f32;
+        let mut k = 0;
+        for (idx, &j) in self.c.neighbors.iter().enumerate() {
+            if self.c.delivers(j, ti, phase) {
+                self.c.compressor.decompress(&msgs[k], &mut self.cz);
+                vecops::axpby(2.0 / t, &self.cz, 1.0 - 2.0 / t, &mut self.tilde_nbrs[idx]);
+                k += 1;
+            }
+        }
+        debug_assert_eq!(k, msgs.len());
         std::mem::swap(&mut self.c.x, &mut self.x_new);
     }
 
@@ -291,9 +452,15 @@ struct NaiveProgram {
 }
 
 impl NodeProgram for NaiveProgram {
-    fn emit(&mut self, _t: u64, _phase: usize, out: &mut Outbox) {
+    fn emit(&mut self, t: u64, _phase: usize, out: &mut Outbox) {
+        if !self.c.live_self(t) {
+            self.c.push_frozen_loss();
+            return;
+        }
         self.c.grad();
-        // Broadcast C(x_t); own update uses the exact local x.
+        // Broadcast C(x_t); own update uses the exact local x. An
+        // own-dropped round still compresses (oblivious sender — the
+        // engine discards the frames).
         let mut wire = out.wire();
         self.c
             .compressor
@@ -301,16 +468,20 @@ impl NodeProgram for NaiveProgram {
         self.c.broadcast(out, wire);
     }
 
-    fn expects(&self, _t: u64, _phase: usize, out: &mut Vec<(usize, Channel)>) {
-        self.c.gossip_expects(out);
+    fn expects(&self, t: u64, phase: usize, out: &mut Vec<(usize, Channel)>) {
+        self.c.scenario_expects(t, phase, out);
     }
 
-    fn absorb(&mut self, _t: u64, _phase: usize, msgs: &[Wire]) {
+    fn absorb(&mut self, t: u64, phase: usize, msgs: &[Wire]) {
+        if !self.c.live_self(t) {
+            return;
+        }
         for (k, w) in msgs.iter().enumerate() {
             self.c.compressor.decompress(w, &mut self.recv_bufs[k]);
         }
+        self.c.resolve_round_weights(t, phase);
         let (c, mixed) = (&self.c, &mut self.mixed);
-        c.mix_weighted(&c.x, &self.recv_bufs, mixed);
+        c.mix_weighted(&c.round_weights, &c.x, &self.recv_bufs[..msgs.len()], mixed);
         vecops::axpy(-c.gamma, &c.g, mixed);
         std::mem::swap(&mut self.c.x, &mut self.mixed);
     }
@@ -345,6 +516,11 @@ struct ChocoProgram {
     /// correction to every neighbor, so its replica-mirror invariant
     /// requires one stream, keyed `(node, node)` (DESIGN.md §3c).
     link: Box<dyn LinkCompressor>,
+    /// Everything needed to rebuild `link` from scratch when this node
+    /// rejoins after churn (the stream it was feeding went stale on every
+    /// receiver, so the encoder restarts cold). Present only when the
+    /// scenario schedules churn.
+    rewarm: Option<(AlgoConfig, ShapeManifest)>,
     /// x̂^{(i)}: this node's own public copy.
     xhat_self: Vec<f32>,
     /// x̂^{(j)}: replicas of the neighbors' public copies.
@@ -355,12 +531,53 @@ struct ChocoProgram {
     cz: Vec<f32>,
 }
 
+impl ChocoProgram {
+    /// The rejoin resync protocol (DESIGN.md "Scenario layer"): at
+    /// `t == join`, before any emit, every live node zeroes its copy of
+    /// each stale public stream — the rejoiner's own x̂ plus, on the
+    /// rejoiner itself, its replicas of graph neighbors (their broadcasts
+    /// were missed during the outage). A reset on both the owner and all
+    /// replica holders of a stream keeps the replica-mirror invariant
+    /// intact: from here the correction sequence rebuilds x̂ identically
+    /// everywhere. The rejoiner also rebuilds its link encoder cold.
+    fn rejoin_resync(&mut self, t: u64) {
+        let Some(rt) = self.c.scenario.clone() else { return };
+        if !rt.rejoin_at(t) {
+            return;
+        }
+        if rt.needs_rejoin_reset(self.c.node) {
+            self.xhat_self.fill(0.0);
+        }
+        for (k, &j) in self.c.neighbors.iter().enumerate() {
+            if rt.needs_rejoin_reset(j) {
+                self.xhat_nbrs[k].fill(0.0);
+            }
+        }
+        if rt.churned(self.c.node) {
+            let (cfg, manifest) = self.rewarm.as_ref().expect("churn scheduled => rewarm kept");
+            self.link = cfg.link_for(self.c.node, manifest);
+        }
+    }
+}
+
 impl NodeProgram for ChocoProgram {
-    fn emit(&mut self, _t: u64, _phase: usize, out: &mut Outbox) {
+    fn emit(&mut self, t: u64, phase: usize, out: &mut Outbox) {
+        self.rejoin_resync(t);
+        if !self.c.live_self(t) {
+            self.c.push_frozen_loss();
+            return;
+        }
         self.c.grad();
         // x_{t+½} = x_t − γ g_t.
         self.half.copy_from_slice(&self.c.x);
         vecops::axpy(-self.c.gamma, &self.c.g, &mut self.half);
+        if self.c.own_drop(t, phase) {
+            // EF semantics of a dropped broadcast: no compress, so the
+            // link state and comp_rng do not advance, x̂ stays put, and
+            // the correction this round would have carried is still in
+            // x_{t+½} − x̂ — it rides out with the next frame.
+            return;
+        }
         // q = C(x_{t+½} − x̂); broadcast, and apply to the own copy (the
         // identical update every neighbor applies to its replica of us).
         // This is the one compress per node per iteration that advances
@@ -374,20 +591,35 @@ impl NodeProgram for ChocoProgram {
         self.c.broadcast(out, wire);
     }
 
-    fn expects(&self, _t: u64, _phase: usize, out: &mut Vec<(usize, Channel)>) {
-        self.c.gossip_expects(out);
+    fn expects(&self, t: u64, phase: usize, out: &mut Vec<(usize, Channel)>) {
+        self.c.scenario_expects(t, phase, out);
     }
 
-    fn absorb(&mut self, _t: u64, _phase: usize, msgs: &[Wire]) {
-        // Apply the neighbors' corrections to their replicas (decoding is
-        // state-free: the wires carry both factors).
-        for (k, w) in msgs.iter().enumerate() {
-            self.link.decompress(w, &mut self.cz);
-            vecops::axpy(1.0, &self.cz, &mut self.xhat_nbrs[k]);
+    fn absorb(&mut self, t: u64, phase: usize, msgs: &[Wire]) {
+        if !self.c.live_self(t) {
+            return;
         }
-        // x_{t+1} = x_{t+½} + η (Σ_j W_ij x̂^{(j)} − x̂^{(i)}).
+        // Apply the delivered neighbors' corrections to their replicas
+        // (decoding is state-free: the wires carry both factors). A
+        // missed correction leaves the replica where the sender's x̂
+        // also stopped advancing for us — the mirror holds.
+        let mut k = 0;
+        for (idx, &j) in self.c.neighbors.iter().enumerate() {
+            if self.c.delivers(j, t, phase) {
+                self.link.decompress(&msgs[k], &mut self.cz);
+                vecops::axpy(1.0, &self.cz, &mut self.xhat_nbrs[idx]);
+                k += 1;
+            }
+        }
+        debug_assert_eq!(k, msgs.len());
+        // x_{t+1} = x_{t+½} + η (Σ_j W_ij x̂^{(j)} − x̂^{(i)}). During a
+        // churn window the masked row drops dead neighbors (their x̂
+        // replicas are frozen *and* excluded); otherwise the full static
+        // row — a same-round drop only delays a correction, it does not
+        // desync the copies, so the gossip term stays full-arity.
+        let epoch = self.c.epoch_weights(t);
         self.c
-            .mix_weighted(&self.xhat_self, &self.xhat_nbrs, &mut self.mixed);
+            .mix_weighted(epoch, &self.xhat_self, &self.xhat_nbrs, &mut self.mixed);
         let eta = self.eta;
         for ((xd, hd), (md, sd)) in self
             .c
@@ -431,11 +663,24 @@ struct DeepSqueezeProgram {
 }
 
 impl NodeProgram for DeepSqueezeProgram {
-    fn emit(&mut self, _t: u64, _phase: usize, out: &mut Outbox) {
+    fn emit(&mut self, t: u64, phase: usize, out: &mut Outbox) {
+        if !self.c.live_self(t) {
+            self.c.push_frozen_loss();
+            return;
+        }
         self.c.grad();
-        // z = x − γ g + δ (error-compensated half-step).
+        // z = x − γ g (the uncompensated half-step; δ joins only if this
+        // round's frame actually goes out).
         self.z.copy_from_slice(&self.c.x);
         vecops::axpy(-self.c.gamma, &self.c.g, &mut self.z);
+        if self.c.own_drop(t, phase) {
+            // EF semantics of a dropped broadcast: no compress (comp_rng
+            // untouched) and δ is left bitwise intact — the memory
+            // replays on the next delivered frame. This round's absorb
+            // mixes around the raw half-step z instead of C(z).
+            return;
+        }
+        // z += δ (error-compensated half-step).
         vecops::axpy(1.0, &self.e, &mut self.z);
         let mut wire = out.wire();
         self.c
@@ -447,19 +692,33 @@ impl NodeProgram for DeepSqueezeProgram {
         self.c.broadcast(out, wire);
     }
 
-    fn expects(&self, _t: u64, _phase: usize, out: &mut Vec<(usize, Channel)>) {
-        self.c.gossip_expects(out);
+    fn expects(&self, t: u64, phase: usize, out: &mut Vec<(usize, Channel)>) {
+        self.c.scenario_expects(t, phase, out);
     }
 
-    fn absorb(&mut self, _t: u64, _phase: usize, msgs: &[Wire]) {
+    fn absorb(&mut self, t: u64, phase: usize, msgs: &[Wire]) {
+        if !self.c.live_self(t) {
+            return;
+        }
         for (k, w) in msgs.iter().enumerate() {
             self.c.compressor.decompress(w, &mut self.recv_bufs[k]);
         }
-        // x_{t+1} = C(z^{(i)}) + η (Σ_j W_ij C(z^{(j)}) − C(z^{(i)})).
-        self.c
-            .mix_weighted(&self.cz_self, &self.recv_bufs, &mut self.mixed);
+        // x_{t+1} = b + η (Σ_j W_ij C(z^{(j)}) − b) where b is this
+        // node's own column: C(z^{(i)}) normally, or the raw half-step
+        // when our own frame was the one dropped. Non-delivering
+        // neighbors fold their weight into the self entry (DeepSqueeze
+        // mixes fresh broadcasts, not replicas, so the row renormalizes
+        // per round).
+        self.c.resolve_round_weights(t, phase);
+        let own: &[f32] = if self.c.own_drop(t, phase) {
+            &self.z
+        } else {
+            &self.cz_self
+        };
+        let (c, mixed) = (&self.c, &mut self.mixed);
+        c.mix_weighted(&c.round_weights, own, &self.recv_bufs[..msgs.len()], mixed);
         let eta = self.eta;
-        for ((xd, cd), md) in self.c.x.iter_mut().zip(&self.cz_self).zip(&self.mixed) {
+        for ((xd, cd), md) in self.c.x.iter_mut().zip(own.iter()).zip(self.mixed.iter()) {
             *xd = *cd + eta * (*md - *cd);
         }
     }
@@ -694,9 +953,16 @@ pub(crate) fn choco_program(
     let manifest = model.shape_manifest();
     let c = Common::new(cfg, node, model, x0, gamma, iters);
     let (dim, deg) = (x0.len(), c.neighbors.len());
+    // Keep the link-rebuild recipe only when churn can actually force a
+    // cold restart of the encoder stream.
+    let churn_scheduled = cfg
+        .scenario
+        .as_deref()
+        .is_some_and(|rt| rt.spec().churn.is_some());
     Box::new(ChocoProgram {
         eta: cfg.eta,
         link: cfg.link_for(node, &manifest),
+        rewarm: churn_scheduled.then(|| (cfg.clone(), manifest.clone())),
         xhat_self: x0.to_vec(),
         xhat_nbrs: vec![x0.to_vec(); deg],
         c,

@@ -207,6 +207,198 @@ pub fn build_models(kind: &ModelKind, spec: &SynthSpec) -> (Vec<Box<dyn Gradient
     }
 }
 
+/// One Gamma(α, 1) draw (Marsaglia–Tsang squeeze; the α < 1 boost uses
+/// Gamma(α+1)·U^{1/α}).
+fn gamma_sample(alpha: f64, rng: &mut Pcg64) -> f64 {
+    if alpha < 1.0 {
+        let u = rng.f64();
+        return gamma_sample(alpha + 1.0, rng) * u.powf(1.0 / alpha);
+    }
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.normal_with(0.0, 1.0);
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v = v * v * v;
+        let u = rng.f64();
+        if u < 1.0 - 0.0331 * x.powi(4) {
+            return d * v;
+        }
+        if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+            return d * v;
+        }
+    }
+}
+
+/// One draw from Dirichlet(α·1_k): k Gamma(α) variates, normalized. Falls
+/// back to the uniform simplex point if the draws underflow to zero (tiny
+/// α can do this in f64).
+pub fn dirichlet_weights(alpha: f64, k: usize, rng: &mut Pcg64) -> Vec<f64> {
+    assert!(alpha > 0.0 && k > 0);
+    let mut w: Vec<f64> = (0..k).map(|_| gamma_sample(alpha, rng)).collect();
+    let sum: f64 = w.iter().sum();
+    if sum <= 0.0 || !sum.is_finite() {
+        return vec![1.0 / k as f64; k];
+    }
+    for v in &mut w {
+        *v /= sum;
+    }
+    w
+}
+
+/// Apportion `total` items to `weights.len()` bins by largest remainder:
+/// every bin gets ⌊w_i·total⌋, and the leftover items go to the largest
+/// fractional parts (ties broken by lowest index, so the apportionment is
+/// deterministic). Always sums to exactly `total`.
+fn largest_remainder(weights: &[f64], total: usize) -> Vec<usize> {
+    let sum: f64 = weights.iter().sum();
+    let mut counts = Vec::with_capacity(weights.len());
+    let mut fracs = Vec::with_capacity(weights.len());
+    let mut assigned = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        let ideal = w / sum * total as f64;
+        let floor = ideal.floor() as usize;
+        counts.push(floor);
+        assigned += floor;
+        fracs.push((ideal - floor as f64, i));
+    }
+    fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    // The leftover is ≤ len(weights) up to f64 rounding; `cycle` keeps the
+    // exact-cover contract even in that pathological case.
+    for &(_, i) in fracs.iter().cycle().take(total - assigned) {
+        counts[i] += 1;
+    }
+    counts
+}
+
+/// The federated non-IID protocol: for every class c, a fresh
+/// Dirichlet(α) draw over nodes splits that class's samples (largest
+/// remainder, so counts are exact). Small α concentrates each class on a
+/// few nodes; large α recovers a near-uniform class mixture. Returns one
+/// index list per node; together the lists cover `0..labels.len()`
+/// exactly once at any α — pinned by a property test.
+pub fn dirichlet_partition(
+    n_nodes: usize,
+    labels: &[usize],
+    n_classes: usize,
+    alpha: f64,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    assert!(n_nodes > 0 && n_classes > 0 && alpha > 0.0);
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); n_classes];
+    for (i, &c) in labels.iter().enumerate() {
+        by_class[c].push(i);
+    }
+    let mut out = vec![Vec::new(); n_nodes];
+    for (c, idxs) in by_class.into_iter().enumerate() {
+        if idxs.is_empty() {
+            continue;
+        }
+        let mut rng = Pcg64::new(seed, 0x44_0000 + c as u64);
+        let w = dirichlet_weights(alpha, n_nodes, &mut rng);
+        let counts = largest_remainder(&w, idxs.len());
+        let mut cursor = 0;
+        for (node, &cnt) in counts.iter().enumerate() {
+            out[node].extend_from_slice(&idxs[cursor..cursor + cnt]);
+            cursor += cnt;
+        }
+    }
+    out
+}
+
+/// Build per-node models from ONE global pool split by
+/// [`dirichlet_partition`] — the scenario layer's heterogeneity axis. The
+/// pool itself is homogeneous (per-node ground-truth shift disabled), so
+/// *all* cross-node gradient variation comes from the label-skewed split:
+/// the same data at α → ∞ approaches the IID baseline. Shard-free
+/// families (quadratic) are rejected — they have no rows to partition.
+pub fn dirichlet_models(
+    kind: &ModelKind,
+    spec: &SynthSpec,
+    alpha: f64,
+) -> anyhow::Result<(Vec<Box<dyn GradientModel>>, Vec<f32>)> {
+    anyhow::ensure!(
+        alpha > 0.0 && alpha.is_finite(),
+        "dirichlet alpha must be positive and finite, got {alpha}"
+    );
+    let pool_spec = SynthSpec {
+        n_nodes: 1,
+        rows_per_node: spec.n_nodes * spec.rows_per_node,
+        heterogeneity: 0.0,
+        ..*spec
+    };
+    let (pool, labels, n_classes) = match kind {
+        ModelKind::Quadratic { .. } => {
+            anyhow::bail!("the quadratic family has no sample rows to partition; use a shard model")
+        }
+        ModelKind::Linear { .. } => {
+            let pool = linear_shards(&pool_spec).pop().expect("one pool shard");
+            // Continuous targets: sign buckets as pseudo-classes.
+            let labels: Vec<usize> = pool.targets.iter().map(|&t| (t > 0.0) as usize).collect();
+            (pool, labels, 2)
+        }
+        ModelKind::Logistic { .. } => {
+            let pool = logistic_shards(&pool_spec).pop().expect("one pool shard");
+            let labels: Vec<usize> = pool.targets.iter().map(|&t| (t > 0.0) as usize).collect();
+            (pool, labels, 2)
+        }
+        ModelKind::Mlp { classes, .. } => {
+            let pool = blob_shards(&pool_spec, *classes).pop().expect("one pool shard");
+            let labels: Vec<usize> = pool.targets.iter().map(|&t| t as usize).collect();
+            (pool, labels, *classes)
+        }
+    };
+    let mut parts = dirichlet_partition(spec.n_nodes, &labels, n_classes, alpha, spec.seed);
+    // Every node must hold at least one row (empty shards cannot take a
+    // gradient step): move a row from the fullest node, deterministically.
+    loop {
+        let Some(empty) = parts.iter().position(|p| p.is_empty()) else { break };
+        let donor = (0..parts.len()).max_by_key(|&i| parts[i].len()).expect("nonempty");
+        anyhow::ensure!(parts[donor].len() > 1, "fewer rows than nodes");
+        let moved = parts[donor].pop().expect("donor has rows");
+        parts[empty].push(moved);
+    }
+    let shards: Vec<Shard> = parts
+        .iter()
+        .map(|idxs| {
+            let mut features = Vec::with_capacity(idxs.len() * pool.dim);
+            let mut targets = Vec::with_capacity(idxs.len());
+            for &r in idxs {
+                features.extend_from_slice(&pool.features[r * pool.dim..(r + 1) * pool.dim]);
+                targets.push(pool.targets[r]);
+            }
+            Shard { dim: pool.dim, features, targets }
+        })
+        .collect();
+    let models: Vec<Box<dyn GradientModel>> = match kind {
+        ModelKind::Quadratic { .. } => unreachable!("rejected above"),
+        ModelKind::Linear { batch } => shards
+            .into_iter()
+            .map(|s| {
+                Box::new(LinearRegression::new(s, *batch).with_l2(1e-4)) as Box<dyn GradientModel>
+            })
+            .collect(),
+        ModelKind::Logistic { batch } => shards
+            .into_iter()
+            .map(|s| Box::new(LogisticRegression::new(s, *batch)) as Box<dyn GradientModel>)
+            .collect(),
+        ModelKind::Mlp { hidden, classes, batch } => shards
+            .into_iter()
+            .map(|s| Box::new(Mlp::new(s, *hidden, *classes, *batch)) as Box<dyn GradientModel>)
+            .collect(),
+    };
+    let x0 = match kind {
+        ModelKind::Mlp { hidden, classes, .. } => {
+            Mlp::init_params(spec.dim, *hidden, *classes, spec.seed)
+        }
+        _ => vec![0.0f32; spec.dim],
+    };
+    Ok((models, x0))
+}
+
 /// Empirical ζ²: average over nodes of ‖∇f_i(x) − ∇f(x)‖² at a point x.
 pub fn empirical_zeta_sq(models: &[Box<dyn GradientModel>], x: &[f32]) -> f64 {
     let n = models.len();
@@ -288,6 +480,84 @@ mod tests {
         let z_lo = empirical_zeta_sq(&lo_models, &x0);
         let z_hi = empirical_zeta_sq(&hi_models, &x0);
         assert!(z_hi > 10.0 * z_lo, "zeta lo {z_lo} vs hi {z_hi}");
+    }
+
+    #[test]
+    fn dirichlet_weights_are_a_simplex_point() {
+        for alpha in [0.05, 0.3, 1.0, 100.0] {
+            let mut rng = Pcg64::new(7, 0x9e);
+            let w = dirichlet_weights(alpha, 16, &mut rng);
+            assert_eq!(w.len(), 16);
+            assert!(w.iter().all(|&v| (0.0..=1.0).contains(&v)), "alpha {alpha}");
+            let sum: f64 = w.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "alpha {alpha}: sum {sum}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_alpha_controls_skew() {
+        // Class concentration: at α = 0.1 most nodes see nearly one class;
+        // at α = 100 every node's class mix is close to the global 50/50.
+        let labels: Vec<usize> = (0..4096).map(|i| i % 2).collect();
+        let imbalance = |alpha: f64| -> f64 {
+            let parts = dirichlet_partition(8, &labels, 2, alpha, 3);
+            let mut worst: f64 = 0.0;
+            for p in &parts {
+                if p.is_empty() {
+                    continue;
+                }
+                let ones = p.iter().filter(|&&i| labels[i] == 1).count() as f64;
+                let frac = ones / p.len() as f64;
+                worst = worst.max((frac - 0.5).abs());
+            }
+            worst
+        };
+        assert!(imbalance(0.1) > 2.0 * imbalance(100.0));
+    }
+
+    #[test]
+    fn dirichlet_models_build_nonempty_shards() {
+        let spec = SynthSpec {
+            n_nodes: 8,
+            rows_per_node: 32,
+            dim: 8,
+            ..Default::default()
+        };
+        for kind in [
+            ModelKind::Linear { batch: 4 },
+            ModelKind::Logistic { batch: 4 },
+            ModelKind::Mlp { hidden: 5, classes: 3, batch: 4 },
+        ] {
+            let (models, x0) = dirichlet_models(&kind, &spec, 0.3).unwrap();
+            assert_eq!(models.len(), 8);
+            for m in &models {
+                assert!(m.full_loss(&x0).is_finite());
+            }
+        }
+        // No rows to partition in the quadratic family.
+        let quad = ModelKind::Quadratic { spread: 1.0, noise: 0.1 };
+        assert!(dirichlet_models(&quad, &spec, 0.3).is_err());
+    }
+
+    #[test]
+    fn dirichlet_split_raises_zeta_over_iid_pool() {
+        // The pool is homogeneous, so the label-skewed split is the only
+        // source of cross-node gradient variation — and it shows.
+        let spec = SynthSpec {
+            n_nodes: 8,
+            rows_per_node: 64,
+            dim: 16,
+            ..Default::default()
+        };
+        let kind = ModelKind::Logistic { batch: 8 };
+        let (skewed, x0) = dirichlet_models(&kind, &spec, 0.1).unwrap();
+        let (mild, _) = dirichlet_models(&kind, &spec, 100.0).unwrap();
+        let z_skewed = empirical_zeta_sq(&skewed, &x0);
+        let z_mild = empirical_zeta_sq(&mild, &x0);
+        assert!(
+            z_skewed > 1.5 * z_mild,
+            "zeta skewed {z_skewed} vs mild {z_mild}"
+        );
     }
 
     #[test]

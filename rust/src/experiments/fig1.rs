@@ -52,6 +52,7 @@ fn run_subopt(
         n_nodes: s.n,
         seed: 0xf161,
         eta: 1.0,
+        scenario: Default::default(),
     };
     let x0 = vec![0.0f32; s.dim];
     let mut a = exp

@@ -124,6 +124,7 @@ pub fn sim_sweep_points(ns: &[usize], iters: usize, net: NetworkModel) -> Vec<Si
             n_nodes: n,
             seed: 0xf163,
             eta,
+            scenario: Default::default(),
         };
         let run = exp
             .session()
@@ -136,6 +137,7 @@ pub fn sim_sweep_points(ns: &[usize], iters: usize, net: NetworkModel) -> Vec<Si
                 SimOpts {
                     cost: CostModel::Uniform(net),
                     compute_per_iter_s: 0.0,
+                    scenario: None,
                 },
             )
             .expect("sim sweep run");

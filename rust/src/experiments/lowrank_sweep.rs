@@ -75,6 +75,7 @@ fn run_cell(
         n_nodes: n,
         seed: 0x10e4,
         eta,
+        scenario: Default::default(),
     };
     let session = exp.session().unwrap_or_else(|e| panic!("{e}"));
     let (models, x0) = build_models(&kind, &spec);
@@ -88,6 +89,7 @@ fn run_cell(
     let sim = SimOpts {
         cost: CostModel::Uniform(cond.model()),
         compute_per_iter_s: compute_s,
+        scenario: None,
     };
     let trace = session
         .run_sim_trace(models, &eval_models, &x0, &opts, sim)

@@ -31,6 +31,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod lowrank_sweep;
 pub mod runner;
+pub mod scenario_sweep;
 
 use crate::algorithms::{self, RunOpts, TracePoint, TrainTrace};
 use crate::data::{build_models, ModelKind, SynthSpec};
@@ -172,6 +173,7 @@ pub fn run_named_topo(
         n_nodes: spec.n_nodes,
         seed,
         eta: 1.0,
+        scenario: Default::default(),
     };
     let session = exp.session().unwrap_or_else(|e| panic!("{e}"));
     match backend {
@@ -184,6 +186,7 @@ pub fn run_named_topo(
             let sim = SimOpts {
                 cost: opts.net.map(CostModel::Uniform).unwrap_or(CostModel::Ideal),
                 compute_per_iter_s: opts.compute_per_iter_s,
+                scenario: None,
             };
             session
                 .run_sim_trace(models, &eval_models, &x0, opts, sim)

@@ -1,0 +1,264 @@
+//! Scenario sweep: the fault-injection grid that shows *why* the
+//! error-feedback family earns its keep.
+//!
+//! Every algorithm family carries different cross-node state, and the
+//! scenario engine stresses exactly that: node churn (leave/rejoin with
+//! masked mixing), lossy links (whole-broadcast drops), and non-IID
+//! dirichlet shards. CHOCO and DeepSqueeze absorb faults through their
+//! residuals — a dropped correction rides out with the next frame, a
+//! rejoin resyncs the public copies — while DCD/ECD's replicas and
+//! extrapolation estimates have no recovery path: every missed update is
+//! a permanent offset. This sweep measures that split on the n = 64 ring.
+//!
+//! Every (member, scenario) cell is an independent deterministic
+//! simulation fanned out over the parallel [`super::runner`] — rows come
+//! back in grid order, bit-identical at any thread count
+//! (`rust/tests/scenario_robustness.rs` pins this).
+
+use crate::algorithms::RunOpts;
+use crate::data::{build_models, dirichlet_models, ModelKind, SynthSpec};
+use crate::metrics::Table;
+use crate::network::cost::{CostModel, NetworkModel};
+use crate::network::sim::SimOpts;
+use crate::spec::{ExperimentSpec, ScenarioSpec, TopologySpec};
+use std::time::Instant;
+
+use super::runner;
+
+/// The sweep's churn schedule: 10% of nodes (6 of 64) leave at t = 30 and
+/// rejoin at t = 75. The cell seed below samples a churn set that leaves
+/// every live ring node at least one live neighbor.
+pub const CHURN: &str = "churn_p10_l30_j75";
+
+/// Cell seed shared by every scenario cell (models, RNG streams, churn
+/// set, drop coins).
+pub const CELL_SEED: u64 = 0x5c40;
+
+/// The sweep members: the uncompressed baseline, the error-feedback
+/// family (CHOCO top-k / sign, DeepSqueeze 4-bit), and the
+/// replica/estimate family (DCD/ECD 8-bit) whose degradation under
+/// faults is the point of the comparison.
+pub fn members() -> [(&'static str, &'static str, f32); 6] {
+    [
+        ("dpsgd", "fp32", 1.0),
+        ("choco", "topk_25", 0.4),
+        ("choco", "sign", 0.4),
+        ("deepsqueeze", "q4", 0.4),
+        ("dcd", "q8", 1.0),
+        ("ecd", "q8", 1.0),
+    ]
+}
+
+/// One (member, scenario) cell of the sweep.
+pub struct ScenarioRow {
+    pub algo: String,
+    pub scenario: String,
+    pub init_loss: f64,
+    pub final_loss: f64,
+    /// Measured virtual wall-clock for the whole run.
+    pub virtual_s: f64,
+    /// Host wall-clock this cell took (build + simulate), seconds.
+    pub host_s: f64,
+}
+
+/// One self-contained scenario cell on the event engine: n-node ring,
+/// fixed cell seed, 5 MB/s zero-latency uniform links (zero latency keeps
+/// the bench cell's virtual time hand-computable — see EXPERIMENTS.md).
+/// A scenario with a dirichlet component swaps the per-node shards for a
+/// label-skewed split of one homogeneous pool.
+#[allow(clippy::too_many_arguments)]
+pub fn run_cell(
+    n: usize,
+    dim: usize,
+    iters: usize,
+    kind: &ModelKind,
+    algo: &str,
+    comp: &str,
+    eta: f32,
+    scenario: &str,
+) -> ScenarioRow {
+    let t0 = Instant::now();
+    let spec = SynthSpec {
+        n_nodes: n,
+        dim,
+        rows_per_node: 16,
+        noise: 0.1,
+        heterogeneity: 1.0,
+        seed: CELL_SEED,
+    };
+    let sc: ScenarioSpec = scenario.parse().unwrap_or_else(|e| panic!("{e}"));
+    let exp = ExperimentSpec {
+        algo: algo.parse().unwrap_or_else(|e| panic!("{e}")),
+        compressor: comp.parse().unwrap_or_else(|e| panic!("{e}")),
+        topology: TopologySpec::Ring,
+        n_nodes: n,
+        seed: CELL_SEED,
+        eta,
+        scenario: sc,
+    };
+    // DCD/ECD × churn are the deliberate degradation cells: admission
+    // refuses them on the front door (no error-feedback path across a
+    // rejoin), and the sweep runs them anyway to measure exactly what
+    // that gate protects against.
+    let session = if sc.churn.is_some() && !exp.algo.caps().churn_safe {
+        exp.session_unchecked()
+    } else {
+        exp.session().unwrap_or_else(|e| panic!("{e}"))
+    };
+    let build = || match sc.dirichlet_alpha() {
+        Some(alpha) => dirichlet_models(kind, &spec, alpha).unwrap_or_else(|e| panic!("{e}")),
+        None => build_models(kind, &spec),
+    };
+    let (models, x0) = build();
+    let (eval_models, _) = build();
+    let opts = RunOpts {
+        iters,
+        gamma: 0.05,
+        eval_every: iters,
+        ..Default::default()
+    };
+    let sim = SimOpts {
+        cost: CostModel::Uniform(NetworkModel::new(5e6, 0.0)),
+        compute_per_iter_s: 0.0,
+        // Bound by the session from the spec's scenario.
+        scenario: None,
+    };
+    let trace = session
+        .run_sim_trace(models, &eval_models, &x0, &opts, sim)
+        .expect("scenario sweep cell");
+    let last = trace.points.last().unwrap();
+    ScenarioRow {
+        algo: trace.algo.clone(),
+        scenario: scenario.to_string(),
+        init_loss: trace.points[0].global_loss,
+        final_loss: last.global_loss,
+        virtual_s: last.sim_time_s,
+        host_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// The sweep's scenario axis: clean baseline, pure drops, pure churn,
+/// churn + drops, and the non-IID variants of the endpoints.
+pub fn scenarios() -> Vec<(String, &'static str)> {
+    vec![
+        ("static".into(), "static"),
+        ("drop_p1".into(), "drop1"),
+        ("drop_p5".into(), "drop5"),
+        (CHURN.to_string(), "churn"),
+        (format!("{CHURN}+drop_p1"), "churn+drop"),
+        ("dirichlet_a30".into(), "non_iid"),
+        (format!("{CHURN}+drop_p1+dirichlet_a30"), "churn+drop+non_iid"),
+    ]
+}
+
+/// Run every member × every scenario, fanned out over the parallel
+/// runner (rows in member-major grid order).
+pub fn sweep_rows(n: usize, dim: usize, iters: usize) -> Vec<ScenarioRow> {
+    let kind = ModelKind::Logistic { batch: 8 };
+    let cells: Vec<(&'static str, &'static str, f32, String)> = members()
+        .iter()
+        .flat_map(|&(algo, comp, eta)| {
+            scenarios()
+                .into_iter()
+                .map(move |(sc, _)| (algo, comp, eta, sc))
+        })
+        .collect();
+    runner::run_cells(&cells, |_, (algo, comp, eta, sc)| {
+        run_cell(n, dim, iters, &kind, algo, comp, *eta, sc)
+    })
+}
+
+/// Deterministic event-engine virtual seconds per iteration for the
+/// churn bench cell: `dpsgd_fp32@n64`, dim-1024 quadratic, 5 MB/s
+/// zero-latency links, pure communication, 2% churn (one node) inside a
+/// 9-iteration run. Hand-computable: every live node serializes two
+/// 4102-byte frames per round, so per-iter virtual time is exactly
+/// 2 · 4102 · 8 / 5e6 = 0.0131264 s — churn window included, because the
+/// round clock is pinned by the always-live nodes. `bench-summary`
+/// records it and CI enforces it two-sided against BENCH_baseline.json.
+pub fn bench_points() -> Vec<(String, f64)> {
+    let iters = 9;
+    let kind = ModelKind::Quadratic { spread: 1.0, noise: 0.1 };
+    let row = run_cell(64, 1024, iters, &kind, "dpsgd", "fp32", 1.0, "churn_p2_l3_j6");
+    vec![("dpsgd_fp32_churn@n64".to_string(), row.virtual_s / iters as f64)]
+}
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let n = 64;
+    let dim = 64;
+    let iters = if quick { 150 } else { 300 };
+    let rows = sweep_rows(n, dim, iters);
+    let scs = scenarios();
+    let n_sc = scs.len();
+
+    let mut header = vec!["algo".to_string()];
+    header.extend(scs.iter().map(|(_, short)| short.to_string()));
+    let mut table = Table::new(
+        &format!(
+            "Scenario sweep: final global loss on the n={n} ring after {iters} iters \
+             (churn = {CHURN}; EF family recovers, replica family does not)"
+        ),
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for (m, _) in members().iter().enumerate() {
+        let base = m * n_sc;
+        let mut row = vec![rows[base].algo.clone()];
+        for s in 0..n_sc {
+            row.push(format!("{:.4}", rows[base + s].final_loss));
+        }
+        table.row(row);
+    }
+
+    let mut hosts = Table::new(
+        "Scenario sweep: host seconds per cell (build + simulate)",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for (m, _) in members().iter().enumerate() {
+        let base = m * n_sc;
+        let mut row = vec![rows[base].algo.clone()];
+        for s in 0..n_sc {
+            row.push(format!("{:.2}", rows[base + s].host_s));
+        }
+        hosts.row(row);
+    }
+    vec![table, hosts]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drop_cells_still_train_and_are_deterministic() {
+        let kind = ModelKind::Logistic { batch: 8 };
+        let a = run_cell(16, 16, 30, &kind, "dpsgd", "fp32", 1.0, "drop_p5");
+        let b = run_cell(16, 16, 30, &kind, "dpsgd", "fp32", 1.0, "drop_p5");
+        assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
+        assert!(a.final_loss < a.init_loss, "{} -> {}", a.init_loss, a.final_loss);
+    }
+
+    #[test]
+    fn dirichlet_cells_swap_in_skewed_shards() {
+        let kind = ModelKind::Logistic { batch: 8 };
+        let iid = run_cell(16, 16, 30, &kind, "dpsgd", "fp32", 1.0, "static");
+        let skew = run_cell(16, 16, 30, &kind, "dpsgd", "fp32", 1.0, "dirichlet_a30");
+        // Different shards, different trajectory — same global objective
+        // family, so both still train.
+        assert_ne!(iid.final_loss.to_bits(), skew.final_loss.to_bits());
+        assert!(skew.final_loss.is_finite());
+    }
+
+    #[test]
+    fn bench_point_matches_the_closed_form() {
+        let pts = bench_points();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].0, "dpsgd_fp32_churn@n64");
+        // 2 frames × 4102 B × 8 bits / 5 MB/s per round, latency-free.
+        let expected = 2.0 * 4102.0 * 8.0 / 5e6;
+        assert!(
+            (pts[0].1 - expected).abs() < 1e-9,
+            "per-iter {} vs closed form {expected}",
+            pts[0].1
+        );
+    }
+}

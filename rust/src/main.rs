@@ -9,6 +9,7 @@
 //!   fig1..fig4    regenerate a paper figure's table(s)
 //!   efsweep       error-feedback family under the bandwidth×latency grid
 //!   lowranksweep  PowerGossip rank×(bandwidth,latency) grid at n=64
+//!   scenariosweep fault-injection grid: churn × drops × non-IID shards
 //!   ablations     run the theory-driven ablation sweeps
 //!   netmodel      print the per-iteration comm-time landscape
 //!   bench-summary collect the BENCH_*.json perf metrics
@@ -28,7 +29,9 @@ use decomp::algorithms::{self, RunOpts};
 use decomp::bench_harness::summary;
 use decomp::config::{apply_cli_overrides, load_config};
 use decomp::coordinator::{Backend, TrainConfig};
-use decomp::experiments::{ablations, ef_sweep, fig1, fig2, fig3, fig4, lowrank_sweep};
+use decomp::experiments::{
+    ablations, ef_sweep, fig1, fig2, fig3, fig4, lowrank_sweep, scenario_sweep,
+};
 use decomp::metrics::{fmt_bytes, fmt_secs, Table};
 use decomp::network::cost::{CostModel, NetworkModel};
 use decomp::network::sim::SimOpts;
@@ -68,6 +71,7 @@ fn run() -> anyhow::Result<()> {
         "fig4" => print_tables(fig4::run(quick)),
         "efsweep" => print_tables(ef_sweep::run(quick)),
         "lowranksweep" => print_tables(lowrank_sweep::run(quick)),
+        "scenariosweep" => print_tables(scenario_sweep::run(quick)),
         "ablations" => print_tables(ablations::run(quick)),
         "netmodel" => print_tables(fig3::run(false)),
         "bench-summary" => bench_summary(&args, quick),
@@ -95,6 +99,9 @@ COMMANDS
                   torus_RxC|random_pP_sS
                 --gamma F --iters N --model quadratic|linear|logistic|mlp
                 --bandwidth-mbps F --latency-ms F  (sim backend network condition)
+                --scenario KEY  (sim backend fault injection: 'static' or a
+                  '+'-joined schedule, e.g. churn_p10_l150_j300+drop_p1+
+                  dirichlet_a30+bw_h50_e100+timeout_20)
                 --config file.json (CLI flags override file values)
               note: biased compressors (topk_*, sign, lowrank_rN) are rejected
               for dcd/ecd/qallreduce — only error-feedback algorithms admit
@@ -112,6 +119,11 @@ COMMANDS
               at n=64 on the event engine (--quick for small runs)
   lowranksweep  PowerGossip (choco+lowrank_rN) rank×condition grid at n=64,
               dim 10000 (100×100 fold) — the extreme-compression regime
+  scenariosweep fault-injection grid at n=64: {static, drops, churn,
+              churn+drops, non-IID, all combined} × {dpsgd, choco_topk,
+              choco_sign, deepsqueeze_q4, dcd_q8, ecd_q8} — shows the
+              error-feedback family riding out faults the replica family
+              cannot (--quick for small runs)
   ablations   compressor/topology/heterogeneity sweeps
   netmodel    per-iteration communication-time landscape
   bench-summary  collect perf metrics: [--quick] [--out BENCH_pr.json]
@@ -189,6 +201,7 @@ fn train(args: &Args, threaded: bool) -> anyhow::Result<()> {
         let sim = SimOpts {
             cost: CostModel::Uniform(net),
             compute_per_iter_s: args.f64("compute-ms", 0.0) * 1e-3,
+            scenario: None,
         };
         let t0 = std::time::Instant::now();
         let trace = session.run_sim_trace(models, &eval_models, &x0, &opts, sim)?;

@@ -40,7 +40,9 @@
 use crate::compression::Wire;
 use crate::network::cost::CostModel;
 use crate::network::transport::Channel;
+use crate::spec::ScenarioRuntime;
 use std::collections::{BinaryHeap, VecDeque};
+use std::sync::Arc;
 
 // ---------------------------------------------------------------------------
 // Node programs: the per-node algorithm state machines.
@@ -285,6 +287,13 @@ pub struct SimOpts {
     pub cost: CostModel,
     /// Modeled local compute seconds charged once per iteration per node.
     pub compute_per_iter_s: f64,
+    /// Fault-injection runtime (churn/drop/bandwidth oracles). `None` is
+    /// the static lossless network. Must be the *same* runtime the node
+    /// programs hold: the engine discards frames the oracles condemn, and
+    /// the programs shrink their `expects` sets by consulting identical
+    /// predicates — if the two disagree, the executor's "expected a
+    /// message that was never sent" panic fires, by design.
+    pub scenario: Option<Arc<ScenarioRuntime>>,
 }
 
 impl Default for SimOpts {
@@ -292,6 +301,7 @@ impl Default for SimOpts {
         SimOpts {
             cost: CostModel::Ideal,
             compute_per_iter_s: 0.0,
+            scenario: None,
         }
     }
 }
@@ -311,6 +321,9 @@ pub struct SimClock {
     pub frame_bytes: u64,
     /// Frames sent.
     pub frames: u64,
+    /// Frames discarded by scenario fault injection (sender drop/timeout,
+    /// or either endpoint dead) — never serialized, never charged.
+    pub frames_dropped: u64,
 }
 
 impl SimClock {
@@ -321,6 +334,7 @@ impl SimClock {
             payload_bytes: 0,
             frame_bytes: 0,
             frames: 0,
+            frames_dropped: 0,
         }
     }
 
@@ -418,6 +432,8 @@ pub struct SimRun {
     pub frame_bytes: u64,
     /// Frames that crossed the network.
     pub frames: u64,
+    /// Frames condemned by scenario fault injection (never charged).
+    pub frames_dropped: u64,
 }
 
 impl SimRun {
@@ -563,11 +579,30 @@ impl SimEngine {
                 let dests = std::mem::take(&mut self.dests);
                 for &to in &dests {
                     let shell = self.frame_pool.pop().unwrap_or_default();
-                    let frame = std::mem::replace(&mut self.dest_frames[to], shell);
+                    let mut frame = std::mem::replace(&mut self.dest_frames[to], shell);
+                    if let Some(rt) = &self.opts.scenario {
+                        if !rt.live(i, t) || !rt.live(to, t) || rt.dropped_broadcast(t, phase, i) {
+                            // Condemned frame: it never reaches the NIC.
+                            // Payload buffers recycle straight back into
+                            // the emit pool, the shell into the frame
+                            // pool — no bytes, no latency, no charge.
+                            for (_, wire) in frame.msgs.drain(..) {
+                                self.outbox.recycle(wire);
+                            }
+                            self.frame_pool.push(frame);
+                            self.clock.frames_dropped += 1;
+                            continue;
+                        }
+                    }
                     let link = self.opts.cost.link(i, to);
                     let on_wire = frame.encoded_len();
                     let start = self.clock.node_time[i].max(self.clock.nic_free[i]);
-                    let tx = link.tx_seconds(on_wire as f64);
+                    let mut tx = link.tx_seconds(on_wire as f64);
+                    if let Some(rt) = &self.opts.scenario {
+                        // The bandwidth schedule scales link capacity, so
+                        // serialization time divides by the factor.
+                        tx /= rt.bw_factor(t);
+                    }
                     self.clock.nic_free[i] = start + tx;
                     self.bytes_sent[i] += frame.payload_bytes() as u64;
                     self.msgs_sent[i] += frame.msgs.len() as u64;
@@ -653,6 +688,7 @@ impl SimEngine {
             payload_bytes: self.clock.payload_bytes,
             frame_bytes: self.clock.frame_bytes,
             frames: self.clock.frames,
+            frames_dropped: self.clock.frames_dropped,
         }
     }
 }
@@ -809,6 +845,7 @@ mod tests {
             SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(8e6, 1e-3)),
                 compute_per_iter_s: 0.0,
+                scenario: None,
             },
         );
         for r in &run.reports {
@@ -830,6 +867,7 @@ mod tests {
             SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(1e9, 5e-3)),
                 compute_per_iter_s: 0.0,
+                scenario: None,
             },
         );
         let fast = run_sim(
@@ -838,6 +876,7 @@ mod tests {
             SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(1e9, 0.13e-3)),
                 compute_per_iter_s: 0.0,
+                scenario: None,
             },
         );
         assert!(slow.virtual_time_s > 10.0 * fast.virtual_time_s);
@@ -851,6 +890,7 @@ mod tests {
             SimOpts {
                 cost: CostModel::Ideal,
                 compute_per_iter_s: 0.11,
+                scenario: None,
             },
         );
         assert!((run.virtual_time_s - 20.0 * 0.11).abs() < 1e-9);
@@ -865,6 +905,7 @@ mod tests {
             SimOpts {
                 cost: CostModel::Uniform(base),
                 compute_per_iter_s: 0.0,
+                scenario: None,
             },
         );
         let straggled = run_sim(
@@ -873,6 +914,7 @@ mod tests {
             SimOpts {
                 cost: CostModel::uniform_with_stragglers(8, base, &[3], 20.0),
                 compute_per_iter_s: 0.0,
+                scenario: None,
             },
         );
         assert!(straggled.virtual_time_s > 5.0 * uniform.virtual_time_s);
@@ -886,6 +928,7 @@ mod tests {
             SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
                 compute_per_iter_s: 0.01,
+                scenario: None,
             },
         );
         let b = run_sim(
@@ -894,6 +937,7 @@ mod tests {
             SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
                 compute_per_iter_s: 0.01,
+                scenario: None,
             },
         );
         assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits());
@@ -922,6 +966,170 @@ mod tests {
         assert!(engine.slots.iter().all(|q| q.is_empty()));
     }
 
+    fn drop_runtime(n: usize, scenario: &str, seed: u64) -> Arc<ScenarioRuntime> {
+        use crate::topology::{Graph, MixingMatrix, Topology};
+        let spec: crate::spec::ScenarioSpec = scenario.parse().unwrap();
+        let mixing = MixingMatrix::uniform(Graph::build(Topology::Ring, n));
+        Arc::new(ScenarioRuntime::new(&spec, &mixing, seed, None).unwrap())
+    }
+
+    /// A drop-aware echo: senders stay oblivious (the engine discards
+    /// condemned frames at the emit site) while receivers shrink their
+    /// expected set with the same oracle the engine consults.
+    struct LossyEcho {
+        node: usize,
+        n: usize,
+        rt: Arc<ScenarioRuntime>,
+        x: Vec<f32>,
+        losses: Vec<f64>,
+    }
+
+    impl LossyEcho {
+        fn neighbors(&self) -> [usize; 2] {
+            [(self.node + self.n - 1) % self.n, (self.node + 1) % self.n]
+        }
+    }
+
+    impl NodeProgram for LossyEcho {
+        fn emit(&mut self, t: u64, _phase: usize, out: &mut Outbox) {
+            let payload = [self.node as u8, t as u8];
+            for to in self.neighbors() {
+                let mut w = out.wire();
+                w.copy_from(&wire_of(&payload));
+                out.send(to, Channel::Gossip, w);
+            }
+        }
+
+        fn expects(&self, t: u64, _phase: usize, out: &mut Vec<(usize, Channel)>) {
+            for j in self.neighbors() {
+                if self.rt.live(j, t) && !self.rt.dropped_broadcast(t, 0, j) {
+                    out.push((j, Channel::Gossip));
+                }
+            }
+        }
+
+        fn absorb(&mut self, t: u64, _phase: usize, msgs: &[Wire]) {
+            let mut expected = Vec::new();
+            self.expects(t, 0, &mut expected);
+            assert_eq!(msgs.len(), expected.len());
+            for ((from, _), w) in expected.iter().zip(msgs) {
+                assert_eq!(w.payload, vec![*from as u8, t as u8], "payload from {from}");
+            }
+            self.losses.push(msgs.len() as f64);
+            self.x[0] += 1.0;
+        }
+
+        fn set_gamma(&mut self, _gamma: f32) {}
+
+        fn x(&self) -> &[f32] {
+            &self.x
+        }
+
+        fn into_result(self: Box<Self>) -> (Vec<f32>, Vec<f64>) {
+            (self.x, self.losses)
+        }
+    }
+
+    fn lossy_programs(n: usize, rt: &Arc<ScenarioRuntime>) -> Vec<Box<dyn NodeProgram>> {
+        (0..n)
+            .map(|node| {
+                Box::new(LossyEcho {
+                    node,
+                    n,
+                    rt: rt.clone(),
+                    x: vec![0.0],
+                    losses: Vec::new(),
+                }) as Box<dyn NodeProgram>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dropped_frames_recycle_and_never_touch_slots() {
+        let n = 6;
+        let iters = 40u64;
+        let rt = drop_runtime(n, "drop_p30", 0xd201);
+        let mut programs = lossy_programs(n, &rt);
+        let mut engine = SimEngine::new(
+            n,
+            SimOpts {
+                cost: CostModel::Uniform(NetworkModel::new(8e6, 1e-3)),
+                compute_per_iter_s: 0.0,
+                scenario: Some(rt.clone()),
+            },
+        );
+        for t in 0..5 {
+            engine.step(&mut programs, t);
+        }
+        let pool_wires = engine.outbox.pool.len();
+        let pool_frames = engine.frame_pool.len();
+        for t in 5..iters {
+            engine.step(&mut programs, t);
+        }
+        // A dropped frame's wires and shell come straight back: the pools
+        // neither grow nor drain, and no slot ever held a condemned wire.
+        assert_eq!(engine.outbox.pool.len(), pool_wires, "wire pool steady under drops");
+        assert_eq!(engine.frame_pool.len(), pool_frames, "frame pool steady under drops");
+        assert!(engine.slots.iter().all(|q| q.is_empty()));
+        let clock = engine.clock().clone();
+        assert!(clock.frames_dropped > 0, "30% drops must fire in {iters} rounds");
+        assert_eq!(clock.frames + clock.frames_dropped, n as u64 * 2 * iters);
+        // Every delivered frame was absorbed by exactly one receiver.
+        let run = engine.finish(programs);
+        let received: f64 = run.reports.iter().flat_map(|r| r.losses.iter()).sum();
+        assert_eq!(received as u64, clock.frames);
+        assert_eq!(run.frames_dropped, clock.frames_dropped);
+    }
+
+    #[test]
+    fn drops_are_bit_deterministic_across_runs() {
+        let mk = || {
+            let rt = drop_runtime(6, "drop_p20", 0xfeed);
+            let mut programs = lossy_programs(6, &rt);
+            let mut engine = SimEngine::new(
+                6,
+                SimOpts {
+                    cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+                    compute_per_iter_s: 0.01,
+                    scenario: Some(rt),
+                },
+            );
+            for t in 0..30u64 {
+                engine.step(&mut programs, t);
+            }
+            engine.finish(programs)
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits());
+        assert_eq!(a.frame_bytes, b.frame_bytes);
+        assert_eq!(a.frames_dropped, b.frames_dropped);
+        assert!(a.frames_dropped > 0);
+        assert_eq!(a.mean_losses(), b.mean_losses());
+    }
+
+    #[test]
+    fn bandwidth_schedule_stretches_serialization_time() {
+        let opts = |scenario: Option<Arc<ScenarioRuntime>>| SimOpts {
+            cost: CostModel::Uniform(NetworkModel::new(1e6, 0.0)),
+            compute_per_iter_s: 0.0,
+            scenario,
+        };
+        let flat = run_sim(ring_programs(4), 20, opts(None));
+        let rt = drop_runtime(4, "bw_h50_e1", 7);
+        let scheduled = run_sim(ring_programs(4), 20, opts(Some(rt)));
+        // Odd windows run at half bandwidth: 10 of 20 rounds double their
+        // serialization time, so the run lands near 1.5× the flat time.
+        assert!(
+            scheduled.virtual_time_s > 1.3 * flat.virtual_time_s,
+            "{} vs {}",
+            scheduled.virtual_time_s,
+            flat.virtual_time_s
+        );
+        assert_eq!(scheduled.frames, flat.frames, "a bandwidth schedule drops nothing");
+        assert_eq!(scheduled.frames_dropped, 0);
+    }
+
     #[test]
     fn scales_to_many_nodes() {
         // The engine must handle n = 256 rings without breaking a sweat —
@@ -932,6 +1140,7 @@ mod tests {
             SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
                 compute_per_iter_s: 0.0,
+                scenario: None,
             },
         );
         assert_eq!(run.reports.len(), 256);

@@ -28,10 +28,12 @@
 //! never silently drift apart.
 
 pub mod registry;
+pub mod scenario;
 
 pub use registry::{
     AlgoEntry, CompressorFamily, TopologyFamily, COMPRESSOR_FAMILIES, REGISTRY, TOPOLOGY_FAMILIES,
 };
+pub use scenario::{BwSchedule, ChurnSpec, LinkTiming, ScenarioRuntime, ScenarioSpec};
 
 use crate::algorithms::{AlgoConfig, Algorithm, RunOpts, TrainTrace};
 use crate::compression::{Compressor, Identity, LinkCompressorSpec};
@@ -204,6 +206,13 @@ pub struct AlgoCaps {
     /// Consumes the consensus step size η (error-feedback family);
     /// algorithms without this flag ignore η.
     pub uses_eta: bool,
+    /// Survives scheduled node churn: either keeps no cross-node
+    /// replicated state, or (the error-feedback family) re-synchronizes
+    /// its public copies at the rejoin boundary and re-transmits the
+    /// correction through the residual. Algorithms without this flag
+    /// (DCD/ECD's neighbor replicas, the Allreduce hub) silently
+    /// desynchronize when membership changes.
+    pub churn_safe: bool,
 }
 
 // ---------------------------------------------------------------------------
@@ -501,6 +510,48 @@ pub fn admit_config(algo: AlgoSpec, cfg: &AlgoConfig) -> anyhow::Result<()> {
     )
 }
 
+/// Comma-joined names of the churn-safe algorithms (for error messages
+/// and the registry listing).
+pub fn churn_safe_algorithms() -> String {
+    REGISTRY
+        .iter()
+        .filter(|e| e.caps.churn_safe)
+        .map(|e| e.canonical)
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// The scenario admission rule: may `algo` run under this fault
+/// injection? Scheduled churn requires a churn-safe state path (see
+/// [`AlgoCaps::churn_safe`]); any delivery perturbation (churn, random
+/// drops, timeouts) excludes the centralized hub protocols, whose
+/// two-phase reduce has no loss handling. The data/bandwidth parts
+/// (dirichlet shards, bandwidth schedules) are admitted for everything.
+///
+/// Checked in [`ExperimentSpec::session`]; the degradation experiments
+/// deliberately bypass it via [`ExperimentSpec::session_unchecked`] to
+/// exhibit the failure modes this rule exists to prevent.
+pub fn admit_scenario(algo: AlgoSpec, scenario: &ScenarioSpec) -> anyhow::Result<()> {
+    scenario.validate()?;
+    if scenario.churn.is_some() {
+        anyhow::ensure!(
+            algo.caps().churn_safe,
+            "scenario '{scenario}' schedules node churn, which '{algo}' cannot survive: its \
+             cross-node replicated state has no error-feedback path to resynchronize after a \
+             rejoin; churn-safe algorithms: {}",
+            churn_safe_algorithms(),
+        );
+    }
+    if scenario.perturbs_delivery() {
+        anyhow::ensure!(
+            !matches!(algo, AlgoSpec::Allreduce | AlgoSpec::Qallreduce),
+            "scenario '{scenario}' perturbs message delivery and '{algo}' is a centralized \
+             hub protocol with no loss handling; pick a gossip algorithm",
+        );
+    }
+    Ok(())
+}
+
 // ---------------------------------------------------------------------------
 // ExperimentSpec → Session
 
@@ -516,11 +567,15 @@ pub struct ExperimentSpec {
     /// Consensus step size η ∈ (0, 1]; ignored by algorithms whose caps
     /// lack `uses_eta`.
     pub eta: f32,
+    /// Fault-injection scenario (churn/drops/heterogeneity); defaults to
+    /// the static lossless IID world. Applied on the sim backend.
+    pub scenario: ScenarioSpec,
 }
 
 impl ExperimentSpec {
     /// Parse the string triple into a typed spec (each failure lists the
-    /// registered names).
+    /// registered names). The scenario defaults to `static`; chain
+    /// [`ExperimentSpec::with_scenario`] to set one.
     pub fn parse(
         algo: &str,
         compressor: &str,
@@ -536,7 +591,15 @@ impl ExperimentSpec {
             n_nodes,
             seed,
             eta,
+            scenario: ScenarioSpec::default(),
         })
+    }
+
+    /// Parse and attach a scenario string (`static`,
+    /// `churn_p10_l150_j300+drop_p1`, …).
+    pub fn with_scenario(mut self, scenario: &str) -> anyhow::Result<ExperimentSpec> {
+        self.scenario = scenario.parse::<ScenarioSpec>()?;
+        Ok(self)
     }
 
     /// Mixing matrix for this spec's topology (see [`build_mixing`]).
@@ -550,6 +613,7 @@ impl ExperimentSpec {
     pub fn session(&self) -> anyhow::Result<Session> {
         check_topology(self.topology, self.n_nodes)?;
         admit_spec(self.algo, &self.compressor, self.eta)?;
+        admit_scenario(self.algo, &self.scenario)?;
         Ok(self.session_unchecked())
     }
 
@@ -569,10 +633,12 @@ impl ExperimentSpec {
             seed: self.seed,
             eta: self.eta,
             link,
+            scenario: None,
         };
         Session {
             entry: self.algo.entry(),
             cfg,
+            scenario: self.scenario,
         }
     }
 }
@@ -584,9 +650,39 @@ impl ExperimentSpec {
 pub struct Session {
     entry: &'static AlgoEntry,
     cfg: AlgoConfig,
+    scenario: ScenarioSpec,
 }
 
 impl Session {
+    /// Bind the scenario to this run: sample the churn set, resolve the
+    /// masked mixing rows, and derive link timing for the timeout rule
+    /// from a uniform cost model (timeouts are inert on `Ideal`/
+    /// `PerLink` grids). Returns the config/opts pair with the shared
+    /// runtime injected; a static scenario passes both through
+    /// untouched. Errors on a degenerate churn mask (a live node with
+    /// zero live neighbors) *before* any program is built.
+    fn bind_scenario(&self, mut sim: SimOpts) -> anyhow::Result<(AlgoConfig, SimOpts)> {
+        let mut cfg = self.cfg.clone();
+        if !self.scenario.is_static() {
+            let timing = match &sim.cost {
+                crate::network::cost::CostModel::Uniform(m) => Some(LinkTiming {
+                    latency_s: m.latency_s,
+                    bandwidth_bps: m.bandwidth_bps,
+                    frame_bytes: cfg.wire_bytes(cfg.mixing.n()),
+                }),
+                _ => None,
+            };
+            let rt = Arc::new(ScenarioRuntime::new(
+                &self.scenario,
+                &cfg.mixing,
+                cfg.seed,
+                timing,
+            )?);
+            cfg.scenario = Some(rt.clone());
+            sim.scenario = Some(rt);
+        }
+        Ok((cfg, sim))
+    }
     pub fn algo(&self) -> AlgoSpec {
         self.entry.spec
     }
@@ -637,15 +733,8 @@ impl Session {
         iters: usize,
         sim: SimOpts,
     ) -> anyhow::Result<SimRun> {
-        crate::coordinator::run_simulated_entry(
-            self.entry,
-            &self.cfg,
-            models,
-            x0,
-            gamma,
-            iters,
-            sim,
-        )
+        let (cfg, sim) = self.bind_scenario(sim)?;
+        crate::coordinator::run_simulated_entry(self.entry, &cfg, models, x0, gamma, iters, sim)
     }
 
     /// Full traced run on the sim backend (loss/consensus/bytes at the
@@ -658,9 +747,10 @@ impl Session {
         opts: &RunOpts,
         sim: SimOpts,
     ) -> anyhow::Result<TrainTrace> {
+        let (cfg, sim) = self.bind_scenario(sim)?;
         crate::coordinator::run_sim_trace_entry(
             self.entry,
-            &self.cfg,
+            &cfg,
             models,
             eval_models,
             x0,
@@ -743,6 +833,38 @@ mod tests {
         // Eta range.
         assert!(admit_spec(AlgoSpec::Choco, &CompressorSpec::Fp32, 0.0).is_err());
         assert!(admit_spec(AlgoSpec::Choco, &CompressorSpec::Fp32, 1.5).is_err());
+    }
+
+    #[test]
+    fn scenario_admission_gates_churn_and_delivery() {
+        let churn: ScenarioSpec = "churn_p10_l5_j10".parse().unwrap();
+        let drops: ScenarioSpec = "drop_p5".parse().unwrap();
+        let data_only: ScenarioSpec = "dirichlet_a30+bw_h50_e100".parse().unwrap();
+        // Churn needs a churn-safe path.
+        assert!(admit_scenario(AlgoSpec::Choco, &churn).is_ok());
+        assert!(admit_scenario(AlgoSpec::DeepSqueeze, &churn).is_ok());
+        assert!(admit_scenario(AlgoSpec::Dpsgd, &churn).is_ok());
+        let err = admit_scenario(AlgoSpec::Dcd, &churn).unwrap_err().to_string();
+        assert!(err.contains("churn") && err.contains("choco"), "{err}");
+        assert!(admit_scenario(AlgoSpec::Ecd, &churn).is_err());
+        // Drops are fine for DCD/ECD (they run and degrade) but not for
+        // the hub protocols.
+        assert!(admit_scenario(AlgoSpec::Dcd, &drops).is_ok());
+        assert!(admit_scenario(AlgoSpec::Allreduce, &drops).is_err());
+        assert!(admit_scenario(AlgoSpec::Qallreduce, &churn).is_err());
+        // Data/bandwidth parts are universal.
+        for a in AlgoSpec::ALL {
+            assert!(admit_scenario(a, &data_only).is_ok(), "{a}");
+        }
+        // The spec-level session path consults the same rule.
+        let spec = ExperimentSpec::parse("dcd", "q8", "ring", 8, 7, 1.0)
+            .unwrap()
+            .with_scenario("churn_p10_l5_j10")
+            .unwrap();
+        assert!(spec.session().is_err());
+        // …and the unchecked escape hatch still constructs (the
+        // degradation experiments depend on it).
+        let _ = spec.session_unchecked();
     }
 
     #[test]

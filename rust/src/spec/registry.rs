@@ -103,6 +103,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             needs_unbiased: false,
             accepts_link_state: false,
             uses_eta: false,
+            churn_safe: true,
         },
         summary: "D-PSGD (Lian et al., 2017): full-precision gossip, the decentralized baseline",
         trace: TraceName::Fixed("dpsgd_fp32"),
@@ -117,6 +118,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             needs_unbiased: true,
             accepts_link_state: false,
             uses_eta: false,
+            churn_safe: false,
         },
         summary: "DCD-PSGD (Alg. 1): compressed model differences over literal neighbor replicas",
         trace: TraceName::WithCompressor("dcd"),
@@ -131,6 +133,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             needs_unbiased: true,
             accepts_link_state: false,
             uses_eta: false,
+            churn_safe: false,
         },
         summary: "ECD-PSGD (Alg. 2): compressed extrapolations over neighbor estimates",
         trace: TraceName::WithCompressor("ecd"),
@@ -145,6 +148,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             needs_unbiased: false,
             accepts_link_state: false,
             uses_eta: false,
+            churn_safe: true,
         },
         summary: "naively compressed gossip: the Fig. 1 negative example (stalls by design)",
         trace: TraceName::WithCompressor("naive"),
@@ -159,6 +163,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             needs_unbiased: false,
             accepts_link_state: false,
             uses_eta: false,
+            churn_safe: false,
         },
         summary: "centralized Allreduce SGD (hub-rooted reduce + broadcast), fp32",
         trace: TraceName::Fixed("allreduce_fp32"),
@@ -173,6 +178,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             needs_unbiased: true,
             accepts_link_state: false,
             uses_eta: false,
+            churn_safe: false,
         },
         summary: "QSGD-style Allreduce: hub averages compressed gradients",
         trace: TraceName::WithCompressor("allreduce"),
@@ -187,6 +193,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             needs_unbiased: false,
             accepts_link_state: true,
             uses_eta: true,
+            churn_safe: true,
         },
         summary: "CHOCO-SGD (Koloskova et al., 2019): error-feedback gossip over public copies; \
                   admits biased and link-state codecs",
@@ -202,6 +209,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             needs_unbiased: false,
             accepts_link_state: false,
             uses_eta: true,
+            churn_safe: true,
         },
         summary: "DeepSqueeze (Tang et al., 2019): error-compensated compressed-model gossip \
                   under eta-softened mixing",
@@ -328,11 +336,69 @@ pub static TOPOLOGY_FAMILIES: [TopologyFamily; 7] = [
     },
 ];
 
+/// One scenario part for the listing: the fault-injection grammar the
+/// [`super::ScenarioSpec`] parser accepts (parts joined with `+`).
+pub struct ScenarioFamily {
+    pub pattern: &'static str,
+    pub example: &'static str,
+    /// Validation rule the parser enforces.
+    pub constraint: &'static str,
+    pub summary: &'static str,
+}
+
+pub static SCENARIO_FAMILIES: [ScenarioFamily; 6] = [
+    ScenarioFamily {
+        pattern: "static",
+        example: "static",
+        constraint: "-",
+        summary: "lossless fixed-membership IID default; alias: none",
+    },
+    ScenarioFamily {
+        pattern: "churn_p<pct>_l<leave>_j<join>",
+        example: "churn_p10_l150_j300",
+        constraint: "pct in 1..=90, 1 <= leave < join",
+        summary: "pct% of nodes freeze over [leave, join); churn-safe algorithms only",
+    },
+    ScenarioFamily {
+        pattern: "drop_p<pct>",
+        example: "drop_p1",
+        constraint: "pct in 1..=100",
+        summary: "each sender's whole per-round broadcast lost with probability pct%",
+    },
+    ScenarioFamily {
+        pattern: "dirichlet_a<alpha*100>",
+        example: "dirichlet_a30",
+        constraint: "alpha > 0",
+        summary: "non-IID shards: per-node sample counts drawn from dirichlet(alpha)",
+    },
+    ScenarioFamily {
+        pattern: "bw_h<pct>_e<every>",
+        example: "bw_h50_e100",
+        constraint: "pct in 1..=99, every >= 1",
+        summary: "square-wave bandwidth: every other <every>-iteration window runs at pct%",
+    },
+    ScenarioFamily {
+        pattern: "timeout_<ms>",
+        example: "timeout_50",
+        constraint: "ms >= 1",
+        summary: "rounds whose frame transit exceeds <ms> are dropped (uniform cost only)",
+    },
+];
+
 /// Render the registry as printable tables (the `decomp list` body).
 pub fn list_tables() -> Vec<Table> {
     let mut algos = Table::new(
         "registry: algorithms",
-        &["algo", "aliases", "needs_unbiased", "link_state", "uses_eta", "trace", "summary"],
+        &[
+            "algo",
+            "aliases",
+            "needs_unbiased",
+            "link_state",
+            "uses_eta",
+            "churn_safe",
+            "trace",
+            "summary",
+        ],
     );
     for e in REGISTRY.iter() {
         algos.row(vec![
@@ -341,6 +407,7 @@ pub fn list_tables() -> Vec<Table> {
             e.caps.needs_unbiased.to_string(),
             e.caps.accepts_link_state.to_string(),
             e.caps.uses_eta.to_string(),
+            e.caps.churn_safe.to_string(),
             match e.trace {
                 TraceName::Fixed(label) => label.to_string(),
                 TraceName::WithCompressor(base) => format!("{base}_<compressor>"),
@@ -374,7 +441,19 @@ pub fn list_tables() -> Vec<Table> {
             f.summary.into(),
         ]);
     }
-    vec![algos, comps, topos]
+    let mut scenarios = Table::new(
+        "registry: scenarios",
+        &["pattern", "example", "constraint", "summary"],
+    );
+    for f in SCENARIO_FAMILIES.iter() {
+        scenarios.row(vec![
+            f.pattern.into(),
+            f.example.into(),
+            f.constraint.into(),
+            f.summary.into(),
+        ]);
+    }
+    vec![algos, comps, topos, scenarios]
 }
 
 /// Registry ↔ implementation drift check: construct **every** registry
@@ -403,6 +482,7 @@ pub fn self_check(n: usize) -> anyhow::Result<usize> {
             n_nodes: n,
             seed: 0x11f7,
             eta: if e.caps.uses_eta { 0.5 } else { 1.0 },
+            scenario: Default::default(),
         })
         .collect();
     cells.push(ExperimentSpec {
@@ -412,6 +492,7 @@ pub fn self_check(n: usize) -> anyhow::Result<usize> {
         n_nodes: n,
         seed: 0x11f7,
         eta: 0.5,
+        scenario: Default::default(),
     });
     for cell in &cells {
         let (models, x0) = build_models(&kind, &spec);
@@ -457,12 +538,19 @@ mod tests {
     }
 
     #[test]
-    fn list_tables_cover_all_three_axes() {
+    fn list_tables_cover_all_four_axes() {
         let tables = list_tables();
-        assert_eq!(tables.len(), 3);
+        assert_eq!(tables.len(), 4);
         assert_eq!(tables[0].rows.len(), REGISTRY.len());
         assert_eq!(tables[1].rows.len(), COMPRESSOR_FAMILIES.len());
         assert_eq!(tables[2].rows.len(), TOPOLOGY_FAMILIES.len());
+        assert_eq!(tables[3].rows.len(), SCENARIO_FAMILIES.len());
+        // Every scenario example parses back through the spec layer.
+        for f in SCENARIO_FAMILIES.iter() {
+            f.example.parse::<crate::spec::ScenarioSpec>().unwrap_or_else(|e| {
+                panic!("{}: {e}", f.example);
+            });
+        }
         // Every compressor example parses to its family's capability bits.
         for f in COMPRESSOR_FAMILIES.iter() {
             let spec: CompressorSpec = f.example.parse().unwrap();

@@ -1,0 +1,580 @@
+//! The scenario layer: typed fault-injection specs and their runtime.
+//!
+//! A [`ScenarioSpec`] describes the ways a production fleet violates the
+//! paper's §5 assumptions — node churn, lossy links, slow-bandwidth
+//! windows, delivery timeouts, and non-IID dirichlet shards — as one
+//! canonical, round-trippable string (`churn_p10_l150_j300+drop_p1`,
+//! `dirichlet_a30`, `static`). It rides on [`ExperimentSpec`] exactly
+//! like the algorithm/compressor/topology axes do: total
+//! `FromStr` ↔ `Display`, validation at parse time, and a registry table
+//! in `decomp list`.
+//!
+//! A [`ScenarioRuntime`] is the spec bound to a concrete run (node
+//! count, mixing graph, seed, optional link timing). It answers, as pure
+//! deterministic functions of `(seed, t, phase, node)`:
+//!
+//! - [`ScenarioRuntime::live`] — is this node up at iteration `t`?
+//!   Churned nodes freeze over `[leave, join)` and resume from their
+//!   stale parameters at rejoin.
+//! - [`ScenarioRuntime::dropped_broadcast`] — is this sender's entire
+//!   round-`t` broadcast lost? Whole-broadcast drops keep the
+//!   error-feedback family's *shared* state consistent: either every
+//!   holder of a stream applies an update or nobody does. The sim
+//!   engine and every node program consult the *same* function, so the
+//!   expected-message sets always agree with what was actually sent.
+//! - [`ScenarioRuntime::bw_factor`] — the square-wave bandwidth
+//!   schedule's multiplier for iteration `t`.
+//!
+//! Churn masks are resolved once at construction into masked
+//! Metropolis–Hastings rows (see
+//! [`crate::topology::masked_metropolis_weights`]); a mask that leaves a
+//! live node with zero live neighbors is a construction-time error, not
+//! a mid-run panic.
+//!
+//! [`ExperimentSpec`]: super::ExperimentSpec
+
+use super::SpecParseError;
+use crate::topology::{masked_metropolis_weights, MixingMatrix};
+use crate::util::rng::Pcg64;
+use std::fmt;
+use std::str::FromStr;
+
+/// Scheduled node churn: `percent`% of nodes (sampled deterministically
+/// from the experiment seed) leave at iteration `leave` and rejoin at
+/// iteration `join`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ChurnSpec {
+    /// Fraction of nodes that churn, in percent (1..=90).
+    pub percent: u8,
+    /// Iteration at which the churned set freezes (≥ 1).
+    pub leave: u64,
+    /// Iteration at which the churned set resumes (> `leave`).
+    pub join: u64,
+}
+
+/// Square-wave bandwidth schedule: every window of `every` iterations
+/// alternates between full bandwidth and `percent`% of it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BwSchedule {
+    /// Bandwidth multiplier in the slow windows, in percent (1..=99).
+    pub percent: u8,
+    /// Window length in iterations (≥ 1).
+    pub every: u64,
+}
+
+/// A typed fault-injection scenario. `Default` is the static lossless
+/// IID world every pre-scenario experiment ran in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct ScenarioSpec {
+    /// Scheduled leave/join churn, if any.
+    pub churn: Option<ChurnSpec>,
+    /// Per-sender-per-round broadcast drop probability, in percent
+    /// (0..=100; 0 = lossless).
+    pub drop_percent: u8,
+    /// Dirichlet concentration α for non-IID shards, in hundredths
+    /// (`Some(30)` = α 0.30) so `Display` ↔ `FromStr` stays exact.
+    pub dirichlet_alpha_hundredths: Option<u32>,
+    /// Time-varying bandwidth schedule, if any.
+    pub bw: Option<BwSchedule>,
+    /// Delivery timeout in milliseconds: a round whose frame transit
+    /// time (latency + bytes/bandwidth under the current [`BwSchedule`]
+    /// factor) exceeds this is treated as dropped for every sender.
+    pub timeout_ms: Option<u64>,
+}
+
+fn scenario_grammar() -> String {
+    "static, churn_p<pct>_l<leave>_j<join>, drop_p<pct>, dirichlet_a<alpha*100>, \
+     bw_h<pct>_e<every>, timeout_<ms> (parts joined with '+')"
+        .to_string()
+}
+
+fn reject(given: &str) -> SpecParseError {
+    SpecParseError {
+        kind: "scenario",
+        given: given.to_string(),
+        registered: scenario_grammar(),
+    }
+}
+
+impl ScenarioSpec {
+    /// The lossless static IID default.
+    pub fn is_static(&self) -> bool {
+        *self == ScenarioSpec::default()
+    }
+
+    /// Dirichlet α as a float, if non-IID sharding is requested.
+    pub fn dirichlet_alpha(&self) -> Option<f64> {
+        self.dirichlet_alpha_hundredths.map(|h| h as f64 / 100.0)
+    }
+
+    /// Whether any part of the scenario perturbs message delivery or
+    /// membership (churn, random drops, or a timeout) — the parts that
+    /// need algorithm-side support, as opposed to the data/bandwidth
+    /// parts every algorithm tolerates.
+    pub fn perturbs_delivery(&self) -> bool {
+        self.churn.is_some() || self.drop_percent > 0 || self.timeout_ms.is_some()
+    }
+
+    /// Reject out-of-range fields: a hand-built spec gets the same gate
+    /// a parsed string does.
+    pub fn validate(&self) -> Result<(), SpecParseError> {
+        if let Some(c) = self.churn {
+            if c.percent == 0 || c.percent > 90 {
+                return Err(reject(&format!("churn_p{}", c.percent)));
+            }
+            if c.leave == 0 || c.join <= c.leave {
+                return Err(reject(&format!("churn_p{}_l{}_j{}", c.percent, c.leave, c.join)));
+            }
+        }
+        if self.drop_percent > 100 {
+            return Err(reject(&format!("drop_p{}", self.drop_percent)));
+        }
+        if self.dirichlet_alpha_hundredths == Some(0) {
+            return Err(reject("dirichlet_a0"));
+        }
+        if let Some(b) = self.bw {
+            if b.percent == 0 || b.percent > 99 || b.every == 0 {
+                return Err(reject(&format!("bw_h{}_e{}", b.percent, b.every)));
+            }
+        }
+        if self.timeout_ms == Some(0) {
+            return Err(reject("timeout_0"));
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for ScenarioSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_static() {
+            return f.write_str("static");
+        }
+        let mut parts: Vec<String> = Vec::new();
+        if let Some(c) = self.churn {
+            parts.push(format!("churn_p{}_l{}_j{}", c.percent, c.leave, c.join));
+        }
+        if self.drop_percent > 0 {
+            parts.push(format!("drop_p{}", self.drop_percent));
+        }
+        if let Some(a) = self.dirichlet_alpha_hundredths {
+            parts.push(format!("dirichlet_a{a}"));
+        }
+        if let Some(b) = self.bw {
+            parts.push(format!("bw_h{}_e{}", b.percent, b.every));
+        }
+        if let Some(t) = self.timeout_ms {
+            parts.push(format!("timeout_{t}"));
+        }
+        f.write_str(&parts.join("+"))
+    }
+}
+
+impl FromStr for ScenarioSpec {
+    type Err = SpecParseError;
+
+    fn from_str(s: &str) -> Result<ScenarioSpec, SpecParseError> {
+        if s == "static" || s == "none" {
+            return Ok(ScenarioSpec::default());
+        }
+        let mut spec = ScenarioSpec::default();
+        for part in s.split('+') {
+            if let Some(body) = part.strip_prefix("churn_p") {
+                let fields: Vec<&str> = body.split('_').collect();
+                let parsed = match fields.as_slice() {
+                    [p, l, j] => {
+                        let pct = p.parse::<u8>().ok();
+                        let leave = l.strip_prefix('l').and_then(|v| v.parse::<u64>().ok());
+                        let join = j.strip_prefix('j').and_then(|v| v.parse::<u64>().ok());
+                        match (pct, leave, join) {
+                            (Some(percent), Some(leave), Some(join)) => {
+                                Some(ChurnSpec { percent, leave, join })
+                            }
+                            _ => None,
+                        }
+                    }
+                    _ => None,
+                };
+                match (parsed, spec.churn) {
+                    (Some(c), None) => spec.churn = Some(c),
+                    _ => return Err(reject(s)),
+                }
+            } else if let Some(p) = part.strip_prefix("drop_p") {
+                match (p.parse::<u8>().ok(), spec.drop_percent) {
+                    (Some(pct), 0) if pct > 0 => spec.drop_percent = pct,
+                    _ => return Err(reject(s)),
+                }
+            } else if let Some(a) = part.strip_prefix("dirichlet_a") {
+                match (a.parse::<u32>().ok(), spec.dirichlet_alpha_hundredths) {
+                    (Some(h), None) => spec.dirichlet_alpha_hundredths = Some(h),
+                    _ => return Err(reject(s)),
+                }
+            } else if let Some(body) = part.strip_prefix("bw_h") {
+                let parsed = body.split_once("_e").and_then(|(p, e)| {
+                    match (p.parse::<u8>().ok(), e.parse::<u64>().ok()) {
+                        (Some(percent), Some(every)) => Some(BwSchedule { percent, every }),
+                        _ => None,
+                    }
+                });
+                match (parsed, spec.bw) {
+                    (Some(b), None) => spec.bw = Some(b),
+                    _ => return Err(reject(s)),
+                }
+            } else if let Some(t) = part.strip_prefix("timeout_") {
+                match (t.parse::<u64>().ok(), spec.timeout_ms) {
+                    (Some(ms), None) => spec.timeout_ms = Some(ms),
+                    _ => return Err(reject(s)),
+                }
+            } else {
+                return Err(reject(s));
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime
+
+/// Uniform-link timing the timeout rule needs: without it (a `PerLink`
+/// or `Ideal` cost grid) the timeout part is inert.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkTiming {
+    pub latency_s: f64,
+    pub bandwidth_bps: f64,
+    /// Approximate on-wire bytes of one broadcast frame (payload; the
+    /// few framing bytes are below timing resolution).
+    pub frame_bytes: usize,
+}
+
+/// A [`ScenarioSpec`] bound to one run: the sampled churn set, the
+/// masked mixing rows for the churn window, and the deterministic
+/// drop/liveness/bandwidth oracles both the sim engine and every node
+/// program consult.
+#[derive(Debug)]
+pub struct ScenarioRuntime {
+    spec: ScenarioSpec,
+    n: usize,
+    seed: u64,
+    timing: Option<LinkTiming>,
+    is_churned: Vec<bool>,
+    /// Nodes whose public-copy streams must be re-synchronized at the
+    /// rejoin boundary: the churned set plus its graph neighborhood
+    /// (every stream some frozen node holds a stale copy of).
+    needs_reset: Vec<bool>,
+    masked_self: Vec<f32>,
+    masked_nbrs: Vec<Vec<f32>>,
+}
+
+impl ScenarioRuntime {
+    /// Validate the spec, sample the churn set from the experiment seed,
+    /// and resolve the masked Metropolis rows for the churn window.
+    /// Errors cleanly on an out-of-range spec or a degenerate mask that
+    /// leaves a live node with zero live neighbors.
+    pub fn new(
+        spec: &ScenarioSpec,
+        mixing: &MixingMatrix,
+        seed: u64,
+        timing: Option<LinkTiming>,
+    ) -> anyhow::Result<ScenarioRuntime> {
+        spec.validate()?;
+        let n = mixing.n();
+        let mut is_churned = vec![false; n];
+        let mut needs_reset = vec![false; n];
+        let mut masked_self = Vec::new();
+        let mut masked_nbrs = Vec::new();
+        if let Some(c) = spec.churn {
+            let k = ((n * c.percent as usize) / 100).max(1);
+            let mut rng = Pcg64::new(seed, 0x5ce0);
+            for i in rng.sample_indices(n, k) {
+                is_churned[i] = true;
+            }
+            let graph = &mixing.graph;
+            for i in 0..n {
+                if is_churned[i] {
+                    needs_reset[i] = true;
+                    for &j in &graph.neighbors[i] {
+                        needs_reset[j] = true;
+                    }
+                }
+            }
+            let live: Vec<bool> = is_churned.iter().map(|&c| !c).collect();
+            let w = masked_metropolis_weights(graph, &live)?;
+            masked_self = (0..n).map(|i| w[(i, i)] as f32).collect();
+            masked_nbrs = (0..n)
+                .map(|i| graph.neighbors[i].iter().map(|&j| w[(i, j)] as f32).collect())
+                .collect();
+        }
+        Ok(ScenarioRuntime {
+            spec: *spec,
+            n,
+            seed,
+            timing,
+            is_churned,
+            needs_reset,
+            masked_self,
+            masked_nbrs,
+        })
+    }
+
+    pub fn spec(&self) -> &ScenarioSpec {
+        &self.spec
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Is `node` up at iteration `t`? Churned nodes are down over
+    /// `[leave, join)`: they take no gradient steps, send nothing,
+    /// expect nothing, and resume from their frozen parameters.
+    pub fn live(&self, node: usize, t: u64) -> bool {
+        match self.spec.churn {
+            Some(c) => !(self.is_churned[node] && t >= c.leave && t < c.join),
+            None => true,
+        }
+    }
+
+    /// Whether iteration `t` falls inside the churn window (the masked
+    /// mixing rows apply).
+    pub fn masked_at(&self, t: u64) -> bool {
+        matches!(self.spec.churn, Some(c) if t >= c.leave && t < c.join)
+    }
+
+    /// `t` is the rejoin boundary: frozen nodes resume this iteration,
+    /// per-edge link-compressor state is re-warmed, and stale public
+    /// copies of [`ScenarioRuntime::needs_rejoin_reset`] streams are
+    /// re-synchronized before anything is emitted.
+    pub fn rejoin_at(&self, t: u64) -> bool {
+        matches!(self.spec.churn, Some(c) if t == c.join)
+    }
+
+    /// Node in the churn set (regardless of `t`).
+    pub fn churned(&self, node: usize) -> bool {
+        self.is_churned[node]
+    }
+
+    /// Streams whose public copies diverged during the churn window
+    /// (the churned set and its graph neighborhood) and must be reset
+    /// consistently by every holder at the rejoin boundary.
+    pub fn needs_rejoin_reset(&self, node: usize) -> bool {
+        self.needs_reset[node]
+    }
+
+    /// Masked-row W_ii for the churn window.
+    pub fn masked_self_weight(&self, node: usize) -> f32 {
+        self.masked_self[node]
+    }
+
+    /// Masked-row neighbor weights (aligned with `graph.neighbors[node]`;
+    /// dead neighbors carry weight zero).
+    pub fn masked_neighbor_weights(&self, node: usize) -> &[f32] {
+        &self.masked_nbrs[node]
+    }
+
+    /// Bandwidth multiplier at iteration `t` under the square-wave
+    /// schedule (1.0 when no schedule is set or in a fast window).
+    pub fn bw_factor(&self, t: u64) -> f64 {
+        match self.spec.bw {
+            Some(b) if (t / b.every) % 2 == 1 => b.percent as f64 / 100.0,
+            _ => 1.0,
+        }
+    }
+
+    /// Does a frame sent at iteration `t` exceed the delivery timeout?
+    /// Deterministic in virtual time: transit = latency + payload bits /
+    /// (bandwidth × schedule factor). Inert without uniform link timing.
+    fn timed_out(&self, t: u64) -> bool {
+        match (self.spec.timeout_ms, self.timing) {
+            (Some(ms), Some(tim)) => {
+                let tx = tim.frame_bytes as f64 * 8.0 / (tim.bandwidth_bps * self.bw_factor(t));
+                tim.latency_s + tx > ms as f64 * 1e-3
+            }
+            _ => false,
+        }
+    }
+
+    /// Is `sender`'s **entire** broadcast for `(t, phase)` lost? A pure
+    /// function of the experiment seed, so the engine (which discards
+    /// the frames) and every receiver (which shrinks its expected set)
+    /// agree without any side channel. Whole-broadcast granularity keeps
+    /// replicated state consistent: either every neighbor applies the
+    /// sender's compressed update or nobody does.
+    ///
+    /// Error-feedback senders consult this at emit time and skip the
+    /// compress/state-advance entirely — a dropped round leaves their
+    /// residual bitwise identical to a round that never sent, so the
+    /// lost information re-enters the next compressed update.
+    pub fn dropped_broadcast(&self, t: u64, phase: usize, sender: usize) -> bool {
+        if self.timed_out(t) {
+            return true;
+        }
+        if self.spec.drop_percent == 0 {
+            return false;
+        }
+        let stream = 0xd20b_0000_0000u64 ^ (t << 20) ^ ((phase as u64) << 16) ^ sender as u64;
+        let mut rng = Pcg64::new(self.seed ^ 0x10_55, stream);
+        rng.f64() < self.spec.drop_percent as f64 / 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{Graph, Topology};
+
+    fn ring_mixing(n: usize) -> MixingMatrix {
+        MixingMatrix::uniform(Graph::build(Topology::Ring, n))
+    }
+
+    #[test]
+    fn display_from_str_round_trips_every_part() {
+        let specs = [
+            ScenarioSpec::default(),
+            ScenarioSpec {
+                churn: Some(ChurnSpec { percent: 10, leave: 150, join: 300 }),
+                ..Default::default()
+            },
+            ScenarioSpec { drop_percent: 5, ..Default::default() },
+            ScenarioSpec { dirichlet_alpha_hundredths: Some(30), ..Default::default() },
+            ScenarioSpec {
+                bw: Some(BwSchedule { percent: 50, every: 100 }),
+                timeout_ms: Some(40),
+                ..Default::default()
+            },
+            ScenarioSpec {
+                churn: Some(ChurnSpec { percent: 25, leave: 10, join: 20 }),
+                drop_percent: 1,
+                dirichlet_alpha_hundredths: Some(100),
+                bw: Some(BwSchedule { percent: 10, every: 7 }),
+                timeout_ms: Some(1000),
+            },
+        ];
+        for s in specs {
+            let printed = s.to_string();
+            assert_eq!(printed.parse::<ScenarioSpec>().unwrap(), s, "{printed}");
+        }
+        assert_eq!("static".parse::<ScenarioSpec>().unwrap(), ScenarioSpec::default());
+        assert_eq!("none".parse::<ScenarioSpec>().unwrap(), ScenarioSpec::default());
+        assert_eq!(ScenarioSpec::default().to_string(), "static");
+    }
+
+    #[test]
+    fn invalid_schedules_are_rejected() {
+        for bad in [
+            "churn_p10_l300_j150", // join before leave
+            "churn_p10_l100_j100", // join == leave
+            "churn_p10_l0_j5",     // leave before the first iteration
+            "churn_p0_l1_j2",      // empty churn set
+            "churn_p95_l1_j2",     // more than 90% churn
+            "drop_p101",           // drop probability > 1.0
+            "drop_p0",             // explicit zero: spell 'static' instead
+            "dirichlet_a0",        // α ≤ 0
+            "bw_h0_e10",
+            "bw_h100_e10",
+            "bw_h50_e0",
+            "timeout_0",
+            "drop_p1+drop_p2", // duplicate part
+            "gremlins_p1",     // unknown part
+            "",
+        ] {
+            let err = bad.parse::<ScenarioSpec>();
+            assert!(err.is_err(), "{bad} should be rejected");
+            let msg = err.unwrap_err().to_string();
+            assert!(msg.contains("scenario") && msg.contains("churn_p<pct>"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn churn_set_is_seeded_and_liveness_windows_apply() {
+        let spec: ScenarioSpec = "churn_p25_l5_j9".parse().unwrap();
+        let m = ring_mixing(8);
+        let rt = ScenarioRuntime::new(&spec, &m, 0xabc, None).unwrap();
+        let churned: Vec<usize> = (0..8).filter(|&i| rt.churned(i)).collect();
+        assert_eq!(churned.len(), 2, "25% of 8 nodes");
+        // Same seed → same set; different seed → (almost surely) same size.
+        let rt2 = ScenarioRuntime::new(&spec, &m, 0xabc, None).unwrap();
+        let churned2: Vec<usize> = (0..8).filter(|&i| rt2.churned(i)).collect();
+        assert_eq!(churned, churned2);
+        for &i in &churned {
+            assert!(rt.live(i, 4) && !rt.live(i, 5) && !rt.live(i, 8) && rt.live(i, 9));
+            assert!(rt.needs_rejoin_reset(i));
+        }
+        assert!(rt.masked_at(5) && rt.masked_at(8) && !rt.masked_at(4) && !rt.masked_at(9));
+        assert!(rt.rejoin_at(9) && !rt.rejoin_at(8));
+        // Masked rows: dead neighbors carry zero weight; the full row
+        // still sums to one.
+        for i in 0..8 {
+            let total: f32 = rt.masked_self_weight(i)
+                + rt.masked_neighbor_weights(i).iter().sum::<f32>();
+            assert!((total - 1.0).abs() < 1e-6, "node {i}: {total}");
+        }
+    }
+
+    #[test]
+    fn dropped_broadcast_is_deterministic_and_roughly_calibrated() {
+        let spec: ScenarioSpec = "drop_p10".parse().unwrap();
+        let m = ring_mixing(8);
+        let rt = ScenarioRuntime::new(&spec, &m, 0x5eed, None).unwrap();
+        let rt2 = ScenarioRuntime::new(&spec, &m, 0x5eed, None).unwrap();
+        let mut drops = 0u32;
+        let mut total = 0u32;
+        for t in 0..400u64 {
+            for sender in 0..8 {
+                let d = rt.dropped_broadcast(t, 0, sender);
+                assert_eq!(d, rt2.dropped_broadcast(t, 0, sender));
+                drops += d as u32;
+                total += 1;
+            }
+        }
+        let rate = drops as f64 / total as f64;
+        assert!((0.05..0.15).contains(&rate), "drop rate {rate} far from 10%");
+        // Lossless spec never drops.
+        let lossless = ScenarioRuntime::new(&ScenarioSpec::default(), &m, 0x5eed, None).unwrap();
+        assert!((0..50u64).all(|t| !lossless.dropped_broadcast(t, 0, 3)));
+    }
+
+    #[test]
+    fn bw_schedule_and_timeout_interact() {
+        let spec: ScenarioSpec = "bw_h10_e5+timeout_50".parse().unwrap();
+        let m = ring_mixing(8);
+        // 40 KB frame at 80 Mbps: 4 ms transit at full bandwidth, 40 ms
+        // at the 10% windows — only the slow windows cross the 50 ms
+        // timeout once latency (20 ms) is added.
+        let timing = LinkTiming {
+            latency_s: 0.02,
+            bandwidth_bps: 80e6,
+            frame_bytes: 40_000,
+        };
+        let rt = ScenarioRuntime::new(&spec, &m, 1, Some(timing)).unwrap();
+        assert!((rt.bw_factor(0) - 1.0).abs() < 1e-12);
+        assert!((rt.bw_factor(5) - 0.1).abs() < 1e-12);
+        assert!(!rt.dropped_broadcast(0, 0, 0), "fast window under timeout");
+        assert!(rt.dropped_broadcast(5, 0, 0), "slow window exceeds timeout");
+        assert!(!rt.dropped_broadcast(10, 0, 0), "next fast window recovers");
+        // Without timing the timeout is inert.
+        let inert = ScenarioRuntime::new(&spec, &m, 1, None).unwrap();
+        assert!(!inert.dropped_broadcast(5, 0, 0));
+    }
+
+    #[test]
+    fn degenerate_churn_mask_is_a_clean_error_not_a_panic() {
+        // Star graphs die when the hub churns: every leaf is live with
+        // zero live neighbors. Some seed in a small range must sample
+        // the hub (k=1 of n=5); every construction either succeeds or
+        // errors cleanly.
+        let spec: ScenarioSpec = "churn_p20_l1_j4".parse().unwrap();
+        let m = MixingMatrix::metropolis(Graph::build(Topology::Star, 5));
+        let mut saw_error = false;
+        for seed in 0..64u64 {
+            match ScenarioRuntime::new(&spec, &m, seed, None) {
+                Ok(rt) => assert!(!rt.churned(0), "hub churn must error"),
+                Err(e) => {
+                    saw_error = true;
+                    assert!(e.to_string().contains("zero live neighbors"), "{e}");
+                }
+            }
+        }
+        assert!(saw_error, "no seed sampled the hub in 64 tries");
+    }
+}

@@ -106,6 +106,47 @@ pub fn metropolis_weights(graph: &Graph) -> Mat {
     w
 }
 
+/// Metropolis–Hastings weights over the subgraph induced by `live`:
+/// W_ij = 1/(1+max(d_i, d_j)) with degrees counted over live neighbors
+/// only, dead rows/columns pinned to the identity, diagonals absorbing
+/// the slack. The full n×n result is symmetric doubly stochastic, so the
+/// same invariant checks apply to masked and unmasked matrices alike.
+///
+/// Errors (instead of producing a defective row) when a live node has
+/// zero live neighbors — a degenerate churn mask would otherwise reach
+/// the per-node weight caches as an all-self row and silently freeze
+/// that node's consensus.
+pub fn masked_metropolis_weights(graph: &Graph, live: &[bool]) -> anyhow::Result<Mat> {
+    assert_eq!(live.len(), graph.n, "mask length must match node count");
+    let n = graph.n;
+    let live_degree = |i: usize| graph.neighbors[i].iter().filter(|&&j| live[j]).count();
+    for i in 0..n {
+        if live[i] {
+            anyhow::ensure!(
+                live_degree(i) > 0,
+                "degenerate churn mask: node {i} is live but has zero live neighbors; \
+                 pick a smaller churn fraction or a denser topology"
+            );
+        }
+    }
+    let mut w = Mat::zeros(n, n);
+    for i in 0..n {
+        if !live[i] {
+            continue;
+        }
+        for &j in &graph.neighbors[i] {
+            if live[j] {
+                w[(i, j)] = 1.0 / (1.0 + live_degree(i).max(live_degree(j)) as f64);
+            }
+        }
+    }
+    for i in 0..n {
+        let off: f64 = (0..n).filter(|&j| j != i).map(|j| w[(i, j)]).sum();
+        w[(i, i)] = 1.0 - off;
+    }
+    Ok(w)
+}
+
 /// Check W = Wᵀ, W·1 = 1, 1ᵀ·W = 1ᵀ, W_ij ≥ 0 allowed to be slightly
 /// negative only within `tol` (Metropolis diagonals are ≥ 0 by
 /// construction; uniform too).
@@ -206,6 +247,45 @@ mod tests {
                 assert!((m.neighbor_weights[i][k] as f64 - m.w[(i, j)]).abs() < 1e-7);
             }
         }
+    }
+
+    #[test]
+    fn masked_metropolis_is_doubly_stochastic_with_identity_dead_rows() {
+        let g = Graph::build(Topology::Ring, 8);
+        let mut live = vec![true; 8];
+        live[3] = false;
+        let w = masked_metropolis_weights(&g, &live).unwrap();
+        assert!(is_doubly_stochastic(&w, 1e-12));
+        // Dead row is the identity: the frozen node neither gives nor
+        // takes weight.
+        assert!((w[(3, 3)] - 1.0).abs() < 1e-12);
+        assert_eq!(w[(3, 2)], 0.0);
+        assert_eq!(w[(2, 3)], 0.0);
+        // Nodes 2 and 4 lost a neighbor; their live degree is 1.
+        assert!((w[(2, 1)] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn masked_metropolis_with_all_live_matches_connected_subgraph() {
+        let g = Graph::build(Topology::Ring, 6);
+        let live = vec![true; 6];
+        let w = masked_metropolis_weights(&g, &live).unwrap();
+        let full = metropolis_weights(&g);
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!((w[(i, j)] - full[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn masked_metropolis_rejects_isolated_live_node() {
+        // Star with a dead center isolates every leaf.
+        let g = Graph::build(Topology::Star, 5);
+        let mut live = vec![true; 5];
+        live[0] = false;
+        let err = masked_metropolis_weights(&g, &live).unwrap_err().to_string();
+        assert!(err.contains("zero live neighbors"), "{err}");
     }
 
     #[test]

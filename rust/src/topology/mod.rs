@@ -11,4 +11,7 @@ mod graph;
 mod mixing;
 
 pub use graph::{Graph, Topology};
-pub use mixing::{is_doubly_stochastic, metropolis_weights, uniform_neighbor_weights, MixingMatrix};
+pub use mixing::{
+    is_doubly_stochastic, masked_metropolis_weights, metropolis_weights,
+    uniform_neighbor_weights, MixingMatrix,
+};

@@ -20,6 +20,7 @@ use decomp::coordinator::program::build_program;
 use decomp::data::{build_models, ModelKind, SynthSpec};
 use decomp::network::cost::{CostModel, NetworkModel};
 use decomp::network::sim::{NodeProgram, SimEngine, SimOpts};
+use decomp::spec::{ScenarioRuntime, ScenarioSpec};
 use decomp::topology::{Graph, MixingMatrix, Topology};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -61,7 +62,7 @@ fn alloc_count() -> u64 {
 /// shards, worst §5.2 condition) for one algorithm × compressor, run it
 /// to steady state, and return the allocation delta across the
 /// post-warm-up iterations.
-fn steady_state_allocs(algo: &str, compressor: &str) -> u64 {
+fn steady_state_allocs(algo: &str, compressor: &str, scenario: &str) -> u64 {
     let n = 64;
     let iters = 25usize;
     let spec = SynthSpec {
@@ -72,12 +73,22 @@ fn steady_state_allocs(algo: &str, compressor: &str) -> u64 {
     };
     let (models, x0) = build_models(&ModelKind::Quadratic { spread: 1.0, noise: 0.1 }, &spec);
     let (comp, link) = compression::resolve_name(compressor).expect("compressor");
+    let mixing = Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n)));
+    let sc_spec: ScenarioSpec = scenario.parse().expect("scenario");
+    let runtime = if sc_spec.is_static() {
+        None
+    } else {
+        Some(Arc::new(
+            ScenarioRuntime::new(&sc_spec, &mixing, 0xf163, None).expect("scenario runtime"),
+        ))
+    };
     let cfg = AlgoConfig {
-        mixing: Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n))),
+        mixing,
         compressor: comp,
         seed: 0xf163,
         eta: if algo == "choco" { 0.4 } else { 1.0 },
         link,
+        scenario: runtime.clone(),
     };
     let mut programs: Vec<Box<dyn NodeProgram>> = models
         .into_iter()
@@ -91,6 +102,7 @@ fn steady_state_allocs(algo: &str, compressor: &str) -> u64 {
         SimOpts {
             cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
             compute_per_iter_s: 0.0,
+            scenario: runtime,
         },
     );
 
@@ -123,7 +135,7 @@ fn sim_step_allocates_nothing_after_warmup_at_n64() {
     // test would pollute the global allocation counter.
     //
     // dpsgd_fp32@n64 — the fig3/bench sweep cell, pinned since PR 3.
-    let d = steady_state_allocs("dpsgd", "fp32");
+    let d = steady_state_allocs("dpsgd", "fp32", "static");
     assert_eq!(
         d, 0,
         "SimEngine::step allocated {d} time(s) in steady state \
@@ -134,10 +146,28 @@ fn sim_step_allocates_nothing_after_warmup_at_n64() {
     // per-link state sized at build, and factor payloads cycle through
     // the Outbox wire pool, so the steady-state contract extends to the
     // strongest compressor in the tree.
-    let c = steady_state_allocs("choco", "lowrank_r4");
+    let c = steady_state_allocs("choco", "lowrank_r4", "static");
     assert_eq!(
         c, 0,
         "SimEngine::step allocated {c} time(s) in steady state \
          (expected zero after warm-up for choco_lowrank_r4@n64)"
+    );
+    // Lossy links must not reopen the allocator: a dropped frame's wires
+    // recycle into the outbox pool and its shell into the frame pool at
+    // the emit site, and the per-round renormalized weights live in a
+    // preallocated scratch — so a 20% drop rate stays allocation-free.
+    let p = steady_state_allocs("dpsgd", "fp32", "drop_p20");
+    assert_eq!(
+        p, 0,
+        "SimEngine::step allocated {p} time(s) in steady state \
+         (expected zero after warm-up for dpsgd_fp32@n64 under drop_p20)"
+    );
+    // And the EF family's own-drop path (skip compress, keep residual)
+    // is equally allocation-free.
+    let e = steady_state_allocs("deepsqueeze", "q4", "drop_p20");
+    assert_eq!(
+        e, 0,
+        "SimEngine::step allocated {e} time(s) in steady state \
+         (expected zero after warm-up for deepsqueeze_q4@n64 under drop_p20)"
     );
 }

@@ -41,6 +41,7 @@ fn setup(
         seed,
         eta: 1.0,
         link,
+        scenario: None,
     };
     (cfg, m1, m2, x0)
 }
@@ -52,6 +53,7 @@ fn clone_cfg(cfg: &AlgoConfig) -> AlgoConfig {
         seed: cfg.seed,
         eta: cfg.eta,
         link: cfg.link.clone(),
+        scenario: cfg.scenario.clone(),
     }
 }
 
@@ -79,6 +81,7 @@ fn assert_backends_bitwise(algo_name: &str, compressor: &str) {
             // A non-trivial network: virtual time must not perturb math.
             cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
             compute_per_iter_s: 0.01,
+            scenario: None,
         },
     )
     .unwrap();
@@ -303,6 +306,7 @@ fn sim_backend_trains_at_n64_ring() {
         SimOpts {
             cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
             compute_per_iter_s: 0.0,
+            scenario: None,
         },
     )
     .unwrap();
@@ -331,6 +335,7 @@ fn sim_straggler_grid_slows_virtual_time_not_math() {
         SimOpts {
             cost: CostModel::Uniform(base),
             compute_per_iter_s: 0.0,
+            scenario: None,
         },
     )
     .unwrap();
@@ -344,6 +349,7 @@ fn sim_straggler_grid_slows_virtual_time_not_math() {
         SimOpts {
             cost: CostModel::uniform_with_stragglers(8, base, &[5], 10.0),
             compute_per_iter_s: 0.0,
+            scenario: None,
         },
     )
     .unwrap();

@@ -43,6 +43,7 @@ fn setup(
         seed,
         eta: 1.0,
         link,
+        scenario: None,
     };
     (cfg, m1, m2, x0)
 }
@@ -54,6 +55,7 @@ fn clone_cfg(cfg: &AlgoConfig) -> AlgoConfig {
         seed: cfg.seed,
         eta: cfg.eta,
         link: cfg.link.clone(),
+        scenario: cfg.scenario.clone(),
     }
 }
 

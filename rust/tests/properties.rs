@@ -13,7 +13,9 @@ use decomp::linalg::vecops;
 use decomp::models::{GradientModel, Quadratic, ShapeManifest, TensorShape, TensorViewMut};
 use decomp::network::sim::Frame;
 use decomp::network::transport::Channel;
-use decomp::topology::{is_doubly_stochastic, Graph, MixingMatrix, Topology};
+use decomp::topology::{
+    is_doubly_stochastic, masked_metropolis_weights, Graph, MixingMatrix, Topology,
+};
 use decomp::util::prop::{check, Gen};
 use decomp::util::rng::Pcg64;
 use std::sync::Arc;
@@ -209,6 +211,7 @@ fn prop_gossip_preserves_mean_any_topology() {
             seed: g.rng.next_u64(),
             eta: 1.0,
             link: None,
+            scenario: None,
         };
         let mut a = algorithms::from_name("dpsgd", cfg, &x0, n).unwrap();
         let mut mean_before = vec![0.0f32; dim];
@@ -246,6 +249,7 @@ fn prop_pure_gossip_contracts_consensus() {
             seed: 1,
             eta: 1.0,
             link: None,
+            scenario: None,
         };
         let x0 = vec![0.0f32; dim];
         let mut a = algorithms::from_name("dpsgd", cfg, &x0, n).unwrap();
@@ -292,6 +296,7 @@ fn prop_dcd_fp32_equals_dpsgd_all_topologies() {
             seed,
             eta: 1.0,
             link: None,
+            scenario: None,
         };
         let mut dcd = algorithms::from_name("dcd", mk_cfg(), &x0, n).unwrap();
         let mut dp = algorithms::from_name("dpsgd", mk_cfg(), &x0, n).unwrap();
@@ -729,6 +734,76 @@ fn prop_unbiasedness_flags_partition_the_codecs() {
         for c in biased {
             assert!(!c.is_unbiased(), "{}", c.name());
         }
+    });
+}
+
+#[test]
+fn prop_masked_mixing_doubly_stochastic_under_any_churn_mask() {
+    // The scenario engine's churn-window weights: Metropolis over the
+    // live-induced subgraph with identity rows for dead nodes. For every
+    // mask the function either rejects cleanly (a live node stranded
+    // with zero live neighbors) or returns a symmetric doubly stochastic
+    // matrix that never routes weight through a dead node.
+    check("masked Metropolis stays doubly stochastic", CASES, |g| {
+        let (topo, n) = random_topology(g);
+        let graph = Graph::build(topo, n);
+        let mut live = vec![true; n];
+        for l in live.iter_mut() {
+            // Bias toward mostly-live masks (the realistic churn regime)
+            // but keep degenerate ones in the mix for the Err path.
+            *l = g.usize_in(0, 4) != 0;
+        }
+        let Ok(w) = masked_metropolis_weights(&graph, &live) else {
+            // Rejected masks must actually be degenerate.
+            let stranded = (0..n).any(|i| live[i] && graph.neighbors[i].iter().all(|&j| !live[j]));
+            assert!(stranded, "rejected a non-degenerate mask for {topo:?}");
+            return;
+        };
+        assert!(is_doubly_stochastic(&w, 1e-9));
+        for i in 0..n {
+            for j in 0..n {
+                assert!((w[(i, j)] - w[(j, i)]).abs() < 1e-12, "asymmetric at ({i},{j})");
+                if i != j && (!live[i] || !live[j]) {
+                    assert_eq!(w[(i, j)], 0.0, "dead node {i}<->{j} carries weight");
+                }
+            }
+            if !live[i] {
+                assert_eq!(w[(i, i)], 1.0, "dead node {i} must hold its value");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_dirichlet_partition_covers_every_sample_exactly_once() {
+    // The non-IID shard axis: at any α and any label layout, the
+    // partition is exact — every sample index lands on exactly one node,
+    // nothing is dropped, nothing is duplicated.
+    check("dirichlet partition is an exact cover", CASES, |g| {
+        let n_nodes = g.usize_in(1, 12);
+        let n_classes = g.usize_in(1, 6);
+        let n_samples = g.usize_in(n_classes, 400);
+        let labels: Vec<usize> = (0..n_samples).map(|_| g.usize_in(0, n_classes - 1)).collect();
+        let alpha = *g.choose(&[0.05f64, 0.3, 1.0, 10.0, 100.0]);
+        let parts = decomp::data::dirichlet_partition(
+            n_nodes,
+            &labels,
+            n_classes,
+            alpha,
+            g.rng.next_u64(),
+        );
+        assert_eq!(parts.len(), n_nodes);
+        let mut seen = vec![0u32; n_samples];
+        for p in &parts {
+            for &idx in p {
+                assert!(idx < n_samples, "index {idx} out of range");
+                seen[idx] += 1;
+            }
+        }
+        assert!(
+            seen.iter().all(|&c| c == 1),
+            "partition must cover every sample exactly once (alpha={alpha})"
+        );
     });
 }
 

@@ -1,0 +1,120 @@
+//! The PR's headline claim, as a test: under node churn and lossy links,
+//! the error-feedback family (CHOCO-SGD, DeepSqueeze) recovers to within
+//! tolerance of its fault-free loss, while the replica/estimate family
+//! (DCD, ECD) visibly degrades — their compressed-delta state has no
+//! recovery path across a rejoin, so every missed update is a permanent
+//! offset.
+//!
+//! Layout mirrors the scenariosweep cells: n = 64 ring, logistic dim-64
+//! workload, seed 0x5c40 (a seed whose sampled 10% churn set leaves every
+//! live ring node at least one live neighbor), fault schedule
+//! `churn_p10_l30_j75 + drop_p1` — 6 of 64 nodes frozen over t ∈ [30, 75)
+//! plus 1% whole-broadcast drops throughout, with 125 post-rejoin
+//! iterations to recover in.
+//!
+//! Also pinned here: every scenario cell is bit-identical across repeats
+//! and across sweep-runner thread counts (the determinism contract that
+//! makes the sweep's grid trustworthy).
+
+use decomp::data::ModelKind;
+use decomp::experiments::runner;
+use decomp::experiments::scenario_sweep::{run_cell, ScenarioRow, CHURN};
+
+const N: usize = 64;
+const DIM: usize = 64;
+const ITERS: usize = 200;
+const TOLERANCE: f64 = 0.15;
+
+fn kind() -> ModelKind {
+    ModelKind::Logistic { batch: 8 }
+}
+
+fn faulty_scenario() -> String {
+    format!("{CHURN}+drop_p1")
+}
+
+/// Relative degradation of the faulty cell over its static reference.
+/// Non-finite faulty losses count as infinite degradation — a diverged
+/// run must never pass as "within tolerance".
+fn degradation(faulty: &ScenarioRow, reference: &ScenarioRow) -> f64 {
+    assert!(
+        reference.final_loss.is_finite() && reference.final_loss > 0.0,
+        "static reference for {} broken: {}",
+        reference.algo,
+        reference.final_loss
+    );
+    if !faulty.final_loss.is_finite() {
+        return f64::INFINITY;
+    }
+    (faulty.final_loss - reference.final_loss) / reference.final_loss
+}
+
+fn pair(algo: &str, comp: &str, eta: f32) -> (ScenarioRow, ScenarioRow) {
+    let st = run_cell(N, DIM, ITERS, &kind(), algo, comp, eta, "static");
+    let faulty = run_cell(N, DIM, ITERS, &kind(), algo, comp, eta, &faulty_scenario());
+    (st, faulty)
+}
+
+#[test]
+fn error_feedback_family_rides_out_churn_and_drops() {
+    for (algo, comp, eta) in [("choco", "topk_25", 0.4), ("deepsqueeze", "q4", 0.4)] {
+        let (st, faulty) = pair(algo, comp, eta);
+        let d = degradation(&faulty, &st);
+        assert!(
+            d <= TOLERANCE,
+            "{algo}_{comp} under {} degraded {:.1}% over static ({} vs {}) — \
+             the EF residual should have absorbed the faults",
+            faulty_scenario(),
+            d * 100.0,
+            faulty.final_loss,
+            st.final_loss
+        );
+    }
+}
+
+#[test]
+fn replica_family_visibly_degrades_under_the_same_faults() {
+    for (algo, comp) in [("dcd", "q8"), ("ecd", "q8")] {
+        let (st, faulty) = pair(algo, comp, 1.0);
+        let d = degradation(&faulty, &st);
+        assert!(
+            d > TOLERANCE,
+            "{algo}_{comp} under {} only degraded {:.1}% over static ({} vs {}) — \
+             stale replicas were expected to leave a visible permanent offset",
+            faulty_scenario(),
+            d * 100.0,
+            faulty.final_loss,
+            st.final_loss
+        );
+    }
+}
+
+#[test]
+fn scenario_cells_are_bit_identical_across_repeats() {
+    let sc = faulty_scenario();
+    let a = run_cell(N, DIM, 60, &kind(), "choco", "sign", 0.4, &sc);
+    let b = run_cell(N, DIM, 60, &kind(), "choco", "sign", 0.4, &sc);
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
+    assert_eq!(a.init_loss.to_bits(), b.init_loss.to_bits());
+    assert_eq!(a.virtual_s.to_bits(), b.virtual_s.to_bits());
+}
+
+#[test]
+fn sweep_grid_is_bit_identical_at_any_thread_count() {
+    let sc = faulty_scenario();
+    let cells: Vec<(&str, &str, f32)> = vec![
+        ("dpsgd", "fp32", 1.0),
+        ("choco", "topk_25", 0.4),
+        ("deepsqueeze", "q4", 0.4),
+        ("dcd", "q8", 1.0),
+    ];
+    let run = |threads: usize| {
+        runner::run_cells_on(threads, &cells, |_, (algo, comp, eta)| {
+            run_cell(16, 16, 40, &kind(), algo, comp, *eta, &sc).final_loss
+        })
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&serial), bits(&parallel));
+}

@@ -15,7 +15,7 @@
 //!    CI smoke step run).
 
 use decomp::coordinator::TrainConfig;
-use decomp::spec::{self, AlgoSpec, CompressorSpec, TopologySpec};
+use decomp::spec::{self, AlgoSpec, CompressorSpec, ScenarioSpec, TopologySpec};
 
 #[test]
 fn every_algorithm_round_trips_from_str_to_display() {
@@ -187,6 +187,99 @@ fn eta_range_gated_for_every_algorithm_that_uses_it() {
                 ..Default::default()
             };
             assert!(cfg.build_algo_config().is_err(), "{algo} eta {eta}");
+        }
+    }
+}
+
+#[test]
+fn every_scenario_round_trips_from_str_to_display() {
+    // Canonical single-part and composed schedules: parse → Display →
+    // parse is the identity, and Display emits the normalized part order
+    // regardless of the input order.
+    let keys = [
+        "static",
+        "drop_p1",
+        "drop_p100",
+        "churn_p10_l150_j300",
+        "dirichlet_a30",
+        "bw_h50_e100",
+        "timeout_20",
+        "churn_p10_l150_j300+drop_p5",
+        "churn_p1_l1_j2+drop_p1+dirichlet_a5+bw_h1_e1+timeout_1",
+    ];
+    for key in keys {
+        let sc: ScenarioSpec = key.parse().unwrap_or_else(|e| panic!("{key}: {e}"));
+        assert_eq!(sc.to_string(), key, "Display must be canonical");
+        let back: ScenarioSpec = sc.to_string().parse().unwrap();
+        assert_eq!(back, sc, "{key}");
+    }
+    // Aliases and non-canonical part order normalize.
+    assert_eq!("none".parse::<ScenarioSpec>().unwrap(), ScenarioSpec::default());
+    assert_eq!("static".parse::<ScenarioSpec>().unwrap().to_string(), "static");
+    let reordered: ScenarioSpec = "drop_p5+churn_p10_l150_j300".parse().unwrap();
+    assert_eq!(reordered.to_string(), "churn_p10_l150_j300+drop_p5");
+}
+
+#[test]
+fn invalid_scenario_schedules_are_rejected() {
+    // The validation matrix: out-of-range percentages, inverted or
+    // zero-length churn windows, explicit no-op parts, duplicates,
+    // unknown parts, and empty strings all fail to parse.
+    let bad = [
+        "",
+        "+",
+        "zombie_p10",
+        "churn_p0_l1_j2",      // empty churn set
+        "churn_p91_l1_j2",     // > 90% churn
+        "churn_p10_l0_j2",     // leave before the first round
+        "churn_p10_l5_j5",     // join must follow leave
+        "churn_p10_l5_j4",     // inverted window
+        "churn_p10_l5",        // missing join
+        "drop_p0",             // explicit no-op: spell it 'static'
+        "drop_p101",           // > 100%
+        "dirichlet_a0",        // alpha must be positive
+        "bw_h0_e10",           // factor must stay positive
+        "bw_h100_e10",         // factor must actually throttle
+        "bw_h50_e0",           // zero period
+        "timeout_0",           // zero timeout
+        "drop_p1+drop_p2",     // duplicate part
+        "churn_p10_l1_j2+churn_p10_l3_j4",
+        "static+drop_p1",      // 'static' is a whole key, not a part
+    ];
+    for key in bad {
+        assert!(key.parse::<ScenarioSpec>().is_err(), "'{key}' must be rejected");
+    }
+}
+
+#[test]
+fn churn_admission_requires_a_link_state_safe_algorithm() {
+    // Hard-coded expectations (NOT read from the registry — this pins
+    // the registry): churn needs an error-feedback path to resync after
+    // a rejoin; any delivery perturbation excludes the centralized hub
+    // protocols; data-only scenarios are admitted for everything.
+    let churn_safe = ["dpsgd", "naive", "choco", "deepsqueeze"];
+    let hub = ["allreduce", "qallreduce"];
+    let churn: ScenarioSpec = "churn_p10_l150_j300".parse().unwrap();
+    let drops: ScenarioSpec = "drop_p5".parse().unwrap();
+    let data_only: ScenarioSpec = "dirichlet_a30+bw_h50_e100".parse().unwrap();
+    for algo in AlgoSpec::ALL {
+        let name = algo.to_string();
+        let is_safe = churn_safe.contains(&name.as_str());
+        let is_hub = hub.contains(&name.as_str());
+        assert_eq!(
+            spec::admit_scenario(algo, &churn).is_ok(),
+            is_safe,
+            "churn admission for {name}"
+        );
+        assert_eq!(
+            spec::admit_scenario(algo, &drops).is_ok(),
+            !is_hub,
+            "drop admission for {name}"
+        );
+        assert!(spec::admit_scenario(algo, &data_only).is_ok(), "data-only for {name}");
+        if !is_safe {
+            let err = spec::admit_scenario(algo, &churn).unwrap_err().to_string();
+            assert!(err.contains("churn") && err.contains("choco"), "{name}: '{err}'");
         }
     }
 }
