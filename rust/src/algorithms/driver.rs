@@ -5,7 +5,8 @@
 use super::{consensus_distance, Algorithm};
 use crate::models::GradientModel;
 use crate::network::cost::NetworkModel;
-use crate::util::json::Json;
+use crate::util::json::{Event, JsonPull, JsonWriter};
+use std::io::{self, Write};
 
 /// One evaluation point along a run.
 #[derive(Debug, Clone, Copy)]
@@ -47,27 +48,129 @@ impl TrainTrace {
             .map(|p| p.sim_time_s)
     }
 
-    pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("algo", Json::Str(self.algo.clone())),
-            (
-                "points",
-                Json::Arr(
-                    self.points
-                        .iter()
-                        .map(|p| {
-                            Json::obj(vec![
-                                ("iter", Json::Num(p.iter as f64)),
-                                ("global_loss", Json::Num(p.global_loss)),
-                                ("consensus", Json::Num(p.consensus)),
-                                ("bytes_sent", Json::Num(p.bytes_sent as f64)),
-                                ("sim_time_s", Json::Num(p.sim_time_s)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-        ])
+    /// Stream the trace as JSON into an open writer — every point goes
+    /// straight to the sink, so emission memory is O(1) in the number of
+    /// points. `iter`/`bytes_sent` use the integer-exact paths (no f64
+    /// round-trip), so counters survive above 2^53.
+    pub fn emit_json<W: Write>(&self, w: &mut JsonWriter<W>) -> io::Result<()> {
+        w.begin_obj()?;
+        w.key("algo")?;
+        w.str(&self.algo)?;
+        w.key("points")?;
+        w.begin_arr()?;
+        for p in &self.points {
+            w.begin_obj()?;
+            w.key("bytes_sent")?;
+            w.num_u64(p.bytes_sent)?;
+            w.key("consensus")?;
+            w.num(p.consensus)?;
+            w.key("global_loss")?;
+            w.num(p.global_loss)?;
+            w.key("iter")?;
+            w.num_u64(p.iter as u64)?;
+            w.key("sim_time_s")?;
+            w.num(p.sim_time_s)?;
+            w.end_obj()?;
+        }
+        w.end_arr()?;
+        w.end_obj()
+    }
+
+    /// Stream the trace as a complete JSON document (pretty gets the
+    /// trailing newline the old tree serializer produced).
+    pub fn write_json<W: Write>(&self, w: W, pretty: bool) -> io::Result<()> {
+        let mut jw = if pretty {
+            JsonWriter::pretty(w)
+        } else {
+            JsonWriter::new(w)
+        };
+        self.emit_json(&mut jw)?;
+        if pretty {
+            jw.end_line()?;
+        }
+        Ok(())
+    }
+
+    /// Parse a trace emitted by `write_json` — pull-based, no tree, with
+    /// integer-exact counters.
+    pub fn parse(src: &str) -> Result<TrainTrace, String> {
+        let mut p = JsonPull::new(src);
+        if p.step()? != Event::BeginObj {
+            return Err("trace: expected a top-level object".to_string());
+        }
+        let mut algo = String::new();
+        let mut points = Vec::new();
+        loop {
+            match p.step()? {
+                Event::EndObj => break,
+                Event::Key(k) => match k.as_ref() {
+                    "algo" => match p.step()? {
+                        Event::Str(s) => algo = s.into_owned(),
+                        other => {
+                            return Err(format!("trace: algo must be a string, got {other:?}"))
+                        }
+                    },
+                    "points" => parse_points(&mut p, &mut points)?,
+                    _ => p.skip_value().map_err(|e| e.to_string())?,
+                },
+                other => return Err(format!("trace: unexpected {other:?}")),
+            }
+        }
+        Ok(TrainTrace { algo, points })
+    }
+}
+
+fn parse_points(p: &mut JsonPull, points: &mut Vec<TracePoint>) -> Result<(), String> {
+    if p.step()? != Event::BeginArr {
+        return Err("trace: points must be an array".to_string());
+    }
+    loop {
+        match p.step()? {
+            Event::EndArr => return Ok(()),
+            Event::BeginObj => {
+                let mut pt = TracePoint {
+                    iter: 0,
+                    global_loss: 0.0,
+                    consensus: 0.0,
+                    bytes_sent: 0,
+                    sim_time_s: 0.0,
+                };
+                loop {
+                    match p.step()? {
+                        Event::EndObj => break,
+                        Event::Key(k) => {
+                            let field = k.into_owned();
+                            match p.step()? {
+                                Event::Num(n) => match field.as_str() {
+                                    "iter" => {
+                                        pt.iter = n.as_usize().ok_or_else(|| {
+                                            "trace: iter not an integer".to_string()
+                                        })?
+                                    }
+                                    "bytes_sent" => {
+                                        pt.bytes_sent = n.as_u64().ok_or_else(|| {
+                                            "trace: bytes_sent not an integer".to_string()
+                                        })?
+                                    }
+                                    "global_loss" => pt.global_loss = n.as_f64(),
+                                    "consensus" => pt.consensus = n.as_f64(),
+                                    "sim_time_s" => pt.sim_time_s = n.as_f64(),
+                                    _ => {}
+                                },
+                                // Non-finite floats were emitted as null.
+                                Event::Null => {}
+                                other => {
+                                    return Err(format!("trace: point field {field}: {other:?}"))
+                                }
+                            }
+                        }
+                        other => return Err(format!("trace: unexpected {other:?}")),
+                    }
+                }
+                points.push(pt);
+            }
+            other => return Err(format!("trace: unexpected {other:?}")),
+        }
     }
 }
 
@@ -269,15 +372,46 @@ mod tests {
         let (mut models, x0) = quad_setup(n, 8, 1.0, 0.0);
         let mut algo = DPsgd::new(cfg_fp32(n, 5), &x0, n);
         let trace = run_training(&mut algo, &mut models, &RunOpts::default());
-        let j = trace.to_json();
-        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
-        assert_eq!(
-            parsed.get("algo").unwrap().as_str().unwrap(),
-            "dpsgd_fp32"
-        );
+        let mut buf = Vec::new();
+        trace.write_json(&mut buf, false).unwrap();
+        let src = String::from_utf8(buf).unwrap();
+        // Still valid for the tree parser...
+        let parsed = crate::util::json::Json::parse(&src).unwrap();
+        assert_eq!(parsed.get("algo").unwrap().as_str().unwrap(), "dpsgd_fp32");
         assert_eq!(
             parsed.get("points").unwrap().as_arr().unwrap().len(),
             trace.points.len()
         );
+        // ...and the pull parser round-trips it exactly.
+        let back = TrainTrace::parse(&src).unwrap();
+        assert_eq!(back.algo, trace.algo);
+        assert_eq!(back.points.len(), trace.points.len());
+        for (a, b) in back.points.iter().zip(&trace.points) {
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.bytes_sent, b.bytes_sent);
+        }
+    }
+
+    #[test]
+    fn u64_counters_round_trip_exactly() {
+        // Above 2^53 an f64 hop would corrupt the counter; the streaming
+        // writer and pull parser keep it integer-exact end to end.
+        let big = u64::MAX - 1;
+        let trace = TrainTrace {
+            algo: "x".to_string(),
+            points: vec![TracePoint {
+                iter: 3,
+                global_loss: 1.0,
+                consensus: 0.5,
+                bytes_sent: big,
+                sim_time_s: 2.0,
+            }],
+        };
+        let mut buf = Vec::new();
+        trace.write_json(&mut buf, false).unwrap();
+        let src = String::from_utf8(buf).unwrap();
+        assert!(src.contains(&format!("\"bytes_sent\":{big}")), "{src}");
+        let back = TrainTrace::parse(&src).unwrap();
+        assert_eq!(back.points[0].bytes_sent, big);
     }
 }

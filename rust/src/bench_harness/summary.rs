@@ -24,14 +24,19 @@
 //!   measured virtual time per iteration on the 64-ring under the worst
 //!   condition. Also deterministic (virtual clock): enforced, and
 //!   sensitive to wire-format or engine-accounting regressions.
+//! - `trace_emit` (higher is better) — streamed trace-emission
+//!   throughput (points/sec through `TrainTrace::write_json` into a null
+//!   sink). Hardware-dependent; the baseline ships it as `null`.
 
+use crate::algorithms::driver::{TracePoint, TrainTrace};
 use crate::data::build_models;
 use crate::experiments::{convergence_spec, ef_sweep, fig3};
 use crate::metrics::Table;
 use crate::network::cost::NetCondition;
 use crate::spec::{ExperimentSpec, TopologySpec};
-use crate::util::json::Json;
+use crate::util::json::{Event, JsonPull, JsonWriter};
 use std::collections::BTreeMap;
+use std::io::{self, Write};
 
 /// A collected (or parsed) bench report: group → metric → value.
 pub struct BenchReport {
@@ -39,10 +44,10 @@ pub struct BenchReport {
     pub groups: BTreeMap<String, BTreeMap<String, f64>>,
 }
 
-/// Comparison direction: every group is lower-is-better except
-/// throughput.
+/// Comparison direction: every group is lower-is-better except the
+/// throughput groups.
 pub fn lower_is_better(group: &str) -> bool {
-    group != "iters_per_sec"
+    !matches!(group, "iters_per_sec" | "trace_emit")
 }
 
 /// Deterministic groups (simulated metrics) are gated *two-sided*: they
@@ -146,62 +151,107 @@ fn collect_with(quick: bool, host_sweep: bool) -> BenchReport {
     }
     groups.insert("sim_virtual_s_per_iter".into(), per_iter);
 
+    // Streamed trace-emission throughput: a synthetic many-point trace
+    // written compact into a null sink through the streaming results
+    // plane. Host-dependent (the baseline ships null); tracked so the
+    // trajectory catches emission-path regressions.
+    let trace_points = if quick { 10_000 } else { 100_000 };
+    let trace = synthetic_trace(trace_points);
+    let m = super::time_fn("trace_emit", opts, || {
+        trace
+            .write_json(io::sink(), false)
+            .expect("sink write cannot fail");
+    });
+    let mut emit = BTreeMap::new();
+    emit.insert(
+        "trace_points_per_sec".to_string(),
+        trace_points as f64 / m.summary.median,
+    );
+    groups.insert("trace_emit".into(), emit);
+
     BenchReport { quick, groups }
 }
 
+/// Deterministic synthetic trace for the emission bench.
+fn synthetic_trace(points: usize) -> TrainTrace {
+    TrainTrace {
+        algo: "trace_emit_bench".to_string(),
+        points: (0..points)
+            .map(|i| TracePoint {
+                iter: i,
+                global_loss: 1.0 / (1.0 + i as f64),
+                consensus: 0.5 / (1.0 + i as f64),
+                bytes_sent: i as u64 * 123_456_789,
+                sim_time_s: i as f64 * 0.01,
+            })
+            .collect(),
+    }
+}
+
+/// Error constructor shared by the pull-based report parser.
+fn jerr(m: String) -> anyhow::Error {
+    anyhow::anyhow!("bench json: {m}")
+}
+
 impl BenchReport {
-    pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("schema", Json::Str("decomp-bench-v1".into())),
-            ("quick", Json::Bool(self.quick)),
-            (
-                "groups",
-                Json::Obj(
-                    self.groups
-                        .iter()
-                        .map(|(g, ms)| {
-                            (
-                                g.clone(),
-                                Json::Obj(
-                                    ms.iter()
-                                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
-                                        .collect(),
-                                ),
-                            )
-                        })
-                        .collect(),
-                ),
-            ),
-        ])
+    /// Stream the report as pretty JSON (schema `decomp-bench-v1`).
+    /// Byte-identical to the retired tree emitter: top-level keys in
+    /// alphabetical order (`groups`, `quick`, `schema`), 2-space indent,
+    /// trailing newline — pinned by the results-plane golden test.
+    pub fn write_json<W: Write>(&self, w: W) -> io::Result<()> {
+        let mut jw = JsonWriter::pretty(w);
+        jw.begin_obj()?;
+        jw.key("groups")?;
+        jw.begin_obj()?;
+        for (g, ms) in &self.groups {
+            jw.key(g)?;
+            jw.begin_obj()?;
+            for (k, v) in ms {
+                jw.key(k)?;
+                jw.num(*v)?;
+            }
+            jw.end_obj()?;
+        }
+        jw.end_obj()?;
+        jw.key("quick")?;
+        jw.bool(self.quick)?;
+        jw.key("schema")?;
+        jw.str("decomp-bench-v1")?;
+        jw.end_obj()?;
+        jw.end_line()
     }
 
-    /// Parse a `BENCH_*.json`. Metrics whose value is `null` are treated
-    /// as unrecorded and skipped by [`compare`] — the checked-in baseline
-    /// ships host-dependent metrics as null until refreshed from a CI
-    /// artifact.
-    pub fn from_json(j: &Json) -> anyhow::Result<BenchReport> {
-        let quick = j.get("quick").and_then(|q| q.as_bool()).unwrap_or(false);
-        let gobj = j
-            .get("groups")
-            .and_then(|g| g.as_obj())
-            .ok_or_else(|| anyhow::anyhow!("bench json: missing 'groups' object"))?;
-        let mut groups = BTreeMap::new();
-        for (g, ms) in gobj {
-            let mobj = ms
-                .as_obj()
-                .ok_or_else(|| anyhow::anyhow!("bench json: group '{g}' must be an object"))?;
-            let mut metrics = BTreeMap::new();
-            for (k, v) in mobj {
-                if matches!(v, Json::Null) {
-                    continue;
-                }
-                let num = v.as_f64().ok_or_else(|| {
-                    anyhow::anyhow!("bench json: metric '{g}/{k}' must be a number or null")
-                })?;
-                metrics.insert(k.clone(), num);
-            }
-            groups.insert(g.clone(), metrics);
+    /// Parse a `BENCH_*.json` incrementally — `bench-compare` never
+    /// materializes either report as a tree. Unknown top-level fields
+    /// (e.g. `schema`) are lazily skipped. Metrics whose value is `null`
+    /// are treated as unrecorded and dropped, so [`compare`] skips them —
+    /// the checked-in baseline ships host-dependent metrics as null until
+    /// refreshed from a CI artifact.
+    pub fn parse(src: &str) -> anyhow::Result<BenchReport> {
+        let mut p = JsonPull::new(src);
+        if p.step().map_err(jerr)? != Event::BeginObj {
+            return Err(jerr("expected a top-level object".to_string()));
         }
+        let mut quick = false;
+        let mut groups = None;
+        loop {
+            match p.step().map_err(jerr)? {
+                Event::EndObj => break,
+                Event::Key(key) => match key.as_ref() {
+                    "quick" => match p.step().map_err(jerr)? {
+                        Event::Bool(b) => quick = b,
+                        other => return Err(jerr(format!("'quick' must be a bool: {other:?}"))),
+                    },
+                    "groups" => groups = Some(parse_groups(&mut p)?),
+                    _ => p.skip_value().map_err(|e| jerr(e.to_string()))?,
+                },
+                other => return Err(jerr(format!("unexpected {other:?}"))),
+            }
+        }
+        if p.step().map_err(jerr)? != Event::End {
+            return Err(jerr("trailing characters".to_string()));
+        }
+        let groups = groups.ok_or_else(|| jerr("missing 'groups' object".to_string()))?;
         Ok(BenchReport { quick, groups })
     }
 
@@ -214,6 +264,49 @@ impl BenchReport {
             }
         }
         t
+    }
+}
+
+/// Pull the `"groups"` object: group name → metric → value.
+fn parse_groups(p: &mut JsonPull) -> anyhow::Result<BTreeMap<String, BTreeMap<String, f64>>> {
+    if p.step().map_err(jerr)? != Event::BeginObj {
+        return Err(jerr("'groups' must be an object".to_string()));
+    }
+    let mut groups = BTreeMap::new();
+    loop {
+        match p.step().map_err(jerr)? {
+            Event::EndObj => return Ok(groups),
+            Event::Key(g) => {
+                let gname = g.into_owned();
+                if p.step().map_err(jerr)? != Event::BeginObj {
+                    return Err(jerr(format!("group '{gname}' must be an object")));
+                }
+                let mut metrics = BTreeMap::new();
+                loop {
+                    match p.step().map_err(jerr)? {
+                        Event::EndObj => break,
+                        Event::Key(k) => {
+                            let kname = k.into_owned();
+                            match p.step().map_err(jerr)? {
+                                Event::Num(n) => {
+                                    metrics.insert(kname, n.as_f64());
+                                }
+                                Event::Null => {}
+                                other => {
+                                    return Err(jerr(format!(
+                                        "metric '{gname}/{kname}' must be a number or null, \
+                                         got {other:?}"
+                                    )))
+                                }
+                            }
+                        }
+                        other => return Err(jerr(format!("unexpected {other:?}"))),
+                    }
+                }
+                groups.insert(gname, metrics);
+            }
+            other => return Err(jerr(format!("unexpected {other:?}"))),
+        }
     }
 }
 
@@ -306,15 +399,27 @@ mod tests {
             ("sim_epoch_s", &[("a@worst", 1.5)]),
             ("iters_per_sec", &[("dpsgd_fp32", 100.0)]),
         ]);
-        let j = r.to_json();
-        let parsed = BenchReport::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        let mut buf = Vec::new();
+        r.write_json(&mut buf).unwrap();
+        let txt = String::from_utf8(buf).unwrap();
+        // The exact layout the retired tree emitter produced.
+        let expected = "{\n  \"groups\": {\n    \"iters_per_sec\": {\n      \
+                        \"dpsgd_fp32\": 100\n    },\n    \"sim_epoch_s\": {\n      \
+                        \"a@worst\": 1.5\n    }\n  },\n  \"quick\": true,\n  \
+                        \"schema\": \"decomp-bench-v1\"\n}\n";
+        assert_eq!(txt, expected);
+        let parsed = BenchReport::parse(&txt).unwrap();
         assert_eq!(parsed.groups, r.groups);
-        // Nulls parse as absent metrics.
+        assert!(parsed.quick);
+        // Nulls parse as absent metrics; unknown fields are skipped.
         let with_null =
             r#"{"groups":{"iters_per_sec":{"x":null,"y":2}},"quick":false,"schema":"s"}"#;
-        let parsed = BenchReport::from_json(&Json::parse(with_null).unwrap()).unwrap();
+        let parsed = BenchReport::parse(with_null).unwrap();
         assert_eq!(parsed.groups["iters_per_sec"].len(), 1);
         assert_eq!(parsed.groups["iters_per_sec"]["y"], 2.0);
+        // Malformed inputs fail cleanly.
+        assert!(BenchReport::parse("{\"quick\":true}").is_err());
+        assert!(BenchReport::parse("{\"groups\":{}} trailing").is_err());
     }
 
     #[test]
@@ -381,6 +486,8 @@ mod tests {
         assert_eq!(r.groups["sim_epoch_s"].len(), 12);
         // 6 fig3 sweep algos + 2 lowranksweep cells + the churn cell.
         assert_eq!(r.groups["sim_virtual_s_per_iter"].len(), 9);
+        assert_eq!(r.groups["trace_emit"].len(), 1);
+        assert!(r.groups["trace_emit"].contains_key("trace_points_per_sec"));
         for ms in r.groups.values() {
             for (k, v) in ms {
                 assert!(v.is_finite() && *v > 0.0, "{k} = {v}");
@@ -400,13 +507,9 @@ mod tests {
         assert_eq!(out.regressions.len(), 1);
         assert_eq!(out.regressions[0].metric, "iters_per_sec/dpsgd_fp32");
         // Null baseline parses to an absent metric → skipped, not failed.
-        let null_base = BenchReport::from_json(
-            &crate::util::json::Json::parse(
-                r#"{"groups":{"iters_per_sec":{"dpsgd_fp32":null}},"quick":true}"#,
-            )
-            .unwrap(),
-        )
-        .unwrap();
+        let null_base =
+            BenchReport::parse(r#"{"groups":{"iters_per_sec":{"dpsgd_fp32":null}},"quick":true}"#)
+                .unwrap();
         let out = compare(&null_base, &cand, 0.25);
         assert_eq!(out.compared, 0);
         assert!(out.regressions.is_empty());

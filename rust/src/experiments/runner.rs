@@ -54,9 +54,32 @@ where
     O: Send,
     F: Fn(usize, &I) -> O + Sync,
 {
+    run_cells_observed(threads, items, f, |_, _| {})
+}
+
+/// [`run_cells_on`] with a completion observer: `observe(i, &out)` runs
+/// on the calling (collector) thread as each cell finishes, in
+/// **completion order** — this is what lets `decomp serve` stream
+/// progress frames while a job's grid is still running. The returned
+/// results are still in grid order, unchanged by the observer.
+pub fn run_cells_observed<I, O, F, G>(threads: usize, items: &[I], f: F, mut observe: G) -> Vec<O>
+where
+    I: Sync,
+    O: Send,
+    F: Fn(usize, &I) -> O + Sync,
+    G: FnMut(usize, &O),
+{
     let threads = threads.min(items.len());
     if threads <= 1 {
-        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+        return items
+            .iter()
+            .enumerate()
+            .map(|(i, it)| {
+                let out = f(i, it);
+                observe(i, &out);
+                out
+            })
+            .collect();
     }
 
     let next = AtomicUsize::new(0);
@@ -84,6 +107,7 @@ where
         // has dropped its sender. A panicking worker drops its sender
         // early and the panic resurfaces when the scope joins.
         for (i, out) in rx {
+            observe(i, &out);
             slots[i] = Some(out);
         }
     });
@@ -135,5 +159,27 @@ mod tests {
     #[test]
     fn sweep_threads_is_positive() {
         assert!(sweep_threads() >= 1);
+    }
+
+    #[test]
+    fn observer_sees_every_cell_once_results_stay_ordered() {
+        for threads in [1, 4] {
+            let items: Vec<usize> = (0..23).collect();
+            let mut seen = vec![0u32; items.len()];
+            let out = run_cells_observed(
+                threads,
+                &items,
+                |i, &cell| {
+                    assert_eq!(i, cell);
+                    cell * 3
+                },
+                |i, &o| {
+                    assert_eq!(o, i * 3);
+                    seen[i] += 1;
+                },
+            );
+            assert_eq!(out, (0..23).map(|i| i * 3).collect::<Vec<_>>());
+            assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+        }
     }
 }

@@ -53,6 +53,7 @@ pub mod metrics;
 pub mod models;
 pub mod network;
 pub mod runtime;
+pub mod serve;
 pub mod spec;
 pub mod topology;
 pub mod util;

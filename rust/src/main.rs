@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   train         run a training job (--backend threads|sim)
 //!   simulate      run the deterministic single-process reference simulator
+//!   serve         long-running NDJSON job loop (stdin/stdout, --tcp ADDR)
 //!   list          print the spec registry (algorithms/capabilities,
 //!                 codecs/wire formulas, topologies) + self-check
 //!   spectra       print mixing-matrix spectral stats for a topology
@@ -25,19 +26,21 @@
 //!   decomp bench-summary --quick --out BENCH_pr.json
 //!   decomp bench-compare BENCH_baseline.json BENCH_pr.json
 
-use decomp::algorithms::{self, RunOpts};
+use decomp::algorithms::{self, RunOpts, TrainTrace};
 use decomp::bench_harness::summary;
 use decomp::config::{apply_cli_overrides, load_config};
 use decomp::coordinator::{Backend, TrainConfig};
 use decomp::experiments::{
     ablations, ef_sweep, fig1, fig2, fig3, fig4, lowrank_sweep, scenario_sweep,
 };
-use decomp::metrics::{fmt_bytes, fmt_secs, Table};
+use decomp::metrics::{fmt_bytes, fmt_secs, Sink, SinkFormat, Table};
 use decomp::network::cost::{CostModel, NetworkModel};
 use decomp::network::sim::SimOpts;
+use decomp::serve::{self, ServeOpts};
 use decomp::spec;
 use decomp::util::cli::Args;
-use decomp::util::json::Json;
+use std::fs::File;
+use std::io::{BufWriter, Write};
 
 fn main() {
     if let Err(e) = run() {
@@ -63,17 +66,18 @@ fn run() -> anyhow::Result<()> {
     match cmd {
         "train" => train(&args, true),
         "simulate" => train(&args, false),
-        "list" => list(),
+        "serve" => serve_cmd(&args),
+        "list" => list(&args),
         "spectra" => spectra(&args),
-        "fig1" => print_tables(fig1::run(quick)),
-        "fig2" => print_tables(fig2::run(quick)),
-        "fig3" => print_tables(fig3::run(quick)),
-        "fig4" => print_tables(fig4::run(quick)),
-        "efsweep" => print_tables(ef_sweep::run(quick)),
-        "lowranksweep" => print_tables(lowrank_sweep::run(quick)),
-        "scenariosweep" => print_tables(scenario_sweep::run(quick)),
-        "ablations" => print_tables(ablations::run(quick)),
-        "netmodel" => print_tables(fig3::run(false)),
+        "fig1" => emit_tables(&args, fig1::run(quick)),
+        "fig2" => emit_tables(&args, fig2::run(quick)),
+        "fig3" => emit_tables(&args, fig3::run(quick)),
+        "fig4" => emit_tables(&args, fig4::run(quick)),
+        "efsweep" => emit_tables(&args, ef_sweep::run(quick)),
+        "lowranksweep" => emit_tables(&args, lowrank_sweep::run(quick)),
+        "scenariosweep" => emit_tables(&args, scenario_sweep::run(quick)),
+        "ablations" => emit_tables(&args, ablations::run(quick)),
+        "netmodel" => emit_tables(&args, fig3::run(false)),
         "bench-summary" => bench_summary(&args, quick),
         "bench-compare" => bench_compare(&args),
         _ => {
@@ -108,6 +112,16 @@ COMMANDS
               them; the stateful lowrank_rN family (warm-started per-link
               PowerGossip state) is admitted by choco only
   simulate    same options, deterministic single-process reference simulator
+  serve       accept ExperimentSpec-shaped jobs as NDJSON lines on stdin and
+              stream {accepted,progress,result,error,done} frames on stdout,
+              one JSON object per line; malformed lines get structured error
+              frames, the loop never exits on bad input. --tcp HOST:PORT
+              listens on a socket instead (one connection at a time). Job
+              line: {\"id\":...,\"algos\":[...],\"compressors\":[...],
+              \"nodes\":N,\"iters\":N,\"bandwidth_mbps\":F,\"latency_ms\":F,
+              \"trace\":true,...} — every TrainConfig field by name; the
+              whole algo×compressor grid is admitted through the spec layer
+              before any cell runs
   list        print the spec registry — every algorithm with its capability
               flags (needs_unbiased, link_state, uses_eta), every compressor
               family with its exact wire_bytes formula, every topology — then
@@ -129,6 +143,12 @@ COMMANDS
   bench-summary  collect perf metrics: [--quick] [--out BENCH_pr.json]
   bench-compare  <baseline.json> <candidate.json> [--tolerance 0.25];
                  exits non-zero when a metric regresses past the tolerance
+
+Every table-emitting subcommand (spectra, list, fig1..fig4, efsweep,
+lowranksweep, scenariosweep, ablations, netmodel) honors
+--format text|csv|json|ndjson and --out FILE; with --out and no
+--format, the file extension picks the encoding. json/ndjson stream
+through the zero-allocation writer — no in-memory JSON tree.
 
 Sweep grids (fig3, efsweep, ablations) run cells in parallel on the
 deterministic sweep runner; control the thread count with
@@ -227,6 +247,7 @@ fn train(args: &Args, threaded: bool) -> anyhow::Result<()> {
             fmt_secs(last.sim_time_s),
             cfg.iters
         );
+        write_trace(args, &trace, &t)?;
         return Ok(());
     }
 
@@ -268,15 +289,25 @@ fn train(args: &Args, threaded: bool) -> anyhow::Result<()> {
         }
         t.print();
         // --out file.json / --out file.csv: persist the trace.
-        if let Some(path) = args.opt_str("out") {
-            let body = if path.ends_with(".csv") {
-                t.to_csv()
-            } else {
-                trace.to_json().to_pretty()
-            };
-            std::fs::write(path, body)?;
-            println!("trace written to {path}");
+        write_trace(args, &trace, &t)?;
+    }
+    Ok(())
+}
+
+/// Persist a run's trace when `--out` is given: `.csv` writes the
+/// printed table, anything else streams the trace as pretty JSON
+/// through [`JsonWriter`](decomp::util::json::JsonWriter) — point by
+/// point, no intermediate tree, O(1) memory in the trace length.
+fn write_trace(args: &Args, trace: &TrainTrace, t: &Table) -> anyhow::Result<()> {
+    if let Some(path) = args.opt_str("out") {
+        if path.ends_with(".csv") {
+            std::fs::write(path, t.to_csv())?;
+        } else {
+            let mut f = BufWriter::new(File::create(path)?);
+            trace.write_json(&mut f, true)?;
+            f.flush()?;
         }
+        println!("trace written to {path}");
     }
     Ok(())
 }
@@ -297,15 +328,39 @@ fn spectra(args: &Args) -> anyhow::Result<()> {
         "dcd_alpha_bound".into(),
         format!("{:.6}", mixing.dcd_alpha_bound()),
     ]);
-    t.print();
+    emit_tables(args, vec![t])
+}
+
+/// Build the one output sink every table-emitting subcommand shares:
+/// `--format text|csv|json|ndjson` (or inferred from the `--out` file
+/// extension) chooses the encoding, `--out FILE` the destination.
+fn make_sink(args: &Args) -> anyhow::Result<Sink> {
+    Sink::from_args(args.opt_str("format"), args.opt_str("out")).map_err(|e| anyhow::anyhow!(e))
+}
+
+fn emit_tables(args: &Args, tables: Vec<Table>) -> anyhow::Result<()> {
+    make_sink(args)?.emit(&tables)?;
+    if let Some(path) = args.opt_str("out") {
+        eprintln!("written to {path}");
+    }
     Ok(())
 }
 
-fn print_tables(tables: Vec<Table>) -> anyhow::Result<()> {
-    for t in tables {
-        t.print();
-        println!();
+/// `decomp serve`: long-running NDJSON job loop — stdin/stdout by
+/// default, a TCP listener with `--tcp ADDR`. Sweep parallelism inside
+/// each job grid follows `--sweep-threads` / `DECOMP_SWEEP_THREADS`.
+fn serve_cmd(args: &Args) -> anyhow::Result<()> {
+    let opts = ServeOpts::default();
+    if let Some(addr) = args.opt_str("tcp") {
+        return serve::serve_tcp(addr, &opts);
     }
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let stats = serve::serve(stdin.lock(), stdout.lock(), &opts)?;
+    eprintln!(
+        "decomp serve: input closed — {} job(s) ok, {} rejected, {} cell(s) run",
+        stats.jobs_ok, stats.jobs_rejected, stats.cells_run
+    );
     Ok(())
 }
 
@@ -314,15 +369,20 @@ fn print_tables(tables: Vec<Table>) -> anyhow::Result<()> {
 /// formula, every topology family), then self-check that every registry
 /// entry actually constructs and steps on the sim backend at n=4 — the
 /// CI smoke that catches registry/implementation drift.
-fn list() -> anyhow::Result<()> {
-    for t in spec::registry::list_tables() {
-        t.print();
-        println!();
-    }
+fn list(args: &Args) -> anyhow::Result<()> {
+    let sink = make_sink(args)?;
+    sink.emit(&spec::registry::list_tables())?;
     let cells = spec::registry::self_check(4)?;
-    println!(
+    let msg = format!(
         "registry self-check OK: {cells} cells constructed and stepped on the sim backend at n=4"
     );
+    // Keep machine-readable stdout (json/ndjson/csv) free of the status
+    // line; the text default keeps its historical stdout shape.
+    if sink.format() == SinkFormat::Text && args.opt_str("out").is_none() {
+        println!("{msg}");
+    } else {
+        eprintln!("{msg}");
+    }
     Ok(())
 }
 
@@ -331,7 +391,9 @@ fn bench_summary(args: &Args, quick: bool) -> anyhow::Result<()> {
     let report = summary::collect(quick);
     report.to_table().print();
     if let Some(path) = args.opt_str("out") {
-        std::fs::write(path, report.to_json().to_pretty())?;
+        let mut f = BufWriter::new(File::create(path)?);
+        report.write_json(&mut f)?;
+        f.flush()?;
         println!("bench summary written to {path}");
     }
     Ok(())
@@ -340,8 +402,7 @@ fn bench_summary(args: &Args, quick: bool) -> anyhow::Result<()> {
 fn load_bench(path: &str) -> anyhow::Result<summary::BenchReport> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("cannot read bench file '{path}': {e}"))?;
-    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
-    summary::BenchReport::from_json(&j)
+    summary::BenchReport::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e:#}"))
 }
 
 /// Gate a candidate BENCH json against a baseline; non-zero exit on

@@ -1,8 +1,14 @@
-//! Metrics output: aligned console tables, CSV, and JSON series — the
-//! formats the experiment drivers and benches report in.
+//! Metrics output: aligned console tables, CSV, and streamed JSON — the
+//! formats the experiment drivers and benches report in. The [`sink`]
+//! module unifies the choice behind one `--format` flag.
 
-use crate::util::json::Json;
+pub mod sink;
+
+pub use sink::{Sink, SinkFormat};
+
+use crate::util::json::JsonWriter;
 use std::fmt::Write as _;
+use std::io;
 
 /// A simple column-aligned table printer.
 #[derive(Debug, Clone, Default)]
@@ -77,23 +83,30 @@ impl Table {
         out
     }
 
-    pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("title", Json::Str(self.title.clone())),
-            (
-                "header",
-                Json::Arr(self.header.iter().map(|h| Json::Str(h.clone())).collect()),
-            ),
-            (
-                "rows",
-                Json::Arr(
-                    self.rows
-                        .iter()
-                        .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
-                        .collect(),
-                ),
-            ),
-        ])
+    /// Stream the table as a JSON object (`header`/`rows`/`title`, the
+    /// order the old tree emitter produced) into an open writer. Rows go
+    /// straight to the sink — no intermediate `Json` tree.
+    pub fn write_json<W: io::Write>(&self, w: &mut JsonWriter<W>) -> io::Result<()> {
+        w.begin_obj()?;
+        w.key("header")?;
+        w.begin_arr()?;
+        for h in &self.header {
+            w.str(h)?;
+        }
+        w.end_arr()?;
+        w.key("rows")?;
+        w.begin_arr()?;
+        for row in &self.rows {
+            w.begin_arr()?;
+            for cell in row {
+                w.str(cell)?;
+            }
+            w.end_arr()?;
+        }
+        w.end_arr()?;
+        w.key("title")?;
+        w.str(&self.title)?;
+        w.end_obj()
     }
 }
 
@@ -156,9 +169,12 @@ mod tests {
     fn json_round_trips() {
         let mut t = Table::new("t", &["x"]);
         t.row(vec!["1".into()]);
-        let j = t.to_json();
-        let parsed = Json::parse(&j.to_string()).unwrap();
+        let mut buf = Vec::new();
+        let mut w = JsonWriter::new(&mut buf);
+        t.write_json(&mut w).unwrap();
+        let parsed = crate::util::json::Json::parse(&String::from_utf8(buf).unwrap()).unwrap();
         assert_eq!(parsed.get("title").unwrap().as_str(), Some("t"));
+        assert_eq!(parsed.get("header").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! One output surface for every experiment subcommand.
+//!
+//! Before this module, each driver in `main.rs` hand-rolled its own
+//! branching between `Table::render`, `to_csv`, and JSON. A [`Sink`]
+//! owns that choice: `--format text|csv|json|ndjson` (or the `--out`
+//! file extension when `--format` is absent) selects the encoding, and
+//! every subcommand emits through the same `emit(&[Table])` call. JSON
+//! and NDJSON stream through [`JsonWriter`] — no intermediate tree.
+
+use super::Table;
+use crate::util::json::JsonWriter;
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::str::FromStr;
+
+/// Output encoding for experiment tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SinkFormat {
+    /// Aligned console tables (`Table::render`), the default.
+    Text,
+    /// CSV; multiple tables are separated by `# title` comment lines.
+    Csv,
+    /// One pretty-printed JSON array of table objects.
+    Json,
+    /// One compact JSON table object per line.
+    Ndjson,
+}
+
+impl FromStr for SinkFormat {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<SinkFormat, String> {
+        match s {
+            "text" | "table" => Ok(SinkFormat::Text),
+            "csv" => Ok(SinkFormat::Csv),
+            "json" => Ok(SinkFormat::Json),
+            "ndjson" | "jsonl" => Ok(SinkFormat::Ndjson),
+            other => Err(format!("unknown format '{other}' (text|csv|json|ndjson)")),
+        }
+    }
+}
+
+impl SinkFormat {
+    /// Resolve an explicit `--format`, else infer from the `--out` file
+    /// extension, else default to text.
+    pub fn resolve(format: Option<&str>, out: Option<&str>) -> Result<SinkFormat, String> {
+        if let Some(f) = format {
+            return f.parse();
+        }
+        Ok(match out {
+            Some(p) if p.ends_with(".csv") => SinkFormat::Csv,
+            Some(p) if p.ends_with(".json") => SinkFormat::Json,
+            Some(p) if p.ends_with(".ndjson") || p.ends_with(".jsonl") => SinkFormat::Ndjson,
+            _ => SinkFormat::Text,
+        })
+    }
+}
+
+/// Where and how experiment tables leave the process.
+pub struct Sink {
+    format: SinkFormat,
+    /// Output file; `None` writes to stdout.
+    out: Option<String>,
+}
+
+impl Sink {
+    pub fn new(format: SinkFormat, out: Option<&str>) -> Sink {
+        Sink {
+            format,
+            out: out.map(|s| s.to_string()),
+        }
+    }
+
+    /// Build from CLI arguments (`--format`, `--out`).
+    pub fn from_args(format: Option<&str>, out: Option<&str>) -> Result<Sink, String> {
+        Ok(Sink::new(SinkFormat::resolve(format, out)?, out))
+    }
+
+    pub fn format(&self) -> SinkFormat {
+        self.format
+    }
+
+    /// Emit the tables to the configured destination.
+    pub fn emit(&self, tables: &[Table]) -> io::Result<()> {
+        match &self.out {
+            Some(path) => {
+                let mut w = BufWriter::new(File::create(path)?);
+                self.emit_to(tables, &mut w)?;
+                w.flush()
+            }
+            None => {
+                let stdout = io::stdout();
+                let mut w = stdout.lock();
+                self.emit_to(tables, &mut w)
+            }
+        }
+    }
+
+    /// Emit the tables to an explicit writer (testable core of `emit`).
+    pub fn emit_to<W: Write>(&self, tables: &[Table], w: &mut W) -> io::Result<()> {
+        match self.format {
+            SinkFormat::Text => {
+                for (i, t) in tables.iter().enumerate() {
+                    if i > 0 {
+                        w.write_all(b"\n")?;
+                    }
+                    w.write_all(t.render().as_bytes())?;
+                }
+                Ok(())
+            }
+            SinkFormat::Csv => {
+                for (i, t) in tables.iter().enumerate() {
+                    if tables.len() > 1 {
+                        if i > 0 {
+                            w.write_all(b"\n")?;
+                        }
+                        writeln!(w, "# {}", t.title)?;
+                    }
+                    w.write_all(t.to_csv().as_bytes())?;
+                }
+                Ok(())
+            }
+            SinkFormat::Json => {
+                let mut jw = JsonWriter::pretty(&mut *w);
+                jw.begin_arr()?;
+                for t in tables {
+                    t.write_json(&mut jw)?;
+                }
+                jw.end_arr()?;
+                jw.end_line()
+            }
+            SinkFormat::Ndjson => {
+                let mut jw = JsonWriter::new(&mut *w);
+                for t in tables {
+                    t.write_json(&mut jw)?;
+                    jw.end_line()?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn sample() -> Vec<Table> {
+        let mut a = Table::new("first", &["algo", "loss"]);
+        a.row(vec!["dcd_q8".into(), "0.1".into()]);
+        let mut b = Table::new("second", &["k", "v"]);
+        b.row(vec!["a,b".into(), "2".into()]);
+        vec![a, b]
+    }
+
+    fn render(format: SinkFormat, tables: &[Table]) -> String {
+        let sink = Sink::new(format, None);
+        let mut buf = Vec::new();
+        sink.emit_to(tables, &mut buf).unwrap();
+        String::from_utf8(buf).unwrap()
+    }
+
+    #[test]
+    fn format_parsing_and_inference() {
+        assert_eq!("csv".parse::<SinkFormat>().unwrap(), SinkFormat::Csv);
+        assert_eq!("jsonl".parse::<SinkFormat>().unwrap(), SinkFormat::Ndjson);
+        assert!("xml".parse::<SinkFormat>().is_err());
+        assert_eq!(SinkFormat::resolve(None, Some("x.csv")).unwrap(), SinkFormat::Csv);
+        assert_eq!(SinkFormat::resolve(None, Some("x.json")).unwrap(), SinkFormat::Json);
+        assert_eq!(SinkFormat::resolve(None, None).unwrap(), SinkFormat::Text);
+        // Explicit --format beats the extension.
+        assert_eq!(
+            SinkFormat::resolve(Some("ndjson"), Some("x.csv")).unwrap(),
+            SinkFormat::Ndjson
+        );
+    }
+
+    #[test]
+    fn text_matches_render() {
+        let tables = sample();
+        let expected = tables.iter().map(|t| t.render()).collect::<Vec<_>>().join("\n");
+        assert_eq!(render(SinkFormat::Text, &tables), expected);
+        // One table is exactly its render, no separators.
+        assert_eq!(render(SinkFormat::Text, &tables[..1]), tables[0].render());
+    }
+
+    #[test]
+    fn csv_separates_multiple_tables() {
+        let out = render(SinkFormat::Csv, &sample());
+        assert!(out.starts_with("# first\n"), "{out}");
+        assert!(out.contains("\n# second\n"), "{out}");
+        assert!(out.contains("\"a,b\""), "{out}");
+        // A single table stays plain CSV (no comment header).
+        let one = render(SinkFormat::Csv, &sample()[..1]);
+        assert!(one.starts_with("algo,loss\n"), "{one}");
+    }
+
+    #[test]
+    fn json_is_a_parseable_array() {
+        let out = render(SinkFormat::Json, &sample());
+        let v = Json::parse(&out).unwrap();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("title").unwrap().as_str(), Some("first"));
+        assert_eq!(arr[1].get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn ndjson_is_one_object_per_line() {
+        let out = render(SinkFormat::Ndjson, &sample());
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let v = Json::parse(line).unwrap();
+            assert!(v.get("title").is_some());
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! NDJSON job requests for `decomp serve`.
+//!
+//! Each input line is one [`JobRequest`]: a set of algorithm ×
+//! compressor cells over a shared [`TrainConfig`] base, plus the sim
+//! backend's network condition. Parsing is pull-based ([`JsonPull`]) —
+//! a job line never materializes a `Json` tree — and *strict*: an
+//! unknown field rejects the job with a structured error frame instead
+//! of running something the caller didn't mean.
+
+use crate::coordinator::TrainConfig;
+use crate::util::json::{Event, JsonPull};
+
+/// One parsed serve job: the algo×compressor grid to run and the
+/// network condition to run it under. Everything not named in the job
+/// line keeps the [`TrainConfig`] default.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    /// Caller-chosen correlation id, echoed on every frame for this job.
+    pub id: String,
+    /// Algorithms to run (`"algo"` for one, `"algos"` for a list).
+    pub algos: Vec<String>,
+    /// Compressors to pair with each algorithm.
+    pub compressors: Vec<String>,
+    /// Shared base config; per-cell copies get `algo`/`compressor` set.
+    pub base: TrainConfig,
+    /// Uniform link bandwidth for the event engine (Mbit/s).
+    pub bandwidth_mbps: f64,
+    /// Uniform link latency (ms).
+    pub latency_ms: f64,
+    /// Modeled per-iteration compute time (ms).
+    pub compute_ms: f64,
+    /// Include the full per-cell trace points in the result frame.
+    pub trace: bool,
+}
+
+impl Default for JobRequest {
+    fn default() -> JobRequest {
+        JobRequest {
+            id: "job".to_string(),
+            algos: Vec::new(),
+            compressors: Vec::new(),
+            base: TrainConfig {
+                backend: "sim".into(),
+                ..TrainConfig::default()
+            },
+            bandwidth_mbps: 5.0,
+            latency_ms: 5.0,
+            compute_ms: 0.0,
+            trace: false,
+        }
+    }
+}
+
+/// One admitted grid cell of a job.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub algo: String,
+    pub compressor: String,
+    pub cfg: TrainConfig,
+}
+
+fn expect_str(p: &mut JsonPull, key: &str) -> Result<String, String> {
+    match p.step()? {
+        Event::Str(s) => Ok(s.into_owned()),
+        other => Err(format!("job: field '{key}' expects a string, got {other:?}")),
+    }
+}
+
+fn expect_str_arr(p: &mut JsonPull, key: &str) -> Result<Vec<String>, String> {
+    if p.step()? != Event::BeginArr {
+        return Err(format!("job: field '{key}' expects an array of strings"));
+    }
+    let mut out = Vec::new();
+    loop {
+        match p.step()? {
+            Event::EndArr => return Ok(out),
+            Event::Str(s) => out.push(s.into_owned()),
+            other => {
+                return Err(format!("job: field '{key}' expects strings, got {other:?}"));
+            }
+        }
+    }
+}
+
+fn expect_f64(p: &mut JsonPull, key: &str) -> Result<f64, String> {
+    match p.step()? {
+        Event::Num(n) => Ok(n.as_f64()),
+        other => Err(format!("job: field '{key}' expects a number, got {other:?}")),
+    }
+}
+
+fn expect_usize(p: &mut JsonPull, key: &str) -> Result<usize, String> {
+    match p.step()? {
+        Event::Num(n) => n
+            .as_usize()
+            .ok_or_else(|| format!("job: field '{key}' expects a non-negative integer")),
+        other => Err(format!("job: field '{key}' expects an integer, got {other:?}")),
+    }
+}
+
+fn expect_u64(p: &mut JsonPull, key: &str) -> Result<u64, String> {
+    match p.step()? {
+        Event::Num(n) => n
+            .as_u64()
+            .ok_or_else(|| format!("job: field '{key}' expects a non-negative integer")),
+        other => Err(format!("job: field '{key}' expects an integer, got {other:?}")),
+    }
+}
+
+fn expect_bool(p: &mut JsonPull, key: &str) -> Result<bool, String> {
+    match p.step()? {
+        Event::Bool(b) => Ok(b),
+        other => Err(format!("job: field '{key}' expects a bool, got {other:?}")),
+    }
+}
+
+impl JobRequest {
+    /// Parse one NDJSON job line. Strict: unknown fields are errors, so
+    /// a typo'd `"compresors"` is a rejection frame, not a silent
+    /// default run.
+    pub fn parse(line: &str) -> Result<JobRequest, String> {
+        let mut p = JsonPull::new(line);
+        if p.step()? != Event::BeginObj {
+            return Err("job: each line must be one JSON object".to_string());
+        }
+        let mut job = JobRequest::default();
+        loop {
+            let key = match p.step()? {
+                Event::EndObj => break,
+                Event::Key(k) => k.into_owned(),
+                other => return Err(format!("job: expected a key, got {other:?}")),
+            };
+            match key.as_str() {
+                "id" => job.id = expect_str(&mut p, &key)?,
+                "algo" => job.algos = vec![expect_str(&mut p, &key)?],
+                "algos" => job.algos = expect_str_arr(&mut p, &key)?,
+                "compressor" => job.compressors = vec![expect_str(&mut p, &key)?],
+                "compressors" => job.compressors = expect_str_arr(&mut p, &key)?,
+                "topology" => job.base.topology = expect_str(&mut p, &key)?,
+                "model" => job.base.model = expect_str(&mut p, &key)?,
+                "scenario" => job.base.scenario = expect_str(&mut p, &key)?,
+                "nodes" => job.base.n_nodes = expect_usize(&mut p, &key)?,
+                "iters" => job.base.iters = expect_usize(&mut p, &key)?,
+                "eval_every" => job.base.eval_every = expect_usize(&mut p, &key)?,
+                "dim" => job.base.dim = expect_usize(&mut p, &key)?,
+                "rows_per_node" => job.base.rows_per_node = expect_usize(&mut p, &key)?,
+                "batch" => job.base.batch = expect_usize(&mut p, &key)?,
+                "seed" => job.base.seed = expect_u64(&mut p, &key)?,
+                "gamma" => job.base.gamma = expect_f64(&mut p, &key)? as f32,
+                "eta" => job.base.eta = expect_f64(&mut p, &key)? as f32,
+                "heterogeneity" => job.base.heterogeneity = expect_f64(&mut p, &key)? as f32,
+                "bandwidth_mbps" => job.bandwidth_mbps = expect_f64(&mut p, &key)?,
+                "latency_ms" => job.latency_ms = expect_f64(&mut p, &key)?,
+                "compute_ms" => job.compute_ms = expect_f64(&mut p, &key)?,
+                "trace" => job.trace = expect_bool(&mut p, &key)?,
+                other => return Err(format!("job: unknown field '{other}'")),
+            }
+        }
+        if p.step()? != Event::End {
+            return Err("job: trailing data after the object".to_string());
+        }
+        if job.algos.is_empty() {
+            return Err("job: missing 'algo' (or 'algos')".to_string());
+        }
+        if job.compressors.is_empty() {
+            return Err("job: missing 'compressor' (or 'compressors')".to_string());
+        }
+        Ok(job)
+    }
+
+    /// Expand the algo×compressor grid into per-cell configs, admitting
+    /// every cell through the spec layer *before* anything runs — a job
+    /// with one bad cell is rejected whole, no partial output.
+    pub fn cells(&self) -> anyhow::Result<Vec<Cell>> {
+        let mut cells = Vec::with_capacity(self.algos.len() * self.compressors.len());
+        for algo in &self.algos {
+            for compressor in &self.compressors {
+                let mut cfg = self.base.clone();
+                cfg.algo = algo.clone();
+                cfg.compressor = compressor.clone();
+                cfg.backend = "sim".into();
+                cfg.experiment_spec()?.session()?;
+                cells.push(Cell {
+                    algo: algo.clone(),
+                    compressor: compressor.clone(),
+                    cfg,
+                });
+            }
+        }
+        Ok(cells)
+    }
+}
+
+/// Best-effort `id` recovery from a line that failed to parse as a job,
+/// so the error frame still correlates. Lazily skips every other field;
+/// returns `None` when the line is too broken to scan.
+pub fn peek_id(line: &str) -> Option<String> {
+    let mut p = JsonPull::new(line);
+    if p.next().ok()? != Event::BeginObj {
+        return None;
+    }
+    loop {
+        match p.next().ok()? {
+            Event::Key(k) if k == "id" => {
+                return match p.next().ok()? {
+                    Event::Str(s) => Some(s.into_owned()),
+                    _ => None,
+                };
+            }
+            Event::Key(_) => p.skip_value().ok()?,
+            _ => return None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_job_line() {
+        let job = JobRequest::parse(
+            r#"{"id":"j1","algos":["dcd","choco"],"compressors":["q8"],"nodes":16,
+               "topology":"ring","iters":40,"eval_every":10,"gamma":0.05,"eta":0.4,
+               "seed":7,"bandwidth_mbps":10.5,"latency_ms":2.0,"trace":true}"#,
+        )
+        .unwrap();
+        assert_eq!(job.id, "j1");
+        assert_eq!(job.algos, vec!["dcd", "choco"]);
+        assert_eq!(job.compressors, vec!["q8"]);
+        assert_eq!(job.base.n_nodes, 16);
+        assert_eq!(job.base.iters, 40);
+        assert_eq!(job.base.seed, 7);
+        assert!((job.bandwidth_mbps - 10.5).abs() < 1e-12);
+        assert!(job.trace);
+        // The grid expands and every cell admits.
+        let cells = job.cells().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].cfg.algo, "dcd");
+        assert_eq!(cells[1].cfg.algo, "choco");
+        assert_eq!(cells[1].cfg.backend, "sim");
+    }
+
+    #[test]
+    fn singular_aliases_and_defaults() {
+        let job = JobRequest::parse(r#"{"algo":"dpsgd","compressor":"fp32"}"#).unwrap();
+        assert_eq!(job.algos, vec!["dpsgd"]);
+        assert_eq!(job.compressors, vec!["fp32"]);
+        assert_eq!(job.id, "job");
+        assert!((job.bandwidth_mbps - 5.0).abs() < 1e-12);
+        assert!(!job.trace);
+    }
+
+    #[test]
+    fn rejects_unknown_fields_and_bad_shapes() {
+        for (line, needle) in [
+            (r#"{"algo":"dcd","compresors":["q8"]}"#, "unknown field"),
+            (r#"[1,2]"#, "one JSON object"),
+            (r#"{"algo":"dcd"}"#, "missing 'compressor'"),
+            (r#"{"compressor":"q8"}"#, "missing 'algo'"),
+            (r#"{"algo":"dcd","compressor":"q8","nodes":"x"}"#, "integer"),
+            (r#"{"algo":"dcd","compressor":"q8"} extra"#, "trailing"),
+            (r#"{"algo":"dcd","compressor":"q8","seed":-1}"#, "non-negative"),
+            (r#"not json at all"#, ""),
+        ] {
+            let err = JobRequest::parse(line).unwrap_err();
+            assert!(err.contains(needle), "line {line:?} → {err:?}");
+        }
+    }
+
+    #[test]
+    fn inadmissible_cells_reject_the_whole_job() {
+        // Biased top-k under DCD is the paper's canonical inadmissible
+        // pairing; the job must be rejected before any cell runs.
+        let job = JobRequest::parse(r#"{"algo":"dcd","compressor":"topk_10"}"#).unwrap();
+        assert!(job.cells().is_err());
+    }
+
+    #[test]
+    fn peek_id_scans_lazily() {
+        assert_eq!(
+            peek_id(r#"{"algos":["dcd"],"nested":{"id":"decoy"},"id":"real"}"#).as_deref(),
+            Some("real")
+        );
+        assert_eq!(peek_id(r#"{"algos":["dcd"]}"#), None);
+        assert_eq!(peek_id("garbage"), None);
+    }
+}

@@ -1,0 +1,381 @@
+//! `decomp serve` — a long-running job loop over the spec registry.
+//!
+//! The batch CLI runs one experiment per invocation; `serve` turns the
+//! same construction path into a surface that *accepts work*. Each
+//! stdin line (or TCP line, behind `--tcp`) is one NDJSON
+//! [`JobRequest`]: an algorithm × compressor grid over a shared
+//! [`TrainConfig`](crate::coordinator::TrainConfig) base. Every cell is
+//! admitted through the spec layer *before* anything runs, the grid
+//! executes on the deterministic parallel sweep runner, and frames
+//! stream back as NDJSON — one JSON object per line, flushed as soon as
+//! it happens:
+//!
+//! | frame      | when                              | keys                          |
+//! |------------|-----------------------------------|-------------------------------|
+//! | `accepted` | job parsed + every cell admitted  | `cells`, `id`                 |
+//! | `progress` | a cell completes (completion order) | `cell`, `completed`, `id`, `total` |
+//! | `result`   | right after its `progress` frame  | `algo`, `bytes_sent`, `compressor`, `final_loss`, `id`, `iters`, `sim_time_s`, `trace`? |
+//! | `error`    | malformed line, inadmissible job, or a failed cell | `cell`?, `error`, `id` |
+//! | `done`     | the whole grid has run            | `cells`, `failed`, `id`       |
+//!
+//! Malformed input is answered with a structured `error` frame — the
+//! loop never exits on bad jobs, only on input/output I/O failure. All
+//! frames are emitted through [`JsonWriter`]: the serve loop itself
+//! never materializes a `Json` tree in either direction.
+
+pub mod job;
+
+pub use job::{peek_id, Cell, JobRequest};
+
+use crate::algorithms::driver::TrainTrace;
+use crate::algorithms::RunOpts;
+use crate::experiments::runner;
+use crate::network::cost::{CostModel, NetworkModel};
+use crate::network::sim::SimOpts;
+use crate::util::json::JsonWriter;
+use std::io::{self, BufRead, Write};
+
+/// Serve-loop knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOpts {
+    /// Sweep-runner threads per job grid; `0` resolves through
+    /// [`runner::sweep_threads`] (honors `DECOMP_SWEEP_THREADS`).
+    pub threads: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts { threads: 0 }
+    }
+}
+
+/// What a serve loop did before its input closed.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Jobs that were admitted and ran their whole grid.
+    pub jobs_ok: usize,
+    /// Lines rejected before any cell ran (parse or admission failure).
+    pub jobs_rejected: usize,
+    /// Total grid cells executed across all accepted jobs.
+    pub cells_run: usize,
+}
+
+fn err_str(e: anyhow::Error) -> String {
+    format!("{e:#}")
+}
+
+/// Emit one NDJSON frame: build the object, terminate the line, flush —
+/// a consumer on the other side of a pipe sees the frame immediately.
+fn frame<W: Write>(
+    out: &mut W,
+    build: impl FnOnce(&mut JsonWriter<&mut W>) -> io::Result<()>,
+) -> io::Result<()> {
+    let mut jw = JsonWriter::new(&mut *out);
+    build(&mut jw)?;
+    jw.end_line()?;
+    out.flush()
+}
+
+/// `error` frame. `id` is the job correlation id when known (`null`
+/// otherwise); `cell` names the failing cell for per-cell errors.
+fn error_frame<W: Write>(
+    out: &mut W,
+    id: Option<&str>,
+    cell: Option<&str>,
+    msg: &str,
+) -> io::Result<()> {
+    frame(out, |w| {
+        w.begin_obj()?;
+        w.key("event")?;
+        w.str("error")?;
+        if let Some(c) = cell {
+            w.key("cell")?;
+            w.str(c)?;
+        }
+        w.key("error")?;
+        w.str(msg)?;
+        w.key("id")?;
+        match id {
+            Some(id) => w.str(id)?,
+            None => w.null()?,
+        }
+        w.end_obj()
+    })
+}
+
+fn progress_frame<W: Write>(
+    out: &mut W,
+    id: &str,
+    cell: &Cell,
+    completed: usize,
+    total: usize,
+) -> io::Result<()> {
+    frame(out, |w| {
+        w.begin_obj()?;
+        w.key("event")?;
+        w.str("progress")?;
+        w.key("cell")?;
+        w.str(&format!("{}/{}", cell.algo, cell.compressor))?;
+        w.key("completed")?;
+        w.num_u64(completed as u64)?;
+        w.key("id")?;
+        w.str(id)?;
+        w.key("total")?;
+        w.num_u64(total as u64)?;
+        w.end_obj()
+    })
+}
+
+fn result_frame<W: Write>(
+    out: &mut W,
+    job: &JobRequest,
+    cell: &Cell,
+    trace: &TrainTrace,
+) -> io::Result<()> {
+    let (bytes_sent, sim_time_s) = trace
+        .points
+        .last()
+        .map(|p| (p.bytes_sent, p.sim_time_s))
+        .unwrap_or((0, 0.0));
+    frame(out, |w| {
+        w.begin_obj()?;
+        w.key("event")?;
+        w.str("result")?;
+        w.key("algo")?;
+        w.str(&cell.algo)?;
+        w.key("bytes_sent")?;
+        w.num_u64(bytes_sent)?;
+        w.key("compressor")?;
+        w.str(&cell.compressor)?;
+        w.key("final_loss")?;
+        w.num(trace.final_loss())?;
+        w.key("id")?;
+        w.str(&job.id)?;
+        w.key("iters")?;
+        w.num_u64(cell.cfg.iters as u64)?;
+        w.key("sim_time_s")?;
+        w.num(sim_time_s)?;
+        if job.trace {
+            w.key("trace")?;
+            trace.emit_json(w)?;
+        }
+        w.end_obj()
+    })
+}
+
+/// Run one admitted cell on the discrete-event backend — the same
+/// construction path as `decomp train --backend sim`.
+fn run_cell(cell: &Cell, job: &JobRequest) -> Result<TrainTrace, String> {
+    let session = cell
+        .cfg
+        .experiment_spec()
+        .map_err(err_str)?
+        .session()
+        .map_err(err_str)?;
+    let (models, x0) = cell.cfg.build_models().map_err(err_str)?;
+    let (eval_models, _) = cell.cfg.build_models().map_err(err_str)?;
+    let net = NetworkModel::new(job.bandwidth_mbps * 1e6, job.latency_ms * 1e-3);
+    let opts = RunOpts {
+        iters: cell.cfg.iters,
+        gamma: cell.cfg.gamma,
+        eval_every: cell.cfg.eval_every,
+        ..Default::default()
+    };
+    let sim = SimOpts {
+        cost: CostModel::Uniform(net),
+        compute_per_iter_s: job.compute_ms * 1e-3,
+        scenario: None,
+    };
+    session
+        .run_sim_trace(models, &eval_models, &x0, &opts, sim)
+        .map_err(err_str)
+}
+
+/// The serve loop: read NDJSON job lines from `input` until EOF, stream
+/// frames to `out`. Bad lines produce `error` frames and the loop keeps
+/// going; only I/O failure on `input`/`out` ends it early.
+pub fn serve<R: BufRead, W: Write>(
+    input: R,
+    mut out: W,
+    opts: &ServeOpts,
+) -> io::Result<ServeStats> {
+    let threads = if opts.threads == 0 {
+        runner::sweep_threads()
+    } else {
+        opts.threads
+    };
+    let mut stats = ServeStats::default();
+    for line in input.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let job = match JobRequest::parse(&line) {
+            Ok(j) => j,
+            Err(msg) => {
+                stats.jobs_rejected += 1;
+                error_frame(&mut out, peek_id(&line).as_deref(), None, &msg)?;
+                continue;
+            }
+        };
+        // Admit the whole grid up front: a job with one bad cell is an
+        // `error` frame, never a partial run.
+        let cells = match job.cells() {
+            Ok(c) => c,
+            Err(e) => {
+                stats.jobs_rejected += 1;
+                error_frame(&mut out, Some(&job.id), None, &err_str(e))?;
+                continue;
+            }
+        };
+        frame(&mut out, |w| {
+            w.begin_obj()?;
+            w.key("event")?;
+            w.str("accepted")?;
+            w.key("cells")?;
+            w.num_u64(cells.len() as u64)?;
+            w.key("id")?;
+            w.str(&job.id)?;
+            w.end_obj()
+        })?;
+
+        let total = cells.len();
+        let mut completed = 0usize;
+        let mut failed = 0usize;
+        // The observer runs on this (collector) thread in completion
+        // order, so frames stream while the grid is still running. I/O
+        // errors can't propagate out of the observer; stash the first
+        // one and re-raise after the grid drains.
+        let mut io_err: Option<io::Error> = None;
+        runner::run_cells_observed(
+            threads,
+            &cells,
+            |_, cell| run_cell(cell, &job),
+            |i, res: &Result<TrainTrace, String>| {
+                if io_err.is_some() {
+                    return;
+                }
+                completed += 1;
+                let wrote = progress_frame(&mut out, &job.id, &cells[i], completed, total)
+                    .and_then(|()| match res {
+                        Ok(trace) => result_frame(&mut out, &job, &cells[i], trace),
+                        Err(msg) => {
+                            failed += 1;
+                            let cell = format!("{}/{}", cells[i].algo, cells[i].compressor);
+                            error_frame(&mut out, Some(&job.id), Some(&cell), msg)
+                        }
+                    });
+                if let Err(e) = wrote {
+                    io_err = Some(e);
+                }
+            },
+        );
+        if let Some(e) = io_err {
+            return Err(e);
+        }
+        stats.jobs_ok += 1;
+        stats.cells_run += total;
+        frame(&mut out, |w| {
+            w.begin_obj()?;
+            w.key("event")?;
+            w.str("done")?;
+            w.key("cells")?;
+            w.num_u64(total as u64)?;
+            w.key("failed")?;
+            w.num_u64(failed as u64)?;
+            w.key("id")?;
+            w.str(&job.id)?;
+            w.end_obj()
+        })?;
+    }
+    Ok(stats)
+}
+
+/// TCP front for the same loop: bind `addr`, serve one connection at a
+/// time (jobs are CPU-bound sweeps; the grid inside a job is what
+/// parallelizes). Each connection gets a fresh serve loop; a
+/// disconnecting client never takes the listener down.
+pub fn serve_tcp(addr: &str, opts: &ServeOpts) -> anyhow::Result<()> {
+    let listener = std::net::TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("serve: cannot bind {addr}: {e}"))?;
+    eprintln!("decomp serve: listening on {addr} (one connection at a time)");
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "?".to_string());
+        eprintln!("decomp serve: {peer} connected");
+        let reader = io::BufReader::new(stream.try_clone()?);
+        match serve(reader, stream, opts) {
+            Ok(s) => eprintln!(
+                "decomp serve: {peer} closed — {} ok, {} rejected, {} cell(s)",
+                s.jobs_ok, s.jobs_rejected, s.cells_run
+            ),
+            Err(e) => eprintln!("decomp serve: {peer} i/o error: {e}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::io::Cursor;
+
+    const SMALL: &str = r#"{"id":"t1","algo":"dpsgd","compressor":"fp32","nodes":4,
+        "iters":4,"eval_every":2,"dim":8,"rows_per_node":16,"batch":4,
+        "model":"quadratic"}"#;
+
+    fn run_lines(input: &str) -> (ServeStats, Vec<Json>) {
+        let mut out = Vec::new();
+        let stats = serve(Cursor::new(input), &mut out, &ServeOpts { threads: 1 }).unwrap();
+        let frames = String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).expect("every frame is one valid JSON line"))
+            .collect();
+        (stats, frames)
+    }
+
+    fn events(frames: &[Json]) -> Vec<String> {
+        frames
+            .iter()
+            .map(|f| f.get("event").unwrap().as_str().unwrap().to_string())
+            .collect()
+    }
+
+    #[test]
+    fn empty_input_is_a_clean_noop() {
+        let (stats, frames) = run_lines("\n  \n");
+        assert_eq!(stats, ServeStats::default());
+        assert!(frames.is_empty());
+    }
+
+    #[test]
+    fn one_job_streams_the_full_frame_sequence() {
+        let line = SMALL.replace('\n', " ");
+        let (stats, frames) = run_lines(&format!("{line}\n"));
+        assert_eq!(stats.jobs_ok, 1);
+        assert_eq!(stats.cells_run, 1);
+        assert_eq!(events(&frames), vec!["accepted", "progress", "result", "done"]);
+        let result = &frames[2];
+        assert_eq!(result.get("id").unwrap().as_str(), Some("t1"));
+        assert_eq!(result.get("algo").unwrap().as_str(), Some("dpsgd"));
+        assert!(result.get("final_loss").unwrap().as_f64().unwrap().is_finite());
+        assert!(result.get("trace").is_none(), "trace off by default");
+    }
+
+    #[test]
+    fn malformed_line_gets_an_error_frame_and_the_loop_continues() {
+        let line = SMALL.replace('\n', " ");
+        let input = format!("this is not json\n{line}\n");
+        let (stats, frames) = run_lines(&input);
+        assert_eq!(stats.jobs_rejected, 1);
+        assert_eq!(stats.jobs_ok, 1);
+        assert_eq!(events(&frames)[0], "error");
+        assert_eq!(frames[0].get("id"), Some(&Json::Null));
+        assert_eq!(events(&frames)[1..], ["accepted", "progress", "result", "done"]);
+    }
+}

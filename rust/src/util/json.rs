@@ -1,12 +1,31 @@
-//! Minimal JSON parser and emitter.
+//! Minimal JSON layer: a tree (`Json`), a streaming writer (`JsonWriter`),
+//! and an incremental pull-style reader (`JsonPull`).
 //!
 //! Offline build: no `serde`/`serde_json`, so we carry our own small JSON
 //! implementation. It covers the full JSON grammar (objects, arrays,
-//! strings with escapes, numbers, bools, null) — enough for config files,
-//! the AOT artifact manifest, and metrics output.
+//! strings with escapes, numbers, bools, null).
+//!
+//! The crate has exactly **one emission surface** — [`JsonWriter`] — and
+//! two ingestion surfaces: [`Json::parse`] for small configs where a tree
+//! is convenient, and [`JsonPull`] for large artifacts (bench reports,
+//! traces) where materializing a tree would cost memory proportional to
+//! the document. `Json::to_string`/`to_pretty` are thin adapters over
+//! `JsonWriter` kept for small config-sized values; new output paths
+//! should stream through `JsonWriter` directly.
+//!
+//! Design notes (see DESIGN.md §"The results plane"): the writer tracks
+//! container nesting in a bitstack — one bit per level (1 = object) plus
+//! one "has children" bit — so its state is O(depth/64) words and its
+//! output buffer is whatever `io::Write` it wraps; emission allocates
+//! nothing per value. The pull reader walks the input byte slice with the
+//! same bitstack, yields borrowed `&str`/raw-number events (copy-on-write:
+//! strings only allocate when they contain escapes), and supports lazy
+//! `skip_value` so uninteresting fields are scanned, not parsed.
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::fmt;
+use std::io::{self, Write};
 
 /// A JSON value. Objects use a BTreeMap so emission is deterministic.
 #[derive(Clone, Debug, PartialEq)]
@@ -124,120 +143,867 @@ impl Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
-    /// Compact serialization.
+    /// Compact serialization of an already-built tree.
+    ///
+    /// Discouraged for output paths: building a `Json` tree costs memory
+    /// proportional to the document. Stream through [`JsonWriter`]
+    /// instead; this adapter exists for config-sized values.
+    #[doc(hidden)]
     pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
+        let mut buf = Vec::new();
+        JsonWriter::new(&mut buf)
+            .value(self)
+            .expect("write to Vec cannot fail");
+        String::from_utf8(buf).expect("JsonWriter emits UTF-8")
     }
 
-    /// Pretty serialization with 2-space indent.
+    /// Pretty serialization with 2-space indent (trailing newline).
+    ///
+    /// Same caveat as [`Json::to_string`]: prefer streaming through
+    /// [`JsonWriter::pretty`] on large documents.
+    #[doc(hidden)]
     pub fn to_pretty(&self) -> String {
-        let mut out = String::new();
-        self.write_pretty(&mut out, 0);
-        out.push('\n');
-        out
+        let mut buf = Vec::new();
+        let mut w = JsonWriter::pretty(&mut buf);
+        w.value(self).expect("write to Vec cannot fail");
+        w.end_line().expect("write to Vec cannot fail");
+        String::from_utf8(buf).expect("JsonWriter emits UTF-8")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared low-level emission helpers (used by JsonWriter only; the tree
+// serializers above delegate to the writer so there is a single surface).
+// ---------------------------------------------------------------------------
+
+/// Emit an f64 with the crate's historical formatting: non-finite values
+/// become `null` (JSON has no inf/nan), integral values below 1e15 print
+/// as integers, everything else uses Rust's shortest-roundtrip `{x}`.
+fn write_f64<W: Write>(w: &mut W, x: f64) -> io::Result<()> {
+    if !x.is_finite() {
+        w.write_all(b"null")
+    } else if x.fract() == 0.0 && x.abs() < 1e15 {
+        write!(w, "{}", x as i64)
+    } else {
+        write!(w, "{x}")
+    }
+}
+
+/// Emit a quoted, escaped JSON string without intermediate allocation.
+fn write_escaped<W: Write>(w: &mut W, s: &str) -> io::Result<()> {
+    w.write_all(b"\"")?;
+    let bytes = s.as_bytes();
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        let simple: &[u8] = match c {
+            '"' => b"\\\"",
+            '\\' => b"\\\\",
+            '\n' => b"\\n",
+            '\r' => b"\\r",
+            '\t' => b"\\t",
+            c if (c as u32) < 0x20 => b"",
+            _ => continue,
+        };
+        w.write_all(&bytes[start..i])?;
+        if simple.is_empty() {
+            write!(w, "\\u{:04x}", c as u32)?;
+        } else {
+            w.write_all(simple)?;
+        }
+        start = i + c.len_utf8();
+    }
+    w.write_all(&bytes[start..])?;
+    w.write_all(b"\"")
+}
+
+// ---------------------------------------------------------------------------
+// BitStack: one bit per nesting level (picojson's trick). 64 levels per
+// word, so tracking depth-d nesting costs ceil(d/64) words — effectively
+// O(1) for any document we emit or read.
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct BitStack {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitStack {
+    fn push(&mut self, bit: bool) {
+        let (w, b) = (self.len / 64, self.len % 64);
+        if w == self.words.len() {
+            self.words.push(0);
+        }
+        if bit {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+        self.len += 1;
     }
 
-    fn write(&self, out: &mut String) {
-        match self {
-            Json::Null => out.push_str("null"),
-            Json::Bool(true) => out.push_str("true"),
-            Json::Bool(false) => out.push_str("false"),
-            Json::Num(x) => write_num(*x, out),
-            Json::Str(s) => write_str(s, out),
-            Json::Arr(v) => {
-                out.push('[');
-                for (i, x) in v.iter().enumerate() {
-                    if i > 0 {
-                        out.push(',');
-                    }
-                    x.write(out);
+    fn pop(&mut self) -> bool {
+        debug_assert!(self.len > 0);
+        self.len -= 1;
+        let (w, b) = (self.len / 64, self.len % 64);
+        self.words[w] >> b & 1 == 1
+    }
+
+    fn top(&self) -> bool {
+        debug_assert!(self.len > 0);
+        let (w, b) = ((self.len - 1) / 64, (self.len - 1) % 64);
+        self.words[w] >> b & 1 == 1
+    }
+
+    fn set_top(&mut self, bit: bool) {
+        debug_assert!(self.len > 0);
+        let (w, b) = ((self.len - 1) / 64, (self.len - 1) % 64);
+        if bit {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JsonWriter: push-style streaming emitter.
+// ---------------------------------------------------------------------------
+
+/// Push-style streaming JSON emitter over any [`io::Write`].
+///
+/// Zero intermediate `Json` nodes: scalars go straight to the sink, and
+/// the only state is a bitstack of open containers — the writer's memory
+/// is O(1) in the size of the document. Compact mode is byte-identical to
+/// the historical `Json::to_string` tree emitter for the same value
+/// sequence; `pretty` matches `Json::to_pretty` (2-space indent, `": "`
+/// key separator, empty containers stay compact).
+///
+/// Structural misuse (a value where a key is required, mismatched
+/// `end_*`, a second root value without [`JsonWriter::end_line`]) panics:
+/// those are caller bugs, not runtime conditions. I/O errors from the
+/// sink are returned.
+///
+/// ```
+/// use decomp::util::json::JsonWriter;
+/// let mut buf = Vec::new();
+/// let mut w = JsonWriter::new(&mut buf);
+/// w.begin_obj().unwrap();
+/// w.key("iters").unwrap();
+/// w.num_u64(u64::MAX).unwrap();
+/// w.key("tags").unwrap();
+/// w.begin_arr().unwrap();
+/// w.str("a").unwrap();
+/// w.end_arr().unwrap();
+/// w.end_obj().unwrap();
+/// assert_eq!(buf, br#"{"iters":18446744073709551615,"tags":["a"]}"#);
+/// ```
+pub struct JsonWriter<W: Write> {
+    w: W,
+    pretty: bool,
+    /// Open containers; bit = true for object, false for array.
+    kinds: BitStack,
+    /// Parallel stack: has the container emitted at least one child?
+    dirty: BitStack,
+    /// A key was just written; the next value attaches to it.
+    awaiting_value: bool,
+    /// A root value has been completed (guards against two roots).
+    done: bool,
+}
+
+impl<W: Write> JsonWriter<W> {
+    /// Compact writer (no whitespace).
+    pub fn new(w: W) -> Self {
+        JsonWriter {
+            w,
+            pretty: false,
+            kinds: BitStack::default(),
+            dirty: BitStack::default(),
+            awaiting_value: false,
+            done: false,
+        }
+    }
+
+    /// Pretty writer: 2-space indent, `": "` separators, one item per
+    /// line, empty containers compact. Matches `Json::to_pretty` output.
+    pub fn pretty(w: W) -> Self {
+        let mut s = Self::new(w);
+        s.pretty = true;
+        s
+    }
+
+    /// Consume the writer and return the underlying sink.
+    pub fn into_inner(self) -> W {
+        self.w
+    }
+
+    /// Flush the underlying sink.
+    pub fn flush(&mut self) -> io::Result<()> {
+        self.w.flush()
+    }
+
+    /// Comma/newline/indent before a new child of the current container.
+    fn separator(&mut self) -> io::Result<()> {
+        let first = !self.dirty.top();
+        if first {
+            self.dirty.set_top(true);
+        }
+        if self.pretty {
+            self.w.write_all(if first { b"\n" } else { b",\n" })?;
+            for _ in 0..self.kinds.len() {
+                self.w.write_all(b"  ")?;
+            }
+        } else if !first {
+            self.w.write_all(b",")?;
+        }
+        Ok(())
+    }
+
+    /// Position bookkeeping common to every value (scalar or container
+    /// start): consume a pending key, or separate from the previous
+    /// sibling, or begin/complete the root.
+    fn before_value(&mut self) -> io::Result<()> {
+        if self.awaiting_value {
+            self.awaiting_value = false;
+            return Ok(());
+        }
+        if self.kinds.is_empty() {
+            assert!(
+                !self.done,
+                "JsonWriter: second root value (call end_line between NDJSON frames)"
+            );
+            self.done = true;
+            return Ok(());
+        }
+        assert!(
+            !self.kinds.top(),
+            "JsonWriter: object member needs key() before the value"
+        );
+        self.separator()
+    }
+
+    /// Open an object: `{`.
+    pub fn begin_obj(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.w.write_all(b"{")?;
+        self.kinds.push(true);
+        self.dirty.push(false);
+        Ok(())
+    }
+
+    /// Close the innermost object: `}`.
+    pub fn end_obj(&mut self) -> io::Result<()> {
+        assert!(
+            !self.kinds.is_empty() && self.kinds.top(),
+            "JsonWriter: end_obj without a matching begin_obj"
+        );
+        assert!(!self.awaiting_value, "JsonWriter: end_obj after a dangling key");
+        let had_children = self.dirty.pop();
+        self.kinds.pop();
+        if self.pretty && had_children {
+            self.w.write_all(b"\n")?;
+            for _ in 0..self.kinds.len() {
+                self.w.write_all(b"  ")?;
+            }
+        }
+        self.w.write_all(b"}")
+    }
+
+    /// Open an array: `[`.
+    pub fn begin_arr(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.w.write_all(b"[")?;
+        self.kinds.push(false);
+        self.dirty.push(false);
+        Ok(())
+    }
+
+    /// Close the innermost array: `]`.
+    pub fn end_arr(&mut self) -> io::Result<()> {
+        assert!(
+            !self.kinds.is_empty() && !self.kinds.top(),
+            "JsonWriter: end_arr without a matching begin_arr"
+        );
+        let had_children = self.dirty.pop();
+        self.kinds.pop();
+        if self.pretty && had_children {
+            self.w.write_all(b"\n")?;
+            for _ in 0..self.kinds.len() {
+                self.w.write_all(b"  ")?;
+            }
+        }
+        self.w.write_all(b"]")
+    }
+
+    /// Object member key; the next value call attaches to it.
+    pub fn key(&mut self, k: &str) -> io::Result<()> {
+        assert!(
+            !self.kinds.is_empty() && self.kinds.top(),
+            "JsonWriter: key() outside an object"
+        );
+        assert!(!self.awaiting_value, "JsonWriter: key() twice without a value");
+        self.separator()?;
+        write_escaped(&mut self.w, k)?;
+        let sep: &[u8] = if self.pretty { b": " } else { b":" };
+        self.w.write_all(sep)?;
+        self.awaiting_value = true;
+        Ok(())
+    }
+
+    /// String value (escaped inline, no intermediate buffer).
+    pub fn str(&mut self, s: &str) -> io::Result<()> {
+        self.before_value()?;
+        write_escaped(&mut self.w, s)
+    }
+
+    /// f64 value with the crate's historical formatting (non-finite ->
+    /// `null`; integral below 1e15 prints as an integer). Counters that
+    /// may exceed 2^53 must use [`JsonWriter::num_u64`]/
+    /// [`JsonWriter::num_i64`] — `f64` cannot represent them exactly.
+    pub fn num(&mut self, x: f64) -> io::Result<()> {
+        self.before_value()?;
+        write_f64(&mut self.w, x)
+    }
+
+    /// Integer-exact u64 value (no f64 round-trip, no precision loss).
+    pub fn num_u64(&mut self, v: u64) -> io::Result<()> {
+        self.before_value()?;
+        write!(self.w, "{v}")
+    }
+
+    /// Integer-exact i64 value (no f64 round-trip, no precision loss).
+    pub fn num_i64(&mut self, v: i64) -> io::Result<()> {
+        self.before_value()?;
+        write!(self.w, "{v}")
+    }
+
+    /// Bool value.
+    pub fn bool(&mut self, v: bool) -> io::Result<()> {
+        self.before_value()?;
+        let lit: &[u8] = if v { b"true" } else { b"false" };
+        self.w.write_all(lit)
+    }
+
+    /// Null value.
+    pub fn null(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.w.write_all(b"null")
+    }
+
+    /// Bridge: emit an already-built tree at the current position.
+    /// Objects iterate in BTreeMap (alphabetical) order, so this
+    /// reproduces the historical tree serializers exactly.
+    pub fn value(&mut self, v: &Json) -> io::Result<()> {
+        match v {
+            Json::Null => self.null(),
+            Json::Bool(b) => self.bool(*b),
+            Json::Num(x) => self.num(*x),
+            Json::Str(s) => self.str(s),
+            Json::Arr(items) => {
+                self.begin_arr()?;
+                for it in items {
+                    self.value(it)?;
                 }
-                out.push(']');
+                self.end_arr()
             }
             Json::Obj(m) => {
-                out.push('{');
-                for (i, (k, v)) in m.iter().enumerate() {
-                    if i > 0 {
-                        out.push(',');
-                    }
-                    write_str(k, out);
-                    out.push(':');
-                    v.write(out);
+                self.begin_obj()?;
+                for (k, v) in m {
+                    self.key(k)?;
+                    self.value(v)?;
                 }
-                out.push('}');
+                self.end_obj()
             }
         }
     }
 
-    fn write_pretty(&self, out: &mut String, depth: usize) {
-        match self {
-            Json::Arr(v) if !v.is_empty() => {
-                out.push_str("[\n");
-                for (i, x) in v.iter().enumerate() {
-                    if i > 0 {
-                        out.push_str(",\n");
-                    }
-                    indent(out, depth + 1);
-                    x.write_pretty(out, depth + 1);
-                }
-                out.push('\n');
-                indent(out, depth);
-                out.push(']');
+    /// Terminate the current root value with `\n` and reset for the next
+    /// one — the NDJSON frame separator (also gives `to_pretty` its
+    /// trailing newline).
+    pub fn end_line(&mut self) -> io::Result<()> {
+        assert!(
+            self.kinds.is_empty() && self.done,
+            "JsonWriter: end_line before the root value completed"
+        );
+        self.done = false;
+        self.w.write_all(b"\n")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JsonPull: incremental pull-style event reader.
+// ---------------------------------------------------------------------------
+
+/// One parse event from [`JsonPull::next`].
+///
+/// Strings and keys are copy-on-write: borrowed slices of the input when
+/// escape-free, owned only when unescaping was required. Numbers are
+/// returned as raw text ([`NumTok`]) so the caller picks the exact
+/// integer or float interpretation — this is what lets u64 counters
+/// round-trip above 2^53.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event<'a> {
+    BeginObj,
+    EndObj,
+    BeginArr,
+    EndArr,
+    Key(Cow<'a, str>),
+    Str(Cow<'a, str>),
+    Num(NumTok<'a>),
+    Bool(bool),
+    Null,
+    /// End of input (returned forever once the root value is consumed).
+    End,
+}
+
+/// A number token: validated raw text, lazily interpreted.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NumTok<'a> {
+    raw: &'a str,
+}
+
+impl<'a> NumTok<'a> {
+    /// The raw number text as it appeared in the input.
+    pub fn raw(&self) -> &'a str {
+        self.raw
+    }
+
+    /// Float interpretation (syntax was validated at scan time).
+    pub fn as_f64(&self) -> f64 {
+        self.raw.parse().unwrap_or(f64::NAN)
+    }
+
+    /// Exact u64 interpretation, `None` for floats/negatives/overflow.
+    pub fn as_u64(&self) -> Option<u64> {
+        self.raw.parse().ok()
+    }
+
+    /// Exact i64 interpretation, `None` for floats/overflow.
+    pub fn as_i64(&self) -> Option<i64> {
+        self.raw.parse().ok()
+    }
+
+    /// Exact usize interpretation, `None` for floats/negatives/overflow.
+    pub fn as_usize(&self) -> Option<usize> {
+        self.raw.parse().ok()
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum PullState {
+    /// Expecting the root value.
+    Root,
+    /// Just opened an object: expecting a key or `}`.
+    FirstKey,
+    /// Just opened an array: expecting a value or `]`.
+    FirstItem,
+    /// A key was consumed: expecting its value.
+    Value,
+    /// A value finished inside a container: expecting `,` or a closer.
+    Post,
+    /// The root value is complete.
+    Done,
+}
+
+/// Incremental pull-style JSON reader: call [`JsonPull::next`] for one
+/// event at a time, or [`JsonPull::skip_value`] to lazily scan past a
+/// value you don't care about (strings are skipped at byte level, nothing
+/// is unescaped or allocated). Memory is O(depth/64) regardless of input
+/// size — the alternative, `Json::parse`, materializes the whole tree.
+///
+/// ```
+/// use decomp::util::json::{Event, JsonPull};
+/// let mut p = JsonPull::new(r#"{"skip": [1, 2, 3], "keep": 7}"#);
+/// assert_eq!(p.next().unwrap(), Event::BeginObj);
+/// assert_eq!(p.next().unwrap(), Event::Key("skip".into()));
+/// p.skip_value().unwrap();
+/// assert_eq!(p.next().unwrap(), Event::Key("keep".into()));
+/// match p.next().unwrap() {
+///     Event::Num(n) => assert_eq!(n.as_u64(), Some(7)),
+///     other => panic!("{other:?}"),
+/// }
+/// assert_eq!(p.next().unwrap(), Event::EndObj);
+/// assert_eq!(p.next().unwrap(), Event::End);
+/// ```
+pub struct JsonPull<'a> {
+    b: &'a [u8],
+    i: usize,
+    /// Open containers; bit = true for object, false for array.
+    kinds: BitStack,
+    st: PullState,
+}
+
+impl<'a> JsonPull<'a> {
+    pub fn new(s: &'a str) -> Self {
+        JsonPull {
+            b: s.as_bytes(),
+            i: 0,
+            kinds: BitStack::default(),
+            st: PullState::Root,
+        }
+    }
+
+    /// Byte offset of the reader (for error reporting by callers).
+    pub fn pos(&self) -> usize {
+        self.i
+    }
+
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError {
+            msg: msg.to_string(),
+            pos: self.i,
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn lit(&mut self, word: &str) -> Result<(), JsonError> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    /// State transition after a complete value.
+    fn after_value(&mut self) {
+        self.st = if self.kinds.is_empty() {
+            PullState::Done
+        } else {
+            PullState::Post
+        };
+    }
+
+    fn close(&mut self, ev: Event<'a>) -> Result<Event<'a>, JsonError> {
+        self.kinds.pop();
+        self.after_value();
+        Ok(ev)
+    }
+
+    fn key_event(&mut self) -> Result<Event<'a>, JsonError> {
+        self.skip_ws();
+        let k = parse_string_at(self.b, &mut self.i)?;
+        self.skip_ws();
+        if self.peek() != Some(b':') {
+            return Err(self.err("expected ':'"));
+        }
+        self.i += 1;
+        self.st = PullState::Value;
+        Ok(Event::Key(k))
+    }
+
+    fn value_event(&mut self) -> Result<Event<'a>, JsonError> {
+        match self.peek() {
+            Some(b'{') => {
+                self.i += 1;
+                self.kinds.push(true);
+                self.st = PullState::FirstKey;
+                Ok(Event::BeginObj)
             }
-            Json::Obj(m) if !m.is_empty() => {
-                out.push_str("{\n");
-                for (i, (k, v)) in m.iter().enumerate() {
-                    if i > 0 {
-                        out.push_str(",\n");
-                    }
-                    indent(out, depth + 1);
-                    write_str(k, out);
-                    out.push_str(": ");
-                    v.write_pretty(out, depth + 1);
-                }
-                out.push('\n');
-                indent(out, depth);
-                out.push('}');
+            Some(b'[') => {
+                self.i += 1;
+                self.kinds.push(false);
+                self.st = PullState::FirstItem;
+                Ok(Event::BeginArr)
             }
-            other => other.write(out),
+            Some(b'"') => {
+                let s = parse_string_at(self.b, &mut self.i)?;
+                self.after_value();
+                Ok(Event::Str(s))
+            }
+            Some(b't') => {
+                self.lit("true")?;
+                self.after_value();
+                Ok(Event::Bool(true))
+            }
+            Some(b'f') => {
+                self.lit("false")?;
+                self.after_value();
+                Ok(Event::Bool(false))
+            }
+            Some(b'n') => {
+                self.lit("null")?;
+                self.after_value();
+                Ok(Event::Null)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let n = self.number()?;
+                self.after_value();
+                Ok(Event::Num(n))
+            }
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    fn number(&mut self) -> Result<NumTok<'a>, JsonError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while self
+            .peek()
+            .map(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+            .unwrap_or(false)
+        {
+            self.i += 1;
+        }
+        let raw = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        if raw.parse::<f64>().is_err() {
+            return Err(JsonError {
+                msg: "bad number".to_string(),
+                pos: start,
+            });
+        }
+        Ok(NumTok { raw })
+    }
+
+    /// Pull the next event. After the root value completes, returns
+    /// [`Event::End`] forever (trailing non-whitespace is an error).
+    #[allow(clippy::should_implement_trait)] // fallible, not an Iterator
+    pub fn next(&mut self) -> Result<Event<'a>, JsonError> {
+        self.skip_ws();
+        match self.st {
+            PullState::Done => {
+                if self.i >= self.b.len() {
+                    Ok(Event::End)
+                } else {
+                    Err(self.err("trailing characters"))
+                }
+            }
+            PullState::Root | PullState::Value => self.value_event(),
+            PullState::FirstKey => {
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    self.close(Event::EndObj)
+                } else {
+                    self.key_event()
+                }
+            }
+            PullState::FirstItem => {
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    self.close(Event::EndArr)
+                } else {
+                    self.value_event()
+                }
+            }
+            PullState::Post => {
+                let in_obj = self.kinds.top();
+                match self.peek() {
+                    Some(b',') => {
+                        self.i += 1;
+                        self.skip_ws();
+                        if in_obj {
+                            self.key_event()
+                        } else {
+                            self.value_event()
+                        }
+                    }
+                    Some(b'}') if in_obj => {
+                        self.i += 1;
+                        self.close(Event::EndObj)
+                    }
+                    Some(b']') if !in_obj => {
+                        self.i += 1;
+                        self.close(Event::EndArr)
+                    }
+                    _ => Err(self.err(if in_obj {
+                        "expected ',' or '}'"
+                    } else {
+                        "expected ',' or ']'"
+                    })),
+                }
+            }
+        }
+    }
+
+    /// [`JsonPull::next`] with the error stringified — for parsers that
+    /// report `Result<_, String>`.
+    pub fn step(&mut self) -> Result<Event<'a>, String> {
+        self.next().map_err(|e| e.to_string())
+    }
+
+    /// Lazily scan past the pending value (valid at the root or right
+    /// after a [`Event::Key`]): containers are skipped with a depth
+    /// counter, strings at byte level — nothing is unescaped, validated
+    /// deeply, or allocated. This is the mik-sdk "partial extraction"
+    /// fast path: uninteresting fields cost a memchr-style walk.
+    pub fn skip_value(&mut self) -> Result<(), JsonError> {
+        if !matches!(self.st, PullState::Root | PullState::Value) {
+            return Err(self.err("skip_value: no value pending"));
+        }
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') | Some(b'[') => {
+                let mut depth = 0usize;
+                loop {
+                    match self.peek() {
+                        None => return Err(self.err("unterminated value")),
+                        Some(b'{') | Some(b'[') => {
+                            depth += 1;
+                            self.i += 1;
+                        }
+                        Some(b'}') | Some(b']') => {
+                            depth -= 1;
+                            self.i += 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        Some(b'"') => self.skip_string_raw()?,
+                        Some(_) => self.i += 1,
+                    }
+                }
+            }
+            Some(b'"') => self.skip_string_raw()?,
+            Some(b't') => self.lit("true")?,
+            Some(b'f') => self.lit("false")?,
+            Some(b'n') => self.lit("null")?,
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                self.number()?;
+            }
+            _ => return Err(self.err("expected a JSON value")),
+        }
+        self.after_value();
+        Ok(())
+    }
+
+    /// Byte-level string skip: honors backslash escapes, never decodes.
+    fn skip_string_raw(&mut self) -> Result<(), JsonError> {
+        debug_assert_eq!(self.peek(), Some(b'"'));
+        self.i += 1;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'\\') => self.i += 2,
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                Some(_) => self.i += 1,
+            }
         }
     }
 }
 
-fn indent(out: &mut String, depth: usize) {
-    for _ in 0..depth {
-        out.push_str("  ");
-    }
-}
+// ---------------------------------------------------------------------------
+// String parsing shared by the tree parser and the pull reader.
+// ---------------------------------------------------------------------------
 
-fn write_num(x: f64, out: &mut String) {
-    if !x.is_finite() {
-        // JSON has no inf/nan; emit null like most encoders in lenient mode.
-        out.push_str("null");
-    } else if x.fract() == 0.0 && x.abs() < 1e15 {
-        out.push_str(&format!("{}", x as i64));
-    } else {
-        out.push_str(&format!("{x}"));
-    }
-}
-
-fn write_str(s: &str, out: &mut String) {
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
+/// Parse a quoted JSON string at `*i` (which must point at the opening
+/// quote), advancing `*i` past the closing quote. Copy-on-write: borrows
+/// the input when no escapes occur, allocates only to unescape.
+fn parse_string_at<'a>(b: &'a [u8], i: &mut usize) -> Result<Cow<'a, str>, JsonError> {
+    fn err(msg: &str, pos: usize) -> JsonError {
+        JsonError {
+            msg: msg.to_string(),
+            pos,
         }
     }
-    out.push('"');
+    if b.get(*i) != Some(&b'"') {
+        return Err(err("expected '\"'", *i));
+    }
+    *i += 1;
+    let start = *i;
+    // Fast path: scan for the closing quote; borrow if escape-free.
+    while let Some(&c) = b.get(*i) {
+        if c == b'"' {
+            let s = std::str::from_utf8(&b[start..*i]).map_err(|_| err("invalid utf-8", start))?;
+            *i += 1;
+            return Ok(Cow::Borrowed(s));
+        }
+        if c == b'\\' {
+            break;
+        }
+        *i += 1;
+    }
+    if b.get(*i).is_none() {
+        return Err(err("unterminated string", *i));
+    }
+    // Slow path: unescape into an owned buffer.
+    let mut s = String::new();
+    s.push_str(std::str::from_utf8(&b[start..*i]).map_err(|_| err("invalid utf-8", start))?);
+    loop {
+        match b.get(*i).copied() {
+            None => return Err(err("unterminated string", *i)),
+            Some(b'"') => {
+                *i += 1;
+                return Ok(Cow::Owned(s));
+            }
+            Some(b'\\') => {
+                *i += 1;
+                match b.get(*i).copied() {
+                    Some(b'"') => s.push('"'),
+                    Some(b'\\') => s.push('\\'),
+                    Some(b'/') => s.push('/'),
+                    Some(b'b') => s.push('\u{8}'),
+                    Some(b'f') => s.push('\u{c}'),
+                    Some(b'n') => s.push('\n'),
+                    Some(b'r') => s.push('\r'),
+                    Some(b't') => s.push('\t'),
+                    Some(b'u') => {
+                        if *i + 4 >= b.len() {
+                            return Err(err("bad \\u escape", *i));
+                        }
+                        let hex = std::str::from_utf8(&b[*i + 1..*i + 5])
+                            .map_err(|_| err("bad \\u escape", *i))?;
+                        let cp = u32::from_str_radix(hex, 16)
+                            .map_err(|_| err("bad \\u escape", *i))?;
+                        // Surrogate pairs: handle the common BMP case;
+                        // for a high surrogate, expect a following \uXXXX.
+                        if (0xd800..0xdc00).contains(&cp) {
+                            if b.len() < *i + 11 || b[*i + 5] != b'\\' || b[*i + 6] != b'u' {
+                                return Err(err("lone high surrogate", *i));
+                            }
+                            let hex2 = std::str::from_utf8(&b[*i + 7..*i + 11])
+                                .map_err(|_| err("bad \\u escape", *i))?;
+                            let lo = u32::from_str_radix(hex2, 16)
+                                .map_err(|_| err("bad \\u escape", *i))?;
+                            let c = 0x10000 + ((cp - 0xd800) << 10) + (lo - 0xdc00);
+                            s.push(char::from_u32(c).ok_or_else(|| err("bad codepoint", *i))?);
+                            *i += 10;
+                        } else {
+                            s.push(char::from_u32(cp).ok_or_else(|| err("bad codepoint", *i))?);
+                            *i += 4;
+                        }
+                    }
+                    _ => return Err(err("bad escape", *i)),
+                }
+                *i += 1;
+            }
+            Some(_) => {
+                // Consume one UTF-8 char.
+                let rest =
+                    std::str::from_utf8(&b[*i..]).map_err(|_| err("invalid utf-8", *i))?;
+                let c = rest.chars().next().unwrap();
+                s.push(c);
+                *i += c.len_utf8();
+            }
+        }
+    }
 }
+
+// ---------------------------------------------------------------------------
+// Tree parser (kept for small configs; shares string parsing with the
+// pull reader above).
+// ---------------------------------------------------------------------------
 
 struct Parser<'a> {
     b: &'a [u8],
@@ -349,74 +1115,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
-        self.eat(b'"')?;
-        let mut s = String::new();
-        loop {
-            match self.peek() {
-                None => return Err(self.err("unterminated string")),
-                Some(b'"') => {
-                    self.i += 1;
-                    return Ok(s);
-                }
-                Some(b'\\') => {
-                    self.i += 1;
-                    match self.peek() {
-                        Some(b'"') => s.push('"'),
-                        Some(b'\\') => s.push('\\'),
-                        Some(b'/') => s.push('/'),
-                        Some(b'b') => s.push('\u{8}'),
-                        Some(b'f') => s.push('\u{c}'),
-                        Some(b'n') => s.push('\n'),
-                        Some(b'r') => s.push('\r'),
-                        Some(b't') => s.push('\t'),
-                        Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            // Surrogate pairs: handle the common BMP case;
-                            // for a high surrogate, expect a following \uXXXX.
-                            if (0xd800..0xdc00).contains(&cp) {
-                                if self.b.len() < self.i + 11
-                                    || self.b[self.i + 5] != b'\\'
-                                    || self.b[self.i + 6] != b'u'
-                                {
-                                    return Err(self.err("lone high surrogate"));
-                                }
-                                let hex2 =
-                                    std::str::from_utf8(&self.b[self.i + 7..self.i + 11])
-                                        .map_err(|_| self.err("bad \\u escape"))?;
-                                let lo = u32::from_str_radix(hex2, 16)
-                                    .map_err(|_| self.err("bad \\u escape"))?;
-                                let c = 0x10000 + ((cp - 0xd800) << 10) + (lo - 0xdc00);
-                                s.push(
-                                    char::from_u32(c).ok_or_else(|| self.err("bad codepoint"))?,
-                                );
-                                self.i += 10;
-                            } else {
-                                s.push(
-                                    char::from_u32(cp).ok_or_else(|| self.err("bad codepoint"))?,
-                                );
-                                self.i += 4;
-                            }
-                        }
-                        _ => return Err(self.err("bad escape")),
-                    }
-                    self.i += 1;
-                }
-                Some(_) => {
-                    // Consume one UTF-8 char.
-                    let rest = std::str::from_utf8(&self.b[self.i..])
-                        .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = rest.chars().next().unwrap();
-                    s.push(c);
-                    self.i += c.len_utf8();
-                }
-            }
-        }
+        parse_string_at(self.b, &mut self.i).map(Cow::into_owned)
     }
 
     fn number(&mut self) -> Result<Json, JsonError> {
@@ -517,5 +1216,227 @@ mod tests {
     #[test]
     fn nan_emits_null() {
         assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+    }
+
+    // -- JsonWriter --------------------------------------------------------
+
+    #[test]
+    fn writer_compact_scalars_and_nesting() {
+        let mut buf = Vec::new();
+        let mut w = JsonWriter::new(&mut buf);
+        w.begin_obj().unwrap();
+        w.key("a").unwrap();
+        w.num(1.0).unwrap();
+        w.key("b").unwrap();
+        w.begin_arr().unwrap();
+        w.str("x").unwrap();
+        w.bool(false).unwrap();
+        w.null().unwrap();
+        w.begin_obj().unwrap();
+        w.end_obj().unwrap();
+        w.end_arr().unwrap();
+        w.end_obj().unwrap();
+        assert_eq!(buf, br#"{"a":1,"b":["x",false,null,{}]}"#);
+    }
+
+    #[test]
+    fn writer_pretty_matches_tree_pretty() {
+        let v = Json::obj(vec![
+            ("a", Json::Num(1.0)),
+            ("b", Json::Arr(vec![Json::Num(2.0), Json::Str("x".into())])),
+            ("empty_arr", Json::Arr(vec![])),
+            ("empty_obj", Json::Obj(BTreeMap::new())),
+            ("nested", Json::obj(vec![("k", Json::Bool(true))])),
+        ]);
+        // The tree serializer itself now routes through JsonWriter, so
+        // additionally pin the exact expected layout.
+        let pretty = v.to_pretty();
+        let expected = "{\n  \"a\": 1,\n  \"b\": [\n    2,\n    \"x\"\n  ],\n  \
+                        \"empty_arr\": [],\n  \"empty_obj\": {},\n  \"nested\": {\n    \
+                        \"k\": true\n  }\n}\n";
+        assert_eq!(pretty, expected);
+    }
+
+    #[test]
+    fn writer_u64_exact() {
+        let mut buf = Vec::new();
+        let mut w = JsonWriter::new(&mut buf);
+        w.num_u64(u64::MAX).unwrap();
+        assert_eq!(buf, b"18446744073709551615");
+        // The f64 path would have rounded this.
+        assert_ne!(Json::Num(u64::MAX as f64).to_string(), "18446744073709551615");
+    }
+
+    #[test]
+    fn writer_i64_exact() {
+        let mut buf = Vec::new();
+        let mut w = JsonWriter::new(&mut buf);
+        w.num_i64(i64::MIN).unwrap();
+        assert_eq!(buf, b"-9223372036854775808");
+    }
+
+    #[test]
+    fn writer_escapes_match_tree() {
+        let s = "a\"b\\c\nd\te\u{1}f😀";
+        let mut buf = Vec::new();
+        JsonWriter::new(&mut buf).str(s).unwrap();
+        assert_eq!(
+            String::from_utf8(buf).unwrap(),
+            Json::Str(s.to_string()).to_string()
+        );
+    }
+
+    #[test]
+    fn writer_ndjson_frames() {
+        let mut buf = Vec::new();
+        let mut w = JsonWriter::new(&mut buf);
+        for i in 0..3u64 {
+            w.begin_obj().unwrap();
+            w.key("i").unwrap();
+            w.num_u64(i).unwrap();
+            w.end_obj().unwrap();
+            w.end_line().unwrap();
+        }
+        assert_eq!(buf, b"{\"i\":0}\n{\"i\":1}\n{\"i\":2}\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "needs key()")]
+    fn writer_value_in_object_without_key_panics() {
+        let mut buf = Vec::new();
+        let mut w = JsonWriter::new(&mut buf);
+        w.begin_obj().unwrap();
+        let _ = w.num(1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "end_obj without")]
+    fn writer_mismatched_end_panics() {
+        let mut buf = Vec::new();
+        let mut w = JsonWriter::new(&mut buf);
+        w.begin_arr().unwrap();
+        let _ = w.end_obj();
+    }
+
+    // -- JsonPull ------------------------------------------------------------
+
+    #[test]
+    fn pull_full_grammar_events() {
+        let src = r#"{"a": [1, -2.5e3, {"b": null}], "c": "x\ny", "d": true}"#;
+        let mut p = JsonPull::new(src);
+        assert_eq!(p.next().unwrap(), Event::BeginObj);
+        assert_eq!(p.next().unwrap(), Event::Key("a".into()));
+        assert_eq!(p.next().unwrap(), Event::BeginArr);
+        match p.next().unwrap() {
+            Event::Num(n) => assert_eq!(n.as_u64(), Some(1)),
+            other => panic!("{other:?}"),
+        }
+        match p.next().unwrap() {
+            Event::Num(n) => {
+                assert_eq!(n.as_f64(), -2500.0);
+                assert_eq!(n.as_u64(), None);
+                assert_eq!(n.raw(), "-2.5e3");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(p.next().unwrap(), Event::BeginObj);
+        assert_eq!(p.next().unwrap(), Event::Key("b".into()));
+        assert_eq!(p.next().unwrap(), Event::Null);
+        assert_eq!(p.next().unwrap(), Event::EndObj);
+        assert_eq!(p.next().unwrap(), Event::EndArr);
+        // Escaped string comes back owned and unescaped.
+        assert_eq!(p.next().unwrap(), Event::Key("c".into()));
+        assert_eq!(p.next().unwrap(), Event::Str("x\ny".into()));
+        assert_eq!(p.next().unwrap(), Event::Key("d".into()));
+        assert_eq!(p.next().unwrap(), Event::Bool(true));
+        assert_eq!(p.next().unwrap(), Event::EndObj);
+        assert_eq!(p.next().unwrap(), Event::End);
+        assert_eq!(p.next().unwrap(), Event::End);
+    }
+
+    #[test]
+    fn pull_borrows_escape_free_strings() {
+        let mut p = JsonPull::new(r#"["plain", "esc\""]"#);
+        assert_eq!(p.next().unwrap(), Event::BeginArr);
+        match p.next().unwrap() {
+            Event::Str(Cow::Borrowed(s)) => assert_eq!(s, "plain"),
+            other => panic!("expected borrowed str, got {other:?}"),
+        }
+        match p.next().unwrap() {
+            Event::Str(Cow::Owned(s)) => assert_eq!(s, "esc\""),
+            other => panic!("expected owned str, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pull_skip_value_lazy() {
+        let src = r#"{"big": {"deep": [1, [2, "br]ace \" {"], {"x": 3}]}, "keep": 9}"#;
+        let mut p = JsonPull::new(src);
+        assert_eq!(p.next().unwrap(), Event::BeginObj);
+        assert_eq!(p.next().unwrap(), Event::Key("big".into()));
+        p.skip_value().unwrap();
+        assert_eq!(p.next().unwrap(), Event::Key("keep".into()));
+        match p.next().unwrap() {
+            Event::Num(n) => assert_eq!(n.as_u64(), Some(9)),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(p.next().unwrap(), Event::EndObj);
+        assert_eq!(p.next().unwrap(), Event::End);
+    }
+
+    #[test]
+    fn pull_deep_nesting_past_one_bitstack_word() {
+        let depth = 100;
+        let mut src = String::new();
+        for _ in 0..depth {
+            src.push('[');
+        }
+        src.push('7');
+        for _ in 0..depth {
+            src.push(']');
+        }
+        let mut p = JsonPull::new(&src);
+        for _ in 0..depth {
+            assert_eq!(p.next().unwrap(), Event::BeginArr);
+        }
+        match p.next().unwrap() {
+            Event::Num(n) => assert_eq!(n.as_u64(), Some(7)),
+            other => panic!("{other:?}"),
+        }
+        for _ in 0..depth {
+            assert_eq!(p.next().unwrap(), Event::EndArr);
+        }
+        assert_eq!(p.next().unwrap(), Event::End);
+    }
+
+    #[test]
+    fn pull_rejects_malformed() {
+        for src in ["{", "[1,]", "tru", "1 2", "\"unterminated", "{\"a\" 1}"] {
+            let mut p = JsonPull::new(src);
+            let mut ok = true;
+            for _ in 0..64 {
+                match p.next() {
+                    Err(_) => {
+                        ok = false;
+                        break;
+                    }
+                    Ok(Event::End) => break,
+                    Ok(_) => {}
+                }
+            }
+            assert!(!ok, "pull accepted malformed input: {src}");
+        }
+    }
+
+    #[test]
+    fn pull_u64_counters_exact() {
+        let src = format!(r#"{{"bytes": {}}}"#, u64::MAX);
+        let mut p = JsonPull::new(&src);
+        assert_eq!(p.next().unwrap(), Event::BeginObj);
+        assert_eq!(p.next().unwrap(), Event::Key("bytes".into()));
+        match p.next().unwrap() {
+            Event::Num(n) => assert_eq!(n.as_u64(), Some(u64::MAX)),
+            other => panic!("{other:?}"),
+        }
     }
 }

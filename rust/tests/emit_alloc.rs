@@ -1,0 +1,102 @@
+//! The O(1)-allocation contract of the trace emission path.
+//!
+//! `TrainTrace::write_json` streams every point straight to the sink
+//! through [`JsonWriter`]: no intermediate `Json` tree, no per-point
+//! strings. The writer's only heap state is its two container bitstacks
+//! (one word each at trace nesting depth), so the number of heap
+//! allocations during emission must be **independent of the number of
+//! trace points** — a 100× longer trace allocates exactly as often as a
+//! short one.
+//!
+//! Asserted with a counting `#[global_allocator]` wrapped around the
+//! system allocator. This file intentionally contains a single test: a
+//! concurrently running test would pollute the global counter.
+
+use decomp::algorithms::{TracePoint, TrainTrace};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+/// Same shape as the `trace_emit` bench group's synthetic trace:
+/// realistic floats, u64 counters that overflow f32, a non-trivial algo
+/// label.
+fn synthetic(points: usize) -> TrainTrace {
+    TrainTrace {
+        algo: "trace_emit_pin".to_string(),
+        points: (0..points)
+            .map(|i| TracePoint {
+                iter: i,
+                global_loss: 1.0 / (1.0 + i as f64),
+                consensus: 0.5 / (1.0 + i as f64),
+                bytes_sent: i as u64 * 123_456_789,
+                sim_time_s: i as f64 * 0.01,
+            })
+            .collect(),
+    }
+}
+
+/// Allocations during one `write_json` into a no-op sink (the sink
+/// itself never allocates, so this isolates the emitter).
+fn emission_allocs(trace: &TrainTrace, pretty: bool) -> u64 {
+    let before = alloc_count();
+    trace.write_json(std::io::sink(), pretty).unwrap();
+    alloc_count() - before
+}
+
+#[test]
+fn trace_emission_allocations_are_constant_in_point_count() {
+    // Build both traces (and run one warm-up emission each) before any
+    // counting: trace construction allocates freely, emission must not.
+    let short = synthetic(1_000);
+    let long = synthetic(100_000);
+    for pretty in [false, true] {
+        emission_allocs(&short, pretty);
+        emission_allocs(&long, pretty);
+    }
+
+    for pretty in [false, true] {
+        let a_short = emission_allocs(&short, pretty);
+        let a_long = emission_allocs(&long, pretty);
+        assert_eq!(
+            a_short, a_long,
+            "emitting 100k points allocated {a_long} time(s) vs {a_short} for 1k \
+             (pretty={pretty}); emission must be O(1) in trace length"
+        );
+        assert!(
+            a_short <= 8,
+            "trace emission allocated {a_short} time(s) (pretty={pretty}); \
+             expected only the writer's fixed bitstack state"
+        );
+    }
+}

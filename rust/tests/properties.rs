@@ -824,3 +824,268 @@ fn prop_vecops_linearity() {
         assert!((nrm * nrm - vecops::dot(&a, &a)).abs() < 1e-3 * (1.0 + nrm * nrm));
     });
 }
+
+// ---------------------------------------------------------------------------
+// The streaming results plane (PR 7): the push writer must be
+// byte-identical to the retired tree emitter, and the pull reader must
+// see exactly the event stream `Json::parse` would have built.
+
+/// The tree emitter `Json` shipped before the streaming writer,
+/// reimplemented verbatim as an in-test oracle (compact `write`, pretty
+/// `write_pretty`, `write_num`, `write_str`). `Json::to_string` /
+/// `to_pretty` now delegate to `JsonWriter`, so comparing against this
+/// oracle pins the streaming path byte-for-byte to the old output.
+mod tree_oracle {
+    use decomp::util::json::Json;
+
+    fn write_num(x: f64, out: &mut String) {
+        if !x.is_finite() {
+            out.push_str("null");
+        } else if x.fract() == 0.0 && x.abs() < 1e15 {
+            out.push_str(&format!("{}", x as i64));
+        } else {
+            out.push_str(&format!("{x}"));
+        }
+    }
+
+    fn write_str(s: &str, out: &mut String) {
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+
+    fn indent(out: &mut String, depth: usize) {
+        for _ in 0..depth {
+            out.push_str("  ");
+        }
+    }
+
+    fn write(v: &Json, out: &mut String) {
+        match v {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(x) => write_num(*x, out),
+            Json::Str(s) => write_str(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, x) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write(x, out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, x)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    write(x, out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    fn write_pretty(v: &Json, out: &mut String, depth: usize) {
+        match v {
+            Json::Arr(items) if !items.is_empty() => {
+                out.push_str("[\n");
+                for (i, x) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    indent(out, depth + 1);
+                    write_pretty(x, out, depth + 1);
+                }
+                out.push('\n');
+                indent(out, depth);
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, x)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    indent(out, depth + 1);
+                    write_str(k, out);
+                    out.push_str(": ");
+                    write_pretty(x, out, depth + 1);
+                }
+                out.push('\n');
+                indent(out, depth);
+                out.push('}');
+            }
+            other => write(other, out),
+        }
+    }
+
+    pub fn compact(v: &Json) -> String {
+        let mut out = String::new();
+        write(v, &mut out);
+        out
+    }
+
+    pub fn pretty(v: &Json) -> String {
+        let mut out = String::new();
+        write_pretty(v, &mut out, 0);
+        out.push('\n');
+        out
+    }
+}
+
+/// Random `Json` trees with adversarial strings (escapes, control
+/// chars, unicode) and the number shapes the old emitter special-cased
+/// (integers, non-finite, negative zero).
+fn random_json_nasty(g: &mut Gen, depth: usize) -> decomp::util::json::Json {
+    use decomp::util::json::Json;
+    let nasty = [
+        "plain",
+        "quo\"te",
+        "back\\slash",
+        "tab\tnl\ncr\r",
+        "ctrl\u{1}\u{1f}",
+        "uni — λ∞ 🚀",
+        "",
+    ];
+    match if depth > 2 { g.usize_in(0, 4) } else { g.usize_in(0, 6) } {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool()),
+        2 => Json::Num(match g.usize_in(0, 4) {
+            0 => g.usize_in(0, 1_000_000) as f64,
+            1 => -(g.usize_in(0, 1_000_000) as f64),
+            2 => (g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0,
+            3 => g.f64_in(-1.0, 1.0) * 1e-7,
+            _ => f64::NAN,
+        }),
+        3 => Json::Str(format!("{}{}", g.choose(&nasty), g.usize_in(0, 99))),
+        4 => Json::Str((*g.choose(&nasty)).to_string()),
+        5 => Json::Arr(
+            (0..g.usize_in(0, 4))
+                .map(|_| random_json_nasty(g, depth + 1))
+                .collect(),
+        ),
+        _ => Json::Obj(
+            (0..g.usize_in(0, 4))
+                .map(|i| {
+                    (
+                        format!("{}{i}", g.choose(&nasty)),
+                        random_json_nasty(g, depth + 1),
+                    )
+                })
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_streaming_writer_byte_identical_to_tree_emitter() {
+    use decomp::util::json::JsonWriter;
+    check("JsonWriter == retired tree emitter, compact+pretty", CASES, |g| {
+        let v = random_json_nasty(g, 0);
+        // The doc(hidden) adapters route through the streaming writer.
+        assert_eq!(v.to_string(), tree_oracle::compact(&v));
+        assert_eq!(v.to_pretty(), tree_oracle::pretty(&v));
+        // And so does driving the writer directly.
+        let mut buf = Vec::new();
+        let mut w = JsonWriter::new(&mut buf);
+        w.value(&v).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), tree_oracle::compact(&v));
+    });
+}
+
+/// Rebuild a `Json` tree from a pull-parser event stream.
+fn rebuild_from_events(
+    p: &mut decomp::util::json::JsonPull,
+    first: decomp::util::json::Event,
+) -> decomp::util::json::Json {
+    use decomp::util::json::{Event, Json};
+    use std::collections::BTreeMap;
+    match first {
+        Event::Null => Json::Null,
+        Event::Bool(b) => Json::Bool(b),
+        Event::Num(n) => Json::Num(n.as_f64()),
+        Event::Str(s) => Json::Str(s.into_owned()),
+        Event::BeginArr => {
+            let mut items = Vec::new();
+            loop {
+                let e = p.next().expect("event in array");
+                if e == Event::EndArr {
+                    return Json::Arr(items);
+                }
+                items.push(rebuild_from_events(p, e));
+            }
+        }
+        Event::BeginObj => {
+            let mut m = BTreeMap::new();
+            loop {
+                match p.next().expect("event in object") {
+                    Event::EndObj => return Json::Obj(m),
+                    Event::Key(k) => {
+                        let key = k.into_owned();
+                        let e = p.next().expect("value after key");
+                        m.insert(key, rebuild_from_events(p, e));
+                    }
+                    other => panic!("expected key or end-of-object, got {other:?}"),
+                }
+            }
+        }
+        other => panic!("expected a value event, got {other:?}"),
+    }
+}
+
+#[test]
+fn prop_pull_events_equivalent_to_tree_parse() {
+    use decomp::util::json::{Event, Json, JsonPull};
+    check("JsonPull events rebuild to Json::parse on the full grammar", CASES, |g| {
+        let v = random_json_nasty(g, 0);
+        for src in [v.to_string(), v.to_pretty()] {
+            let via_tree = Json::parse(&src).unwrap();
+            let mut p = JsonPull::new(&src);
+            let first = p.next().unwrap();
+            let via_pull = rebuild_from_events(&mut p, first);
+            assert_eq!(via_pull, via_tree, "source: {src}");
+            assert_eq!(p.next().unwrap(), Event::End);
+        }
+    });
+}
+
+#[test]
+fn pull_event_equivalence_survives_nesting_depth_80() {
+    use decomp::util::json::{Event, Json, JsonPull};
+    // Past 64 levels the writer/reader bitstacks spill into a second
+    // word — the exact boundary a single-u64 depth mask would get wrong.
+    let mut src = String::from(r#"{"leaf":[1,2.5,"s"]}"#);
+    for d in 0..80 {
+        src = if d % 2 == 0 {
+            format!("[{src}]")
+        } else {
+            format!("{{\"d{d}\":{src}}}")
+        };
+    }
+    let via_tree = Json::parse(&src).unwrap();
+    let mut p = JsonPull::new(&src);
+    let first = p.next().unwrap();
+    assert_eq!(rebuild_from_events(&mut p, first), via_tree);
+    assert_eq!(p.next().unwrap(), Event::End);
+    // The streaming writer round-trips the same document byte-for-byte
+    // against the tree oracle at that depth.
+    assert_eq!(via_tree.to_string(), tree_oracle::compact(&via_tree));
+    assert_eq!(via_tree.to_pretty(), tree_oracle::pretty(&via_tree));
+}

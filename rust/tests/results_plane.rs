@@ -1,0 +1,145 @@
+//! The streaming results plane, end to end: the pull parser and push
+//! writer must agree with the retired tree path on the repo's real
+//! artifacts (`BENCH_baseline.json`), counters must survive the
+//! full write→parse cycle exactly, and no experiment driver may build
+//! `Json` trees for output again (grep-pinned).
+
+use decomp::algorithms::{TracePoint, TrainTrace};
+use decomp::bench_harness::summary::BenchReport;
+use decomp::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+fn baseline_text() -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_baseline.json");
+    std::fs::read_to_string(&path).expect("checked-in BENCH_baseline.json")
+}
+
+/// The report as the old tree emitter would have built it: one
+/// `Json::Obj` whose BTreeMap ordering produced alphabetical keys.
+fn report_tree(r: &BenchReport) -> Json {
+    let groups = r
+        .groups
+        .iter()
+        .map(|(g, ms)| {
+            let metrics = ms
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                .collect::<BTreeMap<_, _>>();
+            (g.clone(), Json::Obj(metrics))
+        })
+        .collect::<BTreeMap<_, _>>();
+    Json::obj(vec![
+        ("groups", Json::Obj(groups)),
+        ("quick", Json::Bool(r.quick)),
+        ("schema", Json::Str("decomp-bench-v1".to_string())),
+    ])
+}
+
+#[test]
+fn bench_report_streaming_emission_matches_tree_emitter() {
+    // BENCH_pr.json must not change bytes because the emitter became
+    // streaming: write_json == the tree emission of the same report
+    // (properties.rs pins tree emission == the retired recursive
+    // emitter on the full grammar).
+    let report = BenchReport::parse(&baseline_text()).unwrap();
+    let mut streamed = Vec::new();
+    report.write_json(&mut streamed).unwrap();
+    let streamed = String::from_utf8(streamed).unwrap();
+    assert_eq!(streamed, report_tree(&report).to_pretty());
+    assert!(streamed.starts_with("{\n  \"groups\": {\n"), "{streamed:.60}");
+    assert!(streamed.ends_with("}\n"));
+    // And the streamed document parses back to the same report.
+    let reparsed = BenchReport::parse(&streamed).unwrap();
+    assert_eq!(reparsed.quick, report.quick);
+    assert_eq!(reparsed.groups, report.groups);
+}
+
+#[test]
+fn bench_baseline_pull_parse_equivalent_to_tree_parse() {
+    // The pull parser must extract exactly what a tree walk over
+    // `Json::parse` extracts — including dropping `null` placeholder
+    // metrics (host-dependent entries the baseline ships unrecorded).
+    let text = baseline_text();
+    let pulled = BenchReport::parse(&text).unwrap();
+    let tree = Json::parse(&text).unwrap();
+    assert_eq!(
+        Some(pulled.quick),
+        tree.get("quick").and_then(|q| q.as_bool())
+    );
+    let tree_groups: BTreeMap<String, BTreeMap<String, f64>> = tree
+        .get("groups")
+        .and_then(|g| g.as_obj())
+        .expect("baseline has groups")
+        .iter()
+        .map(|(g, ms)| {
+            let metrics = ms
+                .as_obj()
+                .expect("group is an object")
+                .iter()
+                .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+                .collect();
+            (g.clone(), metrics)
+        })
+        .collect();
+    assert_eq!(pulled.groups, tree_groups);
+    // The baseline really does exercise the null-skipping path.
+    assert!(
+        pulled.groups["host_sweep_wall_s"].is_empty(),
+        "expected the baseline's null wall-clock metrics to be dropped"
+    );
+}
+
+#[test]
+fn trace_counters_above_2_pow_53_round_trip_exactly() {
+    // Json::Num(f64) loses u64 precision above 2^53; the streaming
+    // writer's num_u64 path must not. 2^60 + 3 is unrepresentable in
+    // f64 (rounds to 2^60), so a lossy path cannot pass this test.
+    let big = (1u64 << 60) + 3;
+    let trace = TrainTrace {
+        algo: "counters".to_string(),
+        points: vec![TracePoint {
+            iter: (1 << 54) + 1,
+            global_loss: 0.25,
+            consensus: 0.5,
+            bytes_sent: big,
+            sim_time_s: 1.5,
+        }],
+    };
+    for pretty in [false, true] {
+        let mut buf = Vec::new();
+        trace.write_json(&mut buf, pretty).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains(&big.to_string()), "{text}");
+        let back = TrainTrace::parse(&text).unwrap();
+        assert_eq!(back.points[0].bytes_sent, big);
+        assert_eq!(back.points[0].iter, (1 << 54) + 1);
+    }
+}
+
+#[test]
+fn no_experiments_file_builds_json_trees_for_output() {
+    // The API-redesign pin: every experiment driver emits through
+    // Table + Sink (streaming); constructing `Json::Obj`/`Json::obj(`
+    // in experiments/ would reopen the tree-emission path this PR
+    // closed.
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src/experiments");
+    let mut checked = 0;
+    for entry in std::fs::read_dir(&dir).expect("experiments dir") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("rs") {
+            continue;
+        }
+        let src = std::fs::read_to_string(&path).unwrap();
+        for needle in ["Json::Obj", "Json::obj(", "to_pretty()", ".to_json("] {
+            assert!(
+                !src.contains(needle),
+                "{} constructs a JSON tree for output ({needle}); \
+                 emit through JsonWriter/Sink instead",
+                path.display()
+            );
+        }
+        checked += 1;
+    }
+    assert!(checked >= 9, "expected to scan the experiment drivers, saw {checked}");
+}

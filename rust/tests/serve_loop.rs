@@ -1,0 +1,142 @@
+//! Integration test for the `decomp serve` job loop: two jobs and one
+//! malformed line through a single serve session, asserting the
+//! streamed frame sequence, per-job id correlation, clean continuation
+//! after the bad line, and determinism across repeat runs and thread
+//! counts.
+
+use decomp::serve::{serve, ServeOpts, ServeStats};
+use decomp::util::json::Json;
+use std::io::Cursor;
+
+const GRID_JOB: &str = r#"{"id":"grid","algos":["dpsgd","dcd"],"compressors":["q8"],
+    "nodes":4,"iters":4,"eval_every":2,"dim":8,"rows_per_node":16,"batch":4,
+    "model":"quadratic"}"#;
+const BAD_JOB: &str = r#"{"id":"bad-job","algoz":["dpsgd"]}"#;
+const TRACED_JOB: &str = r#"{"id":"traced","algo":"dcd","compressor":"q8",
+    "nodes":4,"iters":4,"eval_every":2,"dim":8,"rows_per_node":16,"batch":4,
+    "model":"quadratic","trace":true}"#;
+
+fn session() -> String {
+    // The raw literals are wrapped for line width; a job must be ONE line.
+    let one = |s: &str| s.replace('\n', " ");
+    format!("{}\n{}\n{}\n", one(GRID_JOB), one(BAD_JOB), one(TRACED_JOB))
+}
+
+fn run(input: &str, threads: usize) -> (ServeStats, String) {
+    let mut out = Vec::new();
+    let stats = serve(Cursor::new(input), &mut out, &ServeOpts { threads }).unwrap();
+    (stats, String::from_utf8(out).unwrap())
+}
+
+fn frames(raw: &str) -> Vec<Json> {
+    raw.lines()
+        .map(|l| Json::parse(l).expect("every frame is one valid JSON line"))
+        .collect()
+}
+
+fn field<'a>(f: &'a Json, key: &str) -> &'a Json {
+    f.get(key).unwrap_or_else(|| panic!("frame missing {key}: {f:?}"))
+}
+
+#[test]
+fn two_jobs_and_a_malformed_line_stream_the_expected_frames() {
+    let (stats, raw) = run(&session(), 1);
+    assert_eq!(
+        stats,
+        ServeStats {
+            jobs_ok: 2,
+            jobs_rejected: 1,
+            cells_run: 3
+        }
+    );
+
+    let frames = frames(&raw);
+    let events: Vec<&str> = frames
+        .iter()
+        .map(|f| field(f, "event").as_str().unwrap())
+        .collect();
+    // threads=1 runs cells inline in grid order, so the whole stream is
+    // deterministic: job "grid" (2 cells), the rejected line, "traced".
+    assert_eq!(
+        events,
+        vec![
+            "accepted", "progress", "result", "progress", "result", "done", // grid
+            "error",    // bad-job
+            "accepted", "progress", "result", "done", // traced
+        ]
+    );
+
+    // Every frame of the first job correlates to its id.
+    for f in &frames[..6] {
+        assert_eq!(field(f, "id").as_str(), Some("grid"), "{f:?}");
+    }
+    assert_eq!(field(&frames[0], "cells").as_f64(), Some(2.0));
+    let grid_algos: Vec<&str> = [&frames[2], &frames[4]]
+        .iter()
+        .map(|f| field(f, "algo").as_str().unwrap())
+        .collect();
+    assert_eq!(grid_algos, vec!["dpsgd", "dcd"]);
+    for f in [&frames[2], &frames[4]] {
+        assert_eq!(field(f, "compressor").as_str(), Some("q8"));
+        assert!(field(f, "final_loss").as_f64().unwrap().is_finite());
+        assert!(f.get("trace").is_none(), "trace must be opt-in: {f:?}");
+    }
+    let done = &frames[5];
+    assert_eq!(field(done, "cells").as_f64(), Some(2.0));
+    assert_eq!(field(done, "failed").as_f64(), Some(0.0));
+
+    // The malformed line is answered, with its id recovered, and the
+    // loop keeps serving.
+    let err = &frames[6];
+    assert_eq!(field(err, "id").as_str(), Some("bad-job"));
+    assert!(
+        field(err, "error").as_str().unwrap().contains("algoz"),
+        "error should name the unknown field: {err:?}"
+    );
+
+    // The traced job's result carries the full per-eval trace.
+    let traced = &frames[9];
+    assert_eq!(field(traced, "id").as_str(), Some("traced"));
+    let trace = field(traced, "trace");
+    assert_eq!(field(trace, "algo").as_str(), Some("dcd_q8"));
+    let points = field(trace, "points").as_arr().unwrap();
+    assert!(points.len() >= 2, "iters=4/eval_every=2 should log ≥2 points");
+    for p in points {
+        assert!(p.get("iter").is_some() && p.get("bytes_sent").is_some(), "{p:?}");
+    }
+}
+
+#[test]
+fn serve_output_is_deterministic() {
+    // Same input, same thread count → byte-identical stream.
+    let (s1, raw1) = run(&session(), 1);
+    let (s2, raw2) = run(&session(), 1);
+    assert_eq!(s1, s2);
+    assert_eq!(raw1, raw2);
+
+    // More threads may reorder completion, but the set of results (and
+    // every trained loss, bitwise) must not change.
+    let (s4, raw4) = run(&session(), 4);
+    assert_eq!(s4, s1);
+    let results = |raw: &str| {
+        let mut rs: Vec<(String, f64, u64)> = frames(raw)
+            .iter()
+            .filter(|f| field(f, "event").as_str() == Some("result"))
+            .map(|f| {
+                (
+                    format!(
+                        "{}:{}/{}",
+                        field(f, "id").as_str().unwrap(),
+                        field(f, "algo").as_str().unwrap(),
+                        field(f, "compressor").as_str().unwrap()
+                    ),
+                    field(f, "final_loss").as_f64().unwrap(),
+                    field(f, "bytes_sent").as_f64().unwrap() as u64,
+                )
+            })
+            .collect();
+        rs.sort_by(|a, b| a.0.cmp(&b.0));
+        rs
+    };
+    assert_eq!(results(&raw4), results(&raw1));
+}
