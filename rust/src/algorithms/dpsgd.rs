@@ -109,7 +109,7 @@ mod tests {
         let n = 4;
         let (mut models, x0) = quad_setup(n, 4, 1.0, 0.0);
         let cfg = cfg_fp32(n, 3);
-        let w = cfg.mixing.w.clone();
+        let w = cfg.mixing.w().clone();
         let mut algo = DPsgd::new(cfg, &x0, n);
         // Pre-step: X is x0 everywhere; grads g_i = x0 − c_i deterministic.
         let pre: Vec<Vec<f32>> = algo.params().to_vec();

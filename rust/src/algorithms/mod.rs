@@ -128,9 +128,10 @@ impl NodeStates {
             let mut weights: Vec<f32> = Vec::with_capacity(cols.capacity());
             cols.push(src[i].as_slice());
             weights.push(mixing.self_weight[i]);
+            let row = mixing.neighbor_weights(i);
             for (k, &j) in mixing.graph.neighbors[i].iter().enumerate() {
                 cols.push(src[j].as_slice());
-                weights.push(mixing.neighbor_weights[i][k]);
+                weights.push(row[k]);
             }
             crate::linalg::vecops::weighted_sum(&weights, &cols, &mut out[i]);
         }

@@ -59,9 +59,10 @@ impl Algorithm for NaiveCompressedDPsgd {
             let mut weights: Vec<f32> = Vec::with_capacity(1 + nbrs.len());
             cols.push(self.s.x[i].as_slice());
             weights.push(self.cfg.mixing.self_weight[i]);
+            let row = self.cfg.mixing.neighbor_weights(i);
             for (k, &j) in nbrs.iter().enumerate() {
                 cols.push(self.compressed[j].as_slice());
-                weights.push(self.cfg.mixing.neighbor_weights[i][k]);
+                weights.push(row[k]);
             }
             crate::linalg::vecops::weighted_sum(&weights, &cols, &mut self.mixed[i]);
             crate::linalg::vecops::axpy(-gamma, &grads[i], &mut self.mixed[i]);

@@ -27,6 +27,11 @@
 //! - `trace_emit` (higher is better) — streamed trace-emission
 //!   throughput (points/sec through `TrainTrace::write_json` into a null
 //!   sink). Hardware-dependent; the baseline ships it as `null`.
+//! - `peak_rss` (lower is better) — the process's peak-RSS high-water
+//!   mark (MiB) across one fig3-style n = 4096 ring cell on the sparse
+//!   slot table: the memory side of the scaling story. Linux-only
+//!   (`/proc/self/clear_refs` + `VmHWM`) and allocator-dependent; the
+//!   baseline ships it as `null`, CI tracks the trajectory.
 
 use crate::algorithms::driver::{TracePoint, TrainTrace};
 use crate::data::build_models;
@@ -169,7 +174,72 @@ fn collect_with(quick: bool, host_sweep: bool) -> BenchReport {
     );
     groups.insert("trace_emit".into(), emit);
 
+    // Peak RSS of one fig3-style scaling cell (dpsgd_fp32 on a 4096-ring
+    // over the sparse link-keyed slot table). Host- and
+    // allocator-dependent, so the baseline ships it as null; hosts
+    // without the /proc interface omit the group rather than report a
+    // fake number.
+    if let Some(mib) = peak_rss_cell(quick) {
+        let mut rss = BTreeMap::new();
+        rss.insert("dpsgd_fp32@n4096_ring_mib".to_string(), mib);
+        groups.insert("peak_rss".into(), rss);
+    }
+
     BenchReport { quick, groups }
+}
+
+/// Measure the peak-RSS high-water mark (MiB) across one n = 4096 ring
+/// cell on the event engine — the number the EXPERIMENTS.md scaling
+/// table tracks. Resets the kernel's per-process peak counter
+/// (`echo 5 > /proc/self/clear_refs`) so the sample covers this cell
+/// rather than earlier collection phases, runs the cell, then reads
+/// `VmHWM` back from `/proc/self/status`. Returns `None` off-Linux or
+/// when `/proc` is unavailable.
+#[cfg(target_os = "linux")]
+fn peak_rss_cell(quick: bool) -> Option<f64> {
+    use crate::data::{ModelKind, SynthSpec};
+    use crate::network::sim::SimOpts;
+    std::fs::write("/proc/self/clear_refs", "5").ok()?;
+    let n = 4096;
+    let spec = SynthSpec {
+        n_nodes: n,
+        rows_per_node: 4,
+        dim: 256,
+        noise: 0.1,
+        heterogeneity: 0.5,
+        seed: 0xf163,
+    };
+    let (models, x0) = build_models(&ModelKind::Quadratic { spread: 0.5, noise: 0.1 }, &spec);
+    let exp = ExperimentSpec {
+        algo: "dpsgd".parse().expect("registered algo"),
+        compressor: "fp32".parse().expect("registered compressor"),
+        topology: TopologySpec::Ring,
+        n_nodes: n,
+        seed: 0xf163,
+        eta: 1.0,
+        scenario: Default::default(),
+    };
+    let iters = if quick { 2 } else { 5 };
+    let run = exp
+        .session()
+        .ok()?
+        .run_simulated(models, &x0, 0.05, iters, SimOpts::default())
+        .ok()?;
+    if run.reports.len() != n {
+        return None;
+    }
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let kb: f64 = status
+        .lines()
+        .find_map(|l| l.strip_prefix("VmHWM:"))
+        .and_then(|rest| rest.split_whitespace().next())
+        .and_then(|v| v.parse().ok())?;
+    Some(kb / 1024.0)
+}
+
+#[cfg(not(target_os = "linux"))]
+fn peak_rss_cell(_quick: bool) -> Option<f64> {
+    None
 }
 
 /// Deterministic synthetic trace for the emission bench.
@@ -488,6 +558,13 @@ mod tests {
         assert_eq!(r.groups["sim_virtual_s_per_iter"].len(), 9);
         assert_eq!(r.groups["trace_emit"].len(), 1);
         assert!(r.groups["trace_emit"].contains_key("trace_points_per_sec"));
+        // Linux hosts (CI included) must carry the scaling-cell RSS
+        // sample; elsewhere the group is legitimately absent.
+        #[cfg(target_os = "linux")]
+        assert!(
+            r.groups["peak_rss"].contains_key("dpsgd_fp32@n4096_ring_mib"),
+            "peak_rss group missing on a linux host"
+        );
         for ms in r.groups.values() {
             for (k, v) in ms {
                 assert!(v.is_finite() && *v > 0.0, "{k} = {v}");

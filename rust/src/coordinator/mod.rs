@@ -31,7 +31,7 @@ pub(crate) use worker::run_threaded_entry;
 use crate::algorithms::{consensus_distance, AlgoConfig, RunOpts, TracePoint, TrainTrace};
 use crate::data::{build_models, ModelKind, SynthSpec};
 use crate::models::GradientModel;
-use crate::network::sim::{NodeProgram, SimEngine, SimOpts, SimRun};
+use crate::network::sim::{sim_shards, LinkTable, NodeProgram, SimEngine, SimOpts, SimRun};
 use crate::spec::{AlgoEntry, AlgoSpec, ExperimentSpec};
 use crate::topology::{MixingMatrix, Topology};
 use std::sync::Arc;
@@ -244,7 +244,22 @@ pub(crate) fn run_simulated_entry(
     sim: SimOpts,
 ) -> anyhow::Result<SimRun> {
     let programs = build_programs_entry(entry, cfg, models, x0, gamma, iters)?;
-    Ok(crate::network::sim::run_sim(programs, iters, sim))
+    let engine = sim_engine_entry(entry, cfg, programs.len(), sim)?;
+    Ok(crate::network::sim::run_sim_on(engine, programs, iters))
+}
+
+/// Build the event engine for a registry entry: delivery slots sized by
+/// the entry's [`CommPattern`] over the run's mixing graph (graph edges
+/// for gossip, a hub star for reductions — O(links), never n²), event
+/// loop sharded per `DECOMP_SIM_SHARDS`.
+fn sim_engine_entry(
+    entry: &'static AlgoEntry,
+    cfg: &AlgoConfig,
+    n: usize,
+    sim: SimOpts,
+) -> anyhow::Result<SimEngine> {
+    let links = LinkTable::for_pattern(entry.comm, &cfg.mixing.graph)?;
+    Ok(SimEngine::with_links(n, sim, links, sim_shards()))
 }
 
 /// The metric/trace name an algorithm reports under (matches
@@ -290,7 +305,7 @@ pub(crate) fn run_sim_trace_entry(
 ) -> anyhow::Result<TrainTrace> {
     let mut programs = build_programs_entry(entry, cfg, models, x0, opts.gamma, opts.iters)?;
     let name = entry.trace_name(cfg);
-    let mut engine = SimEngine::new(programs.len(), sim);
+    let mut engine = sim_engine_entry(entry, cfg, programs.len(), sim)?;
 
     let eval = |programs: &[Box<dyn NodeProgram>], mean: &mut [f32]| -> (f64, f64) {
         let params: Vec<Vec<f32>> = programs.iter().map(|p| p.x().to_vec()).collect();

@@ -63,7 +63,7 @@ impl Common {
     ) -> Common {
         let mut weights = Vec::with_capacity(1 + cfg.mixing.graph.neighbors[node].len());
         weights.push(cfg.mixing.self_weight[node]);
-        weights.extend_from_slice(&cfg.mixing.neighbor_weights[node]);
+        weights.extend_from_slice(cfg.mixing.neighbor_weights(node));
         let scenario = cfg.scenario.clone();
         let mut masked_weights = Vec::new();
         if let Some(rt) = &scenario {

@@ -146,9 +146,9 @@ pub fn topology_sweep() -> Table {
         t.row(vec![
             topo.name(),
             deg.to_string(),
-            format!("{:.4}", m.stats.rho),
-            format!("{:.4}", m.stats.mu),
-            format!("{:.4}", m.stats.gap),
+            format!("{:.4}", m.stats().rho),
+            format!("{:.4}", m.stats().mu),
+            format!("{:.4}", m.stats().gap),
             format!("{:.4}", m.dcd_alpha_bound()),
         ]);
     }

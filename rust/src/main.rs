@@ -63,6 +63,16 @@ fn run() -> anyhow::Result<()> {
         );
         std::env::set_var("DECOMP_SWEEP_THREADS", threads);
     }
+    // Intra-run event-loop sharding on the sim backend: --sim-shards N
+    // overrides DECOMP_SIM_SHARDS. Bit-identical at any shard count
+    // (deterministic merge); 1 = the serial zero-alloc loop.
+    if let Some(shards) = args.opt_str("sim-shards") {
+        anyhow::ensure!(
+            shards.parse::<usize>().map(|t| t >= 1).unwrap_or(false),
+            "--sim-shards expects a positive integer, got '{shards}'"
+        );
+        std::env::set_var("DECOMP_SIM_SHARDS", shards);
+    }
     match cmd {
         "train" => train(&args, true),
         "simulate" => train(&args, false),
@@ -155,6 +165,13 @@ deterministic sweep runner; control the thread count with
 --sweep-threads N (or DECOMP_SWEEP_THREADS; 1 = serial). Results are
 bit-identical at any thread count.
 
+The sim backend's event loop additionally shards *within* a run over
+node ranges: --sim-shards N (or DECOMP_SIM_SHARDS; 1 = serial
+zero-alloc loop). The merge is deterministic, so trajectories and
+virtual times are bit-identical at any shard count. Delivery slots are
+edge-keyed (O(edges), not O(n²)) — a ring at --nodes 16384 runs on a
+laptop.
+
 Set DECOMP_BACKEND=sim|threads|reference to re-route the figure
 experiments (fig1..fig4, ablations) through an execution backend.";
 
@@ -196,13 +213,21 @@ fn train(args: &Args, threaded: bool) -> anyhow::Result<()> {
         cfg.model,
         cfg.dim
     );
-    println!(
-        "mixing: rho={:.4} mu={:.4} gap={:.4} dcd_alpha_bound={:.4}",
-        algo_cfg.mixing.stats.rho,
-        algo_cfg.mixing.stats.mu,
-        algo_cfg.mixing.stats.gap,
-        algo_cfg.mixing.dcd_alpha_bound()
-    );
+    match algo_cfg.mixing.try_stats() {
+        Some(s) => println!(
+            "mixing: rho={:.4} mu={:.4} gap={:.4} dcd_alpha_bound={:.4}",
+            s.rho,
+            s.mu,
+            s.gap,
+            algo_cfg.mixing.dcd_alpha_bound()
+        ),
+        // Past the dense-oracle cap the mixing matrix is CSR-only; the
+        // O(n³) Jacobi spectrum is deliberately skipped at sweep scale.
+        None => println!(
+            "mixing: sparse CSR rows only (spectral stats skipped past n={})",
+            decomp::topology::MixingMatrix::DENSE_ORACLE_MAX
+        ),
+    }
 
     if backend == Some(Backend::Sim) {
         // Discrete-event backend: virtual clock, per-link costs, honest
@@ -315,15 +340,23 @@ fn write_trace(args: &Args, trace: &TrainTrace, t: &Table) -> anyhow::Result<()>
 fn spectra(args: &Args) -> anyhow::Result<()> {
     let cfg = load_train_config(args)?;
     let mixing = cfg.build_mixing()?;
+    let stats = mixing.try_stats().ok_or_else(|| {
+        anyhow::anyhow!(
+            "spectra needs the dense oracle, which is only computed for n <= {} \
+             (Jacobi is O(n^3)); got n = {}",
+            decomp::topology::MixingMatrix::DENSE_ORACLE_MAX,
+            cfg.n_nodes
+        )
+    })?;
     let mut t = Table::new(
         &format!("spectra: {} n={}", cfg.topology, cfg.n_nodes),
         &["stat", "value"],
     );
-    t.row(vec!["lambda2".into(), format!("{:.6}", mixing.stats.lambda2)]);
-    t.row(vec!["lambda_n".into(), format!("{:.6}", mixing.stats.lambda_n)]);
-    t.row(vec!["rho".into(), format!("{:.6}", mixing.stats.rho)]);
-    t.row(vec!["mu".into(), format!("{:.6}", mixing.stats.mu)]);
-    t.row(vec!["spectral_gap".into(), format!("{:.6}", mixing.stats.gap)]);
+    t.row(vec!["lambda2".into(), format!("{:.6}", stats.lambda2)]);
+    t.row(vec!["lambda_n".into(), format!("{:.6}", stats.lambda_n)]);
+    t.row(vec!["rho".into(), format!("{:.6}", stats.rho)]);
+    t.row(vec!["mu".into(), format!("{:.6}", stats.mu)]);
+    t.row(vec!["spectral_gap".into(), format!("{:.6}", stats.gap)]);
     t.row(vec![
         "dcd_alpha_bound".into(),
         format!("{:.6}", mixing.dcd_alpha_bound()),

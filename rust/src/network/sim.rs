@@ -4,8 +4,7 @@
 //! per node with blocking mailbox receives — faithful to deployment, but
 //! it caps realistic sweeps at ~8–16 nodes and measures *host* wall-clock,
 //! not the modeled network. This module replaces thread-per-node execution
-//! for experiments with a single-threaded event loop over a **virtual
-//! clock**:
+//! for experiments with an event loop over a **virtual clock**:
 //!
 //! - every node advances a local clock; sends serialize through the
 //!   sender's NIC under a per-link bandwidth/latency [`CostModel`];
@@ -19,8 +18,16 @@
 //! machines the threaded coordinator executes — so the two backends
 //! produce **bitwise-identical trajectories** (pinned by
 //! `rust/tests/backend_equivalence.rs`) while the sim backend scales to
-//! n ≥ 64 nodes and arbitrary topology/latency/bandwidth grids in
-//! milliseconds of host time.
+//! n = 16384 nodes and arbitrary topology/latency/bandwidth grids in
+//! seconds of host time.
+//!
+//! Memory scales with **links, not n²**: delivery slots are keyed by a
+//! [`LinkTable`] — a receiver-major CSR over the run's communication plan
+//! (graph edges for gossip, a hub star for reductions) — so a ring at
+//! n = 16384 holds 2·n·2 slot queues instead of n²·2. The event loop can
+//! additionally shard emit/absorb across threads over contiguous node
+//! ranges with a deterministic merge ([`SimEngine::with_links`],
+//! `DECOMP_SIM_SHARDS`); results are bit-identical at any shard count.
 //!
 //! The wire framing round-trips exactly:
 //!
@@ -41,6 +48,7 @@ use crate::compression::Wire;
 use crate::network::cost::CostModel;
 use crate::network::transport::Channel;
 use crate::spec::ScenarioRuntime;
+use crate::topology::Graph;
 use std::collections::{BinaryHeap, VecDeque};
 use std::sync::Arc;
 
@@ -278,6 +286,180 @@ impl Frame {
 }
 
 // ---------------------------------------------------------------------------
+// The delivery plan: which ordered links can carry traffic.
+
+/// Which links an algorithm's messages travel — the shape that sizes the
+/// engine's delivery-slot table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommPattern {
+    /// Sends travel only along mixing-graph edges (every gossip
+    /// algorithm; one frame per edge direction per phase).
+    Gossip,
+    /// Hub-rooted reduce/broadcast: every node exchanges with node 0 and
+    /// nobody else (allreduce-style algorithms).
+    HubReduce,
+}
+
+/// The run's communication plan as a receiver-major CSR: the senders that
+/// may deliver to node `to` occupy `senders[offsets[to]..offsets[to+1]]`,
+/// sorted ascending. Each directed link owns two delivery slots (one per
+/// [`Channel`]), so slot storage is O(links) — degree-sized, not n².
+///
+/// The all-pairs [`LinkTable::dense`] variant keeps the old n² layout for
+/// small-n convenience (index arithmetic, no search) and is rejected with
+/// a clean error past the footprint cap instead of OOMing.
+#[derive(Debug, Clone)]
+pub struct LinkTable {
+    n: usize,
+    /// Receiver-major row starts, in directed-link units; len n+1.
+    offsets: Vec<usize>,
+    /// Flattened sorted sender lists; empty in the dense variant.
+    senders: Vec<u32>,
+    dense: bool,
+}
+
+impl LinkTable {
+    /// Footprint cap on the slot table: queue *headers* alone (before any
+    /// payload) must stay under this. A dense plan crosses it near
+    /// n ≈ 4096; every shipped topology stays far below at n = 16384.
+    pub const MAX_SLOT_BYTES: usize = 1 << 30;
+
+    fn guard(directed_links: usize, what: &str) -> anyhow::Result<()> {
+        let bytes = directed_links
+            .saturating_mul(2)
+            .saturating_mul(std::mem::size_of::<VecDeque<Wire>>());
+        anyhow::ensure!(
+            bytes <= Self::MAX_SLOT_BYTES,
+            "refusing to build the delivery-slot table for {what}: {} directed links would \
+             allocate {} slot queues (~{} MiB of queue headers before any payload, cap {} MiB); \
+             use a sparse topology or fewer nodes",
+            directed_links,
+            directed_links * 2,
+            bytes >> 20,
+            Self::MAX_SLOT_BYTES >> 20,
+        );
+        Ok(())
+    }
+
+    /// The all-pairs plan: any node may send to any other. O(n²) slots —
+    /// fine for small n and for tests, rejected past the footprint cap.
+    pub fn dense(n: usize) -> anyhow::Result<LinkTable> {
+        Self::guard(n.saturating_mul(n), &format!("a dense all-pairs plan at n = {n}"))?;
+        Ok(LinkTable {
+            n,
+            offsets: (0..=n).map(|i| i * n).collect(),
+            senders: Vec::new(),
+            dense: true,
+        })
+    }
+
+    /// Gossip plan: node `to` may receive exactly from its graph
+    /// neighbors. O(2 · edges) slots.
+    pub fn from_graph(graph: &Graph) -> anyhow::Result<LinkTable> {
+        let n = graph.n;
+        Self::guard(
+            2 * graph.edge_count(),
+            &format!("gossip on a {n}-node graph with {} edges", graph.edge_count()),
+        )?;
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut senders = Vec::with_capacity(2 * graph.edge_count());
+        offsets.push(0);
+        for to in 0..n {
+            // `graph.neighbors[to]` is sorted and deduped by construction.
+            senders.extend(graph.neighbors[to].iter().map(|&j| j as u32));
+            offsets.push(senders.len());
+        }
+        Ok(LinkTable {
+            n,
+            offsets,
+            senders,
+            dense: false,
+        })
+    }
+
+    /// Hub star: every node exchanges with `hub` only. O(2(n−1)) slots —
+    /// this is why allreduce at huge n does *not* need a dense table (the
+    /// hub never sends to itself; its own contribution is held locally).
+    pub fn hub(n: usize, hub: usize) -> anyhow::Result<LinkTable> {
+        assert!(hub < n, "hub {hub} out of range n={n}");
+        Self::guard(2 * (n - 1), &format!("a hub star at n = {n}"))?;
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut senders = Vec::with_capacity(2 * (n - 1));
+        offsets.push(0);
+        for to in 0..n {
+            if to == hub {
+                senders.extend((0..n as u32).filter(|&j| j as usize != hub));
+            } else {
+                senders.push(hub as u32);
+            }
+            offsets.push(senders.len());
+        }
+        Ok(LinkTable {
+            n,
+            offsets,
+            senders,
+            dense: false,
+        })
+    }
+
+    /// The plan a registry entry's [`CommPattern`] implies over `graph`.
+    pub fn for_pattern(pattern: CommPattern, graph: &Graph) -> anyhow::Result<LinkTable> {
+        match pattern {
+            CommPattern::Gossip => Self::from_graph(graph),
+            CommPattern::HubReduce => Self::hub(graph.n, 0),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Directed links in the plan (delivery slots = 2× this).
+    pub fn links(&self) -> usize {
+        self.offsets[self.n]
+    }
+
+    /// First directed link whose receiver is `to` (receiver-major), so a
+    /// node range [lo, hi) owns the contiguous slot range
+    /// `[row_start(lo)·2, row_start(hi)·2)`.
+    #[inline]
+    fn row_start(&self, to: usize) -> usize {
+        self.offsets[to]
+    }
+
+    /// Slot for (from → to, channel). Panics if the link is outside the
+    /// plan — a program sending off-topology is a bug, not a slow path.
+    #[inline]
+    fn slot_index(&self, from: usize, to: usize, ch: Channel) -> usize {
+        let link = if self.dense {
+            self.offsets[to] + from
+        } else {
+            let row = &self.senders[self.offsets[to]..self.offsets[to + 1]];
+            match row.binary_search(&(from as u32)) {
+                Ok(k) => self.offsets[to] + k,
+                Err(_) => panic!(
+                    "sim: send {from} -> {to} is outside the engine's delivery plan \
+                     (the link table only holds this run's topology links)"
+                ),
+            }
+        };
+        link * 2 + channel_tag(ch) as usize
+    }
+}
+
+/// Event-loop shard count from `DECOMP_SIM_SHARDS` (default 1 — the
+/// serial, zero-steady-state-allocation loop). Results are bit-identical
+/// at every shard count, so any value is safe; >1 trades the
+/// zero-allocation property for parallel emit/absorb on large n.
+pub fn sim_shards() -> usize {
+    std::env::var("DECOMP_SIM_SHARDS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or(1)
+}
+
+// ---------------------------------------------------------------------------
 // The engine.
 
 /// Engine configuration.
@@ -455,9 +637,180 @@ impl SimRun {
     }
 }
 
-/// The single-threaded discrete-event executor. Drive it one iteration at
-/// a time (interleaving evaluation, γ-annealing, or early stopping between
-/// iterations), or use [`run_sim`] for a fixed-length run.
+/// One event-loop shard's private scratch: everything the emit and absorb
+/// passes touch for the node range `[lo, hi)`, so shards share nothing
+/// mutable and the serial single-shard path is exactly the old engine.
+struct ShardScratch {
+    /// First node this shard owns.
+    lo: usize,
+    /// One past the last node this shard owns.
+    hi: usize,
+    /// Shard-local outbox: `emit` fills it, the shard drains it; its wire
+    /// pool is refilled from messages absorbed by this shard's receivers.
+    outbox: Outbox,
+    /// Per-destination frame being assembled during one node's emit
+    /// (index = *global* destination node); empty frames between uses.
+    dest_frames: Vec<Frame>,
+    /// Destinations touched by the current emit, in first-send order.
+    dests: Vec<usize>,
+    /// Frames charged this phase, in emit order. Sequence numbers are
+    /// assigned at the deterministic merge (shard order = node order), so
+    /// heap tie-breaks are identical to a serial run.
+    pending: Vec<Arrival>,
+    /// Frame shells (empty `msgs` vecs with capacity) for reuse; refilled
+    /// at delivery with the shells of frames this shard's *senders* sent.
+    frame_pool: Vec<Frame>,
+    /// Scratch for `NodeProgram::expects`.
+    expects_buf: Vec<(usize, Channel)>,
+    /// Scratch for the messages handed to `NodeProgram::absorb`.
+    absorb_buf: Vec<Wire>,
+    /// Counter deltas, merged into the global clock after the barrier.
+    payload_bytes: u64,
+    frame_bytes: u64,
+    frames: u64,
+    frames_dropped: u64,
+}
+
+impl ShardScratch {
+    fn new(lo: usize, hi: usize, n: usize) -> ShardScratch {
+        let mut dest_frames = Vec::new();
+        dest_frames.resize_with(n, Frame::default);
+        ShardScratch {
+            lo,
+            hi,
+            outbox: Outbox::new(),
+            dest_frames,
+            dests: Vec::new(),
+            pending: Vec::new(),
+            frame_pool: Vec::new(),
+            expects_buf: Vec::new(),
+            absorb_buf: Vec::new(),
+            payload_bytes: 0,
+            frame_bytes: 0,
+            frames: 0,
+            frames_dropped: 0,
+        }
+    }
+}
+
+/// Emit pass over one shard's node range. All slices are the shard's own
+/// contiguous carve-out (local index 0 = node `s.lo`). Charged frames
+/// accumulate in `s.pending` in emit order; nothing global is touched.
+#[allow(clippy::too_many_arguments)]
+fn emit_shard(
+    s: &mut ShardScratch,
+    programs: &mut [Box<dyn NodeProgram>],
+    node_time: &mut [f64],
+    nic_free: &mut [f64],
+    bytes_sent: &mut [u64],
+    msgs_sent: &mut [u64],
+    opts: &SimOpts,
+    t: u64,
+    phase: usize,
+) {
+    for (local, prog) in programs.iter_mut().enumerate() {
+        let i = s.lo + local;
+        prog.emit(t, phase, &mut s.outbox);
+        if s.outbox.is_empty() {
+            continue;
+        }
+        // Group by destination preserving emit order, into the
+        // persistent per-destination frame slots.
+        debug_assert!(s.dests.is_empty());
+        for (to, ch, wire) in s.outbox.msgs.drain(..) {
+            let frame = &mut s.dest_frames[to];
+            if frame.msgs.is_empty() {
+                s.dests.push(to);
+            }
+            frame.msgs.push((ch, wire));
+        }
+        // (take/restore keeps the borrow checker happy without losing the
+        // vec's capacity; `mem::take` swaps in an unallocated empty vec.)
+        let dests = std::mem::take(&mut s.dests);
+        for &to in &dests {
+            let shell = s.frame_pool.pop().unwrap_or_default();
+            let mut frame = std::mem::replace(&mut s.dest_frames[to], shell);
+            if let Some(rt) = &opts.scenario {
+                if !rt.live(i, t) || !rt.live(to, t) || rt.dropped_broadcast(t, phase, i) {
+                    // Condemned frame: it never reaches the NIC. Payload
+                    // buffers recycle straight back into the emit pool,
+                    // the shell into the frame pool — no bytes, no
+                    // latency, no charge.
+                    for (_, wire) in frame.msgs.drain(..) {
+                        s.outbox.recycle(wire);
+                    }
+                    s.frame_pool.push(frame);
+                    s.frames_dropped += 1;
+                    continue;
+                }
+            }
+            let link = opts.cost.link(i, to);
+            let on_wire = frame.encoded_len();
+            let start = node_time[local].max(nic_free[local]);
+            let mut tx = link.tx_seconds(on_wire as f64);
+            if let Some(rt) = &opts.scenario {
+                // The bandwidth schedule scales link capacity, so
+                // serialization time divides by the factor.
+                tx /= rt.bw_factor(t);
+            }
+            nic_free[local] = start + tx;
+            bytes_sent[local] += frame.payload_bytes() as u64;
+            msgs_sent[local] += frame.msgs.len() as u64;
+            s.payload_bytes += frame.payload_bytes() as u64;
+            s.frame_bytes += on_wire as u64;
+            s.frames += 1;
+            s.pending.push(Arrival {
+                time: start + tx + link.latency_s,
+                seq: 0, // assigned at the deterministic merge
+                from: i,
+                to,
+                frame,
+            });
+        }
+        s.dests = dests;
+        s.dests.clear();
+    }
+}
+
+/// Absorb pass over one shard's node range. `slots` is the shard's
+/// receiver-major carve-out of the global slot table starting at global
+/// slot `slot_base` — receivers own disjoint slot ranges, so shards never
+/// contend.
+fn absorb_shard(
+    s: &mut ShardScratch,
+    programs: &mut [Box<dyn NodeProgram>],
+    slots: &mut [VecDeque<Wire>],
+    slot_base: usize,
+    links: &LinkTable,
+    t: u64,
+    phase: usize,
+) {
+    for (local, prog) in programs.iter_mut().enumerate() {
+        let i = s.lo + local;
+        s.expects_buf.clear();
+        prog.expects(t, phase, &mut s.expects_buf);
+        debug_assert!(s.absorb_buf.is_empty());
+        for &(from, ch) in &s.expects_buf {
+            let idx = links.slot_index(from, i, ch) - slot_base;
+            let wire = slots[idx].pop_front().unwrap_or_else(|| {
+                panic!(
+                    "sim: node {i} expected a message from {from} on {ch:?} \
+                     at t={t} phase={phase} that was never sent"
+                )
+            });
+            s.absorb_buf.push(wire);
+        }
+        prog.absorb(t, phase, &s.absorb_buf);
+        for wire in s.absorb_buf.drain(..) {
+            s.outbox.recycle(wire);
+        }
+    }
+}
+
+/// The discrete-event executor. Drive it one iteration at a time
+/// (interleaving evaluation, γ-annealing, or early stopping between
+/// iterations), or use [`run_sim`] / [`run_sim_on`] for a fixed-length
+/// run.
 ///
 /// ## Memory model (steady-state zero allocation)
 ///
@@ -465,20 +818,36 @@ impl SimRun {
 /// for the run's lifetime (DESIGN.md §3b):
 ///
 /// - the arrival heap keeps its backing storage across phases;
-/// - message routing uses **flat delivery slots** — a dense
-///   `Vec<VecDeque<Wire>>` indexed by `(from·n + to)·2 + channel` —
-///   instead of hash maps, so grouping and delivery are array index
-///   operations with no hashing and no per-phase map allocation;
+/// - message routing uses **link-keyed delivery slots** — a
+///   `Vec<VecDeque<Wire>>` indexed through the [`LinkTable`]'s
+///   receiver-major CSR — so slot storage is O(links), grouping and
+///   delivery are array index operations (plus a short binary search over
+///   a degree-length row), and no hashing or per-phase map allocation
+///   happens anywhere;
 /// - [`Frame`]s and [`Wire`] payload buffers cycle through pools: a
 ///   frame's wires are moved into delivery slots, read by `absorb`, then
-///   recycled into the shared [`Outbox`] pool that `emit` draws from.
+///   recycled into the [`Outbox`] pool that `emit` draws from.
 ///
 /// After warm-up (one iteration fills every pool), the engine side of
-/// `step` performs zero heap allocations; end to end the full-precision
-/// gossip path is allocation-free (dpsgd_fp32@n64, asserted by the
-/// `alloc_steady_state` integration test under a counting allocator),
-/// while non-Identity codecs still allocate small bounded scratch
-/// (per-chunk scales, top-k index lists) inside compress/decompress.
+/// `step` performs zero heap allocations at the default single shard; end
+/// to end the full-precision gossip path is allocation-free
+/// (dpsgd_fp32@n64 and @n4096, asserted by the `alloc_steady_state`
+/// integration test under a counting allocator), while non-Identity
+/// codecs still allocate small bounded scratch (per-chunk scales, top-k
+/// index lists) inside compress/decompress.
+///
+/// ## Sharding (bit-identical intra-run parallelism)
+///
+/// With `shards > 1` ([`SimEngine::with_links`]), emit and absorb run on
+/// `std::thread::scope` threads over contiguous node ranges, each with
+/// private [`ShardScratch`]; delivery and the merge stay serial. The
+/// merge walks shards in order — which *is* global node order — so
+/// sequence numbers, heap tie-breaks, and therefore every trajectory and
+/// virtual timestamp are bit-identical at any shard count. Receivers own
+/// disjoint receiver-major slot ranges, so the absorb pass needs no
+/// locks; wire buffers recycle into the *receiving* shard's pool and
+/// frame shells into the *sending* shard's pool, which keeps pools
+/// steady for synchronous protocols.
 pub struct SimEngine {
     opts: SimOpts,
     clock: SimClock,
@@ -486,32 +855,49 @@ pub struct SimEngine {
     msgs_sent: Vec<u64>,
     seq: u64,
     n: usize,
-    /// Shared outbox: `emit` fills it, the engine drains it; its wire
-    /// pool is refilled from absorbed messages.
-    outbox: Outbox,
+    /// The delivery plan: which (from, to) links exist and how they map
+    /// to slots.
+    links: LinkTable,
+    /// Node → owning shard (contiguous balanced ranges).
+    node_shard: Vec<u32>,
+    /// Per-shard scratch; a single entry in the default serial engine.
+    shards: Vec<ShardScratch>,
     /// Arrival event queue, reused across phases.
     queue: BinaryHeap<Arrival>,
-    /// Per-destination frame being assembled during one node's emit
-    /// (index = destination node); empty frames between uses.
-    dest_frames: Vec<Frame>,
-    /// Destinations touched by the current emit, in first-send order.
-    dests: Vec<usize>,
-    /// Flat delivery slots: `(from * n + to) * 2 + channel_tag`.
+    /// Link-keyed delivery slots: `links.slot_index(from, to, channel)`.
     slots: Vec<VecDeque<Wire>>,
-    /// Frame shells (empty `msgs` vecs with capacity) for reuse.
-    frame_pool: Vec<Frame>,
-    /// Scratch for `NodeProgram::expects`.
-    expects_buf: Vec<(usize, Channel)>,
-    /// Scratch for the messages handed to `NodeProgram::absorb`.
-    absorb_buf: Vec<Wire>,
 }
 
 impl SimEngine {
+    /// Small-n convenience: the all-pairs dense plan, serial loop.
+    /// Panics past the dense footprint cap — size-aware callers (the
+    /// coordinator entry points) build a sparse [`LinkTable`] and use
+    /// [`SimEngine::with_links`] instead.
     pub fn new(n: usize, opts: SimOpts) -> SimEngine {
+        let links = LinkTable::dense(n)
+            .expect("dense delivery plan too large; build a sparse LinkTable and use with_links");
+        SimEngine::with_links(n, opts, links, 1)
+    }
+
+    /// Engine over an explicit delivery plan, with the event loop sharded
+    /// `shards` ways (clamped to [1, n]; 1 = the serial zero-allocation
+    /// loop). Results are bit-identical at every shard count.
+    pub fn with_links(n: usize, opts: SimOpts, links: LinkTable, shards: usize) -> SimEngine {
+        assert_eq!(links.n(), n, "link table sized for {n} nodes");
+        let k = shards.clamp(1, n.max(1));
+        let mut node_shard = vec![0u32; n];
+        let shards = (0..k)
+            .map(|s| {
+                let lo = s * n / k;
+                let hi = (s + 1) * n / k;
+                for owner in node_shard.iter_mut().take(hi).skip(lo) {
+                    *owner = s as u32;
+                }
+                ShardScratch::new(lo, hi, n)
+            })
+            .collect();
         let mut slots = Vec::new();
-        slots.resize_with(n * n * 2, VecDeque::new);
-        let mut dest_frames = Vec::new();
-        dest_frames.resize_with(n, Frame::default);
+        slots.resize_with(links.links() * 2, VecDeque::new);
         SimEngine {
             opts,
             clock: SimClock::new(n),
@@ -519,14 +905,11 @@ impl SimEngine {
             msgs_sent: vec![0; n],
             seq: 0,
             n,
-            outbox: Outbox::new(),
+            links,
+            node_shard,
+            shards,
             queue: BinaryHeap::new(),
-            dest_frames,
-            dests: Vec::new(),
             slots,
-            frame_pool: Vec::new(),
-            expects_buf: Vec::new(),
-            absorb_buf: Vec::new(),
         }
     }
 
@@ -534,16 +917,96 @@ impl SimEngine {
         &self.clock
     }
 
-    #[inline]
-    fn slot_index(&self, from: usize, to: usize, ch: Channel) -> usize {
-        (from * self.n + to) * 2 + channel_tag(ch) as usize
+    /// The delivery plan this engine routes over.
+    pub fn links(&self) -> &LinkTable {
+        &self.links
+    }
+
+    /// Emit pass: serial inline on one shard, scoped threads otherwise.
+    fn emit_phase(&mut self, programs: &mut [Box<dyn NodeProgram>], t: u64, phase: usize) {
+        let opts = &self.opts;
+        if self.shards.len() == 1 {
+            emit_shard(
+                &mut self.shards[0],
+                programs,
+                &mut self.clock.node_time,
+                &mut self.clock.nic_free,
+                &mut self.bytes_sent,
+                &mut self.msgs_sent,
+                opts,
+                t,
+                phase,
+            );
+        } else {
+            std::thread::scope(|scope| {
+                let mut progs = &mut programs[..];
+                let mut nt = &mut self.clock.node_time[..];
+                let mut nf = &mut self.clock.nic_free[..];
+                let mut bs = &mut self.bytes_sent[..];
+                let mut ms = &mut self.msgs_sent[..];
+                for s in self.shards.iter_mut() {
+                    let len = s.hi - s.lo;
+                    let (p, rest) = progs.split_at_mut(len);
+                    progs = rest;
+                    let (a, rest) = nt.split_at_mut(len);
+                    nt = rest;
+                    let (b, rest) = nf.split_at_mut(len);
+                    nf = rest;
+                    let (c, rest) = bs.split_at_mut(len);
+                    bs = rest;
+                    let (d, rest) = ms.split_at_mut(len);
+                    ms = rest;
+                    scope.spawn(move || emit_shard(s, p, a, b, c, d, opts, t, phase));
+                }
+            });
+        }
+        // Deterministic merge: shards in order = nodes in order, so the
+        // sequence numbers (and heap tie-breaks) match a serial run
+        // exactly.
+        for s in self.shards.iter_mut() {
+            self.clock.payload_bytes += std::mem::take(&mut s.payload_bytes);
+            self.clock.frame_bytes += std::mem::take(&mut s.frame_bytes);
+            self.clock.frames += std::mem::take(&mut s.frames);
+            self.clock.frames_dropped += std::mem::take(&mut s.frames_dropped);
+            for mut a in s.pending.drain(..) {
+                a.seq = self.seq;
+                self.seq += 1;
+                self.queue.push(a);
+            }
+        }
+    }
+
+    /// Absorb pass: receivers own disjoint receiver-major slot ranges, so
+    /// the slot table splits cleanly across shards.
+    fn absorb_phase(&mut self, programs: &mut [Box<dyn NodeProgram>], t: u64, phase: usize) {
+        let links = &self.links;
+        if self.shards.len() == 1 {
+            absorb_shard(&mut self.shards[0], programs, &mut self.slots, 0, links, t, phase);
+        } else {
+            std::thread::scope(|scope| {
+                let mut progs = &mut programs[..];
+                let mut slots = &mut self.slots[..];
+                let mut consumed = 0usize;
+                for s in self.shards.iter_mut() {
+                    let len = s.hi - s.lo;
+                    let (p, rest) = progs.split_at_mut(len);
+                    progs = rest;
+                    let end = links.row_start(s.hi) * 2;
+                    let (sl, rest) = slots.split_at_mut(end - consumed);
+                    slots = rest;
+                    let base = consumed;
+                    consumed = end;
+                    scope.spawn(move || absorb_shard(s, p, sl, base, links, t, phase));
+                }
+            });
+        }
     }
 
     /// Advance all programs through one synchronous iteration `t` (all
     /// communication phases), charging compute and network virtual time.
     pub fn step(&mut self, programs: &mut [Box<dyn NodeProgram>], t: u64) {
         let n = programs.len();
-        assert_eq!(n, self.clock.node_time.len(), "engine sized for {} nodes", n);
+        assert_eq!(n, self.n, "engine sized for {} nodes", self.n);
         let phases = programs[0].phases();
         debug_assert!(
             programs.iter().all(|p| p.phases() == phases),
@@ -555,109 +1018,32 @@ impl SimEngine {
         }
 
         for phase in 0..phases {
+            debug_assert!(
+                self.queue.is_empty() && self.shards.iter().all(|s| s.outbox.is_empty())
+            );
             // Emit: run each node's local computation, coalesce its sends
             // into one frame per destination, charge the NIC and the link.
-            debug_assert!(self.queue.is_empty() && self.outbox.is_empty());
-            for (i, prog) in programs.iter_mut().enumerate() {
-                prog.emit(t, phase, &mut self.outbox);
-                if self.outbox.is_empty() {
-                    continue;
-                }
-                // Group by destination preserving emit order, into the
-                // persistent per-destination frame slots.
-                debug_assert!(self.dests.is_empty());
-                for (to, ch, wire) in self.outbox.msgs.drain(..) {
-                    let frame = &mut self.dest_frames[to];
-                    if frame.msgs.is_empty() {
-                        self.dests.push(to);
-                    }
-                    frame.msgs.push((ch, wire));
-                }
-                // (take/restore keeps the borrow checker happy without
-                // losing the vec's capacity; `mem::take` swaps in an
-                // unallocated empty vec.)
-                let dests = std::mem::take(&mut self.dests);
-                for &to in &dests {
-                    let shell = self.frame_pool.pop().unwrap_or_default();
-                    let mut frame = std::mem::replace(&mut self.dest_frames[to], shell);
-                    if let Some(rt) = &self.opts.scenario {
-                        if !rt.live(i, t) || !rt.live(to, t) || rt.dropped_broadcast(t, phase, i) {
-                            // Condemned frame: it never reaches the NIC.
-                            // Payload buffers recycle straight back into
-                            // the emit pool, the shell into the frame
-                            // pool — no bytes, no latency, no charge.
-                            for (_, wire) in frame.msgs.drain(..) {
-                                self.outbox.recycle(wire);
-                            }
-                            self.frame_pool.push(frame);
-                            self.clock.frames_dropped += 1;
-                            continue;
-                        }
-                    }
-                    let link = self.opts.cost.link(i, to);
-                    let on_wire = frame.encoded_len();
-                    let start = self.clock.node_time[i].max(self.clock.nic_free[i]);
-                    let mut tx = link.tx_seconds(on_wire as f64);
-                    if let Some(rt) = &self.opts.scenario {
-                        // The bandwidth schedule scales link capacity, so
-                        // serialization time divides by the factor.
-                        tx /= rt.bw_factor(t);
-                    }
-                    self.clock.nic_free[i] = start + tx;
-                    self.bytes_sent[i] += frame.payload_bytes() as u64;
-                    self.msgs_sent[i] += frame.msgs.len() as u64;
-                    self.clock.payload_bytes += frame.payload_bytes() as u64;
-                    self.clock.frame_bytes += on_wire as u64;
-                    self.clock.frames += 1;
-                    self.queue.push(Arrival {
-                        time: start + tx + link.latency_s,
-                        seq: self.seq,
-                        from: i,
-                        to,
-                        frame,
-                    });
-                    self.seq += 1;
-                }
-                self.dests = dests;
-                self.dests.clear();
-            }
+            self.emit_phase(programs, t, phase);
 
             // Deliver in virtual-time order; a receiver's clock waits on
-            // its latest arrival. Wires move into their flat (from, to,
+            // its latest arrival. Wires move into their (from, to,
             // channel) slot; the emptied frame shell goes back to the
-            // pool.
+            // sending shard's pool.
             while let Some(a) = self.queue.pop() {
                 let nt = &mut self.clock.node_time[a.to];
                 *nt = nt.max(a.time);
                 let mut frame = a.frame;
                 for (ch, wire) in frame.msgs.drain(..) {
-                    let idx = self.slot_index(a.from, a.to, ch);
+                    let idx = self.links.slot_index(a.from, a.to, ch);
                     self.slots[idx].push_back(wire);
                 }
-                self.frame_pool.push(frame);
+                self.shards[self.node_shard[a.from] as usize].frame_pool.push(frame);
             }
 
             // Absorb: each node reads exactly what it expects; consumed
-            // payload buffers are recycled into the outbox pool.
-            for (i, prog) in programs.iter_mut().enumerate() {
-                self.expects_buf.clear();
-                prog.expects(t, phase, &mut self.expects_buf);
-                debug_assert!(self.absorb_buf.is_empty());
-                for &(from, ch) in &self.expects_buf {
-                    let idx = self.slot_index(from, i, ch);
-                    let wire = self.slots[idx].pop_front().unwrap_or_else(|| {
-                        panic!(
-                            "sim: node {i} expected a message from {from} on {ch:?} \
-                             at t={t} phase={phase} that was never sent"
-                        )
-                    });
-                    self.absorb_buf.push(wire);
-                }
-                prog.absorb(t, phase, &self.absorb_buf);
-                for wire in self.absorb_buf.drain(..) {
-                    self.outbox.recycle(wire);
-                }
-            }
+            // payload buffers are recycled into the receiving shard's
+            // outbox pool.
+            self.absorb_phase(programs, t, phase);
             debug_assert!(
                 self.slots.iter().all(|q| q.is_empty()),
                 "sim: undelivered messages at t={t} phase={phase}"
@@ -693,19 +1079,32 @@ impl SimEngine {
     }
 }
 
-/// Run `iters` synchronous iterations of `programs` on the event engine.
-pub fn run_sim(mut programs: Vec<Box<dyn NodeProgram>>, iters: usize, opts: SimOpts) -> SimRun {
-    let mut engine = SimEngine::new(programs.len(), opts);
+/// Run `iters` synchronous iterations of `programs` on an already-built
+/// engine (the path the coordinator uses: sparse links, configurable
+/// shard count).
+pub fn run_sim_on(
+    mut engine: SimEngine,
+    mut programs: Vec<Box<dyn NodeProgram>>,
+    iters: usize,
+) -> SimRun {
     for t in 0..iters as u64 {
         engine.step(&mut programs, t);
     }
     engine.finish(programs)
 }
 
+/// Run `iters` synchronous iterations of `programs` on the event engine
+/// with the small-n dense plan (see [`SimEngine::new`]).
+pub fn run_sim(programs: Vec<Box<dyn NodeProgram>>, iters: usize, opts: SimOpts) -> SimRun {
+    let engine = SimEngine::new(programs.len(), opts);
+    run_sim_on(engine, programs, iters)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::network::cost::NetworkModel;
+    use crate::topology::Topology;
 
     fn wire_of(bytes: &[u8]) -> Wire {
         Wire {
@@ -771,6 +1170,56 @@ mod tests {
                 "frame + {junk:?} must not decode"
             );
         }
+    }
+
+    #[test]
+    fn link_table_shapes_graph_and_hub() {
+        let ring = Graph::build(Topology::Ring, 8);
+        let lt = LinkTable::from_graph(&ring).unwrap();
+        assert_eq!(lt.links(), 16, "ring: 2 per node");
+        // Every graph edge maps to a distinct slot pair; both channels
+        // stay distinct.
+        assert_ne!(
+            lt.slot_index(7, 0, Channel::Gossip),
+            lt.slot_index(1, 0, Channel::Gossip)
+        );
+        assert_eq!(
+            lt.slot_index(7, 0, Channel::Gossip) + 1,
+            lt.slot_index(7, 0, Channel::Reduce)
+        );
+
+        let hub = LinkTable::hub(5, 0).unwrap();
+        assert_eq!(hub.links(), 8, "hub star: n-1 up + n-1 down");
+        // Leaves receive only from the hub; the hub from every leaf.
+        for leaf in 1..5 {
+            let _ = hub.slot_index(0, leaf, Channel::Reduce);
+            let _ = hub.slot_index(leaf, 0, Channel::Reduce);
+        }
+        // Receiver-major slot ranges are contiguous and exhaustive.
+        assert_eq!(hub.row_start(5) * 2, hub.links() * 2);
+    }
+
+    #[test]
+    fn dense_guard_rejects_huge_n_with_footprint() {
+        let err = LinkTable::dense(16384).unwrap_err().to_string();
+        assert!(err.contains("MiB"), "{err}");
+        assert!(err.contains("16384"), "{err}");
+        // The shipped sparse plans sail through at the same n.
+        let ring = Graph::build(Topology::Ring, 16384);
+        assert_eq!(LinkTable::from_graph(&ring).unwrap().links(), 2 * 16384);
+        assert_eq!(LinkTable::hub(16384, 0).unwrap().links(), 2 * 16383);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the engine's delivery plan")]
+    fn out_of_plan_send_panics() {
+        // Ring-echo programs send to ring neighbors; a hub plan only
+        // carries hub↔leaf traffic, so delivery must fail loudly.
+        let n = 6;
+        let mut programs = ring_programs(n);
+        let mut engine =
+            SimEngine::with_links(n, SimOpts::default(), LinkTable::hub(n, 0).unwrap(), 1);
+        engine.step(&mut programs, 0);
     }
 
     /// A trivial program: each node sends its id+t to both ring neighbors
@@ -857,6 +1306,62 @@ mod tests {
         assert!(run.frame_bytes > run.payload_bytes, "headers are charged");
         // Virtual time: iters sequential rounds, each ≥ one latency.
         assert!(run.virtual_time_s >= iters as f64 * 1e-3);
+    }
+
+    #[test]
+    fn sparse_plan_matches_dense_engine_bitwise() {
+        let n = 8;
+        let opts = || SimOpts {
+            cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+            compute_per_iter_s: 0.01,
+            scenario: None,
+        };
+        let dense = run_sim(ring_programs(n), 30, opts());
+        let graph = Graph::build(Topology::Ring, n);
+        let sparse = run_sim_on(
+            SimEngine::with_links(n, opts(), LinkTable::from_graph(&graph).unwrap(), 1),
+            ring_programs(n),
+            30,
+        );
+        assert_eq!(dense.virtual_time_s.to_bits(), sparse.virtual_time_s.to_bits());
+        assert_eq!(dense.frame_bytes, sparse.frame_bytes);
+        assert_eq!(dense.mean_losses(), sparse.mean_losses());
+    }
+
+    #[test]
+    fn sharded_runs_are_bit_identical() {
+        // Drops + NIC contention + compute: everything that could skew
+        // under a racy merge. Shard counts 1/2/4 must agree bitwise
+        // (acceptance criterion).
+        let run_with = |shards: usize| {
+            let n = 6;
+            let rt = drop_runtime(n, "drop_p20", 0x51a2d);
+            let programs = lossy_programs(n, &rt);
+            let opts = SimOpts {
+                cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+                compute_per_iter_s: 0.01,
+                scenario: Some(rt),
+            };
+            let engine =
+                SimEngine::with_links(n, opts, LinkTable::dense(n).unwrap(), shards);
+            run_sim_on(engine, programs, 30)
+        };
+        let serial = run_with(1);
+        for shards in [2, 4] {
+            let sharded = run_with(shards);
+            assert_eq!(
+                serial.virtual_time_s.to_bits(),
+                sharded.virtual_time_s.to_bits(),
+                "virtual time at {shards} shards"
+            );
+            assert_eq!(serial.frame_bytes, sharded.frame_bytes);
+            assert_eq!(serial.frames_dropped, sharded.frames_dropped);
+            assert_eq!(serial.mean_losses(), sharded.mean_losses());
+            for (a, b) in serial.reports.iter().zip(&sharded.reports) {
+                assert_eq!(a.final_x, b.final_x);
+                assert_eq!(a.bytes_sent, b.bytes_sent);
+            }
+        }
     }
 
     #[test]
@@ -947,23 +1452,33 @@ mod tests {
     #[test]
     fn engine_scratch_reaches_steady_state() {
         // After warm-up the pools neither grow nor drain: every wire and
-        // frame taken in a phase comes back by the end of it.
-        let n = 6;
-        let mut programs = ring_programs(n);
-        let mut engine = SimEngine::new(n, SimOpts::default());
-        for t in 0..3u64 {
-            engine.step(&mut programs, t);
+        // frame taken in a phase comes back by the end of it — on the
+        // dense plan and on the sparse one.
+        let engines: [SimEngine; 2] = [
+            SimEngine::new(6, SimOpts::default()),
+            SimEngine::with_links(
+                6,
+                SimOpts::default(),
+                LinkTable::from_graph(&Graph::build(Topology::Ring, 6)).unwrap(),
+                1,
+            ),
+        ];
+        for mut engine in engines {
+            let mut programs = ring_programs(6);
+            for t in 0..3u64 {
+                engine.step(&mut programs, t);
+            }
+            let pool_wires = engine.shards[0].outbox.pool.len();
+            let pool_frames = engine.shards[0].frame_pool.len();
+            assert!(pool_wires > 0, "wire pool fills during warm-up");
+            assert!(pool_frames > 0, "frame pool fills during warm-up");
+            for t in 3..10u64 {
+                engine.step(&mut programs, t);
+            }
+            assert_eq!(engine.shards[0].outbox.pool.len(), pool_wires);
+            assert_eq!(engine.shards[0].frame_pool.len(), pool_frames);
+            assert!(engine.slots.iter().all(|q| q.is_empty()));
         }
-        let pool_wires = engine.outbox.pool.len();
-        let pool_frames = engine.frame_pool.len();
-        assert!(pool_wires > 0, "wire pool fills during warm-up");
-        assert!(pool_frames > 0, "frame pool fills during warm-up");
-        for t in 3..10u64 {
-            engine.step(&mut programs, t);
-        }
-        assert_eq!(engine.outbox.pool.len(), pool_wires);
-        assert_eq!(engine.frame_pool.len(), pool_frames);
-        assert!(engine.slots.iter().all(|q| q.is_empty()));
     }
 
     fn drop_runtime(n: usize, scenario: &str, seed: u64) -> Arc<ScenarioRuntime> {
@@ -1061,15 +1576,23 @@ mod tests {
         for t in 0..5 {
             engine.step(&mut programs, t);
         }
-        let pool_wires = engine.outbox.pool.len();
-        let pool_frames = engine.frame_pool.len();
+        let pool_wires = engine.shards[0].outbox.pool.len();
+        let pool_frames = engine.shards[0].frame_pool.len();
         for t in 5..iters {
             engine.step(&mut programs, t);
         }
         // A dropped frame's wires and shell come straight back: the pools
         // neither grow nor drain, and no slot ever held a condemned wire.
-        assert_eq!(engine.outbox.pool.len(), pool_wires, "wire pool steady under drops");
-        assert_eq!(engine.frame_pool.len(), pool_frames, "frame pool steady under drops");
+        assert_eq!(
+            engine.shards[0].outbox.pool.len(),
+            pool_wires,
+            "wire pool steady under drops"
+        );
+        assert_eq!(
+            engine.shards[0].frame_pool.len(),
+            pool_frames,
+            "frame pool steady under drops"
+        );
         assert!(engine.slots.iter().all(|q| q.is_empty()));
         let clock = engine.clock().clone();
         assert!(clock.frames_dropped > 0, "30% drops must fire in {iters} rounds");
@@ -1131,19 +1654,24 @@ mod tests {
     }
 
     #[test]
-    fn scales_to_many_nodes() {
-        // The engine must handle n = 256 rings without breaking a sweat —
-        // the whole point of replacing thread-per-node for sweeps.
-        let run = run_sim(
-            ring_programs(256),
-            5,
+    fn scales_to_many_nodes_on_sparse_slots() {
+        // n = 4096 ring on the sparse plan: 8192 directed links instead
+        // of 16.7M dense pairs — the whole point of the CSR slot table.
+        let n = 4096;
+        let graph = Graph::build(Topology::Ring, n);
+        let engine = SimEngine::with_links(
+            n,
             SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
                 compute_per_iter_s: 0.0,
                 scenario: None,
             },
+            LinkTable::from_graph(&graph).unwrap(),
+            1,
         );
-        assert_eq!(run.reports.len(), 256);
+        assert_eq!(engine.links().links(), 2 * n);
+        let run = run_sim_on(engine, ring_programs(n), 5);
+        assert_eq!(run.reports.len(), n);
         assert!(run.virtual_time_s > 0.0);
     }
 }

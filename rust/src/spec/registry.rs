@@ -20,8 +20,8 @@ use crate::algorithms::{
 use crate::coordinator::program;
 use crate::metrics::Table;
 use crate::models::GradientModel;
-use crate::network::sim::{NodeProgram, SimOpts};
-use crate::topology::Topology;
+use crate::network::sim::{CommPattern, NodeProgram, SimOpts};
+use crate::topology::{Graph, Topology};
 
 /// Constructor for the single-process reference algorithm.
 pub type MakeReference = fn(AlgoConfig, &[f32], usize) -> Box<dyn Algorithm>;
@@ -51,6 +51,9 @@ pub struct AlgoEntry {
     pub caps: AlgoCaps,
     /// One-line description for `decomp list`.
     pub summary: &'static str,
+    /// Which links this algorithm's messages travel — sizes the sim
+    /// engine's delivery-slot table (graph edges vs a hub star).
+    pub comm: CommPattern,
     trace: TraceName,
     pub make_reference: MakeReference,
     pub make_program: MakeProgram,
@@ -106,6 +109,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             churn_safe: true,
         },
         summary: "D-PSGD (Lian et al., 2017): full-precision gossip, the decentralized baseline",
+        comm: CommPattern::Gossip,
         trace: TraceName::Fixed("dpsgd_fp32"),
         make_reference: mk_dpsgd,
         make_program: program::dpsgd_program,
@@ -121,6 +125,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             churn_safe: false,
         },
         summary: "DCD-PSGD (Alg. 1): compressed model differences over literal neighbor replicas",
+        comm: CommPattern::Gossip,
         trace: TraceName::WithCompressor("dcd"),
         make_reference: mk_dcd,
         make_program: program::dcd_program,
@@ -136,6 +141,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             churn_safe: false,
         },
         summary: "ECD-PSGD (Alg. 2): compressed extrapolations over neighbor estimates",
+        comm: CommPattern::Gossip,
         trace: TraceName::WithCompressor("ecd"),
         make_reference: mk_ecd,
         make_program: program::ecd_program,
@@ -151,6 +157,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             churn_safe: true,
         },
         summary: "naively compressed gossip: the Fig. 1 negative example (stalls by design)",
+        comm: CommPattern::Gossip,
         trace: TraceName::WithCompressor("naive"),
         make_reference: mk_naive,
         make_program: program::naive_program,
@@ -166,6 +173,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             churn_safe: false,
         },
         summary: "centralized Allreduce SGD (hub-rooted reduce + broadcast), fp32",
+        comm: CommPattern::HubReduce,
         trace: TraceName::Fixed("allreduce_fp32"),
         make_reference: mk_allreduce,
         make_program: program::allreduce_program,
@@ -181,6 +189,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             churn_safe: false,
         },
         summary: "QSGD-style Allreduce: hub averages compressed gradients",
+        comm: CommPattern::HubReduce,
         trace: TraceName::WithCompressor("allreduce"),
         make_reference: mk_qallreduce,
         make_program: program::qallreduce_program,
@@ -197,6 +206,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
         },
         summary: "CHOCO-SGD (Koloskova et al., 2019): error-feedback gossip over public copies; \
                   admits biased and link-state codecs",
+        comm: CommPattern::Gossip,
         trace: TraceName::WithCompressor("choco"),
         make_reference: mk_choco,
         make_program: program::choco_program,
@@ -213,6 +223,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
         },
         summary: "DeepSqueeze (Tang et al., 2019): error-compensated compressed-model gossip \
                   under eta-softened mixing",
+        comm: CommPattern::Gossip,
         trace: TraceName::WithCompressor("deepsqueeze"),
         make_reference: mk_deepsqueeze,
         make_program: program::deepsqueeze_program,
@@ -430,14 +441,26 @@ pub fn list_tables() -> Vec<Table> {
         ]);
     }
     let mut topos = Table::new(
-        "registry: topologies",
-        &["pattern", "example", "constraint", "summary"],
+        "registry: topologies (edges/max_degree at a sample n — what sizes the sim \
+         engine's delivery-slot table)",
+        &["pattern", "example", "constraint", "sample_n", "edges", "max_degree", "summary"],
     );
     for f in TOPOLOGY_FAMILIES.iter() {
+        let topo: Topology = f.example.parse().expect("registry example parses");
+        // Torus examples fix their own n; everything else samples at 256
+        // (a power of two, so the hypercube example builds too).
+        let sample_n = match topo {
+            Topology::Torus2d { rows, cols } => rows * cols,
+            _ => 256,
+        };
+        let g = Graph::build(topo, sample_n);
         topos.row(vec![
             f.pattern.into(),
             f.example.into(),
             f.constraint.into(),
+            sample_n.to_string(),
+            g.edge_count().to_string(),
+            g.max_degree().to_string(),
             f.summary.into(),
         ]);
     }
@@ -561,5 +584,11 @@ mod tests {
         for f in TOPOLOGY_FAMILIES.iter() {
             f.example.parse::<Topology>().unwrap();
         }
+        // The topology table's sample columns are live numbers: a ring at
+        // the sample n = 256 has 256 edges and degree 2.
+        let ring = &tables[2].rows[0];
+        assert_eq!(ring[3], "256");
+        assert_eq!(ring[4], "256");
+        assert_eq!(ring[5], "2");
     }
 }

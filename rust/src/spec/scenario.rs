@@ -27,14 +27,15 @@
 //!
 //! Churn masks are resolved once at construction into masked
 //! Metropolis–Hastings rows (see
-//! [`crate::topology::masked_metropolis_weights`]); a mask that leaves a
-//! live node with zero live neighbors is a construction-time error, not
-//! a mid-run panic.
+//! [`crate::topology::masked_metropolis_rows`] — sparse, O(edges), no
+//! dense n×n matrix even at n = 16384); a mask that leaves a live node
+//! with zero live neighbors is a construction-time error, not a mid-run
+//! panic.
 //!
 //! [`ExperimentSpec`]: super::ExperimentSpec
 
 use super::SpecParseError;
-use crate::topology::{masked_metropolis_weights, MixingMatrix};
+use crate::topology::{masked_metropolis_rows, MaskedRows, MixingMatrix};
 use crate::util::rng::Pcg64;
 use std::fmt;
 use std::str::FromStr;
@@ -262,8 +263,7 @@ pub struct ScenarioRuntime {
     /// rejoin boundary: the churned set plus its graph neighborhood
     /// (every stream some frozen node holds a stale copy of).
     needs_reset: Vec<bool>,
-    masked_self: Vec<f32>,
-    masked_nbrs: Vec<Vec<f32>>,
+    masked: Option<MaskedRows>,
 }
 
 impl ScenarioRuntime {
@@ -281,8 +281,7 @@ impl ScenarioRuntime {
         let n = mixing.n();
         let mut is_churned = vec![false; n];
         let mut needs_reset = vec![false; n];
-        let mut masked_self = Vec::new();
-        let mut masked_nbrs = Vec::new();
+        let mut masked = None;
         if let Some(c) = spec.churn {
             let k = ((n * c.percent as usize) / 100).max(1);
             let mut rng = Pcg64::new(seed, 0x5ce0);
@@ -299,11 +298,7 @@ impl ScenarioRuntime {
                 }
             }
             let live: Vec<bool> = is_churned.iter().map(|&c| !c).collect();
-            let w = masked_metropolis_weights(graph, &live)?;
-            masked_self = (0..n).map(|i| w[(i, i)] as f32).collect();
-            masked_nbrs = (0..n)
-                .map(|i| graph.neighbors[i].iter().map(|&j| w[(i, j)] as f32).collect())
-                .collect();
+            masked = Some(masked_metropolis_rows(graph, &live)?);
         }
         Ok(ScenarioRuntime {
             spec: *spec,
@@ -312,8 +307,7 @@ impl ScenarioRuntime {
             timing,
             is_churned,
             needs_reset,
-            masked_self,
-            masked_nbrs,
+            masked,
         })
     }
 
@@ -363,13 +357,13 @@ impl ScenarioRuntime {
 
     /// Masked-row W_ii for the churn window.
     pub fn masked_self_weight(&self, node: usize) -> f32 {
-        self.masked_self[node]
+        self.masked.as_ref().expect("no churn scheduled").self_weight[node]
     }
 
     /// Masked-row neighbor weights (aligned with `graph.neighbors[node]`;
     /// dead neighbors carry weight zero).
     pub fn masked_neighbor_weights(&self, node: usize) -> &[f32] {
-        &self.masked_nbrs[node]
+        self.masked.as_ref().expect("no churn scheduled").neighbor_weights(node)
     }
 
     /// Bandwidth multiplier at iteration `t` under the square-wave

@@ -180,6 +180,17 @@ impl Graph {
         self.neighbors.iter().map(|v| v.len()).sum::<usize>() / 2
     }
 
+    /// Iterate every undirected edge exactly once as `(u, v)` with
+    /// `u < v`, in lexicographic order (neighbor lists are sorted). This
+    /// is the traversal the sparse structures build from — CSR mixing
+    /// rows, the engine's edge-keyed delivery slots — so edge order, and
+    /// with it slot order, is a function of the graph alone.
+    pub fn edges(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.neighbors.iter().enumerate().flat_map(|(u, nbrs)| {
+            nbrs.iter().filter(move |&&v| v > u).map(move |&v| (u, v))
+        })
+    }
+
     pub fn is_connected(&self) -> bool {
         if self.n == 0 {
             return true;
@@ -302,6 +313,22 @@ mod tests {
             assert!(g.is_connected(), "{t:?}");
             assert!(g.is_valid_undirected(), "{t:?}");
         }
+    }
+
+    #[test]
+    fn edges_iterate_each_undirected_edge_once() {
+        let g = Graph::build(Topology::Torus2d { rows: 3, cols: 3 }, 9);
+        let edges: Vec<(usize, usize)> = g.edges().collect();
+        assert_eq!(edges.len(), g.edge_count());
+        let mut sorted = edges.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted, edges, "lexicographic and duplicate-free");
+        for &(u, v) in &edges {
+            assert!(u < v);
+            assert!(g.neighbors[u].contains(&v));
+        }
+        assert_eq!(Graph::build(Topology::Ring, 2).edges().collect::<Vec<_>>(), vec![(0, 1)]);
     }
 
     #[test]

@@ -1,66 +1,187 @@
-//! Doubly stochastic mixing matrices over a graph, with spectral stats.
+//! Doubly stochastic mixing matrices over a graph, stored sparsely.
+//!
+//! The runtime representation is CSR: one `f32` per directed edge,
+//! aligned index-for-index with the graph's sorted neighbor lists, plus
+//! the diagonal — O(edges) memory, so a ring at n = 16384 costs ~128 KiB
+//! where the dense matrix would cost 2 GiB. The dense `Mat` (and the
+//! O(n³) Jacobi spectral statistics derived from it) is attached only up
+//! to [`MixingMatrix::DENSE_ORACLE_MAX`] nodes: it serves the
+//! theory-facing surfaces (`decomp spectra`, `dcd_alpha_bound`) and the
+//! equivalence tests, never the training hot path.
+//!
+//! Bitwise contract: the sparse constructors reproduce the dense weights
+//! exactly. Uniform weights are a single shared constant. Metropolis
+//! diagonals are `1 − Σ_j W_ij` where the dense path sums the whole row
+//! in index order — adding an exact `0.0` never changes an f64, so
+//! summing only the (sorted) nonzero neighbor entries in the same order
+//! yields bit-identical diagonals. `rust/tests/properties.rs` pins this
+//! across every topology family; a debug assertion here re-checks it on
+//! each small-n construction.
 
 use super::graph::Graph;
 use crate::linalg::eig::{spectral_stats, SpectralStats};
 use crate::linalg::mat::Mat;
 
+/// The dense small-n companion: the full W and its spectrum.
+#[derive(Debug, Clone)]
+struct DenseOracle {
+    w: Mat,
+    stats: SpectralStats,
+}
+
 /// A symmetric doubly stochastic mixing matrix W bound to its graph,
-/// together with the spectral quantities the paper's theory uses.
+/// stored as CSR rows over the graph's neighbor lists.
 #[derive(Debug, Clone)]
 pub struct MixingMatrix {
-    pub w: Mat,
     pub graph: Graph,
-    pub stats: SpectralStats,
-    /// W_ii and the per-neighbor weights, cached in the layout the
-    /// algorithms consume: for node i, `weights[i][k]` pairs with
-    /// `graph.neighbors[i][k]`, and `self_weight[i]` is W_ii.
+    /// W_ii per node.
     pub self_weight: Vec<f32>,
-    pub neighbor_weights: Vec<Vec<f32>>,
+    /// Row extents into `nbr_weights`: node i's off-diagonal weights are
+    /// `nbr_weights[row_offsets[i]..row_offsets[i+1]]`, pairing
+    /// index-for-index with `graph.neighbors[i]`.
+    row_offsets: Vec<usize>,
+    nbr_weights: Vec<f32>,
+    /// Dense W + spectral stats, present only when
+    /// `n <= DENSE_ORACLE_MAX`.
+    dense: Option<DenseOracle>,
 }
 
 impl MixingMatrix {
-    fn from_w(w: Mat, graph: Graph) -> MixingMatrix {
-        debug_assert!(is_doubly_stochastic(&w, 1e-9));
-        let stats = spectral_stats(&w);
-        let n = graph.n;
-        let self_weight: Vec<f32> = (0..n).map(|i| w[(i, i)] as f32).collect();
-        let neighbor_weights: Vec<Vec<f32>> = (0..n)
-            .map(|i| {
-                graph.neighbors[i]
-                    .iter()
-                    .map(|&j| w[(i, j)] as f32)
-                    .collect()
-            })
-            .collect();
-        MixingMatrix {
-            w,
+    /// Largest node count for which the dense oracle (full `Mat` +
+    /// Jacobi spectral stats) is materialized. Every theory surface in
+    /// the tree runs at n ≤ 128; the cap keeps n = 16384 construction at
+    /// O(edges) instead of O(n³).
+    pub const DENSE_ORACLE_MAX: usize = 512;
+
+    fn from_rows(
+        graph: Graph,
+        self_weight: Vec<f32>,
+        row_offsets: Vec<usize>,
+        nbr_weights: Vec<f32>,
+        dense_w: impl FnOnce(&Graph) -> Mat,
+    ) -> MixingMatrix {
+        debug_assert_eq!(row_offsets.len(), graph.n + 1);
+        let dense = (graph.n <= Self::DENSE_ORACLE_MAX).then(|| {
+            let w = dense_w(&graph);
+            debug_assert!(is_doubly_stochastic(&w, 1e-9));
+            let stats = spectral_stats(&w);
+            DenseOracle { w, stats }
+        });
+        let m = MixingMatrix {
             graph,
-            stats,
             self_weight,
-            neighbor_weights,
+            row_offsets,
+            nbr_weights,
+            dense,
+        };
+        #[cfg(debug_assertions)]
+        if let Some(d) = &m.dense {
+            for i in 0..m.graph.n {
+                assert!(m.self_weight[i].to_bits() == (d.w[(i, i)] as f32).to_bits());
+                for (k, &j) in m.graph.neighbors[i].iter().enumerate() {
+                    assert!(m.neighbor_weights(i)[k].to_bits() == (d.w[(i, j)] as f32).to_bits());
+                }
+            }
         }
+        m
     }
 
     /// Uniform weights — valid only for regular graphs.
     pub fn uniform(graph: Graph) -> MixingMatrix {
-        let w = uniform_neighbor_weights(&graph);
-        Self::from_w(w, graph)
+        let n = graph.n;
+        let d0 = graph.degree(0);
+        assert!(
+            (0..n).all(|i| graph.degree(i) == d0),
+            "uniform weights require a regular graph; use metropolis_weights"
+        );
+        let wgt = (1.0 / (d0 as f64 + 1.0)) as f32;
+        let (row_offsets, edges) = csr_offsets(&graph);
+        Self::from_rows(
+            graph,
+            vec![wgt; n],
+            row_offsets,
+            vec![wgt; edges],
+            uniform_neighbor_weights,
+        )
     }
 
     /// Metropolis–Hastings weights — valid for any connected graph.
     pub fn metropolis(graph: Graph) -> MixingMatrix {
-        let w = metropolis_weights(&graph);
-        Self::from_w(w, graph)
+        let n = graph.n;
+        let mut self_weight = Vec::with_capacity(n);
+        let mut row_offsets = Vec::with_capacity(n + 1);
+        let mut nbr_weights = Vec::with_capacity(graph.edge_count() * 2);
+        row_offsets.push(0);
+        for i in 0..n {
+            // Diagonal = 1 − Σ_j W_ij over the sorted neighbors in index
+            // order; bit-identical to the dense full-row scan (the dense
+            // row's extra terms are exact zeros).
+            let mut off = 0.0f64;
+            for &j in &graph.neighbors[i] {
+                let wij = 1.0 / (1.0 + graph.degree(i).max(graph.degree(j)) as f64);
+                off += wij;
+                nbr_weights.push(wij as f32);
+            }
+            self_weight.push((1.0 - off) as f32);
+            row_offsets.push(nbr_weights.len());
+        }
+        Self::from_rows(graph, self_weight, row_offsets, nbr_weights, metropolis_weights)
+    }
+
+    /// Node i's off-diagonal weights, pairing index-for-index with
+    /// `graph.neighbors[i]`.
+    pub fn neighbor_weights(&self, i: usize) -> &[f32] {
+        &self.nbr_weights[self.row_offsets[i]..self.row_offsets[i + 1]]
+    }
+
+    /// The spectral statistics, when the dense oracle was materialized
+    /// (n ≤ [`Self::DENSE_ORACLE_MAX`]).
+    pub fn try_stats(&self) -> Option<&SpectralStats> {
+        self.dense.as_ref().map(|d| &d.stats)
+    }
+
+    /// The spectral statistics. Panics past the dense-oracle cap — use
+    /// [`Self::try_stats`] where large n can reach.
+    pub fn stats(&self) -> &SpectralStats {
+        self.try_stats().unwrap_or_else(|| {
+            panic!(
+                "spectral stats are only computed for n <= {} (Jacobi is O(n^3)); n = {}",
+                Self::DENSE_ORACLE_MAX,
+                self.n()
+            )
+        })
+    }
+
+    /// The dense W, when materialized (n ≤ [`Self::DENSE_ORACLE_MAX`]).
+    pub fn try_w(&self) -> Option<&Mat> {
+        self.dense.as_ref().map(|d| &d.w)
+    }
+
+    /// The dense W — a small-n test/theory oracle, never runtime state.
+    /// Panics past the dense-oracle cap; use [`Self::try_w`] where large
+    /// n can reach.
+    pub fn w(&self) -> &Mat {
+        self.try_w().unwrap_or_else(|| {
+            panic!(
+                "dense W is only materialized for n <= {} (O(n^2) memory); n = {}",
+                Self::DENSE_ORACLE_MAX,
+                self.n()
+            )
+        })
     }
 
     /// The maximal unbiased-compression signal-to-noise ratio α that
     /// Theorem 1 admits for DCD-PSGD on this matrix:
     /// α < (1−ρ) / (2µ)  ⇔  (1−ρ)² − 4µ²α² > 0.
+    ///
+    /// Needs the spectral stats, so it carries the same small-n bound as
+    /// [`Self::stats`].
     pub fn dcd_alpha_bound(&self) -> f64 {
-        if self.stats.mu == 0.0 {
+        let stats = self.stats();
+        if stats.mu == 0.0 {
             f64::INFINITY
         } else {
-            self.stats.gap / (2.0 * self.stats.mu)
+            stats.gap / (2.0 * stats.mu)
         }
     }
 
@@ -69,8 +190,22 @@ impl MixingMatrix {
     }
 }
 
+/// CSR row offsets for a graph's neighbor lists (and the total directed
+/// edge count).
+fn csr_offsets(graph: &Graph) -> (Vec<usize>, usize) {
+    let mut offsets = Vec::with_capacity(graph.n + 1);
+    let mut total = 0usize;
+    offsets.push(0);
+    for nbrs in &graph.neighbors {
+        total += nbrs.len();
+        offsets.push(total);
+    }
+    (offsets, total)
+}
+
 /// W_ij = 1/(deg+1) on edges and the diagonal. Doubly stochastic iff the
 /// graph is regular; panics otherwise (use `metropolis_weights`).
+/// Dense (O(n²)) — the test oracle for [`MixingMatrix::uniform`].
 pub fn uniform_neighbor_weights(graph: &Graph) -> Mat {
     let n = graph.n;
     let d0 = graph.degree(0);
@@ -91,6 +226,7 @@ pub fn uniform_neighbor_weights(graph: &Graph) -> Mat {
 
 /// Metropolis–Hastings weights: W_ij = 1/(1+max(d_i,d_j)) on edges,
 /// diagonal absorbs the slack. Symmetric doubly stochastic on any graph.
+/// Dense (O(n²)) — the test oracle for [`MixingMatrix::metropolis`].
 pub fn metropolis_weights(graph: &Graph) -> Mat {
     let n = graph.n;
     let mut w = Mat::zeros(n, n);
@@ -106,34 +242,41 @@ pub fn metropolis_weights(graph: &Graph) -> Mat {
     w
 }
 
+/// Reject a churn mask that leaves a live node with zero live neighbors
+/// — such a mask would reach the per-node weight caches as an all-self
+/// row and silently freeze that node's consensus.
+fn check_live_mask(graph: &Graph, live: &[bool]) -> anyhow::Result<()> {
+    assert_eq!(live.len(), graph.n, "mask length must match node count");
+    for i in 0..graph.n {
+        if live[i] {
+            let live_degree = graph.neighbors[i].iter().filter(|&&j| live[j]).count();
+            anyhow::ensure!(
+                live_degree > 0,
+                "degenerate churn mask: node {i} is live but has zero live neighbors; \
+                 pick a smaller churn fraction or a denser topology"
+            );
+        }
+    }
+    Ok(())
+}
+
 /// Metropolis–Hastings weights over the subgraph induced by `live`:
 /// W_ij = 1/(1+max(d_i, d_j)) with degrees counted over live neighbors
 /// only, dead rows/columns pinned to the identity, diagonals absorbing
 /// the slack. The full n×n result is symmetric doubly stochastic, so the
 /// same invariant checks apply to masked and unmasked matrices alike.
 ///
-/// Errors (instead of producing a defective row) when a live node has
-/// zero live neighbors — a degenerate churn mask would otherwise reach
-/// the per-node weight caches as an all-self row and silently freeze
-/// that node's consensus.
+/// Dense (O(n²)) — the test oracle for [`masked_metropolis_rows`], which
+/// is what the scenario runtime actually stores.
 pub fn masked_metropolis_weights(graph: &Graph, live: &[bool]) -> anyhow::Result<Mat> {
-    assert_eq!(live.len(), graph.n, "mask length must match node count");
+    check_live_mask(graph, live)?;
     let n = graph.n;
-    let live_degree = |i: usize| graph.neighbors[i].iter().filter(|&&j| live[j]).count();
-    for i in 0..n {
-        if live[i] {
-            anyhow::ensure!(
-                live_degree(i) > 0,
-                "degenerate churn mask: node {i} is live but has zero live neighbors; \
-                 pick a smaller churn fraction or a denser topology"
-            );
-        }
-    }
     let mut w = Mat::zeros(n, n);
     for i in 0..n {
         if !live[i] {
             continue;
         }
+        let live_degree = |k: usize| graph.neighbors[k].iter().filter(|&&j| live[j]).count();
         for &j in &graph.neighbors[i] {
             if live[j] {
                 w[(i, j)] = 1.0 / (1.0 + live_degree(i).max(live_degree(j)) as f64);
@@ -145,6 +288,66 @@ pub fn masked_metropolis_weights(graph: &Graph, live: &[bool]) -> anyhow::Result
         w[(i, i)] = 1.0 - off;
     }
     Ok(w)
+}
+
+/// The masked Metropolis rows in the same CSR layout [`MixingMatrix`]
+/// uses: per-node self weight plus one `f32` per directed graph edge
+/// (dead neighbors carry an explicit 0.0 so rows stay aligned with
+/// `graph.neighbors`).
+#[derive(Debug, Clone)]
+pub struct MaskedRows {
+    pub self_weight: Vec<f32>,
+    row_offsets: Vec<usize>,
+    nbr_weights: Vec<f32>,
+}
+
+impl MaskedRows {
+    /// Node i's masked off-diagonal weights, pairing index-for-index
+    /// with `graph.neighbors[i]`.
+    pub fn neighbor_weights(&self, i: usize) -> &[f32] {
+        &self.nbr_weights[self.row_offsets[i]..self.row_offsets[i + 1]]
+    }
+}
+
+/// Sparse construction of [`masked_metropolis_weights`]: O(edges) work
+/// and memory, bit-identical rows (the dense diagonal scan only adds
+/// exact zeros beyond the neighbor entries). Errors on the same
+/// degenerate masks.
+pub fn masked_metropolis_rows(graph: &Graph, live: &[bool]) -> anyhow::Result<MaskedRows> {
+    check_live_mask(graph, live)?;
+    let n = graph.n;
+    let live_degree = |k: usize| graph.neighbors[k].iter().filter(|&&j| live[j]).count();
+    let mut self_weight = Vec::with_capacity(n);
+    let mut row_offsets = Vec::with_capacity(n + 1);
+    let mut nbr_weights = Vec::with_capacity(graph.edge_count() * 2);
+    row_offsets.push(0);
+    for i in 0..n {
+        if !live[i] {
+            // Dead row: identity diagonal, explicit zeros for alignment.
+            nbr_weights.extend(graph.neighbors[i].iter().map(|_| 0.0f32));
+            self_weight.push(1.0);
+            row_offsets.push(nbr_weights.len());
+            continue;
+        }
+        let di = live_degree(i);
+        let mut off = 0.0f64;
+        for &j in &graph.neighbors[i] {
+            if live[j] {
+                let wij = 1.0 / (1.0 + di.max(live_degree(j)) as f64);
+                off += wij;
+                nbr_weights.push(wij as f32);
+            } else {
+                nbr_weights.push(0.0);
+            }
+        }
+        self_weight.push((1.0 - off) as f32);
+        row_offsets.push(nbr_weights.len());
+    }
+    Ok(MaskedRows {
+        self_weight,
+        row_offsets,
+        nbr_weights,
+    })
 }
 
 /// Check W = Wᵀ, W·1 = 1, 1ᵀ·W = 1ᵀ, W_ij ≥ 0 allowed to be slightly
@@ -176,16 +379,16 @@ mod tests {
     fn ring8_uniform_matches_paper_setup() {
         let g = Graph::build(Topology::Ring, 8);
         let m = MixingMatrix::uniform(g);
-        assert!(is_doubly_stochastic(&m.w, 1e-12));
+        assert!(is_doubly_stochastic(m.w(), 1e-12));
         // Each row: 1/3 self + two 1/3 neighbors.
-        assert!((m.w[(0, 0)] - 1.0 / 3.0).abs() < 1e-12);
-        assert!((m.w[(0, 1)] - 1.0 / 3.0).abs() < 1e-12);
-        assert!((m.w[(0, 7)] - 1.0 / 3.0).abs() < 1e-12);
-        assert_eq!(m.w[(0, 2)], 0.0);
+        assert!((m.w()[(0, 0)] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((m.w()[(0, 1)] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((m.w()[(0, 7)] - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.w()[(0, 2)], 0.0);
         // Spectrum of the circulant: (1 + 2cos(2πk/8))/3.
         let expect_rho = (1.0 + 2.0 * (std::f64::consts::TAU / 8.0).cos()) / 3.0;
-        assert!((m.stats.rho - expect_rho).abs() < 1e-9, "{}", m.stats.rho);
-        assert!(m.stats.gap > 0.0);
+        assert!((m.stats().rho - expect_rho).abs() < 1e-9, "{}", m.stats().rho);
+        assert!(m.stats().gap > 0.0);
     }
 
     #[test]
@@ -193,25 +396,25 @@ mod tests {
         let g = Graph::build(Topology::FullyConnected, 6);
         let m = MixingMatrix::uniform(g);
         // W = (1/n) 11^T → all non-leading eigenvalues are 0.
-        assert!(m.stats.rho.abs() < 1e-9);
-        assert!((m.stats.mu - 1.0).abs() < 1e-9);
+        assert!(m.stats().rho.abs() < 1e-9);
+        assert!((m.stats().mu - 1.0).abs() < 1e-9);
     }
 
     #[test]
     fn metropolis_on_star_is_doubly_stochastic() {
         let g = Graph::build(Topology::Star, 9);
         let m = MixingMatrix::metropolis(g);
-        assert!(is_doubly_stochastic(&m.w, 1e-12));
-        assert!(m.stats.rho < 1.0);
+        assert!(is_doubly_stochastic(m.w(), 1e-12));
+        assert!(m.stats().rho < 1.0);
     }
 
     #[test]
     fn metropolis_on_chain_is_doubly_stochastic() {
         let g = Graph::build(Topology::Chain, 10);
         let m = MixingMatrix::metropolis(g);
-        assert!(is_doubly_stochastic(&m.w, 1e-12));
-        assert!(m.stats.rho < 1.0);
-        assert!(m.stats.gap > 0.0);
+        assert!(is_doubly_stochastic(m.w(), 1e-12));
+        assert!(m.stats().rho < 1.0);
+        assert!(m.stats().gap > 0.0);
     }
 
     #[test]
@@ -222,11 +425,18 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "regular")]
+    fn sparse_uniform_rejects_irregular_graph() {
+        let g = Graph::build(Topology::Chain, 5);
+        MixingMatrix::uniform(g);
+    }
+
+    #[test]
     fn bigger_ring_smaller_gap() {
         let m8 = MixingMatrix::uniform(Graph::build(Topology::Ring, 8));
         let m16 = MixingMatrix::uniform(Graph::build(Topology::Ring, 16));
         // Paper §4.2: spectral gap decreases with more workers.
-        assert!(m16.stats.gap < m8.stats.gap);
+        assert!(m16.stats().gap < m8.stats().gap);
     }
 
     #[test]
@@ -234,19 +444,40 @@ mod tests {
         let m = MixingMatrix::uniform(Graph::build(Topology::Ring, 8));
         let bound = m.dcd_alpha_bound();
         assert!(bound > 0.0 && bound.is_finite());
-        assert!((bound - m.stats.gap / (2.0 * m.stats.mu)).abs() < 1e-12);
+        assert!((bound - m.stats().gap / (2.0 * m.stats().mu)).abs() < 1e-12);
     }
 
     #[test]
-    fn cached_weights_match_matrix() {
-        let g = Graph::build(Topology::Ring, 8);
-        let m = MixingMatrix::uniform(g);
-        for i in 0..8 {
-            assert!((m.self_weight[i] as f64 - m.w[(i, i)]).abs() < 1e-7);
-            for (k, &j) in m.graph.neighbors[i].iter().enumerate() {
-                assert!((m.neighbor_weights[i][k] as f64 - m.w[(i, j)]).abs() < 1e-7);
+    fn cached_weights_match_matrix_bitwise() {
+        for (topo, n) in [(Topology::Ring, 8), (Topology::Star, 9), (Topology::Chain, 7)] {
+            let g = Graph::build(topo, n);
+            let m = if matches!(topo, Topology::Ring) {
+                MixingMatrix::uniform(g)
+            } else {
+                MixingMatrix::metropolis(g)
+            };
+            for i in 0..n {
+                assert_eq!(m.self_weight[i].to_bits(), (m.w()[(i, i)] as f32).to_bits());
+                let row = m.neighbor_weights(i);
+                assert_eq!(row.len(), m.graph.neighbors[i].len());
+                for (k, &j) in m.graph.neighbors[i].iter().enumerate() {
+                    assert_eq!(row[k].to_bits(), (m.w()[(i, j)] as f32).to_bits());
+                }
             }
         }
+    }
+
+    #[test]
+    fn dense_oracle_absent_past_cap() {
+        // A ring just past the cap: the graph is cheap, the dense W and
+        // Jacobi spectrum are skipped, the CSR rows still work.
+        let n = MixingMatrix::DENSE_ORACLE_MAX + 1;
+        let m = MixingMatrix::uniform(Graph::build(Topology::Ring, n));
+        assert!(m.try_w().is_none());
+        assert!(m.try_stats().is_none());
+        let third = (1.0f64 / 3.0) as f32;
+        assert_eq!(m.self_weight[n - 1], third);
+        assert_eq!(m.neighbor_weights(0), &[third, third]);
     }
 
     #[test]
@@ -263,6 +494,26 @@ mod tests {
         assert_eq!(w[(2, 3)], 0.0);
         // Nodes 2 and 4 lost a neighbor; their live degree is 1.
         assert!((w[(2, 1)] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn masked_rows_match_dense_oracle_bitwise() {
+        let g = Graph::build(Topology::Torus2d { rows: 3, cols: 4 }, 12);
+        let mut live = vec![true; 12];
+        live[2] = false;
+        live[7] = false;
+        let rows = masked_metropolis_rows(&g, &live).unwrap();
+        let w = masked_metropolis_weights(&g, &live).unwrap();
+        for i in 0..12 {
+            assert_eq!(rows.self_weight[i].to_bits(), (w[(i, i)] as f32).to_bits(), "node {i}");
+            for (k, &j) in g.neighbors[i].iter().enumerate() {
+                assert_eq!(
+                    rows.neighbor_weights(i)[k].to_bits(),
+                    (w[(i, j)] as f32).to_bits(),
+                    "edge {i}->{j}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -286,6 +537,8 @@ mod tests {
         live[0] = false;
         let err = masked_metropolis_weights(&g, &live).unwrap_err().to_string();
         assert!(err.contains("zero live neighbors"), "{err}");
+        let err = masked_metropolis_rows(&g, &live).unwrap_err().to_string();
+        assert!(err.contains("zero live neighbors"), "{err}");
     }
 
     #[test]
@@ -293,7 +546,7 @@ mod tests {
         for topo in [Topology::Ring, Topology::Hypercube, Topology::FullyConnected] {
             let m = MixingMatrix::uniform(Graph::build(topo, 8));
             let ones = vec![1.0; 8];
-            let y = m.w.matvec(&ones);
+            let y = m.w().matvec(&ones);
             assert!(y.iter().all(|v| (v - 1.0).abs() < 1e-12));
         }
     }

@@ -12,6 +12,6 @@ mod mixing;
 
 pub use graph::{Graph, Topology};
 pub use mixing::{
-    is_doubly_stochastic, masked_metropolis_weights, metropolis_weights,
-    uniform_neighbor_weights, MixingMatrix,
+    is_doubly_stochastic, masked_metropolis_rows, masked_metropolis_weights, metropolis_weights,
+    uniform_neighbor_weights, MaskedRows, MixingMatrix,
 };

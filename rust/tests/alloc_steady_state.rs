@@ -5,9 +5,11 @@
 //! and for `choco_lowrank_r4@n64` (the link-state compressor family —
 //! its power-iteration factors and decode scratch are sized once at link
 //! build, and factor payloads cycle through the `Outbox` wire pool):
-//! every per-phase structure — arrival heap, flat delivery slots, frame
-//! shells, wire payload buffers, expects/absorb scratch — is persistent
-//! and pooled, so steady-state iterations only move bytes.
+//! every per-phase structure — arrival heap, link-keyed delivery slots,
+//! frame shells, wire payload buffers, expects/absorb scratch — is
+//! persistent and pooled, so steady-state iterations only move bytes.
+//! The same contract is pinned at n = 4096 on the sparse CSR slot table
+//! (`SimEngine::with_links`), where a dense plan would not even fit.
 //!
 //! Asserted with a counting `#[global_allocator]` wrapped around the
 //! system allocator. This file intentionally contains a single test
@@ -19,7 +21,7 @@ use decomp::compression;
 use decomp::coordinator::program::build_program;
 use decomp::data::{build_models, ModelKind, SynthSpec};
 use decomp::network::cost::{CostModel, NetworkModel};
-use decomp::network::sim::{NodeProgram, SimEngine, SimOpts};
+use decomp::network::sim::{LinkTable, NodeProgram, SimEngine, SimOpts};
 use decomp::spec::{ScenarioRuntime, ScenarioSpec};
 use decomp::topology::{Graph, MixingMatrix, Topology};
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -58,16 +60,29 @@ fn alloc_count() -> u64 {
     ALLOCS.load(Ordering::SeqCst)
 }
 
-/// Build the `@n64` sweep-cell shape (64-ring, dim-1024 quadratic
-/// shards, worst §5.2 condition) for one algorithm × compressor, run it
-/// to steady state, and return the allocation delta across the
-/// post-warm-up iterations.
+/// The `@n64` sweep-cell shape (64-ring, dim-1024 quadratic shards,
+/// worst §5.2 condition) on the small-n dense delivery plan.
 fn steady_state_allocs(algo: &str, compressor: &str, scenario: &str) -> u64 {
-    let n = 64;
+    steady_state_allocs_at(algo, compressor, scenario, 64, 1024, false)
+}
+
+/// Build an n-node ring cell for one algorithm × compressor, run it to
+/// steady state, and return the allocation delta across the post-warm-up
+/// iterations. `sparse` routes through the CSR link-keyed slot table
+/// (O(edges)) instead of the dense all-pairs plan (O(n²)) — mandatory at
+/// n = 4096, where dense slot headers alone would cost a gibibyte.
+fn steady_state_allocs_at(
+    algo: &str,
+    compressor: &str,
+    scenario: &str,
+    n: usize,
+    dim: usize,
+    sparse: bool,
+) -> u64 {
     let iters = 25usize;
     let spec = SynthSpec {
         n_nodes: n,
-        dim: 1024,
+        dim,
         rows_per_node: 8,
         ..Default::default()
     };
@@ -97,14 +112,17 @@ fn steady_state_allocs(algo: &str, compressor: &str, scenario: &str) -> u64 {
             build_program(algo, &cfg, node, model, &x0, 0.05, iters).expect("program")
         })
         .collect();
-    let mut engine = SimEngine::new(
-        n,
-        SimOpts {
-            cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
-            compute_per_iter_s: 0.0,
-            scenario: runtime,
-        },
-    );
+    let opts = SimOpts {
+        cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+        compute_per_iter_s: 0.0,
+        scenario: runtime,
+    };
+    let mut engine = if sparse {
+        let links = LinkTable::from_graph(&cfg.mixing.graph).expect("ring link table");
+        SimEngine::with_links(n, opts, links, 1)
+    } else {
+        SimEngine::new(n, opts)
+    };
 
     // Warm-up: fills the wire/frame pools, the delivery slots, the
     // arrival heap, and every scratch buffer to steady-state capacity.
@@ -169,5 +187,22 @@ fn sim_step_allocates_nothing_after_warmup_at_n64() {
         e, 0,
         "SimEngine::step allocated {e} time(s) in steady state \
          (expected zero after warm-up for deepsqueeze_q4@n64 under drop_p20)"
+    );
+    // n=4096 ring on the sparse CSR slot table: the zero-allocation
+    // contract survives the scale jump — slot lookups are binary searches
+    // over degree-2 rows, and the pools behave exactly as at n=64.
+    let big = steady_state_allocs_at("dpsgd", "fp32", "static", 4096, 64, true);
+    assert_eq!(
+        big, 0,
+        "SimEngine::step allocated {big} time(s) in steady state \
+         (expected zero after warm-up for dpsgd_fp32@n4096 on sparse slots)"
+    );
+    // ... including the drop path at that scale (PR 6's lossy-link pin,
+    // re-pinned on the sparse layout).
+    let bigp = steady_state_allocs_at("dpsgd", "fp32", "drop_p20", 4096, 64, true);
+    assert_eq!(
+        bigp, 0,
+        "SimEngine::step allocated {bigp} time(s) in steady state \
+         (expected zero after warm-up for dpsgd_fp32@n4096 under drop_p20)"
     );
 }

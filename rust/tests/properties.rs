@@ -14,7 +14,8 @@ use decomp::models::{GradientModel, Quadratic, ShapeManifest, TensorShape, Tenso
 use decomp::network::sim::Frame;
 use decomp::network::transport::Channel;
 use decomp::topology::{
-    is_doubly_stochastic, masked_metropolis_weights, Graph, MixingMatrix, Topology,
+    is_doubly_stochastic, masked_metropolis_rows, masked_metropolis_weights, metropolis_weights,
+    uniform_neighbor_weights, Graph, MixingMatrix, Topology,
 };
 use decomp::util::prop::{check, Gen};
 use decomp::util::rng::Pcg64;
@@ -70,10 +71,92 @@ fn prop_mixing_matrices_doubly_stochastic_with_rho_below_one() {
     check("mixing doubly stochastic, rho<1", CASES, |g| {
         let (topo, n) = random_topology(g);
         let m = build_mixing(topo, n);
-        assert!(is_doubly_stochastic(&m.w, 1e-9));
-        assert!(m.stats.rho < 1.0 - 1e-9, "rho {} for {:?}", m.stats.rho, topo);
-        assert!(m.stats.gap > 0.0);
+        assert!(is_doubly_stochastic(m.w(), 1e-9));
+        assert!(m.stats().rho < 1.0 - 1e-9, "rho {} for {:?}", m.stats().rho, topo);
+        assert!(m.stats().gap > 0.0);
         assert!(m.dcd_alpha_bound() > 0.0);
+    });
+}
+
+#[test]
+fn prop_csr_mixing_rows_match_dense_oracle_bitwise() {
+    // The sparse CSR rows the n=16384 engine mixes with must be *the
+    // same numbers* the dense small-n oracle holds — bitwise, including
+    // under masked-Metropolis churn masks — across the topology families
+    // the scaling sweeps use, up past the point where the cached oracle
+    // exists for cross-checking at runtime.
+    check("CSR mixing rows == dense oracle, bitwise", CASES, |g| {
+        let n = *g.choose(&[4usize, 64, 128]);
+        let topo = match g.usize_in(0, 3) {
+            0 => Topology::Ring,
+            1 => Topology::Hypercube,
+            2 => Topology::Random {
+                p_percent: g.usize_in(15, 60) as u8,
+                seed: g.rng.next_u64(),
+            },
+            // No 2-D torus exists at n = 4 (needs r,c ≥ 3).
+            _ if n == 4 => Topology::Ring,
+            _ => Topology::Torus2d { rows: 8, cols: n / 8 },
+        };
+        let graph = Graph::build(topo, n);
+        let d0 = graph.degree(0);
+        let regular = (0..n).all(|i| graph.degree(i) == d0);
+        let (m, w) = if regular {
+            (MixingMatrix::uniform(graph.clone()), uniform_neighbor_weights(&graph))
+        } else {
+            (MixingMatrix::metropolis(graph.clone()), metropolis_weights(&graph))
+        };
+        for i in 0..n {
+            assert_eq!(
+                m.self_weight[i].to_bits(),
+                (w[(i, i)] as f32).to_bits(),
+                "diagonal at node {i} ({topo:?})"
+            );
+            let row = m.neighbor_weights(i);
+            assert_eq!(row.len(), graph.neighbors[i].len());
+            for (k, &j) in graph.neighbors[i].iter().enumerate() {
+                assert_eq!(
+                    row[k].to_bits(),
+                    (w[(i, j)] as f32).to_bits(),
+                    "edge {i}->{j} ({topo:?})"
+                );
+            }
+        }
+        // Same pin for the churn-masked Metropolis rows: freeze a random
+        // subset and compare against the dense masked oracle. A mask that
+        // strands a live node must be refused by both paths.
+        let mut live = vec![true; n];
+        for v in live.iter_mut() {
+            if g.f64_in(0.0, 1.0) < 0.2 {
+                *v = false;
+            }
+        }
+        match masked_metropolis_rows(&graph, &live) {
+            Ok(rows) => {
+                let wm = masked_metropolis_weights(&graph, &live)
+                    .expect("oracle accepts what the sparse path accepts");
+                for i in 0..n {
+                    assert_eq!(
+                        rows.self_weight[i].to_bits(),
+                        (wm[(i, i)] as f32).to_bits(),
+                        "masked diagonal at node {i} ({topo:?})"
+                    );
+                    for (k, &j) in graph.neighbors[i].iter().enumerate() {
+                        assert_eq!(
+                            rows.neighbor_weights(i)[k].to_bits(),
+                            (wm[(i, j)] as f32).to_bits(),
+                            "masked edge {i}->{j} ({topo:?})"
+                        );
+                    }
+                }
+            }
+            Err(_) => {
+                assert!(
+                    masked_metropolis_weights(&graph, &live).is_err(),
+                    "sparse path refused a mask the dense oracle accepts ({topo:?})"
+                );
+            }
+        }
     });
 }
 
