@@ -209,6 +209,16 @@ impl AlgoConfig {
             None => self.compressor.wire_bytes(n),
         }
     }
+
+    /// Modeled virtual codec cost of the effective compressor, for the
+    /// instrumentation plane ([`crate::obs`]). Observational only — the
+    /// engine records it as counters, never charges it to clocks.
+    pub fn codec_cost(&self) -> crate::obs::CodecCost {
+        match &self.link {
+            Some(spec) => spec.virtual_cost(),
+            None => self.compressor.virtual_cost(),
+        }
+    }
 }
 
 /// Build an algorithm by name via the spec registry (`dpsgd`, `dcd`,

@@ -27,19 +27,33 @@
 //! - `trace_emit` (higher is better) — streamed trace-emission
 //!   throughput (points/sec through `TrainTrace::write_json` into a null
 //!   sink). Hardware-dependent; the baseline ships it as `null`.
+//! - `codec_throughput` (higher is better) — host elements/sec through
+//!   one stateless compress→decompress round trip per representative
+//!   codec: the measured counterpart of the modeled `CodecCost` the
+//!   instrumentation plane charges to its observational counters.
+//!   Hardware-dependent; the baseline ships these as `null`.
+//! - `obs_overhead` (lower is better) — host wall-clock of one
+//!   instrumented (counters-level) n = 32 CHOCO cell divided by the
+//!   identical plain cell: ~1.0 when the "cheap when on" half of the
+//!   plane's promise holds. Hardware-dependent; the baseline ships it
+//!   as `null`.
 //! - `peak_rss` (lower is better) — the process's peak-RSS high-water
 //!   mark (MiB) across one fig3-style n = 4096 ring cell on the sparse
 //!   slot table: the memory side of the scaling story. Linux-only
 //!   (`/proc/self/clear_refs` + `VmHWM`) and allocator-dependent; the
 //!   baseline ships it as `null`, CI tracks the trajectory.
 
-use crate::algorithms::driver::{TracePoint, TrainTrace};
+use crate::algorithms::driver::{RunOpts, TracePoint, TrainTrace};
+use crate::compression::Wire;
+use crate::coordinator::ObsSettings;
 use crate::data::build_models;
 use crate::experiments::{convergence_spec, ef_sweep, fig3};
 use crate::metrics::Table;
 use crate::network::cost::NetCondition;
-use crate::spec::{ExperimentSpec, TopologySpec};
+use crate::network::sim::SimOpts;
+use crate::spec::{CompressorSpec, ExperimentSpec, ObsSpec, TopologySpec};
 use crate::util::json::{Event, JsonPull, JsonWriter};
+use crate::util::rng::Pcg64;
 use std::collections::BTreeMap;
 use std::io::{self, Write};
 
@@ -52,7 +66,7 @@ pub struct BenchReport {
 /// Comparison direction: every group is lower-is-better except the
 /// throughput groups.
 pub fn lower_is_better(group: &str) -> bool {
-    !matches!(group, "iters_per_sec" | "trace_emit")
+    !matches!(group, "iters_per_sec" | "trace_emit" | "codec_throughput")
 }
 
 /// Deterministic groups (simulated metrics) are gated *two-sided*: they
@@ -174,6 +188,70 @@ fn collect_with(quick: bool, host_sweep: bool) -> BenchReport {
     );
     groups.insert("trace_emit".into(), emit);
 
+    // Host codec throughput: elements/sec through one stateless
+    // compress→decompress round trip per representative codec — the
+    // measured counterpart of the modeled `CodecCost` the instrumentation
+    // plane charges to its observational counters. Host-dependent; the
+    // baseline ships these as null.
+    let mut codec_thr = BTreeMap::new();
+    let dim = if quick { 16_384 } else { 131_072 };
+    let src: Vec<f32> = (0..dim).map(|i| ((i % 101) as f32 - 50.0) * 0.013).collect();
+    for name in ["q8", "topk_10", "sign"] {
+        let spec: CompressorSpec = name.parse().unwrap_or_else(|e| panic!("{e}"));
+        let codec = spec.build_stateless().expect("stateless codec");
+        let mut rng = Pcg64::new(0xc0dec, 7);
+        let mut wire = Wire::empty();
+        let mut out = vec![0.0f32; dim];
+        let m = super::time_fn(name, opts, || {
+            codec.compress_into(&src, &mut rng, &mut wire);
+            codec.decompress(&wire, &mut out);
+        });
+        codec_thr.insert(format!("{name}_elems_per_sec"), dim as f64 / m.summary.median);
+    }
+    groups.insert("codec_throughput".into(), codec_thr);
+
+    // Instrumentation-plane runtime overhead: host wall of one observed
+    // (counters-level) n = 32 CHOCO cell over the identical plain cell.
+    // ~1.0 means the "cheap when on" half of the plane's zero-overhead
+    // promise holds on this host; the baseline ships it as null.
+    {
+        let cell = |level: ObsSpec| -> f64 {
+            let (dspec, kind) = convergence_spec(32, true);
+            let (models, x0) = build_models(&kind, &dspec);
+            let (eval_models, _) = build_models(&kind, &dspec);
+            let exp = ExperimentSpec {
+                algo: "choco".parse().unwrap_or_else(|e| panic!("{e}")),
+                compressor: "topk_25".parse().unwrap_or_else(|e| panic!("{e}")),
+                topology: TopologySpec::Ring,
+                n_nodes: 32,
+                seed: 0xb0b5,
+                eta: 0.5,
+                scenario: Default::default(),
+            };
+            let session = exp.session().unwrap_or_else(|e| panic!("{e}"));
+            let run_opts = RunOpts {
+                iters: if quick { 12 } else { 48 },
+                gamma: 0.05,
+                eval_every: 1_000_000,
+                ..RunOpts::default()
+            };
+            let obs = ObsSettings {
+                spec: level,
+                trace_out: None,
+            };
+            let t0 = std::time::Instant::now();
+            session
+                .run_sim_traced(models, &eval_models, &x0, &run_opts, SimOpts::default(), obs)
+                .unwrap_or_else(|e| panic!("{e}"));
+            t0.elapsed().as_secs_f64()
+        };
+        let plain = cell(ObsSpec::Off).max(1e-9);
+        let observed = cell(ObsSpec::Counters);
+        let mut overhead = BTreeMap::new();
+        overhead.insert("choco_topk25_n32_wall_ratio".to_string(), observed / plain);
+        groups.insert("obs_overhead".into(), overhead);
+    }
+
     // Peak RSS of one fig3-style scaling cell (dpsgd_fp32 on a 4096-ring
     // over the sparse link-keyed slot table). Host- and
     // allocator-dependent, so the baseline ships it as null; hosts
@@ -198,7 +276,6 @@ fn collect_with(quick: bool, host_sweep: bool) -> BenchReport {
 #[cfg(target_os = "linux")]
 fn peak_rss_cell(quick: bool) -> Option<f64> {
     use crate::data::{ModelKind, SynthSpec};
-    use crate::network::sim::SimOpts;
     std::fs::write("/proc/self/clear_refs", "5").ok()?;
     let n = 4096;
     let spec = SynthSpec {
@@ -558,6 +635,9 @@ mod tests {
         assert_eq!(r.groups["sim_virtual_s_per_iter"].len(), 9);
         assert_eq!(r.groups["trace_emit"].len(), 1);
         assert!(r.groups["trace_emit"].contains_key("trace_points_per_sec"));
+        assert_eq!(r.groups["codec_throughput"].len(), 3);
+        assert!(r.groups["codec_throughput"].contains_key("q8_elems_per_sec"));
+        assert!(r.groups["obs_overhead"].contains_key("choco_topk25_n32_wall_ratio"));
         // Linux hosts (CI included) must carry the scaling-cell RSS
         // sample; elsewhere the group is legitimately absent.
         #[cfg(target_os = "linux")]

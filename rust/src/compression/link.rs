@@ -64,6 +64,13 @@ pub trait LinkCompressor: Send {
     fn is_unbiased(&self) -> bool {
         true
     }
+
+    /// Modeled virtual codec cost for the instrumentation plane — see
+    /// [`Compressor::virtual_cost`]. Observational only, never charged
+    /// to clocks.
+    fn virtual_cost(&self) -> crate::obs::CodecCost {
+        crate::obs::CodecCost::FREE
+    }
 }
 
 /// Shared, thread-safe description of a link-compressor family: what
@@ -90,6 +97,12 @@ pub trait LinkCompressorSpec: Send + Sync {
         to: usize,
         manifest: &ShapeManifest,
     ) -> Box<dyn LinkCompressor>;
+
+    /// Modeled virtual codec cost of the family — see
+    /// [`Compressor::virtual_cost`].
+    fn virtual_cost(&self) -> crate::obs::CodecCost {
+        crate::obs::CodecCost::FREE
+    }
 }
 
 /// Adapter: any stateless [`Compressor`] used as a (trivially stateful)
@@ -126,6 +139,10 @@ impl LinkCompressor for StatelessLink {
 
     fn is_unbiased(&self) -> bool {
         self.inner.is_unbiased()
+    }
+
+    fn virtual_cost(&self) -> crate::obs::CodecCost {
+        self.inner.virtual_cost()
     }
 }
 

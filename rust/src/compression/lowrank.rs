@@ -92,6 +92,13 @@ impl LinkCompressorSpec for LowRankSpec {
     ) -> Box<dyn LinkCompressor> {
         Box::new(LowRank::new(self.rank, seed, from, to, manifest.clone()))
     }
+
+    fn virtual_cost(&self) -> crate::obs::CodecCost {
+        // Power iteration walks every matrix element once per factor
+        // product (P = MQ, then Q' = MᵀP̂); decode replays one rank-r
+        // outer product per element.
+        crate::obs::CodecCost::per_elem(6, 3)
+    }
 }
 
 /// Per-matrix-segment link state and scratch (the segment's rows/cols
@@ -188,6 +195,12 @@ impl LinkCompressor for LowRank {
 
     fn is_unbiased(&self) -> bool {
         false
+    }
+
+    fn virtual_cost(&self) -> crate::obs::CodecCost {
+        // Mirrors [`LowRankSpec::virtual_cost`] so a built link reports
+        // the same model as the family it came from.
+        crate::obs::CodecCost::per_elem(6, 3)
     }
 
     fn compress_into(&mut self, z: &[f32], _rng: &mut Pcg64, wire: &mut Wire) {

@@ -89,6 +89,16 @@ pub trait Compressor: Send + Sync {
         let w = self.compress(z, rng);
         self.decompress(&w, out);
     }
+
+    /// Modeled virtual cost of one compress/decompress call for the
+    /// instrumentation plane ([`crate::obs`]): deterministic integer
+    /// constants per element, *recorded* by the sim engine as codec
+    /// counters but never charged to node clocks — enabling observation
+    /// cannot move any pinned virtual time. The default (the identity
+    /// family) is free at the model's nanosecond resolution.
+    fn virtual_cost(&self) -> crate::obs::CodecCost {
+        crate::obs::CodecCost::FREE
+    }
 }
 
 /// Full-precision (32-bit) "compression": the identity operator. α = 0.

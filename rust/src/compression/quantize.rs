@@ -55,6 +55,12 @@ impl Compressor for StochasticQuantizer {
         format!("q{}", self.bits)
     }
 
+    fn virtual_cost(&self) -> crate::obs::CodecCost {
+        // Encode: one rounding draw + bit-pack per element. Decode: one
+        // unpack + scale multiply.
+        crate::obs::CodecCost::per_elem(2, 1)
+    }
+
     fn compress_into(&self, z: &[f32], rng: &mut Pcg64, wire: &mut Wire) {
         let nchunks = z.len().div_ceil(self.chunk);
         let lm1 = (self.levels() - 1) as f32;

@@ -34,6 +34,12 @@ impl Compressor for SignCompressor {
         false
     }
 
+    fn virtual_cost(&self) -> crate::obs::CodecCost {
+        // Encode: ℓ₁ accumulate + 1-bit pack per element. Decode: one
+        // branchless select per element.
+        crate::obs::CodecCost::per_elem(1, 1)
+    }
+
     fn compress_into(&self, z: &[f32], _rng: &mut Pcg64, wire: &mut Wire) {
         let l1: f64 = z.iter().map(|v| v.abs() as f64).sum();
         let scale = if z.is_empty() {

@@ -27,6 +27,12 @@ impl Compressor for RandomSparsifier {
         format!("sparse_p{}", (self.p * 100.0).round() as u32)
     }
 
+    fn virtual_cost(&self) -> crate::obs::CodecCost {
+        // Encode: one Bernoulli draw + bitmap push per element. Decode:
+        // one bitmap read + conditional store.
+        crate::obs::CodecCost::per_elem(2, 1)
+    }
+
     fn compress_into(&self, z: &[f32], rng: &mut Pcg64, wire: &mut Wire) {
         wire.clear();
         wire.len = z.len();
@@ -100,6 +106,13 @@ impl Compressor for TopK {
 
     fn is_unbiased(&self) -> bool {
         false
+    }
+
+    fn virtual_cost(&self) -> crate::obs::CodecCost {
+        // Encode is dominated by the linear-time selection over all n
+        // coordinates; decode touches only the k survivors but the model
+        // bills per original element for a conservative upper bound.
+        crate::obs::CodecCost::per_elem(4, 1)
     }
 
     fn compress_into(&self, z: &[f32], _rng: &mut Pcg64, wire: &mut Wire) {

@@ -26,14 +26,15 @@ pub mod program;
 mod worker;
 
 pub use worker::{run_threaded, ThreadedRun, WorkerReport};
-pub(crate) use worker::run_threaded_entry;
+pub(crate) use worker::{run_threaded_entry, run_threaded_entry_obs};
 
 use crate::algorithms::{consensus_distance, AlgoConfig, RunOpts, TracePoint, TrainTrace};
 use crate::data::{build_models, ModelKind, SynthSpec};
 use crate::models::GradientModel;
 use crate::network::sim::{sim_shards, LinkTable, NodeProgram, SimEngine, SimOpts, SimRun};
-use crate::spec::{AlgoEntry, AlgoSpec, ExperimentSpec};
+use crate::spec::{AlgoEntry, AlgoSpec, ExperimentSpec, ObsSpec};
 use crate::topology::{MixingMatrix, Topology};
+use std::io;
 use std::sync::Arc;
 
 /// Which executor runs a training job.
@@ -88,6 +89,9 @@ pub struct TrainConfig {
     /// like `churn_p10_l150_j300+drop_p1+dirichlet_a30`); sim backend
     /// only. See [`crate::spec::ScenarioSpec`] for the grammar.
     pub scenario: String,
+    /// Observation level (`off`, `counters`, `trace`) — the
+    /// instrumentation plane's knob. See [`crate::spec::ObsSpec`].
+    pub obs: String,
 }
 
 impl Default for TrainConfig {
@@ -109,6 +113,7 @@ impl Default for TrainConfig {
             backend: "threads".into(),
             eta: 1.0,
             scenario: "static".into(),
+            obs: "off".into(),
         }
     }
 }
@@ -117,6 +122,11 @@ impl TrainConfig {
     pub fn parse_backend(&self) -> anyhow::Result<Backend> {
         Backend::from_name(&self.backend)
             .ok_or_else(|| anyhow::anyhow!("unknown backend '{}' (threads|sim)", self.backend))
+    }
+
+    /// Parse the observation knob via the spec layer.
+    pub fn parse_obs(&self) -> anyhow::Result<ObsSpec> {
+        Ok(self.obs.parse::<ObsSpec>()?)
     }
 
     /// Parse the topology key via the spec layer — a *total* inverse of
@@ -303,9 +313,81 @@ pub(crate) fn run_sim_trace_entry(
     opts: &RunOpts,
     sim: SimOpts,
 ) -> anyhow::Result<TrainTrace> {
+    let traced =
+        run_sim_traced_entry(entry, cfg, models, eval_models, x0, opts, sim, ObsSettings::off())?;
+    Ok(traced.trace)
+}
+
+/// A traced sim run plus the engine's closing [`SimRun`] — the pair the
+/// instrumentation plane reports from: the training curve *and* the
+/// engine totals (with [`SimRun::obs`] populated when observation is
+/// on).
+pub struct SimTraced {
+    /// Evaluation trace, identical cadence to [`run_sim_trace`].
+    pub trace: TrainTrace,
+    /// Engine totals; `run.obs` holds the [`crate::obs::ObsReport`]
+    /// when [`ObsSettings::spec`] enabled counters.
+    pub run: SimRun,
+}
+
+/// What a traced run should observe: the level knob plus an optional
+/// byte sink for the streaming Perfetto export (used only at
+/// [`ObsSpec::Trace`]).
+pub struct ObsSettings {
+    /// Observation level (`off` records nothing and costs nothing).
+    pub spec: ObsSpec,
+    /// Perfetto `trace_event` sink; ignored unless `spec` is `trace`.
+    pub trace_out: Option<Box<dyn io::Write + Send>>,
+}
+
+impl ObsSettings {
+    /// Observation fully off — the zero-overhead default.
+    pub fn off() -> ObsSettings {
+        ObsSettings { spec: ObsSpec::Off, trace_out: None }
+    }
+}
+
+/// [`run_sim_trace`] plus observation: same eval cadence, but the engine
+/// is closed with [`SimEngine::finish`] so the returned [`SimRun`]
+/// carries frame totals and — when `obs.spec` asks for it — the full
+/// per-phase breakdown and counter registry.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sim_traced(
+    algo_name: &str,
+    cfg: &AlgoConfig,
+    models: Vec<Box<dyn GradientModel>>,
+    eval_models: &[Box<dyn GradientModel>],
+    x0: &[f32],
+    opts: &RunOpts,
+    sim: SimOpts,
+    obs: ObsSettings,
+) -> anyhow::Result<SimTraced> {
+    let entry = parse_algo(algo_name)?.entry();
+    run_sim_traced_entry(entry, cfg, models, eval_models, x0, opts, sim, obs)
+}
+
+/// [`run_sim_traced`] from a registry entry.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_sim_traced_entry(
+    entry: &'static AlgoEntry,
+    cfg: &AlgoConfig,
+    models: Vec<Box<dyn GradientModel>>,
+    eval_models: &[Box<dyn GradientModel>],
+    x0: &[f32],
+    opts: &RunOpts,
+    sim: SimOpts,
+    obs: ObsSettings,
+) -> anyhow::Result<SimTraced> {
     let mut programs = build_programs_entry(entry, cfg, models, x0, opts.gamma, opts.iters)?;
     let name = entry.trace_name(cfg);
     let mut engine = sim_engine_entry(entry, cfg, programs.len(), sim)?;
+    if obs.spec.counters_on() {
+        engine.enable_obs(&name, cfg.codec_cost());
+        let want_trace = obs.spec.trace_on();
+        if let Some(sink) = obs.trace_out.filter(|_| want_trace) {
+            engine.set_trace_writer(sink)?;
+        }
+    }
 
     let eval = |programs: &[Box<dyn NodeProgram>], mean: &mut [f32]| -> (f64, f64) {
         let params: Vec<Vec<f32>> = programs.iter().map(|p| p.x().to_vec()).collect();
@@ -344,7 +426,9 @@ pub(crate) fn run_sim_trace_entry(
             });
         }
     }
-    Ok(TrainTrace { algo: name, points })
+    let trace = TrainTrace { algo: name, points };
+    let run = engine.finish(programs);
+    Ok(SimTraced { trace, run })
 }
 
 #[cfg(test)]

@@ -757,6 +757,14 @@ impl NodeProgram for AllreduceProgram {
         2
     }
 
+    fn phase_label(&self, phase: usize) -> &'static str {
+        if phase == 0 {
+            "reduce"
+        } else {
+            "broadcast"
+        }
+    }
+
     fn emit(&mut self, _t: u64, phase: usize, out: &mut Outbox) {
         match phase {
             0 => {

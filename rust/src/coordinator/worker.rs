@@ -20,6 +20,7 @@ use crate::compression::Wire;
 use crate::models::GradientModel;
 use crate::network::sim::{self, NodeProgram, Outbox};
 use crate::network::transport::{Channel, Endpoint, Transport};
+use crate::obs::{CodecCost, Ctr, Hst, Registry};
 use crate::spec::AlgoEntry;
 
 /// What each worker hands back when the run finishes — the same report
@@ -61,7 +62,13 @@ impl ThreadedRun {
 /// wire is recycled into the local pool after `absorb`, so in steady state
 /// a worker's emit path reuses the buffers its neighbors' messages arrived
 /// in (symmetric gossip keeps the sizes matched).
-fn run_node(mut prog: Box<dyn NodeProgram>, mut ep: Endpoint, iters: usize) -> WorkerReport {
+fn run_node(
+    mut prog: Box<dyn NodeProgram>,
+    mut ep: Endpoint,
+    iters: usize,
+    mut reg: Option<Box<Registry>>,
+    cost: CodecCost,
+) -> (WorkerReport, Option<Box<Registry>>) {
     let node = ep.id;
     let phases = prog.phases() as u64;
     let mut out = Outbox::new();
@@ -72,12 +79,22 @@ fn run_node(mut prog: Box<dyn NodeProgram>, mut ep: Endpoint, iters: usize) -> W
             let key = t * phases + phase as u64;
             prog.emit(t, phase, &mut out);
             for (to, channel, wire) in out.drain() {
+                if let Some(r) = reg.as_deref_mut() {
+                    r.add(Ctr::Msgs, 1);
+                    r.add(Ctr::PayloadBytes, wire.bytes() as u64);
+                    r.add(Ctr::CodecCompressNs, cost.compress_ns(wire.len));
+                    r.observe(Hst::WireBytes, wire.bytes() as u64);
+                }
                 ep.send(to, key, channel, wire);
             }
             expected.clear();
             prog.expects(t, phase, &mut expected);
             for &(from, channel) in &expected {
-                msgs.push(ep.recv_from(from, key, channel));
+                let wire = ep.recv_from(from, key, channel);
+                if let Some(r) = reg.as_deref_mut() {
+                    r.add(Ctr::CodecDecompressNs, cost.decompress_ns(wire.len));
+                }
+                msgs.push(wire);
             }
             prog.absorb(t, phase, &msgs);
             for wire in msgs.drain(..) {
@@ -86,13 +103,14 @@ fn run_node(mut prog: Box<dyn NodeProgram>, mut ep: Endpoint, iters: usize) -> W
         }
     }
     let (final_x, losses) = prog.into_result();
-    WorkerReport {
+    let report = WorkerReport {
         node,
         final_x,
         losses,
         bytes_sent: ep.bytes_sent,
         msgs_sent: ep.msgs_sent,
-    }
+    };
+    (report, reg)
 }
 
 /// Run `iters` synchronous iterations of `algo_name` over worker
@@ -121,18 +139,39 @@ pub(crate) fn run_threaded_entry(
     gamma: f32,
     iters: usize,
 ) -> anyhow::Result<ThreadedRun> {
+    let (run, _) = run_threaded_entry_obs(entry, cfg, models, x0, gamma, iters, false)?;
+    Ok(run)
+}
+
+/// [`run_threaded_entry`] with the instrumentation plane attached: each
+/// worker keeps a private [`Registry`] (no cross-thread contention), and
+/// the registries are merged *in node order* after the join — u64 cells
+/// are associative, so the combined totals are bit-identical no matter
+/// which thread finished first. `obs = false` spawns no registries and
+/// adds one dead branch per wire.
+pub(crate) fn run_threaded_entry_obs(
+    entry: &'static AlgoEntry,
+    cfg: &AlgoConfig,
+    models: Vec<Box<dyn GradientModel>>,
+    x0: &[f32],
+    gamma: f32,
+    iters: usize,
+    obs: bool,
+) -> anyhow::Result<(ThreadedRun, Option<Registry>)> {
     let n = cfg.mixing.n();
     anyhow::ensure!(models.len() == n, "need one model per node");
     crate::spec::admit_config(entry.spec, cfg)?;
 
+    let cost = cfg.codec_cost();
     let endpoints = Transport::fabric(n);
-    let mut reports: Vec<WorkerReport> = std::thread::scope(|s| {
+    let mut results: Vec<(WorkerReport, Option<Box<Registry>>)> = std::thread::scope(|s| {
         let handles: Vec<_> = endpoints
             .into_iter()
             .zip(models)
             .map(|(ep, model)| {
                 let prog = (entry.make_program)(cfg, ep.id, model, x0, gamma, iters);
-                s.spawn(move || run_node(prog, ep, iters))
+                let reg = obs.then(|| Box::new(Registry::new()));
+                s.spawn(move || run_node(prog, ep, iters, reg, cost))
             })
             .collect();
         handles
@@ -140,6 +179,14 @@ pub(crate) fn run_threaded_entry(
             .map(|h| h.join().expect("worker panicked"))
             .collect()
     });
-    reports.sort_by_key(|r| r.node);
-    Ok(ThreadedRun { reports })
+    results.sort_by_key(|(r, _)| r.node);
+    let mut merged = obs.then(Registry::new);
+    let mut reports = Vec::with_capacity(results.len());
+    for (report, reg) in results {
+        if let (Some(m), Some(mut r)) = (merged.as_mut(), reg) {
+            m.merge_from(&mut r);
+        }
+        reports.push(report);
+    }
+    Ok((ThreadedRun { reports }, merged))
 }

@@ -52,6 +52,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod models;
 pub mod network;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod spec;

@@ -4,6 +4,9 @@
 //!   train         run a training job (--backend threads|sim)
 //!   simulate      run the deterministic single-process reference simulator
 //!   serve         long-running NDJSON job loop (stdin/stdout, --tcp ADDR)
+//!   obs           replay a run with the instrumentation plane on and print
+//!                 the per-phase time breakdown (--trace-out trace.json for
+//!                 a Perfetto export, --validate FILE to check one)
 //!   list          print the spec registry (algorithms/capabilities,
 //!                 codecs/wire formulas, topologies) + self-check
 //!   spectra       print mixing-matrix spectral stats for a topology
@@ -29,7 +32,7 @@
 use decomp::algorithms::{self, RunOpts, TrainTrace};
 use decomp::bench_harness::summary;
 use decomp::config::{apply_cli_overrides, load_config};
-use decomp::coordinator::{Backend, TrainConfig};
+use decomp::coordinator::{Backend, ObsSettings, TrainConfig};
 use decomp::experiments::{
     ablations, ef_sweep, fig1, fig2, fig3, fig4, lowrank_sweep, scenario_sweep,
 };
@@ -77,6 +80,7 @@ fn run() -> anyhow::Result<()> {
         "train" => train(&args, true),
         "simulate" => train(&args, false),
         "serve" => serve_cmd(&args),
+        "obs" => obs_cmd(&args),
         "list" => list(&args),
         "spectra" => spectra(&args),
         "fig1" => emit_tables(&args, fig1::run(quick)),
@@ -116,6 +120,13 @@ COMMANDS
                 --scenario KEY  (sim backend fault injection: 'static' or a
                   '+'-joined schedule, e.g. churn_p10_l150_j300+drop_p1+
                   dirichlet_a30+bw_h50_e100+timeout_20)
+                --obs off|counters|trace  (instrumentation plane; 'counters'
+                  prints the per-phase time breakdown + counter/histogram
+                  tables after the run; threads backend prints merged
+                  per-worker counters)
+                --trace-out FILE  (sim backend: stream a Perfetto
+                  trace_event export while the run executes; implies
+                  --obs trace)
                 --config file.json (CLI flags override file values)
               note: biased compressors (topk_*, sign, lowrank_rN) are rejected
               for dcd/ecd/qallreduce — only error-feedback algorithms admit
@@ -131,7 +142,17 @@ COMMANDS
               \"nodes\":N,\"iters\":N,\"bandwidth_mbps\":F,\"latency_ms\":F,
               \"trace\":true,...} — every TrainConfig field by name; the
               whole algo×compressor grid is admitted through the spec layer
-              before any cell runs
+              before any cell runs; \"obs\":true adds counter snapshots to
+              progress frames and the time breakdown to result frames
+  obs         replay a run on the event engine with the instrumentation
+              plane on and print where the virtual time went: per-phase
+              compute/serialize/transfer/idle split for the critical node,
+              plus counter and histogram tables (same --format/--out sink
+              as the experiment subcommands). --trace-out trace.json also
+              streams a Perfetto/Chrome trace_event export (one track per
+              node, one per link; open in ui.perfetto.dev);
+              --validate FILE structurally checks an existing export.
+              Byte-identical across repeats and --sim-shards counts
   list        print the spec registry — every algorithm with its capability
               flags (needs_unbiased, link_state, uses_eta), every compressor
               family with its exact wire_bytes formula, every topology — then
@@ -248,8 +269,29 @@ fn train(args: &Args, threaded: bool) -> anyhow::Result<()> {
             compute_per_iter_s: args.f64("compute-ms", 0.0) * 1e-3,
             scenario: None,
         };
+        let obs_spec = resolve_obs_spec(&cfg, args)?;
         let t0 = std::time::Instant::now();
-        let trace = session.run_sim_trace(models, &eval_models, &x0, &opts, sim)?;
+        let trace = if obs_spec.counters_on() {
+            let traced = session.run_sim_traced(
+                models,
+                &eval_models,
+                &x0,
+                &opts,
+                sim,
+                obs_settings(obs_spec, args)?,
+            )?;
+            if let Some(report) = &traced.run.obs {
+                for table in report.tables() {
+                    table.print();
+                }
+            }
+            if let Some(path) = args.opt_str("trace-out") {
+                println!("perfetto trace written to {path}");
+            }
+            traced.trace
+        } else {
+            session.run_sim_trace(models, &eval_models, &x0, &opts, sim)?
+        };
         let wall = t0.elapsed().as_secs_f64();
         let mut t = Table::new(
             "sim-backend run (virtual time)",
@@ -277,8 +319,14 @@ fn train(args: &Args, threaded: bool) -> anyhow::Result<()> {
     }
 
     if threaded {
+        let obs_on = cfg.parse_obs()?.counters_on();
         let t0 = std::time::Instant::now();
-        let run = session.run_threaded(models, &x0, cfg.gamma, cfg.iters)?;
+        let (run, registry) = if obs_on {
+            let (run, reg) = session.run_threaded_obs(models, &x0, cfg.gamma, cfg.iters)?;
+            (run, Some(reg))
+        } else {
+            (session.run_threaded(models, &x0, cfg.gamma, cfg.iters)?, None)
+        };
         let wall = t0.elapsed().as_secs_f64();
         let mean = run.mean_params();
         let final_loss: f64 = eval_models.iter().map(|m| m.full_loss(&mean)).sum::<f64>()
@@ -289,6 +337,10 @@ fn train(args: &Args, threaded: bool) -> anyhow::Result<()> {
             t.row(vec![i.to_string(), format!("{l:.5}")]);
         }
         t.print();
+        if let Some(reg) = &registry {
+            reg.counters_table(&format!("counters ({})", cfg.algo)).print();
+            reg.hists_table(&format!("histograms ({})", cfg.algo)).print();
+        }
         println!(
             "final f(x̄) = {final_loss:.5} | bytes on wire = {} | wall = {wall:.2}s",
             fmt_bytes(run.total_bytes() as f64)
@@ -333,6 +385,91 @@ fn write_trace(args: &Args, trace: &TrainTrace, t: &Table) -> anyhow::Result<()>
             f.flush()?;
         }
         println!("trace written to {path}");
+    }
+    Ok(())
+}
+
+/// The sim run's observation level: the `--obs`/config knob,
+/// force-upgraded to `trace` when `--trace-out` names a sink.
+fn resolve_obs_spec(cfg: &TrainConfig, args: &Args) -> anyhow::Result<spec::ObsSpec> {
+    let parsed = cfg.parse_obs()?;
+    Ok(if args.opt_str("trace-out").is_some() {
+        spec::ObsSpec::Trace
+    } else {
+        parsed
+    })
+}
+
+/// Build the [`ObsSettings`] for a sim run, opening the `--trace-out`
+/// file behind a buffered writer when the level asks for the Perfetto
+/// stream.
+fn obs_settings(level: spec::ObsSpec, args: &Args) -> anyhow::Result<ObsSettings> {
+    let trace_out: Option<Box<dyn Write + Send>> = match args.opt_str("trace-out") {
+        Some(path) if level.trace_on() => Some(Box::new(BufWriter::new(File::create(path)?))),
+        _ => None,
+    };
+    Ok(ObsSettings {
+        spec: level,
+        trace_out,
+    })
+}
+
+/// `decomp obs`: replay a run with the instrumentation plane on and
+/// print where the virtual time went — the per-phase breakdown plus the
+/// counter and histogram tables, through the shared sink
+/// (`--format text|csv|json|ndjson`, `--out FILE`). `--trace-out FILE`
+/// additionally streams the Perfetto `trace_event` export;
+/// `--validate FILE` instead structurally validates an existing export
+/// and exits. All observed quantities derive from the virtual clock, so
+/// the printed report is byte-identical across repeats and shard
+/// counts.
+fn obs_cmd(args: &Args) -> anyhow::Result<()> {
+    if let Some(path) = args.opt_str("validate") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read trace '{path}': {e}"))?;
+        let stats =
+            decomp::obs::trace::validate(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        println!(
+            "{path}: valid perfetto trace — {} event(s), {} span(s)",
+            stats.events, stats.spans
+        );
+        return Ok(());
+    }
+    let mut cfg = load_train_config(args)?;
+    cfg.backend = "sim".into();
+    let level = if args.opt_str("trace-out").is_some() {
+        spec::ObsSpec::Trace
+    } else {
+        spec::ObsSpec::Counters
+    };
+    let session = cfg.experiment_spec()?.session()?;
+    let (models, x0) = cfg.build_models()?;
+    let (eval_models, _) = cfg.build_models()?;
+    let net = NetworkModel::new(
+        args.f64("bandwidth-mbps", 5.0) * 1e6,
+        args.f64("latency-ms", 5.0) * 1e-3,
+    );
+    let opts = RunOpts {
+        iters: cfg.iters,
+        gamma: cfg.gamma,
+        eval_every: cfg.eval_every,
+        ..Default::default()
+    };
+    let sim = SimOpts {
+        cost: CostModel::Uniform(net),
+        compute_per_iter_s: args.f64("compute-ms", 0.0) * 1e-3,
+        scenario: None,
+    };
+    let settings = obs_settings(level, args)?;
+    let traced = session.run_sim_traced(models, &eval_models, &x0, &opts, sim, settings)?;
+    let report = traced
+        .run
+        .obs
+        .as_ref()
+        .expect("obs is always on for `decomp obs`");
+    emit_tables(args, report.tables())?;
+    if let Some(path) = args.opt_str("trace-out") {
+        eprintln!("perfetto trace written to {path}");
     }
     Ok(())
 }

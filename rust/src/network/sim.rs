@@ -47,9 +47,12 @@
 use crate::compression::Wire;
 use crate::network::cost::CostModel;
 use crate::network::transport::Channel;
+use crate::obs::trace::{TraceWriter, PID_LINKS, PID_NODES};
+use crate::obs::{secs_to_ns, CodecCost, Ctr, Hst, ObsReport, PhaseSplit, Registry};
 use crate::spec::ScenarioRuntime;
 use crate::topology::Graph;
 use std::collections::{BinaryHeap, VecDeque};
+use std::io;
 use std::sync::Arc;
 
 // ---------------------------------------------------------------------------
@@ -134,6 +137,14 @@ pub trait NodeProgram: Send {
     /// Communication phases per iteration (gossip: 1, reductions: 2).
     fn phases(&self) -> usize {
         1
+    }
+
+    /// Human label for communication phase `phase`, used by the
+    /// instrumentation plane's breakdown rows and trace tracks.
+    /// Single-phase gossip is the default; reduction programs override
+    /// (e.g. `reduce` / `broadcast`).
+    fn phase_label(&self, _phase: usize) -> &'static str {
+        "gossip"
     }
 
     /// Run this node's local computation for (t, phase) and queue sends.
@@ -445,6 +456,13 @@ impl LinkTable {
         };
         link * 2 + channel_tag(ch) as usize
     }
+
+    /// Directed-link id of `from → to`: the trace track index, equal to
+    /// `slot_index / 2` (both channels share one link track).
+    #[inline]
+    fn link_id(&self, from: usize, to: usize) -> usize {
+        self.slot_index(from, to, Channel::Gossip) / 2
+    }
 }
 
 /// Event-loop shard count from `DECOMP_SIM_SHARDS` (default 1 — the
@@ -533,6 +551,10 @@ struct Arrival {
     seq: u64,
     from: usize,
     to: usize,
+    /// Serialization seconds charged for this frame (attribution only).
+    tx: f64,
+    /// Link latency seconds charged for this frame (attribution only).
+    lat: f64,
     frame: Frame,
 }
 
@@ -616,6 +638,9 @@ pub struct SimRun {
     pub frames: u64,
     /// Frames condemned by scenario fault injection (never charged).
     pub frames_dropped: u64,
+    /// Instrumentation report, present when the engine ran with
+    /// [`SimEngine::enable_obs`]. `None` costs nothing.
+    pub obs: Option<ObsReport>,
 }
 
 impl SimRun {
@@ -635,6 +660,49 @@ impl SimRun {
     pub fn mean_losses(&self) -> Vec<f64> {
         mean_losses(&self.reports)
     }
+}
+
+/// The boxed sink trace events stream into (`--trace-out`).
+pub type TraceSink = TraceWriter<Box<dyn io::Write + Send>>;
+
+/// Emit one trace event; on sink failure the writer is dropped so the
+/// run itself never fails because a trace file hit `ENOSPC` mid-stream.
+fn trace_try(trace: &mut Option<TraceSink>, f: impl FnOnce(&mut TraceSink) -> io::Result<()>) {
+    if let Some(tw) = trace.as_mut() {
+        if f(tw).is_err() {
+            *trace = None;
+        }
+    }
+}
+
+/// Shard-local observation state: a private [`Registry`] plus the run's
+/// codec cost model. Every cell is a `u64` sum, so draining shards in
+/// shard order at the round barrier gives bitwise-identical totals at
+/// any shard count (the f64 attribution lives only on the engine's
+/// serial paths — see [`EngineObs`]).
+struct ShardObs {
+    reg: Registry,
+    cost: CodecCost,
+}
+
+/// Engine-wide observation state. Everything f64 in here is mutated
+/// only on serial code paths (compute charging, the delivery loop), so
+/// the attribution — unlike a per-shard float sum — cannot depend on
+/// the shard count.
+struct EngineObs {
+    algo: String,
+    cost: CodecCost,
+    /// Merged registry (shard registries drain into it every phase).
+    reg: Registry,
+    /// Phase labels from the programs; captured at the first step.
+    phase_names: Vec<&'static str>,
+    /// Compute seconds charged per node so far (identical across nodes).
+    compute_s: f64,
+    /// Per-(node, phase) wait decomposition, indexed
+    /// `node * phases + phase`; sized lazily at the first step because
+    /// the phase count is a program property.
+    splits: Vec<PhaseSplit>,
+    trace: Option<TraceSink>,
 }
 
 /// One event-loop shard's private scratch: everything the emit and absorb
@@ -669,6 +737,9 @@ struct ShardScratch {
     frame_bytes: u64,
     frames: u64,
     frames_dropped: u64,
+    /// Observation state; `None` (the default) costs one branch per
+    /// charged frame.
+    obs: Option<Box<ShardObs>>,
 }
 
 impl ShardScratch {
@@ -689,6 +760,7 @@ impl ShardScratch {
             frame_bytes: 0,
             frames: 0,
             frames_dropped: 0,
+            obs: None,
         }
     }
 }
@@ -731,7 +803,10 @@ fn emit_shard(
             let shell = s.frame_pool.pop().unwrap_or_default();
             let mut frame = std::mem::replace(&mut s.dest_frames[to], shell);
             if let Some(rt) = &opts.scenario {
-                if !rt.live(i, t) || !rt.live(to, t) || rt.dropped_broadcast(t, phase, i) {
+                // Evaluated in the original short-circuit order: the coin
+                // oracle is only consulted when both endpoints are live.
+                let dead = !rt.live(i, t) || !rt.live(to, t);
+                if dead || rt.dropped_broadcast(t, phase, i) {
                     // Condemned frame: it never reaches the NIC. Payload
                     // buffers recycle straight back into the emit pool,
                     // the shell into the frame pool — no bytes, no
@@ -741,6 +816,11 @@ fn emit_shard(
                     }
                     s.frame_pool.push(frame);
                     s.frames_dropped += 1;
+                    if let Some(ob) = s.obs.as_deref_mut() {
+                        ob.reg.add(Ctr::FramesDropped, 1);
+                        let cause = if dead { Ctr::DeadEndpointDrops } else { Ctr::ScenarioDrops };
+                        ob.reg.add(cause, 1);
+                    }
                     continue;
                 }
             }
@@ -759,11 +839,24 @@ fn emit_shard(
             s.payload_bytes += frame.payload_bytes() as u64;
             s.frame_bytes += on_wire as u64;
             s.frames += 1;
+            if let Some(ob) = s.obs.as_deref_mut() {
+                ob.reg.add(Ctr::Frames, 1);
+                ob.reg.add(Ctr::Msgs, frame.msgs.len() as u64);
+                ob.reg.add(Ctr::PayloadBytes, frame.payload_bytes() as u64);
+                ob.reg.add(Ctr::FrameBytes, on_wire as u64);
+                ob.reg.observe(Hst::WireBytes, on_wire as u64);
+                ob.reg.observe(Hst::FrameLatencyNs, secs_to_ns(tx + link.latency_s));
+                for (_, w) in &frame.msgs {
+                    ob.reg.add(Ctr::CodecCompressNs, ob.cost.compress_ns(w.len));
+                }
+            }
             s.pending.push(Arrival {
                 time: start + tx + link.latency_s,
                 seq: 0, // assigned at the deterministic merge
                 from: i,
                 to,
+                tx,
+                lat: link.latency_s,
                 frame,
             });
         }
@@ -866,6 +959,9 @@ pub struct SimEngine {
     queue: BinaryHeap<Arrival>,
     /// Link-keyed delivery slots: `links.slot_index(from, to, channel)`.
     slots: Vec<VecDeque<Wire>>,
+    /// Instrumentation plane ([`SimEngine::enable_obs`]); `None` — the
+    /// default — costs one branch on already-rare events.
+    obs: Option<Box<EngineObs>>,
 }
 
 impl SimEngine {
@@ -910,7 +1006,61 @@ impl SimEngine {
             shards,
             queue: BinaryHeap::new(),
             slots,
+            obs: None,
         }
+    }
+
+    /// Turn the instrumentation plane on: each shard gets a private
+    /// [`Registry`] (drained into the engine's in shard order at every
+    /// round barrier) and the engine starts attributing the critical
+    /// node's virtual time. `cost` is the run's codec cost model (see
+    /// [`AlgoConfig::codec_cost`](crate::algorithms::AlgoConfig::codec_cost));
+    /// it is recorded, never charged to clocks, so an observed run's
+    /// trajectory and virtual times are bit-identical to an unobserved
+    /// one.
+    pub fn enable_obs(&mut self, algo: &str, cost: CodecCost) {
+        self.obs = Some(Box::new(EngineObs {
+            algo: algo.to_string(),
+            cost,
+            reg: Registry::new(),
+            phase_names: Vec::new(),
+            compute_s: 0.0,
+            splits: Vec::new(),
+            trace: None,
+        }));
+        for s in self.shards.iter_mut() {
+            s.obs = Some(Box::new(ShardObs { reg: Registry::new(), cost }));
+        }
+    }
+
+    /// Attach a streaming Perfetto/Chrome `trace_event` sink (requires
+    /// [`SimEngine::enable_obs`] first). Emits the track metadata
+    /// immediately — one track per node, one per directed link in the
+    /// delivery plan — then streams compute/wait/frame spans as the run
+    /// executes; the export is O(1) in trace size.
+    pub fn set_trace_writer(&mut self, sink: Box<dyn io::Write + Send>) -> io::Result<()> {
+        let eo = self
+            .obs
+            .as_deref_mut()
+            .expect("set_trace_writer requires enable_obs first");
+        let mut tw = TraceWriter::new(sink)?;
+        tw.process_name(PID_NODES, "nodes")?;
+        tw.process_name(PID_LINKS, "links")?;
+        for i in 0..self.n {
+            tw.thread_name(PID_NODES, i as u64, &format!("node {i}"))?;
+        }
+        for to in 0..self.n {
+            for link in self.links.row_start(to)..self.links.row_start(to + 1) {
+                let from = if self.links.dense {
+                    link - self.links.offsets[to]
+                } else {
+                    self.links.senders[link] as usize
+                };
+                tw.thread_name(PID_LINKS, link as u64, &format!("link {from}->{to}"))?;
+            }
+        }
+        eo.trace = Some(tw);
+        Ok(())
     }
 
     pub fn clock(&self) -> &SimClock {
@@ -968,6 +1118,9 @@ impl SimEngine {
             self.clock.frame_bytes += std::mem::take(&mut s.frame_bytes);
             self.clock.frames += std::mem::take(&mut s.frames);
             self.clock.frames_dropped += std::mem::take(&mut s.frames_dropped);
+            if let (Some(eo), Some(so)) = (self.obs.as_deref_mut(), s.obs.as_deref_mut()) {
+                eo.reg.merge_from(&mut so.reg);
+            }
             for mut a in s.pending.drain(..) {
                 a.seq = self.seq;
                 self.seq += 1;
@@ -1016,6 +1169,26 @@ impl SimEngine {
         for i in 0..n {
             self.clock.node_time[i] += self.opts.compute_per_iter_s;
         }
+        if let Some(eo) = self.obs.as_deref_mut() {
+            if eo.splits.is_empty() {
+                eo.phase_names = (0..phases).map(|p| programs[0].phase_label(p)).collect();
+                eo.splits = vec![PhaseSplit::default(); n * phases];
+            }
+            eo.compute_s += self.opts.compute_per_iter_s;
+            if self.opts.compute_per_iter_s > 0.0 {
+                let dur_us = self.opts.compute_per_iter_s * 1e6;
+                for i in 0..n {
+                    let end_us = self.clock.node_time[i] * 1e6;
+                    trace_try(&mut eo.trace, |tw| {
+                        tw.span(PID_NODES, i as u64, "compute", end_us - dur_us, dur_us)
+                    });
+                }
+            }
+            if let Some(rt) = &self.opts.scenario {
+                let frozen = (0..n).filter(|&i| !rt.live(i, t)).count();
+                eo.reg.add(Ctr::ChurnFrozenNodeRounds, frozen as u64);
+            }
+        }
 
         for phase in 0..phases {
             debug_assert!(
@@ -1030,12 +1203,49 @@ impl SimEngine {
             // channel) slot; the emptied frame shell goes back to the
             // sending shard's pool.
             while let Some(a) = self.queue.pop() {
-                let nt = &mut self.clock.node_time[a.to];
-                *nt = nt.max(a.time);
+                let nt = self.clock.node_time[a.to];
+                if let Some(eo) = self.obs.as_deref_mut() {
+                    // Wait-split attribution, on the serial delivery path
+                    // (pop order is deterministic, so these f64 sums are
+                    // shard-count-independent): of the receiver's jump to
+                    // `a.time`, the tail is wire transfer, before that the
+                    // sender's NIC was serializing, and any remainder is
+                    // idle (blocked on the sender's earlier traffic or
+                    // compute).
+                    let wait = a.time - nt;
+                    if wait > 0.0 {
+                        let transfer = wait.min(a.lat);
+                        let serialize = (wait - transfer).min(a.tx);
+                        let idle = wait - transfer - serialize;
+                        let sp = &mut eo.splits[a.to * phases + phase];
+                        sp.serialize_s += serialize;
+                        sp.transfer_s += transfer;
+                        sp.idle_s += idle;
+                        eo.reg.add(Ctr::DeliveryWaits, 1);
+                        trace_try(&mut eo.trace, |tw| {
+                            tw.span(PID_NODES, a.to as u64, "wait", nt * 1e6, wait * 1e6)
+                        });
+                    }
+                    if eo.trace.is_some() {
+                        let link = self.links.link_id(a.from, a.to) as u64;
+                        let dur_us = (a.tx + a.lat) * 1e6;
+                        let ts_us = a.time * 1e6 - dur_us;
+                        let bytes = a.frame.encoded_len() as u64;
+                        trace_try(&mut eo.trace, |tw| {
+                            tw.frame_span(link, ts_us, dur_us, a.from, a.to, bytes)
+                        });
+                    }
+                }
+                self.clock.node_time[a.to] = nt.max(a.time);
                 let mut frame = a.frame;
                 for (ch, wire) in frame.msgs.drain(..) {
                     let idx = self.links.slot_index(a.from, a.to, ch);
+                    let elems = wire.len;
                     self.slots[idx].push_back(wire);
+                    if let Some(eo) = self.obs.as_deref_mut() {
+                        eo.reg.add(Ctr::CodecDecompressNs, eo.cost.decompress_ns(elems));
+                        eo.reg.observe(Hst::QueueOccupancy, self.slots[idx].len() as u64);
+                    }
                 }
                 self.shards[self.node_shard[a.from] as usize].frame_pool.push(frame);
             }
@@ -1052,8 +1262,38 @@ impl SimEngine {
     }
 
     /// Consume the engine and programs into a [`SimRun`].
-    pub fn finish(self, programs: Vec<Box<dyn NodeProgram>>) -> SimRun {
+    pub fn finish(mut self, programs: Vec<Box<dyn NodeProgram>>) -> SimRun {
         let virtual_time_s = self.clock.now();
+        let obs = self.obs.take().map(|eo| {
+            let mut eo = *eo;
+            if let Some(tw) = eo.trace.take() {
+                // A failure here (the sink died mid-run) already dropped
+                // the writer; a healthy sink gets a complete document.
+                let _ = tw.finish();
+            }
+            // First node to attain the makespan is the critical node.
+            let mut critical_node = 0usize;
+            for (i, &t) in self.clock.node_time.iter().enumerate() {
+                if t > self.clock.node_time[critical_node] {
+                    critical_node = i;
+                }
+            }
+            let phases = eo.phase_names.len();
+            let mut report = ObsReport {
+                algo: eo.algo,
+                n: self.n,
+                phase_names: eo.phase_names,
+                virtual_time_s,
+                critical_node,
+                compute_s: eo.compute_s,
+                phases: (0..phases)
+                    .map(|p| eo.splits[critical_node * phases + p])
+                    .collect(),
+                reg: eo.reg,
+            };
+            crate::obs::close_breakdown(&mut report);
+            report
+        });
         let reports = programs
             .into_iter()
             .enumerate()
@@ -1075,6 +1315,7 @@ impl SimEngine {
             frame_bytes: self.clock.frame_bytes,
             frames: self.clock.frames,
             frames_dropped: self.clock.frames_dropped,
+            obs,
         }
     }
 }
@@ -1673,5 +1914,159 @@ mod tests {
         let run = run_sim_on(engine, ring_programs(n), 5);
         assert_eq!(run.reports.len(), n);
         assert!(run.virtual_time_s > 0.0);
+    }
+
+    fn obs_opts() -> SimOpts {
+        SimOpts {
+            cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+            compute_per_iter_s: 0.01,
+            scenario: None,
+        }
+    }
+
+    #[test]
+    fn obs_breakdown_sums_to_virtual_time_bitwise() {
+        let n = 6;
+        let mut engine = SimEngine::new(n, obs_opts());
+        engine.enable_obs("ring_echo", CodecCost::per_elem(2, 1));
+        let mut programs = ring_programs(n);
+        for t in 0..25u64 {
+            engine.step(&mut programs, t);
+        }
+        let run = engine.finish(programs);
+        let obs = run.obs.as_ref().expect("obs enabled");
+        assert_eq!(obs.breakdown_total().to_bits(), run.virtual_time_s.to_bits());
+        assert_eq!(obs.n, n);
+        assert_eq!(obs.phase_names, vec!["gossip"]);
+        // The registry agrees with the engine's own accounting.
+        assert_eq!(obs.reg.counter(Ctr::Frames), run.frames);
+        assert_eq!(obs.reg.counter(Ctr::PayloadBytes), run.payload_bytes);
+        assert_eq!(obs.reg.counter(Ctr::FrameBytes), run.frame_bytes);
+        assert_eq!(obs.reg.hist(Hst::WireBytes).count(), run.frames);
+        assert!(obs.reg.counter(Ctr::CodecCompressNs) > 0);
+        assert!(obs.reg.counter(Ctr::CodecDecompressNs) > 0);
+    }
+
+    #[test]
+    fn obs_does_not_move_the_virtual_clock() {
+        let mk = |observe: bool| {
+            let mut engine = SimEngine::new(6, obs_opts());
+            if observe {
+                engine.enable_obs("ring_echo", CodecCost::per_elem(4, 2));
+            }
+            let mut programs = ring_programs(6);
+            for t in 0..20u64 {
+                engine.step(&mut programs, t);
+            }
+            engine.finish(programs)
+        };
+        let plain = mk(false);
+        let observed = mk(true);
+        assert_eq!(plain.virtual_time_s.to_bits(), observed.virtual_time_s.to_bits());
+        assert_eq!(plain.frame_bytes, observed.frame_bytes);
+        assert_eq!(plain.mean_losses(), observed.mean_losses());
+        assert!(plain.obs.is_none());
+        assert!(observed.obs.is_some());
+    }
+
+    #[test]
+    fn obs_is_bit_identical_across_shard_counts() {
+        let run_with = |shards: usize| {
+            let n = 6;
+            let rt = drop_runtime(n, "drop_p20", 0x51a2d);
+            let programs = lossy_programs(n, &rt);
+            let opts = SimOpts {
+                cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+                compute_per_iter_s: 0.01,
+                scenario: Some(rt),
+            };
+            let mut engine =
+                SimEngine::with_links(n, opts, LinkTable::dense(n).unwrap(), shards);
+            engine.enable_obs("lossy_echo", CodecCost::per_elem(2, 1));
+            run_sim_on(engine, programs, 30)
+        };
+        let serial = run_with(1);
+        let so = serial.obs.as_ref().unwrap();
+        for shards in [2, 4] {
+            let sharded = run_with(shards);
+            let sh = sharded.obs.as_ref().unwrap();
+            assert_eq!(so.reg, sh.reg, "registry at {shards} shards");
+            assert_eq!(so.critical_node, sh.critical_node);
+            assert_eq!(
+                so.breakdown_total().to_bits(),
+                sh.breakdown_total().to_bits(),
+                "breakdown at {shards} shards"
+            );
+            for (a, b) in so.phases.iter().zip(&sh.phases) {
+                assert_eq!(a.serialize_s.to_bits(), b.serialize_s.to_bits());
+                assert_eq!(a.transfer_s.to_bits(), b.transfer_s.to_bits());
+                assert_eq!(a.idle_s.to_bits(), b.idle_s.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn obs_counts_scenario_drops_by_cause() {
+        let n = 6;
+        let rt = drop_runtime(n, "drop_p30", 0xd201);
+        let mut programs = lossy_programs(n, &rt);
+        let mut engine = SimEngine::new(
+            n,
+            SimOpts {
+                cost: CostModel::Uniform(NetworkModel::new(8e6, 1e-3)),
+                compute_per_iter_s: 0.0,
+                scenario: Some(rt),
+            },
+        );
+        engine.enable_obs("lossy_echo", CodecCost::FREE);
+        for t in 0..40u64 {
+            engine.step(&mut programs, t);
+        }
+        let run = engine.finish(programs);
+        let obs = run.obs.as_ref().unwrap();
+        assert!(run.frames_dropped > 0);
+        assert_eq!(obs.reg.counter(Ctr::FramesDropped), run.frames_dropped);
+        assert_eq!(
+            obs.reg.counter(Ctr::ScenarioDrops) + obs.reg.counter(Ctr::DeadEndpointDrops),
+            run.frames_dropped
+        );
+    }
+
+    #[derive(Clone, Default)]
+    struct SharedBuf(Arc<std::sync::Mutex<Vec<u8>>>);
+
+    impl io::Write for SharedBuf {
+        fn write(&mut self, b: &[u8]) -> io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(b);
+            Ok(b.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn engine_trace_export_validates_and_is_deterministic() {
+        let trace_of = || {
+            let buf = SharedBuf::default();
+            let mut engine = SimEngine::new(4, obs_opts());
+            engine.enable_obs("ring_echo", CodecCost::FREE);
+            engine.set_trace_writer(Box::new(buf.clone())).unwrap();
+            let mut programs = ring_programs(4);
+            for t in 0..10u64 {
+                engine.step(&mut programs, t);
+            }
+            let _ = engine.finish(programs);
+            let bytes = buf.0.lock().unwrap().clone();
+            String::from_utf8(bytes).unwrap()
+        };
+        let a = trace_of();
+        let stats = crate::obs::trace::validate(&a).unwrap();
+        // 2 process names + 4 node tracks + 16 link tracks of metadata,
+        // then compute/wait/frame spans.
+        assert!(stats.events > 22, "{stats:?}");
+        assert!(stats.spans > 0, "{stats:?}");
+        assert_eq!(a, trace_of(), "trace export is bit-identical across repeats");
     }
 }

@@ -1,0 +1,540 @@
+//! The instrumentation plane: preallocated counters, log2 histograms,
+//! and virtual-time attribution for the discrete-event engine.
+//!
+//! Everything here observes quantities that are *derived from the
+//! virtual clock or from message contents*, never from host time, so an
+//! instrumented run is exactly as deterministic as an uninstrumented
+//! one: the breakdown table, the counter dump, and the Perfetto export
+//! (see [`trace`]) are bit-identical across repeats and across
+//! `--sim-shards` counts, and can be golden-pinned in CI.
+//!
+//! Three design rules keep observation compatible with the engine's
+//! other contracts (see DESIGN.md §7b):
+//!
+//! 1. **Zero overhead when off.** The engine holds an
+//!    `Option<Box<…>>`; disabled runs pay one branch per already-rare
+//!    event and allocate nothing.
+//! 2. **No heap after build.** A [`Registry`] is a fixed array of `u64`
+//!    cells and fixed-bin [`Histogram`]s — counter and histogram
+//!    updates are single array writes, so the `alloc_steady_state`
+//!    pins hold with observation enabled.
+//! 3. **Associative cells.** Per-shard registries (carried in the
+//!    engine's `ShardScratch`) hold `u64` counts — including virtual
+//!    *nanoseconds* for the codec cost model — because `u64` addition
+//!    is associative: merging shard partials in shard order at the
+//!    round barrier yields bitwise-identical totals at any shard
+//!    count. (The f64 wait attribution lives only on the engine's
+//!    serial delivery path, which already sees one deterministic
+//!    arrival order.)
+
+pub mod trace;
+
+use crate::metrics::{fmt_secs, Table};
+
+/// Named `u64` counters the engine and coordinator record into. The
+/// enum *is* the registry index — adding a variant extends every
+/// registry without any runtime registration step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ctr {
+    /// Frames charged to the virtual network (after scenario drops).
+    Frames,
+    /// Channel messages carried inside those frames.
+    Msgs,
+    /// Payload bytes (codec wire bytes, before framing).
+    PayloadBytes,
+    /// On-wire bytes (payload plus varint framing).
+    FrameBytes,
+    /// Frames condemned by the scenario before they were charged.
+    FramesDropped,
+    /// Deliveries where the receiver's clock actually waited.
+    DeliveryWaits,
+    /// Modeled virtual nanoseconds spent compressing sent wires.
+    CodecCompressNs,
+    /// Modeled virtual nanoseconds spent decompressing received wires.
+    CodecDecompressNs,
+    /// Broadcast drops from the scenario's keyed coin (incl. timeouts).
+    ScenarioDrops,
+    /// Frames dropped because an endpoint was churned out.
+    DeadEndpointDrops,
+    /// Node-rounds spent frozen by churn (dead nodes × iterations).
+    ChurnFrozenNodeRounds,
+}
+
+impl Ctr {
+    /// Every counter, in registry (= display) order.
+    pub const ALL: [Ctr; 11] = [
+        Ctr::Frames,
+        Ctr::Msgs,
+        Ctr::PayloadBytes,
+        Ctr::FrameBytes,
+        Ctr::FramesDropped,
+        Ctr::DeliveryWaits,
+        Ctr::CodecCompressNs,
+        Ctr::CodecDecompressNs,
+        Ctr::ScenarioDrops,
+        Ctr::DeadEndpointDrops,
+        Ctr::ChurnFrozenNodeRounds,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Ctr::Frames => "frames",
+            Ctr::Msgs => "msgs",
+            Ctr::PayloadBytes => "payload_bytes",
+            Ctr::FrameBytes => "frame_bytes",
+            Ctr::FramesDropped => "frames_dropped",
+            Ctr::DeliveryWaits => "delivery_waits",
+            Ctr::CodecCompressNs => "codec_compress_ns",
+            Ctr::CodecDecompressNs => "codec_decompress_ns",
+            Ctr::ScenarioDrops => "scenario_drops",
+            Ctr::DeadEndpointDrops => "dead_endpoint_drops",
+            Ctr::ChurnFrozenNodeRounds => "churn_frozen_node_rounds",
+        }
+    }
+}
+
+/// Named histograms. Same indexing scheme as [`Ctr`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Hst {
+    /// Per-frame transit time (serialize + latency) in nanoseconds.
+    FrameLatencyNs,
+    /// Delivery-slot depth observed after each enqueue.
+    QueueOccupancy,
+    /// Per-frame on-wire bytes.
+    WireBytes,
+}
+
+impl Hst {
+    pub const ALL: [Hst; 3] = [Hst::FrameLatencyNs, Hst::QueueOccupancy, Hst::WireBytes];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Hst::FrameLatencyNs => "frame_latency_ns",
+            Hst::QueueOccupancy => "queue_occupancy",
+            Hst::WireBytes => "wire_bytes",
+        }
+    }
+}
+
+/// Number of log2 bins: bin 0 holds the value 0, bin `k ≥ 1` holds
+/// `[2^(k−1), 2^k)` — every `u64` lands somewhere, and powers of two
+/// are exact lower bin edges.
+pub const HIST_BINS: usize = 65;
+
+/// A fixed-bin log2 histogram over `u64` samples. `[u64; 65]` inline —
+/// no heap, and elementwise merge is associative, so shard-order merges
+/// are bitwise-deterministic at any shard count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    pub bins: [u64; HIST_BINS],
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram { bins: [0; HIST_BINS] }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Bin index of `v`: 0 for 0, else `64 − leading_zeros(v)` (the
+    /// number of significant bits), so `2^k` lands exactly on the lower
+    /// edge of bin `k+1`.
+    #[inline]
+    pub fn bin_index(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    /// Inclusive lower edge of bin `i` (0, 1, 2, 4, 8, …).
+    pub fn bin_lower(i: usize) -> u64 {
+        assert!(i < HIST_BINS, "bin {i} out of range");
+        if i == 0 {
+            0
+        } else {
+            1u64 << (i - 1)
+        }
+    }
+
+    #[inline]
+    pub fn observe(&mut self, v: u64) {
+        self.bins[Self::bin_index(v)] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.bins.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bins.iter().all(|&b| b == 0)
+    }
+
+    /// Elementwise add — associative and commutative, the property the
+    /// deterministic shard merge rests on.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+    }
+}
+
+/// A preallocated registry of every [`Ctr`] and [`Hst`]: two inline
+/// arrays, no heap after construction, updates are single array writes.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Registry {
+    counters: [u64; Ctr::ALL.len()],
+    hists: [Histogram; Hst::ALL.len()],
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, c: Ctr, v: u64) {
+        self.counters[c as usize] += v;
+    }
+
+    #[inline]
+    pub fn observe(&mut self, h: Hst, v: u64) {
+        self.hists[h as usize].observe(v);
+    }
+
+    pub fn counter(&self, c: Ctr) -> u64 {
+        self.counters[c as usize]
+    }
+
+    pub fn hist(&self, h: Hst) -> &Histogram {
+        &self.hists[h as usize]
+    }
+
+    /// Drain `other` into `self` (cell-wise add, then zero `other`).
+    /// Called once per shard in shard order at the round barrier;
+    /// because every cell is a `u64` sum, the merged totals are
+    /// independent of how nodes were partitioned into shards.
+    pub fn merge_from(&mut self, other: &mut Registry) {
+        for (a, b) in self.counters.iter_mut().zip(&mut other.counters) {
+            *a += std::mem::take(b);
+        }
+        for (a, b) in self.hists.iter_mut().zip(&mut other.hists) {
+            a.merge(b);
+            b.bins = [0; HIST_BINS];
+        }
+    }
+
+    /// Counters as a two-column table (zero rows elided).
+    pub fn counters_table(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["counter", "value"]);
+        for c in Ctr::ALL {
+            let v = self.counter(c);
+            if v != 0 {
+                t.row(vec![c.name().to_string(), v.to_string()]);
+            }
+        }
+        t
+    }
+
+    /// Non-empty histograms as `(name, bin_lower, count)` rows.
+    pub fn hists_table(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["histogram", "bin_lower", "count"]);
+        for h in Hst::ALL {
+            let hist = self.hist(h);
+            for (i, &cnt) in hist.bins.iter().enumerate() {
+                if cnt != 0 {
+                    t.row(vec![
+                        h.name().to_string(),
+                        Histogram::bin_lower(i).to_string(),
+                        cnt.to_string(),
+                    ]);
+                }
+            }
+        }
+        t
+    }
+}
+
+/// Modeled virtual cost of a codec, in integer nanoseconds so shard
+/// partial sums stay associative. The constants are *observational*: the
+/// engine records them into [`Ctr::CodecCompressNs`] /
+/// [`Ctr::CodecDecompressNs`] but never adds them to node clocks, so
+/// enabling observation cannot move any pinned virtual time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CodecCost {
+    /// Fixed nanoseconds per compress call.
+    pub compress_base_ns: u64,
+    /// Nanoseconds per input element compressed.
+    pub compress_per_elem_ns: u64,
+    /// Fixed nanoseconds per decompress call.
+    pub decompress_base_ns: u64,
+    /// Nanoseconds per output element decompressed.
+    pub decompress_per_elem_ns: u64,
+}
+
+impl CodecCost {
+    /// The identity codec: copying is free at this model's resolution.
+    pub const FREE: CodecCost = CodecCost {
+        compress_base_ns: 0,
+        compress_per_elem_ns: 0,
+        decompress_base_ns: 0,
+        decompress_per_elem_ns: 0,
+    };
+
+    /// Symmetric per-element model, the common case for scalar codecs.
+    pub const fn per_elem(compress_ns: u64, decompress_ns: u64) -> CodecCost {
+        CodecCost {
+            compress_base_ns: 0,
+            compress_per_elem_ns: compress_ns,
+            decompress_base_ns: 0,
+            decompress_per_elem_ns: decompress_ns,
+        }
+    }
+
+    #[inline]
+    pub fn compress_ns(&self, elems: usize) -> u64 {
+        self.compress_base_ns + self.compress_per_elem_ns * elems as u64
+    }
+
+    #[inline]
+    pub fn decompress_ns(&self, elems: usize) -> u64 {
+        self.decompress_base_ns + self.decompress_per_elem_ns * elems as u64
+    }
+}
+
+/// Where one phase of the critical node's clock went while it waited
+/// for deliveries: time the sender's NIC spent serializing, time on the
+/// wire, and time blocked before the sender even started transmitting.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseSplit {
+    pub serialize_s: f64,
+    pub transfer_s: f64,
+    pub idle_s: f64,
+}
+
+/// The aggregated "where did the time go" answer for one run: the
+/// critical (slowest) node's clock decomposed per phase, plus the
+/// merged counter/histogram registry. Built by the engine at `finish`.
+#[derive(Debug, Clone)]
+pub struct ObsReport {
+    /// Algorithm label (trace name) the run was observed under.
+    pub algo: String,
+    pub n: usize,
+    /// Phase labels from the node programs (`phase_label`).
+    pub phase_names: Vec<&'static str>,
+    /// The run's makespan: `SimRun::virtual_time_s`.
+    pub virtual_time_s: f64,
+    /// The critical node that attains the makespan.
+    pub critical_node: usize,
+    /// Per-node compute charged over the run (identical for all nodes).
+    pub compute_s: f64,
+    /// The critical node's per-phase wait decomposition.
+    pub phases: Vec<PhaseSplit>,
+    /// Merged counters and histograms.
+    pub reg: Registry,
+}
+
+impl ObsReport {
+    /// Breakdown rows in fixed order: compute, then
+    /// serialize/transfer/idle for each phase. Their left-to-right sum
+    /// is exactly [`ObsReport::virtual_time_s`] (see
+    /// [`close_breakdown`]).
+    pub fn breakdown_parts(&self) -> Vec<(String, f64)> {
+        let mut parts = vec![("compute".to_string(), self.compute_s)];
+        for (p, split) in self.phases.iter().enumerate() {
+            let label = self.phase_names.get(p).copied().unwrap_or("phase");
+            parts.push((format!("p{p}/{label}/serialize"), split.serialize_s));
+            parts.push((format!("p{p}/{label}/transfer"), split.transfer_s));
+            parts.push((format!("p{p}/{label}/idle"), split.idle_s));
+        }
+        parts
+    }
+
+    /// Left-to-right sum of [`ObsReport::breakdown_parts`] — the exact
+    /// association [`close_breakdown`] pins to the virtual clock.
+    pub fn breakdown_total(&self) -> f64 {
+        let mut acc = 0.0;
+        for (_, v) in self.breakdown_parts() {
+            acc += v;
+        }
+        acc
+    }
+
+    /// The "where did the time go" table for `decomp train` / `decomp
+    /// obs`: seconds and share of the makespan per category.
+    pub fn breakdown_table(&self) -> Table {
+        let title = format!(
+            "where did the time go ({}, n={}, critical node {})",
+            self.algo, self.n, self.critical_node
+        );
+        let mut t = Table::new(&title, &["category", "seconds", "share"]);
+        let total = self.virtual_time_s;
+        for (name, v) in self.breakdown_parts() {
+            let share = if total > 0.0 { v / total } else { 0.0 };
+            t.row(vec![name, fmt_secs(v), format!("{:.1}%", share * 100.0)]);
+        }
+        t.row(vec!["total".to_string(), fmt_secs(total), "100.0%".to_string()]);
+        t
+    }
+
+    /// Modeled codec time (never charged to clocks), for the tables.
+    pub fn codec_virtual_s(&self) -> f64 {
+        (self.reg.counter(Ctr::CodecCompressNs) + self.reg.counter(Ctr::CodecDecompressNs)) as f64
+            * 1e-9
+    }
+
+    /// All three report tables in emission order.
+    pub fn tables(&self) -> Vec<Table> {
+        vec![
+            self.breakdown_table(),
+            self.reg.counters_table(&format!("counters ({})", self.algo)),
+            self.reg.hists_table(&format!("histograms ({})", self.algo)),
+        ]
+    }
+}
+
+/// Pin the breakdown's left-to-right sum to the virtual clock, bitwise.
+///
+/// The engine attributes the critical node's waits piecewise in f64;
+/// piecewise sums round differently than the clock's own max/add
+/// evolution, so the last idle cell absorbs the (≤ a few ULP) residual.
+/// The correction loop is deterministic — same inputs, same nudges —
+/// and converges in one or two rounds in practice.
+pub fn close_breakdown(report: &mut ObsReport) {
+    if report.phases.is_empty() {
+        // Never stepped: everything is zero, including the makespan.
+        return;
+    }
+    for _ in 0..64 {
+        let total = report.breakdown_total();
+        if total.to_bits() == report.virtual_time_s.to_bits() {
+            return;
+        }
+        let diff = report.virtual_time_s - total;
+        if diff == 0.0 {
+            return;
+        }
+        report.phases.last_mut().expect("non-empty phases").idle_s += diff;
+    }
+}
+
+/// Virtual seconds → integer nanoseconds for histogram cells. Saturates
+/// on (unphysical) negative or overflowing inputs.
+#[inline]
+pub fn secs_to_ns(s: f64) -> u64 {
+    let ns = s * 1e9;
+    if ns <= 0.0 {
+        0
+    } else if ns >= u64::MAX as f64 {
+        u64::MAX
+    } else {
+        ns as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bin_edges_exact_at_powers_of_two() {
+        assert_eq!(Histogram::bin_index(0), 0);
+        assert_eq!(Histogram::bin_lower(0), 0);
+        for k in 0..64 {
+            let v = 1u64 << k;
+            let idx = Histogram::bin_index(v);
+            assert_eq!(idx, k + 1, "2^{k}");
+            assert_eq!(Histogram::bin_lower(idx), v, "2^{k} is its bin's lower edge");
+            if k > 0 {
+                // One below the power of two stays in the previous bin.
+                assert_eq!(Histogram::bin_index(v - 1), k, "2^{k}-1");
+            }
+        }
+        assert_eq!(Histogram::bin_index(u64::MAX), 64);
+    }
+
+    #[test]
+    fn histogram_merge_is_associative() {
+        let sample = |seed: u64| {
+            let mut h = Histogram::new();
+            for i in 0..200u64 {
+                h.observe(seed.wrapping_mul(0x9e37_79b9).wrapping_add(i * i));
+            }
+            h
+        };
+        let (a, b, c) = (sample(1), sample(2), sample(3));
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right);
+        assert_eq!(left.count(), a.count() + b.count() + c.count());
+    }
+
+    #[test]
+    fn registry_merge_drains_and_sums() {
+        let mut a = Registry::new();
+        let mut b = Registry::new();
+        a.add(Ctr::Frames, 3);
+        b.add(Ctr::Frames, 4);
+        b.observe(Hst::WireBytes, 1024);
+        a.merge_from(&mut b);
+        assert_eq!(a.counter(Ctr::Frames), 7);
+        assert_eq!(a.hist(Hst::WireBytes).count(), 1);
+        assert_eq!(b.counter(Ctr::Frames), 0);
+        assert!(b.hist(Hst::WireBytes).is_empty());
+    }
+
+    #[test]
+    fn codec_cost_model_is_affine() {
+        let c = CodecCost {
+            compress_base_ns: 100,
+            compress_per_elem_ns: 2,
+            decompress_base_ns: 50,
+            decompress_per_elem_ns: 1,
+        };
+        assert_eq!(c.compress_ns(0), 100);
+        assert_eq!(c.compress_ns(1000), 2100);
+        assert_eq!(c.decompress_ns(1000), 1050);
+        assert_eq!(CodecCost::FREE.compress_ns(1 << 20), 0);
+    }
+
+    #[test]
+    fn close_breakdown_pins_the_sum_bitwise() {
+        // Deliberately awkward magnitudes: a large makespan against
+        // small attributed pieces, where naive accumulation rounds.
+        let mut r = ObsReport {
+            algo: "test".into(),
+            n: 4,
+            phase_names: vec!["gossip"],
+            virtual_time_s: 1.0e6 + 0.123456789,
+            critical_node: 0,
+            compute_s: 1.0e6,
+            phases: vec![PhaseSplit {
+                serialize_s: 0.1,
+                transfer_s: 0.02,
+                idle_s: 0.003,
+            }],
+            reg: Registry::new(),
+        };
+        close_breakdown(&mut r);
+        assert_eq!(r.breakdown_total().to_bits(), r.virtual_time_s.to_bits());
+        // And a second pass is a no-op.
+        let before = r.phases[0].idle_s;
+        close_breakdown(&mut r);
+        assert_eq!(r.phases[0].idle_s.to_bits(), before.to_bits());
+    }
+
+    #[test]
+    fn secs_to_ns_saturates() {
+        assert_eq!(secs_to_ns(0.0), 0);
+        assert_eq!(secs_to_ns(-1.0), 0);
+        assert_eq!(secs_to_ns(1.5e-9), 1);
+        assert_eq!(secs_to_ns(1.0), 1_000_000_000);
+        assert_eq!(secs_to_ns(f64::INFINITY), u64::MAX);
+    }
+}

@@ -1,0 +1,278 @@
+//! Streaming Perfetto / Chrome `trace_event` export.
+//!
+//! [`TraceWriter`] emits the JSON-object trace format —
+//! `{"displayTimeUnit":…,"traceEvents":[…]}` — through the push
+//! [`JsonWriter`], so exporting is O(1) in trace size: every event goes
+//! straight to the sink as it happens on the virtual clock, nothing is
+//! buffered. The engine gives each node a track (`pid` [`PID_NODES`])
+//! and each directed link a track (`pid` [`PID_LINKS`]); timestamps are
+//! virtual microseconds, so the exported file is bit-identical across
+//! repeats and shard counts, and `chrome://tracing` / ui.perfetto.dev
+//! render the run directly.
+
+use crate::util::json::{Event, JsonPull, JsonWriter};
+use std::io;
+
+/// Track group for per-node tracks (tid = node id).
+pub const PID_NODES: u64 = 1;
+/// Track group for per-link tracks (tid = link id).
+pub const PID_LINKS: u64 = 2;
+
+/// A streaming `trace_event` emitter. Create, name the tracks, emit
+/// spans in any order, then [`TraceWriter::finish`] to close the
+/// document.
+pub struct TraceWriter<W: io::Write> {
+    w: JsonWriter<W>,
+    events: u64,
+}
+
+impl<W: io::Write> TraceWriter<W> {
+    pub fn new(inner: W) -> io::Result<TraceWriter<W>> {
+        let mut w = JsonWriter::new(inner);
+        w.begin_obj()?;
+        w.key("displayTimeUnit")?;
+        w.str("ms")?;
+        w.key("traceEvents")?;
+        w.begin_arr()?;
+        Ok(TraceWriter { w, events: 0 })
+    }
+
+    /// Events emitted so far (metadata included).
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    fn meta(&mut self, kind: &str, pid: u64, tid: u64, name: &str) -> io::Result<()> {
+        self.events += 1;
+        let w = &mut self.w;
+        w.begin_obj()?;
+        w.key("args")?;
+        w.begin_obj()?;
+        w.key("name")?;
+        w.str(name)?;
+        w.end_obj()?;
+        w.key("name")?;
+        w.str(kind)?;
+        w.key("ph")?;
+        w.str("M")?;
+        w.key("pid")?;
+        w.num_u64(pid)?;
+        w.key("tid")?;
+        w.num_u64(tid)?;
+        w.end_obj()
+    }
+
+    /// Name a track group (`process_name` metadata).
+    pub fn process_name(&mut self, pid: u64, name: &str) -> io::Result<()> {
+        self.meta("process_name", pid, 0, name)
+    }
+
+    /// Name one track (`thread_name` metadata).
+    pub fn thread_name(&mut self, pid: u64, tid: u64, name: &str) -> io::Result<()> {
+        self.meta("thread_name", pid, tid, name)
+    }
+
+    /// A complete span (`ph:"X"`) at virtual microseconds `ts_us`.
+    pub fn span(
+        &mut self,
+        pid: u64,
+        tid: u64,
+        name: &str,
+        ts_us: f64,
+        dur_us: f64,
+    ) -> io::Result<()> {
+        self.events += 1;
+        let w = &mut self.w;
+        w.begin_obj()?;
+        w.key("dur")?;
+        w.num(dur_us)?;
+        w.key("name")?;
+        w.str(name)?;
+        w.key("ph")?;
+        w.str("X")?;
+        w.key("pid")?;
+        w.num_u64(pid)?;
+        w.key("tid")?;
+        w.num_u64(tid)?;
+        w.key("ts")?;
+        w.num(ts_us)?;
+        w.end_obj()
+    }
+
+    /// A frame-transit span on a link track, with the endpoints and
+    /// on-wire bytes as args (numeric args: no per-event strings).
+    #[allow(clippy::too_many_arguments)]
+    pub fn frame_span(
+        &mut self,
+        tid: u64,
+        ts_us: f64,
+        dur_us: f64,
+        from: usize,
+        to: usize,
+        bytes: u64,
+    ) -> io::Result<()> {
+        self.events += 1;
+        let w = &mut self.w;
+        w.begin_obj()?;
+        w.key("args")?;
+        w.begin_obj()?;
+        w.key("bytes")?;
+        w.num_u64(bytes)?;
+        w.key("from")?;
+        w.num_u64(from as u64)?;
+        w.key("to")?;
+        w.num_u64(to as u64)?;
+        w.end_obj()?;
+        w.key("dur")?;
+        w.num(dur_us)?;
+        w.key("name")?;
+        w.str("frame")?;
+        w.key("ph")?;
+        w.str("X")?;
+        w.key("pid")?;
+        w.num_u64(PID_LINKS)?;
+        w.key("tid")?;
+        w.num_u64(tid)?;
+        w.key("ts")?;
+        w.num(ts_us)?;
+        w.end_obj()
+    }
+
+    /// Close the document and flush the sink.
+    pub fn finish(mut self) -> io::Result<u64> {
+        self.w.end_arr()?;
+        self.w.end_obj()?;
+        self.w.end_line()?;
+        self.w.flush()?;
+        Ok(self.events)
+    }
+}
+
+/// Summary a validated trace reduces to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceStats {
+    /// Total `traceEvents` entries.
+    pub events: usize,
+    /// Entries that are complete spans (`ph:"X"`).
+    pub spans: usize,
+}
+
+/// Pull-parse a trace document and check its shape: one top-level
+/// object whose `traceEvents` is an array of event objects, each
+/// carrying a `ph`. Used by `decomp obs --validate` and the CI
+/// obs-smoke step; never materializes a tree.
+pub fn validate(text: &str) -> Result<TraceStats, String> {
+    let mut p = JsonPull::new(text);
+    if p.step()? != Event::BeginObj {
+        return Err("trace: top level must be an object".to_string());
+    }
+    let mut stats = TraceStats { events: 0, spans: 0 };
+    let mut saw_events = false;
+    loop {
+        let key = match p.step()? {
+            Event::EndObj => break,
+            Event::Key(k) => k.into_owned(),
+            other => return Err(format!("trace: expected a key, got {other:?}")),
+        };
+        if key != "traceEvents" {
+            p.skip_value().map_err(|e| e.to_string())?;
+            continue;
+        }
+        saw_events = true;
+        if p.step()? != Event::BeginArr {
+            return Err("trace: traceEvents must be an array".to_string());
+        }
+        loop {
+            match p.step()? {
+                Event::EndArr => break,
+                Event::BeginObj => {
+                    stats.events += 1;
+                    let mut depth = 1usize;
+                    let mut ph: Option<String> = None;
+                    let mut at_ph_value = false;
+                    while depth > 0 {
+                        match p.step()? {
+                            Event::BeginObj | Event::BeginArr => {
+                                depth += 1;
+                                at_ph_value = false;
+                            }
+                            Event::EndObj | Event::EndArr => depth -= 1,
+                            Event::Key(k) => at_ph_value = depth == 1 && k == "ph",
+                            Event::Str(s) if at_ph_value => {
+                                ph = Some(s.into_owned());
+                                at_ph_value = false;
+                            }
+                            _ => at_ph_value = false,
+                        }
+                    }
+                    match ph.as_deref() {
+                        Some("X") => stats.spans += 1,
+                        Some(_) => {}
+                        None => {
+                            return Err(format!("trace: event {} has no 'ph'", stats.events));
+                        }
+                    }
+                }
+                other => return Err(format!("trace: events must be objects, got {other:?}")),
+            }
+        }
+    }
+    if !saw_events {
+        return Err("trace: missing 'traceEvents'".to_string());
+    }
+    if p.step()? != Event::End {
+        return Err("trace: trailing data after the document".to_string());
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn tiny_trace() -> String {
+        let mut buf = Vec::new();
+        let mut t = TraceWriter::new(&mut buf).unwrap();
+        t.process_name(PID_NODES, "nodes").unwrap();
+        t.thread_name(PID_NODES, 0, "node 0").unwrap();
+        t.span(PID_NODES, 0, "compute", 0.0, 50.0).unwrap();
+        t.frame_span(3, 50.0, 12.5, 0, 1, 4096).unwrap();
+        let events = t.finish().unwrap();
+        assert_eq!(events, 4);
+        String::from_utf8(buf).unwrap()
+    }
+
+    #[test]
+    fn emits_parseable_trace_event_json() {
+        let text = tiny_trace();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("M"));
+        let span = &events[2];
+        assert_eq!(span.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(span.get("name").unwrap().as_str(), Some("compute"));
+        assert_eq!(span.get("dur").unwrap().as_f64(), Some(50.0));
+        let frame = &events[3];
+        assert_eq!(frame.get("args").unwrap().get("bytes").unwrap().as_usize(), Some(4096));
+        assert_eq!(frame.get("pid").unwrap().as_usize(), Some(PID_LINKS as usize));
+    }
+
+    #[test]
+    fn validate_accepts_good_and_rejects_broken() {
+        let text = tiny_trace();
+        let stats = validate(&text).unwrap();
+        assert_eq!(stats, TraceStats { events: 4, spans: 2 });
+        assert!(validate("[1,2]").is_err());
+        assert!(validate(r#"{"traceEvents":[{"name":"no-ph"}]}"#).is_err());
+        assert!(validate(r#"{"traceEvents":[42]}"#).is_err());
+        assert!(validate(r#"{"notEvents":[]}"#).is_err());
+    }
+
+    #[test]
+    fn emission_is_deterministic() {
+        assert_eq!(tiny_trace(), tiny_trace());
+    }
+}

@@ -31,6 +31,10 @@ pub struct JobRequest {
     pub compute_ms: f64,
     /// Include the full per-cell trace points in the result frame.
     pub trace: bool,
+    /// Run the grid with the instrumentation plane on: `progress`
+    /// frames gain a compact counter snapshot and `result` frames the
+    /// per-phase time breakdown.
+    pub obs: bool,
 }
 
 impl Default for JobRequest {
@@ -47,6 +51,7 @@ impl Default for JobRequest {
             latency_ms: 5.0,
             compute_ms: 0.0,
             trace: false,
+            obs: false,
         }
     }
 }
@@ -153,6 +158,7 @@ impl JobRequest {
                 "latency_ms" => job.latency_ms = expect_f64(&mut p, &key)?,
                 "compute_ms" => job.compute_ms = expect_f64(&mut p, &key)?,
                 "trace" => job.trace = expect_bool(&mut p, &key)?,
+                "obs" => job.obs = expect_bool(&mut p, &key)?,
                 other => return Err(format!("job: unknown field '{other}'")),
             }
         }
@@ -249,6 +255,9 @@ mod tests {
         assert_eq!(job.id, "job");
         assert!((job.bandwidth_mbps - 5.0).abs() < 1e-12);
         assert!(!job.trace);
+        assert!(!job.obs);
+        let with_obs = JobRequest::parse(r#"{"algo":"dpsgd","compressor":"fp32","obs":true}"#);
+        assert!(with_obs.unwrap().obs);
     }
 
     #[test]

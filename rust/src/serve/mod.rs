@@ -13,10 +13,14 @@
 //! | frame      | when                              | keys                          |
 //! |------------|-----------------------------------|-------------------------------|
 //! | `accepted` | job parsed + every cell admitted  | `cells`, `id`                 |
-//! | `progress` | a cell completes (completion order) | `cell`, `completed`, `id`, `total` |
-//! | `result`   | right after its `progress` frame  | `algo`, `bytes_sent`, `compressor`, `final_loss`, `id`, `iters`, `sim_time_s`, `trace`? |
+//! | `progress` | a cell completes (completion order) | `cell`, `completed`, `counters`?, `id`, `total` |
+//! | `result`   | right after its `progress` frame  | `algo`, `bytes_by_node`, `bytes_sent`, `compressor`, `final_loss`, `frames_dropped`, `id`, `iters`, `obs`?, `sim_time_s`, `trace`? |
 //! | `error`    | malformed line, inadmissible job, or a failed cell | `cell`?, `error`, `id` |
 //! | `done`     | the whole grid has run            | `cells`, `failed`, `id`       |
+//!
+//! `counters` (a compact snapshot of the instrumentation registry) and
+//! `obs` (the per-phase "where did the time go" breakdown) appear when
+//! the job sets `"obs": true`.
 //!
 //! Malformed input is answered with a structured `error` frame — the
 //! loop never exits on bad jobs, only on input/output I/O failure. All
@@ -27,11 +31,13 @@ pub mod job;
 
 pub use job::{peek_id, Cell, JobRequest};
 
-use crate::algorithms::driver::TrainTrace;
 use crate::algorithms::RunOpts;
+use crate::coordinator::{ObsSettings, SimTraced};
 use crate::experiments::runner;
 use crate::network::cost::{CostModel, NetworkModel};
 use crate::network::sim::SimOpts;
+use crate::obs::{Ctr, ObsReport};
+use crate::spec::ObsSpec;
 use crate::util::json::JsonWriter;
 use std::io::{self, BufRead, Write};
 
@@ -109,6 +115,7 @@ fn progress_frame<W: Write>(
     cell: &Cell,
     completed: usize,
     total: usize,
+    obs: Option<&ObsReport>,
 ) -> io::Result<()> {
     frame(out, |w| {
         w.begin_obj()?;
@@ -118,6 +125,19 @@ fn progress_frame<W: Write>(
         w.str(&format!("{}/{}", cell.algo, cell.compressor))?;
         w.key("completed")?;
         w.num_u64(completed as u64)?;
+        if let Some(report) = obs {
+            w.key("counters")?;
+            w.begin_obj()?;
+            w.key("frames")?;
+            w.num_u64(report.reg.counter(Ctr::Frames))?;
+            w.key("frames_dropped")?;
+            w.num_u64(report.reg.counter(Ctr::FramesDropped))?;
+            w.key("msgs")?;
+            w.num_u64(report.reg.counter(Ctr::Msgs))?;
+            w.key("payload_bytes")?;
+            w.num_u64(report.reg.counter(Ctr::PayloadBytes))?;
+            w.end_obj()?;
+        }
         w.key("id")?;
         w.str(id)?;
         w.key("total")?;
@@ -130,8 +150,9 @@ fn result_frame<W: Write>(
     out: &mut W,
     job: &JobRequest,
     cell: &Cell,
-    trace: &TrainTrace,
+    traced: &SimTraced,
 ) -> io::Result<()> {
+    let trace = &traced.trace;
     let (bytes_sent, sim_time_s) = trace
         .points
         .last()
@@ -143,16 +164,50 @@ fn result_frame<W: Write>(
         w.str("result")?;
         w.key("algo")?;
         w.str(&cell.algo)?;
+        w.key("bytes_by_node")?;
+        w.begin_arr()?;
+        for r in &traced.run.reports {
+            w.num_u64(r.bytes_sent)?;
+        }
+        w.end_arr()?;
         w.key("bytes_sent")?;
         w.num_u64(bytes_sent)?;
         w.key("compressor")?;
         w.str(&cell.compressor)?;
         w.key("final_loss")?;
         w.num(trace.final_loss())?;
+        w.key("frames_dropped")?;
+        w.num_u64(traced.run.frames_dropped)?;
         w.key("id")?;
         w.str(&job.id)?;
         w.key("iters")?;
         w.num_u64(cell.cfg.iters as u64)?;
+        if let Some(report) = &traced.run.obs {
+            w.key("obs")?;
+            w.begin_obj()?;
+            w.key("compute_s")?;
+            w.num(report.compute_s)?;
+            w.key("critical_node")?;
+            w.num_u64(report.critical_node as u64)?;
+            w.key("phases")?;
+            w.begin_arr()?;
+            for (p, split) in report.phases.iter().enumerate() {
+                w.begin_obj()?;
+                w.key("idle_s")?;
+                w.num(split.idle_s)?;
+                w.key("name")?;
+                w.str(report.phase_names.get(p).copied().unwrap_or("phase"))?;
+                w.key("serialize_s")?;
+                w.num(split.serialize_s)?;
+                w.key("transfer_s")?;
+                w.num(split.transfer_s)?;
+                w.end_obj()?;
+            }
+            w.end_arr()?;
+            w.key("virtual_time_s")?;
+            w.num(report.virtual_time_s)?;
+            w.end_obj()?;
+        }
         w.key("sim_time_s")?;
         w.num(sim_time_s)?;
         if job.trace {
@@ -165,7 +220,7 @@ fn result_frame<W: Write>(
 
 /// Run one admitted cell on the discrete-event backend — the same
 /// construction path as `decomp train --backend sim`.
-fn run_cell(cell: &Cell, job: &JobRequest) -> Result<TrainTrace, String> {
+fn run_cell(cell: &Cell, job: &JobRequest) -> Result<SimTraced, String> {
     let session = cell
         .cfg
         .experiment_spec()
@@ -186,8 +241,12 @@ fn run_cell(cell: &Cell, job: &JobRequest) -> Result<TrainTrace, String> {
         compute_per_iter_s: job.compute_ms * 1e-3,
         scenario: None,
     };
+    let obs = ObsSettings {
+        spec: if job.obs { ObsSpec::Counters } else { ObsSpec::Off },
+        trace_out: None,
+    };
     session
-        .run_sim_trace(models, &eval_models, &x0, &opts, sim)
+        .run_sim_traced(models, &eval_models, &x0, &opts, sim, obs)
         .map_err(err_str)
 }
 
@@ -251,14 +310,15 @@ pub fn serve<R: BufRead, W: Write>(
             threads,
             &cells,
             |_, cell| run_cell(cell, &job),
-            |i, res: &Result<TrainTrace, String>| {
+            |i, res: &Result<SimTraced, String>| {
                 if io_err.is_some() {
                     return;
                 }
                 completed += 1;
-                let wrote = progress_frame(&mut out, &job.id, &cells[i], completed, total)
+                let obs = res.as_ref().ok().and_then(|t| t.run.obs.as_ref());
+                let wrote = progress_frame(&mut out, &job.id, &cells[i], completed, total, obs)
                     .and_then(|()| match res {
-                        Ok(trace) => result_frame(&mut out, &job, &cells[i], trace),
+                        Ok(traced) => result_frame(&mut out, &job, &cells[i], traced),
                         Err(msg) => {
                             failed += 1;
                             let cell = format!("{}/{}", cells[i].algo, cells[i].compressor);
@@ -365,6 +425,32 @@ mod tests {
         assert_eq!(result.get("algo").unwrap().as_str(), Some("dpsgd"));
         assert!(result.get("final_loss").unwrap().as_f64().unwrap().is_finite());
         assert!(result.get("trace").is_none(), "trace off by default");
+        assert!(result.get("obs").is_none(), "obs off by default");
+        // Per-node accounting: one entry per node, summing to the total.
+        let by_node = result.get("bytes_by_node").unwrap().as_arr().unwrap();
+        assert_eq!(by_node.len(), 4);
+        let sum: f64 = by_node.iter().map(|v| v.as_f64().unwrap()).sum();
+        assert_eq!(result.get("bytes_sent").unwrap().as_f64(), Some(sum));
+        assert_eq!(result.get("frames_dropped").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn obs_job_adds_counters_and_breakdown() {
+        let line = SMALL
+            .replace('\n', " ")
+            .replace(r#""id":"t1""#, r#""id":"t2","obs":true"#);
+        let (stats, frames) = run_lines(&format!("{line}\n"));
+        assert_eq!(stats.jobs_ok, 1);
+        let progress = &frames[1];
+        let counters = progress.get("counters").unwrap();
+        assert!(counters.get("frames").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(counters.get("frames_dropped").unwrap().as_f64(), Some(0.0));
+        let result = &frames[2];
+        let obs = result.get("obs").unwrap();
+        let phases = obs.get("phases").unwrap().as_arr().unwrap();
+        assert_eq!(phases.len(), 1);
+        assert_eq!(phases[0].get("name").unwrap().as_str(), Some("gossip"));
+        assert!(obs.get("virtual_time_s").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -27,9 +27,11 @@
 //! constructs on the sim backend), so the CLI surface and the code can
 //! never silently drift apart.
 
+pub mod obs;
 pub mod registry;
 pub mod scenario;
 
+pub use obs::ObsSpec;
 pub use registry::{
     AlgoEntry, CompressorFamily, TopologyFamily, COMPRESSOR_FAMILIES, REGISTRY, TOPOLOGY_FAMILIES,
 };
@@ -757,6 +759,55 @@ impl Session {
             opts,
             sim,
         )
+    }
+
+    /// [`Session::run_sim_trace`] with the instrumentation plane
+    /// attached: the engine is closed with its [`SimRun`], whose `obs`
+    /// field carries the counter registry, the per-phase time
+    /// breakdown, and (at `obs.spec == trace`) streams the Perfetto
+    /// export into `obs.trace_out` as the run executes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_sim_traced(
+        &self,
+        models: Vec<Box<dyn GradientModel>>,
+        eval_models: &[Box<dyn GradientModel>],
+        x0: &[f32],
+        opts: &RunOpts,
+        sim: SimOpts,
+        obs: crate::coordinator::ObsSettings,
+    ) -> anyhow::Result<crate::coordinator::SimTraced> {
+        let (cfg, sim) = self.bind_scenario(sim)?;
+        crate::coordinator::run_sim_traced_entry(
+            self.entry,
+            &cfg,
+            models,
+            eval_models,
+            x0,
+            opts,
+            sim,
+            obs,
+        )
+    }
+
+    /// [`Session::run_threaded`] with per-worker counter registries,
+    /// merged in node order (bit-deterministic across schedules).
+    pub fn run_threaded_obs(
+        &self,
+        models: Vec<Box<dyn GradientModel>>,
+        x0: &[f32],
+        gamma: f32,
+        iters: usize,
+    ) -> anyhow::Result<(ThreadedRun, crate::obs::Registry)> {
+        let (run, reg) = crate::coordinator::run_threaded_entry_obs(
+            self.entry,
+            &self.cfg,
+            models,
+            x0,
+            gamma,
+            iters,
+            true,
+        )?;
+        Ok((run, reg.expect("obs=true always yields a registry")))
     }
 }
 

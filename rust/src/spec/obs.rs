@@ -1,0 +1,101 @@
+//! Typed observation knob: how much of the instrumentation plane
+//! ([`crate::obs`]) a run switches on.
+//!
+//! Same contract as the sibling [`ScenarioSpec`](super::ScenarioSpec):
+//! a total `FromStr` ↔ `Display` round-trip shared by the CLI
+//! (`--obs`), config files, and serve jobs, so every surface parses the
+//! observation level through exactly one grammar.
+
+use super::SpecParseError;
+use std::fmt;
+use std::str::FromStr;
+
+/// Observation level for a run. Levels are cumulative: `Trace` implies
+/// everything `Counters` records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ObsSpec {
+    /// No instrumentation — the engine pays one dead branch per
+    /// already-rare event and allocates nothing.
+    #[default]
+    Off,
+    /// Counters, histograms, and the per-phase time breakdown.
+    Counters,
+    /// Counters plus the streaming Perfetto `trace_event` export
+    /// (needs a sink: `--trace-out`).
+    Trace,
+}
+
+fn reject(given: &str) -> SpecParseError {
+    SpecParseError {
+        kind: "obs",
+        given: given.to_string(),
+        registered: "off, counters, trace".to_string(),
+    }
+}
+
+impl ObsSpec {
+    /// Whether counters (and the breakdown) are recorded.
+    pub fn counters_on(self) -> bool {
+        self != ObsSpec::Off
+    }
+
+    /// Whether the Perfetto trace stream is requested.
+    pub fn trace_on(self) -> bool {
+        self == ObsSpec::Trace
+    }
+}
+
+impl fmt::Display for ObsSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ObsSpec::Off => "off",
+            ObsSpec::Counters => "counters",
+            ObsSpec::Trace => "trace",
+        })
+    }
+}
+
+impl FromStr for ObsSpec {
+    type Err = SpecParseError;
+
+    fn from_str(s: &str) -> Result<ObsSpec, SpecParseError> {
+        match s {
+            "off" | "none" => Ok(ObsSpec::Off),
+            "counters" => Ok(ObsSpec::Counters),
+            "trace" => Ok(ObsSpec::Trace),
+            other => Err(reject(other)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_display_round_trips() {
+        for s in ["off", "counters", "trace"] {
+            let spec: ObsSpec = s.parse().unwrap();
+            assert_eq!(spec.to_string(), s);
+            assert_eq!(spec.to_string().parse::<ObsSpec>().unwrap(), spec);
+        }
+        assert_eq!("none".parse::<ObsSpec>().unwrap(), ObsSpec::Off);
+        assert_eq!(ObsSpec::default(), ObsSpec::Off);
+    }
+
+    #[test]
+    fn rejects_unknown_levels() {
+        let err = "verbose".parse::<ObsSpec>().unwrap_err();
+        assert_eq!(err.kind, "obs");
+        assert!(err.to_string().contains("counters"), "{err}");
+    }
+
+    #[test]
+    fn levels_are_cumulative() {
+        assert!(!ObsSpec::Off.counters_on());
+        assert!(ObsSpec::Counters.counters_on());
+        assert!(!ObsSpec::Counters.trace_on());
+        assert!(ObsSpec::Trace.counters_on());
+        assert!(ObsSpec::Trace.trace_on());
+    }
+}

@@ -22,6 +22,7 @@ use decomp::coordinator::program::build_program;
 use decomp::data::{build_models, ModelKind, SynthSpec};
 use decomp::network::cost::{CostModel, NetworkModel};
 use decomp::network::sim::{LinkTable, NodeProgram, SimEngine, SimOpts};
+use decomp::obs::CodecCost;
 use decomp::spec::{ScenarioRuntime, ScenarioSpec};
 use decomp::topology::{Graph, MixingMatrix, Topology};
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -63,7 +64,7 @@ fn alloc_count() -> u64 {
 /// The `@n64` sweep-cell shape (64-ring, dim-1024 quadratic shards,
 /// worst §5.2 condition) on the small-n dense delivery plan.
 fn steady_state_allocs(algo: &str, compressor: &str, scenario: &str) -> u64 {
-    steady_state_allocs_at(algo, compressor, scenario, 64, 1024, false)
+    steady_state_allocs_at(algo, compressor, scenario, 64, 1024, false, false)
 }
 
 /// Build an n-node ring cell for one algorithm × compressor, run it to
@@ -71,6 +72,9 @@ fn steady_state_allocs(algo: &str, compressor: &str, scenario: &str) -> u64 {
 /// iterations. `sparse` routes through the CSR link-keyed slot table
 /// (O(edges)) instead of the dense all-pairs plan (O(n²)) — mandatory at
 /// n = 4096, where dense slot headers alone would cost a gibibyte.
+/// `obs` runs the cell with the counters-level instrumentation plane
+/// enabled — its registries are preallocated `u64` cells, so the
+/// zero-allocation contract must hold unchanged.
 fn steady_state_allocs_at(
     algo: &str,
     compressor: &str,
@@ -78,6 +82,7 @@ fn steady_state_allocs_at(
     n: usize,
     dim: usize,
     sparse: bool,
+    obs: bool,
 ) -> u64 {
     let iters = 25usize;
     let spec = SynthSpec {
@@ -123,6 +128,9 @@ fn steady_state_allocs_at(
     } else {
         SimEngine::new(n, opts)
     };
+    if obs {
+        engine.enable_obs(algo, CodecCost::per_elem(4, 1));
+    }
 
     // Warm-up: fills the wire/frame pools, the delivery slots, the
     // arrival heap, and every scratch buffer to steady-state capacity.
@@ -191,7 +199,7 @@ fn sim_step_allocates_nothing_after_warmup_at_n64() {
     // n=4096 ring on the sparse CSR slot table: the zero-allocation
     // contract survives the scale jump — slot lookups are binary searches
     // over degree-2 rows, and the pools behave exactly as at n=64.
-    let big = steady_state_allocs_at("dpsgd", "fp32", "static", 4096, 64, true);
+    let big = steady_state_allocs_at("dpsgd", "fp32", "static", 4096, 64, true, false);
     assert_eq!(
         big, 0,
         "SimEngine::step allocated {big} time(s) in steady state \
@@ -199,10 +207,26 @@ fn sim_step_allocates_nothing_after_warmup_at_n64() {
     );
     // ... including the drop path at that scale (PR 6's lossy-link pin,
     // re-pinned on the sparse layout).
-    let bigp = steady_state_allocs_at("dpsgd", "fp32", "drop_p20", 4096, 64, true);
+    let bigp = steady_state_allocs_at("dpsgd", "fp32", "drop_p20", 4096, 64, true, false);
     assert_eq!(
         bigp, 0,
         "SimEngine::step allocated {bigp} time(s) in steady state \
          (expected zero after warm-up for dpsgd_fp32@n4096 under drop_p20)"
+    );
+    // The instrumentation plane's own acceptance pin: counters-level
+    // observation is registries of preallocated u64 cells, so enabling
+    // it must not reopen the allocator — neither on the stateless-codec
+    // cell nor on the link-state compressor with a nonzero codec cost.
+    let o = steady_state_allocs_at("dpsgd", "q8", "static", 64, 1024, false, true);
+    assert_eq!(
+        o, 0,
+        "SimEngine::step allocated {o} time(s) in steady state \
+         (expected zero after warm-up for observed dpsgd_q8@n64)"
+    );
+    let oc = steady_state_allocs_at("choco", "topk_25", "static", 64, 1024, false, true);
+    assert_eq!(
+        oc, 0,
+        "SimEngine::step allocated {oc} time(s) in steady state \
+         (expected zero after warm-up for observed choco_topk_25@n64)"
     );
 }

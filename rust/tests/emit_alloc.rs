@@ -13,6 +13,7 @@
 //! concurrently running test would pollute the global counter.
 
 use decomp::algorithms::{TracePoint, TrainTrace};
+use decomp::obs::{Ctr, Hst, Registry};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -99,4 +100,28 @@ fn trace_emission_allocations_are_constant_in_point_count() {
              expected only the writer's fixed bitstack state"
         );
     }
+
+    // The instrumentation plane's registry is preallocated inline state:
+    // recording counters, observing histograms, and the shard-order
+    // merge are array writes and must allocate exactly zero times.
+    // (Same file, same test: the global counter stays unpolluted.)
+    let mut a = Registry::new();
+    let mut b = Registry::new();
+    let before = alloc_count();
+    for i in 0..100_000u64 {
+        a.add(Ctr::Frames, 1);
+        a.add(Ctr::PayloadBytes, i);
+        a.observe(Hst::WireBytes, i);
+        b.observe(Hst::FrameLatencyNs, i.wrapping_mul(0x9e37_79b9));
+        if i % 1024 == 0 {
+            a.merge_from(&mut b);
+        }
+    }
+    let reg_allocs = alloc_count() - before;
+    assert_eq!(
+        reg_allocs, 0,
+        "registry record/merge allocated {reg_allocs} time(s); \
+         counters and histograms must be preallocated inline cells"
+    );
+    assert_eq!(a.counter(Ctr::Frames), 100_000);
 }

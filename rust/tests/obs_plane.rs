@@ -1,0 +1,288 @@
+//! Integration pins for the instrumentation plane.
+//!
+//! What the plane promises (DESIGN.md §7b) and this file enforces
+//! through public API only:
+//!
+//! - log2 histogram bins bracket every `u64` sample, with powers of two
+//!   exact on lower edges;
+//! - registries merged in shard order reproduce the serial totals for
+//!   any partition of the sample stream;
+//! - an instrumented run — counters, breakdown, *and the streamed
+//!   Perfetto export* — is bit-identical across repeats and across
+//!   event-loop shard counts;
+//! - the n = 4 export has the pinned structure (track metadata per node
+//!   and per directed link, one `frame` span per charged frame whose
+//!   bytes sum to the run's on-wire total);
+//! - through `Session::run_sim_traced`, the per-phase breakdown sums
+//!   *bitwise* to the run's virtual time and the counters agree with
+//!   the engine's own accounting.
+
+use decomp::algorithms::{AlgoConfig, RunOpts};
+use decomp::compression;
+use decomp::coordinator::program::build_program;
+use decomp::coordinator::ObsSettings;
+use decomp::data::{build_models, ModelKind, SynthSpec};
+use decomp::network::cost::{CostModel, NetworkModel};
+use decomp::network::sim::{LinkTable, NodeProgram, SimEngine, SimOpts, SimRun};
+use decomp::obs::trace::validate;
+use decomp::obs::{CodecCost, Ctr, Histogram, Hst, Registry};
+use decomp::spec::{ExperimentSpec, ObsSpec, TopologySpec};
+use decomp::topology::{Graph, MixingMatrix, Topology};
+use decomp::util::json::Json;
+use decomp::util::rng::Pcg64;
+use std::io;
+use std::sync::{Arc, Mutex};
+
+#[test]
+fn histogram_bins_bracket_every_sample() {
+    // Property: for arbitrary magnitudes, the assigned bin's lower edge
+    // is ≤ the sample and the next bin's lower edge is > it.
+    let mut rng = Pcg64::new(0x0b5_b1, 1);
+    for _ in 0..4096 {
+        let v = rng.next_u64() >> (rng.next_u64() % 64);
+        let i = Histogram::bin_index(v);
+        let lo = Histogram::bin_lower(i);
+        assert!(lo <= v, "bin {i} lower edge {lo} above sample {v}");
+        if i < 64 {
+            assert!(v < Histogram::bin_lower(i + 1), "{v} beyond bin {i}");
+        }
+    }
+    // Powers of two land exactly on lower edges; their predecessors
+    // stay one bin below.
+    for k in 1..64 {
+        let v = 1u64 << k;
+        assert_eq!(Histogram::bin_lower(Histogram::bin_index(v)), v);
+        assert_eq!(Histogram::bin_index(v - 1), Histogram::bin_index(v) - 1);
+    }
+}
+
+#[test]
+fn shard_partitioned_registries_merge_to_the_serial_totals() {
+    // The engine's determinism story rests on this: u64 cells make the
+    // shard merge independent of how samples were partitioned.
+    let mut rng = Pcg64::new(7, 2);
+    let samples: Vec<u64> = (0..1000).map(|_| rng.next_u64() >> 32).collect();
+    let mut serial = Registry::new();
+    for &v in &samples {
+        serial.add(Ctr::PayloadBytes, v);
+        serial.observe(Hst::WireBytes, v);
+    }
+    for k in [2usize, 3, 4, 7] {
+        let mut parts: Vec<Registry> = (0..k).map(|_| Registry::new()).collect();
+        for (i, &v) in samples.iter().enumerate() {
+            parts[i % k].add(Ctr::PayloadBytes, v);
+            parts[i % k].observe(Hst::WireBytes, v);
+        }
+        let mut merged = Registry::new();
+        for p in parts.iter_mut() {
+            merged.merge_from(p);
+            assert_eq!(p.counter(Ctr::PayloadBytes), 0, "merge_from drains");
+        }
+        assert_eq!(merged, serial, "merge of {k} partitions");
+    }
+}
+
+/// Shared sink so the trace bytes survive the boxed writer.
+#[derive(Clone, Default)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl io::Write for SharedBuf {
+    fn write(&mut self, b: &[u8]) -> io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(b);
+        Ok(b.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// One instrumented dpsgd_q8 ring cell on the event engine, with the
+/// Perfetto export captured: returns the trace text and the run.
+fn traced_run(n: usize, shards: usize) -> (String, SimRun) {
+    let iters = 12usize;
+    let spec = SynthSpec {
+        n_nodes: n,
+        dim: 32,
+        rows_per_node: 8,
+        ..Default::default()
+    };
+    let (models, x0) = build_models(&ModelKind::Quadratic { spread: 1.0, noise: 0.1 }, &spec);
+    let (comp, link) = compression::resolve_name("q8").expect("compressor");
+    let mixing = Arc::new(MixingMatrix::uniform(Graph::build(Topology::Ring, n)));
+    let cfg = AlgoConfig {
+        mixing,
+        compressor: comp,
+        seed: 0x0b5,
+        eta: 1.0,
+        link,
+        scenario: None,
+    };
+    let mut programs: Vec<Box<dyn NodeProgram>> = models
+        .into_iter()
+        .enumerate()
+        .map(|(node, model)| {
+            build_program("dpsgd", &cfg, node, model, &x0, 0.05, iters).expect("program")
+        })
+        .collect();
+    let opts = SimOpts {
+        cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+        compute_per_iter_s: 0.01,
+        scenario: None,
+    };
+    let links = LinkTable::from_graph(&cfg.mixing.graph).expect("ring links");
+    let mut engine = SimEngine::with_links(n, opts, links, shards);
+    engine.enable_obs("dpsgd_q8", CodecCost::per_elem(2, 1));
+    let buf = SharedBuf::default();
+    engine.set_trace_writer(Box::new(buf.clone())).unwrap();
+    for t in 0..iters as u64 {
+        engine.step(&mut programs, t);
+    }
+    let run = engine.finish(programs);
+    let bytes = buf.0.lock().unwrap().clone();
+    (String::from_utf8(bytes).unwrap(), run)
+}
+
+#[test]
+fn instrumented_run_is_bit_identical_across_shards_and_repeats() {
+    let (base_text, base_run) = traced_run(6, 1);
+    let base_obs = base_run.obs.as_ref().expect("obs enabled");
+    for shards in [2usize, 4] {
+        let (text, run) = traced_run(6, shards);
+        assert_eq!(text, base_text, "trace bytes at {shards} shards");
+        let obs = run.obs.as_ref().unwrap();
+        assert_eq!(obs.reg, base_obs.reg, "registry at {shards} shards");
+        assert_eq!(run.virtual_time_s.to_bits(), base_run.virtual_time_s.to_bits());
+        assert_eq!(
+            obs.breakdown_total().to_bits(),
+            base_obs.breakdown_total().to_bits()
+        );
+    }
+    // A repeat at the same shard count is bytewise identical too.
+    let (again, _) = traced_run(6, 1);
+    assert_eq!(again, base_text, "trace bytes across repeats");
+}
+
+#[test]
+fn perfetto_export_structure_pins_at_n4() {
+    let (text, run) = traced_run(4, 1);
+    let stats = validate(&text).expect("export validates");
+    let doc = Json::parse(&text).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), stats.events);
+
+    // Track metadata: both process groups, one track per node, one per
+    // directed ring link (2n).
+    let metas: Vec<(&str, &str)> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+        .map(|e| {
+            let args_name = e.get("args").unwrap().get("name").unwrap();
+            (
+                e.get("name").unwrap().as_str().unwrap(),
+                args_name.as_str().unwrap(),
+            )
+        })
+        .collect();
+    assert!(metas.contains(&("process_name", "nodes")));
+    assert!(metas.contains(&("process_name", "links")));
+    let tracks = |pred: &dyn Fn(&str) -> bool| {
+        metas
+            .iter()
+            .filter(|&&(k, v)| k == "thread_name" && pred(v))
+            .count()
+    };
+    assert_eq!(tracks(&|v| v.starts_with("node ")), 4);
+    assert_eq!(tracks(&|v| v.starts_with("link ")), 8);
+
+    // Exactly one `frame` span per charged frame; their byte args sum
+    // to the run's on-wire total; every span sits on the virtual clock.
+    let mut frame_spans = 0u64;
+    let mut frame_bytes = 0u64;
+    for e in events {
+        if e.get("ph").and_then(|p| p.as_str()) != Some("X") {
+            continue;
+        }
+        assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0, "{e:?}");
+        assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0, "{e:?}");
+        let name = e.get("name").unwrap().as_str().unwrap();
+        assert!(matches!(name, "compute" | "wait" | "frame"), "{name}");
+        if name == "frame" {
+            frame_spans += 1;
+            frame_bytes += e.get("args").unwrap().get("bytes").unwrap().as_usize().unwrap() as u64;
+        }
+    }
+    assert_eq!(frame_spans, run.frames);
+    assert_eq!(frame_bytes, run.frame_bytes);
+}
+
+#[test]
+fn session_breakdown_closes_bitwise_and_counters_agree() {
+    let spec = SynthSpec {
+        n_nodes: 8,
+        dim: 16,
+        rows_per_node: 8,
+        ..Default::default()
+    };
+    let kind = ModelKind::Quadratic { spread: 1.0, noise: 0.1 };
+    let (models, x0) = build_models(&kind, &spec);
+    let (eval_models, _) = build_models(&kind, &spec);
+    let exp = ExperimentSpec {
+        algo: "choco".parse().unwrap(),
+        compressor: "topk_25".parse().unwrap(),
+        topology: TopologySpec::Ring,
+        n_nodes: 8,
+        seed: 11,
+        eta: 0.5,
+        scenario: Default::default(),
+    };
+    let session = exp.session().unwrap();
+    let opts = RunOpts {
+        iters: 10,
+        gamma: 0.05,
+        eval_every: 5,
+        ..RunOpts::default()
+    };
+    let sim = SimOpts {
+        cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+        compute_per_iter_s: 0.01,
+        scenario: None,
+    };
+    let obs_on = ObsSettings {
+        spec: ObsSpec::Counters,
+        trace_out: None,
+    };
+    let traced = session
+        .run_sim_traced(models, &eval_models, &x0, &opts, sim.clone(), obs_on)
+        .unwrap();
+    let obs = traced.run.obs.as_ref().expect("counters on");
+
+    // The acceptance pin: compute + per-phase splits sum to the virtual
+    // clock bitwise, not approximately.
+    assert_eq!(obs.breakdown_total().to_bits(), traced.run.virtual_time_s.to_bits());
+    assert_eq!(obs.n, 8);
+    assert_eq!(obs.reg.counter(Ctr::Frames), traced.run.frames);
+    assert_eq!(obs.reg.counter(Ctr::PayloadBytes), traced.run.payload_bytes);
+    assert_eq!(obs.reg.counter(Ctr::FrameBytes), traced.run.frame_bytes);
+    assert_eq!(obs.reg.hist(Hst::WireBytes).count(), traced.run.frames);
+    assert!(obs.codec_virtual_s() > 0.0, "top-k codec cost recorded");
+    assert_eq!(
+        traced.trace.points.last().unwrap().bytes_sent,
+        traced.run.payload_bytes
+    );
+
+    // The observed trajectory is the plain trajectory: observation never
+    // moves the clock or the losses.
+    let (models2, _) = build_models(&kind, &spec);
+    let plain = session
+        .run_sim_traced(models2, &eval_models, &x0, &opts, sim, ObsSettings::off())
+        .unwrap();
+    assert!(plain.run.obs.is_none());
+    assert_eq!(
+        plain.run.virtual_time_s.to_bits(),
+        traced.run.virtual_time_s.to_bits()
+    );
+    for (a, b) in plain.trace.points.iter().zip(&traced.trace.points) {
+        assert_eq!(a.global_loss.to_bits(), b.global_loss.to_bits());
+    }
+}

@@ -15,6 +15,9 @@ const BAD_JOB: &str = r#"{"id":"bad-job","algoz":["dpsgd"]}"#;
 const TRACED_JOB: &str = r#"{"id":"traced","algo":"dcd","compressor":"q8",
     "nodes":4,"iters":4,"eval_every":2,"dim":8,"rows_per_node":16,"batch":4,
     "model":"quadratic","trace":true}"#;
+const OBS_JOB: &str = r#"{"id":"obs","algo":"choco","compressor":"topk_25",
+    "nodes":4,"iters":4,"eval_every":2,"dim":8,"rows_per_node":16,"batch":4,
+    "model":"quadratic","obs":true}"#;
 
 fn session() -> String {
     // The raw literals are wrapped for line width; a job must be ONE line.
@@ -104,6 +107,36 @@ fn two_jobs_and_a_malformed_line_stream_the_expected_frames() {
     for p in points {
         assert!(p.get("iter").is_some() && p.get("bytes_sent").is_some(), "{p:?}");
     }
+}
+
+#[test]
+fn obs_job_reports_per_node_bytes_and_breakdown() {
+    let (stats, raw) = run(&format!("{}\n", OBS_JOB.replace('\n', " ")), 1);
+    assert_eq!(stats.jobs_ok, 1);
+    let frames = frames(&raw);
+    let progress = &frames[1];
+    let counters = field(progress, "counters");
+    assert!(field(counters, "frames").as_f64().unwrap() > 0.0);
+    assert_eq!(field(counters, "frames_dropped").as_f64(), Some(0.0));
+
+    let result = &frames[2];
+    let by_node = field(result, "bytes_by_node").as_arr().unwrap();
+    assert_eq!(by_node.len(), 4, "one bytes entry per node");
+    let sum: f64 = by_node.iter().map(|v| v.as_f64().unwrap()).sum();
+    assert_eq!(field(result, "bytes_sent").as_f64(), Some(sum));
+    assert_eq!(field(result, "frames_dropped").as_f64(), Some(0.0));
+
+    // The embedded breakdown closes: compute + per-phase splits account
+    // for the whole virtual clock (up to JSON text round-trip).
+    let obs = field(result, "obs");
+    let vt = field(obs, "virtual_time_s").as_f64().unwrap();
+    let mut total = field(obs, "compute_s").as_f64().unwrap();
+    for p in field(obs, "phases").as_arr().unwrap() {
+        total += field(p, "serialize_s").as_f64().unwrap();
+        total += field(p, "transfer_s").as_f64().unwrap();
+        total += field(p, "idle_s").as_f64().unwrap();
+    }
+    assert!((total - vt).abs() <= 1e-9 * vt.max(1.0), "{total} vs {vt}");
 }
 
 #[test]
