@@ -1,0 +1,14 @@
+//! Bench: the adaptive per-link controller (choco + adapt_b2_8) against
+//! every static member of the EF family under the §5.2 bandwidth×latency
+//! grid, scored on virtual time to a shared target loss.
+
+fn main() {
+    println!(
+        "adapt sweep (experiment backend: sim; quick: {})\n",
+        decomp::bench_harness::quick_mode()
+    );
+    for t in decomp::experiments::adapt_sweep::run(decomp::bench_harness::quick_mode()) {
+        t.print();
+        println!();
+    }
+}

@@ -1,0 +1,304 @@
+//! Adaptive per-link compression: a controller that picks each round's
+//! operating point on the [`LinkCompressor`] surface from the link's
+//! virtual-time budget (DESIGN.md §4b).
+//!
+//! The spec layer admits the family as `adapt_b<lo>_<hi>` — stochastic
+//! quantization whose bit width floats in `[lo, hi]`. Every compress
+//! call ships the current width, then takes one step toward the largest
+//! width whose serialization time fits the link's budget (additive in
+//! bits = multiplicative in quantization levels, so this is the
+//! classic multiplicative increase/decrease shape). The budget inputs
+//! come from the [`LinkTiming`] the session binds via
+//! [`LinkCompressorSpec::bind_timing`]: in the discrete-event world the
+//! realized transfer time of a frame *is* its modeled `latency +
+//! bytes·8/bandwidth`, so recomputing it from the bound timing is
+//! observing the realized value, one round early. Unbound (no uniform
+//! cost grid), the controller is inert at `hi` — bit-identical to the
+//! static `q<hi>` wire prefixed with one width byte.
+//!
+//! The width byte makes every wire self-describing, so decoding never
+//! consults controller state: replicas decode frames from any round —
+//! including frames the bounded-staleness executor deferred and folds
+//! late — even if the sender's operating point has moved since.
+//!
+//! Controller telemetry (operating points, shift count) drains through
+//! [`LinkCompressor::take_obs`] into the obs plane's `adapt_*` counters;
+//! it is observational only and never feeds back into the policy, so
+//! observed and unobserved runs stay bit-identical.
+//!
+//! The policy is deliberately tiny and deterministic: a pure function of
+//! `(timing, dim, previous width)`. Other members of the family (top-k
+//! fraction, low-rank rank) would slot in behind the same spec surface;
+//! quantize bits is the member the §5.2 grid exercises.
+
+use crate::compression::{
+    Compressor, LinkCompressor, LinkCompressorSpec, LinkObsDelta, StochasticQuantizer, Wire,
+};
+use crate::models::ShapeManifest;
+use crate::spec::LinkTiming;
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// Serialization budget as a fraction of link latency: the controller
+/// seeks the largest width whose frame serializes in at most this
+/// fraction of one propagation delay, i.e. it keeps rounds
+/// latency-bound instead of bandwidth-bound. 0.5 lands the §5.2 grid
+/// where it should: full width on the latency-dominated cells, deep
+/// compression on the bandwidth-starved ones.
+pub const TX_BUDGET_FACTOR: f64 = 0.5;
+
+/// Spec half of the adaptive family: shared, thread-safe description
+/// carried by `AlgoConfig`; every link materializes its own
+/// [`AdaptiveLink`]. `timing` is `None` until the session binds the
+/// run's uniform cost grid ([`LinkCompressorSpec::bind_timing`]).
+#[derive(Debug, Clone)]
+pub struct AdaptiveLinkSpec {
+    pub bits_lo: u8,
+    pub bits_hi: u8,
+    pub timing: Option<LinkTiming>,
+}
+
+impl AdaptiveLinkSpec {
+    /// Unbound spec (inert at `bits_hi` until timing is bound).
+    /// Panics on an empty or out-of-range band — the spec layer
+    /// validates before construction, this is the backstop.
+    pub fn new(bits_lo: u8, bits_hi: u8) -> AdaptiveLinkSpec {
+        assert!(
+            (1..=16).contains(&bits_lo) && (1..=16).contains(&bits_hi) && bits_lo < bits_hi,
+            "adaptive band must satisfy 1 <= lo < hi <= 16, got [{bits_lo}, {bits_hi}]"
+        );
+        AdaptiveLinkSpec { bits_lo, bits_hi, timing: None }
+    }
+}
+
+impl LinkCompressorSpec for AdaptiveLinkSpec {
+    fn name(&self) -> String {
+        format!("adapt_b{}_{}", self.bits_lo, self.bits_hi)
+    }
+
+    fn is_unbiased(&self) -> bool {
+        // Stochastic quantization is unbiased at every width, so the
+        // whole band is.
+        true
+    }
+
+    fn wire_bytes(&self, manifest: &ShapeManifest) -> usize {
+        // Conservative (admission-time) figure: the widest operating
+        // point plus the width byte.
+        1 + StochasticQuantizer::new(self.bits_hi).wire_bytes(manifest.total_len())
+    }
+
+    fn build(
+        &self,
+        _seed: u64,
+        _from: usize,
+        _to: usize,
+        _manifest: &ShapeManifest,
+    ) -> Box<dyn LinkCompressor> {
+        Box::new(AdaptiveLink {
+            bits_lo: self.bits_lo,
+            bits_hi: self.bits_hi,
+            bits: self.bits_hi,
+            timing: self.timing,
+            scratch: Wire::empty(),
+            obs: LinkObsDelta::default(),
+        })
+    }
+
+    fn virtual_cost(&self) -> crate::obs::CodecCost {
+        StochasticQuantizer::new(self.bits_hi).virtual_cost()
+    }
+
+    fn bind_timing(&self, timing: &LinkTiming) -> Option<Arc<dyn LinkCompressorSpec>> {
+        let mut bound = self.clone();
+        bound.timing = Some(*timing);
+        Some(Arc::new(bound))
+    }
+}
+
+/// Link half of the adaptive family: the per-link controller state (the
+/// current width and its telemetry). CHOCO keys it `(node, node)` like
+/// every link state, so one stream per node drives all of that node's
+/// broadcasts — the replica-mirror invariant sees identical bytes.
+pub struct AdaptiveLink {
+    bits_lo: u8,
+    bits_hi: u8,
+    /// This round's operating point.
+    bits: u8,
+    timing: Option<LinkTiming>,
+    /// Persistent staging wire (the width byte forces one memcpy per
+    /// call; the buffer is reused so there is no steady-state growth).
+    scratch: Wire,
+    obs: LinkObsDelta,
+}
+
+impl AdaptiveLink {
+    /// The current operating point (test hook).
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    /// The largest width in the band whose frame fits the virtual-time
+    /// budget — a pure function of `(timing, n)`, so every link with
+    /// the same timing converges to the same point on the same round.
+    fn target_bits(&self, n: usize) -> u8 {
+        let Some(t) = self.timing else { return self.bits_hi };
+        if t.bandwidth_bps <= 0.0 {
+            return self.bits_lo;
+        }
+        let budget_s = TX_BUDGET_FACTOR * t.latency_s;
+        let mut b = self.bits_hi;
+        while b > self.bits_lo {
+            let bytes = 1 + StochasticQuantizer::new(b).wire_bytes(n);
+            if bytes as f64 * 8.0 / t.bandwidth_bps <= budget_s {
+                break;
+            }
+            b -= 1;
+        }
+        b
+    }
+}
+
+impl LinkCompressor for AdaptiveLink {
+    fn name(&self) -> String {
+        format!("adapt_b{}_{}", self.bits_lo, self.bits_hi)
+    }
+
+    fn compress_into(&mut self, z: &[f32], rng: &mut Pcg64, wire: &mut Wire) {
+        // Ship at the current width, self-describing.
+        let q = StochasticQuantizer::new(self.bits);
+        q.compress_into(z, rng, &mut self.scratch);
+        wire.clear();
+        wire.len = z.len();
+        wire.payload.reserve(1 + self.scratch.payload.len());
+        wire.payload.push(self.bits);
+        wire.payload.extend_from_slice(&self.scratch.payload);
+        self.obs.bits_sum += self.bits as u64;
+        self.obs.calls += 1;
+        // One step toward the budget's operating point for next round.
+        let target = self.target_bits(z.len());
+        if self.bits != target {
+            self.bits = if self.bits > target { self.bits - 1 } else { self.bits + 1 };
+            self.obs.shifts += 1;
+        }
+    }
+
+    fn decompress(&mut self, wire: &Wire, out: &mut [f32]) {
+        // Width comes off the wire, never from controller state — frames
+        // decode correctly at any later round (late folds included).
+        let bits = *wire.payload.first().expect("adaptive wire carries a width byte");
+        let q = StochasticQuantizer::new(bits);
+        self.scratch.clear();
+        self.scratch.len = wire.len;
+        self.scratch.payload.extend_from_slice(&wire.payload[1..]);
+        q.decompress(&self.scratch, out);
+    }
+
+    fn wire_bytes(&self, n: usize) -> usize {
+        1 + StochasticQuantizer::new(self.bits).wire_bytes(n)
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+
+    fn virtual_cost(&self) -> crate::obs::CodecCost {
+        StochasticQuantizer::new(self.bits_hi).virtual_cost()
+    }
+
+    fn take_obs(&mut self) -> Option<LinkObsDelta> {
+        Some(std::mem::take(&mut self.obs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timing(bw: f64, lat: f64) -> LinkTiming {
+        LinkTiming { latency_s: lat, bandwidth_bps: bw, frame_bytes: 0 }
+    }
+
+    #[test]
+    fn unbound_controller_is_inert_at_hi() {
+        let spec = AdaptiveLinkSpec::new(2, 8);
+        let mut link = spec.build(7, 0, 0, &ShapeManifest::flat(512));
+        let z: Vec<f32> = (0..512).map(|i| (i as f32 * 0.37).cos()).collect();
+        let mut rng = Pcg64::new(1, 2);
+        for _ in 0..5 {
+            let w = link.compress(&z, &mut rng);
+            assert_eq!(w.payload[0], 8, "unbound controller must hold bits_hi");
+        }
+        let d = link.take_obs().unwrap();
+        assert_eq!(d.calls, 5);
+        assert_eq!(d.bits_sum, 40);
+        assert_eq!(d.shifts, 0);
+        assert_eq!(link.take_obs().unwrap(), LinkObsDelta::default(), "drained");
+    }
+
+    #[test]
+    fn controller_descends_to_budget_on_starved_link_and_roundtrips() {
+        // 5 Mbps / 5 ms (the §5.2 worst cell) over dim 4096: the budget
+        // admits ~1560 bytes, i.e. ~3 bits — the controller must walk
+        // down from 8 one step per round, every wire must decode with
+        // the width it was encoded at.
+        let spec = AdaptiveLinkSpec::new(2, 8);
+        let bound = spec.bind_timing(&timing(5e6, 5e-3)).expect("adaptive binds timing");
+        let mut link = bound.build(7, 3, 3, &ShapeManifest::flat(4096));
+        let z: Vec<f32> = (0..4096).map(|i| (i as f32 * 0.11).sin()).collect();
+        let mut rng = Pcg64::new(9, 4);
+        let mut widths = Vec::new();
+        let mut out = vec![0.0f32; 4096];
+        for _ in 0..10 {
+            let w = link.compress(&z, &mut rng);
+            widths.push(w.payload[0]);
+            link.decompress(&w, &mut out);
+            let err: f32 = z
+                .iter()
+                .zip(&out)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            // Max-abs of z is < 1, so the per-coordinate error is
+            // bounded by one quantization step of the *shipped* width.
+            let step = 2.0 / ((1u32 << w.payload[0]) as f32 - 1.0);
+            assert!(err <= step, "decode with shipped width: err {err} step {step}");
+        }
+        assert_eq!(widths[0], 8, "starts at hi");
+        let settled = *widths.last().unwrap();
+        assert!(settled < 8, "must descend under a starved budget, got {widths:?}");
+        let mut sorted = widths.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(sorted, widths, "monotone one-step descent, got {widths:?}");
+        for pair in widths.windows(2) {
+            assert!(pair[0] - pair[1] <= 1, "one step per round, got {widths:?}");
+        }
+        let d = link.take_obs().unwrap();
+        assert_eq!(d.calls, 10);
+        assert_eq!(d.shifts as usize, (8 - settled) as usize, "one shift per step");
+        // Pure function of (timing, n): a fresh link retraces the path.
+        let mut link2 = bound.build(7, 0, 1, &ShapeManifest::flat(4096));
+        let mut rng2 = Pcg64::new(9, 4);
+        for &want in &widths {
+            let w = link2.compress(&z, &mut rng2);
+            assert_eq!(w.payload[0], want);
+        }
+    }
+
+    #[test]
+    fn rich_link_keeps_full_width() {
+        // 1.4 Gbps / 0.13 ms (the §5.2 best cell): even fp32-scale
+        // frames serialize well inside half a latency, so the
+        // controller holds hi.
+        let spec = AdaptiveLinkSpec::new(2, 8);
+        let bound = spec.bind_timing(&timing(1.4e9, 0.13e-3)).unwrap();
+        let mut link = bound.build(7, 0, 0, &ShapeManifest::flat(4096));
+        let z = vec![0.5f32; 4096];
+        let mut rng = Pcg64::new(3, 3);
+        for _ in 0..4 {
+            let w = link.compress(&z, &mut rng);
+            assert_eq!(w.payload[0], 8);
+        }
+        let d = link.take_obs().unwrap();
+        assert_eq!(d.shifts, 0);
+    }
+}

@@ -26,17 +26,18 @@
 //!   sensitive to wire-format or engine-accounting regressions.
 //! - `trace_emit` (higher is better) — streamed trace-emission
 //!   throughput (points/sec through `TrainTrace::write_json` into a null
-//!   sink). Hardware-dependent; the baseline ships it as `null`.
+//!   sink). Hardware-dependent; the baseline carries a conservative
+//!   floor (see EXPERIMENTS.md "Refreshing the baseline").
 //! - `codec_throughput` (higher is better) — host elements/sec through
 //!   one stateless compress→decompress round trip per representative
 //!   codec: the measured counterpart of the modeled `CodecCost` the
 //!   instrumentation plane charges to its observational counters.
-//!   Hardware-dependent; the baseline ships these as `null`.
+//!   Hardware-dependent; the baseline carries conservative floors.
 //! - `obs_overhead` (lower is better) — host wall-clock of one
 //!   instrumented (counters-level) n = 32 CHOCO cell divided by the
 //!   identical plain cell: ~1.0 when the "cheap when on" half of the
-//!   plane's promise holds. Hardware-dependent; the baseline ships it
-//!   as `null`.
+//!   plane's promise holds. Hardware-dependent; the baseline carries a
+//!   conservative ceiling.
 //! - `peak_rss` (lower is better) — the process's peak-RSS high-water
 //!   mark (MiB) across one fig3-style n = 4096 ring cell on the sparse
 //!   slot table: the memory side of the scaling story. Linux-only
@@ -108,6 +109,7 @@ fn collect_with(quick: bool, host_sweep: bool) -> BenchReport {
             seed: 0xbe7c,
             eta,
             scenario: Default::default(),
+            staleness: Default::default(),
         };
         let mut a = exp
             .session()
@@ -166,6 +168,13 @@ fn collect_with(quick: bool, host_sweep: bool) -> BenchReport {
     // the churn/drop machinery engaged (value is closed-form — see
     // EXPERIMENTS.md).
     for (k, v) in crate::experiments::scenario_sweep::bench_points() {
+        per_iter.insert(k, v);
+    }
+    // The adaptsweep cells: pin the adaptive controller's width schedule
+    // through the engine's byte accounting (hold-at-8 on the dim-1024
+    // cell, the 8→7→6 descent on the dim-4096 cell; closed forms in the
+    // `adapt_sweep::bench_points` doc).
+    for (k, v) in crate::experiments::adapt_sweep::bench_points() {
         per_iter.insert(k, v);
     }
     groups.insert("sim_virtual_s_per_iter".into(), per_iter);
@@ -227,6 +236,7 @@ fn collect_with(quick: bool, host_sweep: bool) -> BenchReport {
                 seed: 0xb0b5,
                 eta: 0.5,
                 scenario: Default::default(),
+                staleness: Default::default(),
             };
             let session = exp.session().unwrap_or_else(|e| panic!("{e}"));
             let run_opts = RunOpts {
@@ -295,6 +305,7 @@ fn peak_rss_cell(quick: bool) -> Option<f64> {
         seed: 0xf163,
         eta: 1.0,
         scenario: Default::default(),
+        staleness: Default::default(),
     };
     let iters = if quick { 2 } else { 5 };
     let run = exp
@@ -631,8 +642,9 @@ mod tests {
         assert!(r.groups["iters_per_sec"].len() == ef_sweep::FAMILY.len());
         assert_eq!(r.groups["host_sweep_wall_s"].len(), 2);
         assert_eq!(r.groups["sim_epoch_s"].len(), 12);
-        // 6 fig3 sweep algos + 2 lowranksweep cells + the churn cell.
-        assert_eq!(r.groups["sim_virtual_s_per_iter"].len(), 9);
+        // 6 fig3 sweep algos + 2 lowranksweep cells + the churn cell +
+        // 2 adaptsweep cells.
+        assert_eq!(r.groups["sim_virtual_s_per_iter"].len(), 11);
         assert_eq!(r.groups["trace_emit"].len(), 1);
         assert!(r.groups["trace_emit"].contains_key("trace_points_per_sec"));
         assert_eq!(r.groups["codec_throughput"].len(), 3);

@@ -28,8 +28,25 @@
 
 use super::{Compressor, Wire};
 use crate::models::ShapeManifest;
+use crate::spec::LinkTiming;
 use crate::util::rng::Pcg64;
 use std::sync::Arc;
+
+/// Counters an adaptive link controller accumulates between round
+/// barriers, drained by [`LinkCompressor::take_obs`] into the obs plane
+/// (`adapt_bits_sum` / `adapt_calls` / `adapt_shifts`). Plain `u64`s so
+/// shard-merged totals are associative and deterministic.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LinkObsDelta {
+    /// Sum over compress calls of the parameter chosen for that call
+    /// (quantize bits); `bits_sum / calls` is the mean operating point.
+    pub bits_sum: u64,
+    /// Compress calls since the last drain.
+    pub calls: u64,
+    /// Times the controller moved its operating point since the last
+    /// drain.
+    pub shifts: u64,
+}
 
 /// A stateful compression codec bound to one directed link. Unlike
 /// [`Compressor`], methods take `&mut self`: calls may advance
@@ -71,6 +88,14 @@ pub trait LinkCompressor: Send {
     fn virtual_cost(&self) -> crate::obs::CodecCost {
         crate::obs::CodecCost::FREE
     }
+
+    /// Drain controller counters accumulated since the last call (the
+    /// adaptive family reports its per-round operating points this way;
+    /// everything else returns `None` and the obs plane records
+    /// nothing). Must not affect compression state — observational only.
+    fn take_obs(&mut self) -> Option<LinkObsDelta> {
+        None
+    }
 }
 
 /// Shared, thread-safe description of a link-compressor family: what
@@ -102,6 +127,15 @@ pub trait LinkCompressorSpec: Send + Sync {
     /// [`Compressor::virtual_cost`].
     fn virtual_cost(&self) -> crate::obs::CodecCost {
         crate::obs::CodecCost::FREE
+    }
+
+    /// Bind the run's modeled per-link timing (latency, bandwidth,
+    /// reference frame size) to this family, returning the bound spec —
+    /// the hook through which [`Session`](crate::spec::Session) hands the
+    /// adaptive controller its virtual-time budget inputs. Families with
+    /// no use for timing return `None` (the default) and are used as-is.
+    fn bind_timing(&self, _timing: &LinkTiming) -> Option<Arc<dyn LinkCompressorSpec>> {
+        None
     }
 }
 

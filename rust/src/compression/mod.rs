@@ -36,7 +36,7 @@ mod sparsify;
 mod wire;
 
 pub use estimate::{empirical_alpha, empirical_sigma_tilde_sq};
-pub use link::{LinkCompressor, LinkCompressorSpec, StatelessLink};
+pub use link::{LinkCompressor, LinkCompressorSpec, LinkObsDelta, StatelessLink};
 pub use lowrank::{spec_from_name as lowrank_spec_from_name, LowRank, LowRankSpec};
 pub use quantize::StochasticQuantizer;
 pub use sign::SignCompressor;

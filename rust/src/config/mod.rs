@@ -8,7 +8,7 @@
 //! canonical form (`chocosgd` → `choco`, `full` → `fully_connected`).
 
 use crate::coordinator::TrainConfig;
-use crate::spec::{AlgoSpec, CompressorSpec, ObsSpec, ScenarioSpec, TopologySpec};
+use crate::spec::{AlgoSpec, CompressorSpec, ObsSpec, ScenarioSpec, StalenessSpec, TopologySpec};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use std::path::Path;
@@ -40,6 +40,7 @@ pub fn load_config(path: &Path) -> anyhow::Result<TrainConfig> {
             "backend" => cfg.backend = req_str(v, k)?,
             "eta" => cfg.eta = req_f64(v, k)? as f32,
             "scenario" => cfg.scenario = req_spec::<ScenarioSpec>(v, k)?,
+            "staleness" => cfg.staleness = req_spec::<StalenessSpec>(v, k)?,
             "obs" => cfg.obs = req_spec::<ObsSpec>(v, k)?,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
@@ -76,6 +77,9 @@ pub fn apply_cli_overrides(cfg: &mut TrainConfig, args: &Args) {
     cfg.eta = args.f64("eta", cfg.eta as f64) as f32;
     if let Some(v) = args.opt_str("scenario") {
         cfg.scenario = v.to_string();
+    }
+    if let Some(v) = args.opt_str("staleness") {
+        cfg.staleness = v.to_string();
     }
     if let Some(v) = args.opt_str("obs") {
         cfg.obs = v.to_string();
@@ -233,6 +237,25 @@ mod tests {
         apply_cli_overrides(&mut cfg, &args);
         assert_eq!(cfg.scenario, "drop_p1");
         assert_eq!(TrainConfig::default().scenario, "static");
+    }
+
+    #[test]
+    fn staleness_key_loads_canonicalizes_and_overrides() {
+        let p = write_tmp("stale.json", r#"{"staleness":"quorum_q75_s3"}"#);
+        let mut cfg = load_config(&p).unwrap();
+        assert_eq!(cfg.staleness, "quorum_q75_s3");
+        std::fs::remove_file(p).ok();
+        // Malformed disciplines fail at load, naming the key.
+        let p = write_tmp("stalebad.json", r#"{"staleness":"quorum_q100_s1"}"#);
+        let err = load_config(&p).unwrap_err().to_string();
+        assert!(err.contains("staleness"), "{err}");
+        std::fs::remove_file(p).ok();
+        // CLI wins over file.
+        let args =
+            Args::parse_from(["--staleness", "quorum_q50_s2"].iter().map(|s| s.to_string()));
+        apply_cli_overrides(&mut cfg, &args);
+        assert_eq!(cfg.staleness, "quorum_q50_s2");
+        assert_eq!(TrainConfig::default().staleness, "sync");
     }
 
     #[test]

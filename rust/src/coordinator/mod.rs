@@ -89,6 +89,10 @@ pub struct TrainConfig {
     /// like `churn_p10_l150_j300+drop_p1+dirichlet_a30`); sim backend
     /// only. See [`crate::spec::ScenarioSpec`] for the grammar.
     pub scenario: String,
+    /// Staleness discipline (`sync`, or `quorum_q<pct>_s<rounds>` for
+    /// bounded-staleness execution); sim backend only, staleness-safe
+    /// algorithms only. See [`crate::spec::StalenessSpec`].
+    pub staleness: String,
     /// Observation level (`off`, `counters`, `trace`) — the
     /// instrumentation plane's knob. See [`crate::spec::ObsSpec`].
     pub obs: String,
@@ -113,6 +117,7 @@ impl Default for TrainConfig {
             backend: "threads".into(),
             eta: 1.0,
             scenario: "static".into(),
+            staleness: "sync".into(),
             obs: "off".into(),
         }
     }
@@ -151,7 +156,8 @@ impl TrainConfig {
             self.seed,
             self.eta,
         )?
-        .with_scenario(&self.scenario)
+        .with_scenario(&self.scenario)?
+        .with_staleness(&self.staleness)
     }
 
     pub fn build_algo_config(&self) -> anyhow::Result<AlgoConfig> {
@@ -659,6 +665,7 @@ mod tests {
             },
             SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+                staleness: None,
                 compute_per_iter_s: 0.01,
                 scenario: None,
             },

@@ -122,7 +122,7 @@ impl Common {
     /// expected set always matches what was actually delivered.
     fn delivers(&self, j: usize, t: u64, phase: usize) -> bool {
         match self.scenario.as_deref() {
-            Some(rt) => rt.live(j, t) && !rt.dropped_broadcast(t, phase, j),
+            Some(rt) => rt.live(j, t) && !rt.dropped_frame(t, phase, j, self.node),
             None => true,
         }
     }
@@ -162,7 +162,7 @@ impl Common {
         for (k, &j) in self.neighbors.iter().enumerate() {
             let w = epoch[1 + k];
             let delivered = match rt {
-                Some(r) => r.live(j, t) && !r.dropped_broadcast(t, phase, j),
+                Some(r) => r.live(j, t) && !r.dropped_frame(t, phase, j, self.node),
                 None => true,
             };
             if delivered {
@@ -226,7 +226,7 @@ impl Common {
                     return;
                 }
                 for &j in &self.neighbors {
-                    if rt.live(j, t) && !rt.dropped_broadcast(t, phase, j) {
+                    if rt.live(j, t) && !rt.dropped_frame(t, phase, j, self.node) {
                         out.push((j, Channel::Gossip));
                     }
                 }
@@ -558,6 +558,28 @@ impl ChocoProgram {
             self.link = cfg.link_for(self.c.node, manifest);
         }
     }
+
+    /// x_{t+1} = x_{t+½} + η (Σ_j W_ij x̂^{(j)} − x̂^{(i)}). During a
+    /// churn window the masked row drops dead neighbors (their x̂
+    /// replicas are frozen *and* excluded); otherwise the full static
+    /// row — a same-round drop (or a staleness deferral) only delays a
+    /// correction, it does not desync the copies, so the gossip term
+    /// stays full-arity.
+    fn consensus_step(&mut self, t: u64) {
+        let epoch = self.c.epoch_weights(t);
+        self.c
+            .mix_weighted(epoch, &self.xhat_self, &self.xhat_nbrs, &mut self.mixed);
+        let eta = self.eta;
+        for ((xd, hd), (md, sd)) in self
+            .c
+            .x
+            .iter_mut()
+            .zip(&self.half)
+            .zip(self.mixed.iter().zip(&self.xhat_self))
+        {
+            *xd = *hd + eta * (*md - *sd);
+        }
+    }
 }
 
 impl NodeProgram for ChocoProgram {
@@ -612,23 +634,58 @@ impl NodeProgram for ChocoProgram {
             }
         }
         debug_assert_eq!(k, msgs.len());
-        // x_{t+1} = x_{t+½} + η (Σ_j W_ij x̂^{(j)} − x̂^{(i)}). During a
-        // churn window the masked row drops dead neighbors (their x̂
-        // replicas are frozen *and* excluded); otherwise the full static
-        // row — a same-round drop only delays a correction, it does not
-        // desync the copies, so the gossip term stays full-arity.
-        let epoch = self.c.epoch_weights(t);
-        self.c
-            .mix_weighted(epoch, &self.xhat_self, &self.xhat_nbrs, &mut self.mixed);
-        let eta = self.eta;
-        for ((xd, hd), (md, sd)) in self
+        self.consensus_step(t);
+    }
+
+    fn absorb_partial(&mut self, t: u64, phase: usize, msgs: &[Wire], present: &[bool]) {
+        if !self.c.live_self(t) {
+            return;
+        }
+        // Same walk as `absorb`, except a deferred correction leaves the
+        // replica stale for now — it is the *sender's* sequence of
+        // corrections, so it folds verbatim later ([`fold_late`]) and the
+        // mirror is restored the moment it lands. Mixing over a stale
+        // replica is exactly the bounded-staleness gossip the quorum
+        // model permits.
+        let mut k = 0;
+        for (idx, &j) in self.c.neighbors.iter().enumerate() {
+            if self.c.delivers(j, t, phase) {
+                if present[k] {
+                    self.link.decompress(&msgs[k], &mut self.cz);
+                    vecops::axpy(1.0, &self.cz, &mut self.xhat_nbrs[idx]);
+                }
+                k += 1;
+            }
+        }
+        debug_assert_eq!(k, msgs.len());
+        self.consensus_step(t);
+    }
+
+    fn fold_late(&mut self, _t_origin: u64, _t_now: u64, _phase: usize, from: usize, msgs: &[Wire]) {
+        // The deferred correction applies verbatim, just late: replica +=
+        // C(z) is the identical update the sender's own x̂ took when it
+        // emitted the frame, so the replica mirror — and with it the EF
+        // residual invariant (the residual lives in x_{t+½} − x̂ on the
+        // *sender*, untouched by our application order) — is restored at
+        // the fold. Folds arrive in (origin round, sequence) order, so a
+        // sender's correction stream replays in emission order.
+        let idx = self
             .c
-            .x
-            .iter_mut()
-            .zip(&self.half)
-            .zip(self.mixed.iter().zip(&self.xhat_self))
-        {
-            *xd = *hd + eta * (*md - *sd);
+            .neighbors
+            .iter()
+            .position(|&j| j == from)
+            .expect("late frame from a non-neighbor");
+        for w in msgs {
+            self.link.decompress(w, &mut self.cz);
+            vecops::axpy(1.0, &self.cz, &mut self.xhat_nbrs[idx]);
+        }
+    }
+
+    fn record_obs(&mut self, reg: &mut crate::obs::Registry) {
+        if let Some(d) = self.link.take_obs() {
+            reg.add(crate::obs::Ctr::AdaptBitsSum, d.bits_sum);
+            reg.add(crate::obs::Ctr::AdaptCalls, d.calls);
+            reg.add(crate::obs::Ctr::AdaptShifts, d.shifts);
         }
     }
 
@@ -720,6 +777,63 @@ impl NodeProgram for DeepSqueezeProgram {
         let eta = self.eta;
         for ((xd, cd), md) in self.c.x.iter_mut().zip(own.iter()).zip(self.mixed.iter()) {
             *xd = *cd + eta * (*md - *cd);
+        }
+    }
+
+    fn absorb_partial(&mut self, t: u64, phase: usize, msgs: &[Wire], present: &[bool]) {
+        if !self.c.live_self(t) {
+            return;
+        }
+        for (k, w) in msgs.iter().enumerate() {
+            if present[k] {
+                self.c.compressor.decompress(w, &mut self.recv_bufs[k]);
+            }
+        }
+        // A deferred broadcast is mixed like a dropped one this round —
+        // its weight folds into the self entry, keeping the row
+        // stochastic — but unlike a drop the frame still lands later via
+        // `fold_late`, so no mass is lost, only delayed.
+        self.c.resolve_round_weights(t, phase);
+        for (k, &p) in present.iter().enumerate() {
+            if !p {
+                self.c.round_weights[0] += self.c.round_weights[1 + k];
+                self.c.round_weights[1 + k] = 0.0;
+            }
+        }
+        let own: &[f32] = if self.c.own_drop(t, phase) {
+            &self.z
+        } else {
+            &self.cz_self
+        };
+        let (c, mixed) = (&self.c, &mut self.mixed);
+        c.mix_weighted(&c.round_weights, own, &self.recv_bufs[..msgs.len()], mixed);
+        let eta = self.eta;
+        for ((xd, cd), md) in self.c.x.iter_mut().zip(own.iter()).zip(self.mixed.iter()) {
+            *xd = *cd + eta * (*md - *cd);
+        }
+    }
+
+    fn fold_late(&mut self, _t_origin: u64, _t_now: u64, _phase: usize, from: usize, msgs: &[Wire]) {
+        // Bounded-staleness fold rule (DESIGN.md §4b): the late broadcast
+        // C(z^{(j)}) enters the η-softened mix against the *current*
+        // iterate with the static weight the on-time mix would have given
+        // it: x ← x + η W_ij (C(z^{(j)}) − x). A contraction toward the
+        // sender's (stale) public value — deterministic, and it leaves the
+        // sender-side error memory δ untouched, so the EF residual
+        // invariant is unaffected by application time.
+        let idx = self
+            .c
+            .neighbors
+            .iter()
+            .position(|&j| j == from)
+            .expect("late frame from a non-neighbor");
+        let w = self.c.weights[1 + idx];
+        let eta = self.eta;
+        for wire in msgs {
+            self.c.compressor.decompress(wire, &mut self.recv_bufs[idx]);
+            for (xd, zd) in self.c.x.iter_mut().zip(&self.recv_bufs[idx]) {
+                *xd += eta * w * (*zd - *xd);
+            }
         }
     }
 

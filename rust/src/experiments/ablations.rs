@@ -61,6 +61,7 @@ fn run_quad(
         seed: 0xab1a,
         eta: 1.0,
         scenario: Default::default(),
+        staleness: Default::default(),
     };
     let x0 = vec![0.0f32; dim];
     // session_unchecked: this ablation *deliberately* runs inadmissible

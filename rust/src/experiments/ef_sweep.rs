@@ -98,6 +98,7 @@ fn run_cell(
         seed: 0xef5,
         eta,
         scenario: Default::default(),
+        staleness: Default::default(),
     };
     let session = exp.session().unwrap_or_else(|e| panic!("{e}"));
     let (models, x0) = build_models(&kind, &spec);
@@ -110,6 +111,7 @@ fn run_cell(
     };
     let sim = SimOpts {
         cost: CostModel::Uniform(cond.model()),
+        staleness: None,
         compute_per_iter_s: super::testbed::COMPUTE_PER_ITER_S,
         scenario: None,
     };

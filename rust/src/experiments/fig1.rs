@@ -53,6 +53,7 @@ fn run_subopt(
         seed: 0xf161,
         eta: 1.0,
         scenario: Default::default(),
+        staleness: Default::default(),
     };
     let x0 = vec![0.0f32; s.dim];
     let mut a = exp

@@ -125,6 +125,7 @@ pub fn sim_sweep_points(ns: &[usize], iters: usize, net: NetworkModel) -> Vec<Si
             seed: 0xf163,
             eta,
             scenario: Default::default(),
+            staleness: Default::default(),
         };
         let run = exp
             .session()
@@ -136,6 +137,7 @@ pub fn sim_sweep_points(ns: &[usize], iters: usize, net: NetworkModel) -> Vec<Si
                 iters,
                 SimOpts {
                     cost: CostModel::Uniform(net),
+                    staleness: None,
                     compute_per_iter_s: 0.0,
                     scenario: None,
                 },

@@ -76,6 +76,7 @@ fn run_cell(
         seed: 0x10e4,
         eta,
         scenario: Default::default(),
+        staleness: Default::default(),
     };
     let session = exp.session().unwrap_or_else(|e| panic!("{e}"));
     let (models, x0) = build_models(&kind, &spec);
@@ -88,6 +89,7 @@ fn run_cell(
     };
     let sim = SimOpts {
         cost: CostModel::Uniform(cond.model()),
+        staleness: None,
         compute_per_iter_s: compute_s,
         scenario: None,
     };

@@ -24,6 +24,7 @@
 //! or `random_p30_s7`; default `ring` — the paper's testbed).
 
 pub mod ablations;
+pub mod adapt_sweep;
 pub mod ef_sweep;
 pub mod fig1;
 pub mod fig2;
@@ -174,6 +175,7 @@ pub fn run_named_topo(
         seed,
         eta: 1.0,
         scenario: Default::default(),
+        staleness: Default::default(),
     };
     let session = exp.session().unwrap_or_else(|e| panic!("{e}"));
     match backend {
@@ -185,6 +187,7 @@ pub fn run_named_topo(
             let (eval_models, _) = build_models(kind, spec);
             let sim = SimOpts {
                 cost: opts.net.map(CostModel::Uniform).unwrap_or(CostModel::Ideal),
+                staleness: None,
                 compute_per_iter_s: opts.compute_per_iter_s,
                 scenario: None,
             };

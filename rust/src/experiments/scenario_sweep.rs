@@ -95,6 +95,7 @@ pub fn run_cell(
         seed: CELL_SEED,
         eta,
         scenario: sc,
+        staleness: Default::default(),
     };
     // DCD/ECD × churn are the deliberate degradation cells: admission
     // refuses them on the front door (no error-feedback path across a
@@ -119,6 +120,7 @@ pub fn run_cell(
     };
     let sim = SimOpts {
         cost: CostModel::Uniform(NetworkModel::new(5e6, 0.0)),
+        staleness: None,
         compute_per_iter_s: 0.0,
         // Bound by the session from the spec's scenario.
         scenario: None,

@@ -41,6 +41,7 @@
 // operation order that the bitwise-determinism contract depends on).
 #![allow(clippy::needless_range_loop)]
 
+pub mod adapt;
 pub mod algorithms;
 pub mod compression;
 pub mod config;

@@ -12,6 +12,8 @@
 //!   spectra       print mixing-matrix spectral stats for a topology
 //!   fig1..fig4    regenerate a paper figure's table(s)
 //!   efsweep       error-feedback family under the bandwidth×latency grid
+//!   adaptsweep    adaptive per-link controller vs the static family over
+//!                 the same grid (time-to-target-loss)
 //!   lowranksweep  PowerGossip rank×(bandwidth,latency) grid at n=64
 //!   scenariosweep fault-injection grid: churn × drops × non-IID shards
 //!   ablations     run the theory-driven ablation sweeps
@@ -34,7 +36,7 @@ use decomp::bench_harness::summary;
 use decomp::config::{apply_cli_overrides, load_config};
 use decomp::coordinator::{Backend, ObsSettings, TrainConfig};
 use decomp::experiments::{
-    ablations, ef_sweep, fig1, fig2, fig3, fig4, lowrank_sweep, scenario_sweep,
+    ablations, adapt_sweep, ef_sweep, fig1, fig2, fig3, fig4, lowrank_sweep, scenario_sweep,
 };
 use decomp::metrics::{fmt_bytes, fmt_secs, Sink, SinkFormat, Table};
 use decomp::network::cost::{CostModel, NetworkModel};
@@ -88,6 +90,7 @@ fn run() -> anyhow::Result<()> {
         "fig3" => emit_tables(&args, fig3::run(quick)),
         "fig4" => emit_tables(&args, fig4::run(quick)),
         "efsweep" => emit_tables(&args, ef_sweep::run(quick)),
+        "adaptsweep" => emit_tables(&args, adapt_sweep::run(quick)),
         "lowranksweep" => emit_tables(&args, lowrank_sweep::run(quick)),
         "scenariosweep" => emit_tables(&args, scenario_sweep::run(quick)),
         "ablations" => emit_tables(&args, ablations::run(quick)),
@@ -120,6 +123,11 @@ COMMANDS
                 --scenario KEY  (sim backend fault injection: 'static' or a
                   '+'-joined schedule, e.g. churn_p10_l150_j300+drop_p1+
                   dirichlet_a30+bw_h50_e100+timeout_20)
+                --staleness sync|quorum_q<pct>_s<rounds>  (sim backend
+                  bounded-staleness execution: proceed past the gossip
+                  barrier once <pct>% of neighbor frames arrived, stragglers
+                  folded late, none older than <rounds> rounds; admitted for
+                  staleness-safe algorithms only — choco, deepsqueeze)
                 --obs off|counters|trace  (instrumentation plane; 'counters'
                   prints the per-phase time breakdown + counter/histogram
                   tables after the run; threads backend prints merged
@@ -134,9 +142,12 @@ COMMANDS
               PowerGossip state) is admitted by choco only
   simulate    same options, deterministic single-process reference simulator
   serve       accept ExperimentSpec-shaped jobs as NDJSON lines on stdin and
-              stream {accepted,progress,result,error,done} frames on stdout,
-              one JSON object per line; malformed lines get structured error
-              frames, the loop never exits on bad input. --tcp HOST:PORT
+              stream {accepted,progress,result,error,cancelled,done} frames
+              on stdout, one JSON object per line; malformed lines get
+              structured error frames, the loop never exits on bad input.
+              {\"cancel\":\"id\"} lines cancel a queued or running job: the
+              current cell finishes, unstarted cells are skipped, and the
+              job ends with a terminal cancelled frame. --tcp HOST:PORT
               listens on a socket instead (one connection at a time). Job
               line: {\"id\":...,\"algos\":[...],\"compressors\":[...],
               \"nodes\":N,\"iters\":N,\"bandwidth_mbps\":F,\"latency_ms\":F,
@@ -162,6 +173,10 @@ COMMANDS
   fig1..fig4  regenerate the paper figure tables (--quick for small runs)
   efsweep     DCD/ECD/CHOCO/DeepSqueeze under the bandwidth×latency grid
               at n=64 on the event engine (--quick for small runs)
+  adaptsweep  the adaptive per-link controller (choco+adapt_b2_8) against
+              every static member of the efsweep family over the same
+              bandwidth×latency grid: virtual time to a shared target loss
+              per cell (--quick for small runs)
   lowranksweep  PowerGossip (choco+lowrank_rN) rank×condition grid at n=64,
               dim 10000 (100×100 fold) — the extreme-compression regime
   scenariosweep fault-injection grid at n=64: {static, drops, churn,
@@ -266,6 +281,7 @@ fn train(args: &Args, threaded: bool) -> anyhow::Result<()> {
         };
         let sim = SimOpts {
             cost: CostModel::Uniform(net),
+            staleness: None,
             compute_per_iter_s: args.f64("compute-ms", 0.0) * 1e-3,
             scenario: None,
         };
@@ -457,6 +473,7 @@ fn obs_cmd(args: &Args) -> anyhow::Result<()> {
     };
     let sim = SimOpts {
         cost: CostModel::Uniform(net),
+        staleness: None,
         compute_per_iter_s: args.f64("compute-ms", 0.0) * 1e-3,
         scenario: None,
     };
@@ -524,12 +541,14 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
     if let Some(addr) = args.opt_str("tcp") {
         return serve::serve_tcp(addr, &opts);
     }
-    let stdin = std::io::stdin();
+    // BufReader over Stdin (not StdinLock): the serve loop pumps input
+    // through a reader thread, so the reader must be Send.
+    let input = std::io::BufReader::new(std::io::stdin());
     let stdout = std::io::stdout();
-    let stats = serve::serve(stdin.lock(), stdout.lock(), &opts)?;
+    let stats = serve::serve(input, stdout.lock(), &opts)?;
     eprintln!(
-        "decomp serve: input closed — {} job(s) ok, {} rejected, {} cell(s) run",
-        stats.jobs_ok, stats.jobs_rejected, stats.cells_run
+        "decomp serve: input closed — {} job(s) ok, {} rejected, {} cancelled, {} cell(s) run",
+        stats.jobs_ok, stats.jobs_rejected, stats.jobs_cancelled, stats.cells_run
     );
     Ok(())
 }

@@ -163,6 +163,32 @@ pub trait NodeProgram: Send {
     /// recycles their buffers afterwards.
     fn absorb(&mut self, t: u64, phase: usize, msgs: &[Wire]);
 
+    /// Bounded-staleness variant of [`NodeProgram::absorb`]: `msgs` is
+    /// still aligned with `expects` order, but entries whose frame the
+    /// executor deferred past the quorum are empty placeholders with
+    /// `present[idx] == false`. Only reachable when the spec layer
+    /// admitted `quorum < 100%`, which it does solely for
+    /// `staleness_safe` algorithms — hence the panicking default.
+    fn absorb_partial(&mut self, _t: u64, _phase: usize, _msgs: &[Wire], _present: &[bool]) {
+        unimplemented!("algorithm is not staleness_safe: absorb_partial unimplemented")
+    }
+
+    /// Fold a deferred frame from `from`, emitted at round `t_origin`,
+    /// into the state at round `t_now` (same alignment caveats as
+    /// `absorb`: `msgs` are the frame's wires in emission order). EF
+    /// algorithms must fold so the residual invariant survives — the
+    /// correction is applied exactly once, just late. Panicking default
+    /// for the same reason as [`NodeProgram::absorb_partial`].
+    fn fold_late(&mut self, _t_origin: u64, _t_now: u64, _phase: usize, _from: usize, _msgs: &[Wire]) {
+        unimplemented!("algorithm is not staleness_safe: fold_late unimplemented")
+    }
+
+    /// Drain program-side observability (e.g. the adaptive link
+    /// controller's per-round bit choices) into the shard registry.
+    /// Called once per (t, phase) after `emit` when obs is enabled;
+    /// must be deterministic and cheap. Default: nothing to report.
+    fn record_obs(&mut self, _reg: &mut crate::obs::Registry) {}
+
     /// Update the step size before an iteration (drives γ-annealing).
     fn set_gamma(&mut self, gamma: f32);
 
@@ -480,6 +506,46 @@ pub fn sim_shards() -> usize {
 // ---------------------------------------------------------------------------
 // The engine.
 
+/// Bounded-staleness execution parameters (DESIGN.md §4b).
+///
+/// A receiver proceeds past a gossip barrier once `quorum_pct`% of the
+/// frames actually sent to it this phase have arrived; the stragglers
+/// are deferred with their round tag and folded late — no later than
+/// `max_rounds` rounds after they were emitted, at which point the
+/// receiver's clock *waits* for them (the staleness bound). The
+/// classification is a pure function of the deterministic arrival
+/// times, so any quorum is bit-identical across `--sim-shards` counts;
+/// `quorum_pct == 100` routes through the unchanged bulk-synchronous
+/// delivery path and is therefore bitwise-identical to it.
+///
+/// Total `FromStr` ↔ `Display` lives in the spec layer
+/// (`sync`, `quorum_q<pct>_s<rounds>`), like the other spec axes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Staleness {
+    /// Percent of this phase's actually-sent frames a receiver waits
+    /// for before proceeding (1..=100; 100 = bulk-synchronous).
+    pub quorum_pct: u8,
+    /// Maximum rounds a deferred frame may ride before the receiver is
+    /// forced to wait for and fold it (≥ 1).
+    pub max_rounds: u64,
+}
+
+impl Staleness {
+    /// The bulk-synchronous default: wait for everything, defer nothing.
+    pub const SYNC: Staleness = Staleness { quorum_pct: 100, max_rounds: 1 };
+
+    /// Whether this config actually engages the staleness machinery.
+    pub fn is_bounded(&self) -> bool {
+        self.quorum_pct < 100
+    }
+}
+
+impl Default for Staleness {
+    fn default() -> Staleness {
+        Staleness::SYNC
+    }
+}
+
 /// Engine configuration.
 #[derive(Debug, Clone)]
 pub struct SimOpts {
@@ -494,6 +560,11 @@ pub struct SimOpts {
     /// predicates — if the two disagree, the executor's "expected a
     /// message that was never sent" panic fires, by design.
     pub scenario: Option<Arc<ScenarioRuntime>>,
+    /// Bounded-staleness execution; `None` (and any `quorum_pct == 100`
+    /// value) is the bulk-synchronous barrier every pre-staleness run
+    /// used. Only admitted for `staleness_safe` algorithms — the
+    /// programs must implement the partial-absorb/late-fold surface.
+    pub staleness: Option<Staleness>,
 }
 
 impl Default for SimOpts {
@@ -502,6 +573,7 @@ impl Default for SimOpts {
             cost: CostModel::Ideal,
             compute_per_iter_s: 0.0,
             scenario: None,
+            staleness: None,
         }
     }
 }
@@ -580,6 +652,22 @@ impl Ord for Arrival {
             .total_cmp(&self.time)
             .then_with(|| other.seq.cmp(&self.seq))
     }
+}
+
+/// A frame the bounded-staleness executor deferred past a receiver's
+/// quorum: it rides in the receiver's pending queue (push order =
+/// (origin round, sequence) order, which is the fold order) until it has
+/// physically arrived by a later release point or hits the staleness
+/// bound.
+struct LateFrame {
+    /// Round the frame was emitted (its round tag for `fold_late`).
+    round: u64,
+    /// Communication phase the frame belonged to.
+    phase: usize,
+    /// Deterministic arrival time (same value the bulk path waits on).
+    time: f64,
+    from: usize,
+    frame: Frame,
 }
 
 /// What one node hands back when a run finishes — shared by both
@@ -732,6 +820,9 @@ struct ShardScratch {
     expects_buf: Vec<(usize, Channel)>,
     /// Scratch for the messages handed to `NodeProgram::absorb`.
     absorb_buf: Vec<Wire>,
+    /// Presence mask aligned with `absorb_buf`, for the bounded-staleness
+    /// partial-absorb path (empty and untouched in bulk-synchronous runs).
+    present_buf: Vec<bool>,
     /// Counter deltas, merged into the global clock after the barrier.
     payload_bytes: u64,
     frame_bytes: u64,
@@ -756,6 +847,7 @@ impl ShardScratch {
             frame_pool: Vec::new(),
             expects_buf: Vec::new(),
             absorb_buf: Vec::new(),
+            present_buf: Vec::new(),
             payload_bytes: 0,
             frame_bytes: 0,
             frames: 0,
@@ -783,6 +875,12 @@ fn emit_shard(
     for (local, prog) in programs.iter_mut().enumerate() {
         let i = s.lo + local;
         prog.emit(t, phase, &mut s.outbox);
+        if let Some(ob) = s.obs.as_deref_mut() {
+            // Drain program-side counters (e.g. adaptive link-controller
+            // bit choices) into the shard registry; merged deterministically
+            // at the phase barrier like every other counter.
+            prog.record_obs(&mut ob.reg);
+        }
         if s.outbox.is_empty() {
             continue;
         }
@@ -806,7 +904,7 @@ fn emit_shard(
                 // Evaluated in the original short-circuit order: the coin
                 // oracle is only consulted when both endpoints are live.
                 let dead = !rt.live(i, t) || !rt.live(to, t);
-                if dead || rt.dropped_broadcast(t, phase, i) {
+                if dead || rt.dropped_frame(t, phase, i, to) {
                     // Condemned frame: it never reaches the NIC. Payload
                     // buffers recycle straight back into the emit pool,
                     // the shell into the frame pool — no bytes, no
@@ -877,23 +975,46 @@ fn absorb_shard(
     links: &LinkTable,
     t: u64,
     phase: usize,
+    stale: bool,
 ) {
     for (local, prog) in programs.iter_mut().enumerate() {
         let i = s.lo + local;
         s.expects_buf.clear();
         prog.expects(t, phase, &mut s.expects_buf);
         debug_assert!(s.absorb_buf.is_empty());
-        for &(from, ch) in &s.expects_buf {
-            let idx = links.slot_index(from, i, ch) - slot_base;
-            let wire = slots[idx].pop_front().unwrap_or_else(|| {
-                panic!(
-                    "sim: node {i} expected a message from {from} on {ch:?} \
-                     at t={t} phase={phase} that was never sent"
-                )
-            });
-            s.absorb_buf.push(wire);
+        if stale {
+            // Bounded-staleness: an expected message whose frame the
+            // executor deferred is simply not in its slot yet — hand the
+            // program an empty placeholder and a presence mask instead of
+            // treating the gap as a protocol violation.
+            s.present_buf.clear();
+            for &(from, ch) in &s.expects_buf {
+                let idx = links.slot_index(from, i, ch) - slot_base;
+                match slots[idx].pop_front() {
+                    Some(wire) => {
+                        s.absorb_buf.push(wire);
+                        s.present_buf.push(true);
+                    }
+                    None => {
+                        s.absorb_buf.push(Wire::empty());
+                        s.present_buf.push(false);
+                    }
+                }
+            }
+            prog.absorb_partial(t, phase, &s.absorb_buf, &s.present_buf);
+        } else {
+            for &(from, ch) in &s.expects_buf {
+                let idx = links.slot_index(from, i, ch) - slot_base;
+                let wire = slots[idx].pop_front().unwrap_or_else(|| {
+                    panic!(
+                        "sim: node {i} expected a message from {from} on {ch:?} \
+                         at t={t} phase={phase} that was never sent"
+                    )
+                });
+                s.absorb_buf.push(wire);
+            }
+            prog.absorb(t, phase, &s.absorb_buf);
         }
-        prog.absorb(t, phase, &s.absorb_buf);
         for wire in s.absorb_buf.drain(..) {
             s.outbox.recycle(wire);
         }
@@ -959,6 +1080,15 @@ pub struct SimEngine {
     queue: BinaryHeap<Arrival>,
     /// Link-keyed delivery slots: `links.slot_index(from, to, channel)`.
     slots: Vec<VecDeque<Wire>>,
+    /// Bounded-staleness scratch: this phase's arrivals bucketed per
+    /// receiver (heap pop order, so each bucket is (time, seq)-sorted).
+    /// Empty vecs — and untouched — in bulk-synchronous runs.
+    stale_buckets: Vec<Vec<Arrival>>,
+    /// Frames deferred past a receiver's quorum, per receiver, in
+    /// deferral order (= fold order).
+    stale_pending: Vec<Vec<LateFrame>>,
+    /// Scratch for the wires of one late frame being folded.
+    fold_buf: Vec<Wire>,
     /// Instrumentation plane ([`SimEngine::enable_obs`]); `None` — the
     /// default — costs one branch on already-rare events.
     obs: Option<Box<EngineObs>>,
@@ -1006,6 +1136,9 @@ impl SimEngine {
             shards,
             queue: BinaryHeap::new(),
             slots,
+            stale_buckets: (0..n).map(|_| Vec::new()).collect(),
+            stale_pending: (0..n).map(|_| Vec::new()).collect(),
+            fold_buf: Vec::new(),
             obs: None,
         }
     }
@@ -1131,10 +1264,10 @@ impl SimEngine {
 
     /// Absorb pass: receivers own disjoint receiver-major slot ranges, so
     /// the slot table splits cleanly across shards.
-    fn absorb_phase(&mut self, programs: &mut [Box<dyn NodeProgram>], t: u64, phase: usize) {
+    fn absorb_phase(&mut self, programs: &mut [Box<dyn NodeProgram>], t: u64, phase: usize, stale: bool) {
         let links = &self.links;
         if self.shards.len() == 1 {
-            absorb_shard(&mut self.shards[0], programs, &mut self.slots, 0, links, t, phase);
+            absorb_shard(&mut self.shards[0], programs, &mut self.slots, 0, links, t, phase, stale);
         } else {
             std::thread::scope(|scope| {
                 let mut progs = &mut programs[..];
@@ -1149,7 +1282,7 @@ impl SimEngine {
                     slots = rest;
                     let base = consumed;
                     consumed = end;
-                    scope.spawn(move || absorb_shard(s, p, sl, base, links, t, phase));
+                    scope.spawn(move || absorb_shard(s, p, sl, base, links, t, phase, stale));
                 }
             });
         }
@@ -1190,6 +1323,7 @@ impl SimEngine {
             }
         }
 
+        let stale = self.opts.staleness.filter(|st| st.is_bounded());
         for phase in 0..phases {
             debug_assert!(
                 self.queue.is_empty() && self.shards.iter().all(|s| s.outbox.is_empty())
@@ -1197,6 +1331,19 @@ impl SimEngine {
             // Emit: run each node's local computation, coalesce its sends
             // into one frame per destination, charge the NIC and the link.
             self.emit_phase(programs, t, phase);
+
+            if let Some(st) = stale {
+                // Bounded-staleness delivery: each receiver proceeds at
+                // its quorum release point; stragglers are deferred with
+                // their round tag and folded late.
+                self.deliver_bounded(programs, t, phase, phases, st);
+                self.absorb_phase(programs, t, phase, true);
+                debug_assert!(
+                    self.slots.iter().all(|q| q.is_empty()),
+                    "sim: undelivered messages at t={t} phase={phase}"
+                );
+                continue;
+            }
 
             // Deliver in virtual-time order; a receiver's clock waits on
             // its latest arrival. Wires move into their (from, to,
@@ -1253,12 +1400,152 @@ impl SimEngine {
             // Absorb: each node reads exactly what it expects; consumed
             // payload buffers are recycled into the receiving shard's
             // outbox pool.
-            self.absorb_phase(programs, t, phase);
+            self.absorb_phase(programs, t, phase, false);
             debug_assert!(
                 self.slots.iter().all(|q| q.is_empty()),
                 "sim: undelivered messages at t={t} phase={phase}"
             );
         }
+    }
+
+    /// Bounded-staleness delivery for one phase (DESIGN.md §4b). Serial
+    /// and receiver-ordered; the classification is a pure function of
+    /// the deterministic arrival times, so it is bit-identical at any
+    /// shard count.
+    ///
+    /// Per receiver `i`, with `m` frames actually sent to it this phase:
+    ///
+    /// 1. The release point is the maximum of its own clock, the
+    ///    `ceil(m·q/100)`-th earliest arrival (the quorum), and the
+    ///    arrival time of every deferred frame at the staleness bound
+    ///    (a frame from round ≤ `t − s` must be folded before the node
+    ///    may proceed — that wait *is* the bound).
+    /// 2. Deferred frames that have arrived by the release point are
+    ///    folded via [`NodeProgram::fold_late`] in deferral order
+    ///    (= (origin round, sequence) order), with their round tag.
+    /// 3. This phase's arrivals at or before the release point go to
+    ///    their delivery slots for the partial absorb; the stragglers
+    ///    join the deferral queue with round tag `t`.
+    /// 4. The receiver's clock advances to the release point.
+    fn deliver_bounded(
+        &mut self,
+        programs: &mut [Box<dyn NodeProgram>],
+        t: u64,
+        phase: usize,
+        phases: usize,
+        st: Staleness,
+    ) {
+        while let Some(a) = self.queue.pop() {
+            self.stale_buckets[a.to].push(a);
+        }
+        for i in 0..self.n {
+            let mut bucket = std::mem::take(&mut self.stale_buckets[i]);
+            let mut pend = std::mem::take(&mut self.stale_pending[i]);
+            let nt = self.clock.node_time[i];
+            let mut release = nt;
+            if !bucket.is_empty() {
+                let m = bucket.len() as u64;
+                let k = (m * st.quorum_pct as u64).div_ceil(100).max(1) as usize;
+                release = release.max(bucket[k - 1].time);
+            }
+            for lf in pend.iter() {
+                if t.saturating_sub(lf.round) >= st.max_rounds {
+                    release = release.max(lf.time);
+                }
+            }
+            if let Some(eo) = self.obs.as_deref_mut() {
+                // Quorum waits overlap several frames' transfer and
+                // serialization intervals; attributing the whole jump as
+                // idle keeps the breakdown exact (it still sums to the
+                // virtual clock bitwise) without inventing a split.
+                let wait = release - nt;
+                if wait > 0.0 {
+                    eo.splits[i * phases + phase].idle_s += wait;
+                    eo.reg.add(Ctr::DeliveryWaits, 1);
+                    trace_try(&mut eo.trace, |tw| {
+                        tw.span(PID_NODES, i as u64, "wait", nt * 1e6, wait * 1e6)
+                    });
+                }
+            }
+            self.clock.node_time[i] = release;
+            let mut k = 0;
+            while k < pend.len() {
+                if pend[k].time <= release {
+                    let lf = pend.remove(k);
+                    self.fold_late_frame(programs, t, i, lf);
+                } else {
+                    k += 1;
+                }
+            }
+            for a in bucket.drain(..) {
+                if let Some(eo) = self.obs.as_deref_mut() {
+                    if eo.trace.is_some() {
+                        let link = self.links.link_id(a.from, i) as u64;
+                        let dur_us = (a.tx + a.lat) * 1e6;
+                        let bytes = a.frame.encoded_len() as u64;
+                        trace_try(&mut eo.trace, |tw| {
+                            tw.frame_span(link, a.time * 1e6 - dur_us, dur_us, a.from, i, bytes)
+                        });
+                    }
+                }
+                if a.time <= release {
+                    let mut frame = a.frame;
+                    for (ch, wire) in frame.msgs.drain(..) {
+                        let idx = self.links.slot_index(a.from, i, ch);
+                        let elems = wire.len;
+                        self.slots[idx].push_back(wire);
+                        if let Some(eo) = self.obs.as_deref_mut() {
+                            eo.reg.add(Ctr::CodecDecompressNs, eo.cost.decompress_ns(elems));
+                            eo.reg.observe(Hst::QueueOccupancy, self.slots[idx].len() as u64);
+                        }
+                    }
+                    self.shards[self.node_shard[a.from] as usize].frame_pool.push(frame);
+                } else {
+                    if let Some(eo) = self.obs.as_deref_mut() {
+                        eo.reg.add(Ctr::StaleDeferred, 1);
+                    }
+                    pend.push(LateFrame {
+                        round: t,
+                        phase,
+                        time: a.time,
+                        from: a.from,
+                        frame: a.frame,
+                    });
+                }
+            }
+            self.stale_buckets[i] = bucket;
+            self.stale_pending[i] = pend;
+        }
+    }
+
+    /// Fold one deferred frame into receiver `to` at round `t_now`,
+    /// recycling its buffers exactly like on-time delivery does (wires
+    /// into the receiving shard's outbox pool, the shell into the
+    /// sending shard's frame pool).
+    fn fold_late_frame(
+        &mut self,
+        programs: &mut [Box<dyn NodeProgram>],
+        t_now: u64,
+        to: usize,
+        lf: LateFrame,
+    ) {
+        debug_assert!(self.fold_buf.is_empty());
+        let mut frame = lf.frame;
+        for (_, wire) in frame.msgs.drain(..) {
+            self.fold_buf.push(wire);
+        }
+        if let Some(eo) = self.obs.as_deref_mut() {
+            eo.reg.add(Ctr::StaleApplied, 1);
+            for w in &self.fold_buf {
+                eo.reg.add(Ctr::CodecDecompressNs, eo.cost.decompress_ns(w.len));
+            }
+        }
+        programs[to].fold_late(lf.round, t_now, lf.phase, lf.from, &self.fold_buf);
+        let shard = self.node_shard[to] as usize;
+        for wire in self.fold_buf.drain(..) {
+            self.shards[shard].outbox.recycle(wire);
+        }
+        self.shards[self.node_shard[lf.from] as usize].frame_pool.push(frame);
     }
 
     /// Consume the engine and programs into a [`SimRun`].
@@ -1534,6 +1821,7 @@ mod tests {
             iters,
             SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(8e6, 1e-3)),
+                staleness: None,
                 compute_per_iter_s: 0.0,
                 scenario: None,
             },
@@ -1554,6 +1842,7 @@ mod tests {
         let n = 8;
         let opts = || SimOpts {
             cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+            staleness: None,
             compute_per_iter_s: 0.01,
             scenario: None,
         };
@@ -1580,6 +1869,7 @@ mod tests {
             let programs = lossy_programs(n, &rt);
             let opts = SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+                staleness: None,
                 compute_per_iter_s: 0.01,
                 scenario: Some(rt),
             };
@@ -1612,6 +1902,7 @@ mod tests {
             10,
             SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(1e9, 5e-3)),
+                staleness: None,
                 compute_per_iter_s: 0.0,
                 scenario: None,
             },
@@ -1621,6 +1912,7 @@ mod tests {
             10,
             SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(1e9, 0.13e-3)),
+                staleness: None,
                 compute_per_iter_s: 0.0,
                 scenario: None,
             },
@@ -1635,6 +1927,7 @@ mod tests {
             20,
             SimOpts {
                 cost: CostModel::Ideal,
+                staleness: None,
                 compute_per_iter_s: 0.11,
                 scenario: None,
             },
@@ -1650,6 +1943,7 @@ mod tests {
             10,
             SimOpts {
                 cost: CostModel::Uniform(base),
+                staleness: None,
                 compute_per_iter_s: 0.0,
                 scenario: None,
             },
@@ -1659,6 +1953,7 @@ mod tests {
             10,
             SimOpts {
                 cost: CostModel::uniform_with_stragglers(8, base, &[3], 20.0),
+                staleness: None,
                 compute_per_iter_s: 0.0,
                 scenario: None,
             },
@@ -1673,6 +1968,7 @@ mod tests {
             30,
             SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+                staleness: None,
                 compute_per_iter_s: 0.01,
                 scenario: None,
             },
@@ -1682,6 +1978,7 @@ mod tests {
             30,
             SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+                staleness: None,
                 compute_per_iter_s: 0.01,
                 scenario: None,
             },
@@ -1810,6 +2107,7 @@ mod tests {
             n,
             SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(8e6, 1e-3)),
+                staleness: None,
                 compute_per_iter_s: 0.0,
                 scenario: Some(rt.clone()),
             },
@@ -1854,6 +2152,7 @@ mod tests {
                 6,
                 SimOpts {
                     cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+                    staleness: None,
                     compute_per_iter_s: 0.01,
                     scenario: Some(rt),
                 },
@@ -1876,6 +2175,7 @@ mod tests {
     fn bandwidth_schedule_stretches_serialization_time() {
         let opts = |scenario: Option<Arc<ScenarioRuntime>>| SimOpts {
             cost: CostModel::Uniform(NetworkModel::new(1e6, 0.0)),
+            staleness: None,
             compute_per_iter_s: 0.0,
             scenario,
         };
@@ -1904,6 +2204,7 @@ mod tests {
             n,
             SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+                staleness: None,
                 compute_per_iter_s: 0.0,
                 scenario: None,
             },
@@ -1919,6 +2220,7 @@ mod tests {
     fn obs_opts() -> SimOpts {
         SimOpts {
             cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+            staleness: None,
             compute_per_iter_s: 0.01,
             scenario: None,
         }
@@ -1977,6 +2279,7 @@ mod tests {
             let programs = lossy_programs(n, &rt);
             let opts = SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+                staleness: None,
                 compute_per_iter_s: 0.01,
                 scenario: Some(rt),
             };
@@ -2014,6 +2317,7 @@ mod tests {
             n,
             SimOpts {
                 cost: CostModel::Uniform(NetworkModel::new(8e6, 1e-3)),
+                staleness: None,
                 compute_per_iter_s: 0.0,
                 scenario: Some(rt),
             },

@@ -58,11 +58,23 @@ pub enum Ctr {
     DeadEndpointDrops,
     /// Node-rounds spent frozen by churn (dead nodes × iterations).
     ChurnFrozenNodeRounds,
+    /// Frames deferred past a bounded-staleness quorum barrier.
+    StaleDeferred,
+    /// Deferred frames folded late into a receiver (with their round tag).
+    StaleApplied,
+    /// Sum of per-call parameter choices (quantize bits) made by the
+    /// adaptive link controller; divide by its compress count for the
+    /// realized average.
+    AdaptBitsSum,
+    /// Compress calls issued through the adaptive link controller.
+    AdaptCalls,
+    /// Times the adaptive controller changed its parameter choice.
+    AdaptShifts,
 }
 
 impl Ctr {
     /// Every counter, in registry (= display) order.
-    pub const ALL: [Ctr; 11] = [
+    pub const ALL: [Ctr; 16] = [
         Ctr::Frames,
         Ctr::Msgs,
         Ctr::PayloadBytes,
@@ -74,6 +86,11 @@ impl Ctr {
         Ctr::ScenarioDrops,
         Ctr::DeadEndpointDrops,
         Ctr::ChurnFrozenNodeRounds,
+        Ctr::StaleDeferred,
+        Ctr::StaleApplied,
+        Ctr::AdaptBitsSum,
+        Ctr::AdaptCalls,
+        Ctr::AdaptShifts,
     ];
 
     pub fn name(self) -> &'static str {
@@ -89,6 +106,11 @@ impl Ctr {
             Ctr::ScenarioDrops => "scenario_drops",
             Ctr::DeadEndpointDrops => "dead_endpoint_drops",
             Ctr::ChurnFrozenNodeRounds => "churn_frozen_node_rounds",
+            Ctr::StaleDeferred => "stale_deferred",
+            Ctr::StaleApplied => "stale_applied",
+            Ctr::AdaptBitsSum => "adapt_bits_sum",
+            Ctr::AdaptCalls => "adapt_calls",
+            Ctr::AdaptShifts => "adapt_shifts",
         }
     }
 }

@@ -144,6 +144,7 @@ impl JobRequest {
                 "topology" => job.base.topology = expect_str(&mut p, &key)?,
                 "model" => job.base.model = expect_str(&mut p, &key)?,
                 "scenario" => job.base.scenario = expect_str(&mut p, &key)?,
+                "staleness" => job.base.staleness = expect_str(&mut p, &key)?,
                 "nodes" => job.base.n_nodes = expect_usize(&mut p, &key)?,
                 "iters" => job.base.iters = expect_usize(&mut p, &key)?,
                 "eval_every" => job.base.eval_every = expect_usize(&mut p, &key)?,
@@ -195,6 +196,35 @@ impl JobRequest {
         }
         Ok(cells)
     }
+}
+
+/// Detect a cancellation line: `{"cancel": "<id>"}` — exactly one field.
+/// Returns `None` when the line is not a cancel request at all (it is
+/// then parsed as a job line); `Some(Err(..))` when the line *is* a
+/// cancel request but malformed, so the caller can answer with a
+/// structured error frame instead of misreading it as a job.
+pub fn parse_cancel(line: &str) -> Option<Result<String, String>> {
+    let mut p = JsonPull::new(line);
+    if p.next().ok()? != Event::BeginObj {
+        return None;
+    }
+    match p.next().ok()? {
+        Event::Key(k) if k == "cancel" => {}
+        _ => return None,
+    }
+    Some((|| {
+        let id = match p.step()? {
+            Event::Str(s) => s.into_owned(),
+            other => return Err(format!("cancel: expects a string job id, got {other:?}")),
+        };
+        if p.step()? != Event::EndObj {
+            return Err("cancel: exactly one field, the job id".to_string());
+        }
+        if p.step()? != Event::End {
+            return Err("cancel: trailing data after the object".to_string());
+        }
+        Ok(id)
+    })())
 }
 
 /// Best-effort `id` recovery from a line that failed to parse as a job,
@@ -283,6 +313,41 @@ mod tests {
         // pairing; the job must be rejected before any cell runs.
         let job = JobRequest::parse(r#"{"algo":"dcd","compressor":"topk_10"}"#).unwrap();
         assert!(job.cells().is_err());
+    }
+
+    #[test]
+    fn cancel_lines_are_detected_strictly() {
+        assert_eq!(parse_cancel(r#"{"cancel":"j7"}"#), Some(Ok("j7".to_string())));
+        // Not cancel lines at all: parsed as jobs downstream.
+        assert_eq!(parse_cancel(r#"{"algo":"dcd","compressor":"q8"}"#), None);
+        assert_eq!(parse_cancel(r#"{"id":"x","cancel":"y"}"#), None);
+        assert_eq!(parse_cancel("garbage"), None);
+        assert_eq!(parse_cancel(r#"[1]"#), None);
+        // Cancel lines, but malformed: structured errors, not jobs.
+        for line in [
+            r#"{"cancel":7}"#,
+            r#"{"cancel":"a","extra":1}"#,
+            r#"{"cancel":"a"} tail"#,
+        ] {
+            let res = parse_cancel(line).unwrap_or_else(|| panic!("{line} is a cancel line"));
+            assert!(res.is_err(), "{line}");
+        }
+    }
+
+    #[test]
+    fn staleness_field_flows_into_the_base_config() {
+        let job = JobRequest::parse(
+            r#"{"algo":"choco","compressor":"q8","eta":0.5,"staleness":"quorum_q75_s2"}"#,
+        )
+        .unwrap();
+        assert_eq!(job.base.staleness, "quorum_q75_s2");
+        assert!(job.cells().is_ok(), "choco is staleness-safe");
+        // A non-staleness-safe algorithm is refused at admission.
+        let bad = JobRequest::parse(
+            r#"{"algo":"dcd","compressor":"q8","staleness":"quorum_q75_s2"}"#,
+        )
+        .unwrap();
+        assert!(bad.cells().is_err());
     }
 
     #[test]

@@ -17,6 +17,16 @@
 //! | `result`   | right after its `progress` frame  | `algo`, `bytes_by_node`, `bytes_sent`, `compressor`, `final_loss`, `frames_dropped`, `id`, `iters`, `obs`?, `sim_time_s`, `trace`? |
 //! | `error`    | malformed line, inadmissible job, or a failed cell | `cell`?, `error`, `id` |
 //! | `done`     | the whole grid has run            | `cells`, `failed`, `id`       |
+//! | `cancelled`| the job was cancelled (terminal — replaces `done`) | `cells`, `completed`, `id` |
+//!
+//! A line of the form `{"cancel": "<id>"}` cancels the job with that
+//! id: if the job is currently running, the cancel set is checked
+//! between cells — completed cells keep their `progress`/`result`
+//! frames, unstarted cells are skipped, and the job ends with a terminal
+//! `cancelled` frame instead of `done`. If no such job is running, the
+//! id is remembered and the next job line carrying it is answered with
+//! `cancelled` before any cell runs. Input is read on a dedicated
+//! thread so cancels take effect while a grid is executing.
 //!
 //! `counters` (a compact snapshot of the instrumentation registry) and
 //! `obs` (the per-phase "where did the time go" breakdown) appear when
@@ -39,7 +49,10 @@ use crate::network::sim::SimOpts;
 use crate::obs::{Ctr, ObsReport};
 use crate::spec::ObsSpec;
 use crate::util::json::JsonWriter;
+use std::collections::{HashSet, VecDeque};
 use std::io::{self, BufRead, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
 
 /// Serve-loop knobs.
 #[derive(Debug, Clone, Copy)]
@@ -62,6 +75,8 @@ pub struct ServeStats {
     pub jobs_ok: usize,
     /// Lines rejected before any cell ran (parse or admission failure).
     pub jobs_rejected: usize,
+    /// Jobs ended by a `{"cancel": id}` line (before or mid-grid).
+    pub jobs_cancelled: usize,
     /// Total grid cells executed across all accepted jobs.
     pub cells_run: usize,
 }
@@ -238,6 +253,7 @@ fn run_cell(cell: &Cell, job: &JobRequest) -> Result<SimTraced, String> {
     };
     let sim = SimOpts {
         cost: CostModel::Uniform(net),
+        staleness: None,
         compute_per_iter_s: job.compute_ms * 1e-3,
         scenario: None,
     };
@@ -250,12 +266,58 @@ fn run_cell(cell: &Cell, job: &JobRequest) -> Result<SimTraced, String> {
         .map_err(err_str)
 }
 
+/// Terminal `cancelled` frame: the job ran `completed` of `cells` cells
+/// before the cancel took effect (both 0 when it was cancelled before
+/// admission).
+fn cancelled_frame<W: Write>(
+    out: &mut W,
+    id: &str,
+    cells: usize,
+    completed: usize,
+) -> io::Result<()> {
+    frame(out, |w| {
+        w.begin_obj()?;
+        w.key("event")?;
+        w.str("cancelled")?;
+        w.key("cells")?;
+        w.num_u64(cells as u64)?;
+        w.key("completed")?;
+        w.num_u64(completed as u64)?;
+        w.key("id")?;
+        w.str(id)?;
+        w.end_obj()
+    })
+}
+
 /// The serve loop: read NDJSON job lines from `input` until EOF, stream
 /// frames to `out`. Bad lines produce `error` frames and the loop keeps
-/// going; only I/O failure on `input`/`out` ends it early.
-pub fn serve<R: BufRead, W: Write>(
+/// going; only I/O failure on `input`/`out` ends it early. Input is
+/// pumped through a dedicated reader thread so `{"cancel": id}` lines
+/// are seen — and applied between cells — while a job grid is running.
+pub fn serve<R: BufRead + Send, W: Write>(
     input: R,
     mut out: W,
+    opts: &ServeOpts,
+) -> io::Result<ServeStats> {
+    std::thread::scope(|scope| {
+        let (tx, rx) = std::sync::mpsc::channel::<io::Result<String>>();
+        scope.spawn(move || {
+            for line in input.lines() {
+                let failed = line.is_err();
+                if tx.send(line).is_err() || failed {
+                    break;
+                }
+            }
+        });
+        serve_channel(&rx, &mut out, opts)
+    })
+}
+
+/// The loop body behind [`serve`], consuming the reader thread's line
+/// channel.
+fn serve_channel<W: Write>(
+    rx: &Receiver<io::Result<String>>,
+    out: &mut W,
     opts: &ServeOpts,
 ) -> io::Result<ServeStats> {
     let threads = if opts.threads == 0 {
@@ -264,30 +326,59 @@ pub fn serve<R: BufRead, W: Write>(
         opts.threads
     };
     let mut stats = ServeStats::default();
-    for line in input.lines() {
-        let line = line?;
+    // Ids cancelled while no such job was running: applied to the next
+    // job line that carries one of them.
+    let mut cancels: HashSet<String> = HashSet::new();
+    // Non-cancel lines drained from the channel mid-grid, replayed in
+    // arrival order before blocking on the channel again.
+    let mut pending: VecDeque<String> = VecDeque::new();
+    loop {
+        let line = match pending.pop_front() {
+            Some(l) => l,
+            None => match rx.recv() {
+                Ok(line) => line?,
+                Err(_) => break, // input closed
+            },
+        };
         if line.trim().is_empty() {
+            continue;
+        }
+        if let Some(cancel) = job::parse_cancel(&line) {
+            match cancel {
+                Ok(id) => {
+                    cancels.insert(id);
+                }
+                Err(msg) => {
+                    stats.jobs_rejected += 1;
+                    error_frame(out, None, None, &msg)?;
+                }
+            }
             continue;
         }
         let job = match JobRequest::parse(&line) {
             Ok(j) => j,
             Err(msg) => {
                 stats.jobs_rejected += 1;
-                error_frame(&mut out, peek_id(&line).as_deref(), None, &msg)?;
+                error_frame(out, peek_id(&line).as_deref(), None, &msg)?;
                 continue;
             }
         };
+        if cancels.remove(&job.id) {
+            stats.jobs_cancelled += 1;
+            cancelled_frame(out, &job.id, 0, 0)?;
+            continue;
+        }
         // Admit the whole grid up front: a job with one bad cell is an
         // `error` frame, never a partial run.
         let cells = match job.cells() {
             Ok(c) => c,
             Err(e) => {
                 stats.jobs_rejected += 1;
-                error_frame(&mut out, Some(&job.id), None, &err_str(e))?;
+                error_frame(out, Some(&job.id), None, &err_str(e))?;
                 continue;
             }
         };
-        frame(&mut out, |w| {
+        frame(out, |w| {
             w.begin_obj()?;
             w.key("event")?;
             w.str("accepted")?;
@@ -301,6 +392,10 @@ pub fn serve<R: BufRead, W: Write>(
         let total = cells.len();
         let mut completed = 0usize;
         let mut failed = 0usize;
+        // Set when a cancel for *this* job is drained mid-grid: cells
+        // that have not started yet see it and return `None` (skipped,
+        // no frames); cells already running finish and report normally.
+        let cancel_now = AtomicBool::new(false);
         // The observer runs on this (collector) thread in completion
         // order, so frames stream while the grid is still running. I/O
         // errors can't propagate out of the observer; stash the first
@@ -309,20 +404,53 @@ pub fn serve<R: BufRead, W: Write>(
         runner::run_cells_observed(
             threads,
             &cells,
-            |_, cell| run_cell(cell, &job),
-            |i, res: &Result<SimTraced, String>| {
+            |_, cell| {
+                if cancel_now.load(Ordering::Relaxed) {
+                    None
+                } else {
+                    Some(run_cell(cell, &job))
+                }
+            },
+            |i, res: &Option<Result<SimTraced, String>>| {
+                // Between cells: drain input that has already arrived.
+                // A cancel for this job takes effect immediately; other
+                // cancels are remembered; job lines queue for later.
+                loop {
+                    match rx.try_recv() {
+                        Ok(Ok(l)) => match job::parse_cancel(&l) {
+                            Some(Ok(id)) if id == job.id => {
+                                cancel_now.store(true, Ordering::Relaxed);
+                            }
+                            Some(Ok(id)) => {
+                                cancels.insert(id);
+                            }
+                            Some(Err(_)) | None => pending.push_back(l),
+                        },
+                        Ok(Err(e)) => {
+                            if io_err.is_none() {
+                                io_err = Some(e);
+                            }
+                            break;
+                        }
+                        Err(_) => break,
+                    }
+                }
                 if io_err.is_some() {
                     return;
                 }
+                let res = match res {
+                    Some(r) => r,
+                    None => return, // skipped after cancellation
+                };
                 completed += 1;
                 let obs = res.as_ref().ok().and_then(|t| t.run.obs.as_ref());
-                let wrote = progress_frame(&mut out, &job.id, &cells[i], completed, total, obs)
+                let wrote = progress_frame(out, &job.id, &cells[i], completed, total, obs)
                     .and_then(|()| match res {
-                        Ok(traced) => result_frame(&mut out, &job, &cells[i], traced),
+                        Ok(traced) => result_frame(out, &job, &cells[i], traced),
                         Err(msg) => {
                             failed += 1;
                             let cell = format!("{}/{}", cells[i].algo, cells[i].compressor);
-                            error_frame(&mut out, Some(&job.id), Some(&cell), msg)
+                            error_frame(out, Some(&job.id), Some(&cell), msg)
                         }
                     });
                 if let Err(e) = wrote {
@@ -333,20 +461,25 @@ pub fn serve<R: BufRead, W: Write>(
         if let Some(e) = io_err {
             return Err(e);
         }
-        stats.jobs_ok += 1;
-        stats.cells_run += total;
-        frame(&mut out, |w| {
-            w.begin_obj()?;
-            w.key("event")?;
-            w.str("done")?;
-            w.key("cells")?;
-            w.num_u64(total as u64)?;
-            w.key("failed")?;
-            w.num_u64(failed as u64)?;
-            w.key("id")?;
-            w.str(&job.id)?;
-            w.end_obj()
-        })?;
+        stats.cells_run += completed;
+        if cancel_now.load(Ordering::Relaxed) {
+            stats.jobs_cancelled += 1;
+            cancelled_frame(out, &job.id, total, completed)?;
+        } else {
+            stats.jobs_ok += 1;
+            frame(out, |w| {
+                w.begin_obj()?;
+                w.key("event")?;
+                w.str("done")?;
+                w.key("cells")?;
+                w.num_u64(total as u64)?;
+                w.key("failed")?;
+                w.num_u64(failed as u64)?;
+                w.key("id")?;
+                w.str(&job.id)?;
+                w.end_obj()
+            })?;
+        }
     }
     Ok(stats)
 }
@@ -369,8 +502,8 @@ pub fn serve_tcp(addr: &str, opts: &ServeOpts) -> anyhow::Result<()> {
         let reader = io::BufReader::new(stream.try_clone()?);
         match serve(reader, stream, opts) {
             Ok(s) => eprintln!(
-                "decomp serve: {peer} closed — {} ok, {} rejected, {} cell(s)",
-                s.jobs_ok, s.jobs_rejected, s.cells_run
+                "decomp serve: {peer} closed — {} ok, {} rejected, {} cancelled, {} cell(s)",
+                s.jobs_ok, s.jobs_rejected, s.jobs_cancelled, s.cells_run
             ),
             Err(e) => eprintln!("decomp serve: {peer} i/o error: {e}"),
         }
@@ -451,6 +584,39 @@ mod tests {
         assert_eq!(phases.len(), 1);
         assert_eq!(phases[0].get("name").unwrap().as_str(), Some("gossip"));
         assert!(obs.get("virtual_time_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn cancel_before_the_job_line_short_circuits_admission() {
+        let line = SMALL.replace('\n', " ");
+        let input = format!("{{\"cancel\": \"t1\"}}\n{line}\n");
+        let (stats, frames) = run_lines(&input);
+        assert_eq!(stats.jobs_cancelled, 1);
+        assert_eq!(stats.jobs_ok, 0);
+        assert_eq!(stats.cells_run, 0);
+        assert_eq!(events(&frames), vec!["cancelled"]);
+        let c = &frames[0];
+        assert_eq!(c.get("id").unwrap().as_str(), Some("t1"));
+        assert_eq!(c.get("cells").unwrap().as_f64(), Some(0.0));
+        assert_eq!(c.get("completed").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn cancel_for_a_different_id_does_not_touch_the_job() {
+        let line = SMALL.replace('\n', " ");
+        let input = format!("{{\"cancel\": \"other\"}}\n{line}\n");
+        let (stats, frames) = run_lines(&input);
+        assert_eq!(stats.jobs_cancelled, 0);
+        assert_eq!(stats.jobs_ok, 1);
+        assert_eq!(events(&frames), vec!["accepted", "progress", "result", "done"]);
+    }
+
+    #[test]
+    fn malformed_cancel_gets_an_error_frame() {
+        let (stats, frames) = run_lines("{\"cancel\": 7}\n");
+        assert_eq!(stats.jobs_rejected, 1);
+        assert_eq!(events(&frames), vec!["error"]);
+        assert_eq!(frames[0].get("id"), Some(&Json::Null));
     }
 
     #[test]

@@ -41,7 +41,7 @@ use crate::algorithms::{AlgoConfig, Algorithm, RunOpts, TrainTrace};
 use crate::compression::{Compressor, Identity, LinkCompressorSpec};
 use crate::coordinator::ThreadedRun;
 use crate::models::GradientModel;
-use crate::network::sim::{SimOpts, SimRun};
+use crate::network::sim::{SimOpts, SimRun, Staleness};
 use crate::topology::{Graph, MixingMatrix, Topology};
 use std::fmt;
 use std::str::FromStr;
@@ -52,6 +52,55 @@ use std::sync::Arc;
 /// impls (every `Topology::name()` output parses back, including
 /// `torus_RxC` and `random_pP_sS`).
 pub type TopologySpec = Topology;
+
+/// The public alias for the staleness axis: the engine's [`Staleness`]
+/// config, carrying total `FromStr`/`Display` impls here
+/// (`sync` ↔ the bulk-synchronous default, `quorum_q<pct>_s<rounds>` ↔
+/// bounded staleness).
+pub type StalenessSpec = Staleness;
+
+impl fmt::Display for Staleness {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_bounded() {
+            write!(f, "quorum_q{}_s{}", self.quorum_pct, self.max_rounds)
+        } else {
+            f.write_str("sync")
+        }
+    }
+}
+
+impl FromStr for Staleness {
+    type Err = SpecParseError;
+
+    /// Total inverse of the `Display` impl: `sync`, or
+    /// `quorum_q<pct>_s<rounds>` with `pct ∈ 1..=99` (100 *is* `sync`
+    /// and must be spelled that way, keeping the round-trip total) and
+    /// `rounds ≥ 1`.
+    fn from_str(s: &str) -> Result<Staleness, SpecParseError> {
+        let reject = || SpecParseError {
+            kind: "staleness",
+            given: s.to_string(),
+            registered: "sync, quorum_q<pct>_s<rounds> (pct in 1..=99, rounds >= 1)".to_string(),
+        };
+        if s == "sync" {
+            return Ok(Staleness::SYNC);
+        }
+        let Some(body) = s.strip_prefix("quorum_q") else {
+            return Err(reject());
+        };
+        let Some((pct, rounds)) = body.split_once("_s") else {
+            return Err(reject());
+        };
+        match (pct.parse::<u8>(), rounds.parse::<u64>()) {
+            (Ok(quorum_pct), Ok(max_rounds))
+                if (1..=99).contains(&quorum_pct) && max_rounds >= 1 =>
+            {
+                Ok(Staleness { quorum_pct, max_rounds })
+            }
+            _ => Err(reject()),
+        }
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Parse errors
@@ -215,6 +264,15 @@ pub struct AlgoCaps {
     /// (DCD/ECD's neighbor replicas, the Allreduce hub) silently
     /// desynchronize when membership changes.
     pub churn_safe: bool,
+    /// Sound under bounded-staleness execution (quorum < 100%): the
+    /// program implements the partial-absorb/late-fold surface
+    /// (`absorb_partial` / `fold_late`) so a deferred frame applies
+    /// exactly once, late, with its round tag — and, for the
+    /// error-feedback family, without breaking the residual invariant.
+    /// Algorithms without this flag (DCD/ECD's same-round replica
+    /// updates, the Allreduce barrier) have no sound late-application
+    /// rule and are admitted only at quorum = 100%.
+    pub staleness_safe: bool,
 }
 
 // ---------------------------------------------------------------------------
@@ -238,6 +296,11 @@ pub enum CompressorSpec {
     /// PowerGossip rank-`rank` low-rank link compression (stateful,
     /// per-edge warm-started).
     LowRank { rank: usize },
+    /// Adaptive stochastic quantization: a per-link controller floats
+    /// the bit width in `[bits_lo, bits_hi]` against the link's
+    /// virtual-time budget (stateful — the operating point is link
+    /// state — and unbiased at every width). See [`crate::adapt`].
+    Adaptive { bits_lo: u8, bits_hi: u8 },
 }
 
 impl CompressorSpec {
@@ -253,7 +316,10 @@ impl CompressorSpec {
     /// needs an algorithm whose program routes through the link
     /// surface).
     pub fn is_link_state(&self) -> bool {
-        matches!(self, CompressorSpec::LowRank { .. })
+        matches!(
+            self,
+            CompressorSpec::LowRank { .. } | CompressorSpec::Adaptive { .. }
+        )
     }
 
     /// Build the stateless codec, or `None` for the link-state family.
@@ -270,7 +336,7 @@ impl CompressorSpec {
                 Box::new(crate::compression::TopK::new(keep_percent as f64 / 100.0))
             }
             CompressorSpec::Sign => Box::new(crate::compression::SignCompressor),
-            CompressorSpec::LowRank { .. } => return None,
+            CompressorSpec::LowRank { .. } | CompressorSpec::Adaptive { .. } => return None,
         })
     }
 
@@ -279,6 +345,9 @@ impl CompressorSpec {
         match *self {
             CompressorSpec::LowRank { rank } => {
                 Some(Arc::new(crate::compression::LowRankSpec::new(rank)))
+            }
+            CompressorSpec::Adaptive { bits_lo, bits_hi } => {
+                Some(Arc::new(crate::adapt::AdaptiveLinkSpec::new(bits_lo, bits_hi)))
             }
             _ => None,
         }
@@ -306,6 +375,9 @@ impl fmt::Display for CompressorSpec {
             CompressorSpec::TopK { keep_percent } => write!(f, "topk_{keep_percent}"),
             CompressorSpec::Sign => f.write_str("sign"),
             CompressorSpec::LowRank { rank } => write!(f, "lowrank_r{rank}"),
+            CompressorSpec::Adaptive { bits_lo, bits_hi } => {
+                write!(f, "adapt_b{bits_lo}_{bits_hi}")
+            }
         }
     }
 }
@@ -348,6 +420,21 @@ impl FromStr for CompressorSpec {
         if let Some(rank) = s.strip_prefix("lowrank_r").and_then(|r| r.parse::<usize>().ok()) {
             if rank >= 1 {
                 return Ok(CompressorSpec::LowRank { rank });
+            }
+            return Err(reject());
+        }
+        if let Some(band) = s.strip_prefix("adapt_b") {
+            if let Some((lo, hi)) = band.split_once('_') {
+                if let (Ok(bits_lo), Ok(bits_hi)) = (lo.parse::<u8>(), hi.parse::<u8>()) {
+                    // Same band the controller itself enforces: a
+                    // non-empty range of admissible quantizer widths.
+                    if (1..=16).contains(&bits_lo)
+                        && (1..=16).contains(&bits_hi)
+                        && bits_lo < bits_hi
+                    {
+                        return Ok(CompressorSpec::Adaptive { bits_lo, bits_hi });
+                    }
+                }
             }
             return Err(reject());
         }
@@ -554,6 +641,46 @@ pub fn admit_scenario(algo: AlgoSpec, scenario: &ScenarioSpec) -> anyhow::Result
     Ok(())
 }
 
+/// Comma-joined names of the staleness-safe algorithms (for error
+/// messages and the registry listing).
+pub fn staleness_safe_algorithms() -> String {
+    REGISTRY
+        .iter()
+        .filter(|e| e.caps.staleness_safe)
+        .map(|e| e.canonical)
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// The staleness admission rule: bounded staleness (quorum < 100%)
+/// requires an algorithm with a sound partial-absorb/late-fold path
+/// ([`AlgoCaps::staleness_safe`]), and cannot combine with scheduled
+/// churn — the rejoin resync protocol zeroes public-copy replicas at a
+/// round boundary and is only sound with no frames still in flight
+/// across it. `sync` is admitted for everything (it *is* the
+/// bulk-synchronous engine path).
+pub fn admit_staleness(
+    algo: AlgoSpec,
+    staleness: &Staleness,
+    scenario: &ScenarioSpec,
+) -> anyhow::Result<()> {
+    if !staleness.is_bounded() {
+        return Ok(());
+    }
+    anyhow::ensure!(
+        algo.caps().staleness_safe,
+        "staleness '{staleness}' defers frames past the gossip barrier, and '{algo}' has no \
+         sound late-application rule for them; staleness-safe algorithms: {}",
+        staleness_safe_algorithms(),
+    );
+    anyhow::ensure!(
+        scenario.churn.is_none(),
+        "staleness '{staleness}' cannot combine with scheduled churn (scenario '{scenario}'): \
+         the rejoin resync protocol assumes no deferred frames cross the rejoin boundary",
+    );
+    Ok(())
+}
+
 // ---------------------------------------------------------------------------
 // ExperimentSpec → Session
 
@@ -572,6 +699,10 @@ pub struct ExperimentSpec {
     /// Fault-injection scenario (churn/drops/heterogeneity); defaults to
     /// the static lossless IID world. Applied on the sim backend.
     pub scenario: ScenarioSpec,
+    /// Execution discipline at the gossip barrier; defaults to `sync`
+    /// (bulk-synchronous). Bounded staleness applies on the sim backend
+    /// and is admitted only for staleness-safe algorithms.
+    pub staleness: StalenessSpec,
 }
 
 impl ExperimentSpec {
@@ -594,6 +725,7 @@ impl ExperimentSpec {
             seed,
             eta,
             scenario: ScenarioSpec::default(),
+            staleness: StalenessSpec::SYNC,
         })
     }
 
@@ -601,6 +733,12 @@ impl ExperimentSpec {
     /// `churn_p10_l150_j300+drop_p1`, …).
     pub fn with_scenario(mut self, scenario: &str) -> anyhow::Result<ExperimentSpec> {
         self.scenario = scenario.parse::<ScenarioSpec>()?;
+        Ok(self)
+    }
+
+    /// Parse and attach a staleness string (`sync`, `quorum_q75_s3`, …).
+    pub fn with_staleness(mut self, staleness: &str) -> anyhow::Result<ExperimentSpec> {
+        self.staleness = staleness.parse::<StalenessSpec>()?;
         Ok(self)
     }
 
@@ -616,6 +754,7 @@ impl ExperimentSpec {
         check_topology(self.topology, self.n_nodes)?;
         admit_spec(self.algo, &self.compressor, self.eta)?;
         admit_scenario(self.algo, &self.scenario)?;
+        admit_staleness(self.algo, &self.staleness, &self.scenario)?;
         Ok(self.session_unchecked())
     }
 
@@ -641,6 +780,7 @@ impl ExperimentSpec {
             entry: self.algo.entry(),
             cfg,
             scenario: self.scenario,
+            staleness: self.staleness,
         }
     }
 }
@@ -653,27 +793,37 @@ pub struct Session {
     entry: &'static AlgoEntry,
     cfg: AlgoConfig,
     scenario: ScenarioSpec,
+    staleness: StalenessSpec,
 }
 
 impl Session {
-    /// Bind the scenario to this run: sample the churn set, resolve the
-    /// masked mixing rows, and derive link timing for the timeout rule
-    /// from a uniform cost model (timeouts are inert on `Ideal`/
-    /// `PerLink` grids). Returns the config/opts pair with the shared
-    /// runtime injected; a static scenario passes both through
-    /// untouched. Errors on a degenerate churn mask (a live node with
-    /// zero live neighbors) *before* any program is built.
+    /// Bind the run's network shape to this session: derive link timing
+    /// from a uniform cost model and hand it to any timing-aware link
+    /// compressor family ([`LinkCompressorSpec::bind_timing`] — the
+    /// adaptive controller's budget inputs); sample the churn set and
+    /// resolve the masked mixing rows for a non-static scenario; and
+    /// inject the staleness discipline into the engine opts. Timeouts
+    /// and the adaptive controller are inert on `Ideal`/`PerLink` grids
+    /// (no uniform timing to bind). A static scenario under `sync`
+    /// passes config and opts through untouched. Errors on a degenerate
+    /// churn mask (a live node with zero live neighbors) *before* any
+    /// program is built.
     fn bind_scenario(&self, mut sim: SimOpts) -> anyhow::Result<(AlgoConfig, SimOpts)> {
         let mut cfg = self.cfg.clone();
+        let timing = match &sim.cost {
+            crate::network::cost::CostModel::Uniform(m) => Some(LinkTiming {
+                latency_s: m.latency_s,
+                bandwidth_bps: m.bandwidth_bps,
+                frame_bytes: cfg.wire_bytes(cfg.mixing.n()),
+            }),
+            _ => None,
+        };
+        if let (Some(link), Some(t)) = (&cfg.link, &timing) {
+            if let Some(bound) = link.bind_timing(t) {
+                cfg.link = Some(bound);
+            }
+        }
         if !self.scenario.is_static() {
-            let timing = match &sim.cost {
-                crate::network::cost::CostModel::Uniform(m) => Some(LinkTiming {
-                    latency_s: m.latency_s,
-                    bandwidth_bps: m.bandwidth_bps,
-                    frame_bytes: cfg.wire_bytes(cfg.mixing.n()),
-                }),
-                _ => None,
-            };
             let rt = Arc::new(ScenarioRuntime::new(
                 &self.scenario,
                 &cfg.mixing,
@@ -682,6 +832,9 @@ impl Session {
             )?);
             cfg.scenario = Some(rt.clone());
             sim.scenario = Some(rt);
+        }
+        if self.staleness.is_bounded() {
+            sim.staleness = Some(self.staleness);
         }
         Ok((cfg, sim))
     }

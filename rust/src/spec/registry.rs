@@ -107,6 +107,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             accepts_link_state: false,
             uses_eta: false,
             churn_safe: true,
+            staleness_safe: false,
         },
         summary: "D-PSGD (Lian et al., 2017): full-precision gossip, the decentralized baseline",
         comm: CommPattern::Gossip,
@@ -123,6 +124,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             accepts_link_state: false,
             uses_eta: false,
             churn_safe: false,
+            staleness_safe: false,
         },
         summary: "DCD-PSGD (Alg. 1): compressed model differences over literal neighbor replicas",
         comm: CommPattern::Gossip,
@@ -139,6 +141,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             accepts_link_state: false,
             uses_eta: false,
             churn_safe: false,
+            staleness_safe: false,
         },
         summary: "ECD-PSGD (Alg. 2): compressed extrapolations over neighbor estimates",
         comm: CommPattern::Gossip,
@@ -155,6 +158,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             accepts_link_state: false,
             uses_eta: false,
             churn_safe: true,
+            staleness_safe: false,
         },
         summary: "naively compressed gossip: the Fig. 1 negative example (stalls by design)",
         comm: CommPattern::Gossip,
@@ -171,6 +175,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             accepts_link_state: false,
             uses_eta: false,
             churn_safe: false,
+            staleness_safe: false,
         },
         summary: "centralized Allreduce SGD (hub-rooted reduce + broadcast), fp32",
         comm: CommPattern::HubReduce,
@@ -187,6 +192,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             accepts_link_state: false,
             uses_eta: false,
             churn_safe: false,
+            staleness_safe: false,
         },
         summary: "QSGD-style Allreduce: hub averages compressed gradients",
         comm: CommPattern::HubReduce,
@@ -203,6 +209,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             accepts_link_state: true,
             uses_eta: true,
             churn_safe: true,
+            staleness_safe: true,
         },
         summary: "CHOCO-SGD (Koloskova et al., 2019): error-feedback gossip over public copies; \
                   admits biased and link-state codecs",
@@ -220,6 +227,7 @@ pub static REGISTRY: [AlgoEntry; 8] = [
             accepts_link_state: false,
             uses_eta: true,
             churn_safe: true,
+            staleness_safe: true,
         },
         summary: "DeepSqueeze (Tang et al., 2019): error-compensated compressed-model gossip \
                   under eta-softened mixing",
@@ -242,7 +250,7 @@ pub struct CompressorFamily {
     pub summary: &'static str,
 }
 
-pub static COMPRESSOR_FAMILIES: [CompressorFamily; 6] = [
+pub static COMPRESSOR_FAMILIES: [CompressorFamily; 7] = [
     CompressorFamily {
         pattern: "fp32",
         example: "fp32",
@@ -290,6 +298,15 @@ pub static COMPRESSOR_FAMILIES: [CompressorFamily; 6] = [
         link_state: true,
         wire_bytes: "4 * sum_seg min(r,rows,cols)*(rows+cols)  (vector tails fp32)",
         summary: "PowerGossip rank-r warm-started per-link power iteration; choco only",
+    },
+    CompressorFamily {
+        pattern: "adapt_b<lo>_<hi>",
+        example: "adapt_b2_8",
+        unbiased: true,
+        link_state: true,
+        wire_bytes: "1 + 4*ceil(n/1024) + ceil(n*hi/8)  (declared; realized tracks chosen bits)",
+        summary: "adaptive per-link stochastic quantization: controller picks bits in [lo,hi] \
+                  against the link's virtual-time budget; lo < hi, both in 1..=16; choco only",
     },
 ];
 
@@ -357,7 +374,7 @@ pub struct ScenarioFamily {
     pub summary: &'static str,
 }
 
-pub static SCENARIO_FAMILIES: [ScenarioFamily; 6] = [
+pub static SCENARIO_FAMILIES: [ScenarioFamily; 7] = [
     ScenarioFamily {
         pattern: "static",
         example: "static",
@@ -375,6 +392,13 @@ pub static SCENARIO_FAMILIES: [ScenarioFamily; 6] = [
         example: "drop_p1",
         constraint: "pct in 1..=100",
         summary: "each sender's whole per-round broadcast lost with probability pct%",
+    },
+    ScenarioFamily {
+        pattern: "dropln_p<pct>",
+        example: "dropln_p1",
+        constraint: "pct in 1..=100",
+        summary: "each directed link's frame lost independently with probability pct% \
+                  (asymmetric loss; keyed (round, phase, from, to))",
     },
     ScenarioFamily {
         pattern: "dirichlet_a<alpha*100>",
@@ -407,6 +431,7 @@ pub fn list_tables() -> Vec<Table> {
             "link_state",
             "uses_eta",
             "churn_safe",
+            "staleness_safe",
             "trace",
             "summary",
         ],
@@ -419,6 +444,7 @@ pub fn list_tables() -> Vec<Table> {
             e.caps.accepts_link_state.to_string(),
             e.caps.uses_eta.to_string(),
             e.caps.churn_safe.to_string(),
+            e.caps.staleness_safe.to_string(),
             match e.trace {
                 TraceName::Fixed(label) => label.to_string(),
                 TraceName::WithCompressor(base) => format!("{base}_<compressor>"),
@@ -480,8 +506,9 @@ pub fn list_tables() -> Vec<Table> {
 }
 
 /// Registry ↔ implementation drift check: construct **every** registry
-/// entry on the sim backend at `n` nodes and step it twice (plus one
-/// link-state cell, choco+lowrank_r2, exercising the per-link path).
+/// entry on the sim backend at `n` nodes and step it twice (plus two
+/// link-state cells — choco+lowrank_r2 and choco+adapt_b2_8 — exercising
+/// the per-link path and the adaptive controller).
 /// Returns the number of cells run. This is the `decomp list` / CI smoke
 /// contract: an entry that parses but cannot build fails loudly here.
 pub fn self_check(n: usize) -> anyhow::Result<usize> {
@@ -506,6 +533,7 @@ pub fn self_check(n: usize) -> anyhow::Result<usize> {
             seed: 0x11f7,
             eta: if e.caps.uses_eta { 0.5 } else { 1.0 },
             scenario: Default::default(),
+            staleness: Default::default(),
         })
         .collect();
     cells.push(ExperimentSpec {
@@ -516,6 +544,17 @@ pub fn self_check(n: usize) -> anyhow::Result<usize> {
         seed: 0x11f7,
         eta: 0.5,
         scenario: Default::default(),
+        staleness: Default::default(),
+    });
+    cells.push(ExperimentSpec {
+        algo: AlgoSpec::Choco,
+        compressor: CompressorSpec::Adaptive { bits_lo: 2, bits_hi: 8 },
+        topology: Topology::Ring,
+        n_nodes: n,
+        seed: 0x11f7,
+        eta: 0.5,
+        scenario: Default::default(),
+        staleness: Default::default(),
     });
     for cell in &cells {
         let (models, x0) = build_models(&kind, &spec);

@@ -72,6 +72,11 @@ pub struct ScenarioSpec {
     /// Per-sender-per-round broadcast drop probability, in percent
     /// (0..=100; 0 = lossless).
     pub drop_percent: u8,
+    /// Per-directed-link drop probability, in percent (0..=100; 0 =
+    /// lossless). Unlike `drop_percent`, each link flips its own coin, so
+    /// one neighbor can miss a broadcast another receives — the
+    /// asymmetric loss mode replicated state degrades under.
+    pub dropln_percent: u8,
     /// Dirichlet concentration α for non-IID shards, in hundredths
     /// (`Some(30)` = α 0.30) so `Display` ↔ `FromStr` stays exact.
     pub dirichlet_alpha_hundredths: Option<u32>,
@@ -84,8 +89,8 @@ pub struct ScenarioSpec {
 }
 
 fn scenario_grammar() -> String {
-    "static, churn_p<pct>_l<leave>_j<join>, drop_p<pct>, dirichlet_a<alpha*100>, \
-     bw_h<pct>_e<every>, timeout_<ms> (parts joined with '+')"
+    "static, churn_p<pct>_l<leave>_j<join>, drop_p<pct>, dropln_p<pct>, \
+     dirichlet_a<alpha*100>, bw_h<pct>_e<every>, timeout_<ms> (parts joined with '+')"
         .to_string()
 }
 
@@ -113,7 +118,10 @@ impl ScenarioSpec {
     /// need algorithm-side support, as opposed to the data/bandwidth
     /// parts every algorithm tolerates.
     pub fn perturbs_delivery(&self) -> bool {
-        self.churn.is_some() || self.drop_percent > 0 || self.timeout_ms.is_some()
+        self.churn.is_some()
+            || self.drop_percent > 0
+            || self.dropln_percent > 0
+            || self.timeout_ms.is_some()
     }
 
     /// Reject out-of-range fields: a hand-built spec gets the same gate
@@ -129,6 +137,9 @@ impl ScenarioSpec {
         }
         if self.drop_percent > 100 {
             return Err(reject(&format!("drop_p{}", self.drop_percent)));
+        }
+        if self.dropln_percent > 100 {
+            return Err(reject(&format!("dropln_p{}", self.dropln_percent)));
         }
         if self.dirichlet_alpha_hundredths == Some(0) {
             return Err(reject("dirichlet_a0"));
@@ -156,6 +167,9 @@ impl fmt::Display for ScenarioSpec {
         }
         if self.drop_percent > 0 {
             parts.push(format!("drop_p{}", self.drop_percent));
+        }
+        if self.dropln_percent > 0 {
+            parts.push(format!("dropln_p{}", self.dropln_percent));
         }
         if let Some(a) = self.dirichlet_alpha_hundredths {
             parts.push(format!("dirichlet_a{a}"));
@@ -202,6 +216,11 @@ impl FromStr for ScenarioSpec {
             } else if let Some(p) = part.strip_prefix("drop_p") {
                 match (p.parse::<u8>().ok(), spec.drop_percent) {
                     (Some(pct), 0) if pct > 0 => spec.drop_percent = pct,
+                    _ => return Err(reject(s)),
+                }
+            } else if let Some(p) = part.strip_prefix("dropln_p") {
+                match (p.parse::<u8>().ok(), spec.dropln_percent) {
+                    (Some(pct), 0) if pct > 0 => spec.dropln_percent = pct,
                     _ => return Err(reject(s)),
                 }
             } else if let Some(a) = part.strip_prefix("dirichlet_a") {
@@ -410,6 +429,36 @@ impl ScenarioRuntime {
         let mut rng = Pcg64::new(self.seed ^ 0x10_55, stream);
         rng.f64() < self.spec.drop_percent as f64 / 100.0
     }
+
+    /// Is the single directed frame `from → to` for `(t, phase)` lost?
+    /// The asymmetric counterpart of [`ScenarioRuntime::dropped_broadcast`]:
+    /// each link flips its own coin, keyed `(round, phase, from, to)`, so
+    /// one neighbor can miss an update another applies. Same pure-function
+    /// discipline — the engine condemns the frame at emit and every
+    /// receiver shrinks its expected set from the identical oracle.
+    ///
+    /// Senders do **not** consult this for the error-feedback no-send
+    /// rule: a per-link drop loses only one replica's copy, the sender's
+    /// state still advances for the links that delivered.
+    pub fn dropped_link(&self, t: u64, phase: usize, from: usize, to: usize) -> bool {
+        if self.spec.dropln_percent == 0 {
+            return false;
+        }
+        let stream = 0xd11c_0000_0000_0000u64
+            ^ (t << 32)
+            ^ ((phase as u64) << 28)
+            ^ ((from as u64) << 14)
+            ^ to as u64;
+        let mut rng = Pcg64::new(self.seed ^ 0x11_55, stream);
+        rng.f64() < self.spec.dropln_percent as f64 / 100.0
+    }
+
+    /// [`ScenarioRuntime::dropped_broadcast`] or [`ScenarioRuntime::dropped_link`]:
+    /// the full delivery verdict for one directed frame. The one check the
+    /// engine's condemn site and the programs' expected-set shrink share.
+    pub fn dropped_frame(&self, t: u64, phase: usize, from: usize, to: usize) -> bool {
+        self.dropped_broadcast(t, phase, from) || self.dropped_link(t, phase, from, to)
+    }
 }
 
 #[cfg(test)]
@@ -430,6 +479,8 @@ mod tests {
                 ..Default::default()
             },
             ScenarioSpec { drop_percent: 5, ..Default::default() },
+            ScenarioSpec { dropln_percent: 7, ..Default::default() },
+            ScenarioSpec { drop_percent: 2, dropln_percent: 3, ..Default::default() },
             ScenarioSpec { dirichlet_alpha_hundredths: Some(30), ..Default::default() },
             ScenarioSpec {
                 bw: Some(BwSchedule { percent: 50, every: 100 }),
@@ -439,6 +490,7 @@ mod tests {
             ScenarioSpec {
                 churn: Some(ChurnSpec { percent: 25, leave: 10, join: 20 }),
                 drop_percent: 1,
+                dropln_percent: 4,
                 dirichlet_alpha_hundredths: Some(100),
                 bw: Some(BwSchedule { percent: 10, every: 7 }),
                 timeout_ms: Some(1000),
@@ -463,6 +515,9 @@ mod tests {
             "churn_p95_l1_j2",     // more than 90% churn
             "drop_p101",           // drop probability > 1.0
             "drop_p0",             // explicit zero: spell 'static' instead
+            "dropln_p101",         // link drop probability > 1.0
+            "dropln_p0",           // explicit zero: spell 'static' instead
+            "dropln_p1+dropln_p2", // duplicate part
             "dirichlet_a0",        // α ≤ 0
             "bw_h0_e10",
             "bw_h100_e10",
@@ -526,6 +581,41 @@ mod tests {
         // Lossless spec never drops.
         let lossless = ScenarioRuntime::new(&ScenarioSpec::default(), &m, 0x5eed, None).unwrap();
         assert!((0..50u64).all(|t| !lossless.dropped_broadcast(t, 0, 3)));
+    }
+
+    #[test]
+    fn dropped_link_is_deterministic_asymmetric_and_calibrated() {
+        let spec: ScenarioSpec = "dropln_p10".parse().unwrap();
+        let m = ring_mixing(8);
+        let rt = ScenarioRuntime::new(&spec, &m, 0x5eed, None).unwrap();
+        let rt2 = ScenarioRuntime::new(&spec, &m, 0x5eed, None).unwrap();
+        let mut drops = 0u32;
+        let mut total = 0u32;
+        let mut asym = false;
+        for t in 0..400u64 {
+            for from in 0..8usize {
+                for to in 0..8usize {
+                    if to == from {
+                        continue;
+                    }
+                    let d = rt.dropped_link(t, 0, from, to);
+                    assert_eq!(d, rt2.dropped_link(t, 0, from, to));
+                    asym |= d != rt.dropped_link(t, 0, to, from);
+                    drops += d as u32;
+                    total += 1;
+                }
+            }
+        }
+        let rate = drops as f64 / total as f64;
+        assert!((0.05..0.15).contains(&rate), "link drop rate {rate} far from 10%");
+        assert!(asym, "direction never mattered in 400 rounds");
+        // dropped_frame folds both oracles; the broadcast coin is inert here.
+        assert!((0..100u64).all(|t| {
+            (0..8usize).all(|s| !rt.dropped_broadcast(t, 0, s))
+        }));
+        // Lossless spec never drops a link.
+        let lossless = ScenarioRuntime::new(&ScenarioSpec::default(), &m, 0x5eed, None).unwrap();
+        assert!((0..50u64).all(|t| !lossless.dropped_frame(t, 0, 3, 4)));
     }
 
     #[test]

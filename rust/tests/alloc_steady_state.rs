@@ -119,6 +119,7 @@ fn steady_state_allocs_at(
         .collect();
     let opts = SimOpts {
         cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+        staleness: None,
         compute_per_iter_s: 0.0,
         scenario: runtime,
     };

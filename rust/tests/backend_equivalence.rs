@@ -80,6 +80,7 @@ fn assert_backends_bitwise(algo_name: &str, compressor: &str) {
         SimOpts {
             // A non-trivial network: virtual time must not perturb math.
             cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+            staleness: None,
             compute_per_iter_s: 0.01,
             scenario: None,
         },
@@ -305,6 +306,7 @@ fn sim_backend_trains_at_n64_ring() {
         150,
         SimOpts {
             cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+            staleness: None,
             compute_per_iter_s: 0.0,
             scenario: None,
         },
@@ -334,6 +336,7 @@ fn sim_straggler_grid_slows_virtual_time_not_math() {
         20,
         SimOpts {
             cost: CostModel::Uniform(base),
+            staleness: None,
             compute_per_iter_s: 0.0,
             scenario: None,
         },
@@ -348,6 +351,7 @@ fn sim_straggler_grid_slows_virtual_time_not_math() {
         20,
         SimOpts {
             cost: CostModel::uniform_with_stragglers(8, base, &[5], 10.0),
+            staleness: None,
             compute_per_iter_s: 0.0,
             scenario: None,
         },

@@ -127,6 +127,7 @@ fn traced_run(n: usize, shards: usize) -> (String, SimRun) {
         .collect();
     let opts = SimOpts {
         cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+        staleness: None,
         compute_per_iter_s: 0.01,
         scenario: None,
     };
@@ -235,6 +236,7 @@ fn session_breakdown_closes_bitwise_and_counters_agree() {
         seed: 11,
         eta: 0.5,
         scenario: Default::default(),
+        staleness: Default::default(),
     };
     let session = exp.session().unwrap();
     let opts = RunOpts {
@@ -245,6 +247,7 @@ fn session_breakdown_closes_bitwise_and_counters_agree() {
     };
     let sim = SimOpts {
         cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+        staleness: None,
         compute_per_iter_s: 0.01,
         scenario: None,
     };

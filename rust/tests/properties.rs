@@ -1172,3 +1172,79 @@ fn pull_event_equivalence_survives_nesting_depth_80() {
     assert_eq!(via_tree.to_string(), tree_oracle::compact(&via_tree));
     assert_eq!(via_tree.to_pretty(), tree_oracle::pretty(&via_tree));
 }
+
+// ---------------------------------------------------------------------------
+// Bounded-staleness execution (PR 10): the bounded executor is total
+// over the (quorum, bound, drops, topology) space the spec layer
+// admits, and relaxing the barrier never slows the virtual clock.
+
+#[test]
+fn prop_bounded_staleness_executor_total_and_never_slower_than_sync() {
+    use decomp::data::{build_models, ModelKind, SynthSpec};
+    use decomp::network::cost::{CostModel, NetworkModel};
+    use decomp::network::sim::SimOpts;
+    use decomp::spec::ExperimentSpec;
+    check("bounded staleness total, makespan <= sync", CASES / 8, |g| {
+        let n = g.usize_in(6, 12);
+        let topo = if g.bool() {
+            "ring".to_string()
+        } else {
+            format!("random_p40_s{}", g.usize_in(1, 99))
+        };
+        // Fixed-wire-size EF codecs only: their frame timings are
+        // value-independent, which is what makes the makespan
+        // comparison exact rather than statistical.
+        let (comp, eta) = *g.choose(&[("q4", 0.5f32), ("sign", 0.4)]);
+        let quorum = g.usize_in(1, 99);
+        let rounds = g.usize_in(1, 3);
+        let scenario = match *g.choose(&[0usize, 5, 10]) {
+            0 => "static".to_string(),
+            p => format!("dropln_p{p}"),
+        };
+        let spec = SynthSpec {
+            n_nodes: n,
+            dim: 16,
+            rows_per_node: 4,
+            ..Default::default()
+        };
+        let kind = ModelKind::Quadratic { spread: 1.0, noise: 0.1 };
+        let seed = g.rng.next_u64();
+        let run = |staleness: String| {
+            let (models, x0) = build_models(&kind, &spec);
+            let exp = ExperimentSpec::parse("choco", comp, &topo, n, seed, eta)
+                .unwrap()
+                .with_scenario(&scenario)
+                .unwrap()
+                .with_staleness(&staleness)
+                .unwrap();
+            let sim = SimOpts {
+                cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+                compute_per_iter_s: 0.0,
+                scenario: None,
+                staleness: None,
+            };
+            exp.session()
+                .unwrap()
+                .run_simulated(models, &x0, 0.05, 8, sim)
+                .unwrap_or_else(|e| panic!("{staleness} on {topo}: {e}"))
+        };
+        let bounded = run(format!("quorum_q{quorum}_s{rounds}"));
+        let sync = run("sync".to_string());
+        for r in &bounded.reports {
+            assert!(r.losses.iter().all(|l| l.is_finite()), "node {} losses", r.node);
+            assert!(r.final_x.iter().all(|v| v.is_finite()), "node {} params", r.node);
+        }
+        assert!(
+            bounded.virtual_time_s <= sync.virtual_time_s * (1.0 + 1e-12),
+            "quorum_q{quorum}_s{rounds} on {topo}: bounded {} > sync {}",
+            bounded.virtual_time_s,
+            sync.virtual_time_s
+        );
+        // Byte accounting is barrier-independent: the same frames cross
+        // the same links under either discipline (fixed wire sizes,
+        // drop verdicts keyed on (round, phase, link) only).
+        assert_eq!(bounded.payload_bytes, sync.payload_bytes, "{topo}/{scenario}");
+        assert_eq!(bounded.frames, sync.frames, "{topo}/{scenario}");
+        assert_eq!(bounded.frames_dropped, sync.frames_dropped, "{topo}/{scenario}");
+    });
+}

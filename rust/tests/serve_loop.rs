@@ -49,6 +49,7 @@ fn two_jobs_and_a_malformed_line_stream_the_expected_frames() {
         ServeStats {
             jobs_ok: 2,
             jobs_rejected: 1,
+            jobs_cancelled: 0,
             cells_run: 3
         }
     );
@@ -137,6 +138,61 @@ fn obs_job_reports_per_node_bytes_and_breakdown() {
         total += field(p, "idle_s").as_f64().unwrap();
     }
     assert!((total - vt).abs() <= 1e-9 * vt.max(1.0), "{total} vs {vt}");
+}
+
+#[test]
+fn cancel_mid_grid_skips_unstarted_cells_and_ends_with_a_cancelled_frame() {
+    // The cancel line sits right behind the job line, so it is already
+    // in the reader channel when the first cell completes: with
+    // threads=1 the serve loop drains it between cells, cell 1 keeps
+    // its frames, cell 2 never starts, and a job queued behind the
+    // cancel still runs afterwards.
+    let one = |s: &str| s.replace('\n', " ");
+    let input = format!(
+        "{}\n{{\"cancel\": \"grid\"}}\n{}\n",
+        one(GRID_JOB),
+        one(TRACED_JOB)
+    );
+    let (stats, raw) = run(&input, 1);
+    assert_eq!(
+        stats,
+        ServeStats {
+            jobs_ok: 1,
+            jobs_rejected: 0,
+            jobs_cancelled: 1,
+            cells_run: 2
+        }
+    );
+    let frames = frames(&raw);
+    let events: Vec<&str> = frames
+        .iter()
+        .map(|f| field(f, "event").as_str().unwrap())
+        .collect();
+    assert_eq!(
+        events,
+        vec![
+            "accepted", "progress", "result", "cancelled", // grid: cell 1 only
+            "accepted", "progress", "result", "done", // traced, replayed after
+        ]
+    );
+    let cancelled = &frames[3];
+    assert_eq!(field(cancelled, "id").as_str(), Some("grid"));
+    assert_eq!(field(cancelled, "cells").as_f64(), Some(2.0));
+    assert_eq!(field(cancelled, "completed").as_f64(), Some(1.0));
+    assert_eq!(field(&frames[4], "id").as_str(), Some("traced"));
+}
+
+#[test]
+fn cancel_before_the_job_line_answers_without_running_anything() {
+    let input = format!("{{\"cancel\": \"grid\"}}\n{}\n", GRID_JOB.replace('\n', " "));
+    let (stats, raw) = run(&input, 1);
+    assert_eq!(stats.jobs_cancelled, 1);
+    assert_eq!(stats.cells_run, 0);
+    let frames = frames(&raw);
+    assert_eq!(frames.len(), 1);
+    assert_eq!(field(&frames[0], "event").as_str(), Some("cancelled"));
+    assert_eq!(field(&frames[0], "cells").as_f64(), Some(0.0));
+    assert_eq!(field(&frames[0], "completed").as_f64(), Some(0.0));
 }
 
 #[test]

@@ -42,6 +42,7 @@ fn run_cell(algo: AlgoSpec, compressor: &str, n: usize, shards: usize) -> SimRun
         .collect();
     let opts = SimOpts {
         cost: CostModel::Uniform(NetworkModel::new(5e6, 5e-3)),
+        staleness: None,
         compute_per_iter_s: 0.01,
         scenario: None,
     };

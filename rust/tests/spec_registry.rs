@@ -15,7 +15,7 @@
 //!    CI smoke step run).
 
 use decomp::coordinator::TrainConfig;
-use decomp::spec::{self, AlgoSpec, CompressorSpec, ScenarioSpec, TopologySpec};
+use decomp::spec::{self, AlgoSpec, CompressorSpec, ScenarioSpec, StalenessSpec, TopologySpec};
 
 #[test]
 fn every_algorithm_round_trips_from_str_to_display() {
@@ -59,6 +59,9 @@ fn every_compressor_family_round_trips_from_str_to_display() {
         CompressorSpec::LowRank { rank: 4 },
         CompressorSpec::LowRank { rank: 8 },
         CompressorSpec::LowRank { rank: 64 },
+        CompressorSpec::Adaptive { bits_lo: 2, bits_hi: 8 },
+        CompressorSpec::Adaptive { bits_lo: 1, bits_hi: 16 },
+        CompressorSpec::Adaptive { bits_lo: 4, bits_hi: 5 },
     ];
     for c in instances {
         let printed = c.to_string();
@@ -75,6 +78,11 @@ fn every_compressor_family_round_trips_from_str_to_display() {
     }
     // Legacy aliases still accepted.
     assert_eq!("identity".parse::<CompressorSpec>().unwrap(), CompressorSpec::Fp32);
+    // Degenerate adaptive bands are parse errors, not controller panics:
+    // the band must be a non-empty range of admissible quantizer widths.
+    for bad in ["adapt_b8_2", "adapt_b2_2", "adapt_b0_8", "adapt_b2_17", "adapt_b2"] {
+        assert!(bad.parse::<CompressorSpec>().is_err(), "'{bad}' must be rejected");
+    }
     // Unknown names list the families.
     let err = "zstd".parse::<CompressorSpec>().unwrap_err().to_string();
     for family in spec::COMPRESSOR_FAMILIES.iter() {
@@ -134,6 +142,7 @@ fn rejection_matrix_every_algorithm_times_every_family() {
         ("topk_25", false, false),
         ("sign", false, false),
         ("lowrank_r2", false, true),
+        ("adapt_b2_8", true, true),
     ];
     // Hard-coded capability expectations (NOT read from the registry —
     // this is what pins the registry).
@@ -204,8 +213,10 @@ fn every_scenario_round_trips_from_str_to_display() {
         "dirichlet_a30",
         "bw_h50_e100",
         "timeout_20",
+        "dropln_p7",
+        "drop_p2+dropln_p3",
         "churn_p10_l150_j300+drop_p5",
-        "churn_p1_l1_j2+drop_p1+dirichlet_a5+bw_h1_e1+timeout_1",
+        "churn_p1_l1_j2+drop_p1+dropln_p2+dirichlet_a5+bw_h1_e1+timeout_1",
     ];
     for key in keys {
         let sc: ScenarioSpec = key.parse().unwrap_or_else(|e| panic!("{key}: {e}"));
@@ -237,6 +248,9 @@ fn invalid_scenario_schedules_are_rejected() {
         "churn_p10_l5",        // missing join
         "drop_p0",             // explicit no-op: spell it 'static'
         "drop_p101",           // > 100%
+        "dropln_p0",           // explicit no-op: spell it 'static'
+        "dropln_p101",         // > 100%
+        "dropln_p1+dropln_p2", // duplicate part
         "dirichlet_a0",        // alpha must be positive
         "bw_h0_e10",           // factor must stay positive
         "bw_h100_e10",         // factor must actually throttle
@@ -280,6 +294,88 @@ fn churn_admission_requires_a_link_state_safe_algorithm() {
         if !is_safe {
             let err = spec::admit_scenario(algo, &churn).unwrap_err().to_string();
             assert!(err.contains("churn") && err.contains("choco"), "{name}: '{err}'");
+        }
+    }
+}
+
+#[test]
+fn every_staleness_spec_round_trips_from_str_to_display() {
+    // Parse → Display → parse is the identity over the whole grammar:
+    // `sync` and every admissible `quorum_q<pct>_s<rounds>`.
+    for key in ["sync", "quorum_q1_s1", "quorum_q50_s2", "quorum_q99_s10"] {
+        let st: StalenessSpec = key.parse().unwrap_or_else(|e| panic!("{key}: {e}"));
+        assert_eq!(st.to_string(), key, "Display must be canonical");
+        assert_eq!(key.parse::<StalenessSpec>().unwrap(), st);
+    }
+    assert_eq!("sync".parse::<StalenessSpec>().unwrap(), StalenessSpec::SYNC);
+    assert!(!StalenessSpec::SYNC.is_bounded());
+    assert!("quorum_q50_s2".parse::<StalenessSpec>().unwrap().is_bounded());
+    // q100 *is* sync and must be spelled that way (keeps the round trip
+    // total); zero quorum, zero bound, and malformed strings reject.
+    let bad = [
+        "",
+        "async",
+        "quorum",
+        "quorum_q0_s1",
+        "quorum_q100_s1",
+        "quorum_q50_s0",
+        "quorum_q50",
+        "quorum_qx_s1",
+        "quorum_q50_sx",
+    ];
+    for key in bad {
+        assert!(key.parse::<StalenessSpec>().is_err(), "'{key}' must be rejected");
+    }
+    // Rejections list the grammar.
+    let err = "quorum_q100_s1".parse::<StalenessSpec>().unwrap_err().to_string();
+    assert!(err.contains("sync") && err.contains("quorum_q<pct>_s<rounds>"), "{err}");
+}
+
+#[test]
+fn staleness_admission_requires_a_safe_algorithm_and_no_churn() {
+    // Hard-coded expectations (NOT read from the registry — this pins
+    // the registry): bounded staleness needs the partial-absorb/
+    // late-fold surface only the error-feedback gossip family
+    // implements; `sync` is admitted for everything (it *is* the
+    // bulk-synchronous path); and bounded staleness never combines with
+    // scheduled churn, whose rejoin resync assumes no frames in flight
+    // across the rejoin boundary.
+    let safe = ["choco", "deepsqueeze"];
+    let bounded: StalenessSpec = "quorum_q75_s3".parse().unwrap();
+    let churn: ScenarioSpec = "churn_p10_l150_j300".parse().unwrap();
+    let drops: ScenarioSpec = "dropln_p5".parse().unwrap();
+    let static_sc = ScenarioSpec::default();
+    for algo in AlgoSpec::ALL {
+        let name = algo.to_string();
+        let is_safe = safe.contains(&name.as_str());
+        assert!(
+            spec::admit_staleness(algo, &StalenessSpec::SYNC, &static_sc).is_ok(),
+            "sync admission for {name}"
+        );
+        // sync + churn passes *this* gate (churn admission is
+        // admit_scenario's job, asserted elsewhere).
+        assert!(
+            spec::admit_staleness(algo, &StalenessSpec::SYNC, &churn).is_ok(),
+            "sync+churn staleness gate for {name}"
+        );
+        assert_eq!(
+            spec::admit_staleness(algo, &bounded, &static_sc).is_ok(),
+            is_safe,
+            "bounded admission for {name}"
+        );
+        if is_safe {
+            // Bounded + per-link drops is admitted; bounded + churn is not.
+            assert!(spec::admit_staleness(algo, &bounded, &drops).is_ok(), "{name}");
+            let err = spec::admit_staleness(algo, &bounded, &churn).unwrap_err().to_string();
+            assert!(err.contains("churn"), "{name}: '{err}'");
+        } else {
+            let err = spec::admit_staleness(algo, &bounded, &static_sc)
+                .unwrap_err()
+                .to_string();
+            assert!(
+                err.contains("choco") && err.contains(&name),
+                "{name}: error must name the algorithm and the safe set: '{err}'"
+            );
         }
     }
 }

@@ -1,0 +1,309 @@
+//! Integration pins for bounded-staleness execution and the adaptive
+//! per-link controller (DESIGN.md §4b).
+//!
+//! What the executor promises and this file enforces through public API
+//! only:
+//!
+//! - a quorum that resolves to *all* neighbors (`quorum_q99` on a
+//!   degree-2 ring) routes through the bounded-delivery machinery yet is
+//!   **bitwise identical** to the bulk-synchronous engine — virtual
+//!   clock, per-node losses, final iterates, byte/frame accounting —
+//!   for every staleness-safe cell including the adaptive controller;
+//! - a genuinely bounded quorum defers frames, folds every one it
+//!   applies late, never invents one (`StaleApplied ≤ StaleDeferred`),
+//!   and stays **bit-identical across event-loop shard counts** and
+//!   across repeats;
+//! - relaxing the barrier can only shrink the makespan: for fixed-size
+//!   codecs the frame timings are value-independent, so the bounded
+//!   clock is pointwise ≤ the synchronous clock;
+//! - the error-feedback late-fold path survives composition with
+//!   per-link drops (`dropln_pP`): the run completes (the sender/
+//!   receiver drop-agreement protocol holds under deferral), the
+//!   staleness machinery engages, and the EF cell still converges;
+//! - the tentpole acceptance pin: on the worst §5.2 cell the adaptive
+//!   controller reaches its target loss in strictly less virtual time
+//!   than every static member of the EF family.
+
+use decomp::algorithms::{AlgoConfig, RunOpts};
+use decomp::compression;
+use decomp::coordinator::program::build_program;
+use decomp::coordinator::ObsSettings;
+use decomp::data::{build_models, ModelKind, SynthSpec};
+use decomp::network::cost::{CostModel, NetCondition, NetworkModel};
+use decomp::network::sim::{LinkTable, NodeProgram, SimEngine, SimOpts, SimRun, Staleness};
+use decomp::obs::{CodecCost, Ctr};
+use decomp::spec::{ExperimentSpec, ObsSpec};
+use decomp::topology::{Graph, MixingMatrix, Topology};
+use std::sync::Arc;
+
+/// The §5.2 worst condition's shape (5 Mbps / 5 ms) — communication
+/// dominates, so barrier discipline is what the clock measures.
+fn worst_cost() -> CostModel {
+    CostModel::Uniform(NetworkModel::new(5e6, 5e-3))
+}
+
+/// One staleness-safe cell on a 16-node ring through the full spec
+/// layer (admission, timing bind, staleness injection).
+fn ring_cell(algo: &str, comp: &str, eta: f32, staleness: &str) -> SimRun {
+    let n = 16;
+    let spec = SynthSpec {
+        n_nodes: n,
+        dim: 64,
+        rows_per_node: 8,
+        ..Default::default()
+    };
+    let (models, x0) = build_models(&ModelKind::Quadratic { spread: 1.0, noise: 0.1 }, &spec);
+    let exp = ExperimentSpec::parse(algo, comp, "ring", n, 0x57a1e, eta)
+        .unwrap_or_else(|e| panic!("{e}"))
+        .with_staleness(staleness)
+        .unwrap_or_else(|e| panic!("{e}"));
+    let sim = SimOpts {
+        cost: worst_cost(),
+        compute_per_iter_s: 0.001,
+        scenario: None,
+        staleness: None,
+    };
+    exp.session()
+        .unwrap_or_else(|e| panic!("{e}"))
+        .run_simulated(models, &x0, 0.05, 10, sim)
+        .unwrap_or_else(|e| panic!("{algo}/{comp}: {e}"))
+}
+
+/// Bitwise equality over everything a `SimRun` reports.
+fn assert_runs_bitwise_equal(a: &SimRun, b: &SimRun, label: &str) {
+    assert_eq!(
+        a.virtual_time_s.to_bits(),
+        b.virtual_time_s.to_bits(),
+        "{label}: virtual time {} vs {}",
+        a.virtual_time_s,
+        b.virtual_time_s
+    );
+    assert_eq!(a.payload_bytes, b.payload_bytes, "{label}: payload bytes");
+    assert_eq!(a.frame_bytes, b.frame_bytes, "{label}: frame bytes");
+    assert_eq!(a.frames, b.frames, "{label}: frames");
+    assert_eq!(a.frames_dropped, b.frames_dropped, "{label}: drops");
+    assert_eq!(a.reports.len(), b.reports.len(), "{label}: node count");
+    for (ra, rb) in a.reports.iter().zip(&b.reports) {
+        assert_eq!(ra.bytes_sent, rb.bytes_sent, "{label}: node {} bytes", ra.node);
+        assert_eq!(ra.msgs_sent, rb.msgs_sent, "{label}: node {} msgs", ra.node);
+        assert_eq!(ra.losses.len(), rb.losses.len(), "{label}: node {} losses", ra.node);
+        for (t, (la, lb)) in ra.losses.iter().zip(&rb.losses).enumerate() {
+            assert_eq!(
+                la.to_bits(),
+                lb.to_bits(),
+                "{label}: node {} loss at iter {t}: {la} vs {lb}",
+                ra.node
+            );
+        }
+        for (i, (xa, xb)) in ra.final_x.iter().zip(&rb.final_x).enumerate() {
+            assert_eq!(
+                xa.to_bits(),
+                xb.to_bits(),
+                "{label}: node {} param {i}: {xa} vs {xb}",
+                ra.node
+            );
+        }
+    }
+}
+
+#[test]
+fn full_quorum_staleness_is_bitwise_identical_to_the_bulk_synchronous_engine() {
+    // On a degree-2 ring, `quorum_q99` needs ⌈2·99/100⌉ = 2 arrivals —
+    // all of them — so the bounded executor's release points coincide
+    // with the bulk barrier and its partial-absorb path sees the
+    // complete neighbor set every phase. The runs must agree bit for
+    // bit, for every staleness-safe family member including both
+    // link-state cells (low-rank and the adaptive controller).
+    for (algo, comp, eta) in [
+        ("choco", "q8", 0.5),
+        ("choco", "sign", 0.4),
+        ("choco", "topk_25", 0.4),
+        ("choco", "lowrank_r2", 0.4),
+        ("choco", "adapt_b2_8", 0.5),
+        ("deepsqueeze", "q4", 1.0),
+        ("deepsqueeze", "topk_25", 0.4),
+    ] {
+        let sync = ring_cell(algo, comp, eta, "sync");
+        let quorum_all = ring_cell(algo, comp, eta, "quorum_q99_s1");
+        assert_runs_bitwise_equal(&sync, &quorum_all, &format!("{algo}/{comp}"));
+        assert!(
+            sync.reports.iter().all(|r| r.losses.iter().all(|l| l.is_finite())),
+            "{algo}/{comp}: non-finite loss"
+        );
+    }
+}
+
+/// One bounded-staleness choco/q4 run on an irregular random graph at
+/// the given event-loop shard count, instrumented so the deferral
+/// counters are visible. Node degrees differ, so senders' NIC
+/// serialization staggers arrival times and a 50% quorum genuinely
+/// defers frames.
+fn sharded_bounded_run(shards: usize, staleness: Option<Staleness>) -> SimRun {
+    let n = 12;
+    let iters = 12usize;
+    let spec = SynthSpec {
+        n_nodes: n,
+        dim: 32,
+        rows_per_node: 8,
+        ..Default::default()
+    };
+    let (models, x0) = build_models(&ModelKind::Quadratic { spread: 1.0, noise: 0.1 }, &spec);
+    let (comp, link) = compression::resolve_name("q4").expect("compressor");
+    let graph = Graph::build(Topology::Random { p_percent: 35, seed: 9 }, n);
+    let mixing = Arc::new(MixingMatrix::metropolis(graph));
+    let cfg = AlgoConfig {
+        mixing,
+        compressor: comp,
+        seed: 0x57a1e5,
+        eta: 0.5,
+        link,
+        scenario: None,
+    };
+    let mut programs: Vec<Box<dyn NodeProgram>> = models
+        .into_iter()
+        .enumerate()
+        .map(|(node, model)| {
+            build_program("choco", &cfg, node, model, &x0, 0.05, iters).expect("program")
+        })
+        .collect();
+    let opts = SimOpts {
+        cost: worst_cost(),
+        compute_per_iter_s: 0.0,
+        scenario: None,
+        staleness,
+    };
+    let links = LinkTable::from_graph(&cfg.mixing.graph).expect("links");
+    let mut engine = SimEngine::with_links(n, opts, links, shards);
+    engine.enable_obs("choco_q4", CodecCost::per_elem(2, 1));
+    for t in 0..iters as u64 {
+        engine.step(&mut programs, t);
+    }
+    engine.finish(programs)
+}
+
+#[test]
+fn bounded_quorum_is_bit_identical_across_shards_and_repeats() {
+    let st = Some(Staleness { quorum_pct: 50, max_rounds: 2 });
+    let base = sharded_bounded_run(1, st);
+    let base_obs = base.obs.as_ref().expect("obs enabled");
+
+    // The machinery actually engaged: frames were deferred past the
+    // quorum, some were folded late, and none was applied that was
+    // never deferred.
+    let deferred = base_obs.reg.counter(Ctr::StaleDeferred);
+    let applied = base_obs.reg.counter(Ctr::StaleApplied);
+    assert!(deferred > 0, "quorum_q50 on an irregular graph must defer frames");
+    assert!(applied > 0, "deferred frames must be folded late");
+    assert!(applied <= deferred, "folded {applied} > deferred {deferred}");
+
+    // Bit-identical across shard counts — counters included.
+    for shards in [2usize, 4] {
+        let run = sharded_bounded_run(shards, st);
+        assert_runs_bitwise_equal(&base, &run, &format!("{shards} shards"));
+        assert_eq!(run.obs.as_ref().unwrap().reg, base_obs.reg, "registry at {shards} shards");
+    }
+    // And across repeats at the same shard count.
+    let again = sharded_bounded_run(1, st);
+    assert_runs_bitwise_equal(&base, &again, "repeat");
+
+    // Relaxing the barrier can only shrink the makespan: q4 frames have
+    // value-independent sizes, so every arrival and release under the
+    // bounded discipline is pointwise ≤ its synchronous counterpart.
+    let sync = sharded_bounded_run(1, None);
+    assert!(
+        base.virtual_time_s <= sync.virtual_time_s,
+        "bounded {} > sync {}",
+        base.virtual_time_s,
+        sync.virtual_time_s
+    );
+    assert_eq!(sync.obs.as_ref().unwrap().reg.counter(Ctr::StaleDeferred), 0);
+}
+
+#[test]
+fn ef_late_folds_survive_per_link_drops() {
+    // Compose the two delivery perturbations this PR and PR 6 added:
+    // bounded staleness (quorum_q50_s2) over lossy links (dropln_p10).
+    // Drops skip NIC slots, which staggers the surviving arrivals, so
+    // the quorum defers frames from round one even on the symmetric
+    // ring; the run must complete (the executor panics by design if the
+    // sender/receiver drop-agreement breaks under deferral) and the EF
+    // cell must still converge.
+    let n = 16;
+    let spec = SynthSpec {
+        n_nodes: n,
+        dim: 64,
+        rows_per_node: 8,
+        ..Default::default()
+    };
+    let kind = ModelKind::Quadratic { spread: 1.0, noise: 0.1 };
+    let (models, x0) = build_models(&kind, &spec);
+    let (eval_models, _) = build_models(&kind, &spec);
+    let exp = ExperimentSpec::parse("choco", "topk_25", "ring", n, 0xd5a1e, 0.4)
+        .unwrap()
+        .with_scenario("dropln_p10")
+        .unwrap()
+        .with_staleness("quorum_q50_s2")
+        .unwrap();
+    let session = exp.session().unwrap_or_else(|e| panic!("{e}"));
+    let opts = RunOpts {
+        iters: 24,
+        gamma: 0.05,
+        eval_every: 6,
+        ..RunOpts::default()
+    };
+    let sim = SimOpts {
+        cost: worst_cost(),
+        compute_per_iter_s: 0.0,
+        scenario: None,
+        staleness: None,
+    };
+    let obs_on = ObsSettings {
+        spec: ObsSpec::Counters,
+        trace_out: None,
+    };
+    let traced = session
+        .run_sim_traced(models, &eval_models, &x0, &opts, sim, obs_on)
+        .expect("staleness + drops run completes");
+    let obs = traced.run.obs.as_ref().expect("counters on");
+
+    assert!(traced.run.frames_dropped > 0, "dropln_p10 must condemn frames");
+    let deferred = obs.reg.counter(Ctr::StaleDeferred);
+    let applied = obs.reg.counter(Ctr::StaleApplied);
+    assert!(deferred > 0, "drop-staggered arrivals must trip the quorum");
+    assert!(applied > 0 && applied <= deferred, "folded {applied} vs deferred {deferred}");
+
+    // The EF residual machinery still does its job under both
+    // perturbations at once: losses stay finite and the cell descends.
+    let pts = &traced.trace.points;
+    assert!(pts.iter().all(|p| p.global_loss.is_finite()));
+    let first = pts.first().unwrap().global_loss;
+    let last = pts.last().unwrap().global_loss;
+    assert!(last < first, "EF cell must descend: {first} -> {last}");
+    for w in pts.windows(2) {
+        assert!(w[1].bytes_sent >= w[0].bytes_sent, "byte counter must be monotone");
+        assert!(w[1].sim_time_s >= w[0].sim_time_s, "virtual clock must be monotone");
+    }
+}
+
+#[test]
+fn adaptive_controller_beats_every_static_family_member_on_the_worst_cell() {
+    // The tentpole acceptance pin, at integration level (the unit twin
+    // lives in `experiments::adapt_sweep`): on the worst §5.2 condition
+    // the adaptive cell reaches its own 75%-horizon target loss in
+    // strictly less virtual time than every static EF-family member.
+    use decomp::experiments::adapt_sweep::sweep_condition;
+    let rows = sweep_condition(120, true, NetCondition::Worst);
+    let adaptive = rows.last().expect("adaptive row present");
+    assert_eq!(adaptive.algo, "choco_adapt_b2_8");
+    let target = adaptive.best_loss_at(0.75);
+    let t_adapt = adaptive.time_to(target).expect("adaptive reaches its own target");
+    for r in &rows[..rows.len() - 1] {
+        if let Some(t) = r.time_to(target) {
+            assert!(
+                t_adapt < t,
+                "{}: static reached target {target:.5} in {t:.3}s vs adaptive {t_adapt:.3}s",
+                r.algo
+            );
+        }
+    }
+}
